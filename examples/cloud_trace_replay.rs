@@ -1,0 +1,96 @@
+//! Cloud trace replay: a multi-tenant GPU with four services at mixed
+//! priorities, driven from a JSON experiment config — the "containerized
+//! cloud computing environment" of the paper's introduction.
+//!
+//! Demonstrates: config round-trip (write → load → run), the profile
+//! store lifecycle (measure once, persist, reuse), and per-tenant
+//! QoS reporting across priority levels.
+//!
+//! ```bash
+//! cargo run --release --example cloud_trace_replay
+//! ```
+
+use fikit::config::{ExperimentConfig, ServiceConfig};
+use fikit::coordinator::driver::{profile_service, run_with_profiles};
+use fikit::coordinator::Mode;
+use fikit::core::Priority;
+use fikit::profile::ProfileStore;
+use fikit::workload::ModelKind;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // --- author a config and persist it (what an operator would do) ---
+    let mut cfg = ExperimentConfig {
+        mode: Mode::Fikit,
+        seed: 2026,
+        ..ExperimentConfig::default()
+    };
+    cfg.services.push(
+        ServiceConfig::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0)
+            .every_ms(120, 40)
+            .with_key("tenant-a/pose-rt"),
+    );
+    cfg.services.push(
+        ServiceConfig::new(ModelKind::Resnet50, Priority::P2)
+            .every_ms(60, 80)
+            .with_key("tenant-b/classify-std"),
+    );
+    cfg.services.push(
+        ServiceConfig::new(ModelKind::Deeplabv3Resnet101, Priority::P5)
+            .continuous_ms(5_000)
+            .with_key("tenant-c/segment-batch"),
+    );
+    cfg.services.push(
+        ServiceConfig::new(ModelKind::Vgg16, Priority::P8)
+            .continuous_ms(5_000)
+            .with_key("tenant-d/embed-scavenger"),
+    );
+
+    let dir = std::env::temp_dir().join("fikit-cloud-replay");
+    std::fs::create_dir_all(&dir)?;
+    let cfg_path = dir.join("experiment.json");
+    std::fs::write(&cfg_path, cfg.to_json().encode_pretty())?;
+    let cfg = ExperimentConfig::from_json_file(&cfg_path)?;
+    println!("loaded experiment config from {}", cfg_path.display());
+
+    // --- measurement stage: profile each service once, persist ---
+    let store_path = dir.join("profiles.json");
+    let profiles = if store_path.exists() {
+        println!("reusing persisted profiles from {}", store_path.display());
+        ProfileStore::load(&store_path)?
+    } else {
+        let mut store = ProfileStore::new();
+        for svc in &cfg.services {
+            let r = profile_service(&cfg, svc)?;
+            println!(
+                "  measured {:<28} {} unique kernel ids over {} runs",
+                r.profile.task_key.to_string(),
+                r.profile.num_unique(),
+                r.profile.runs
+            );
+            store.insert(r.profile);
+        }
+        store.save(&store_path)?;
+        println!("persisted profiles -> {}", store_path.display());
+        store
+    };
+
+    // --- sharing stage: serve all four tenants ---
+    let report = run_with_profiles(&cfg, &profiles)?;
+    println!("\n{}", report.summary());
+
+    // QoS ordering check: higher priority ⇒ better relative latency.
+    let mut rows: Vec<(Priority, f64)> = report
+        .services
+        .iter()
+        .map(|s| {
+            let solo = s.model.spec().mean_jct().as_millis_f64();
+            (s.priority, s.jct.mean_ms() / solo)
+        })
+        .collect();
+    rows.sort_by_key(|(p, _)| *p);
+    println!("per-tenant slowdown vs solo (priority order):");
+    for (p, slowdown) in rows {
+        println!("  {p}: {slowdown:.2}x");
+    }
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT lowering: every kernel variant + both L2 models → HLO text.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+≥0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs land in ``artifacts/``:
+
+* ``<name>.hlo.txt`` — one per artifact,
+* ``manifest.json`` — name → file, input/output shapes+dtypes, and a
+  deterministic test vector (inputs seed + expected output checksum) the
+  Rust runtime uses to self-verify numerics at load time.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as models
+from .kernels import attention, fused_linear, layernorm, matmul, softmax
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(shape, jnp.float32 if dtype == "f32" else jnp.bfloat16)
+
+
+def _rand_inputs(specs, seed):
+    """Deterministic, language-independent test inputs.
+
+    ``value[i] = sin(0.001 · (i+1) · (arg_idx+3) + seed)`` — trivially
+    reproducible from Rust (runtime/artifact.rs mirrors this formula for
+    its load-time numeric self-check), bounded in [-1, 1].
+    """
+    out = []
+    for ai, s in enumerate(specs):
+        n = int(np.prod(s.shape))
+        i = np.arange(n, dtype=np.float64)
+        vals = np.sin(0.001 * (i + 1.0) * (ai + 3.0) + float(seed))
+        out.append(jnp.asarray(vals.reshape(s.shape), s.dtype))
+    return out
+
+
+def _checksum(arrays) -> str:
+    """Order-stable fingerprint of the outputs (f32, rounded to 1e-4)."""
+    h = hashlib.sha256()
+    for a in arrays:
+        q = np.round(np.asarray(a, np.float32), 4)
+        h.update(q.tobytes())
+    return h.hexdigest()[:16]
+
+
+class Artifact:
+    """One AOT-compiled computation."""
+
+    def __init__(self, name, fn, specs, tags=()):
+        self.name = name
+        self.fn = fn
+        self.specs = specs
+        self.tags = list(tags)
+
+    def build(self, out_dir: str, seed: int = 1234) -> dict:
+        lowered = jax.jit(self.fn).lower(*self.specs)
+        hlo = to_hlo_text(lowered)
+        fname = f"{self.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+
+        # Deterministic self-check vector.
+        inputs = _rand_inputs(self.specs, seed)
+        outputs = self.fn(*inputs)
+        if not isinstance(outputs, (tuple, list)):
+            outputs = (outputs,)
+        mean_abs = float(np.mean([float(np.abs(np.asarray(o)).mean()) for o in outputs]))
+
+        return {
+            "name": self.name,
+            "file": fname,
+            "tags": self.tags,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in self.specs
+            ],
+            "outputs": [
+                {"shape": list(np.asarray(o).shape), "dtype": str(np.asarray(o).dtype)}
+                for o in outputs
+            ],
+            "check": {
+                "seed": seed,
+                "mean_abs": mean_abs,
+            },
+        }
+
+
+def artifact_list():
+    """The full artifact set the Rust runtime consumes."""
+    arts = []
+
+    # --- standalone kernel variants (the e2e "GPU kernels") ---
+    for m, k, n in [(128, 256, 128), (256, 256, 256), (128, 512, 512)]:
+        arts.append(
+            Artifact(
+                f"matmul_{m}x{k}x{n}",
+                matmul,
+                [_spec((m, k)), _spec((k, n))],
+                tags=["kernel", "matmul"],
+            )
+        )
+    for m, k, n, act in [(64, 256, 512, "relu"), (64, 512, 256, "gelu")]:
+        arts.append(
+            Artifact(
+                f"fused_linear_{m}x{k}x{n}_{act}",
+                functools.partial(fused_linear, activation=act),
+                [_spec((m, k)), _spec((k, n)), _spec((n,))],
+                tags=["kernel", "fused_linear"],
+            )
+        )
+    arts.append(
+        Artifact(
+            "softmax_128x512",
+            softmax,
+            [_spec((128, 512))],
+            tags=["kernel", "softmax"],
+        )
+    )
+    arts.append(
+        Artifact(
+            "attention_128x64",
+            attention,
+            [_spec((128, 64)), _spec((128, 64)), _spec((128, 64))],
+            tags=["kernel", "attention"],
+        )
+    )
+    arts.append(
+        Artifact(
+            "layernorm_128x512",
+            layernorm,
+            [_spec((128, 512)), _spec((512,)), _spec((512,))],
+            tags=["kernel", "layernorm"],
+        )
+    )
+
+    # --- L2 models (whole services) ---
+    mlp = models.MlpClassifier()
+    arts.append(
+        Artifact(
+            "mlp_classifier",
+            mlp.apply,
+            mlp.input_shapes(),
+            tags=["model", "mlp"],
+        )
+    )
+    tfm = models.TransformerBlock()
+    arts.append(
+        Artifact(
+            "transformer_block",
+            tfm.apply,
+            tfm.input_shapes(),
+            tags=["model", "transformer"],
+        )
+    )
+    return arts
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description="AOT-lower kernels and models to HLO text")
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument("--only", default=None, help="build a single artifact by name")
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for art in artifact_list():
+        if args.only and art.name != args.only:
+            continue
+        entry = art.build(args.out)
+        manifest.append(entry)
+        print(f"  lowered {art.name:<32} -> {entry['file']}")
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

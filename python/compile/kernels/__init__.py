@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (interpret=True) and their pure-jnp oracles."""
+
+from . import ref
+from .attention import attention
+from .fused_linear import fused_linear
+from .layernorm import layernorm
+from .matmul import matmul
+from .softmax import softmax
+
+__all__ = ["matmul", "fused_linear", "softmax", "layernorm", "attention", "ref"]

@@ -1,0 +1,45 @@
+"""Row-tiled LayerNorm as a Pallas kernel.
+
+Same strip pattern as softmax: each grid step holds a ``(bm, N)`` block
+in VMEM, computes per-row mean/variance on the VPU, and applies the
+affine transform — mean, variance, normalize and scale fused into a
+single HBM round trip.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _largest_divisor_leq
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    norm = (x - mean) / jnp.sqrt(var + eps)
+    out = norm * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm"))
+def layernorm(x, gamma, beta, *, eps: float = 1e-5, bm: int | None = None):
+    """LayerNorm over the last axis of a 2-D array."""
+    m, n = x.shape
+    assert gamma.shape == (n,) and beta.shape == (n,)
+    bm = bm or _largest_divisor_leq(m, 256)
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

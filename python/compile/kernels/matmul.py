@@ -1,0 +1,83 @@
+"""Tiled Pallas matmul — the L1 compute hot-spot.
+
+TPU adaptation of the GEMM every serving stack leans on (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging tiles through
+shared memory for tensor-core WMMA, the kernel tiles the output into
+MXU-shaped ``(bm, bn)`` blocks held in VMEM via ``BlockSpec``; each grid
+step keeps an f32 accumulator tile resident while the full-K operand
+strips stream HBM→VMEM. Block sizes target the 128×128 MXU systolic
+array; accumulation is always f32 (``preferred_element_type``), matching
+MXU semantics for bf16 inputs.
+
+VMEM footprint per grid step (f32): ``bm*K + K*bn + bm*bn`` words — e.g.
+bm=bn=128, K=2048 → ≈2.2 MiB, comfortably inside the ~16 MiB/core VMEM
+budget (documented in DESIGN.md §Perf).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads. Real-TPU performance is assessed analytically (DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ cap (≥1)."""
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile: full-K strip product, f32 accumulate."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, y, *, bm: int | None = None, bn: int | None = None):
+    """``x @ y`` via a Pallas kernel tiled for VMEM/MXU.
+
+    Args:
+      x: ``(M, K)`` array (f32 or bf16).
+      y: ``(K, N)`` array (same dtype).
+      bm, bn: output tile sizes; default picks the largest divisor ≤128
+        (MXU-aligned when shapes allow).
+    Returns:
+      ``(M, N)`` array in the input dtype (f32 accumulation inside).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = bm or _largest_divisor_leq(m, 128)
+    bn = bn or _largest_divisor_leq(n, 128)
+    assert m % bm == 0 and n % bn == 0, "tile sizes must divide the output"
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            # Row strip of x: (bm, K) per grid step i.
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # Column strip of y: (K, bn) per grid step j.
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(m: int, k: int, n: int, bm: int = 128, bn: int = 128,
+               bytes_per_el: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf)."""
+    bm = min(bm, m)
+    bn = min(bn, n)
+    return (bm * k + k * bn + bm * bn) * bytes_per_el

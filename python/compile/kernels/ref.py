@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth the pytest/hypothesis suites compare the
+Pallas implementations against (``assert_allclose``). They are also what
+the kernels lower to semantically — keep them boring and obviously
+correct.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain matrix multiply with f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fused_linear(x, w, b, activation="relu"):
+    """Linear layer with fused bias + activation epilogue."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    out = out + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        # tanh-approximation GELU (matches the Pallas kernel).
+        c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+        out = 0.5 * out * (1.0 + jnp.tanh(c * (out + 0.044715 * out**3)))
+    elif activation == "none":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(x.dtype)
+
+
+def softmax(x):
+    """Numerically-stable row softmax over the last axis."""
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    e = jnp.exp(x32 - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """Row LayerNorm over the last axis."""
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mean) ** 2, axis=-1, keepdims=True)
+    norm = (x32 - mean) / jnp.sqrt(var + eps)
+    return (norm * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention(q, k, v):
+    """Plain single-head attention: softmax(QK^T/sqrt(d)) V."""
+    d = q.shape[-1]
+    scale = jnp.float32(1.0 / (d**0.5))
+    scores = jnp.matmul(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    return jnp.matmul(softmax(scores).astype(jnp.float32),
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,144 @@
+"""L2 — the JAX inference models composed of the L1 Pallas kernels.
+
+These are the "hosted ML services" of the end-to-end example: the Rust
+coordinator serves them as real compute through PJRT. Two models:
+
+* :class:`MlpClassifier` — a small MLP image classifier (the AlexNet-class
+  dense service of the paper's zoo).
+* :class:`TransformerBlock` — one pre-norm transformer block with
+  single-head self-attention (the heavier, modern serving workload).
+
+Every dense op routes through the Pallas kernels so the whole graph
+lowers into one HLO module containing the L1 compute.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear, layernorm, matmul, softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpClassifier:
+    """3-layer MLP classifier: fused_linear ×3 → softmax head."""
+
+    batch: int = 32
+    d_in: int = 256
+    d_hidden: int = 512
+    n_classes: int = 64
+
+    def init(self, seed: int = 0):
+        """He-initialized parameters as a flat tuple (AOT-friendly)."""
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 3)
+        he = lambda key, i, o: jax.random.normal(key, (i, o), jnp.float32) * (2.0 / i) ** 0.5
+        return (
+            he(ks[0], self.d_in, self.d_hidden),
+            jnp.zeros((self.d_hidden,), jnp.float32),
+            he(ks[1], self.d_hidden, self.d_hidden),
+            jnp.zeros((self.d_hidden,), jnp.float32),
+            he(ks[2], self.d_hidden, self.n_classes),
+            jnp.zeros((self.n_classes,), jnp.float32),
+        )
+
+    def apply(self, x, w1, b1, w2, b2, w3, b3):
+        """Forward pass: class probabilities ``(batch, n_classes)``."""
+        h = fused_linear(x, w1, b1, activation="relu")
+        h = fused_linear(h, w2, b2, activation="gelu")
+        logits = fused_linear(h, w3, b3, activation="none")
+        return softmax(logits)
+
+    def input_shapes(self):
+        p = [
+            (self.batch, self.d_in),
+            (self.d_in, self.d_hidden),
+            (self.d_hidden,),
+            (self.d_hidden, self.d_hidden),
+            (self.d_hidden,),
+            (self.d_hidden, self.n_classes),
+            (self.n_classes,),
+        ]
+        return [jax.ShapeDtypeStruct(s, jnp.float32) for s in p]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerBlock:
+    """Pre-norm transformer block, single-head attention + MLP.
+
+    y  = x + Wo · softmax(QKᵀ/√d) · V,   Q/K/V = LN(x) · Wq/Wk/Wv
+    out = y + W2 · gelu(W1 · LN(y) + b1) + b2
+    """
+
+    seq: int = 64
+    d_model: int = 256
+    d_ff: int = 512
+
+    def init(self, seed: int = 0):
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 6)
+        d, f = self.d_model, self.d_ff
+        w = lambda key, i, o: jax.random.normal(key, (i, o), jnp.float32) * (1.0 / i) ** 0.5
+        return (
+            w(ks[0], d, d),  # wq
+            w(ks[1], d, d),  # wk
+            w(ks[2], d, d),  # wv
+            w(ks[3], d, d),  # wo
+            w(ks[4], d, f),  # w1
+            jnp.zeros((f,), jnp.float32),  # b1
+            w(ks[5], f, d),  # w2
+            jnp.zeros((d,), jnp.float32),  # b2
+            jnp.ones((d,), jnp.float32),  # gamma1
+            jnp.zeros((d,), jnp.float32),  # beta1
+            jnp.ones((d,), jnp.float32),  # gamma2
+            jnp.zeros((d,), jnp.float32),  # beta2
+        )
+
+    def apply(self, x, wq, wk, wv, wo, w1, b1, w2, b2, g1, be1, g2, be2):
+        """Forward pass: ``(seq, d_model)`` → ``(seq, d_model)``."""
+        h = layernorm(x, g1, be1)
+        q = matmul(h, wq)
+        k = matmul(h, wk)
+        v = matmul(h, wv)
+        scale = jnp.float32(1.0 / (self.d_model**0.5))
+        scores = softmax(matmul(q, k.T) * scale)
+        attn = matmul(scores, v)
+        y = x + matmul(attn, wo)
+        h2 = layernorm(y, g2, be2)
+        ff = fused_linear(h2, w1, b1, activation="gelu")
+        out = y + fused_linear(ff, w2, b2, activation="none")
+        return out
+
+    def input_shapes(self):
+        d, f, s = self.d_model, self.d_ff, self.seq
+        shapes = [
+            (s, d),
+            (d, d), (d, d), (d, d), (d, d),
+            (d, f), (f,), (f, d), (d,),
+            (d,), (d,), (d,), (d,),
+        ]
+        return [jax.ShapeDtypeStruct(sh, jnp.float32) for sh in shapes]
+
+
+def ref_mlp(model: MlpClassifier, x, w1, b1, w2, b2, w3, b3):
+    """Pure-jnp oracle for :meth:`MlpClassifier.apply`."""
+    from .kernels import ref
+
+    h = ref.fused_linear(x, w1, b1, "relu")
+    h = ref.fused_linear(h, w2, b2, "gelu")
+    return ref.softmax(ref.fused_linear(h, w3, b3, "none"))
+
+
+def ref_transformer(model: TransformerBlock, x, wq, wk, wv, wo, w1, b1, w2, b2, g1, be1, g2, be2):
+    """Pure-jnp oracle for :meth:`TransformerBlock.apply`."""
+    from .kernels import ref
+
+    h = ref.layernorm(x, g1, be1)
+    q, k, v = ref.matmul(h, wq), ref.matmul(h, wk), ref.matmul(h, wv)
+    scale = jnp.float32(1.0 / (model.d_model**0.5))
+    attn = ref.matmul(ref.softmax(ref.matmul(q, k.T) * scale), v)
+    y = x + ref.matmul(attn, wo)
+    h2 = ref.layernorm(y, g2, be2)
+    ff = ref.fused_linear(h2, w1, b1, "gelu")
+    return y + ref.fused_linear(ff, w2, b2, "none")

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/seeds; every case asserts allclose
+against ``kernels.ref``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_linear, layernorm, matmul, ref, softmax
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(size=shape), dtype)
+
+
+dims = st.sampled_from([1, 2, 3, 4, 8, 16, 32, 96, 128, 160, 256])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestMatmul:
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, n=dims, seed=seeds)
+    def test_matches_ref_f32(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = _rand(rng, (m, k)), _rand(rng, (k, n))
+        np.testing.assert_allclose(matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.sampled_from([8, 32, 128]), seed=seeds)
+    def test_matches_ref_bf16(self, m, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (m, 64), jnp.bfloat16)
+        y = _rand(rng, (64, m), jnp.bfloat16)
+        got = np.asarray(matmul(x, y), np.float32)
+        want = np.asarray(ref.matmul(x, y), np.float32)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+    def test_explicit_tiles(self):
+        rng = np.random.default_rng(0)
+        x, y = _rand(rng, (256, 128)), _rand(rng, (128, 256))
+        out = matmul(x, y, bm=64, bn=128)
+        np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_rejects_bad_contraction(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(AssertionError):
+            matmul(_rand(rng, (4, 5)), _rand(rng, (6, 4)))
+
+    def test_identity(self):
+        eye = jnp.eye(32, dtype=jnp.float32)
+        rng = np.random.default_rng(1)
+        x = _rand(rng, (32, 32))
+        np.testing.assert_allclose(matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+class TestFusedLinear:
+    @settings(**SETTINGS)
+    @given(
+        m=dims,
+        k=dims,
+        n=dims,
+        act=st.sampled_from(["relu", "gelu", "none"]),
+        seed=seeds,
+    )
+    def test_matches_ref(self, m, k, n, act, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = _rand(rng, (m, k)), _rand(rng, (k, n)), _rand(rng, (n,))
+        got = fused_linear(x, w, b, activation=act)
+        want = ref.fused_linear(x, w, b, act)
+        # rtol 1e-4: f32 contraction-order differences between the Pallas
+        # interpret-mode dot and jnp.matmul grow with K.
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_relu_clamps_negative(self):
+        x = jnp.ones((4, 4), jnp.float32)
+        w = -jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        out = fused_linear(x, w, b, activation="relu")
+        assert float(jnp.min(out)) == 0.0
+
+    def test_unknown_activation_rejected(self):
+        x = jnp.ones((4, 4), jnp.float32)
+        w = jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        with pytest.raises(ValueError):
+            fused_linear(x, w, b, activation="swish")
+
+
+class TestSoftmax:
+    @settings(**SETTINGS)
+    @given(m=dims, n=dims, seed=seeds)
+    def test_matches_ref(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (m, n))
+        np.testing.assert_allclose(softmax(x), ref.softmax(x), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=dims, n=dims, seed=seeds)
+    def test_rows_sum_to_one(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (m, n)) * 10.0
+        sums = jnp.sum(softmax(x), axis=-1)
+        np.testing.assert_allclose(sums, np.ones(m), rtol=1e-5, atol=1e-5)
+
+    def test_large_values_stable(self):
+        # Max-subtraction keeps huge logits finite.
+        x = jnp.asarray([[1e4, 1e4 + 1.0, -1e4]], jnp.float32)
+        out = np.asarray(softmax(x))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out.sum(), 1.0, rtol=1e-5)
+
+
+class TestLayernorm:
+    @settings(**SETTINGS)
+    @given(m=dims, n=st.sampled_from([2, 4, 16, 96, 256]), seed=seeds)
+    def test_matches_ref(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (m, n))
+        gamma, beta = _rand(rng, (n,)), _rand(rng, (n,))
+        np.testing.assert_allclose(
+            layernorm(x, gamma, beta), ref.layernorm(x, gamma, beta), rtol=1e-4, atol=1e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=dims, seed=seeds)
+    def test_unit_affine_gives_standardized_rows(self, m, seed):
+        rng = np.random.default_rng(seed)
+        n = 128
+        x = _rand(rng, (m, n)) * 7.0 + 3.0
+        out = np.asarray(layernorm(x, jnp.ones((n,)), jnp.zeros((n,))))
+        np.testing.assert_allclose(out.mean(axis=-1), np.zeros(m), atol=1e-4)
+        np.testing.assert_allclose(out.std(axis=-1), np.ones(m), rtol=1e-2)
+
+
+class TestAttention:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        s=st.sampled_from([1, 2, 4, 16, 64, 128]),
+        d=st.sampled_from([4, 16, 32, 64]),
+        seed=seeds,
+    )
+    def test_matches_ref(self, s, d, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = (_rand(rng, (s, d)) for _ in range(3))
+        np.testing.assert_allclose(
+            attention(q, k, v), ref.attention(q, k, v), rtol=1e-4, atol=1e-5
+        )
+
+    def test_uniform_scores_average_v(self):
+        # Identical queries/keys -> uniform attention -> output is the
+        # mean of V rows.
+        s, d = 8, 16
+        q = jnp.ones((s, d), jnp.float32)
+        k = jnp.ones((s, d), jnp.float32)
+        rng = np.random.default_rng(0)
+        v = _rand(rng, (s, d))
+        out = np.asarray(attention(q, k, v))
+        expect = np.tile(np.asarray(v).mean(axis=0), (s, 1))
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+    def test_explicit_block_size(self):
+        rng = np.random.default_rng(1)
+        q, k, v = (_rand(rng, (64, 32)) for _ in range(3))
+        out = attention(q, k, v, bq=16)
+        np.testing.assert_allclose(out, ref.attention(q, k, v), rtol=1e-4, atol=1e-5)

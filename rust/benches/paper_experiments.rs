@@ -1,0 +1,47 @@
+//! `cargo bench --bench paper_experiments` — regenerates every table and
+//! figure of the paper's evaluation section (DESIGN.md §5) and prints
+//! the same rows/series the paper reports, plus the shape checks.
+//!
+//! Scale via env: `FIKIT_BENCH_SCALE=1.0` (default; 0.1 = smoke).
+
+use fikit::experiments::{self, Options};
+
+fn main() {
+    let scale: f64 = std::env::var("FIKIT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let seed: u64 = std::env::var("FIKIT_BENCH_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1C1);
+    let opts = Options { scale, seed };
+    println!("paper experiment harness — scale={scale} seed={seed:#x}\n");
+
+    let mut failures = 0usize;
+    let t_all = std::time::Instant::now();
+    for id in experiments::ALL {
+        let t0 = std::time::Instant::now();
+        match experiments::run(id, opts) {
+            Ok(result) => {
+                println!("{}", result.render());
+                println!("  ({:.2}s)\n", t0.elapsed().as_secs_f64());
+                if !result.all_checks_pass() {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                println!("== {id} == ERROR: {e}\n");
+                failures += 1;
+            }
+        }
+    }
+    println!(
+        "total: {:.1}s, {} experiment(s) with failing shape checks",
+        t_all.elapsed().as_secs_f64(),
+        failures
+    );
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,279 @@
+//! The pairwise combination-compatibility matrix (paper §5).
+//!
+//! For an ordered pair `(high, low)` the matrix stores how well the two
+//! models share a GPU under FIKIT: the high-priority slowdown vs solo
+//! and the low-priority effective throughput. Two ways to obtain it:
+//!
+//! * [`CompatMatrix::measure`] — run the actual pairwise FIKIT
+//!   simulation for every pair (the paper's "prepare combinations of
+//!   potential models and measure"). Expensive but exact; done offline,
+//!   persisted as JSON, preloaded by the placement policy.
+//! * [`CompatMatrix::predict`] — a zero-measurement analytic estimate
+//!   from the models' profiles alone: the low model fits into the high
+//!   model's sync-stall budget proportionally to how many of its kernels
+//!   fit the gap sizes. Used when a pair was never measured.
+
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::driver::run_experiment;
+use crate::coordinator::Mode;
+use crate::core::{Priority, Result};
+use crate::util::json::Json;
+use crate::workload::ModelKind;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Compatibility of one ordered (high, low) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompatEntry {
+    /// High-priority JCT under FIKIT sharing / solo JCT (≥1; closer to 1
+    /// is better).
+    pub high_slowdown: f64,
+    /// Low-priority throughput under FIKIT sharing relative to solo
+    /// (0..1; higher = more scavenged idle time).
+    pub low_throughput: f64,
+}
+
+impl CompatEntry {
+    /// Scalar goodness used for placement ranking: protect the
+    /// high-priority tenant first, then reward background throughput.
+    pub fn score(&self) -> f64 {
+        // slowdown 1.0 → 1.0; 2.0 → 0.5. Background throughput worth
+        // up to +0.5.
+        (1.0 / self.high_slowdown) + 0.5 * self.low_throughput
+    }
+}
+
+/// The preloaded pairwise matrix, keyed by (high model, low model).
+#[derive(Debug, Clone, Default)]
+pub struct CompatMatrix {
+    entries: BTreeMap<(String, String), CompatEntry>,
+}
+
+impl CompatMatrix {
+    pub fn new() -> CompatMatrix {
+        CompatMatrix::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn insert(&mut self, high: ModelKind, low: ModelKind, entry: CompatEntry) {
+        self.entries
+            .insert((high.name().to_string(), low.name().to_string()), entry);
+    }
+
+    /// Look up a measured entry; falls back to the analytic prediction.
+    pub fn get(&self, high: ModelKind, low: ModelKind) -> CompatEntry {
+        self.entries
+            .get(&(high.name().to_string(), low.name().to_string()))
+            .cloned()
+            .unwrap_or_else(|| Self::predict(high, low))
+    }
+
+    /// Analytic prediction from model structure only (no measurement):
+    /// the low model's mean kernel must fit the high model's typical
+    /// stall to be fillable; the high model suffers in proportion to the
+    /// low model's launch-ahead backlog relative to its own stall budget.
+    pub fn predict(high: ModelKind, low: ModelKind) -> CompatEntry {
+        let h = high.spec();
+        let l = low.spec();
+        // Typical fillable stall of the high model.
+        let stalls = h.sync_points().max(1) as f64;
+        let mean_stall_us = h.mean_sync_gap().as_micros_f64() / stalls;
+        // Mean kernel size of the low model.
+        let mean_low_kernel_us =
+            l.mean_exec().as_micros_f64() / l.kernel_count().max(1) as f64;
+        // Fillability: how many low kernels fit one stall (saturating).
+        let fits = if mean_low_kernel_us <= 0.0 {
+            0.0
+        } else {
+            (mean_stall_us / mean_low_kernel_us).min(50.0)
+        };
+        let fillable_us = (fits * mean_low_kernel_us * stalls)
+            .min(h.mean_sync_gap().as_micros_f64());
+        let low_throughput = (fillable_us / l.mean_jct().as_micros_f64().max(1.0)).min(1.0);
+        // High-priority pain: overhead-2 style — the expected residual of
+        // one low kernel per stall, plus task-entry backlog pressure from
+        // dense co-tenants.
+        let overhead2_us = stalls * (mean_low_kernel_us / 2.0);
+        let backlog_pressure = l.mean_exec().as_micros_f64()
+            / (l.mean_jct().as_micros_f64().max(1.0))
+            * 0.1
+            * h.mean_jct().as_micros_f64();
+        let high_slowdown =
+            1.0 + (overhead2_us + backlog_pressure) / h.mean_jct().as_micros_f64().max(1.0);
+        CompatEntry {
+            high_slowdown,
+            low_throughput,
+        }
+    }
+
+    /// Measure one pair by running the actual FIKIT simulation (solo
+    /// baselines + shared run).
+    pub fn measure_pair(
+        high: ModelKind,
+        low: ModelKind,
+        tasks: u32,
+        seed: u64,
+    ) -> Result<CompatEntry> {
+        let solo = |model: ModelKind| -> Result<f64> {
+            let mut cfg = ExperimentConfig {
+                mode: Mode::Sharing,
+                seed,
+                ..ExperimentConfig::default()
+            };
+            cfg.services
+                .push(ServiceConfig::new(model, Priority::P0).tasks(tasks));
+            Ok(run_experiment(&cfg)?.services[0].jct.mean_ms())
+        };
+        let high_solo = solo(high)?;
+        let low_solo = solo(low)?;
+
+        let mut cfg = ExperimentConfig {
+            mode: Mode::Fikit,
+            seed,
+            ..ExperimentConfig::default()
+        };
+        cfg.measurement.runs = 5;
+        cfg.services
+            .push(ServiceConfig::new(high, Priority::P0).tasks(tasks).with_key("h"));
+        cfg.services
+            .push(ServiceConfig::new(low, Priority::P4).tasks(tasks).with_key("l"));
+        let shared = run_experiment(&cfg)?;
+        let h_shared = shared
+            .service(&crate::core::TaskKey::new("h"))
+            .map(|s| s.jct.mean_ms())
+            .unwrap_or(f64::NAN);
+        let l_shared = shared
+            .service(&crate::core::TaskKey::new("l"))
+            .map(|s| s.jct.mean_ms())
+            .unwrap_or(f64::NAN);
+        Ok(CompatEntry {
+            high_slowdown: (h_shared / high_solo).max(1.0),
+            low_throughput: (low_solo / l_shared).clamp(0.0, 1.0),
+        })
+    }
+
+    /// Measure every ordered pair from `models` (the offline campaign).
+    pub fn measure(models: &[ModelKind], tasks: u32, seed: u64) -> Result<CompatMatrix> {
+        let mut m = CompatMatrix::new();
+        for &high in models {
+            for &low in models {
+                if high == low {
+                    continue;
+                }
+                m.insert(high, low, Self::measure_pair(high, low, tasks, seed)?);
+            }
+        }
+        Ok(m)
+    }
+
+    // ----- persistence -----
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::with_capacity(self.entries.len());
+        for ((h, l), e) in &self.entries {
+            arr.push(
+                Json::obj()
+                    .set("high", h.as_str())
+                    .set("low", l.as_str())
+                    .set("high_slowdown", e.high_slowdown)
+                    .set("low_throughput", e.low_throughput),
+            );
+        }
+        Json::obj().set("version", 1u64).set("pairs", Json::Arr(arr))
+    }
+
+    pub fn from_json(v: &Json) -> Result<CompatMatrix> {
+        let mut m = CompatMatrix::new();
+        for p in v.req_arr("pairs")? {
+            let high: ModelKind = p.req_str("high")?.parse()?;
+            let low: ModelKind = p.req_str("low")?.parse()?;
+            m.insert(
+                high,
+                low,
+                CompatEntry {
+                    high_slowdown: p.req_f64("high_slowdown")?,
+                    low_throughput: p.req_f64("low_throughput")?,
+                },
+            );
+        }
+        Ok(m)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().encode_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<CompatMatrix> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        CompatMatrix::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_prefers_gappy_hosts_and_small_fillers() {
+        // A gappy detector hosts background work well…
+        let good = CompatMatrix::predict(
+            ModelKind::KeypointRcnnResnet50Fpn,
+            ModelKind::FcnResnet50,
+        );
+        // …a dense classifier has almost nothing to give.
+        let bad = CompatMatrix::predict(ModelKind::Vgg16, ModelKind::Resnet101);
+        assert!(good.low_throughput > bad.low_throughput);
+        assert!(good.score() > bad.score());
+        assert!(good.high_slowdown >= 1.0 && bad.high_slowdown >= 1.0);
+    }
+
+    #[test]
+    fn measured_pair_matches_expectations() {
+        let e = CompatMatrix::measure_pair(
+            ModelKind::KeypointRcnnResnet50Fpn,
+            ModelKind::FcnResnet50,
+            8,
+            7,
+        )
+        .unwrap();
+        assert!(e.high_slowdown < 1.5, "high barely slowed: {e:?}");
+        assert!(e.low_throughput > 0.1, "low makes progress: {e:?}");
+    }
+
+    #[test]
+    fn matrix_persistence_round_trip() {
+        let mut m = CompatMatrix::new();
+        m.insert(
+            ModelKind::Alexnet,
+            ModelKind::Vgg16,
+            CompatEntry {
+                high_slowdown: 1.07,
+                low_throughput: 0.42,
+            },
+        );
+        let dir = std::env::temp_dir().join(format!("fikit-compat-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("compat.json");
+        m.save(&path).unwrap();
+        let loaded = CompatMatrix::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        let e = loaded.get(ModelKind::Alexnet, ModelKind::Vgg16);
+        assert!((e.high_slowdown - 1.07).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn get_falls_back_to_prediction() {
+        let m = CompatMatrix::new();
+        let e = m.get(ModelKind::Alexnet, ModelKind::Vgg16);
+        assert_eq!(e, CompatMatrix::predict(ModelKind::Alexnet, ModelKind::Vgg16));
+    }
+}

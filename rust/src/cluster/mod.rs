@@ -1,0 +1,30 @@
+//! Cluster-level GPU task scheduling — the paper's §5 "Future Work",
+//! implemented.
+//!
+//! > *"We also need to implement a cluster-level scheduling policy to
+//! > decide which concurrent tasks should be allocated to share the same
+//! > GPU device … We can prepare combinations of potential models and
+//! > measure their enhancement and impact in their JCT when sharing on
+//! > the same device. These measurements will be preloaded for
+//! > prediction in a cluster-level scheduling policy."*
+//!
+//! Components:
+//!
+//! * [`compat`] — the **combination compatibility matrix**: measured (or
+//!   profile-predicted) high-priority slowdown and low-priority
+//!   throughput for every model pair, built exactly the way the paper
+//!   proposes (offline pairwise measurement, preloaded at scheduling
+//!   time).
+//! * [`placement`] — placement policies that assign arriving services to
+//!   GPUs: the compatibility-aware **BestMatch** policy vs the
+//!   **LeastLoaded** and **RoundRobin** baselines.
+//! * [`sim`] — a multi-GPU cluster simulation that drives per-GPU FIKIT
+//!   simulations from a placement decision and reports fleet-wide QoS.
+
+pub mod compat;
+pub mod placement;
+pub mod sim;
+
+pub use compat::{CompatEntry, CompatMatrix};
+pub use placement::{Placement, PlacementPolicy, ServiceRequest};
+pub use sim::{run_cluster, ClusterConfig, ClusterReport};

@@ -1,0 +1,219 @@
+//! Placement policies: which GPU should a newly arriving service land
+//! on? (Paper §5: "when a task request arrives, the policy finds the GPU
+//! on which its optimal matching task resides using the preloaded
+//! measurement data".)
+
+use super::compat::CompatMatrix;
+use crate::core::Priority;
+use crate::workload::ModelKind;
+
+/// A service asking to be placed.
+#[derive(Debug, Clone)]
+pub struct ServiceRequest {
+    pub model: ModelKind,
+    pub priority: Priority,
+    /// Back-to-back tasks the service will issue.
+    pub tasks: u32,
+}
+
+impl ServiceRequest {
+    pub fn new(model: ModelKind, priority: Priority, tasks: u32) -> ServiceRequest {
+        ServiceRequest {
+            model,
+            priority,
+            tasks,
+        }
+    }
+}
+
+/// A placement decision: service index → GPU index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub assignments: Vec<usize>,
+    pub gpus: usize,
+}
+
+impl Placement {
+    /// Services assigned to one GPU.
+    pub fn on_gpu(&self, gpu: usize) -> Vec<usize> {
+        self.assignments
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| **g == gpu)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Available placement policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Spread by index, ignoring workloads (the naive k8s default).
+    RoundRobin,
+    /// Place each service on the GPU with the least total device-time
+    /// demand so far (classic load balancing, workload-blind).
+    LeastLoaded,
+    /// The paper's proposal: place each service where the pairwise
+    /// compatibility with the residents is best — high-priority services
+    /// seek gappy low-priority residents to scavenge; low-priority
+    /// services seek gappy high-priority hosts.
+    BestMatch,
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = crate::core::Error;
+    fn from_str(s: &str) -> crate::core::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "roundrobin" | "round-robin" | "rr" => Ok(PlacementPolicy::RoundRobin),
+            "leastloaded" | "least-loaded" | "ll" => Ok(PlacementPolicy::LeastLoaded),
+            "bestmatch" | "best-match" | "bm" => Ok(PlacementPolicy::BestMatch),
+            other => Err(crate::core::Error::Parse(format!(
+                "unknown placement policy {other:?}"
+            ))),
+        }
+    }
+}
+
+impl PlacementPolicy {
+    /// Place `requests` (in arrival order) onto `gpus` devices.
+    pub fn place(
+        self,
+        requests: &[ServiceRequest],
+        gpus: usize,
+        compat: &CompatMatrix,
+    ) -> Placement {
+        assert!(gpus > 0, "cluster has no GPUs");
+        let mut assignments = Vec::with_capacity(requests.len());
+        // Per-GPU state for the online policies.
+        let mut load_ms = vec![0.0f64; gpus];
+        let mut residents: Vec<Vec<usize>> = vec![Vec::new(); gpus];
+
+        for (idx, req) in requests.iter().enumerate() {
+            let demand_ms =
+                req.model.spec().mean_exec().as_millis_f64() * req.tasks as f64;
+            let gpu = match self {
+                PlacementPolicy::RoundRobin => idx % gpus,
+                PlacementPolicy::LeastLoaded => {
+                    (0..gpus)
+                        .min_by(|a, b| load_ms[*a].partial_cmp(&load_ms[*b]).unwrap())
+                        .unwrap()
+                }
+                PlacementPolicy::BestMatch => {
+                    // Score each GPU by the worst pairwise compatibility
+                    // the new service would create with residents
+                    // (bottleneck metric), with a mild load tiebreak.
+                    let mut best_gpu = 0;
+                    let mut best_score = f64::MIN;
+                    for g in 0..gpus {
+                        let mut score = if residents[g].is_empty() {
+                            // Empty GPU: always preferable to co-location
+                            // (scores cap at 1/1.0 + 0.5·1.0 = 1.5).
+                            2.0
+                        } else {
+                            residents[g]
+                                .iter()
+                                .map(|&r| {
+                                    let other = &requests[r];
+                                    pair_score(req, other, compat)
+                                })
+                                .fold(f64::INFINITY, f64::min)
+                        };
+                        // Load tiebreak: 1ms of queued demand ≈ −1e-5.
+                        score -= load_ms[g] * 1e-5;
+                        if score > best_score {
+                            best_score = score;
+                            best_gpu = g;
+                        }
+                    }
+                    best_gpu
+                }
+            };
+            assignments.push(gpu);
+            load_ms[gpu] += demand_ms;
+            residents[gpu].push(idx);
+        }
+        Placement { assignments, gpus }
+    }
+}
+
+/// Compatibility score between a new request and one resident, oriented
+/// by priority (the higher-priority one is the "host" whose gaps get
+/// filled).
+fn pair_score(a: &ServiceRequest, b: &ServiceRequest, compat: &CompatMatrix) -> f64 {
+    let (high, low) = if a.priority.is_higher_than(b.priority) {
+        (a.model, b.model)
+    } else if b.priority.is_higher_than(a.priority) {
+        (b.model, a.model)
+    } else {
+        // Equal priority: FIFO sharing; prefer pairing dense with gappy
+        // anyway (use both orientations, take the mean).
+        let e1 = compat.get(a.model, b.model);
+        let e2 = compat.get(b.model, a.model);
+        return (e1.score() + e2.score()) / 2.0;
+    };
+    compat.get(high, low).score()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs() -> Vec<ServiceRequest> {
+        vec![
+            ServiceRequest::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 50),
+            ServiceRequest::new(ModelKind::MaskrcnnResnet50Fpn, Priority::P0, 50),
+            ServiceRequest::new(ModelKind::FcnResnet50, Priority::P5, 50),
+            ServiceRequest::new(ModelKind::Resnet101, Priority::P5, 50),
+        ]
+    }
+
+    #[test]
+    fn round_robin_spreads_by_index() {
+        let p = PlacementPolicy::RoundRobin.place(&reqs(), 2, &CompatMatrix::new());
+        assert_eq!(p.assignments, vec![0, 1, 0, 1]);
+        assert_eq!(p.on_gpu(0), vec![0, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances_demand() {
+        let requests = vec![
+            ServiceRequest::new(ModelKind::MaskrcnnResnet50Fpn, Priority::P0, 100), // heavy
+            ServiceRequest::new(ModelKind::Alexnet, Priority::P0, 10),              // light
+            ServiceRequest::new(ModelKind::Alexnet, Priority::P5, 10),              // light
+        ];
+        let p = PlacementPolicy::LeastLoaded.place(&requests, 2, &CompatMatrix::new());
+        // The two light ones pile onto the other GPU.
+        assert_eq!(p.assignments[0], 0);
+        assert_eq!(p.assignments[1], 1);
+        assert_eq!(p.assignments[2], 1);
+    }
+
+    #[test]
+    fn best_match_pairs_gappy_hosts_with_dense_fillers() {
+        // Two high-priority detectors arrive first (one per GPU), then a
+        // dense low-priority service: BestMatch should co-locate it with
+        // a detector host (both are; any is fine), and a second gappy
+        // low-priority detector-like service should avoid doubling up
+        // where compatibility is worse.
+        let requests = vec![
+            ServiceRequest::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 50),
+            ServiceRequest::new(ModelKind::Vgg16, Priority::P0, 50), // dense host: bad gaps
+            ServiceRequest::new(ModelKind::FcnResnet50, Priority::P5, 50),
+        ];
+        let p = PlacementPolicy::BestMatch.place(&requests, 2, &CompatMatrix::new());
+        // The detector and the vgg host land on different GPUs first.
+        assert_ne!(p.assignments[0], p.assignments[1]);
+        // The background service joins the *gappy* detector, not vgg.
+        assert_eq!(
+            p.assignments[2], p.assignments[0],
+            "background filler should pick the gappy host"
+        );
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!("bm".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::BestMatch);
+        assert_eq!("rr".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::RoundRobin);
+        assert!("x".parse::<PlacementPolicy>().is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Multi-GPU cluster simulation: place services with a policy, run each
+//! GPU's tenant set through the single-GPU FIKIT simulator, and report
+//! fleet-wide QoS.
+
+use super::compat::CompatMatrix;
+use super::placement::{Placement, PlacementPolicy, ServiceRequest};
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::driver::run_experiment;
+use crate::coordinator::Mode;
+use crate::core::{Priority, Result};
+use crate::metrics::{JctStats, TextTable};
+
+/// Cluster experiment description.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub gpus: usize,
+    pub policy: PlacementPolicy,
+    pub requests: Vec<ServiceRequest>,
+    pub mode: Mode,
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    pub fn new(gpus: usize, policy: PlacementPolicy) -> ClusterConfig {
+        ClusterConfig {
+            gpus,
+            policy,
+            requests: Vec::new(),
+            mode: Mode::Fikit,
+            seed: 0xF1C1,
+        }
+    }
+}
+
+/// Per-service outcome across the cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterServiceOutcome {
+    pub gpu: usize,
+    pub model: crate::workload::ModelKind,
+    pub priority: Priority,
+    pub jct: JctStats,
+    /// Mean JCT / solo mean JCT (1.0 = unharmed by sharing).
+    pub slowdown: f64,
+}
+
+/// Fleet-wide results.
+#[derive(Debug)]
+pub struct ClusterReport {
+    pub placement: Placement,
+    pub services: Vec<ClusterServiceOutcome>,
+}
+
+impl ClusterReport {
+    /// Mean slowdown of high-priority (P0–P2) services — the headline
+    /// QoS number a placement policy is judged on.
+    pub fn high_priority_slowdown(&self) -> f64 {
+        let highs: Vec<f64> = self
+            .services
+            .iter()
+            .filter(|s| (s.priority as u8) <= 2)
+            .map(|s| s.slowdown)
+            .collect();
+        if highs.is_empty() {
+            1.0
+        } else {
+            highs.iter().sum::<f64>() / highs.len() as f64
+        }
+    }
+
+    /// Worst-case high-priority slowdown (tail QoS).
+    pub fn worst_high_priority_slowdown(&self) -> f64 {
+        self.services
+            .iter()
+            .filter(|s| (s.priority as u8) <= 2)
+            .map(|s| s.slowdown)
+            .fold(1.0, f64::max)
+    }
+
+    pub fn summary(&self) -> String {
+        let mut t = TextTable::new(&["gpu", "model", "prio", "mean JCT (ms)", "slowdown"]);
+        let mut rows: Vec<&ClusterServiceOutcome> = self.services.iter().collect();
+        rows.sort_by_key(|s| (s.gpu, s.priority));
+        for s in rows {
+            t.row(vec![
+                s.gpu.to_string(),
+                s.model.name().to_string(),
+                s.priority.to_string(),
+                format!("{:.2}", s.jct.mean_ms()),
+                format!("{:.2}x", s.slowdown),
+            ]);
+        }
+        format!(
+            "{}mean high-prio slowdown: {:.2}x (worst {:.2}x)\n",
+            t.render(),
+            self.high_priority_slowdown(),
+            self.worst_high_priority_slowdown()
+        )
+    }
+}
+
+/// Run the full cluster experiment: place, then simulate each GPU.
+pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<ClusterReport> {
+    let placement = cfg.policy.place(&cfg.requests, cfg.gpus, compat);
+
+    // Solo baselines per distinct model (for slowdown normalization).
+    let mut solo_ms: std::collections::BTreeMap<&'static str, f64> = Default::default();
+    for req in &cfg.requests {
+        let name = req.model.name();
+        if !solo_ms.contains_key(name) {
+            let mut solo = ExperimentConfig {
+                mode: Mode::Sharing,
+                seed: cfg.seed,
+                ..ExperimentConfig::default()
+            };
+            solo.services
+                .push(ServiceConfig::new(req.model, Priority::P0).tasks(req.tasks.min(50)));
+            solo_ms.insert(name, run_experiment(&solo)?.services[0].jct.mean_ms());
+        }
+    }
+
+    let mut services = Vec::with_capacity(cfg.requests.len());
+    for gpu in 0..cfg.gpus {
+        let tenant_idxs = placement.on_gpu(gpu);
+        if tenant_idxs.is_empty() {
+            continue;
+        }
+        let mut gpu_cfg = ExperimentConfig {
+            mode: cfg.mode,
+            seed: cfg.seed ^ (gpu as u64) << 32,
+            ..ExperimentConfig::default()
+        };
+        gpu_cfg.measurement.runs = 5;
+        for &idx in &tenant_idxs {
+            let req = &cfg.requests[idx];
+            gpu_cfg.services.push(
+                ServiceConfig::new(req.model, req.priority)
+                    .tasks(req.tasks)
+                    .with_key(&format!("svc{idx}")),
+            );
+        }
+        let report = run_experiment(&gpu_cfg)?;
+        for &idx in &tenant_idxs {
+            let req = &cfg.requests[idx];
+            let svc = report
+                .service(&crate::core::TaskKey::new(format!("svc{idx}").as_str()))
+                .ok_or_else(|| crate::core::Error::Invariant("missing service".into()))?;
+            let solo = solo_ms[req.model.name()];
+            services.push(ClusterServiceOutcome {
+                gpu,
+                model: req.model,
+                priority: req.priority,
+                jct: svc.jct.clone(),
+                slowdown: svc.jct.mean_ms() / solo,
+            });
+        }
+    }
+    Ok(ClusterReport {
+        placement,
+        services,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelKind;
+
+    fn requests() -> Vec<ServiceRequest> {
+        vec![
+            ServiceRequest::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 15),
+            ServiceRequest::new(ModelKind::FasterrcnnResnet50Fpn, Priority::P0, 15),
+            ServiceRequest::new(ModelKind::FcnResnet50, Priority::P5, 15),
+            ServiceRequest::new(ModelKind::Resnet101, Priority::P6, 15),
+        ]
+    }
+
+    #[test]
+    fn cluster_runs_and_reports() {
+        let mut cfg = ClusterConfig::new(2, PlacementPolicy::BestMatch);
+        cfg.requests = requests();
+        let report = run_cluster(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(report.services.len(), 4);
+        assert!(report.high_priority_slowdown() >= 1.0);
+        assert!(report.summary().contains("mean high-prio slowdown"));
+    }
+
+    #[test]
+    fn best_match_no_worse_than_round_robin_on_qos() {
+        // The compatibility-aware policy must protect high-priority
+        // tenants at least as well as naive spreading for this workload.
+        let run = |policy| {
+            let mut cfg = ClusterConfig::new(2, policy);
+            cfg.requests = requests();
+            run_cluster(&cfg, &CompatMatrix::new()).unwrap()
+        };
+        let bm = run(PlacementPolicy::BestMatch);
+        let rr = run(PlacementPolicy::RoundRobin);
+        assert!(
+            bm.worst_high_priority_slowdown() <= rr.worst_high_priority_slowdown() * 1.1,
+            "BestMatch {:.2}x vs RoundRobin {:.2}x",
+            bm.worst_high_priority_slowdown(),
+            rr.worst_high_priority_slowdown()
+        );
+    }
+
+    #[test]
+    fn empty_gpu_tolerated() {
+        let mut cfg = ClusterConfig::new(4, PlacementPolicy::LeastLoaded);
+        cfg.requests = vec![ServiceRequest::new(ModelKind::Alexnet, Priority::P0, 5)];
+        let report = run_cluster(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(report.services.len(), 1);
+    }
+}

@@ -1,0 +1,416 @@
+//! Experiment / deployment configuration.
+//!
+//! Everything an experiment needs is captured in one serializable
+//! [`ExperimentConfig`] — loadable from a JSON file (the
+//! `fikit run --config` path), constructible programmatically (the bench
+//! harness), always seeded and therefore reproducible.
+
+use crate::coordinator::Mode;
+use crate::core::{Duration, Error, Priority, Result, SimTime, TaskKey};
+use crate::profile::{MeasurementConfig, SymbolTableModel};
+use crate::simulator::DeviceConfig;
+use crate::util::json::Json;
+use crate::workload::{InvocationPattern, ModelKind, Service};
+use std::path::Path;
+
+/// One hosted service in an experiment.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Which model the service runs.
+    pub model: ModelKind,
+    /// Task priority (P0 highest).
+    pub priority: Priority,
+    /// Arrival pattern.
+    pub pattern: InvocationPattern,
+    /// Optional explicit task key (defaults to `model@priority`).
+    pub key: Option<String>,
+}
+
+impl ServiceConfig {
+    pub fn new(model: ModelKind, priority: Priority) -> ServiceConfig {
+        ServiceConfig {
+            model,
+            priority,
+            pattern: InvocationPattern::BackToBack { count: 100 },
+            key: None,
+        }
+    }
+
+    /// Issue `count` back-to-back tasks.
+    pub fn tasks(mut self, count: u32) -> ServiceConfig {
+        self.pattern = InvocationPattern::BackToBack { count };
+        self
+    }
+
+    /// Issue a task every `interval_ms`, `count` times.
+    pub fn every_ms(mut self, interval_ms: u64, count: u32) -> ServiceConfig {
+        self.pattern = InvocationPattern::Every {
+            interval: Duration::from_millis(interval_ms),
+            count,
+        };
+        self
+    }
+
+    /// Run back-to-back until the simulation clock passes `until_ms`.
+    pub fn continuous_ms(mut self, until_ms: u64) -> ServiceConfig {
+        self.pattern = InvocationPattern::ContinuousUntil {
+            until: SimTime(until_ms * 1_000_000),
+        };
+        self
+    }
+
+    pub fn with_key(mut self, key: &str) -> ServiceConfig {
+        self.key = Some(key.to_string());
+        self
+    }
+
+    /// Materialize into a workload [`Service`].
+    pub fn to_service(&self) -> Service {
+        let mut s = Service::new(self.model, self.priority, self.pattern);
+        if let Some(key) = &self.key {
+            s = s.with_key(TaskKey::new(key.as_str()));
+        }
+        s
+    }
+}
+
+/// Per-launch CPU-side costs of the FIKIT machinery.
+#[derive(Debug, Clone)]
+pub struct HookConfig {
+    /// CPU cost of the hook intercepting one launch and (for held
+    /// kernels) round-tripping to the scheduler. The paper's design keeps
+    /// this ≈1–2 µs by resolving all kernel statistics offline.
+    pub interception_overhead: Duration,
+    /// Base CPU launch-path overhead present in *every* mode (driver
+    /// call, stream bookkeeping).
+    pub base_launch_overhead: Duration,
+}
+
+impl Default for HookConfig {
+    fn default() -> HookConfig {
+        HookConfig {
+            interception_overhead: Duration::from_nanos(1_500),
+            base_launch_overhead: Duration::from_nanos(800),
+        }
+    }
+}
+
+/// The full description of one experiment run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Scheduling mode under test.
+    pub mode: Mode,
+    /// The sharing services.
+    pub services: Vec<ServiceConfig>,
+    /// Device timing model.
+    pub device: DeviceConfig,
+    /// Hook cost model.
+    pub hook: HookConfig,
+    /// `-rdynamic` symbol-table model (drives Fig 13 and kernel-name
+    /// availability).
+    pub symbols: SymbolTableModel,
+    /// Measurement-stage cost model and `T`.
+    pub measurement: MeasurementConfig,
+    /// Enable the runtime feedback early stop (ablation switch).
+    pub feedback: bool,
+    /// Within-priority fill selection rule (ablation; paper: LongestFit).
+    pub fill_policy: crate::coordinator::best_prio_fit::FillPolicy,
+    /// Small-gap threshold ε for Algorithm 1.
+    pub epsilon: Duration,
+    /// Root RNG seed — all service trace generators derive from it.
+    pub seed: u64,
+    /// Hard stop for the simulation clock (safety net; `None` = run to
+    /// completion of all arrival patterns).
+    pub horizon: Option<Duration>,
+}
+
+fn default_epsilon() -> Duration {
+    crate::coordinator::fikit::DEFAULT_EPSILON
+}
+fn default_seed() -> u64 {
+    0xF1C1
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> ExperimentConfig {
+        ExperimentConfig {
+            mode: Mode::Fikit,
+            services: Vec::new(),
+            device: DeviceConfig::default(),
+            hook: HookConfig::default(),
+            symbols: SymbolTableModel::default(),
+            measurement: MeasurementConfig::default(),
+            feedback: true,
+            fill_policy: crate::coordinator::best_prio_fit::FillPolicy::LongestFit,
+            epsilon: default_epsilon(),
+            seed: default_seed(),
+            horizon: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate structural soundness.
+    pub fn validate(&self) -> Result<()> {
+        if self.services.is_empty() {
+            return Err(crate::core::Error::Config("no services configured".into()));
+        }
+        let mut keys: Vec<String> = self
+            .services
+            .iter()
+            .map(|s| s.to_service().key.to_string())
+            .collect();
+        keys.sort();
+        keys.dedup();
+        if keys.len() != self.services.len() {
+            return Err(crate::core::Error::Config(
+                "duplicate service task keys; use `key` to disambiguate".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Load and validate a JSON config file.
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let cfg = ExperimentConfig::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to a JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("mode", self.mode.to_string())
+            .set(
+                "services",
+                Json::Arr(self.services.iter().map(|s| s.to_json()).collect()),
+            )
+            .set("launch_latency_ns", self.device.launch_latency.nanos())
+            .set("compute_scale", self.device.compute_scale)
+            .set(
+                "hook",
+                Json::obj()
+                    .set("interception_ns", self.hook.interception_overhead.nanos())
+                    .set("base_launch_ns", self.hook.base_launch_overhead.nanos()),
+            )
+            .set(
+                "symbols",
+                Json::obj()
+                    .set("exported", self.symbols.symbols_exported)
+                    .set("table_size", self.symbols.table_size)
+                    .set("base_lookup_ns", self.symbols.base_lookup.nanos()),
+            )
+            .set(
+                "measurement",
+                Json::obj()
+                    .set("runs", self.measurement.runs)
+                    .set("event_overhead_ns", self.measurement.event_overhead.nanos())
+                    .set("sync_stall_factor", self.measurement.sync_stall_factor),
+            )
+            .set("feedback", self.feedback)
+            .set(
+                "fill_policy",
+                match self.fill_policy {
+                    crate::coordinator::best_prio_fit::FillPolicy::LongestFit => "longest",
+                    crate::coordinator::best_prio_fit::FillPolicy::FirstFit => "first",
+                    crate::coordinator::best_prio_fit::FillPolicy::ShortestFit => "shortest",
+                },
+            )
+            .set("epsilon_ns", self.epsilon.nanos())
+            .set("seed", self.seed)
+            .set(
+                "horizon_ns",
+                match self.horizon {
+                    Some(h) => Json::from(h.nanos()),
+                    None => Json::Null,
+                },
+            )
+    }
+
+    /// Parse from a JSON value. Missing optional fields take defaults.
+    pub fn from_json(v: &Json) -> Result<ExperimentConfig> {
+        let defaults = ExperimentConfig::default();
+        let mode: Mode = v.req_str("mode")?.parse()?;
+        let services = v
+            .req_arr("services")?
+            .iter()
+            .map(ServiceConfig::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let device = DeviceConfig {
+            launch_latency: v
+                .get("launch_latency_ns")
+                .and_then(Json::as_u64)
+                .map(Duration::from_nanos)
+                .unwrap_or(defaults.device.launch_latency),
+            compute_scale: v
+                .get("compute_scale")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0),
+        };
+        let hook = match v.get("hook") {
+            Some(h) => HookConfig {
+                interception_overhead: Duration::from_nanos(h.req_u64("interception_ns")?),
+                base_launch_overhead: Duration::from_nanos(h.req_u64("base_launch_ns")?),
+            },
+            None => defaults.hook.clone(),
+        };
+        let symbols = match v.get("symbols") {
+            Some(s) => SymbolTableModel {
+                symbols_exported: s.req_bool("exported")?,
+                table_size: s.req_u64("table_size")?,
+                base_lookup: Duration::from_nanos(s.req_u64("base_lookup_ns")?),
+            },
+            None => defaults.symbols.clone(),
+        };
+        let measurement = match v.get("measurement") {
+            Some(m) => MeasurementConfig {
+                runs: m.req_u64("runs")? as u32,
+                event_overhead: Duration::from_nanos(m.req_u64("event_overhead_ns")?),
+                sync_stall_factor: m.req_f64("sync_stall_factor")?,
+            },
+            None => defaults.measurement.clone(),
+        };
+        Ok(ExperimentConfig {
+            mode,
+            services,
+            device,
+            hook,
+            symbols,
+            measurement,
+            feedback: v.get("feedback").and_then(Json::as_bool).unwrap_or(true),
+            fill_policy: match v.get("fill_policy").and_then(Json::as_str) {
+                Some(p) => p.parse()?,
+                None => Default::default(),
+            },
+            epsilon: v
+                .get("epsilon_ns")
+                .and_then(Json::as_u64)
+                .map(Duration::from_nanos)
+                .unwrap_or_else(default_epsilon),
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or_else(default_seed),
+            horizon: v
+                .get("horizon_ns")
+                .and_then(Json::as_u64)
+                .map(Duration::from_nanos),
+        })
+    }
+}
+
+impl ServiceConfig {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let pattern = match self.pattern {
+            InvocationPattern::BackToBack { count } => {
+                Json::obj().set("kind", "back_to_back").set("count", count)
+            }
+            InvocationPattern::Every { interval, count } => Json::obj()
+                .set("kind", "every")
+                .set("interval_ns", interval.nanos())
+                .set("count", count),
+            InvocationPattern::ContinuousUntil { until } => Json::obj()
+                .set("kind", "continuous_until")
+                .set("until_ns", until.nanos()),
+        };
+        let mut obj = Json::obj()
+            .set("model", self.model.name())
+            .set("priority", self.priority.to_string())
+            .set("pattern", pattern);
+        if let Some(key) = &self.key {
+            obj = obj.set("key", key.as_str());
+        }
+        obj
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(v: &Json) -> Result<ServiceConfig> {
+        let model: ModelKind = v.req_str("model")?.parse()?;
+        let priority: Priority = v.req_str("priority")?.parse()?;
+        let p = v.require("pattern")?;
+        let pattern = match p.req_str("kind")? {
+            "back_to_back" => InvocationPattern::BackToBack {
+                count: p.req_u64("count")? as u32,
+            },
+            "every" => InvocationPattern::Every {
+                interval: Duration::from_nanos(p.req_u64("interval_ns")?),
+                count: p.req_u64("count")? as u32,
+            },
+            "continuous_until" => InvocationPattern::ContinuousUntil {
+                until: SimTime(p.req_u64("until_ns")?),
+            },
+            other => {
+                return Err(Error::Parse(format!("unknown pattern kind {other:?}")));
+            }
+        };
+        Ok(ServiceConfig {
+            model,
+            priority,
+            pattern,
+            key: v.get("key").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_round_trips_through_json() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0).tasks(10));
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Vgg16, Priority::P2).every_ms(1000, 5));
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Resnet50, Priority::P4).continuous_ms(5_000));
+        cfg.horizon = Some(Duration::from_secs(30));
+        cfg.validate().unwrap();
+
+        let text = cfg.to_json().encode_pretty();
+        let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.services.len(), 3);
+        assert_eq!(back.mode, Mode::Fikit);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.horizon, cfg.horizon);
+        assert_eq!(back.services[1].pattern, cfg.services[1].pattern);
+        assert_eq!(back.services[2].pattern, cfg.services[2].pattern);
+        assert_eq!(back.epsilon, cfg.epsilon);
+        assert_eq!(
+            back.measurement.sync_stall_factor,
+            cfg.measurement.sync_stall_factor
+        );
+    }
+
+    #[test]
+    fn config_file_round_trip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0).tasks(3));
+        let dir = std::env::temp_dir().join(format!("fikit-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.json");
+        std::fs::write(&path, cfg.to_json().encode_pretty()).unwrap();
+        let back = ExperimentConfig::from_json_file(&path).unwrap();
+        assert_eq!(back.services.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0));
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0));
+        assert!(cfg.validate().is_err());
+        // Disambiguating with explicit keys fixes it.
+        cfg.services[1] = ServiceConfig::new(ModelKind::Alexnet, Priority::P0).with_key("alex2");
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_services_rejected() {
+        assert!(ExperimentConfig::default().validate().is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! **Algorithm 2 — `BestPrioFit`**: the sharing-stage idling-gap filling
+//! policy (paper Fig 10).
+//!
+//! Given a remaining idle duration, scan priorities Q0 → Q9; at the first
+//! priority level holding at least one request whose *profiled* duration
+//! (`SK`) fits the gap, select the request with the **longest** fitting
+//! duration, remove it from its queue, and return it together with its
+//! predicted duration. Lower priority levels are only examined when no
+//! request at a higher level fits ("best fit" = highest priority first,
+//! then closest-to-gap among candidates of that priority).
+
+use super::queues::PriorityQueues;
+use crate::core::{Duration, KernelLaunch, Priority};
+use crate::profile::ProfileStore;
+
+/// The selection made by one `BestPrioFit` invocation.
+#[derive(Debug, Clone)]
+pub struct Fit {
+    pub launch: KernelLaunch,
+    /// The profiled (predicted) execution duration `SK` used to charge
+    /// the fill budget — NOT the true duration, which the scheduler
+    /// cannot know.
+    pub predicted: Duration,
+}
+
+/// Within-priority selection rule for gap filling. The paper's
+/// Algorithm 2 uses LongestFit; the alternatives are kept as explicit
+/// ablations (bench `ablation_fill_policy`) for the design-choice
+/// analysis in DESIGN.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FillPolicy {
+    /// Paper Algorithm 2: the longest request that still fits (maximizes
+    /// utilization per BestPrioFit invocation).
+    #[default]
+    LongestFit,
+    /// The first (oldest) fitting request — FIFO fairness, cheapest scan.
+    FirstFit,
+    /// The shortest fitting request — minimizes overrun risk at the cost
+    /// of utilization.
+    ShortestFit,
+}
+
+impl std::str::FromStr for FillPolicy {
+    type Err = crate::core::Error;
+    fn from_str(s: &str) -> crate::core::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "longest" | "longest-fit" | "best" => Ok(FillPolicy::LongestFit),
+            "first" | "first-fit" => Ok(FillPolicy::FirstFit),
+            "shortest" | "shortest-fit" => Ok(FillPolicy::ShortestFit),
+            other => Err(crate::core::Error::Parse(format!(
+                "unknown fill policy {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Run Algorithm 2 over the message queues (paper policy: LongestFit).
+///
+/// Requests whose task has no profile, or whose kernel id was never seen
+/// during measurement, are skipped — the scheduler cannot predict their
+/// duration, so it must not gamble a high-priority task's gap on them.
+pub fn best_prio_fit(
+    queues: &mut PriorityQueues,
+    idle_time: Duration,
+    profiles: &ProfileStore,
+) -> Option<Fit> {
+    select_fit(queues, idle_time, profiles, FillPolicy::LongestFit)
+}
+
+/// Policy-parameterized variant of Algorithm 2.
+pub fn select_fit(
+    queues: &mut PriorityQueues,
+    idle_time: Duration,
+    profiles: &ProfileStore,
+    policy: FillPolicy,
+) -> Option<Fit> {
+    if idle_time.is_zero() {
+        return None;
+    }
+    // From the highest priority to the lowest (Algorithm 2, line 5).
+    for priority in Priority::ALL {
+        let mut best_time = Duration::ZERO;
+        let mut best_idx: Option<usize> = None;
+        let mut shortest = Duration(u64::MAX);
+        // Examine every kernel request at this priority (line 7). The
+        // profiled duration was resolved at enqueue time; fall back to a
+        // store lookup only for requests enqueued without one.
+        for (idx, req) in queues.iter_at(priority).enumerate() {
+            let predicted = match req.predicted {
+                Some(p) => p,
+                None => {
+                    let Some(p) = profiles
+                        .get(&req.launch.task_key)
+                        .and_then(|prof| prof.sk(&req.launch.kernel))
+                    else {
+                        continue;
+                    };
+                    p
+                }
+            };
+            if predicted >= idle_time {
+                continue; // does not fit the gap
+            }
+            match policy {
+                // Longest so far AND fits (Algorithm 2 line 13:
+                // bestKernelTime < predictedKernelTime < idleTime).
+                FillPolicy::LongestFit => {
+                    if predicted > best_time {
+                        best_time = predicted;
+                        best_idx = Some(idx);
+                    }
+                }
+                FillPolicy::FirstFit => {
+                    best_time = predicted;
+                    best_idx = Some(idx);
+                    break;
+                }
+                FillPolicy::ShortestFit => {
+                    if predicted < shortest {
+                        shortest = predicted;
+                        best_time = predicted;
+                        best_idx = Some(idx);
+                    }
+                }
+            }
+        }
+        // Found the longest fitting kernel at this priority level: stop —
+        // lower priorities are not considered (line 20-23).
+        if let Some(idx) = best_idx {
+            let req = queues
+                .remove_at(priority, idx)
+                .expect("index valid: found during scan");
+            return Some(Fit {
+                launch: req.launch,
+                predicted: best_time,
+            });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, KernelId, SimTime, TaskId, TaskKey};
+    use crate::profile::TaskProfile;
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(8), Dim3::x(128))
+    }
+
+    fn launch(key: &str, kernel: &str, prio: Priority) -> KernelLaunch {
+        KernelLaunch {
+            task_key: TaskKey::new(key),
+            task_id: TaskId(0),
+            kernel: kid(kernel),
+            priority: prio,
+            seq: 0,
+            true_duration: Duration::from_micros(999), // scheduler must not read this
+            issued_at: SimTime::ZERO,
+        }
+    }
+
+    /// Store with one profile per (key, kernel → duration µs) entry.
+    fn store(entries: &[(&str, &str, u64)]) -> ProfileStore {
+        let mut s = ProfileStore::new();
+        for (key, kernel, us) in entries {
+            let tk = TaskKey::new(*key);
+            let mut p = s.remove(&tk).unwrap_or_else(|| TaskProfile::new(tk));
+            p.record(&kid(kernel), Duration::from_micros(*us), None);
+            p.finish_run(1);
+            s.insert(p);
+        }
+        s
+    }
+
+    #[test]
+    fn picks_longest_fit_within_priority() {
+        let mut q = PriorityQueues::new();
+        q.push(launch("a", "short", Priority::P5), SimTime::ZERO);
+        q.push(launch("a", "long", Priority::P5), SimTime::ZERO);
+        q.push(launch("a", "toolong", Priority::P5), SimTime::ZERO);
+        let s = store(&[("a", "short", 100), ("a", "long", 400), ("a", "toolong", 900)]);
+
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        assert_eq!(fit.launch.kernel.name.as_ref(), "long");
+        assert_eq!(fit.predicted, Duration::from_micros(400));
+        assert_eq!(q.len(), 2); // selected request removed, others kept
+    }
+
+    #[test]
+    fn higher_priority_wins_even_if_shorter() {
+        let mut q = PriorityQueues::new();
+        q.push(launch("hi", "small", Priority::P1), SimTime::ZERO);
+        q.push(launch("lo", "big", Priority::P7), SimTime::ZERO);
+        let s = store(&[("hi", "small", 50), ("lo", "big", 450)]);
+
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        assert_eq!(fit.launch.task_key, TaskKey::new("hi"));
+    }
+
+    #[test]
+    fn falls_through_to_lower_priority_when_nothing_fits() {
+        let mut q = PriorityQueues::new();
+        q.push(launch("hi", "huge", Priority::P1), SimTime::ZERO);
+        q.push(launch("lo", "small", Priority::P7), SimTime::ZERO);
+        let s = store(&[("hi", "huge", 2_000), ("lo", "small", 100)]);
+
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        assert_eq!(fit.launch.task_key, TaskKey::new("lo"));
+        // The non-fitting high-priority request stays queued.
+        assert_eq!(q.len_at(Priority::P1), 1);
+    }
+
+    #[test]
+    fn strict_fit_boundary() {
+        // predicted must be strictly less than idle (line 13).
+        let mut q = PriorityQueues::new();
+        q.push(launch("a", "exact", Priority::P3), SimTime::ZERO);
+        let s = store(&[("a", "exact", 500)]);
+        assert!(best_prio_fit(&mut q, Duration::from_micros(500), &s).is_none());
+        assert!(best_prio_fit(&mut q, Duration::from_micros(501), &s).is_some());
+    }
+
+    #[test]
+    fn unprofiled_requests_are_skipped() {
+        let mut q = PriorityQueues::new();
+        q.push(launch("unknown", "k", Priority::P2), SimTime::ZERO);
+        q.push(launch("known", "k", Priority::P6), SimTime::ZERO);
+        let s = store(&[("known", "k", 100)]);
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        assert_eq!(fit.launch.task_key, TaskKey::new("known"));
+        // The unprofiled one is left in place.
+        assert_eq!(q.len_at(Priority::P2), 1);
+    }
+
+    #[test]
+    fn fill_policy_variants() {
+        use super::FillPolicy;
+        let build = || {
+            let mut q = PriorityQueues::new();
+            q.push(launch("a", "mid", Priority::P5), SimTime::ZERO);
+            q.push(launch("a", "short", Priority::P5), SimTime::ZERO);
+            q.push(launch("a", "long", Priority::P5), SimTime::ZERO);
+            q
+        };
+        let s = store(&[("a", "mid", 250), ("a", "short", 100), ("a", "long", 400)]);
+        let idle = Duration::from_micros(500);
+
+        let fit = select_fit(&mut build(), idle, &s, FillPolicy::LongestFit).unwrap();
+        assert_eq!(fit.launch.kernel.name.as_ref(), "long");
+        let fit = select_fit(&mut build(), idle, &s, FillPolicy::FirstFit).unwrap();
+        assert_eq!(fit.launch.kernel.name.as_ref(), "mid"); // FIFO head
+        let fit = select_fit(&mut build(), idle, &s, FillPolicy::ShortestFit).unwrap();
+        assert_eq!(fit.launch.kernel.name.as_ref(), "short");
+
+        // All policies respect the fit bound.
+        let tiny = Duration::from_micros(50);
+        for policy in [FillPolicy::LongestFit, FillPolicy::FirstFit, FillPolicy::ShortestFit] {
+            assert!(select_fit(&mut build(), tiny, &s, policy).is_none());
+        }
+        assert!("longest".parse::<FillPolicy>().is_ok());
+        assert!("bogus".parse::<FillPolicy>().is_err());
+    }
+
+    #[test]
+    fn empty_queues_or_zero_idle_yield_none() {
+        let mut q = PriorityQueues::new();
+        let s = store(&[]);
+        assert!(best_prio_fit(&mut q, Duration::from_micros(100), &s).is_none());
+        q.push(launch("a", "k", Priority::P1), SimTime::ZERO);
+        let s = store(&[("a", "k", 10)]);
+        assert!(best_prio_fit(&mut q, Duration::ZERO, &s).is_none());
+    }
+}

@@ -1,0 +1,624 @@
+//! The simulation driver: runs a set of services on the simulated GPU
+//! under a [`Mode`] and produces an [`ExperimentReport`].
+//!
+//! This is where the three execution modes differ:
+//!
+//! * **Sharing** — every launch goes straight to the device FIFO in
+//!   launch order (NVIDIA default time-slice sharing).
+//! * **Exclusive** — a global lock serializes *tasks* in arrival order
+//!   (the paper's "external program orchestrates tasks sequentially").
+//! * **Fikit** — launches are routed through the
+//!   [`FikitScheduler`](super::scheduler::FikitScheduler); services
+//!   without profiles are first measured (profiling pass), exactly the
+//!   paper's measurement → sharing lifecycle (Fig 3).
+
+use super::scheduler::{FikitScheduler, SchedulerConfig, SchedulerStats, Submission};
+use super::Mode;
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::core::{Duration, LaunchSource, Result, SimTime, TaskKey};
+use crate::metrics::{JctStats, TextTable, Timeline, TimelinePoint};
+use crate::profile::{ProfileStore, SymbolResolver, TaskProfile};
+use crate::simulator::{
+    DeviceStats, Event, EventQueue, ProcessAction, ServiceProcess, SimDevice, Stage, TaskOutcome,
+};
+use crate::workload::{InvocationPattern, Service};
+use std::collections::{HashMap, VecDeque};
+
+/// Per-service results of an experiment.
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub key: TaskKey,
+    pub model: crate::workload::ModelKind,
+    pub priority: crate::core::Priority,
+    pub jct: JctStats,
+    pub completed: usize,
+    /// Per-arrival JCT timeline (Fig 21 material).
+    pub timeline: Timeline,
+}
+
+/// Full results of one experiment run.
+#[derive(Debug)]
+pub struct ExperimentReport {
+    pub mode: Mode,
+    pub services: Vec<ServiceReport>,
+    pub outcomes: Vec<TaskOutcome>,
+    pub device: DeviceStats,
+    pub scheduler: Option<SchedulerStats>,
+    /// Simulated time at which the run ended.
+    pub sim_end: SimTime,
+    /// Events processed (sim-perf metric).
+    pub events: u64,
+    /// Real wall-clock time the simulation took.
+    pub wall: std::time::Duration,
+}
+
+impl ExperimentReport {
+    /// Report for one service by task key.
+    pub fn service(&self, key: &TaskKey) -> Option<&ServiceReport> {
+        self.services.iter().find(|s| &s.key == key)
+    }
+
+    /// JCT stats of the first service matching `priority`.
+    pub fn by_priority(&self, priority: crate::core::Priority) -> Option<&ServiceReport> {
+        self.services.iter().find(|s| s.priority == priority)
+    }
+
+    /// Outcomes restricted to arrivals inside `[0, window_end]` — the
+    /// paper's "fully overlapping window" methodology (§4.5.1 collects
+    /// only the first 16 s where both services were active).
+    pub fn jct_in_window(&self, key: &TaskKey, window_end: SimTime) -> JctStats {
+        JctStats::from_durations(
+            self.outcomes
+                .iter()
+                .filter(|o| &o.task_key == key && o.arrival <= window_end)
+                .map(|o| o.jct())
+                .collect(),
+        )
+    }
+
+    /// Simulated time at which either service stopped having tasks
+    /// in flight — the overlap window end used by §4.5.1.
+    pub fn overlap_end(&self) -> SimTime {
+        self.services
+            .iter()
+            .map(|s| {
+                s.timeline
+                    .points
+                    .last()
+                    .map(|p| p.arrival + p.jct)
+                    .unwrap_or(SimTime::ZERO)
+            })
+            .min()
+            .unwrap_or(SimTime::ZERO)
+    }
+
+    /// Human-readable summary table.
+    pub fn summary(&self) -> String {
+        let mut t = TextTable::new(&[
+            "service", "prio", "tasks", "mean JCT", "p95", "CV", "total",
+        ]);
+        for s in &self.services {
+            t.row(vec![
+                s.key.to_string(),
+                s.priority.to_string(),
+                s.completed.to_string(),
+                format!("{:.3}ms", s.jct.mean_ms()),
+                format!("{:.3}ms", s.jct.p95.as_millis_f64()),
+                format!("{:.3}", s.jct.cv),
+                format!("{:.3}s", s.jct.total.as_secs_f64()),
+            ]);
+        }
+        let mut out = format!("mode={} sim_end={} events={}\n", self.mode, self.sim_end, self.events);
+        out.push_str(&t.render());
+        if let Some(sched) = &self.scheduler {
+            out.push_str(&format!(
+                "scheduler: direct={} queued={} fills={} drained={} preemptions={} windows={} early_stops={}\n",
+                sched.direct,
+                sched.queued,
+                sched.fills,
+                sched.drained,
+                sched.preemptions,
+                sched.feedback.windows,
+                sched.feedback.early_stops,
+            ));
+        }
+        out
+    }
+}
+
+/// Result of profiling one service (measurement stage).
+#[derive(Debug)]
+pub struct ProfilingResult {
+    pub profile: TaskProfile,
+    /// JCTs of the measurement-stage runs (Fig 15 material).
+    pub outcomes: Vec<TaskOutcome>,
+}
+
+/// Derive a per-service seed from the experiment seed (splitmix64 step —
+/// decorrelates services without external deps).
+fn derive_seed(root: u64, idx: u64, salt: u64) -> u64 {
+    let mut z = root
+        .wrapping_add(salt)
+        .wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run the measurement stage for one service: solo on the GPU, `runs`
+/// back-to-back tasks with kernel timing events (paper Fig 6).
+pub fn profile_service(cfg: &ExperimentConfig, svc: &ServiceConfig) -> Result<ProfilingResult> {
+    let runs = cfg.measurement.runs;
+    let service = Service {
+        pattern: InvocationPattern::BackToBack { count: runs },
+        ..svc.to_service()
+    };
+    let solo = ExperimentConfig {
+        mode: Mode::Sharing, // solo: direct submission, no co-tenant
+        services: vec![svc.clone()],
+        ..cfg.clone()
+    };
+    let empty_store = ProfileStore::new();
+    let mut sim = Sim::new(&solo, &empty_store)?;
+    // Replace the process with a measuring-stage one.
+    let measuring_proc = sim.make_process(&service, 0, Stage::Measuring);
+    sim.procs[0] = measuring_proc;
+    sim.run();
+    let profile = sim.procs[0]
+        .finish_measurement()
+        .ok_or_else(|| crate::core::Error::Invariant("measurement did not complete".into()))?;
+    Ok(ProfilingResult {
+        profile,
+        outcomes: sim.outcomes,
+    })
+}
+
+/// Run a full experiment. In FIKIT mode, services are profiled first
+/// (measurement stage) exactly as the paper's lifecycle prescribes.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
+    cfg.validate()?;
+    let mut store = ProfileStore::new();
+    if cfg.mode == Mode::Fikit {
+        for svc in &cfg.services {
+            store.insert(profile_service(cfg, svc)?.profile);
+        }
+    }
+    run_with_profiles(cfg, &store)
+}
+
+/// Run an experiment against an existing profile store (lets experiments
+/// amortize one profiling pass across many runs, like a real deployment).
+pub fn run_with_profiles(cfg: &ExperimentConfig, store: &ProfileStore) -> Result<ExperimentReport> {
+    cfg.validate()?;
+    if cfg.mode == Mode::Fikit {
+        for svc in &cfg.services {
+            let key = svc.to_service().key;
+            store.require(&key)?;
+        }
+    }
+    let start = std::time::Instant::now();
+    let mut sim = Sim::new(cfg, store)?;
+    sim.run();
+    Ok(sim.into_report(start.elapsed()))
+}
+
+/// The discrete-event simulation state.
+struct Sim<'a> {
+    cfg: &'a ExperimentConfig,
+    store: &'a ProfileStore,
+    procs: Vec<ServiceProcess>,
+    device: SimDevice,
+    events: EventQueue,
+    scheduler: Option<FikitScheduler>,
+    outcomes: Vec<TaskOutcome>,
+    /// Remaining follow-up arrivals for BackToBack patterns.
+    b2b_remaining: Vec<u32>,
+    key_to_idx: HashMap<TaskKey, usize>,
+    /// Exclusive modes: pending task order + lock state. Entries are
+    /// (svc, priority, arrival seq); plain Exclusive picks by arrival,
+    /// SoftExclusive by (priority, arrival).
+    excl_queue: VecDeque<(usize, crate::core::Priority, u64)>,
+    excl_seq: u64,
+    excl_locked: bool,
+    events_processed: u64,
+    sim_now: SimTime,
+}
+
+impl<'a> Sim<'a> {
+    fn new(cfg: &'a ExperimentConfig, store: &'a ProfileStore) -> Result<Sim<'a>> {
+        let mut procs = Vec::with_capacity(cfg.services.len());
+        let mut key_to_idx = HashMap::new();
+        let mut b2b_remaining = vec![0u32; cfg.services.len()];
+        let mut events = EventQueue::new();
+
+        let scheduler = (cfg.mode == Mode::Fikit).then(|| {
+            FikitScheduler::new(SchedulerConfig {
+                epsilon: cfg.epsilon,
+                feedback: cfg.feedback,
+                fill_policy: cfg.fill_policy,
+            })
+        });
+
+        let sim_base = Sim {
+            cfg,
+            store,
+            procs: Vec::new(),
+            device: SimDevice::new(cfg.device.clone()),
+            events: EventQueue::new(),
+            scheduler: None,
+            outcomes: Vec::new(),
+            b2b_remaining: Vec::new(),
+            key_to_idx: HashMap::new(),
+            excl_queue: VecDeque::new(),
+            excl_seq: 0,
+            excl_locked: false,
+            events_processed: 0,
+            sim_now: SimTime::ZERO,
+        };
+
+        for (idx, svc_cfg) in cfg.services.iter().enumerate() {
+            let service = svc_cfg.to_service();
+            key_to_idx.insert(service.key.clone(), idx);
+            // Initial arrivals per pattern.
+            match service.pattern {
+                InvocationPattern::BackToBack { count } => {
+                    if count > 0 {
+                        events.push(SimTime::ZERO, Event::TaskArrival { svc: idx });
+                        b2b_remaining[idx] = count - 1;
+                    }
+                }
+                InvocationPattern::Every { interval, count } => {
+                    for i in 0..count {
+                        let t = SimTime(interval.nanos() * i as u64);
+                        events.push(t, Event::TaskArrival { svc: idx });
+                    }
+                }
+                InvocationPattern::ContinuousUntil { .. } => {
+                    events.push(SimTime::ZERO, Event::TaskArrival { svc: idx });
+                }
+            }
+            procs.push(sim_base.make_process(&service, idx, Stage::Sharing));
+        }
+
+        Ok(Sim {
+            procs,
+            events,
+            scheduler,
+            b2b_remaining,
+            key_to_idx,
+            ..sim_base
+        })
+    }
+
+    /// Build a service process with the experiment's cost models applied.
+    fn make_process(&self, service: &Service, idx: usize, stage: Stage) -> ServiceProcess {
+        let resolver = SymbolResolver::new(self.cfg.symbols.clone());
+        let seed_salt = match stage {
+            Stage::Measuring => 0x4D45_4153, // "MEAS": decorrelate from sharing runs
+            Stage::Sharing => 0,
+        };
+        let mut proc = ServiceProcess::new(
+            service.clone(),
+            derive_seed(self.cfg.seed, idx as u64, seed_salt),
+            resolver,
+            stage,
+            self.cfg.measurement.clone(),
+        );
+        // Per-launch CPU-side overhead: base driver cost + symbol lookup
+        // (+ hook interception in FIKIT mode).
+        let mut overhead = self.cfg.hook.base_launch_overhead + self.cfg.symbols.lookup_cost();
+        if self.cfg.mode == Mode::Fikit || stage == Stage::Measuring {
+            overhead += self.cfg.hook.interception_overhead;
+        }
+        proc.per_launch_overhead = overhead;
+        proc
+    }
+
+    /// Submit a launch to the device, schedule its completion event, and
+    /// let the owning process pipeline its next issue (async launch-ahead
+    /// resumes the moment the held/direct launch reaches the device).
+    fn submit(&mut self, launch: crate::core::KernelLaunch, source: LaunchSource, now: SimTime) {
+        let svc = self.key_to_idx[&launch.task_key];
+        let record = self.device.submit(&launch, now, source);
+        self.events
+            .push(record.finished_at, Event::KernelDone { svc, record });
+        if let Some(next_issue) = self.procs[svc].on_submitted(now) {
+            self.events.push(next_issue, Event::IssueKernel { svc });
+        }
+    }
+
+    fn submit_all(&mut self, subs: Vec<Submission>, now: SimTime) {
+        for sub in subs {
+            self.submit(sub.launch, sub.source, now);
+        }
+    }
+
+    /// Try to start the next queued task of `svc` per mode rules.
+    fn maybe_start(&mut self, svc: usize, now: SimTime) {
+        match self.cfg.mode {
+            Mode::Sharing | Mode::Fikit => {
+                if let Some(issue_at) = self.procs[svc].try_start_task(now) {
+                    if let Some(sched) = self.scheduler.as_mut() {
+                        sched.task_started(self.procs[svc].key(), self.procs[svc].priority(), now);
+                    }
+                    self.events.push(issue_at, Event::IssueKernel { svc });
+                }
+            }
+            Mode::Exclusive | Mode::SoftExclusive => self.excl_try_start(now),
+        }
+    }
+
+    /// Exclusive modes: start the next waiting task if the lock is free.
+    /// Plain Exclusive picks the earliest arrival (the paper's external
+    /// orchestrator); SoftExclusive picks by priority then arrival (the
+    /// paper's §5 software-defined exclusive mode).
+    fn excl_try_start(&mut self, now: SimTime) {
+        if self.excl_locked {
+            return;
+        }
+        let pick = match self.cfg.mode {
+            Mode::SoftExclusive => self
+                .excl_queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, prio, seq))| (*prio, *seq))
+                .map(|(pos, _)| pos),
+            _ => (!self.excl_queue.is_empty()).then_some(0),
+        };
+        let Some(pos) = pick else { return };
+        let (svc, _, _) = self.excl_queue.remove(pos).expect("pos valid");
+        let issue_at = self
+            .procs[svc]
+            .try_start_task(now)
+            .expect("exclusive queue entry must be startable");
+        self.excl_locked = true;
+        self.events.push(issue_at, Event::IssueKernel { svc });
+    }
+
+    fn run(&mut self) {
+        let horizon = self.cfg.horizon.map(|h| SimTime::ZERO + h);
+        while let Some((now, event)) = self.events.pop() {
+            if let Some(h) = horizon {
+                if now > h {
+                    break;
+                }
+            }
+            self.sim_now = now;
+            self.events_processed += 1;
+            match event {
+                Event::TaskArrival { svc } => {
+                    self.procs[svc].enqueue_arrival(now);
+                    if matches!(self.cfg.mode, Mode::Exclusive | Mode::SoftExclusive) {
+                        let prio = self.procs[svc].priority();
+                        let seq = self.excl_seq;
+                        self.excl_seq += 1;
+                        self.excl_queue.push_back((svc, prio, seq));
+                    }
+                    self.maybe_start(svc, now);
+                }
+                Event::IssueKernel { svc } => {
+                    let launch = self.procs[svc].issue_next(now);
+                    match self.cfg.mode {
+                        Mode::Sharing | Mode::Exclusive | Mode::SoftExclusive => {
+                            self.submit(launch, LaunchSource::Direct, now);
+                        }
+                        Mode::Fikit => {
+                            let subs = self
+                                .scheduler
+                                .as_mut()
+                                .expect("fikit mode has scheduler")
+                                .on_launch(launch, now, self.store);
+                            self.submit_all(subs, now);
+                        }
+                    }
+                }
+                Event::KernelDone { svc, record } => {
+                    // Scheduler reacts first (fill windows open on holder
+                    // kernel completions).
+                    if let Some(sched) = self.scheduler.as_mut() {
+                        let subs = sched.on_kernel_done(&record, now, self.store);
+                        self.submit_all(subs, now);
+                    }
+                    match self.procs[svc].on_kernel_done(record, now) {
+                        ProcessAction::IssueAt(t) => {
+                            self.events.push(t, Event::IssueKernel { svc });
+                        }
+                        ProcessAction::None => {}
+                        ProcessAction::TaskCompleted(outcome) => {
+                            self.on_task_completed(svc, outcome, now);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_task_completed(&mut self, svc: usize, outcome: TaskOutcome, now: SimTime) {
+        let key = outcome.task_key.clone();
+        self.outcomes.push(outcome);
+
+        if let Some(sched) = self.scheduler.as_mut() {
+            let drains = sched.task_finished(&key, now);
+            self.submit_all(drains, now);
+        }
+
+        // Pattern follow-up arrivals.
+        match self.procs[svc].service.pattern {
+            InvocationPattern::BackToBack { .. } => {
+                if self.b2b_remaining[svc] > 0 {
+                    self.b2b_remaining[svc] -= 1;
+                    self.events.push(now, Event::TaskArrival { svc });
+                }
+            }
+            InvocationPattern::ContinuousUntil { until } => {
+                if now < until {
+                    self.events.push(now, Event::TaskArrival { svc });
+                }
+            }
+            InvocationPattern::Every { .. } => {}
+        }
+
+        if matches!(self.cfg.mode, Mode::Exclusive | Mode::SoftExclusive) {
+            self.excl_locked = false;
+            self.excl_try_start(now);
+        } else {
+            // The same service may have queued arrivals (overrun of an
+            // Every pattern): start the next one.
+            self.maybe_start(svc, now);
+        }
+    }
+
+    fn into_report(self, wall: std::time::Duration) -> ExperimentReport {
+        let mut services = Vec::with_capacity(self.procs.len());
+        for proc in &self.procs {
+            let key = proc.key().clone();
+            let mine: Vec<&TaskOutcome> =
+                self.outcomes.iter().filter(|o| o.task_key == key).collect();
+            let jcts: Vec<Duration> = mine.iter().map(|o| o.jct()).collect();
+            let timeline = Timeline::new(
+                mine.iter()
+                    .map(|o| TimelinePoint {
+                        arrival: o.arrival,
+                        jct: o.jct(),
+                    })
+                    .collect(),
+            );
+            services.push(ServiceReport {
+                key,
+                model: proc.service.model,
+                priority: proc.priority(),
+                jct: JctStats::from_durations(jcts),
+                completed: mine.len(),
+                timeline,
+            });
+        }
+        ExperimentReport {
+            mode: self.cfg.mode,
+            services,
+            outcomes: self.outcomes,
+            device: self.device.stats().clone(),
+            scheduler: self.scheduler.map(|s| s.final_stats()),
+            sim_end: self.sim_now,
+            events: self.events_processed,
+            wall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Priority;
+    use crate::workload::ModelKind;
+
+    fn two_service_cfg(mode: Mode, tasks: u32) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.mode = mode;
+        cfg.measurement.runs = 5;
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0).tasks(tasks));
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::FcnResnet50, Priority::P2).tasks(tasks));
+        cfg
+    }
+
+    #[test]
+    fn solo_exclusive_jct_matches_trace() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.mode = Mode::Sharing;
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0).tasks(20));
+        let report = run_experiment(&cfg).unwrap();
+        let svc = &report.services[0];
+        assert_eq!(svc.completed, 20);
+        // Solo on the device: mean JCT ≈ spec JCT + per-kernel overheads.
+        let expect = ModelKind::Alexnet.spec().mean_jct().as_millis_f64();
+        let got = svc.jct.mean_ms();
+        assert!(
+            (got - expect).abs() / expect < 0.25,
+            "solo JCT {got:.3}ms vs spec {expect:.3}ms"
+        );
+    }
+
+    #[test]
+    fn fikit_speeds_up_high_priority_vs_sharing() {
+        let share = run_experiment(&two_service_cfg(Mode::Sharing, 30)).unwrap();
+        let fikit = run_experiment(&two_service_cfg(Mode::Fikit, 30)).unwrap();
+
+        let hp_share = &share.by_priority(Priority::P0).unwrap().jct;
+        let hp_fikit = &fikit.by_priority(Priority::P0).unwrap().jct;
+        let speedup = crate::metrics::speedup(hp_share, hp_fikit);
+        assert!(
+            speedup > 1.2,
+            "FIKIT must beat sharing for high-prio: speedup {speedup:.2} (share {:.2}ms fikit {:.2}ms)",
+            hp_share.mean_ms(),
+            hp_fikit.mean_ms()
+        );
+
+        // FIKIT high-prio should be close to exclusive-solo JCT.
+        let mut solo_cfg = ExperimentConfig::default();
+        solo_cfg.mode = Mode::Sharing;
+        solo_cfg
+            .services
+            .push(ServiceConfig::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0).tasks(30));
+        let solo = run_experiment(&solo_cfg).unwrap();
+        let ratio = hp_fikit.mean_ms() / solo.services[0].jct.mean_ms();
+        assert!(
+            ratio < 1.35,
+            "FIKIT high-prio within 35% of exclusive: ratio {ratio:.2}"
+        );
+
+        // Scheduler actually filled gaps.
+        let sched = fikit.scheduler.as_ref().unwrap();
+        assert!(sched.fills > 0, "no gap fills happened");
+        assert!(sched.feedback.windows > 0);
+    }
+
+    #[test]
+    fn sharing_mode_interleaves_fifo() {
+        let report = run_experiment(&two_service_cfg(Mode::Sharing, 10)).unwrap();
+        assert!(report.scheduler.is_none());
+        assert_eq!(report.services.len(), 2);
+        // Both services complete all tasks.
+        assert!(report.services.iter().all(|s| s.completed == 10));
+    }
+
+    #[test]
+    fn exclusive_mode_serializes_tasks() {
+        let report = run_experiment(&two_service_cfg(Mode::Exclusive, 5)).unwrap();
+        // No two tasks overlap: outcomes sorted by start must not overlap.
+        let mut spans: Vec<(SimTime, SimTime)> = report
+            .outcomes
+            .iter()
+            .map(|o| (o.started, o.finished))
+            .collect();
+        spans.sort();
+        for w in spans.windows(2) {
+            assert!(
+                w[0].1 <= w[1].0 + Duration::from_micros(10),
+                "exclusive tasks overlapped: {:?}",
+                w
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_experiment(&two_service_cfg(Mode::Fikit, 10)).unwrap();
+        let b = run_experiment(&two_service_cfg(Mode::Fikit, 10)).unwrap();
+        assert_eq!(a.sim_end, b.sim_end);
+        assert_eq!(a.events, b.events);
+        for (sa, sb) in a.services.iter().zip(&b.services) {
+            assert_eq!(sa.jct.mean, sb.jct.mean);
+        }
+    }
+
+    #[test]
+    fn profiling_produces_ready_profiles() {
+        let cfg = two_service_cfg(Mode::Fikit, 5);
+        let res = profile_service(&cfg, &cfg.services[0]).unwrap();
+        assert!(res.profile.is_ready(cfg.measurement.runs));
+        assert_eq!(res.outcomes.len(), cfg.measurement.runs as usize);
+        assert!(res.profile.num_unique() > 0);
+    }
+}

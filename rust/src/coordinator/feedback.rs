@@ -1,0 +1,165 @@
+//! Real-time feedback / early stopping (paper Fig 12).
+//!
+//! Profiled gap predictions (`SG`) are averages; individual gaps vary
+//! (Fig 5), and naive profile-only filling lets prediction error
+//! accumulate linearly — the controller ends up scheduling low-priority
+//! kernels out of sync with the real gaps. FIKIT's fix: the arrival of
+//! the holder's *next* kernel launch is the ground-truth end of the gap.
+//! On that signal the controller immediately closes the fill window —
+//! no further fills are issued ("overhead 1" eliminated). Fills already
+//! committed to the device FIFO cannot be recalled; the residual delay
+//! they impose on the arriving kernel is the paper's "overhead 2",
+//! which we account explicitly.
+
+use super::fikit::FillWindow;
+use crate::core::{Duration, SimTime};
+
+/// Aggregated feedback telemetry for one scheduler run.
+#[derive(Debug, Clone, Default)]
+pub struct FeedbackStats {
+    /// Fill windows opened.
+    pub windows: u64,
+    /// Windows closed early by holder-arrival feedback while fill budget
+    /// remained (the prediction overestimated the gap).
+    pub early_stops: u64,
+    /// Windows where the holder's kernel arrived *after* the predicted
+    /// end (the prediction underestimated the gap — fills stopped too
+    /// conservatively, some idle time was wasted).
+    pub underestimates: u64,
+    /// Σ |predicted gap end − actual arrival| over closed windows.
+    pub abs_error: Duration,
+    /// Σ unfilled predicted-idle budget at early stop.
+    pub reclaimed_budget: Duration,
+}
+
+impl FeedbackStats {
+    /// Mean absolute gap-prediction error per window.
+    pub fn mean_abs_error(&self) -> Duration {
+        if self.windows == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.abs_error.nanos() / self.windows)
+        }
+    }
+}
+
+/// The feedback controller. With `enabled = false` it degrades to the
+/// pure profile-driven scheduler of the paper's Fig 12 case C — kept as
+/// an explicit ablation (bench `ablation_feedback`).
+#[derive(Debug)]
+pub struct FeedbackController {
+    pub enabled: bool,
+    stats: FeedbackStats,
+}
+
+impl FeedbackController {
+    pub fn new(enabled: bool) -> FeedbackController {
+        FeedbackController {
+            enabled,
+            stats: FeedbackStats::default(),
+        }
+    }
+
+    /// Record that a fill window was opened.
+    pub fn on_window_open(&mut self) {
+        self.stats.windows += 1;
+    }
+
+    /// The holder's next kernel launch arrived at `now`. If feedback is
+    /// enabled, close the window (early-stop signal); always record the
+    /// prediction error. Returns `true` if an open window was closed.
+    pub fn on_holder_arrival(&mut self, window: &mut Option<FillWindow>, now: SimTime) -> bool {
+        let Some(w) = window.as_mut() else {
+            return false;
+        };
+        // Prediction error bookkeeping (over- or under-estimate).
+        if w.predicted_end > now {
+            let remaining = w.remaining(now);
+            if !remaining.is_zero() {
+                self.stats.early_stops += 1;
+                self.stats.reclaimed_budget += remaining;
+            }
+            self.stats.abs_error += w.predicted_end - now;
+        } else {
+            self.stats.underestimates += 1;
+            self.stats.abs_error += now - w.predicted_end;
+        }
+
+        if self.enabled {
+            *window = None;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn stats(&self) -> &FeedbackStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TaskKey;
+    use crate::coordinator::fikit::DEFAULT_EPSILON;
+
+    fn window(gap_us: u64) -> Option<FillWindow> {
+        FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            Duration::from_micros(gap_us),
+            DEFAULT_EPSILON,
+        )
+    }
+
+    #[test]
+    fn early_stop_closes_window_and_reclaims_budget() {
+        let mut fc = FeedbackController::new(true);
+        let mut w = window(1_000); // predicted 1ms
+        fc.on_window_open();
+        // Holder's next kernel arrives at 0.4ms — 0.6ms overestimated.
+        let closed = fc.on_holder_arrival(&mut w, SimTime(400_000));
+        assert!(closed);
+        assert!(w.is_none());
+        let s = fc.stats();
+        assert_eq!(s.early_stops, 1);
+        assert_eq!(s.underestimates, 0);
+        assert_eq!(s.abs_error, Duration::from_micros(600));
+        assert_eq!(s.reclaimed_budget, Duration::from_micros(600));
+        assert_eq!(s.mean_abs_error(), Duration::from_micros(600));
+    }
+
+    #[test]
+    fn underestimate_recorded() {
+        let mut fc = FeedbackController::new(true);
+        let mut w = window(1_000);
+        fc.on_window_open();
+        // Holder arrives 0.5ms *after* the predicted end.
+        fc.on_holder_arrival(&mut w, SimTime(1_500_000));
+        let s = fc.stats();
+        assert_eq!(s.early_stops, 0);
+        assert_eq!(s.underestimates, 1);
+        assert_eq!(s.abs_error, Duration::from_micros(500));
+    }
+
+    #[test]
+    fn disabled_feedback_leaves_window_open() {
+        let mut fc = FeedbackController::new(false);
+        let mut w = window(1_000);
+        fc.on_window_open();
+        let closed = fc.on_holder_arrival(&mut w, SimTime(100_000));
+        assert!(!closed);
+        assert!(w.is_some(), "ablation: window must stay open");
+        // Error is still recorded for telemetry.
+        assert_eq!(fc.stats().early_stops, 1);
+    }
+
+    #[test]
+    fn no_window_is_a_noop() {
+        let mut fc = FeedbackController::new(true);
+        let mut w: Option<FillWindow> = None;
+        assert!(!fc.on_holder_arrival(&mut w, SimTime::ZERO));
+        assert_eq!(fc.stats().windows, 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! **Algorithm 1 — the FIKIT procedure** (paper Fig 9): fill a
+//! high-priority task's predicted inter-kernel idle gap with
+//! lower-priority kernels chosen by
+//! [`best_prio_fit`](super::best_prio_fit::best_prio_fit).
+//!
+//! A [`FillWindow`] is opened when the GPU-holding task's kernel
+//! completes and its profiled following gap `SG` exceeds the small-gap
+//! threshold ε (0.1 ms — the typical cost of just launching a kernel, so
+//! smaller gaps are not worth filling). The window carries:
+//!
+//! * `budget` — the remaining idle time per Algorithm 1's accounting
+//!   (`idleTime -= fillKrnTime` for every fill launched), and
+//! * `predicted_end` — the wall-clock end of the predicted gap, so fills
+//!   triggered *late* in the window (by newly arriving low-priority
+//!   requests) cannot overrun into the predicted arrival of the holder's
+//!   next kernel.
+//!
+//! The window is closed early by the feedback mechanism (see
+//! [`super::feedback`]) when the holder's next kernel actually arrives.
+
+use super::best_prio_fit::{select_fit, FillPolicy, Fit};
+use super::queues::PriorityQueues;
+use crate::core::{Duration, SimTime, TaskKey};
+use crate::profile::ProfileStore;
+
+/// Default small-gap threshold ε: "a kernel launched on the GPU typically
+/// costs 0.1 ms to 2 ms; the function avoids filling negligible idle gaps
+/// smaller than 0.1 ms" (paper, Algorithm 1 commentary).
+pub const DEFAULT_EPSILON: Duration = Duration(100_000);
+
+/// An open gap-filling window for the GPU-holding task.
+#[derive(Debug, Clone)]
+pub struct FillWindow {
+    /// The task whose inter-kernel gap is being filled.
+    pub holder: TaskKey,
+    /// When the gap began (holder kernel completion time).
+    pub opened_at: SimTime,
+    /// Predicted end of the gap: `opened_at + SG[kernel]`.
+    pub predicted_end: SimTime,
+    /// Remaining fill budget (Algorithm 1's `idleTime` variable).
+    pub budget: Duration,
+    /// Fills launched from this window.
+    pub fills: u32,
+}
+
+impl FillWindow {
+    /// Open a window for a predicted gap, or return `None` when the gap
+    /// is at-or-below ε (Algorithm 1 lines 6–8: skip small gaps).
+    pub fn open(
+        holder: TaskKey,
+        now: SimTime,
+        predicted_gap: Duration,
+        epsilon: Duration,
+    ) -> Option<FillWindow> {
+        if predicted_gap <= epsilon {
+            return None;
+        }
+        Some(FillWindow {
+            holder,
+            opened_at: now,
+            predicted_end: now + predicted_gap,
+            budget: predicted_gap,
+            fills: 0,
+        })
+    }
+
+    /// Idle time still fillable as of `now`: the Algorithm-1 budget,
+    /// further capped by the wall-clock remainder of the predicted gap.
+    pub fn remaining(&self, now: SimTime) -> Duration {
+        let wall = self.predicted_end - now; // saturating
+        self.budget.min(wall)
+    }
+
+    /// Is the window exhausted at `now`?
+    pub fn is_exhausted(&self, now: SimTime) -> bool {
+        self.remaining(now).is_zero()
+    }
+
+    /// Force-close the window (feedback early stop).
+    pub fn close(&mut self) {
+        self.budget = Duration::ZERO;
+    }
+}
+
+/// Run the FIKIT procedure (Algorithm 1 lines 9–16) against an open
+/// window: repeatedly select fitting kernels and charge their *predicted*
+/// durations to the budget. Returns the fills to launch, in order.
+pub fn fikit_fill(
+    window: &mut FillWindow,
+    now: SimTime,
+    queues: &mut PriorityQueues,
+    profiles: &ProfileStore,
+) -> Vec<Fit> {
+    fikit_fill_with(window, now, queues, profiles, FillPolicy::LongestFit)
+}
+
+/// Policy-parameterized variant (fill-policy ablation).
+pub fn fikit_fill_with(
+    window: &mut FillWindow,
+    now: SimTime,
+    queues: &mut PriorityQueues,
+    profiles: &ProfileStore,
+    policy: FillPolicy,
+) -> Vec<Fit> {
+    let mut fills = Vec::new();
+    // While we have a gap (line 9)...
+    loop {
+        let remaining = window.remaining(now);
+        if remaining.is_zero() {
+            break;
+        }
+        // ...find the best fitting kernel request (line 10).
+        let Some(fit) = select_fit(queues, remaining, profiles, policy) else {
+            break; // no suitable kernel (lines 11-13)
+        };
+        // Launch it and charge the budget (lines 14-15).
+        window.budget = window.budget.saturating_sub(fit.predicted);
+        window.fills += 1;
+        fills.push(fit);
+    }
+    fills
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, KernelId, KernelLaunch, Priority, TaskId};
+    use crate::profile::TaskProfile;
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(1), Dim3::x(64))
+    }
+
+    fn launch(key: &str, kernel: &str, prio: Priority) -> KernelLaunch {
+        KernelLaunch {
+            task_key: TaskKey::new(key),
+            task_id: TaskId(0),
+            kernel: kid(kernel),
+            priority: prio,
+            seq: 0,
+            true_duration: Duration::from_micros(1),
+            issued_at: SimTime::ZERO,
+        }
+    }
+
+    fn store(entries: &[(&str, &str, u64)]) -> ProfileStore {
+        let mut s = ProfileStore::new();
+        for (key, kernel, us) in entries {
+            let tk = TaskKey::new(*key);
+            let mut p = s.remove(&tk).unwrap_or_else(|| TaskProfile::new(tk));
+            p.record(&kid(kernel), Duration::from_micros(*us), None);
+            p.finish_run(1);
+            s.insert(p);
+        }
+        s
+    }
+
+    #[test]
+    fn small_gaps_are_skipped() {
+        assert!(FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            Duration::from_micros(100),
+            DEFAULT_EPSILON
+        )
+        .is_none());
+        assert!(FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            DEFAULT_EPSILON,
+            DEFAULT_EPSILON
+        )
+        .is_none());
+        assert!(FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            Duration::from_micros(101),
+            DEFAULT_EPSILON
+        )
+        .is_some());
+    }
+
+    #[test]
+    fn fills_until_budget_exhausted() {
+        // Gap of 1ms; queued kernels of 400us each (one per fill round,
+        // as in the real system where each waiting task holds one
+        // pending request).
+        let mut w = FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            Duration::from_millis(1),
+            DEFAULT_EPSILON,
+        )
+        .unwrap();
+        let s = store(&[("lo", "k400", 400)]);
+        let mut q = PriorityQueues::new();
+        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
+        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
+        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
+
+        let fills = fikit_fill(&mut w, SimTime::ZERO, &mut q, &s);
+        // 1000us budget: 400 + 400 launched; remaining 200us < 400 → stop.
+        assert_eq!(fills.len(), 2);
+        assert_eq!(w.fills, 2);
+        assert_eq!(w.budget, Duration::from_micros(200));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn late_trigger_capped_by_wall_clock() {
+        // 1ms predicted gap opened at t=0; a fill attempt at t=0.9ms can
+        // only use the remaining 0.1ms of wall clock even though the
+        // budget is still 1ms.
+        let mut w = FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            Duration::from_millis(1),
+            DEFAULT_EPSILON,
+        )
+        .unwrap();
+        let s = store(&[("lo", "k400", 400)]);
+        let mut q = PriorityQueues::new();
+        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
+
+        let late = SimTime(900_000);
+        assert_eq!(w.remaining(late), Duration::from_micros(100));
+        let fills = fikit_fill(&mut w, late, &mut q, &s);
+        assert!(fills.is_empty(), "400us kernel must not fit 100us remainder");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn close_stops_filling() {
+        let mut w = FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            Duration::from_millis(1),
+            DEFAULT_EPSILON,
+        )
+        .unwrap();
+        w.close();
+        assert!(w.is_exhausted(SimTime::ZERO));
+        let s = store(&[("lo", "k", 100)]);
+        let mut q = PriorityQueues::new();
+        q.push(launch("lo", "k", Priority::P5), SimTime::ZERO);
+        assert!(fikit_fill(&mut w, SimTime::ZERO, &mut q, &s).is_empty());
+    }
+
+    #[test]
+    fn priority_order_respected_across_fills() {
+        let mut w = FillWindow::open(
+            TaskKey::new("h"),
+            SimTime::ZERO,
+            Duration::from_millis(1),
+            DEFAULT_EPSILON,
+        )
+        .unwrap();
+        let s = store(&[("mid", "k", 300), ("low", "k", 300)]);
+        let mut q = PriorityQueues::new();
+        q.push(launch("low", "k", Priority::P8), SimTime::ZERO);
+        q.push(launch("mid", "k", Priority::P4), SimTime::ZERO);
+
+        let fills = fikit_fill(&mut w, SimTime::ZERO, &mut q, &s);
+        assert_eq!(fills.len(), 2);
+        assert_eq!(fills[0].launch.task_key, TaskKey::new("mid"));
+        assert_eq!(fills[1].launch.task_key, TaskKey::new("low"));
+    }
+}

@@ -1,0 +1,73 @@
+//! The FIKIT coordinator — the paper's system contribution.
+//!
+//! Components map one-to-one onto the paper's §3.2 design:
+//!
+//! * [`queues`] — the ten priority message queues Q0–Q9 (Fig 7).
+//! * [`best_prio_fit`] — **Algorithm 2**, the sharing-stage idling-gap
+//!   filling policy: pick the highest-priority request whose profiled
+//!   duration is the longest that still fits the remaining gap.
+//! * [`fikit`] — **Algorithm 1**, the FIKIT procedure: on a
+//!   high-priority kernel completion, look up the profiled idle gap and
+//!   repeatedly invoke BestPrioFit until the gap budget is exhausted.
+//! * [`feedback`] — the real-time feedback / early-stop mechanism
+//!   (Fig 12) that truncates a fill window the moment the next
+//!   high-priority kernel actually arrives.
+//! * [`scheduler`] — ties the above together: tracks which task holds
+//!   the GPU (the highest-priority active task), routes direct vs queued
+//!   launches (the three cases of Fig 11), and reacts to kernel
+//!   completions.
+//! * [`driver`] — the simulation event loop that runs a set of services
+//!   under a [`Mode`] and produces an [`driver::ExperimentReport`].
+
+pub mod best_prio_fit;
+pub mod driver;
+pub mod feedback;
+pub mod fikit;
+pub mod queues;
+pub mod scheduler;
+
+
+/// GPU multi-tasking mode under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mode {
+    /// The paper's contribution: priority preemption + inter-kernel gap
+    /// filling driven by offline profiles.
+    #[default]
+    Fikit,
+    /// NVIDIA default time-slice sharing: one FIFO device queue, kernels
+    /// interleave in launch order, no priorities, no preemption.
+    Sharing,
+    /// NVIDIA exclusive mode: one task owns the GPU at a time; tasks are
+    /// serialized in arrival order by an external orchestrator.
+    Exclusive,
+    /// The paper's §5 "software-defined GPU exclusive mode": multiple
+    /// services may be allocated to the GPU, but exactly one task runs
+    /// at a time — selected by *priority* (then arrival), not arrival
+    /// order. Built on the FIKIT allocation machinery without gap
+    /// filling.
+    SoftExclusive,
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Mode::Fikit => write!(f, "fikit"),
+            Mode::Sharing => write!(f, "sharing"),
+            Mode::Exclusive => write!(f, "exclusive"),
+            Mode::SoftExclusive => write!(f, "soft-exclusive"),
+        }
+    }
+}
+
+impl std::str::FromStr for Mode {
+    type Err = crate::core::Error;
+    fn from_str(s: &str) -> crate::core::Result<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fikit" => Ok(Mode::Fikit),
+            "sharing" | "share" | "default" => Ok(Mode::Sharing),
+            "exclusive" => Ok(Mode::Exclusive),
+            "soft-exclusive" | "softexclusive" | "soft_exclusive" => Ok(Mode::SoftExclusive),
+            other => Err(crate::core::Error::Parse(format!("unknown mode: {other:?}"))),
+        }
+    }
+}

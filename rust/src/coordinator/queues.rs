@@ -1,0 +1,200 @@
+//! The ten priority message queues Q0–Q9 (paper Fig 7).
+//!
+//! Each waiting kernel request sits in the queue matching its task's
+//! priority. Within a queue, requests keep FIFO order. The scheduler
+//! always scans Q0 → Q9, so high-priority requests are always considered
+//! first — the structural guarantee behind the paper's "high-priority
+//! tasks will be scheduled first".
+
+use crate::core::{KernelLaunch, Priority, SimTime, NUM_PRIORITIES};
+use std::collections::VecDeque;
+
+/// A kernel request waiting in a priority queue.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    pub launch: KernelLaunch,
+    /// When the request entered the queue (for wait metrics).
+    pub enqueued_at: SimTime,
+    /// Profiled execution time `SK`, resolved **once** at enqueue time so
+    /// the BestPrioFit scan is a pure comparison loop (no hashing or
+    /// string work on the hot path — see EXPERIMENTS.md §Perf).
+    pub predicted: Option<crate::core::Duration>,
+}
+
+/// The Q0–Q9 message-queue array.
+#[derive(Debug, Default)]
+pub struct PriorityQueues {
+    queues: [VecDeque<QueuedRequest>; NUM_PRIORITIES],
+    len: usize,
+}
+
+impl PriorityQueues {
+    pub fn new() -> PriorityQueues {
+        PriorityQueues::default()
+    }
+
+    /// Enqueue a request into the queue of its priority (prediction
+    /// unresolved; BestPrioFit will fall back to a store lookup).
+    pub fn push(&mut self, launch: KernelLaunch, now: SimTime) {
+        self.push_predicted(launch, None, now);
+    }
+
+    /// Enqueue with the profiled duration pre-resolved (hot path).
+    pub fn push_predicted(
+        &mut self,
+        launch: KernelLaunch,
+        predicted: Option<crate::core::Duration>,
+        now: SimTime,
+    ) {
+        let idx = launch.priority.index();
+        self.queues[idx].push_back(QueuedRequest {
+            launch,
+            enqueued_at: now,
+            predicted,
+        });
+        self.len += 1;
+    }
+
+    /// Total queued requests across all priorities.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of requests queued at one priority.
+    pub fn len_at(&self, p: Priority) -> usize {
+        self.queues[p.index()].len()
+    }
+
+    /// Highest (numerically smallest) non-empty priority, scanning
+    /// Q0 → Q9.
+    pub fn highest_nonempty(&self) -> Option<Priority> {
+        Priority::ALL
+            .into_iter()
+            .find(|p| !self.queues[p.index()].is_empty())
+    }
+
+    /// Iterate requests at one priority in FIFO order.
+    pub fn iter_at(&self, p: Priority) -> impl Iterator<Item = &QueuedRequest> {
+        self.queues[p.index()].iter()
+    }
+
+    /// Pop the front request at one priority.
+    pub fn pop_front_at(&mut self, p: Priority) -> Option<QueuedRequest> {
+        let r = self.queues[p.index()].pop_front();
+        if r.is_some() {
+            self.len -= 1;
+        }
+        r
+    }
+
+    /// Remove the request at position `idx` within priority `p`'s queue
+    /// (used by BestPrioFit after it has chosen a specific request).
+    pub fn remove_at(&mut self, p: Priority, idx: usize) -> Option<QueuedRequest> {
+        let r = self.queues[p.index()].remove(idx);
+        if r.is_some() {
+            self.len -= 1;
+        }
+        r
+    }
+
+    /// Pop the overall-highest-priority request (Q0→Q9 scan, FIFO within
+    /// a queue) — the plain priority dispatch used when draining.
+    pub fn pop_highest(&mut self) -> Option<QueuedRequest> {
+        let p = self.highest_nonempty()?;
+        self.pop_front_at(p)
+    }
+
+    /// Drain every request at exactly priority `p`, FIFO order.
+    pub fn drain_at(&mut self, p: Priority) -> Vec<QueuedRequest> {
+        let q = &mut self.queues[p.index()];
+        self.len -= q.len();
+        q.drain(..).collect()
+    }
+
+    /// Remove every queued request (e.g. on reset). Returns them in
+    /// priority-then-FIFO order.
+    pub fn drain_all(&mut self) -> Vec<QueuedRequest> {
+        let mut out = Vec::with_capacity(self.len);
+        for p in Priority::ALL {
+            out.extend(self.queues[p.index()].drain(..));
+        }
+        self.len = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, Duration, KernelId, TaskId, TaskKey};
+
+    fn launch(prio: Priority, seq: u32) -> KernelLaunch {
+        KernelLaunch {
+            task_key: TaskKey::new(format!("svc{}", prio.index())),
+            task_id: TaskId(0),
+            kernel: KernelId::new("k", Dim3::x(1), Dim3::x(32)),
+            priority: prio,
+            seq,
+            true_duration: Duration::from_micros(10),
+            issued_at: SimTime::ZERO,
+        }
+    }
+
+    #[test]
+    fn scan_order_is_q0_to_q9() {
+        let mut q = PriorityQueues::new();
+        q.push(launch(Priority::P5, 0), SimTime::ZERO);
+        q.push(launch(Priority::P2, 0), SimTime::ZERO);
+        q.push(launch(Priority::P8, 0), SimTime::ZERO);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.highest_nonempty(), Some(Priority::P2));
+        assert_eq!(q.pop_highest().unwrap().launch.priority, Priority::P2);
+        assert_eq!(q.pop_highest().unwrap().launch.priority, Priority::P5);
+        assert_eq!(q.pop_highest().unwrap().launch.priority, Priority::P8);
+        assert!(q.pop_highest().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fifo_within_priority() {
+        let mut q = PriorityQueues::new();
+        q.push(launch(Priority::P3, 1), SimTime(1));
+        q.push(launch(Priority::P3, 2), SimTime(2));
+        q.push(launch(Priority::P3, 3), SimTime(3));
+        assert_eq!(q.len_at(Priority::P3), 3);
+        assert_eq!(q.pop_front_at(Priority::P3).unwrap().launch.seq, 1);
+        assert_eq!(q.pop_front_at(Priority::P3).unwrap().launch.seq, 2);
+        assert_eq!(q.pop_front_at(Priority::P3).unwrap().launch.seq, 3);
+    }
+
+    #[test]
+    fn remove_at_specific_index() {
+        let mut q = PriorityQueues::new();
+        q.push(launch(Priority::P1, 10), SimTime::ZERO);
+        q.push(launch(Priority::P1, 11), SimTime::ZERO);
+        q.push(launch(Priority::P1, 12), SimTime::ZERO);
+        let r = q.remove_at(Priority::P1, 1).unwrap();
+        assert_eq!(r.launch.seq, 11);
+        assert_eq!(q.len(), 2);
+        let seqs: Vec<u32> = q.iter_at(Priority::P1).map(|r| r.launch.seq).collect();
+        assert_eq!(seqs, vec![10, 12]);
+    }
+
+    #[test]
+    fn drains() {
+        let mut q = PriorityQueues::new();
+        q.push(launch(Priority::P0, 0), SimTime::ZERO);
+        q.push(launch(Priority::P4, 1), SimTime::ZERO);
+        q.push(launch(Priority::P4, 2), SimTime::ZERO);
+        let at4 = q.drain_at(Priority::P4);
+        assert_eq!(at4.len(), 2);
+        assert_eq!(q.len(), 1);
+        let rest = q.drain_all();
+        assert_eq!(rest.len(), 1);
+        assert!(q.is_empty());
+    }
+}

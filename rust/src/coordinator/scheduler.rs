@@ -1,0 +1,511 @@
+//! The FIKIT scheduler: GPU-holder tracking, launch routing (the three
+//! cases of Fig 11), window management and queue dispatch.
+//!
+//! ## Holder model
+//!
+//! The *holder* is the highest-priority task currently mid-invocation
+//! (ties broken by acquisition order). Holder launches go **direct** to
+//! the device; lower-priority launches are queued in Q0–Q9 and only reach
+//! the device through gap filling (Algorithm 1) or when the holder
+//! changes. Equal-priority launches also go direct — the paper's case C
+//! degrades to default FIFO sharing among equals.
+//!
+//! This single rule yields all three Fig 11 cases:
+//!
+//! * **Case A** (running low-prio A, high-prio B arrives): B's task start
+//!   makes B the holder; A's *next* launch is now lower-priority → queued
+//!   → A proceeds only inside B's gaps. Priority inversion solved at
+//!   kernel granularity (the in-flight kernel finishes; kernels are not
+//!   preempted mid-execution).
+//! * **Case B** (running high-prio A, low-prio B arrives): A stays
+//!   holder, B is queued and gap-filled.
+//! * **Case C** (equal priorities): both launch direct, FIFO interleave.
+
+use super::best_prio_fit::{FillPolicy, Fit};
+use super::feedback::{FeedbackController, FeedbackStats};
+use super::fikit::{fikit_fill_with, FillWindow};
+use super::queues::PriorityQueues;
+use crate::core::{
+    Duration, KernelLaunch, KernelRecord, LaunchSource, Priority, SimTime, TaskKey,
+};
+use crate::profile::ProfileStore;
+
+/// Scheduler tuning knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Small-gap threshold ε (Algorithm 1).
+    pub epsilon: Duration,
+    /// Runtime feedback early stop (Fig 12). Disable only for ablations.
+    pub feedback: bool,
+    /// Within-priority fill selection rule (paper: LongestFit).
+    pub fill_policy: FillPolicy,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            epsilon: super::fikit::DEFAULT_EPSILON,
+            feedback: true,
+            fill_policy: FillPolicy::LongestFit,
+        }
+    }
+}
+
+/// Counters exposed for experiments and perf work.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    /// Launches routed straight to the device (holder / equal priority).
+    pub direct: u64,
+    /// Launches parked in the priority queues.
+    pub queued: u64,
+    /// Kernels launched as gap fills.
+    pub fills: u64,
+    /// Kernels dispatched when the holder changed.
+    pub drained: u64,
+    /// Holder changes caused by a higher-priority task starting.
+    pub preemptions: u64,
+    /// Feedback telemetry.
+    pub feedback: FeedbackStats,
+}
+
+/// A launch the scheduler wants submitted to the device, with its source
+/// tag (direct / gap fill / drain).
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub launch: KernelLaunch,
+    pub source: LaunchSource,
+}
+
+#[derive(Debug, Clone)]
+struct ActiveTask {
+    key: TaskKey,
+    priority: Priority,
+    acquired: u64,
+}
+
+/// The sharing-stage FIKIT scheduler.
+pub struct FikitScheduler {
+    cfg: SchedulerConfig,
+    queues: PriorityQueues,
+    window: Option<FillWindow>,
+    feedback: FeedbackController,
+    active: Vec<ActiveTask>,
+    acquire_seq: u64,
+    stats: SchedulerStats,
+}
+
+impl FikitScheduler {
+    pub fn new(cfg: SchedulerConfig) -> FikitScheduler {
+        let feedback = FeedbackController::new(cfg.feedback);
+        FikitScheduler {
+            cfg,
+            queues: PriorityQueues::new(),
+            window: None,
+            feedback,
+            active: Vec::new(),
+            acquire_seq: 0,
+            stats: SchedulerStats::default(),
+        }
+    }
+
+    /// The current GPU holder: highest-priority active task, earliest
+    /// acquisition breaking ties.
+    pub fn holder(&self) -> Option<(&TaskKey, Priority)> {
+        self.active
+            .iter()
+            .min_by_key(|t| (t.priority, t.acquired))
+            .map(|t| (&t.key, t.priority))
+    }
+
+    /// A service began a new task (invocation).
+    pub fn task_started(&mut self, key: &TaskKey, priority: Priority, _now: SimTime) {
+        let prev_holder_prio = self.holder().map(|(_, p)| p);
+        self.active.push(ActiveTask {
+            key: key.clone(),
+            priority,
+            acquired: self.acquire_seq,
+        });
+        self.acquire_seq += 1;
+        // Preemption (case A): a strictly higher-priority task takes the
+        // holder role; any fill window belonging to the old holder's gap
+        // is stale — the GPU is about to serve the new holder.
+        if let Some(prev) = prev_holder_prio {
+            if priority.is_higher_than(prev) {
+                self.stats.preemptions += 1;
+                self.window = None;
+            }
+        }
+    }
+
+    /// A service's task completed. Returns kernels to dispatch now that
+    /// the holder may have changed.
+    pub fn task_finished(&mut self, key: &TaskKey, now: SimTime) -> Vec<Submission> {
+        if let Some(pos) = self.active.iter().position(|t| &t.key == key) {
+            self.active.swap_remove(pos);
+        }
+        // The finished task's gap (if a window was open for it) is over.
+        if self.window.as_ref().is_some_and(|w| &w.holder == key) {
+            self.window = None;
+        }
+
+        let mut out = Vec::new();
+        // Dispatch the new holder-priority class's waiting kernels.
+        if let Some((_, new_prio)) = self.holder() {
+            for req in self.queues.drain_at(new_prio) {
+                self.stats.drained += 1;
+                out.push(Submission {
+                    launch: req.launch,
+                    source: LaunchSource::Drain,
+                });
+            }
+        } else {
+            // No active tasks: every queued request belongs to an active
+            // task by construction, so the queues must be empty.
+            debug_assert!(
+                self.queues.is_empty(),
+                "queued requests without any active task"
+            );
+            let _ = now;
+        }
+        out
+    }
+
+    /// Route an intercepted kernel launch (hook → scheduler message).
+    pub fn on_launch(
+        &mut self,
+        launch: KernelLaunch,
+        now: SimTime,
+        profiles: &ProfileStore,
+    ) -> Vec<Submission> {
+        let Some((holder_key, holder_prio)) = self.holder() else {
+            // Defensive: no active task should mean no launches, but if a
+            // stray one appears, let it through.
+            self.stats.direct += 1;
+            return vec![Submission {
+                launch,
+                source: LaunchSource::Direct,
+            }];
+        };
+
+        if &launch.task_key == holder_key {
+            // The holder's next kernel: ground-truth end of the current
+            // gap — the feedback early-stop signal (Fig 12).
+            self.feedback.on_holder_arrival(&mut self.window, now);
+            if self.feedback.enabled {
+                debug_assert!(self.window.is_none());
+            }
+            self.stats.direct += 1;
+            return vec![Submission {
+                launch,
+                source: LaunchSource::Direct,
+            }];
+        }
+
+        if launch.priority == holder_prio {
+            // Case C: equal priority shares FIFO like default CUDA.
+            self.stats.direct += 1;
+            return vec![Submission {
+                launch,
+                source: LaunchSource::Direct,
+            }];
+        }
+
+        // Strictly lower priority: park in the message queues, resolving
+        // the profiled duration once here (not per BestPrioFit scan).
+        self.stats.queued += 1;
+        let predicted = profiles
+            .get(&launch.task_key)
+            .and_then(|p| p.sk(&launch.kernel));
+        self.queues.push_predicted(launch, predicted, now);
+        // …and, if a fill window is open, immediately re-run the FIKIT
+        // procedure — the new request may fit the remaining gap (this is
+        // the "when a kernel is added to any priority queue, the
+        // scheduler triggers a priority scan" rule of Fig 7/8).
+        self.pump_fills(now, profiles)
+    }
+
+    /// React to a kernel completion on the device.
+    pub fn on_kernel_done(
+        &mut self,
+        record: &KernelRecord,
+        now: SimTime,
+        profiles: &ProfileStore,
+    ) -> Vec<Submission> {
+        let Some((holder_key, _)) = self.holder() else {
+            return Vec::new();
+        };
+
+        if &record.task_key == holder_key && record.source != LaunchSource::GapFill {
+            // A holder kernel finished: its profiled following gap starts
+            // now. Open a fill window if the gap is worth filling.
+            let predicted_gap = profiles
+                .get(&record.task_key)
+                .and_then(|p| p.sg(&record.kernel));
+            if let Some(gap) = predicted_gap {
+                self.window =
+                    FillWindow::open(record.task_key.clone(), now, gap, self.cfg.epsilon);
+                if self.window.is_some() {
+                    self.feedback.on_window_open();
+                }
+            } else {
+                self.window = None;
+            }
+            return self.pump_fills(now, profiles);
+        }
+
+        if record.source == LaunchSource::GapFill {
+            // A fill kernel completed; the window may still have budget
+            // for more (requests that arrived since the last pump).
+            return self.pump_fills(now, profiles);
+        }
+        Vec::new()
+    }
+
+    /// Run Algorithm 1 against the open window (if any).
+    fn pump_fills(&mut self, now: SimTime, profiles: &ProfileStore) -> Vec<Submission> {
+        let Some(window) = self.window.as_mut() else {
+            return Vec::new();
+        };
+        let fills: Vec<Fit> =
+            fikit_fill_with(window, now, &mut self.queues, profiles, self.cfg.fill_policy);
+        self.stats.fills += fills.len() as u64;
+        fills
+            .into_iter()
+            .map(|fit| Submission {
+                launch: fit.launch,
+                source: LaunchSource::GapFill,
+            })
+            .collect()
+    }
+
+    pub fn stats(&self) -> &SchedulerStats {
+        let _ = &self.stats.feedback; // keep field referenced
+        &self.stats
+    }
+
+    /// Consolidated stats including feedback telemetry.
+    pub fn final_stats(&self) -> SchedulerStats {
+        let mut s = self.stats.clone();
+        s.feedback = self.feedback.stats().clone();
+        s
+    }
+
+    /// Number of queued (waiting) kernel requests.
+    pub fn queued_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Active task count.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Is a fill window currently open?
+    pub fn window_open(&self) -> bool {
+        self.window.is_some()
+    }
+
+    /// Debug invariants, used by property tests.
+    pub fn check_invariants(&self) {
+        // Every queued request's priority must be strictly lower than the
+        // holder's (higher-or-equal launches are always routed direct).
+        if let Some((_, hp)) = self.holder() {
+            for p in Priority::ALL {
+                if self.queues.len_at(p) > 0 {
+                    assert!(
+                        hp.is_higher_than(p),
+                        "queued request at {p} not lower than holder {hp}"
+                    );
+                }
+            }
+        } else {
+            assert!(self.queues.is_empty(), "queued requests with no holder");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, KernelId, TaskId};
+    use crate::profile::TaskProfile;
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(1), Dim3::x(64))
+    }
+
+    fn launch(key: &str, kernel: &str, prio: Priority, seq: u32, now: SimTime) -> KernelLaunch {
+        KernelLaunch {
+            task_key: TaskKey::new(key),
+            task_id: TaskId(0),
+            kernel: kid(kernel),
+            priority: prio,
+            seq,
+            true_duration: Duration::from_micros(100),
+            issued_at: now,
+        }
+    }
+
+    fn record(l: &KernelLaunch, source: LaunchSource, start: SimTime, dur_us: u64) -> KernelRecord {
+        KernelRecord {
+            task_key: l.task_key.clone(),
+            task_id: l.task_id,
+            kernel: l.kernel.clone(),
+            priority: l.priority,
+            seq: l.seq,
+            source,
+            issued_at: l.issued_at,
+            started_at: start,
+            finished_at: start + Duration::from_micros(dur_us),
+        }
+    }
+
+    /// Profile store: holder "hi" has kernel hk (exec 200us, gap 1ms);
+    /// low-prio "lo" has kernel lk (exec 300us).
+    fn profiles() -> ProfileStore {
+        let mut s = ProfileStore::new();
+        let mut hi = TaskProfile::new(TaskKey::new("hi"));
+        hi.record(&kid("hk"), Duration::from_micros(200), Some(Duration::from_millis(1)));
+        hi.finish_run(1);
+        s.insert(hi);
+        let mut lo = TaskProfile::new(TaskKey::new("lo"));
+        lo.record(&kid("lk"), Duration::from_micros(300), Some(Duration::from_micros(50)));
+        lo.finish_run(1);
+        s.insert(lo);
+        s
+    }
+
+    #[test]
+    fn holder_launches_direct_lower_queued() {
+        let p = profiles();
+        let mut s = FikitScheduler::new(SchedulerConfig::default());
+        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
+        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
+        assert_eq!(s.holder().unwrap().0, &TaskKey::new("hi"));
+
+        let subs = s.on_launch(launch("hi", "hk", Priority::P0, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].source, LaunchSource::Direct);
+
+        let subs = s.on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        assert!(subs.is_empty(), "no window open yet: low-prio waits");
+        assert_eq!(s.queued_len(), 1);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn gap_fill_cycle_and_feedback_close() {
+        let p = profiles();
+        let mut s = FikitScheduler::new(SchedulerConfig::default());
+        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
+        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
+
+        // Low-prio request arrives first, parks.
+        let l0 = launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        assert!(s.on_launch(l0, SimTime::ZERO, &p).is_empty());
+
+        // Holder kernel hk completes at t=1ms → SG(hk)=1ms window opens,
+        // queued lk (SK=300us) fits → launched as fill.
+        let hl = launch("hi", "hk", Priority::P0, 0, SimTime::ZERO);
+        let rec = record(&hl, LaunchSource::Direct, SimTime(800_000), 200);
+        let done_at = rec.finished_at;
+        let subs = s.on_kernel_done(&rec, done_at, &p);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].source, LaunchSource::GapFill);
+        assert!(s.window_open());
+        assert_eq!(s.queued_len(), 0);
+
+        // Holder's next kernel arrives before predicted end → early stop.
+        let next = launch("hi", "hk", Priority::P0, 1, done_at + Duration::from_micros(400));
+        let at = next.issued_at;
+        let subs = s.on_launch(next, at, &p);
+        assert_eq!(subs[0].source, LaunchSource::Direct);
+        assert!(!s.window_open(), "feedback must close the window");
+        let stats = s.final_stats();
+        assert_eq!(stats.fills, 1);
+        assert_eq!(stats.feedback.windows, 1);
+        assert_eq!(stats.feedback.early_stops, 1);
+    }
+
+    #[test]
+    fn preemption_case_a() {
+        let p = profiles();
+        let mut s = FikitScheduler::new(SchedulerConfig::default());
+        // Low-prio task holds the GPU first (it is the only active task).
+        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
+        let subs = s.on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        assert_eq!(subs[0].source, LaunchSource::Direct);
+
+        // High-priority task arrives: becomes holder (preemption).
+        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime(100));
+        assert_eq!(s.holder().unwrap().0, &TaskKey::new("hi"));
+        assert_eq!(s.final_stats().preemptions, 1);
+
+        // lo's next launch is now lower than the holder: queued.
+        let subs = s.on_launch(launch("lo", "lk", Priority::P3, 1, SimTime(200)), SimTime(200), &p);
+        assert!(subs.is_empty());
+        assert_eq!(s.queued_len(), 1);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn holder_change_drains_new_priority_class() {
+        let p = profiles();
+        let mut s = FikitScheduler::new(SchedulerConfig::default());
+        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
+        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
+        assert!(s
+            .on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p)
+            .is_empty());
+
+        // Holder's task finishes: lo becomes holder, its parked kernel
+        // is dispatched as a drain.
+        let subs = s.task_finished(&TaskKey::new("hi"), SimTime(1_000));
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].source, LaunchSource::Drain);
+        assert_eq!(s.holder().unwrap().0, &TaskKey::new("lo"));
+        assert_eq!(s.queued_len(), 0);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn equal_priority_case_c_goes_direct() {
+        let p = profiles();
+        let mut s = FikitScheduler::new(SchedulerConfig::default());
+        s.task_started(&TaskKey::new("hi"), Priority::P2, SimTime::ZERO);
+        s.task_started(&TaskKey::new("lo"), Priority::P2, SimTime::ZERO);
+        let subs = s.on_launch(launch("lo", "lk", Priority::P2, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        assert_eq!(subs[0].source, LaunchSource::Direct);
+        assert_eq!(s.queued_len(), 0);
+    }
+
+    #[test]
+    fn no_window_for_small_or_unknown_gaps() {
+        let mut p = profiles();
+        // Add a holder kernel with a tiny gap.
+        let mut hi = p.remove(&TaskKey::new("hi")).unwrap();
+        hi.record(&kid("tiny"), Duration::from_micros(10), Some(Duration::from_micros(20)));
+        hi.finish_run(1);
+        p.insert(hi);
+
+        let mut s = FikitScheduler::new(SchedulerConfig::default());
+        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
+        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
+        let _ = s.on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p);
+
+        // Tiny gap (20us < ε=100us): no window, no fills.
+        let hl = launch("hi", "tiny", Priority::P0, 0, SimTime::ZERO);
+        let rec = record(&hl, LaunchSource::Direct, SimTime::ZERO, 10);
+        let t = rec.finished_at;
+        assert!(s.on_kernel_done(&rec, t, &p).is_empty());
+        assert!(!s.window_open());
+
+        // Unknown kernel (no SG): no window either.
+        let ul = launch("hi", "unseen", Priority::P0, 1, SimTime::ZERO);
+        let rec = record(&ul, LaunchSource::Direct, SimTime::ZERO, 10);
+        let t = rec.finished_at;
+        assert!(s.on_kernel_done(&rec, t, &p).is_empty());
+        assert!(!s.window_open());
+        assert_eq!(s.queued_len(), 1, "low-prio stays parked");
+    }
+}

@@ -1,0 +1,45 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by FIKIT subsystems.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Parsing user input (CLI args, config fields) failed.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Configuration is structurally invalid.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A profile lookup missed (task has no measurement data).
+    #[error("no profile for task key {0:?}")]
+    MissingProfile(String),
+
+    /// A kernel id lookup missed inside a profile.
+    #[error("profile for {task:?} has no statistics for kernel {kernel:?}")]
+    MissingKernelStats { task: String, kernel: String },
+
+    /// Artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Wire-protocol encode/decode failure.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Simulation invariant violated (a bug, surfaced loudly).
+    #[error("simulation invariant violated: {0}")]
+    Invariant(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;

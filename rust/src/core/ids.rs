@@ -1,0 +1,210 @@
+//! Kernel and task identity.
+//!
+//! The paper's key identification mechanism (§3.2, Fig 4): a **Kernel ID**
+//! is the triple *(kernel function name, grid dimensions, block
+//! dimensions)*. The function name is only observable when the hosting ML
+//! framework was rebuilt with exported dynamic symbols (the `-rdynamic`
+//! recompile); grid/block dims come straight from the intercepted launch
+//! call. The ID deliberately does **not** capture kernel *inputs* — the
+//! paper trades identification precision for generality (inputs are
+//! `void*` at the CUDA runtime layer), and compensates with averaged
+//! statistics plus runtime feedback.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A 3-D launch dimension (CUDA `dim3` analogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dim3 {
+    pub x: u32,
+    pub y: u32,
+    pub z: u32,
+}
+
+impl Dim3 {
+    pub const fn new(x: u32, y: u32, z: u32) -> Dim3 {
+        Dim3 { x, y, z }
+    }
+
+    /// 1-D helper.
+    pub const fn x(x: u32) -> Dim3 {
+        Dim3 { x, y: 1, z: 1 }
+    }
+
+    /// Total number of elements (threads per block / blocks per grid).
+    pub fn count(self) -> u64 {
+        self.x as u64 * self.y as u64 * self.z as u64
+    }
+}
+
+impl fmt::Display for Dim3 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{},{})", self.x, self.y, self.z)
+    }
+}
+
+/// The paper's Kernel ID: function name + grid dims + block dims.
+///
+/// The name is an `Arc<str>` — kernel ids are copied into every launch
+/// message, queue entry and profile record on the hot path, so cloning
+/// must be a refcount bump, not a string allocation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct KernelId {
+    /// Demangled kernel function name (empty if symbols were unavailable,
+    /// i.e. the framework was *not* the `-rdynamic` rebuild).
+    pub name: Arc<str>,
+    /// Grid dimensions of the launch.
+    pub grid: Dim3,
+    /// Thread-block dimensions of the launch.
+    pub block: Dim3,
+}
+
+impl KernelId {
+    pub fn new(name: impl Into<Arc<str>>, grid: Dim3, block: Dim3) -> KernelId {
+        KernelId {
+            name: name.into(),
+            grid,
+            block,
+        }
+    }
+
+    /// Total threads launched — a proxy for the kernel's parallelization
+    /// level, which together with the name characterizes its compute
+    /// intensity (paper §3.2).
+    pub fn total_threads(&self) -> u64 {
+        self.grid.count() * self.block.count()
+    }
+
+    /// True if the kernel function name could be resolved (i.e. the
+    /// `-rdynamic` framework rebuild was in use). Without a name, kernels
+    /// from different call sites collide and profiling is meaningless —
+    /// the scheduler refuses to enter sharing stage for such tasks.
+    pub fn has_symbol(&self) -> bool {
+        !self.name.is_empty()
+    }
+
+    /// Stable string form used as a JSON map key in persisted profiles.
+    pub fn canonical(&self) -> String {
+        format!(
+            "{}|g{}x{}x{}|b{}x{}x{}",
+            self.name,
+            self.grid.x,
+            self.grid.y,
+            self.grid.z,
+            self.block.x,
+            self.block.y,
+            self.block.z
+        )
+    }
+
+    /// Parse the canonical form back (inverse of [`KernelId::canonical`]).
+    pub fn from_canonical(s: &str) -> Option<KernelId> {
+        let mut parts = s.rsplitn(3, '|');
+        let block = parts.next()?.strip_prefix('b')?;
+        let grid = parts.next()?.strip_prefix('g')?;
+        let name = parts.next()?;
+        let parse3 = |s: &str| -> Option<Dim3> {
+            let mut it = s.split('x').map(|v| v.parse::<u32>().ok());
+            Some(Dim3::new(it.next()??, it.next()??, it.next()??))
+        };
+        Some(KernelId {
+            name: name.into(),
+            grid: parse3(grid)?,
+            block: parse3(block)?,
+        })
+    }
+}
+
+impl fmt::Display for KernelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}<<<{},{}>>>", self.name, self.grid, self.block)
+    }
+}
+
+/// Unique identifier of one *task* — one invocation of a service (e.g. a
+/// single inference request). Monotonic per simulation run.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default,
+)]
+pub struct TaskId(pub u64);
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "task#{}", self.0)
+    }
+}
+
+/// The paper's *Task Key*: the unique identifier of a **service** (process
+/// name + startup parameters), used as the key for profiled data. All
+/// tasks issued by the same service share one TaskKey and thus one
+/// profile.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskKey(pub Arc<str>);
+
+impl TaskKey {
+    pub fn new(key: impl Into<Arc<str>>) -> TaskKey {
+        TaskKey(key.into())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for TaskKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl From<&str> for TaskKey {
+    fn from(s: &str) -> TaskKey {
+        TaskKey::new(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim3_counts() {
+        assert_eq!(Dim3::new(2, 3, 4).count(), 24);
+        assert_eq!(Dim3::x(256).count(), 256);
+    }
+
+    #[test]
+    fn kernel_id_canonical_round_trip() {
+        let k = KernelId::new(
+            "void at::native::vectorized_elementwise_kernel<4, float>",
+            Dim3::new(1024, 1, 1),
+            Dim3::new(128, 2, 1),
+        );
+        let c = k.canonical();
+        let back = KernelId::from_canonical(&c).unwrap();
+        assert_eq!(back, k);
+        assert_eq!(back.total_threads(), 1024 * 256);
+        assert!(back.has_symbol());
+    }
+
+    #[test]
+    fn kernel_id_without_symbol() {
+        let k = KernelId::new("", Dim3::x(1), Dim3::x(32));
+        assert!(!k.has_symbol());
+        // Canonical form still round-trips with an empty name.
+        assert_eq!(KernelId::from_canonical(&k.canonical()).unwrap(), k);
+    }
+
+    #[test]
+    fn canonical_rejects_garbage() {
+        assert!(KernelId::from_canonical("nonsense").is_none());
+        assert!(KernelId::from_canonical("k|g1x1|b1x1x1").is_none());
+    }
+
+    #[test]
+    fn kernel_id_clone_is_cheap_shared_name() {
+        let k = KernelId::new("kern", Dim3::x(1), Dim3::x(1));
+        let k2 = k.clone();
+        assert!(Arc::ptr_eq(&k.name, &k2.name));
+    }
+}

@@ -1,0 +1,120 @@
+//! Kernel launch descriptors — the unit of work flowing through the whole
+//! system: hook client → scheduler queues → device queue → completion
+//! records.
+
+use super::{Duration, KernelId, Priority, SimTime, TaskId, TaskKey};
+
+/// Where a launch entered the device queue from — used by metrics to
+/// attribute device busy time and by the feedback mechanism to account
+/// for un-recallable fill kernels (paper Fig 12, "overhead 2").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchSource {
+    /// Launched directly because its task currently holds the GPU (or
+    /// because the mode has no scheduler, e.g. default sharing).
+    Direct,
+    /// Launched by the FIKIT procedure to fill a predicted idle gap.
+    GapFill,
+    /// Launched while draining queues after the holding task finished.
+    Drain,
+}
+
+/// A single kernel launch request as intercepted by the hook client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelLaunch {
+    /// The service this launch belongs to.
+    pub task_key: TaskKey,
+    /// The specific task (invocation) within the service.
+    pub task_id: TaskId,
+    /// The paper's Kernel ID for this launch.
+    pub kernel: KernelId,
+    /// Priority inherited from the task.
+    pub priority: Priority,
+    /// Sequence number of this kernel within its task (0-based).
+    pub seq: u32,
+    /// True device-side execution duration. In simulation this is drawn
+    /// from the workload trace; the scheduler must NOT read it (it only
+    /// knows profiled averages) — it is consumed by the device model.
+    pub true_duration: Duration,
+    /// CPU-side timestamp at which the hook intercepted the launch.
+    pub issued_at: SimTime,
+}
+
+impl KernelLaunch {
+    /// Total kernels of the owning task, if this is the last one.
+    /// (Tracked externally; helper predicate kept for readability.)
+    pub fn is_first(&self) -> bool {
+        self.seq == 0
+    }
+}
+
+/// A completed kernel execution, as recorded by the device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelRecord {
+    pub task_key: TaskKey,
+    pub task_id: TaskId,
+    pub kernel: KernelId,
+    pub priority: Priority,
+    pub seq: u32,
+    pub source: LaunchSource,
+    /// When the launch was issued by the CPU side.
+    pub issued_at: SimTime,
+    /// When the device actually began executing the kernel.
+    pub started_at: SimTime,
+    /// When the device finished executing the kernel.
+    pub finished_at: SimTime,
+}
+
+impl KernelRecord {
+    /// Device-side execution duration.
+    pub fn exec_time(&self) -> Duration {
+        self.finished_at - self.started_at
+    }
+
+    /// Time spent waiting in queues (issue → device start).
+    pub fn queue_delay(&self) -> Duration {
+        self.started_at - self.issued_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dim3;
+
+    fn record() -> KernelRecord {
+        KernelRecord {
+            task_key: TaskKey::new("svc"),
+            task_id: TaskId(1),
+            kernel: KernelId::new("k", Dim3::x(8), Dim3::x(64)),
+            priority: Priority::P0,
+            seq: 3,
+            source: LaunchSource::Direct,
+            issued_at: SimTime(1_000),
+            started_at: SimTime(4_000),
+            finished_at: SimTime(9_000),
+        }
+    }
+
+    #[test]
+    fn record_durations() {
+        let r = record();
+        assert_eq!(r.exec_time(), Duration(5_000));
+        assert_eq!(r.queue_delay(), Duration(3_000));
+    }
+
+    #[test]
+    fn launch_clone_round_trip() {
+        let l = KernelLaunch {
+            task_key: TaskKey::new("svc"),
+            task_id: TaskId(7),
+            kernel: KernelId::new("k", Dim3::x(8), Dim3::x(64)),
+            priority: Priority::P3,
+            seq: 0,
+            true_duration: Duration::from_micros(250),
+            issued_at: SimTime(42),
+        };
+        let cloned = l.clone();
+        assert_eq!(cloned, l);
+        assert!(l.is_first());
+    }
+}

@@ -1,0 +1,123 @@
+//! Shared vocabulary types used across every FIKIT subsystem.
+//!
+//! These mirror the paper's §3.2 definitions: a *kernel* is identified by a
+//! [`KernelId`] (function name + grid dims + block dims); a *task* (one
+//! invocation of a hosted service, e.g. one inference) belongs to a service
+//! identified by a [`TaskKey`]; tasks carry a [`Priority`] in `P0..=P9`
+//! (P0 highest). Simulated time is a [`SimTime`] in integer nanoseconds.
+
+mod error;
+mod ids;
+mod launch;
+mod time;
+
+pub use error::{Error, Result};
+pub use ids::{Dim3, KernelId, TaskId, TaskKey};
+pub use launch::{KernelLaunch, KernelRecord, LaunchSource};
+pub use time::{Duration, SimTime};
+
+
+/// Task priority. `P0` is the highest priority, `P9` the lowest — matching
+/// the paper's queues Q0 (highest) through Q9 (lowest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Priority {
+    P0 = 0,
+    P1 = 1,
+    P2 = 2,
+    P3 = 3,
+    P4 = 4,
+    P5 = 5,
+    P6 = 6,
+    P7 = 7,
+    P8 = 8,
+    P9 = 9,
+}
+
+/// Number of priority levels (queues Q0–Q9 in the paper's Fig 7).
+pub const NUM_PRIORITIES: usize = 10;
+
+impl Priority {
+    /// All priorities from highest (`P0`) to lowest (`P9`).
+    pub const ALL: [Priority; NUM_PRIORITIES] = [
+        Priority::P0,
+        Priority::P1,
+        Priority::P2,
+        Priority::P3,
+        Priority::P4,
+        Priority::P5,
+        Priority::P6,
+        Priority::P7,
+        Priority::P8,
+        Priority::P9,
+    ];
+
+    /// Queue index: 0 for the highest priority, 9 for the lowest.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Construct from a queue index; `None` if out of range.
+    pub fn from_index(idx: usize) -> Option<Priority> {
+        Priority::ALL.get(idx).copied()
+    }
+
+    /// `true` if `self` is strictly higher priority (lower index) than `other`.
+    #[inline]
+    pub fn is_higher_than(self, other: Priority) -> bool {
+        (self as u8) < (other as u8)
+    }
+
+    /// The highest priority.
+    pub const HIGHEST: Priority = Priority::P0;
+    /// The lowest priority.
+    pub const LOWEST: Priority = Priority::P9;
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "P{}", self.index())
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let t = s.trim().trim_start_matches(['p', 'P', 'q', 'Q']);
+        let idx: usize = t
+            .parse()
+            .map_err(|_| Error::Parse(format!("invalid priority: {s:?}")))?;
+        Priority::from_index(idx).ok_or_else(|| Error::Parse(format!("priority out of range: {s:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_ordering_matches_queue_scan_order() {
+        assert!(Priority::P0.is_higher_than(Priority::P1));
+        assert!(Priority::P0.is_higher_than(Priority::P9));
+        assert!(!Priority::P9.is_higher_than(Priority::P9));
+        assert!(!Priority::P5.is_higher_than(Priority::P3));
+        // Ord: P0 < P9 so sorting ascending scans highest-priority first,
+        // exactly the Q0 -> Q9 scan of the paper.
+        let mut v = vec![Priority::P7, Priority::P0, Priority::P3];
+        v.sort();
+        assert_eq!(v, vec![Priority::P0, Priority::P3, Priority::P7]);
+    }
+
+    #[test]
+    fn priority_round_trips_through_index_and_str() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::from_index(p.index()), Some(p));
+            assert_eq!(p.to_string().parse::<Priority>().unwrap(), p);
+        }
+        assert_eq!(Priority::from_index(10), None);
+        assert!("P10".parse::<Priority>().is_err());
+        assert!("x".parse::<Priority>().is_err());
+        assert_eq!("q3".parse::<Priority>().unwrap(), Priority::P3);
+    }
+}

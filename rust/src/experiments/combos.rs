@@ -1,0 +1,154 @@
+//! The ten service combinations A–J used by Figs 16, 17, 19, 20, 21 and
+//! Table 3, plus shared experiment plumbing.
+
+use super::Options;
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::driver::{profile_service, run_with_profiles, ExperimentReport};
+use crate::coordinator::Mode;
+use crate::core::{Priority, Result};
+use crate::profile::ProfileStore;
+use crate::workload::ModelKind;
+
+/// One paper combo: a high-priority and a low-priority service.
+#[derive(Debug, Clone, Copy)]
+pub struct Combo {
+    pub label: &'static str,
+    pub high: ModelKind,
+    pub low: ModelKind,
+}
+
+/// The combos exactly as listed under Fig 16 of the paper.
+pub const COMBOS: [Combo; 10] = [
+    Combo { label: "A", high: ModelKind::KeypointRcnnResnet50Fpn, low: ModelKind::FcnResnet50 },
+    Combo { label: "B", high: ModelKind::KeypointRcnnResnet50Fpn, low: ModelKind::FcosResnet50Fpn },
+    Combo { label: "C", high: ModelKind::FasterrcnnResnet50Fpn, low: ModelKind::Deeplabv3Resnet101 },
+    Combo { label: "D", high: ModelKind::FasterrcnnResnet50Fpn, low: ModelKind::FcnResnet50 },
+    Combo { label: "E", high: ModelKind::KeypointRcnnResnet50Fpn, low: ModelKind::Deeplabv3Resnet101 },
+    Combo { label: "F", high: ModelKind::Alexnet, low: ModelKind::Vgg16 },
+    Combo { label: "G", high: ModelKind::MaskrcnnResnet50Fpn, low: ModelKind::FcnResnet50 },
+    Combo { label: "H", high: ModelKind::MaskrcnnResnet50Fpn, low: ModelKind::KeypointRcnnResnet50Fpn },
+    Combo { label: "I", high: ModelKind::MaskrcnnResnet50Fpn, low: ModelKind::FcosResnet50Fpn },
+    Combo { label: "J", high: ModelKind::Deeplabv3Resnet50, low: ModelKind::Resnet101 },
+];
+
+/// The seven single-service model groups used by Figs 13–15 (the paper
+/// names GoogLeNet, ResNet50, AlexNet and deeplabv3_resnet101 among its
+/// "seven groups of common models").
+pub const SINGLE_GROUPS: [ModelKind; 7] = [
+    ModelKind::Googlenet,
+    ModelKind::Resnet50,
+    ModelKind::Alexnet,
+    ModelKind::Deeplabv3Resnet101,
+    ModelKind::Vgg16,
+    ModelKind::FcnResnet50,
+    ModelKind::MaskrcnnResnet50Fpn,
+];
+
+/// Standard keys for the two services of a combo.
+pub const HIGH_KEY: &str = "svcA-high";
+pub const LOW_KEY: &str = "svcB-low";
+
+/// Base experiment config shared by combo experiments.
+pub fn base_config(opts: Options) -> ExperimentConfig {
+    ExperimentConfig {
+        seed: opts.seed,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Config for a combo: both services issue `tasks` back-to-back
+/// inferences concurrently (paper §4.5.1).
+pub fn combo_config(combo: &Combo, mode: Mode, tasks: u32, opts: Options) -> ExperimentConfig {
+    let mut cfg = base_config(opts);
+    cfg.mode = mode;
+    cfg.services.push(
+        ServiceConfig::new(combo.high, Priority::P0)
+            .tasks(tasks)
+            .with_key(HIGH_KEY),
+    );
+    cfg.services.push(
+        ServiceConfig::new(combo.low, Priority::P3)
+            .tasks(tasks)
+            .with_key(LOW_KEY),
+    );
+    cfg
+}
+
+/// Profile both services of a combo once and reuse across modes — the
+/// deployment lifecycle (measurement is paid once per service, not per
+/// experiment).
+pub fn profile_combo(cfg: &ExperimentConfig) -> Result<ProfileStore> {
+    let mut store = ProfileStore::new();
+    for svc in &cfg.services {
+        store.insert(profile_service(cfg, svc)?.profile);
+    }
+    Ok(store)
+}
+
+/// Run one combo in both Sharing and Fikit modes over the same seeds,
+/// returning `(sharing, fikit)` reports.
+pub fn run_combo_share_vs_fikit(
+    combo: &Combo,
+    tasks: u32,
+    opts: Options,
+) -> Result<(ExperimentReport, ExperimentReport)> {
+    let fikit_cfg = combo_config(combo, Mode::Fikit, tasks, opts);
+    let profiles = profile_combo(&fikit_cfg)?;
+    let fikit = run_with_profiles(&fikit_cfg, &profiles)?;
+    let share_cfg = combo_config(combo, Mode::Sharing, tasks, opts);
+    let share = run_with_profiles(&share_cfg, &ProfileStore::new())?;
+    Ok((share, fikit))
+}
+
+/// Mean JCT (ms) of a service within the fully-overlapping window of a
+/// report (paper §4.5.1 methodology).
+pub fn windowed_mean_ms(report: &ExperimentReport, key: &str) -> f64 {
+    let window = report.overlap_end();
+    let stats = report.jct_in_window(&crate::core::TaskKey::new(key), window);
+    if stats.count == 0 {
+        // Degenerate window (very small runs): fall back to all tasks.
+        report
+            .service(&crate::core::TaskKey::new(key))
+            .map(|s| s.jct.mean_ms())
+            .unwrap_or(0.0)
+    } else {
+        stats.mean_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combos_match_paper_listing() {
+        assert_eq!(COMBOS.len(), 10);
+        assert_eq!(COMBOS[0].label, "A");
+        assert_eq!(COMBOS[5].high, ModelKind::Alexnet);
+        assert_eq!(COMBOS[5].low, ModelKind::Vgg16);
+        assert_eq!(COMBOS[9].high, ModelKind::Deeplabv3Resnet50);
+        assert_eq!(COMBOS[9].low, ModelKind::Resnet101);
+        // Labels unique.
+        let mut labels: Vec<&str> = COMBOS.iter().map(|c| c.label).collect();
+        labels.dedup();
+        assert_eq!(labels.len(), 10);
+    }
+
+    #[test]
+    fn combo_config_builds_two_prioritized_services() {
+        let combo = &COMBOS[0];
+        let cfg = combo_config(combo, Mode::Fikit, 10, Options::quick());
+        cfg.validate().unwrap();
+        assert_eq!(cfg.services.len(), 2);
+        assert!(cfg.services[0].priority.is_higher_than(cfg.services[1].priority));
+    }
+
+    #[test]
+    fn share_vs_fikit_smoke() {
+        let (share, fikit) = run_combo_share_vs_fikit(&COMBOS[5], 6, Options::quick()).unwrap();
+        assert_eq!(share.mode, Mode::Sharing);
+        assert_eq!(fikit.mode, Mode::Fikit);
+        assert!(windowed_mean_ms(&share, HIGH_KEY) > 0.0);
+        assert!(windowed_mean_ms(&fikit, HIGH_KEY) > 0.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! **Fig 15** — experiment scheme III: FIKIT measuring stage vs the
+//! default environment.
+//!
+//! Measuring every kernel (cudaEvent pairs + the synchronization they
+//! force) destroys launch/execute pipelining: the paper reports
+//! +34.52 %…+71.78 % JCT. This is exactly why FIKIT splits the lifecycle
+//! into a bounded measuring stage and a long sharing stage — compare
+//! with Fig 14's <5 %.
+
+use super::combos::SINGLE_GROUPS;
+use super::{ExperimentResult, Options, ShapeCheck};
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::driver::{profile_service, run_experiment};
+use crate::coordinator::Mode;
+use crate::core::{Priority, Result};
+use crate::metrics::{JctStats, TextTable};
+
+pub fn run(opts: Options) -> Result<ExperimentResult> {
+    let tasks = opts.tasks(1000);
+    let mut table = TextTable::new(&["model", "base JCT (ms)", "measuring JCT (ms)", "overhead %"]);
+    let mut series = Vec::new();
+    let mut max_oh = f64::MIN;
+    let mut min_oh = f64::MAX;
+
+    for model in SINGLE_GROUPS {
+        let mut cfg = ExperimentConfig {
+            mode: Mode::Sharing,
+            seed: opts.seed,
+            ..ExperimentConfig::default()
+        };
+        cfg.measurement.runs = tasks;
+        cfg.services
+            .push(ServiceConfig::new(model, Priority::P0).tasks(tasks));
+
+        // Base: plain solo run.
+        let base = run_experiment(&cfg)?.services[0].jct.mean_ms();
+        // Measuring stage: the profiling pass itself, same task count.
+        let profiling = profile_service(&cfg, &cfg.services[0])?;
+        let measuring =
+            JctStats::from_durations(profiling.outcomes.iter().map(|o| o.jct()).collect())
+                .mean_ms();
+
+        let overhead = (measuring - base) / base * 100.0;
+        max_oh = max_oh.max(overhead);
+        min_oh = min_oh.min(overhead);
+        series.push((model.name().to_string(), overhead));
+        table.row(vec![
+            model.name().to_string(),
+            format!("{base:.3}"),
+            format!("{measuring:.3}"),
+            format!("{overhead:+.2}%"),
+        ]);
+    }
+
+    let checks = vec![
+        ShapeCheck::new(
+            "measurement is expensive",
+            min_oh > 15.0,
+            format!("min overhead {min_oh:.2}% (paper: ≥34.5%)"),
+        ),
+        ShapeCheck::new(
+            "within the paper's magnitude band",
+            max_oh < 110.0,
+            format!("max overhead {max_oh:.2}% (paper: ≤71.8%)"),
+        ),
+        ShapeCheck::new(
+            "staging is necessary",
+            min_oh > 5.0,
+            "measuring-stage cost dwarfs the <5% sharing-stage cost (Fig 14)".to_string(),
+        ),
+    ];
+
+    Ok(ExperimentResult {
+        id: "fig15",
+        title: "Single-service JCT overhead, FIKIT measuring stage vs NVIDIA default (scheme III)",
+        table,
+        series,
+        checks,
+        notes: format!("{tasks} measured inferences per model"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig15_shape_holds_quick() {
+        let r = run(Options::quick()).unwrap();
+        assert_eq!(r.series.len(), 7);
+        assert!(r.all_checks_pass(), "{}", r.render());
+    }
+}

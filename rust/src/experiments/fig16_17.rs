@@ -1,0 +1,99 @@
+//! **Fig 16 + Fig 17** — high/low-priority JCT speedup of FIKIT over
+//! default GPU sharing across the ten combos A–J (§4.5.1).
+//!
+//! Paper results: high-priority tasks accelerate by 1.32–16.41×, more
+//! than half of the combos by >3.4× (Fig 16); low-priority tasks run at
+//! a fraction of their sharing-mode rate, mostly <0.3× (Fig 17) — the
+//! price of strict priority.
+
+use super::combos::{run_combo_share_vs_fikit, windowed_mean_ms, COMBOS, HIGH_KEY, LOW_KEY};
+use super::{ExperimentResult, Options, ShapeCheck};
+use crate::core::Result;
+use crate::metrics::TextTable;
+
+pub fn run(opts: Options) -> Result<ExperimentResult> {
+    let tasks = opts.tasks(1000).min(300); // overlap-window methodology saturates quickly
+    let mut table = TextTable::new(&[
+        "combo", "H model", "L model", "H share (ms)", "H FIKIT (ms)", "H speedup",
+        "L speedup",
+    ]);
+    let mut series = Vec::new();
+    let mut hi_speedups = Vec::new();
+    let mut lo_speedups = Vec::new();
+
+    for combo in &COMBOS {
+        let (share, fikit) = run_combo_share_vs_fikit(combo, tasks, opts)?;
+        let h_share = windowed_mean_ms(&share, HIGH_KEY);
+        let h_fikit = windowed_mean_ms(&fikit, HIGH_KEY);
+        let l_share = windowed_mean_ms(&share, LOW_KEY);
+        let l_fikit = windowed_mean_ms(&fikit, LOW_KEY);
+        let h_speedup = h_share / h_fikit;
+        let l_speedup = l_share / l_fikit;
+        hi_speedups.push(h_speedup);
+        lo_speedups.push(l_speedup);
+        series.push((format!("fig16/{}", combo.label), h_speedup));
+        series.push((format!("fig17/{}", combo.label), l_speedup));
+        table.row(vec![
+            combo.label.to_string(),
+            combo.high.name().to_string(),
+            combo.low.name().to_string(),
+            format!("{h_share:.2}"),
+            format!("{h_fikit:.2}"),
+            format!("{h_speedup:.2}x"),
+            format!("{l_speedup:.2}x"),
+        ]);
+    }
+
+    let min_h = hi_speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_h = hi_speedups.iter().cloned().fold(0.0, f64::max);
+    let over_2x = hi_speedups.iter().filter(|s| **s > 2.0).count();
+    let lo_below_1 = lo_speedups.iter().filter(|s| **s < 1.0).count();
+
+    let checks = vec![
+        ShapeCheck::new(
+            "fig16: FIKIT wins for high priority in every combo",
+            min_h > 1.0,
+            format!("min speedup {min_h:.2}x (paper min 1.32x)"),
+        ),
+        ShapeCheck::new(
+            "fig16: large speedups exist",
+            max_h > 3.0,
+            format!("max speedup {max_h:.2}x (paper max 16.41x)"),
+        ),
+        ShapeCheck::new(
+            "fig16: majority accelerate substantially",
+            over_2x * 2 >= COMBOS.len(),
+            format!("{over_2x}/10 combos over 2x (paper: >half over 3.4x)"),
+        ),
+        ShapeCheck::new(
+            "fig17: low priority pays in most combos",
+            lo_below_1 >= 7,
+            format!("{lo_below_1}/10 combos with low-prio speedup < 1 (paper: mostly <0.3)"),
+        ),
+    ];
+
+    Ok(ExperimentResult {
+        id: "fig16",
+        title: "High/low-priority JCT speedup of FIKIT over default sharing, combos A–J",
+        table,
+        series,
+        checks,
+        notes: format!(
+            "{tasks} inferences per service; JCTs collected in the fully-overlapping window (paper §4.5.1)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig16_17_shape_holds_quick() {
+        let r = run(Options::quick()).unwrap();
+        assert_eq!(r.series.len(), 20);
+        for c in &r.checks {
+            assert!(c.passed, "{}\nfull report:\n{}", c.name, r.render());
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! **Fig 18** — low-priority JCT under exclusive mode vs FIKIT as the
+//! high:low task ratio grows (§4.5.2).
+//!
+//! Exclusive mode serializes whole tasks by priority: each of B's tasks
+//! waits for the `ratio` A-tasks issued since its predecessor, so B's
+//! JCT grows linearly with the ratio (1:1 → 50:1) while FIKIT's stays
+//! flat (B scavenges A's gaps continuously). The paper's plot is the
+//! exclusive/FIKIT JCT ratio rising linearly from ≈1.
+//!
+//! Methodology follows the paper: exclusive mode cannot co-run two
+//! services, so A and B are measured separately (solo runs) and B's
+//! exclusive JCT is composed as `ratio × mean(JCT_A) + mean(JCT_B)`.
+
+use super::combos::{base_config, HIGH_KEY, LOW_KEY};
+use super::{ExperimentResult, Options, ShapeCheck};
+use crate::config::ServiceConfig;
+use crate::coordinator::driver::{run_experiment, run_with_profiles};
+use crate::coordinator::Mode;
+use crate::core::{Priority, Result, TaskKey};
+use crate::metrics::TextTable;
+use crate::workload::ModelKind;
+
+pub const RATIOS: [u32; 6] = [1, 10, 20, 30, 40, 50];
+
+pub fn run(opts: Options) -> Result<ExperimentResult> {
+    let high = ModelKind::KeypointRcnnResnet50Fpn;
+    let low = ModelKind::FcnResnet50;
+    let b_tasks = opts.tasks(20);
+
+    let mut table = TextTable::new(&[
+        "A:B ratio", "B excl JCT (ms)", "B FIKIT JCT (ms)", "excl/FIKIT",
+    ]);
+    let mut series = Vec::new();
+    let mut ratios_out = Vec::new();
+
+    // Solo baselines (measured once; the paper measures each service
+    // separately and composes).
+    let mut a_cfg = base_config(opts);
+    a_cfg.mode = Mode::Sharing; // solo
+    a_cfg
+        .services
+        .push(ServiceConfig::new(high, Priority::P0).tasks(b_tasks * 4).with_key(HIGH_KEY));
+    let a_solo_mean = run_experiment(&a_cfg)?.services[0].jct.mean_ms();
+
+    let mut b_cfg = base_config(opts);
+    b_cfg.mode = Mode::Sharing; // solo
+    b_cfg
+        .services
+        .push(ServiceConfig::new(low, Priority::P3).tasks(b_tasks).with_key(LOW_KEY));
+    let b_solo_mean = run_experiment(&b_cfg)?.services[0].jct.mean_ms();
+
+    for ratio in RATIOS {
+        let a_tasks = b_tasks * ratio;
+
+        // --- exclusive: tasks run in priority order, so each B task
+        // waits for the `ratio` A tasks issued since its predecessor ---
+        let b_excl_ms = ratio as f64 * a_solo_mean + b_solo_mean;
+
+        // --- FIKIT: truly concurrent ---
+        let mut f_cfg = base_config(opts);
+        f_cfg.mode = Mode::Fikit;
+        f_cfg
+            .services
+            .push(ServiceConfig::new(high, Priority::P0).tasks(a_tasks).with_key(HIGH_KEY));
+        f_cfg
+            .services
+            .push(ServiceConfig::new(low, Priority::P3).tasks(b_tasks).with_key(LOW_KEY));
+        let profiles = super::combos::profile_combo(&f_cfg)?;
+        let fikit = run_with_profiles(&f_cfg, &profiles)?;
+        let b_fikit_ms = fikit
+            .service(&TaskKey::new(LOW_KEY))
+            .map(|s| s.jct.mean_ms())
+            .unwrap_or(f64::NAN);
+
+        let r = b_excl_ms / b_fikit_ms;
+        ratios_out.push(r);
+        series.push((format!("ratio_{ratio}"), r));
+        table.row(vec![
+            format!("{ratio}:1"),
+            format!("{b_excl_ms:.1}"),
+            format!("{b_fikit_ms:.1}"),
+            format!("{r:.2}x"),
+        ]);
+    }
+
+    // Linear-trend check: ratio at 50:1 should be ≈50/10× the ratio at
+    // 10:1 (within 2×), and monotone throughout.
+    let monotone = ratios_out.windows(2).all(|w| w[1] > w[0]);
+    let lin = ratios_out[5] / ratios_out[1];
+    let checks = vec![
+        ShapeCheck::new(
+            "starts near parity",
+            ratios_out[0] < 4.0,
+            format!("1:1 ratio = {:.2}x (paper: close to FIKIT)", ratios_out[0]),
+        ),
+        ShapeCheck::new(
+            "monotone growth with ratio",
+            monotone,
+            format!("ratios: {ratios_out:.2?}"),
+        ),
+        ShapeCheck::new(
+            "linear trend",
+            (2.5..10.0).contains(&lin),
+            format!("ratio(50:1)/ratio(10:1) = {lin:.2} (linear → ≈5)"),
+        ),
+    ];
+
+    Ok(ExperimentResult {
+        id: "fig18",
+        title: "Low-priority JCT: exclusive mode vs FIKIT across A:B task ratios",
+        table,
+        series,
+        checks,
+        notes: format!(
+            "B issues {b_tasks} tasks; A issues ratio×{b_tasks}; exclusive composed per paper §4.5.2"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig18_shape_holds_quick() {
+        let r = run(Options::quick()).unwrap();
+        assert_eq!(r.series.len(), RATIOS.len());
+        assert!(r.all_checks_pass(), "{}", r.render());
+    }
+}

@@ -1,0 +1,175 @@
+//! The paper's evaluation section, regenerated.
+//!
+//! One module per table/figure (DESIGN.md §5 maps each to its workload
+//! and parameters). Every experiment returns an [`ExperimentResult`]
+//! carrying the rendered table, the raw series, and a set of **shape
+//! checks** — the "who wins, by roughly what factor, where crossovers
+//! fall" assertions that define a successful reproduction (absolute
+//! numbers are not expected to match the authors' RTX 3090 testbed).
+//!
+//! Run all of them via `cargo bench --bench paper_experiments` or one at
+//! a time via `fikit experiment <id>`.
+
+pub mod combos;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16_17;
+pub mod fig18;
+pub mod fig19_20;
+pub mod fig21_table3;
+pub mod fill_policy;
+pub mod perf_ablation;
+pub mod table2;
+
+use crate::core::Result;
+use crate::metrics::TextTable;
+
+/// Scaling knobs for experiment size.
+#[derive(Debug, Clone, Copy)]
+pub struct Options {
+    /// Multiplier on task counts (1.0 = paper-scale where tractable).
+    pub scale: f64,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for Options {
+    fn default() -> Options {
+        Options {
+            scale: 1.0,
+            seed: 0xF1C1,
+        }
+    }
+}
+
+impl Options {
+    /// Quick smoke-scale (CI): ~10× smaller.
+    pub fn quick() -> Options {
+        Options {
+            scale: 0.1,
+            ..Default::default()
+        }
+    }
+
+    /// Scale a task count (minimum 3 so statistics exist).
+    pub fn tasks(&self, paper_count: u32) -> u32 {
+        ((paper_count as f64 * self.scale).round() as u32).max(3)
+    }
+}
+
+/// One shape assertion of an experiment.
+#[derive(Debug, Clone)]
+pub struct ShapeCheck {
+    pub name: String,
+    pub passed: bool,
+    pub detail: String,
+}
+
+impl ShapeCheck {
+    pub fn new(name: &str, passed: bool, detail: String) -> ShapeCheck {
+        ShapeCheck {
+            name: name.to_string(),
+            passed,
+            detail,
+        }
+    }
+}
+
+/// The outcome of one experiment.
+#[derive(Debug)]
+pub struct ExperimentResult {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub table: TextTable,
+    /// Named scalar series for programmatic consumption
+    /// (e.g. per-combo speedups).
+    pub series: Vec<(String, f64)>,
+    pub checks: Vec<ShapeCheck>,
+    /// Free-form notes (methodology, caveats).
+    pub notes: String,
+}
+
+impl ExperimentResult {
+    pub fn all_checks_pass(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+
+    /// Render the full report block.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        out.push_str(&self.table.render());
+        if !self.notes.is_empty() {
+            out.push_str(&format!("notes: {}\n", self.notes));
+        }
+        for c in &self.checks {
+            out.push_str(&format!(
+                "  [{}] {}: {}\n",
+                if c.passed { "PASS" } else { "FAIL" },
+                c.name,
+                c.detail
+            ));
+        }
+        out
+    }
+
+    pub fn series_value(&self, name: &str) -> Option<f64> {
+        self.series
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig13",
+    "fig14",
+    "fig15",
+    "table2",
+    "fig16",
+    "fig18",
+    "fig19",
+    "fig21",
+    "ablation_feedback",
+    "ablation_fill_policy",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: Options) -> Result<ExperimentResult> {
+    match id {
+        "fig13" => fig13::run(opts),
+        "fig14" => fig14::run(opts),
+        "fig15" => fig15::run(opts),
+        "table2" => table2::run(opts),
+        // fig16 and fig17 come from the same runs; one result carries both.
+        "fig16" | "fig17" => fig16_17::run(opts),
+        "fig18" => fig18::run(opts),
+        "fig19" | "fig20" => fig19_20::run(opts),
+        "fig21" | "table3" => fig21_table3::run(opts),
+        "ablation_feedback" => perf_ablation::run(opts),
+        "ablation_fill_policy" => fill_policy::run(opts),
+        other => Err(crate::core::Error::Parse(format!(
+            "unknown experiment {other:?}; known: {ALL:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        assert!(run("nope", Options::quick()).is_err());
+    }
+
+    #[test]
+    fn options_scaling() {
+        let o = Options::quick();
+        assert_eq!(o.tasks(1000), 100);
+        assert_eq!(o.tasks(10), 3); // floor
+        let full = Options::default();
+        assert_eq!(full.tasks(1000), 1000);
+    }
+}

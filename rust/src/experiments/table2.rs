@@ -1,0 +1,106 @@
+//! **Table 2** — total execution time of two concurrently-issued
+//! services under default sharing vs FIKIT.
+//!
+//! Service A: keypointrcnn_resnet50_fpn (high priority), service B:
+//! fcn_resnet50 (low priority), 1000 inferences each. The paper's table:
+//!
+//! | mode    | service A | service B |
+//! |---------|-----------|-----------|
+//! | sharing | 38.16 s   | 16.02 s   |
+//! | FIKIT   | 33.13 s   | 39.10 s   |
+//!
+//! Shape: FIKIT shortens A's total (priority protected) and lengthens
+//! B's (it only scavenges gaps) — the totals *cross over* between modes.
+
+use super::combos::{run_combo_share_vs_fikit, Combo, HIGH_KEY, LOW_KEY};
+use super::{ExperimentResult, Options, ShapeCheck};
+use crate::core::{Result, TaskKey};
+use crate::metrics::TextTable;
+use crate::workload::ModelKind;
+
+pub fn run(opts: Options) -> Result<ExperimentResult> {
+    let combo = Combo {
+        label: "table2",
+        high: ModelKind::KeypointRcnnResnet50Fpn,
+        low: ModelKind::FcnResnet50,
+    };
+    let tasks = opts.tasks(1000);
+    let (share, fikit) = run_combo_share_vs_fikit(&combo, tasks, opts)?;
+
+    let total = |report: &crate::coordinator::driver::ExperimentReport, key: &str| -> f64 {
+        report
+            .service(&TaskKey::new(key))
+            .map(|s| {
+                s.timeline
+                    .points
+                    .last()
+                    .map(|p| (p.arrival + p.jct).as_secs_f64())
+                    .unwrap_or(0.0)
+            })
+            .unwrap_or(0.0)
+    };
+
+    let share_a = total(&share, HIGH_KEY);
+    let share_b = total(&share, LOW_KEY);
+    let fikit_a = total(&fikit, HIGH_KEY);
+    let fikit_b = total(&fikit, LOW_KEY);
+
+    let mut table = TextTable::new(&["mode", "service A total (s)", "service B total (s)"]);
+    table.row(vec![
+        "default sharing".into(),
+        format!("{share_a:.3}"),
+        format!("{share_b:.3}"),
+    ]);
+    table.row(vec![
+        "FIKIT".into(),
+        format!("{fikit_a:.3}"),
+        format!("{fikit_b:.3}"),
+    ]);
+
+    let checks = vec![
+        ShapeCheck::new(
+            "FIKIT shortens A's total",
+            fikit_a < share_a,
+            format!("A: {share_a:.2}s (share) → {fikit_a:.2}s (FIKIT)"),
+        ),
+        ShapeCheck::new(
+            "FIKIT lengthens B's total",
+            fikit_b > share_b,
+            format!("B: {share_b:.2}s (share) → {fikit_b:.2}s (FIKIT)"),
+        ),
+        ShapeCheck::new(
+            "magnitudes: B pays substantially, A gains substantially",
+            fikit_b / share_b > 1.3 && share_a / fikit_a > 1.05,
+            format!(
+                "B slowdown {:.2}x (paper 2.4x), A gain {:.2}x (paper 1.15x)",
+                fikit_b / share_b,
+                share_a / fikit_a
+            ),
+        ),
+    ];
+
+    Ok(ExperimentResult {
+        id: "table2",
+        title: "Total execution time of A (keypointrcnn, H) and B (fcn_resnet50, L)",
+        table,
+        series: vec![
+            ("share_a_s".into(), share_a),
+            ("share_b_s".into(), share_b),
+            ("fikit_a_s".into(), fikit_a),
+            ("fikit_b_s".into(), fikit_b),
+        ],
+        checks,
+        notes: format!("{tasks} inferences per service, concurrent back-to-back issue"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_shape_holds_quick() {
+        let r = run(Options::quick()).unwrap();
+        assert!(r.all_checks_pass(), "{}", r.render());
+    }
+}

@@ -1,0 +1,264 @@
+//! The per-service hook client.
+//!
+//! In the paper this is the LD_PRELOADed library inside each service
+//! container: it intercepts every kernel launch, resolves the kernel id
+//! via the `-rdynamic` framework symbols, forwards the launch to the
+//! FIKIT scheduler, and releases it to the GPU only when told to. Here it
+//! fronts a [`Transport`] and is used by the real-time serving engine
+//! (`runtime::engine`) and the UDP server integration tests.
+
+use super::protocol::{ClientMsg, SchedulerMsg};
+use super::transport::Transport;
+use crate::core::{Dim3, Error, KernelId, Priority, Result, SimTime, TaskId, TaskKey};
+use crate::profile::SymbolResolver;
+use std::time::Duration as StdDuration;
+
+/// Decision returned by the scheduler for one held launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchDecision {
+    /// Launch to the GPU immediately.
+    LaunchNow,
+    /// Parked in a priority queue; a later `LaunchNow` will release it.
+    Held,
+}
+
+/// Hook client state for one service process.
+pub struct HookClient<T: Transport> {
+    transport: T,
+    task_key: TaskKey,
+    priority: Priority,
+    resolver: SymbolResolver,
+    /// Scheduler-assigned stage from registration.
+    sharing_stage: Option<bool>,
+    recv_timeout: StdDuration,
+}
+
+impl<T: Transport> HookClient<T> {
+    pub fn new(
+        transport: T,
+        task_key: TaskKey,
+        priority: Priority,
+        resolver: SymbolResolver,
+    ) -> HookClient<T> {
+        HookClient {
+            transport,
+            task_key,
+            priority,
+            resolver,
+            sharing_stage: None,
+            recv_timeout: StdDuration::from_millis(500),
+        }
+    }
+
+    pub fn task_key(&self) -> &TaskKey {
+        &self.task_key
+    }
+
+    /// Register with the scheduler; returns `true` if the service enters
+    /// sharing stage (has a ready profile), `false` for measurement
+    /// stage.
+    pub fn register(&mut self) -> Result<bool> {
+        let msg = ClientMsg::Register {
+            task_key: self.task_key.clone(),
+            priority: self.priority,
+            has_symbols: self.resolver.model().symbols_exported,
+        };
+        self.transport.send(&msg.encode()?)?;
+        match self.expect_reply()? {
+            SchedulerMsg::Registered { sharing_stage, .. } => {
+                self.sharing_stage = Some(sharing_stage);
+                Ok(sharing_stage)
+            }
+            SchedulerMsg::Error { message } => Err(Error::Protocol(message)),
+            other => Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
+        }
+    }
+
+    /// Announce a new task (invocation).
+    pub fn task_start(&self, task_id: TaskId) -> Result<()> {
+        let msg = ClientMsg::TaskStart {
+            task_key: self.task_key.clone(),
+            task_id,
+        };
+        self.transport.send(&msg.encode()?)
+    }
+
+    /// Intercept one kernel launch: resolve the kernel id, forward it,
+    /// and return the scheduler's immediate decision.
+    pub fn intercept_launch(
+        &self,
+        kernel: &KernelId,
+        task_id: TaskId,
+        seq: u32,
+        now: SimTime,
+    ) -> Result<LaunchDecision> {
+        let (resolved, _cost) = self.resolver.resolve(kernel);
+        let msg = ClientMsg::Launch {
+            task_key: self.task_key.clone(),
+            task_id,
+            kernel_name: resolved.name.to_string(),
+            grid: resolved.grid,
+            block: resolved.block,
+            seq,
+            issued_at: now,
+        };
+        self.transport.send(&msg.encode()?)?;
+        match self.expect_reply()? {
+            SchedulerMsg::LaunchNow { .. } => Ok(LaunchDecision::LaunchNow),
+            SchedulerMsg::Hold { .. } => Ok(LaunchDecision::Held),
+            SchedulerMsg::Error { message } => Err(Error::Protocol(message)),
+            other => Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
+        }
+    }
+
+    /// Wait for a deferred `LaunchNow` for a held kernel.
+    pub fn wait_release(&self, seq: u32) -> Result<()> {
+        loop {
+            match self.expect_reply()? {
+                SchedulerMsg::LaunchNow { seq: s, .. } if s == seq => return Ok(()),
+                SchedulerMsg::LaunchNow { .. } | SchedulerMsg::Hold { .. } => continue,
+                SchedulerMsg::Error { message } => return Err(Error::Protocol(message)),
+                other => return Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
+            }
+        }
+    }
+
+    /// Report a kernel completion (measurement stage / holder kernels).
+    pub fn report_completion(
+        &self,
+        task_id: TaskId,
+        seq: u32,
+        exec: crate::core::Duration,
+        finished_at: SimTime,
+    ) -> Result<()> {
+        let msg = ClientMsg::Completion {
+            task_key: self.task_key.clone(),
+            task_id,
+            seq,
+            exec,
+            finished_at,
+        };
+        self.transport.send(&msg.encode()?)
+    }
+
+    /// Announce the current task finished.
+    pub fn task_end(&self, task_id: TaskId) -> Result<()> {
+        let msg = ClientMsg::TaskEnd {
+            task_key: self.task_key.clone(),
+            task_id,
+        };
+        self.transport.send(&msg.encode()?)
+    }
+
+    /// Clean shutdown.
+    pub fn disconnect(&self) -> Result<()> {
+        let msg = ClientMsg::Disconnect {
+            task_key: self.task_key.clone(),
+        };
+        self.transport.send(&msg.encode()?)
+    }
+
+    fn expect_reply(&self) -> Result<SchedulerMsg> {
+        match self.transport.recv(self.recv_timeout)? {
+            Some(buf) => SchedulerMsg::decode(&buf),
+            None => Err(Error::Protocol("scheduler reply timed out".into())),
+        }
+    }
+
+    /// Erase a kernel id through the client's resolver (test helper).
+    pub fn resolve(&self, kernel: &KernelId) -> KernelId {
+        self.resolver.resolve(kernel).0
+    }
+}
+
+/// Convenience constructor for an in-proc client/server pair used by
+/// tests and the real-time engine.
+pub fn in_proc_pair(
+    task_key: TaskKey,
+    priority: Priority,
+    resolver: SymbolResolver,
+) -> (HookClient<super::transport::ChannelTransport>, super::transport::ChannelTransport) {
+    let (client_t, server_t) = super::transport::ChannelTransport::pair();
+    (
+        HookClient::new(client_t, task_key, priority, resolver),
+        server_t,
+    )
+}
+
+/// Build a [`KernelId`] from the wire fields of a `Launch` message.
+pub fn kernel_id_from_wire(kernel_name: &str, grid: Dim3, block: Dim3) -> KernelId {
+    KernelId::new(kernel_name.to_string(), grid, block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hook::protocol::ClientMsg;
+    use crate::hook::transport::Transport;
+    use crate::profile::SymbolTableModel;
+
+    fn pair() -> (
+        HookClient<crate::hook::ChannelTransport>,
+        crate::hook::ChannelTransport,
+    ) {
+        in_proc_pair(
+            TaskKey::new("svc"),
+            Priority::P1,
+            SymbolResolver::new(SymbolTableModel::default()),
+        )
+    }
+
+    #[test]
+    fn register_round_trip() {
+        let (mut client, server) = pair();
+        let h = std::thread::spawn(move || {
+            let buf = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let msg = ClientMsg::decode(&buf).unwrap();
+            let ClientMsg::Register { task_key, priority, has_symbols } = msg else {
+                panic!("expected Register, got {msg:?}");
+            };
+            assert_eq!(priority, Priority::P1);
+            assert!(has_symbols);
+            let reply = SchedulerMsg::Registered {
+                task_key,
+                sharing_stage: true,
+            };
+            server.send(&reply.encode().unwrap()).unwrap();
+        });
+        assert!(client.register().unwrap());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn launch_decision_round_trip() {
+        let (client, server) = pair();
+        let kernel = KernelId::new("gemm", Dim3::x(8), Dim3::x(128));
+        let h = std::thread::spawn(move || {
+            let buf = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let ClientMsg::Launch { task_key, task_id, seq, kernel_name, .. } =
+                ClientMsg::decode(&buf).unwrap()
+            else {
+                panic!("expected Launch");
+            };
+            assert_eq!(kernel_name, "gemm");
+            let reply = SchedulerMsg::Hold { task_key: task_key.clone(), task_id, seq };
+            server.send(&reply.encode().unwrap()).unwrap();
+            // Later, release it.
+            let release = SchedulerMsg::LaunchNow { task_key, task_id, seq };
+            server.send(&release.encode().unwrap()).unwrap();
+        });
+        let decision = client
+            .intercept_launch(&kernel, TaskId(3), 7, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(decision, LaunchDecision::Held);
+        client.wait_release(7).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_is_an_error() {
+        let (mut client, _server) = pair();
+        client.recv_timeout = StdDuration::from_millis(10);
+        assert!(client.register().is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! The hook layer: the CUDA-API-hook analogue.
+//!
+//! In the paper, a preload library intercepts every `cudaLaunchKernel` of
+//! a hosted service, resolves the kernel id against the `-rdynamic`
+//! framework build, and talks to the central FIKIT scheduler over UDP;
+//! the scheduler replies with launch-now / hold decisions.
+//!
+//! Here the same split exists:
+//!
+//! * [`protocol`] — the versioned wire format (client↔scheduler
+//!   messages; serde-JSON frames over datagrams).
+//! * [`client`] — the per-service hook client: intercept → resolve →
+//!   forward → hold/launch.
+//! * [`transport`] — pluggable datagram transports: an in-process
+//!   channel pair (used by deterministic simulations and tests) and real
+//!   UDP sockets (used by `fikit serve`, see [`crate::server`]).
+
+pub mod client;
+pub mod protocol;
+pub mod transport;
+
+pub use client::HookClient;
+pub use protocol::{ClientMsg, SchedulerMsg, WIRE_VERSION};
+pub use transport::{ChannelTransport, Transport, UdpTransport};

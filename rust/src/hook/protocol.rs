@@ -1,0 +1,398 @@
+//! Client ↔ scheduler wire protocol.
+//!
+//! The paper's hook client and FIKIT scheduler are separate processes
+//! exchanging UDP messages. We keep that shape: small JSON frames with an
+//! explicit version byte, so a fleet can roll the scheduler independently
+//! of hook clients. JSON (not a binary codec) keeps frames inspectable
+//! with tcpdump in production debugging — at the message rates involved
+//! (one frame per kernel launch, ≤ tens of kHz) encoding cost is
+//! irrelevant next to the network round trip.
+
+use crate::core::{Dim3, Duration, Error, Priority, Result, SimTime, TaskId, TaskKey};
+use crate::util::json::Json;
+
+/// Protocol version; bumped on breaking changes.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Messages sent by a hook client to the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// A service process registered with the scheduler.
+    Register {
+        task_key: TaskKey,
+        priority: Priority,
+        /// Whether the framework build exports kernel symbols
+        /// (`-rdynamic`); without it the scheduler will keep the service
+        /// in measurement-incapable degraded mode.
+        has_symbols: bool,
+    },
+    /// A new task (invocation) of the service started.
+    TaskStart { task_key: TaskKey, task_id: TaskId },
+    /// An intercepted kernel launch, held by the hook pending a
+    /// scheduler decision.
+    Launch {
+        task_key: TaskKey,
+        task_id: TaskId,
+        /// Resolved kernel function name (may be empty without symbols).
+        kernel_name: String,
+        grid: Dim3,
+        block: Dim3,
+        seq: u32,
+        issued_at: SimTime,
+    },
+    /// The hook observed a kernel completion (end of a cudaEvent pair —
+    /// only sent during the measurement stage or for holder kernels).
+    Completion {
+        task_key: TaskKey,
+        task_id: TaskId,
+        seq: u32,
+        exec: Duration,
+        finished_at: SimTime,
+    },
+    /// The current task of the service finished.
+    TaskEnd { task_key: TaskKey, task_id: TaskId },
+    /// Clean shutdown of the hook client.
+    Disconnect { task_key: TaskKey },
+}
+
+/// Messages sent by the scheduler back to a hook client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedulerMsg {
+    /// Registration accepted; tells the client which stage to run in.
+    Registered {
+        task_key: TaskKey,
+        /// True → the service has a ready profile and runs in sharing
+        /// stage; false → measurement stage (exclusive + timing events).
+        sharing_stage: bool,
+    },
+    /// Release the held launch `seq` to the GPU now.
+    LaunchNow { task_key: TaskKey, task_id: TaskId, seq: u32 },
+    /// Keep holding the launch (it is parked in a priority queue).
+    Hold { task_key: TaskKey, task_id: TaskId, seq: u32 },
+    /// Scheduler-side error (e.g. unknown task key).
+    Error { message: String },
+}
+
+fn dim_to_json(d: Dim3) -> Json {
+    Json::Arr(vec![Json::from(d.x as i64), Json::from(d.y as i64), Json::from(d.z as i64)])
+}
+
+fn dim_from_json(v: &Json) -> Result<Dim3> {
+    let arr = v
+        .as_arr()
+        .filter(|a| a.len() == 3)
+        .ok_or_else(|| Error::Protocol("dim3 must be a 3-array".into()))?;
+    let g = |i: usize| -> Result<u32> {
+        arr[i]
+            .as_u64()
+            .and_then(|v| u32::try_from(v).ok())
+            .ok_or_else(|| Error::Protocol("dim3 element out of range".into()))
+    };
+    Ok(Dim3::new(g(0)?, g(1)?, g(2)?))
+}
+
+/// A framed message: 2-byte header (version, kind) + JSON body.
+fn frame(kind: u8, body: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 2);
+    out.push(WIRE_VERSION);
+    out.push(kind);
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+fn unframe(buf: &[u8]) -> Result<(u8, Json)> {
+    if buf.len() < 2 {
+        return Err(Error::Protocol("frame too short".into()));
+    }
+    if buf[0] != WIRE_VERSION {
+        return Err(Error::Protocol(format!(
+            "wire version mismatch: got {}, want {}",
+            buf[0], WIRE_VERSION
+        )));
+    }
+    let body = std::str::from_utf8(&buf[2..])
+        .map_err(|_| Error::Protocol("frame body is not UTF-8".into()))?;
+    Ok((buf[1], Json::parse(body)?))
+}
+
+const KIND_CLIENT: u8 = 0x01;
+const KIND_SCHED: u8 = 0x02;
+
+impl ClientMsg {
+    fn to_json(&self) -> Json {
+        match self {
+            ClientMsg::Register {
+                task_key,
+                priority,
+                has_symbols,
+            } => Json::obj()
+                .set("type", "register")
+                .set("task_key", task_key.as_str())
+                .set("priority", priority.to_string())
+                .set("has_symbols", *has_symbols),
+            ClientMsg::TaskStart { task_key, task_id } => Json::obj()
+                .set("type", "task_start")
+                .set("task_key", task_key.as_str())
+                .set("task_id", task_id.0),
+            ClientMsg::Launch {
+                task_key,
+                task_id,
+                kernel_name,
+                grid,
+                block,
+                seq,
+                issued_at,
+            } => Json::obj()
+                .set("type", "launch")
+                .set("task_key", task_key.as_str())
+                .set("task_id", task_id.0)
+                .set("kernel_name", kernel_name.as_str())
+                .set("grid", dim_to_json(*grid))
+                .set("block", dim_to_json(*block))
+                .set("seq", *seq)
+                .set("issued_at_ns", issued_at.nanos()),
+            ClientMsg::Completion {
+                task_key,
+                task_id,
+                seq,
+                exec,
+                finished_at,
+            } => Json::obj()
+                .set("type", "completion")
+                .set("task_key", task_key.as_str())
+                .set("task_id", task_id.0)
+                .set("seq", *seq)
+                .set("exec_ns", exec.nanos())
+                .set("finished_at_ns", finished_at.nanos()),
+            ClientMsg::TaskEnd { task_key, task_id } => Json::obj()
+                .set("type", "task_end")
+                .set("task_key", task_key.as_str())
+                .set("task_id", task_id.0),
+            ClientMsg::Disconnect { task_key } => Json::obj()
+                .set("type", "disconnect")
+                .set("task_key", task_key.as_str()),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<ClientMsg> {
+        let key = || -> Result<TaskKey> { Ok(TaskKey::new(v.req_str("task_key")?)) };
+        let tid = || -> Result<TaskId> { Ok(TaskId(v.req_u64("task_id")?)) };
+        match v.req_str("type")? {
+            "register" => Ok(ClientMsg::Register {
+                task_key: key()?,
+                priority: v.req_str("priority")?.parse()?,
+                has_symbols: v.req_bool("has_symbols")?,
+            }),
+            "task_start" => Ok(ClientMsg::TaskStart {
+                task_key: key()?,
+                task_id: tid()?,
+            }),
+            "launch" => Ok(ClientMsg::Launch {
+                task_key: key()?,
+                task_id: tid()?,
+                kernel_name: v.req_str("kernel_name")?.to_string(),
+                grid: dim_from_json(v.require("grid")?)?,
+                block: dim_from_json(v.require("block")?)?,
+                seq: v.req_u64("seq")? as u32,
+                issued_at: SimTime(v.req_u64("issued_at_ns")?),
+            }),
+            "completion" => Ok(ClientMsg::Completion {
+                task_key: key()?,
+                task_id: tid()?,
+                seq: v.req_u64("seq")? as u32,
+                exec: Duration::from_nanos(v.req_u64("exec_ns")?),
+                finished_at: SimTime(v.req_u64("finished_at_ns")?),
+            }),
+            "task_end" => Ok(ClientMsg::TaskEnd {
+                task_key: key()?,
+                task_id: tid()?,
+            }),
+            "disconnect" => Ok(ClientMsg::Disconnect { task_key: key()? }),
+            other => Err(Error::Protocol(format!("unknown client msg type {other:?}"))),
+        }
+    }
+
+    /// Encode to a datagram frame.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        Ok(frame(KIND_CLIENT, &self.to_json().encode()))
+    }
+
+    /// Decode from a datagram frame.
+    pub fn decode(buf: &[u8]) -> Result<ClientMsg> {
+        let (kind, body) = unframe(buf)?;
+        if kind != KIND_CLIENT {
+            return Err(Error::Protocol(format!(
+                "expected client frame, got kind {kind}"
+            )));
+        }
+        ClientMsg::from_json(&body)
+    }
+}
+
+impl SchedulerMsg {
+    fn to_json(&self) -> Json {
+        match self {
+            SchedulerMsg::Registered {
+                task_key,
+                sharing_stage,
+            } => Json::obj()
+                .set("type", "registered")
+                .set("task_key", task_key.as_str())
+                .set("sharing_stage", *sharing_stage),
+            SchedulerMsg::LaunchNow {
+                task_key,
+                task_id,
+                seq,
+            } => Json::obj()
+                .set("type", "launch_now")
+                .set("task_key", task_key.as_str())
+                .set("task_id", task_id.0)
+                .set("seq", *seq),
+            SchedulerMsg::Hold {
+                task_key,
+                task_id,
+                seq,
+            } => Json::obj()
+                .set("type", "hold")
+                .set("task_key", task_key.as_str())
+                .set("task_id", task_id.0)
+                .set("seq", *seq),
+            SchedulerMsg::Error { message } => Json::obj()
+                .set("type", "error")
+                .set("message", message.as_str()),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<SchedulerMsg> {
+        let key = || -> Result<TaskKey> { Ok(TaskKey::new(v.req_str("task_key")?)) };
+        match v.req_str("type")? {
+            "registered" => Ok(SchedulerMsg::Registered {
+                task_key: key()?,
+                sharing_stage: v.req_bool("sharing_stage")?,
+            }),
+            "launch_now" => Ok(SchedulerMsg::LaunchNow {
+                task_key: key()?,
+                task_id: TaskId(v.req_u64("task_id")?),
+                seq: v.req_u64("seq")? as u32,
+            }),
+            "hold" => Ok(SchedulerMsg::Hold {
+                task_key: key()?,
+                task_id: TaskId(v.req_u64("task_id")?),
+                seq: v.req_u64("seq")? as u32,
+            }),
+            "error" => Ok(SchedulerMsg::Error {
+                message: v.req_str("message")?.to_string(),
+            }),
+            other => Err(Error::Protocol(format!(
+                "unknown scheduler msg type {other:?}"
+            ))),
+        }
+    }
+
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        Ok(frame(KIND_SCHED, &self.to_json().encode()))
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SchedulerMsg> {
+        let (kind, body) = unframe(buf)?;
+        if kind != KIND_SCHED {
+            return Err(Error::Protocol(format!(
+                "expected scheduler frame, got kind {kind}"
+            )));
+        }
+        SchedulerMsg::from_json(&body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_msg_round_trip() {
+        let msgs = vec![
+            ClientMsg::Register {
+                task_key: TaskKey::new("svc"),
+                priority: Priority::P3,
+                has_symbols: true,
+            },
+            ClientMsg::TaskStart {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(9),
+            },
+            ClientMsg::Launch {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(7),
+                kernel_name: "gemm<float, 128>".into(),
+                grid: Dim3::new(64, 2, 1),
+                block: Dim3::new(256, 1, 1),
+                seq: 12,
+                issued_at: SimTime(999),
+            },
+            ClientMsg::Completion {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(7),
+                seq: 12,
+                exec: Duration::from_micros(120),
+                finished_at: SimTime(1_999),
+            },
+            ClientMsg::TaskEnd {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(7),
+            },
+            ClientMsg::Disconnect {
+                task_key: TaskKey::new("svc"),
+            },
+        ];
+        for msg in msgs {
+            let enc = msg.encode().unwrap();
+            assert_eq!(enc[0], WIRE_VERSION);
+            let dec = ClientMsg::decode(&enc).unwrap();
+            assert_eq!(dec, msg);
+        }
+    }
+
+    #[test]
+    fn scheduler_msg_round_trip() {
+        let msgs = vec![
+            SchedulerMsg::Registered {
+                task_key: TaskKey::new("svc"),
+                sharing_stage: true,
+            },
+            SchedulerMsg::LaunchNow {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(1),
+                seq: 3,
+            },
+            SchedulerMsg::Hold {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(1),
+                seq: 3,
+            },
+            SchedulerMsg::Error {
+                message: "unknown task".into(),
+            },
+        ];
+        for msg in msgs {
+            let dec = SchedulerMsg::decode(&msg.encode().unwrap()).unwrap();
+            assert_eq!(dec, msg);
+        }
+    }
+
+    #[test]
+    fn kind_and_version_enforced() {
+        let msg = ClientMsg::Disconnect {
+            task_key: TaskKey::new("svc"),
+        };
+        let mut enc = msg.encode().unwrap();
+        // Wrong kind routing is rejected.
+        assert!(SchedulerMsg::decode(&enc).is_err());
+        // Version mismatch is rejected.
+        enc[0] = 99;
+        assert!(ClientMsg::decode(&enc).is_err());
+        // Truncated frames are rejected.
+        assert!(ClientMsg::decode(&[1]).is_err());
+        // Corrupt body is rejected.
+        assert!(ClientMsg::decode(&[WIRE_VERSION, 0x01, b'{']).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Datagram transports for the hook↔scheduler protocol.
+//!
+//! Two interchangeable implementations:
+//!
+//! * [`ChannelTransport`] — an in-process crossbeam channel pair.
+//!   Deterministic and allocation-cheap; used by tests and by the
+//!   real-time engine when client and scheduler share a process.
+//! * [`UdpTransport`] — real UDP sockets, the paper's deployment shape
+//!   (hook clients and the scheduler may sit on different machines).
+
+use crate::core::{Error, Result};
+use std::net::UdpSocket;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
+use std::time::Duration as StdDuration;
+
+/// A bidirectional datagram endpoint.
+pub trait Transport: Send {
+    /// Send one datagram to the peer.
+    fn send(&self, buf: &[u8]) -> Result<()>;
+    /// Receive one datagram, waiting up to `timeout`. `Ok(None)` on
+    /// timeout.
+    fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>>;
+}
+
+/// In-process channel transport. [`ChannelTransport::pair`] yields two
+/// connected endpoints. The receiver sits behind a mutex so the endpoint
+/// is `Sync` (std mpsc receivers are not).
+pub struct ChannelTransport {
+    tx: SyncSender<Vec<u8>>,
+    rx: Mutex<Receiver<Vec<u8>>>,
+}
+
+impl ChannelTransport {
+    /// Create a connected (client, server) endpoint pair.
+    pub fn pair() -> (ChannelTransport, ChannelTransport) {
+        let (a_tx, a_rx) = sync_channel(4096);
+        let (b_tx, b_rx) = sync_channel(4096);
+        (
+            ChannelTransport {
+                tx: a_tx,
+                rx: Mutex::new(b_rx),
+            },
+            ChannelTransport {
+                tx: b_tx,
+                rx: Mutex::new(a_rx),
+            },
+        )
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, buf: &[u8]) -> Result<()> {
+        self.tx
+            .send(buf.to_vec())
+            .map_err(|_| Error::Protocol("peer disconnected".into()))
+    }
+
+    fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>> {
+        let rx = self.rx.lock().expect("transport mutex poisoned");
+        match rx.recv_timeout(timeout) {
+            Ok(buf) => Ok(Some(buf)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Protocol("peer disconnected".into()))
+            }
+        }
+    }
+}
+
+/// Blocking UDP transport (client side; the scheduler daemon uses tokio,
+/// see [`crate::server`]).
+pub struct UdpTransport {
+    socket: UdpSocket,
+}
+
+impl UdpTransport {
+    /// Bind an ephemeral local port and connect to the scheduler address.
+    pub fn connect(scheduler_addr: &str) -> Result<UdpTransport> {
+        let socket = UdpSocket::bind("0.0.0.0:0")?;
+        socket.connect(scheduler_addr)?;
+        Ok(UdpTransport { socket })
+    }
+
+    /// Local address (tests).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.socket.local_addr()?)
+    }
+}
+
+impl Transport for UdpTransport {
+    fn send(&self, buf: &[u8]) -> Result<()> {
+        self.socket.send(buf)?;
+        Ok(())
+    }
+
+    fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>> {
+        self.socket.set_read_timeout(Some(timeout))?;
+        let mut buf = vec![0u8; 64 * 1024];
+        match self.socket.recv(&mut buf) {
+            Ok(n) => {
+                buf.truncate(n);
+                Ok(Some(buf))
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_pair_round_trip() {
+        let (client, server) = ChannelTransport::pair();
+        client.send(b"hello").unwrap();
+        let got = server.recv(StdDuration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(got, b"hello");
+        server.send(b"world").unwrap();
+        let got = client.recv(StdDuration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(got, b"world");
+    }
+
+    #[test]
+    fn channel_recv_times_out() {
+        let (client, _server) = ChannelTransport::pair();
+        let got = client.recv(StdDuration::from_millis(10)).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn udp_loopback_round_trip() {
+        let server = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let client = UdpTransport::connect(&addr.to_string()).unwrap();
+
+        client.send(b"ping").unwrap();
+        let mut buf = [0u8; 64];
+        let (n, from) = server.recv_from(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping");
+
+        server.send_to(b"pong", from).unwrap();
+        let got = client.recv(StdDuration::from_millis(200)).unwrap().unwrap();
+        assert_eq!(got, b"pong");
+    }
+}

@@ -1,0 +1,70 @@
+//! # FIKIT — Filling Inter-Kernel Idle Time
+//!
+//! A full-system reproduction of *"FIKIT: Priority-Based Real-time GPU
+//! Multi-tasking Scheduling with Kernel Identification"* (Wu, 2023) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The library provides:
+//!
+//! * [`core`] — shared vocabulary types ([`core::KernelId`],
+//!   [`core::TaskKey`], [`core::Priority`], virtual time).
+//! * [`profile`] — the paper's kernel-identification and offline
+//!   measurement pipeline: per-KernelID execution time (`SK`) and
+//!   post-kernel idle gap (`SG`) statistics.
+//! * [`simulator`] — a discrete-event GPU device simulator reproducing the
+//!   FIFO device queue, NVIDIA default time-slice sharing and exclusive
+//!   modes the paper baselines against.
+//! * [`workload`] — calibrated kernel-trace models of the twelve DNNs in
+//!   the paper's Table 1, plus service/invocation-pattern abstractions.
+//! * [`coordinator`] — the FIKIT scheduler itself: ten priority queues,
+//!   the `FIKIT` gap-filling procedure (Algorithm 1), `BestPrioFit`
+//!   (Algorithm 2), and the real-time feedback early-stop (Fig 12).
+//! * [`hook`] — the CUDA-hook-analogue interception layer and the
+//!   client↔scheduler wire protocol (in-proc and UDP transports).
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them as real kernels.
+//! * [`metrics`] — JCT statistics, speedups, coefficients of variation,
+//!   timelines.
+//! * [`experiments`] — one module per paper table/figure; the bench
+//!   harness regenerates the full evaluation section.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fikit::prelude::*;
+//!
+//! // Two services sharing one simulated GPU: a high-priority detector and
+//! // a low-priority segmenter.
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.services.push(ServiceConfig::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0).tasks(50));
+//! cfg.services.push(ServiceConfig::new(ModelKind::FcnResnet50, Priority::P2).tasks(50));
+//! cfg.mode = Mode::Fikit;
+//! let report = fikit::coordinator::driver::run_experiment(&cfg).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod experiments;
+pub mod hook;
+pub mod metrics;
+pub mod profile;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for the common public API surface.
+pub mod prelude {
+    pub use crate::config::{ExperimentConfig, HookConfig, ServiceConfig};
+    pub use crate::simulator::DeviceConfig;
+    pub use crate::coordinator::driver::{run_experiment, ExperimentReport};
+    pub use crate::coordinator::Mode;
+    pub use crate::core::{KernelId, Priority, SimTime, TaskKey};
+    pub use crate::metrics::JctStats;
+    pub use crate::profile::{ProfileStore, TaskProfile};
+    pub use crate::workload::{ModelKind, Service};
+}

@@ -1,0 +1,299 @@
+//! `fikit` — the command-line launcher.
+//!
+//! Subcommands:
+//!
+//! * `run`         — run a sharing experiment (inline flags or `--config`)
+//! * `experiment`  — regenerate one paper table/figure by id
+//! * `profile`     — measurement-stage a service and persist its profile
+//! * `serve`       — start the UDP scheduler daemon
+//! * `list-models` — print the calibrated model zoo
+//! * `verify-artifacts` — load + self-check every AOT artifact via PJRT
+
+use fikit::config::{ExperimentConfig, ServiceConfig};
+use fikit::coordinator::driver::{profile_service, run_experiment};
+use fikit::coordinator::Mode;
+use fikit::core::{Priority, Result};
+use fikit::experiments::{self, Options};
+use fikit::metrics::TextTable;
+use fikit::profile::ProfileStore;
+use fikit::server::{SchedulerServer, ServerConfig};
+use fikit::util::cli::Args;
+use fikit::workload::ModelKind;
+
+const USAGE: &str = "\
+fikit — FIKIT: priority-based real-time GPU multi-tasking scheduling
+        (full-system reproduction; see README.md)
+
+USAGE:
+  fikit run [--config exp.json] [--mode fikit|sharing|exclusive]
+            [--high MODEL] [--low MODEL] [--tasks N] [--seed S]
+  fikit experiment <id|all> [--scale F] [--seed S] [--json out.json]
+        ids: fig13 fig14 fig15 table2 fig16 fig18 fig19 fig21 ablation_feedback
+  fikit profile --model MODEL [--runs T] [--out profiles.json]
+  fikit serve [--bind ADDR] [--profiles profiles.json]
+  fikit cluster [--gpus N] [--policy bestmatch|leastloaded|roundrobin]
+                [--compat compat.json] [--measure-compat]
+  fikit list-models
+  fikit verify-artifacts [--dir artifacts]
+";
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.pos(0) {
+        Some("run") => cmd_run(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("profile") => cmd_profile(args),
+        Some("serve") => cmd_serve(args),
+        Some("cluster") => cmd_cluster(args),
+        Some("list-models") => cmd_list_models(),
+        Some("verify-artifacts") => cmd_verify_artifacts(args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = if let Some(path) = args.opt("config") {
+        ExperimentConfig::from_json_file(path)?
+    } else {
+        let mode: Mode = args.opt("mode").unwrap_or("fikit").parse()?;
+        let high: ModelKind = args
+            .opt("high")
+            .unwrap_or("keypointrcnn_resnet50_fpn")
+            .parse()?;
+        let low: ModelKind = args.opt("low").unwrap_or("fcn_resnet50").parse()?;
+        let tasks: u32 = args.opt_parse("tasks", 200u32)?;
+        let mut cfg = ExperimentConfig {
+            mode,
+            seed: args.opt_parse("seed", 0xF1C1u64)?,
+            ..ExperimentConfig::default()
+        };
+        cfg.services
+            .push(ServiceConfig::new(high, Priority::P0).tasks(tasks).with_key("high"));
+        cfg.services
+            .push(ServiceConfig::new(low, Priority::P3).tasks(tasks).with_key("low"));
+        cfg
+    };
+    let report = run_experiment(&cfg)?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.pos(1).unwrap_or("all").to_string();
+    let opts = Options {
+        scale: args.opt_parse("scale", 1.0f64)?,
+        seed: args.opt_parse("seed", 0xF1C1u64)?,
+    };
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    let mut failed = 0;
+    let mut exported = Vec::new();
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let result = experiments::run(id, opts)?;
+        println!("{}", result.render());
+        println!("  ({:.2}s)\n", t0.elapsed().as_secs_f64());
+        if !result.all_checks_pass() {
+            failed += 1;
+        }
+        exported.push(result);
+    }
+    if let Some(path) = args.opt("json") {
+        use fikit::util::json::Json;
+        let doc = Json::obj().set(
+            "experiments",
+            Json::Arr(
+                exported
+                    .iter()
+                    .map(|r| {
+                        let mut series = Json::obj();
+                        for (k, v) in &r.series {
+                            series = series.set(k, *v);
+                        }
+                        Json::obj()
+                            .set("id", r.id)
+                            .set("title", r.title)
+                            .set("passed", r.all_checks_pass())
+                            .set("series", series)
+                            .set(
+                                "checks",
+                                Json::Arr(
+                                    r.checks
+                                        .iter()
+                                        .map(|c| {
+                                            Json::obj()
+                                                .set("name", c.name.as_str())
+                                                .set("passed", c.passed)
+                                                .set("detail", c.detail.as_str())
+                                        })
+                                        .collect(),
+                                ),
+                            )
+                    })
+                    .collect(),
+            ),
+        );
+        std::fs::write(path, doc.encode_pretty())?;
+        println!("wrote machine-readable results -> {path}");
+    }
+    if failed > 0 {
+        return Err(fikit::core::Error::Invariant(format!(
+            "{failed} experiment(s) had failing shape checks"
+        )));
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let model: ModelKind = args
+        .opt("model")
+        .ok_or_else(|| fikit::core::Error::Parse("--model required".into()))?
+        .parse()?;
+    let runs: u32 = args.opt_parse("runs", 20u32)?;
+    let out = args.opt("out").unwrap_or("profiles.json");
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.measurement.runs = runs;
+    let svc = ServiceConfig::new(model, Priority::P0).tasks(runs);
+    cfg.services.push(svc.clone());
+    let result = profile_service(&cfg, &svc)?;
+    println!(
+        "profiled {model}: {} unique kernel ids over {} runs",
+        result.profile.num_unique(),
+        result.profile.runs
+    );
+
+    let mut store = if std::path::Path::new(out).exists() {
+        ProfileStore::load(out)?
+    } else {
+        ProfileStore::new()
+    };
+    store.insert(result.profile);
+    store.save(out)?;
+    println!("saved profile store -> {out} ({} services)", store.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let bind = args.opt("bind").unwrap_or("127.0.0.1:7700").to_string();
+    let profiles = match args.opt("profiles") {
+        Some(path) => ProfileStore::load(path)?,
+        None => ProfileStore::new(),
+    };
+    let cfg = ServerConfig {
+        bind,
+        ..Default::default()
+    };
+    let mut server = SchedulerServer::bind(cfg, profiles)?;
+    println!("fikit scheduler daemon listening on {}", server.local_addr()?);
+    server.run_for(None)
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use fikit::cluster::{run_cluster, ClusterConfig, CompatMatrix, PlacementPolicy, ServiceRequest};
+
+    let gpus: usize = args.opt_parse("gpus", 2usize)?;
+    let policy: PlacementPolicy = args.opt("policy").unwrap_or("bestmatch").parse()?;
+    let tasks: u32 = args.opt_parse("tasks", 30u32)?;
+
+    // Compatibility matrix: loaded, freshly measured, or predicted.
+    let models = [
+        ModelKind::KeypointRcnnResnet50Fpn,
+        ModelKind::FasterrcnnResnet50Fpn,
+        ModelKind::FcnResnet50,
+        ModelKind::Resnet101,
+        ModelKind::Vgg16,
+    ];
+    let compat = if let Some(path) = args.opt("compat") {
+        if std::path::Path::new(path).exists() {
+            CompatMatrix::load(path)?
+        } else if args.flag("measure-compat") {
+            let m = CompatMatrix::measure(&models, 10, 7)?;
+            m.save(path)?;
+            println!("measured {} pairs -> {path}", m.len());
+            m
+        } else {
+            CompatMatrix::new() // prediction fallback
+        }
+    } else if args.flag("measure-compat") {
+        CompatMatrix::measure(&models, 10, 7)?
+    } else {
+        CompatMatrix::new()
+    };
+
+    // A representative mixed-tenant fleet workload.
+    let mut cfg = ClusterConfig::new(gpus, policy);
+    cfg.requests = vec![
+        ServiceRequest::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, tasks),
+        ServiceRequest::new(ModelKind::FasterrcnnResnet50Fpn, Priority::P0, tasks),
+        ServiceRequest::new(ModelKind::FcnResnet50, Priority::P5, tasks),
+        ServiceRequest::new(ModelKind::Resnet101, Priority::P6, tasks),
+        ServiceRequest::new(ModelKind::Vgg16, Priority::P7, tasks),
+    ];
+    let report = run_cluster(&cfg, &compat)?;
+    println!("policy={policy:?} gpus={gpus}");
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_list_models() -> Result<()> {
+    let mut t = TextTable::new(&[
+        "model", "class", "kernels", "exec (ms)", "sync idle (ms)", "JCT (ms)", "gap share",
+        "stalls",
+    ]);
+    for kind in ModelKind::ALL {
+        let spec = kind.spec();
+        t.row(vec![
+            kind.name().to_string(),
+            format!("{:?}", kind.class()),
+            spec.kernel_count().to_string(),
+            format!("{:.2}", spec.mean_exec().as_millis_f64()),
+            format!("{:.2}", spec.mean_sync_gap().as_millis_f64()),
+            format!("{:.2}", spec.mean_jct().as_millis_f64()),
+            format!("{:.2}", spec.gap_share()),
+            spec.sync_points().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_verify_artifacts(args: &Args) -> Result<()> {
+    let dir = args.opt("dir").unwrap_or("artifacts");
+    let (manifest, rt) = fikit::runtime::executor::load_runtime(dir)?;
+    println!(
+        "loaded {} artifacts on platform {:?}",
+        manifest.artifacts.len(),
+        rt.platform()
+    );
+    let mut t = TextTable::new(&["artifact", "inputs", "outputs", "self-check rel err"]);
+    for spec in &manifest.artifacts {
+        let rel = rt.verify(&spec.name, 1e-3)?;
+        t.row(vec![
+            spec.name.clone(),
+            spec.inputs.len().to_string(),
+            spec.outputs.len().to_string(),
+            format!("{rel:.2e}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("all artifacts verified OK");
+    Ok(())
+}

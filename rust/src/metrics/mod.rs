@@ -1,0 +1,255 @@
+//! JCT statistics and report formatting.
+//!
+//! Every paper figure reduces to ratios of JCT statistics between modes;
+//! this module owns those reductions: mean/σ/CV (Table 3), percentiles,
+//! speedup ratios (Figs 16–20), and per-arrival timelines (Fig 21).
+
+use crate::core::{Duration, SimTime};
+
+/// Summary statistics over a set of job completion times.
+#[derive(Debug, Clone, Default)]
+pub struct JctStats {
+    pub count: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    /// Coefficient of variation σ/μ (Table 3's stability metric).
+    pub cv: f64,
+    pub min: Duration,
+    pub max: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    /// Σ of all JCTs.
+    pub total: Duration,
+}
+
+impl JctStats {
+    /// Compute from a set of durations. Empty input yields zeros.
+    pub fn from_durations(mut jcts: Vec<Duration>) -> JctStats {
+        if jcts.is_empty() {
+            return JctStats::default();
+        }
+        jcts.sort();
+        let n = jcts.len();
+        let total_ns: u128 = jcts.iter().map(|d| d.nanos() as u128).sum();
+        let mean = total_ns as f64 / n as f64;
+        let var = jcts
+            .iter()
+            .map(|d| {
+                let x = d.nanos() as f64 - mean;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        let std = var.sqrt();
+        // Nearest-rank percentile: idx = ceil(q·n) − 1.
+        let pct = |q: f64| -> Duration {
+            let idx = (q * n as f64).ceil() as usize;
+            jcts[idx.saturating_sub(1).min(n - 1)]
+        };
+        JctStats {
+            count: n,
+            mean: Duration::from_nanos(mean.round() as u64),
+            std: Duration::from_nanos(std.round() as u64),
+            cv: if mean > 0.0 { std / mean } else { 0.0 },
+            min: jcts[0],
+            max: jcts[n - 1],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            total: Duration::from_nanos(total_ns.min(u64::MAX as u128) as u64),
+        }
+    }
+
+    /// Mean JCT in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_millis_f64()
+    }
+}
+
+/// Ratio of two mean JCTs — `speedup(share, fikit) > 1` means FIKIT is
+/// faster (the paper's Figs 16/19 metric).
+pub fn speedup(baseline: &JctStats, candidate: &JctStats) -> f64 {
+    if candidate.mean.nanos() == 0 {
+        return 0.0;
+    }
+    baseline.mean.nanos() as f64 / candidate.mean.nanos() as f64
+}
+
+/// Percentage difference of `candidate` relative to `baseline`
+/// (the Fig 13/14/15 metric: `(cand - base) / base * 100`).
+pub fn pct_diff(baseline: &JctStats, candidate: &JctStats) -> f64 {
+    if baseline.mean.nanos() == 0 {
+        return 0.0;
+    }
+    (candidate.mean.nanos() as f64 - baseline.mean.nanos() as f64)
+        / baseline.mean.nanos() as f64
+        * 100.0
+}
+
+/// One point of a per-arrival JCT timeline (Fig 21).
+#[derive(Debug, Clone)]
+pub struct TimelinePoint {
+    pub arrival: SimTime,
+    pub jct: Duration,
+}
+
+/// A per-service JCT timeline with its stability statistics.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub points: Vec<TimelinePoint>,
+}
+
+impl Timeline {
+    pub fn new(mut points: Vec<TimelinePoint>) -> Timeline {
+        points.sort_by_key(|p| p.arrival);
+        Timeline { points }
+    }
+
+    pub fn stats(&self) -> JctStats {
+        JctStats::from_durations(self.points.iter().map(|p| p.jct).collect())
+    }
+
+    /// Render a compact sparkline of the JCT series (for CLI output).
+    pub fn sparkline(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let min = self.points.iter().map(|p| p.jct.nanos()).min().unwrap();
+        let max = self.points.iter().map(|p| p.jct.nanos()).max().unwrap();
+        let span = (max - min).max(1);
+        self.points
+            .iter()
+            .map(|p| {
+                let idx = ((p.jct.nanos() - min) * 7 / span) as usize;
+                BARS[idx.min(7)]
+            })
+            .collect()
+    }
+}
+
+/// Minimal fixed-width text table for experiment output.
+#[derive(Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> TextTable {
+        TextTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(cols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, w) in widths.iter().enumerate() {
+                let empty = String::new();
+                let c = cells.get(i).unwrap_or(&empty);
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = JctStats::from_durations(vec![ms(10), ms(20), ms(30), ms(40)]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean, ms(25));
+        assert_eq!(s.min, ms(10));
+        assert_eq!(s.max, ms(40));
+        assert_eq!(s.total, ms(100));
+        // σ of {10,20,30,40} (population) ≈ 11.18ms
+        assert!((s.std.as_millis_f64() - 11.1803).abs() < 0.01);
+        assert!((s.cv - 0.4472).abs() < 0.001);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = JctStats::from_durations(vec![]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, Duration::ZERO);
+        assert_eq!(s.cv, 0.0);
+    }
+
+    #[test]
+    fn speedup_and_pct_diff() {
+        let base = JctStats::from_durations(vec![ms(100)]);
+        let fast = JctStats::from_durations(vec![ms(25)]);
+        assert!((speedup(&base, &fast) - 4.0).abs() < 1e-9);
+        assert!((pct_diff(&base, &fast) + 75.0).abs() < 1e-9);
+        let slow = JctStats::from_durations(vec![ms(105)]);
+        assert!((pct_diff(&base, &slow) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let jcts: Vec<Duration> = (1..=100).map(ms).collect();
+        let s = JctStats::from_durations(jcts);
+        assert_eq!(s.p50, ms(50));
+        assert_eq!(s.p95, ms(95));
+        assert_eq!(s.p99, ms(99));
+    }
+
+    #[test]
+    fn timeline_sorted_and_sparkline() {
+        let t = Timeline::new(vec![
+            TimelinePoint { arrival: SimTime(2), jct: ms(20) },
+            TimelinePoint { arrival: SimTime(1), jct: ms(10) },
+            TimelinePoint { arrival: SimTime(3), jct: ms(40) },
+        ]);
+        assert_eq!(t.points[0].arrival, SimTime(1));
+        let spark = t.sparkline();
+        assert_eq!(spark.chars().count(), 3);
+        assert!(spark.starts_with('▁'));
+        assert!(spark.ends_with('█'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(&["model", "jct(ms)"]);
+        t.row(vec!["alexnet".into(), "1.4".into()]);
+        t.row(vec!["vgg16".into(), "5.8".into()]);
+        let out = t.render();
+        assert!(out.contains("| model   | jct(ms) |"));
+        assert!(out.lines().count() == 4);
+    }
+}

@@ -1,0 +1,24 @@
+//! Offline kernel measurement and profiling (paper §3.2).
+//!
+//! FIKIT's core enabler is moving kernel measurement *offline*: a new
+//! service first runs a bounded number of times in **measurement stage**
+//! (exclusive GPU, per-kernel timing events, 20–80 % JCT overhead), which
+//! produces per-[`KernelId`](crate::core::KernelId) statistics:
+//!
+//! * `SK_j` — mean execution time of kernels with ID `j` across `T` runs,
+//! * `SG_j` — mean device idle gap following kernels with ID `j`.
+//!
+//! These are keyed by the service's [`TaskKey`](crate::core::TaskKey) and
+//! persisted; all later invocations run in **sharing stage** where the
+//! scheduler predicts gaps from `SG` and kernel durations from `SK` with
+//! zero per-kernel measurement cost.
+
+mod measurement;
+mod statistics;
+mod store;
+mod symbols;
+
+pub use measurement::{MeasurementConfig, MeasurementRecorder};
+pub use statistics::{KernelStats, StatSummary, TaskProfile};
+pub use store::ProfileStore;
+pub use symbols::{SymbolResolver, SymbolTableModel};

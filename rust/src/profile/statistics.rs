@@ -1,0 +1,411 @@
+//! SK/SG statistics (paper §3.2, "Data acquisition and statistical
+//! output during the measurement phase").
+//!
+//! For each unique kernel ID `j` in the set `S_UID`:
+//!
+//! ```text
+//! SK_j = Σ_t Σ_i K_{ID_{t,i}} · δ(ID_{t,i}, j)  /  Σ_t Σ_i δ(ID_{t,i}, j)
+//! SG_j = Σ_t Σ_i G_{ID_{t,i}} · δ(ID_{t,i}, j)  /  Σ_t Σ_i δ(ID_{t,i}, j)
+//! ```
+//!
+//! i.e. plain Kronecker-delta means over every occurrence of the ID,
+//! within and across the `T` measured runs. We additionally keep min/max
+//! and variance (Welford) — the scheduler only consumes the means, but the
+//! extra moments power the stability analyses (Table 3) and tests.
+
+use crate::core::{Duration, KernelId, TaskKey};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Running summary of a stream of durations (count, mean, M2, min, max).
+/// Uses Welford's online algorithm: numerically stable, single pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatSummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    m2: f64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Default for StatSummary {
+    fn default() -> StatSummary {
+        StatSummary::new()
+    }
+}
+
+impl StatSummary {
+    pub fn new() -> StatSummary {
+        StatSummary {
+            count: 0,
+            mean_ns: 0.0,
+            m2: 0.0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, d: Duration) {
+        let x = d.nanos() as f64;
+        self.count += 1;
+        let delta = x - self.mean_ns;
+        self.mean_ns += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean_ns);
+        self.min_ns = self.min_ns.min(d.nanos());
+        self.max_ns = self.max_ns.max(d.nanos());
+    }
+
+    /// Mean as a [`Duration`] (rounded to ns). Zero if empty.
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.mean_ns.round().max(0.0) as u64)
+        }
+    }
+
+    /// Population variance in ns². Zero if fewer than 2 samples.
+    pub fn variance(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            self.m2 / self.count as f64
+        }
+    }
+
+    /// Population standard deviation in ns.
+    pub fn stddev_ns(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation (σ/μ). Zero for an empty/degenerate stream.
+    pub fn cv(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            self.stddev_ns() / self.mean_ns
+        }
+    }
+
+    /// Serialize to JSON (persistence format of the profile store).
+    /// An empty summary serializes as `{count: 0}` (its sentinel
+    /// `min_ns = u64::MAX` is not representable as a JSON int).
+    pub fn to_json(&self) -> Json {
+        if self.count == 0 {
+            return Json::obj().set("count", 0u64);
+        }
+        Json::obj()
+            .set("count", self.count)
+            .set("mean_ns", self.mean_ns)
+            .set("m2", self.m2)
+            .set("min_ns", self.min_ns)
+            .set("max_ns", self.max_ns)
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(v: &Json) -> crate::core::Result<StatSummary> {
+        if v.req_u64("count")? == 0 {
+            return Ok(StatSummary::new());
+        }
+        Ok(StatSummary {
+            count: v.req_u64("count")?,
+            mean_ns: v.req_f64("mean_ns")?,
+            m2: v.req_f64("m2")?,
+            min_ns: v.req_u64("min_ns")?,
+            max_ns: v.req_u64("max_ns")?,
+        })
+    }
+
+    /// Merge another summary into this one (parallel-merge form of
+    /// Welford; used when combining per-run partials).
+    pub fn merge(&mut self, other: &StatSummary) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let delta = other.mean_ns - self.mean_ns;
+        let total = n1 + n2;
+        self.mean_ns += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.count += other.count;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Execution-time and following-gap statistics for one kernel ID.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KernelStats {
+    /// `SK_j` accumulator — device execution time.
+    pub exec: StatSummary,
+    /// `SG_j` accumulator — device idle gap *after* this kernel.
+    pub gap: StatSummary,
+}
+
+/// The profiled result of one service: `TaskKey = (SK, SG)` in the
+/// paper's notation, i.e. per-unique-kernel-ID statistics gathered over
+/// `T` measurement runs.
+#[derive(Debug, Clone)]
+pub struct TaskProfile {
+    pub task_key: TaskKey,
+    /// Number of measured runs `T` that produced this profile.
+    pub runs: u32,
+    /// Per-kernel-ID statistics, keyed by canonical kernel-id string for
+    /// stable JSON serialization.
+    stats: HashMap<String, KernelStats>,
+    /// Mean number of kernels per run (used for sanity checks / metrics).
+    pub mean_kernels_per_run: f64,
+}
+
+impl TaskProfile {
+    pub fn new(task_key: TaskKey) -> TaskProfile {
+        TaskProfile {
+            task_key,
+            runs: 0,
+            stats: HashMap::new(),
+            mean_kernels_per_run: 0.0,
+        }
+    }
+
+    /// Record one kernel occurrence: its execution time and, if it was
+    /// followed by another kernel in the same run, the idle gap after it.
+    pub fn record(&mut self, kernel: &KernelId, exec: Duration, gap_after: Option<Duration>) {
+        let entry = self.stats.entry(kernel.canonical()).or_default();
+        entry.exec.record(exec);
+        if let Some(g) = gap_after {
+            entry.gap.record(g);
+        }
+    }
+
+    /// Mark one full measured run complete (`t`-th of `T`), with the
+    /// number of kernels it contained.
+    pub fn finish_run(&mut self, kernels_in_run: usize) {
+        let n = self.runs as f64;
+        self.mean_kernels_per_run =
+            (self.mean_kernels_per_run * n + kernels_in_run as f64) / (n + 1.0);
+        self.runs += 1;
+    }
+
+    /// The set of unique kernel IDs, `S_UID`.
+    pub fn unique_ids(&self) -> impl Iterator<Item = KernelId> + '_ {
+        self.stats.keys().filter_map(|k| KernelId::from_canonical(k))
+    }
+
+    /// Number of unique kernel IDs, `|S_UID|`.
+    pub fn num_unique(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// `SK_j`: predicted execution time for kernel `j`. `None` if the
+    /// kernel was never observed during measurement.
+    pub fn sk(&self, kernel: &KernelId) -> Option<Duration> {
+        self.stats.get(&kernel.canonical()).map(|s| s.exec.mean())
+    }
+
+    /// `SG_j`: predicted idle gap after kernel `j`.
+    pub fn sg(&self, kernel: &KernelId) -> Option<Duration> {
+        self.stats
+            .get(&kernel.canonical())
+            .filter(|s| s.gap.count > 0)
+            .map(|s| s.gap.mean())
+    }
+
+    /// Full statistics for a kernel id.
+    pub fn stats_for(&self, kernel: &KernelId) -> Option<&KernelStats> {
+        self.stats.get(&kernel.canonical())
+    }
+
+    /// Whether this profile has enough runs to be used for sharing-stage
+    /// scheduling. The paper uses `T ∈ [10, 1000]`.
+    pub fn is_ready(&self, min_runs: u32) -> bool {
+        self.runs >= min_runs && !self.stats.is_empty()
+    }
+
+    // ----- JSON persistence (see profile/store.rs) -----
+
+    /// Serialize to a JSON value.
+    pub fn to_json(&self) -> Json {
+        let mut stats = Json::obj();
+        let mut entries: Vec<(&String, &KernelStats)> = self.stats.iter().collect();
+        entries.sort_by_key(|(k, _)| k.as_str());
+        for (k, v) in entries {
+            stats = stats.set(
+                k,
+                Json::obj()
+                    .set("exec", v.exec.to_json())
+                    .set("gap", v.gap.to_json()),
+            );
+        }
+        Json::obj()
+            .set("task_key", self.task_key.as_str())
+            .set("runs", self.runs)
+            .set("mean_kernels_per_run", self.mean_kernels_per_run)
+            .set("stats", stats)
+    }
+
+    /// Parse from a JSON value.
+    pub fn from_json(v: &Json) -> crate::core::Result<TaskProfile> {
+        let mut stats = HashMap::new();
+        if let Some(obj) = v.require("stats")?.as_obj() {
+            for (k, entry) in obj {
+                stats.insert(
+                    k.clone(),
+                    KernelStats {
+                        exec: StatSummary::from_json(entry.require("exec")?)?,
+                        gap: StatSummary::from_json(entry.require("gap")?)?,
+                    },
+                );
+            }
+        }
+        Ok(TaskProfile {
+            task_key: TaskKey::new(v.req_str("task_key")?),
+            runs: v.req_u64("runs")? as u32,
+            stats,
+            mean_kernels_per_run: v.req_f64("mean_kernels_per_run")?,
+        })
+    }
+
+    /// Merge another profile for the same task key (e.g. partials from
+    /// parallel measurement shards).
+    pub fn merge(&mut self, other: &TaskProfile) {
+        debug_assert_eq!(self.task_key, other.task_key);
+        let n1 = self.runs as f64;
+        let n2 = other.runs as f64;
+        if n1 + n2 > 0.0 {
+            self.mean_kernels_per_run = (self.mean_kernels_per_run * n1
+                + other.mean_kernels_per_run * n2)
+                / (n1 + n2);
+        }
+        self.runs += other.runs;
+        for (k, v) in &other.stats {
+            let e = self.stats.entry(k.clone()).or_default();
+            e.exec.merge(&v.exec);
+            e.gap.merge(&v.gap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dim3;
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(4), Dim3::x(128))
+    }
+
+    #[test]
+    fn stat_summary_mean_var() {
+        let mut s = StatSummary::new();
+        for v in [2u64, 4, 4, 4, 5, 5, 7, 9] {
+            s.record(Duration::from_nanos(v));
+        }
+        assert_eq!(s.count, 8);
+        assert!((s.mean_ns - 5.0).abs() < 1e-9);
+        assert!((s.variance() - 4.0).abs() < 1e-9);
+        assert!((s.stddev_ns() - 2.0).abs() < 1e-9);
+        assert_eq!(s.min_ns, 2);
+        assert_eq!(s.max_ns, 9);
+        assert!((s.cv() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stat_summary_merge_equals_sequential() {
+        let vals = [10u64, 20, 30, 40, 50, 60, 70];
+        let mut all = StatSummary::new();
+        for v in vals {
+            all.record(Duration::from_nanos(v));
+        }
+        let mut a = StatSummary::new();
+        let mut b = StatSummary::new();
+        for v in &vals[..3] {
+            a.record(Duration::from_nanos(*v));
+        }
+        for v in &vals[3..] {
+            b.record(Duration::from_nanos(*v));
+        }
+        a.merge(&b);
+        assert_eq!(a.count, all.count);
+        assert!((a.mean_ns - all.mean_ns).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-6);
+    }
+
+    /// Reproduces the paper's worked example: a task measured T=2 times,
+    /// kernel id `j` occurring twice per run; SK_j is the mean of the four
+    /// occurrences.
+    #[test]
+    fn sk_is_kronecker_delta_mean_across_runs() {
+        let mut p = TaskProfile::new(TaskKey::new("svc"));
+        let j = kid("j");
+        let other = kid("other");
+        // Run 1: j at positions 1 and 5.
+        p.record(&j, Duration::from_micros(100), Some(Duration::from_micros(10)));
+        p.record(&other, Duration::from_micros(7), Some(Duration::from_micros(1)));
+        p.record(&j, Duration::from_micros(200), Some(Duration::from_micros(20)));
+        p.finish_run(3);
+        // Run 2: j at positions 2 and 6.
+        p.record(&j, Duration::from_micros(300), Some(Duration::from_micros(30)));
+        p.record(&j, Duration::from_micros(400), None); // last kernel: no gap after
+        p.finish_run(2);
+
+        assert_eq!(p.runs, 2);
+        assert_eq!(p.num_unique(), 2);
+        assert_eq!(p.sk(&j).unwrap(), Duration::from_micros(250));
+        // Gap mean over the three observed gaps (last kernel has none).
+        assert_eq!(p.sg(&j).unwrap(), Duration::from_micros(20));
+        assert_eq!(p.sk(&kid("missing")), None);
+        assert!((p.mean_kernels_per_run - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sg_none_when_gap_never_observed() {
+        let mut p = TaskProfile::new(TaskKey::new("svc"));
+        let j = kid("tail");
+        p.record(&j, Duration::from_micros(5), None);
+        p.finish_run(1);
+        assert!(p.sk(&j).is_some());
+        assert_eq!(p.sg(&j), None);
+    }
+
+    #[test]
+    fn readiness_threshold() {
+        let mut p = TaskProfile::new(TaskKey::new("svc"));
+        assert!(!p.is_ready(1));
+        p.record(&kid("k"), Duration::from_micros(5), None);
+        p.finish_run(1);
+        assert!(p.is_ready(1));
+        assert!(!p.is_ready(10));
+    }
+
+    #[test]
+    fn profile_merge() {
+        let j = kid("j");
+        let mut a = TaskProfile::new(TaskKey::new("svc"));
+        a.record(&j, Duration::from_micros(10), Some(Duration::from_micros(2)));
+        a.finish_run(1);
+        let mut b = TaskProfile::new(TaskKey::new("svc"));
+        b.record(&j, Duration::from_micros(30), Some(Duration::from_micros(4)));
+        b.finish_run(1);
+        a.merge(&b);
+        assert_eq!(a.runs, 2);
+        assert_eq!(a.sk(&j).unwrap(), Duration::from_micros(20));
+        assert_eq!(a.sg(&j).unwrap(), Duration::from_micros(3));
+    }
+
+    #[test]
+    fn unique_ids_round_trip() {
+        let mut p = TaskProfile::new(TaskKey::new("svc"));
+        p.record(&kid("a"), Duration::from_micros(1), None);
+        p.record(&kid("b"), Duration::from_micros(1), None);
+        p.finish_run(2);
+        let mut names: Vec<String> = p.unique_ids().map(|k| k.name.to_string()).collect();
+        names.sort();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Persistent profile store: `TaskKey → TaskProfile`, the paper's
+//! "profiled data ... loaded into memory" that the FIKIT scheduler
+//! consults at sharing time. JSON on disk, hash map in memory.
+
+use super::statistics::TaskProfile;
+use crate::core::{Error, Result, TaskKey};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::Path;
+
+const STORE_VERSION: u64 = 1;
+
+/// In-memory registry of measured task profiles.
+#[derive(Debug, Default)]
+pub struct ProfileStore {
+    profiles: HashMap<TaskKey, TaskProfile>,
+}
+
+impl ProfileStore {
+    pub fn new() -> ProfileStore {
+        ProfileStore::default()
+    }
+
+    /// Insert (or replace) a profile. Returns the previous profile for
+    /// the same key, if any.
+    pub fn insert(&mut self, profile: TaskProfile) -> Option<TaskProfile> {
+        self.profiles.insert(profile.task_key.clone(), profile)
+    }
+
+    /// Look up the profile for a service.
+    pub fn get(&self, key: &TaskKey) -> Option<&TaskProfile> {
+        self.profiles.get(key)
+    }
+
+    /// Look up, returning a typed error on miss (the scheduler treats a
+    /// miss as "task must enter measurement stage").
+    pub fn require(&self, key: &TaskKey) -> Result<&TaskProfile> {
+        self.get(key)
+            .ok_or_else(|| Error::MissingProfile(key.to_string()))
+    }
+
+    /// Whether a service already has a ready profile (≥ `min_runs`).
+    pub fn has_ready(&self, key: &TaskKey, min_runs: u32) -> bool {
+        self.get(key).is_some_and(|p| p.is_ready(min_runs))
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &TaskKey> {
+        self.profiles.keys()
+    }
+
+    pub fn remove(&mut self, key: &TaskKey) -> Option<TaskProfile> {
+        self.profiles.remove(key)
+    }
+
+    /// Serialize every profile to a JSON file (atomic: write + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut profiles: Vec<&TaskProfile> = self.profiles.values().collect();
+        profiles.sort_by(|a, b| a.task_key.cmp(&b.task_key));
+        let doc = Json::obj()
+            .set("version", STORE_VERSION)
+            .set(
+                "profiles",
+                Json::Arr(profiles.iter().map(|p| p.to_json()).collect()),
+            );
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, doc.encode_pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a store previously written by [`ProfileStore::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<ProfileStore> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let doc = Json::parse(&text)?;
+        let version = doc.req_u64("version")?;
+        if version != STORE_VERSION {
+            return Err(Error::Config(format!(
+                "profile store version {version} unsupported (expected {STORE_VERSION})"
+            )));
+        }
+        let mut store = ProfileStore::new();
+        for p in doc.req_arr("profiles")? {
+            store.insert(TaskProfile::from_json(p)?);
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, Duration, KernelId};
+
+    fn profile(key: &str, runs: u32) -> TaskProfile {
+        let mut p = TaskProfile::new(TaskKey::new(key));
+        for _ in 0..runs {
+            p.record(
+                &KernelId::new("k", Dim3::x(2), Dim3::x(64)),
+                Duration::from_micros(120),
+                Some(Duration::from_micros(30)),
+            );
+            p.finish_run(1);
+        }
+        p
+    }
+
+    #[test]
+    fn insert_get_require() {
+        let mut s = ProfileStore::new();
+        assert!(s.is_empty());
+        s.insert(profile("svcA", 5));
+        assert_eq!(s.len(), 1);
+        assert!(s.get(&TaskKey::new("svcA")).is_some());
+        assert!(s.require(&TaskKey::new("svcB")).is_err());
+        assert!(s.has_ready(&TaskKey::new("svcA"), 5));
+        assert!(!s.has_ready(&TaskKey::new("svcA"), 6));
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("fikit-store-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = temp_dir("rt");
+        let path = dir.join("profiles.json");
+        let mut s = ProfileStore::new();
+        s.insert(profile("svcA", 3));
+        s.insert(profile("svcB", 7));
+        s.save(&path).unwrap();
+
+        let loaded = ProfileStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        let a = loaded.get(&TaskKey::new("svcA")).unwrap();
+        assert_eq!(a.runs, 3);
+        let k = KernelId::new("k", Dim3::x(2), Dim3::x(64));
+        assert_eq!(a.sk(&k).unwrap(), Duration::from_micros(120));
+        assert_eq!(a.sg(&k).unwrap(), Duration::from_micros(30));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let dir = temp_dir("ver");
+        let path = dir.join("profiles.json");
+        std::fs::write(&path, r#"{"version": 99, "profiles": []}"#).unwrap();
+        assert!(ProfileStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replace_returns_previous() {
+        let mut s = ProfileStore::new();
+        assert!(s.insert(profile("svcA", 1)).is_none());
+        let prev = s.insert(profile("svcA", 9)).unwrap();
+        assert_eq!(prev.runs, 1);
+        assert_eq!(s.get(&TaskKey::new("svcA")).unwrap().runs, 9);
+        assert!(s.remove(&TaskKey::new("svcA")).is_some());
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,433 @@
+//! Real-time FIKIT serving over real compute (the e2e example's core).
+//!
+//! This engine proves all three layers compose: hosted services issue
+//! inference requests whose kernels are **PJRT executions of the
+//! AOT-compiled JAX/Pallas artifacts**, and the FIKIT scheduler — the
+//! *same* priority queues, BestPrioFit and fill-window logic as the
+//! simulator — decides execution order in wall-clock time.
+//!
+//! Topology (mirrors the paper's deployment):
+//!
+//! * one **service thread** per hosted service = the paper's hooked
+//!   client process: per request it sends each kernel launch to the
+//!   engine and blocks until released/completed, sleeping its think-time
+//!   gaps in between (CPU post-processing);
+//! * one **engine thread** = scheduler + GPU: routes launches (holder →
+//!   run now; lower priority → queue), opens a fill window after each
+//!   holder kernel using profiled gaps, fills with BestPrioFit, and
+//!   early-stops the moment the holder's next launch arrives (feedback).
+//!
+//! Execution is synchronous on the engine thread — the single CPU PJRT
+//! stream is the FIFO device queue.
+
+use super::executor::PjrtRuntime;
+use super::manifest::{test_input, Manifest};
+use crate::coordinator::best_prio_fit::best_prio_fit;
+use crate::coordinator::fikit::FillWindow;
+use crate::coordinator::queues::PriorityQueues;
+use crate::coordinator::Mode;
+use crate::core::{
+    Dim3, Duration, Error, KernelId, KernelLaunch, Priority, Result, SimTime, TaskId, TaskKey,
+};
+use crate::metrics::JctStats;
+use crate::profile::{ProfileStore, TaskProfile};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration as StdDuration, Instant};
+
+/// One kernel step of a real-time service: an artifact execution plus
+/// the CPU think-time gap after it.
+#[derive(Debug, Clone)]
+pub struct RtKernelStep {
+    /// Artifact name (must exist in the manifest).
+    pub artifact: String,
+    /// CPU-side post-processing time after this kernel completes.
+    pub think_gap: StdDuration,
+}
+
+/// A hosted real-time service.
+#[derive(Debug, Clone)]
+pub struct RtService {
+    pub key: TaskKey,
+    pub priority: Priority,
+    /// Kernel sequence of one request.
+    pub steps: Vec<RtKernelStep>,
+    /// Number of requests to serve.
+    pub requests: u32,
+    /// Pause between requests (ZERO = back-to-back).
+    pub inter_request: StdDuration,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Fikit (priority + gap filling) or Sharing (FIFO arrival order).
+    pub mode: Mode,
+    /// Profiling runs per service before serving.
+    pub profile_runs: u32,
+    /// Small-gap threshold ε.
+    pub epsilon: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            mode: Mode::Fikit,
+            profile_runs: 3,
+            epsilon: crate::coordinator::fikit::DEFAULT_EPSILON,
+        }
+    }
+}
+
+/// Per-service serving results.
+#[derive(Debug)]
+pub struct RtServiceReport {
+    pub key: TaskKey,
+    pub priority: Priority,
+    pub jct: JctStats,
+    pub completed: u32,
+}
+
+/// Full engine run results.
+#[derive(Debug)]
+pub struct EngineReport {
+    pub mode: Mode,
+    pub services: Vec<RtServiceReport>,
+    pub fills: u64,
+    pub windows: u64,
+    pub early_stops: u64,
+    pub kernels_executed: u64,
+    pub wall: StdDuration,
+}
+
+impl EngineReport {
+    pub fn service(&self, key: &TaskKey) -> Option<&RtServiceReport> {
+        self.services.iter().find(|s| &s.key == key)
+    }
+}
+
+// ---- wire messages between service threads and the engine thread ----
+
+enum RtMsg {
+    Launch {
+        svc: usize,
+        seq: u32,
+        step: usize,
+    },
+    RequestStart {
+        svc: usize,
+    },
+    RequestEnd {
+        svc: usize,
+    },
+    ServiceDone,
+}
+
+/// The real-time engine.
+pub struct RealTimeEngine {
+    cfg: EngineConfig,
+    services: Vec<RtService>,
+    runtime: PjrtRuntime,
+    /// Pre-generated deterministic inputs per artifact.
+    inputs: HashMap<String, Vec<Vec<f32>>>,
+    /// Kernel ids per (svc, step).
+    kernel_ids: Vec<Vec<KernelId>>,
+}
+
+impl RealTimeEngine {
+    /// Build an engine: loads + compiles every artifact referenced by the
+    /// services.
+    pub fn new(
+        cfg: EngineConfig,
+        services: Vec<RtService>,
+        manifest: &Manifest,
+    ) -> Result<RealTimeEngine> {
+        let mut runtime = PjrtRuntime::cpu()?;
+        let mut inputs = HashMap::new();
+        for svc in &services {
+            for step in &svc.steps {
+                let art = runtime.load(manifest, &step.artifact)?;
+                if !inputs.contains_key(&step.artifact) {
+                    let vals: Vec<Vec<f32>> = art
+                        .spec
+                        .inputs
+                        .iter()
+                        .enumerate()
+                        .map(|(ai, spec)| test_input(spec, ai, art.spec.check.seed))
+                        .collect();
+                    inputs.insert(step.artifact.clone(), vals);
+                }
+            }
+        }
+        let kernel_ids = services
+            .iter()
+            .map(|svc| {
+                svc.steps
+                    .iter()
+                    .map(|s| KernelId::new(s.artifact.as_str(), Dim3::x(1), Dim3::x(256)))
+                    .collect()
+            })
+            .collect();
+        Ok(RealTimeEngine {
+            cfg,
+            services,
+            runtime,
+            inputs,
+            kernel_ids,
+        })
+    }
+
+    fn execute(&self, artifact: &str) -> Result<StdDuration> {
+        let t0 = Instant::now();
+        self.runtime.execute_f32(artifact, &self.inputs[artifact])?;
+        Ok(t0.elapsed())
+    }
+
+    /// Measurement stage: run each service's kernel sequence solo,
+    /// recording per-kernel execution times and the configured think
+    /// gaps — the real-time analogue of the paper's profiling phase.
+    pub fn profile(&self) -> Result<ProfileStore> {
+        let mut store = ProfileStore::new();
+        for (si, svc) in self.services.iter().enumerate() {
+            let mut profile = TaskProfile::new(svc.key.clone());
+            for _ in 0..self.cfg.profile_runs.max(1) {
+                for (step_idx, step) in svc.steps.iter().enumerate() {
+                    let exec = self.execute(&step.artifact)?;
+                    let gap = (step_idx + 1 < svc.steps.len())
+                        .then(|| Duration::from_nanos(step.think_gap.as_nanos() as u64));
+                    profile.record(
+                        &self.kernel_ids[si][step_idx],
+                        Duration::from_nanos(exec.as_nanos() as u64),
+                        gap,
+                    );
+                }
+                profile.finish_run(svc.steps.len());
+            }
+            store.insert(profile);
+        }
+        Ok(store)
+    }
+
+    /// Run the serving phase: spawn service threads, schedule + execute
+    /// on this thread until all services finish.
+    pub fn serve(self, profiles: &ProfileStore) -> Result<EngineReport> {
+        let t_start = Instant::now();
+        let epoch = Instant::now();
+        let now_sim = |at: Instant| SimTime(at.duration_since(epoch).as_nanos() as u64);
+
+        let (tx, rx): (Sender<RtMsg>, Receiver<RtMsg>) = channel();
+        // Per-service release channels (engine → service).
+        let mut release_txs = Vec::new();
+        let mut handles = Vec::new();
+        for (si, svc) in self.services.iter().cloned().enumerate() {
+            let (rel_tx, rel_rx) = channel::<()>();
+            release_txs.push(rel_tx);
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                service_thread(si, svc, tx, rel_rx)
+            }));
+        }
+        drop(tx);
+
+        // ---- engine scheduling state ----
+        let mut queues = PriorityQueues::new();
+        let mut active: HashMap<usize, Priority> = HashMap::new();
+        let mut window: Option<FillWindow> = None;
+        let mut fills = 0u64;
+        let mut windows = 0u64;
+        let mut early_stops = 0u64;
+        let mut kernels = 0u64;
+        let mut done = 0usize;
+        // Map queued launches back to (svc, step) via task_id/seq encoding.
+        let svc_of_key: HashMap<TaskKey, usize> = self
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.key.clone(), i))
+            .collect();
+
+        let holder = |active: &HashMap<usize, Priority>| -> Option<(usize, Priority)> {
+            active
+                .iter()
+                .min_by_key(|(svc, p)| (**p, **svc))
+                .map(|(s, p)| (*s, *p))
+        };
+
+        while done < self.services.len() {
+            // Serve pending fills while a window is open.
+            if self.cfg.mode == Mode::Fikit {
+                while let Some(w) = window.as_mut() {
+                    let now = now_sim(Instant::now());
+                    let remaining = w.remaining(now);
+                    if remaining.is_zero() {
+                        window = None;
+                        break;
+                    }
+                    let Some(fit) = best_prio_fit(&mut queues, remaining, profiles) else {
+                        break;
+                    };
+                    w.budget = w.budget.saturating_sub(fit.predicted);
+                    let svc = svc_of_key[&fit.launch.task_key];
+                    let step = fit.launch.seq as usize;
+                    self.execute(&self.services[svc].steps[step].artifact)?;
+                    kernels += 1;
+                    fills += 1;
+                    release_txs[svc].send(()).ok();
+                }
+            }
+
+            // Liveness: any queued kernel not blocked by a strictly
+            // higher-priority active task runs now (covers holder
+            // changes, holder completion, and end-of-stream drains).
+            loop {
+                let Some(p) = queues.highest_nonempty() else { break };
+                let blocked = active.values().any(|ap| ap.is_higher_than(p));
+                if blocked {
+                    break;
+                }
+                let req = queues.pop_front_at(p).expect("nonempty");
+                let s = svc_of_key[&req.launch.task_key];
+                let step = req.launch.seq as usize;
+                self.execute(&self.services[s].steps[step].artifact)?;
+                kernels += 1;
+                release_txs[s].send(()).ok();
+            }
+
+            // Wait for the next client message.
+            let msg = match rx.recv_timeout(StdDuration::from_millis(20)) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            };
+            match msg {
+                RtMsg::RequestStart { svc } => {
+                    active.insert(svc, self.services[svc].priority);
+                }
+                RtMsg::RequestEnd { svc } => {
+                    active.remove(&svc);
+                    window = None;
+                }
+                RtMsg::ServiceDone => {
+                    done += 1;
+                }
+                RtMsg::Launch {
+                    svc, seq, step, ..
+                } => {
+                    let (hsvc, hprio) = holder(&active).unwrap_or((svc, self.services[svc].priority));
+                    let my_prio = self.services[svc].priority;
+                    let is_holder_class =
+                        self.cfg.mode != Mode::Fikit || svc == hsvc || my_prio == hprio;
+                    if is_holder_class {
+                        // Feedback: the holder's next launch ends the gap.
+                        if window.take().is_some() {
+                            early_stops += 1;
+                        }
+                        self.execute(&self.services[svc].steps[step].artifact)?;
+                        kernels += 1;
+                        release_txs[svc].send(()).ok();
+                        // Open a fill window for the profiled think gap.
+                        if self.cfg.mode == Mode::Fikit {
+                            let kid = &self.kernel_ids[svc][step];
+                            let gap = profiles
+                                .get(&self.services[svc].key)
+                                .and_then(|p| p.sg(kid));
+                            if let Some(g) = gap {
+                                let now = now_sim(Instant::now());
+                                window = FillWindow::open(
+                                    self.services[svc].key.clone(),
+                                    now,
+                                    g,
+                                    self.cfg.epsilon,
+                                );
+                                if window.is_some() {
+                                    windows += 1;
+                                }
+                            }
+                        }
+                    } else {
+                        // Lower priority: park in the message queues.
+                        let launch = KernelLaunch {
+                            task_key: self.services[svc].key.clone(),
+                            task_id: TaskId(seq as u64),
+                            kernel: self.kernel_ids[svc][step].clone(),
+                            priority: my_prio,
+                            seq: step as u32,
+                            true_duration: Duration::ZERO,
+                            issued_at: now_sim(Instant::now()),
+                        };
+                        let predicted = profiles
+                            .get(&self.services[svc].key)
+                            .and_then(|p| p.sk(&launch.kernel));
+                        queues.push_predicted(launch, predicted, now_sim(Instant::now()));
+                    }
+                }
+            }
+        }
+
+        // Collect service results.
+        let mut reports = Vec::new();
+        for (handle, svc) in handles.into_iter().zip(&self.services) {
+            let jcts = handle
+                .join()
+                .map_err(|_| Error::Runtime("service thread panicked".into()))?;
+            reports.push(RtServiceReport {
+                key: svc.key.clone(),
+                priority: svc.priority,
+                completed: jcts.len() as u32,
+                jct: JctStats::from_durations(jcts),
+            });
+        }
+        Ok(EngineReport {
+            mode: self.cfg.mode,
+            services: reports,
+            fills,
+            windows,
+            early_stops,
+            kernels_executed: kernels,
+            wall: t_start.elapsed(),
+        })
+    }
+}
+
+/// The hooked client process: issues launches, blocks on releases,
+/// sleeps think gaps, measures per-request JCT.
+fn service_thread(
+    si: usize,
+    svc: RtService,
+    tx: Sender<RtMsg>,
+    releases: Receiver<()>,
+) -> Vec<Duration> {
+    let mut jcts = Vec::with_capacity(svc.requests as usize);
+    for req in 0..svc.requests {
+        let t0 = Instant::now();
+        if tx.send(RtMsg::RequestStart { svc: si }).is_err() {
+            break;
+        }
+        for (step_idx, step) in svc.steps.iter().enumerate() {
+            if tx
+                .send(RtMsg::Launch {
+                    svc: si,
+                    seq: req,
+                    step: step_idx,
+                })
+                .is_err()
+            {
+                return jcts;
+            }
+            // Block until the engine has executed the kernel.
+            if releases.recv().is_err() {
+                return jcts;
+            }
+            if step.think_gap > StdDuration::ZERO && step_idx + 1 < svc.steps.len() {
+                std::thread::sleep(step.think_gap);
+            }
+        }
+        tx.send(RtMsg::RequestEnd { svc: si }).ok();
+        jcts.push(Duration::from_nanos(t0.elapsed().as_nanos() as u64));
+        if svc.inter_request > StdDuration::ZERO {
+            std::thread::sleep(svc.inter_request);
+        }
+    }
+    tx.send(RtMsg::ServiceDone).ok();
+    jcts
+}

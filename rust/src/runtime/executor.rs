@@ -1,0 +1,186 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! One [`PjrtRuntime`] owns the PJRT CPU client and a compiled
+//! executable per artifact. HLO **text** is the interchange format (the
+//! xla crate's XLA rejects jax≥0.5 serialized protos — ids overflow
+//! i32; the text parser reassigns them).
+
+use super::manifest::{test_input, ArtifactSpec, Manifest};
+use crate::core::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration as StdDuration, Instant};
+
+/// A compiled artifact plus its spec and load/verify telemetry.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling the HLO.
+    pub compile_time: StdDuration,
+}
+
+/// The PJRT CPU runtime.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, LoadedArtifact>,
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(PjrtRuntime {
+            client,
+            loaded: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact from a manifest.
+    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<&LoadedArtifact> {
+        if !self.loaded.contains_key(name) {
+            let spec = manifest
+                .get(name)
+                .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))?
+                .clone();
+            let path = manifest.hlo_path(&spec);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xerr)?;
+            self.loaded.insert(
+                name.to_string(),
+                LoadedArtifact {
+                    spec,
+                    exe,
+                    compile_time: t0.elapsed(),
+                },
+            );
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Load + compile every artifact in the manifest.
+    pub fn load_all(&mut self, manifest: &Manifest) -> Result<()> {
+        for spec in &manifest.artifacts {
+            self.load(manifest, &spec.name)?;
+        }
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.loaded.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact with f32 inputs in manifest argument order.
+    /// Returns the flattened f32 outputs.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let art = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact {name:?} not loaded")))?;
+        if inputs.len() != art.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                art.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (vals, spec) in inputs.iter().zip(&art.spec.inputs) {
+            if vals.len() != spec.element_count() {
+                return Err(Error::Runtime(format!(
+                    "{name}: input element count {} != spec {}",
+                    vals.len(),
+                    spec.element_count()
+                )));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(vals).reshape(&dims).map_err(xerr)?;
+            literals.push(lit);
+        }
+
+        let result = art.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime(format!("{name}: empty execution result")))?;
+        let root = first.to_literal_sync().map_err(xerr)?;
+        // aot.py lowers with return_tuple=True.
+        let parts = root.to_tuple().map_err(xerr)?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(xerr))
+            .collect()
+    }
+
+    /// Execute with the manifest's deterministic test inputs and return
+    /// (outputs, mean |output|).
+    pub fn execute_check(&self, name: &str) -> Result<(Vec<Vec<f32>>, f64)> {
+        let art = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact {name:?} not loaded")))?;
+        let inputs: Vec<Vec<f32>> = art
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(ai, spec)| test_input(spec, ai, art.spec.check.seed))
+            .collect();
+        let outputs = self.execute_f32(name, &inputs)?;
+        let mean_abs = {
+            let mut per_output = Vec::with_capacity(outputs.len());
+            for o in &outputs {
+                let sum: f64 = o.iter().map(|v| v.abs() as f64).sum();
+                per_output.push(sum / o.len().max(1) as f64);
+            }
+            per_output.iter().sum::<f64>() / per_output.len().max(1) as f64
+        };
+        Ok((outputs, mean_abs))
+    }
+
+    /// Self-verify a loaded artifact against the manifest's expected
+    /// mean-abs fingerprint (relative tolerance `tol`).
+    pub fn verify(&self, name: &str, tol: f64) -> Result<f64> {
+        let expected = self.loaded[name].spec.check.mean_abs;
+        let (_, got) = self.execute_check(name)?;
+        let rel = (got - expected).abs() / expected.abs().max(1e-12);
+        if rel > tol {
+            return Err(Error::Runtime(format!(
+                "{name}: self-check mismatch — mean|out| {got:.6} vs manifest {expected:.6} (rel {rel:.2e})"
+            )));
+        }
+        Ok(rel)
+    }
+
+    /// Verify every loaded artifact.
+    pub fn verify_all(&self, tol: f64) -> Result<()> {
+        let mut names: Vec<&String> = self.loaded.keys().collect();
+        names.sort();
+        for name in names {
+            self.verify(name, tol)?;
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: load a manifest dir and compile everything.
+pub fn load_runtime(artifacts_dir: impl AsRef<Path>) -> Result<(Manifest, PjrtRuntime)> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let mut rt = PjrtRuntime::cpu()?;
+    rt.load_all(&manifest)?;
+    Ok((manifest, rt))
+}

@@ -1,0 +1,220 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use crate::core::{Error, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor argument/result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|d| {
+                d.as_u64()
+                    .map(|d| d as usize)
+                    .ok_or_else(|| Error::Artifact("bad shape dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            shape,
+            dtype: v.req_str("dtype")?.to_string(),
+        })
+    }
+}
+
+/// Load-time numeric self-check parameters (see aot.py `_rand_inputs`).
+#[derive(Debug, Clone)]
+pub struct CheckVector {
+    /// Seed folded into the deterministic input formula.
+    pub seed: u64,
+    /// Expected mean(|output|) across outputs.
+    pub mean_abs: f64,
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub tags: Vec<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub check: CheckVector,
+}
+
+impl ArtifactSpec {
+    pub fn has_tag(&self, tag: &str) -> bool {
+        self.tags.iter().any(|t| t == tag)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let version = doc.req_u64("version")?;
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported"
+            )));
+        }
+        let artifacts = doc
+            .req_arr("artifacts")?
+            .iter()
+            .map(|a| {
+                let check = a.require("check")?;
+                Ok(ArtifactSpec {
+                    name: a.req_str("name")?.to_string(),
+                    file: a.req_str("file")?.to_string(),
+                    tags: a
+                        .req_arr("tags")?
+                        .iter()
+                        .filter_map(|t| t.as_str().map(str::to_string))
+                        .collect(),
+                    inputs: a
+                        .req_arr("inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .req_arr("outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    check: CheckVector {
+                        seed: check.req_u64("seed")?,
+                        mean_abs: check.req_f64("mean_abs")?,
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifacts carrying a tag (e.g. `"kernel"`, `"model"`).
+    pub fn with_tag<'a>(&'a self, tag: &'a str) -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts.iter().filter(move |a| a.has_tag(tag))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+/// The deterministic test-input formula shared with aot.py:
+/// `value[i] = sin(0.001 · (i+1) · (arg_idx+3) + seed)`.
+pub fn test_input(spec: &TensorSpec, arg_idx: usize, seed: u64) -> Vec<f32> {
+    let n = spec.element_count();
+    (0..n)
+        .map(|i| {
+            (0.001 * (i as f64 + 1.0) * (arg_idx as f64 + 3.0) + seed as f64).sin() as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("fikit-manifest-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn parses_well_formed_manifest() {
+        let dir = tmp("ok");
+        write_manifest(
+            &dir,
+            r#"{
+              "version": 1,
+              "artifacts": [{
+                "name": "matmul_2x2",
+                "file": "matmul_2x2.hlo.txt",
+                "tags": ["kernel", "matmul"],
+                "inputs": [{"shape": [2, 2], "dtype": "float32"},
+                           {"shape": [2, 2], "dtype": "float32"}],
+                "outputs": [{"shape": [2, 2], "dtype": "float32"}],
+                "check": {"seed": 1234, "mean_abs": 0.5}
+              }]
+            }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("matmul_2x2").unwrap();
+        assert!(a.has_tag("kernel"));
+        assert_eq!(a.inputs[0].element_count(), 4);
+        assert_eq!(m.with_tag("matmul").count(), 1);
+        assert!(m.hlo_path(a).ends_with("matmul_2x2.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(tmp("missing")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let dir = tmp("ver");
+        write_manifest(&dir, r#"{"version": 9, "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn test_input_formula_matches_python() {
+        // First elements of sin(0.001*(i+1)*(0+3) + 1234) computed with
+        // python/numpy — pins the cross-language contract.
+        let spec = TensorSpec {
+            shape: vec![2, 2],
+            dtype: "float32".into(),
+        };
+        let vals = test_input(&spec, 0, 1234);
+        let expect = [
+            (0.003f64 + 1234.0).sin() as f32,
+            (0.006f64 + 1234.0).sin() as f32,
+            (0.009f64 + 1234.0).sin() as f32,
+            (0.012f64 + 1234.0).sin() as f32,
+        ];
+        assert_eq!(vals, expect);
+    }
+}

@@ -1,0 +1,22 @@
+//! The PJRT runtime: loads AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them as real kernels from the
+//! Rust request path. Python never runs at serving time — `make
+//! artifacts` produced the HLO text once; everything here is
+//! xla-crate/PJRT.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (names, files,
+//!   tensor specs, self-check vectors).
+//! * [`executor`] — `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile` → `execute`, one compiled executable per artifact,
+//!   plus a load-time numeric self-check against the manifest.
+//! * [`engine`] — the real-time serving engine used by the e2e example:
+//!   services whose "kernels" are PJRT executions, scheduled through the
+//!   same FIKIT queues/BestPrioFit logic as the simulator.
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+
+pub use engine::{EngineConfig, EngineReport, RealTimeEngine, RtService};
+pub use executor::{LoadedArtifact, PjrtRuntime};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,275 @@
+//! The single-GPU device model: one FIFO hardware queue, non-preemptive
+//! kernel execution, full busy/idle accounting.
+//!
+//! Because the queue is FIFO and kernels are never preempted, a kernel's
+//! `(start, finish)` are fully determined the moment it is submitted:
+//! `start = max(now + launch_latency, device_free)`. [`SimDevice::submit`]
+//! therefore returns the finished [`KernelRecord`] synchronously; the
+//! driver turns `finished_at` into a completion event.
+
+use crate::core::{Duration, KernelLaunch, KernelRecord, LaunchSource, SimTime};
+
+/// Hardware/driver timing parameters.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// Time from a launch leaving the CPU to the kernel being runnable on
+    /// the device (driver + PCIe + dispatch). The paper cites typical
+    /// launch costs of 5–30 µs; NVIDIA's own figure is ~5 µs.
+    pub launch_latency: Duration,
+    /// Compute throughput of this device relative to the full GPU the
+    /// workload traces were calibrated on. Models a **MIG instance**
+    /// (paper §2.1: "the scheduling design of this paper can apply to a
+    /// single GPU instance under MIG partitioning") — a 3/7 A100 slice
+    /// is ≈0.43. Kernel execution times scale by 1/compute_scale;
+    /// CPU-side gaps are unaffected (they are host work).
+    pub compute_scale: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> DeviceConfig {
+        DeviceConfig {
+            launch_latency: Duration::from_micros(5),
+            compute_scale: 1.0,
+        }
+    }
+}
+
+impl DeviceConfig {
+    /// A MIG instance with the given compute fraction (0 < f ≤ 1).
+    pub fn mig_instance(fraction: f64) -> DeviceConfig {
+        assert!(fraction > 0.0 && fraction <= 1.0, "bad MIG fraction");
+        DeviceConfig {
+            compute_scale: fraction,
+            ..DeviceConfig::default()
+        }
+    }
+}
+
+/// Aggregate device accounting for a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    /// Total kernels executed.
+    pub kernels: u64,
+    /// Σ kernel execution time (device busy).
+    pub busy: Duration,
+    /// Kernels submitted via gap filling.
+    pub fill_kernels: u64,
+    /// Busy time contributed by gap-fill kernels.
+    pub fill_busy: Duration,
+    /// Time of the last kernel completion.
+    pub last_finish: SimTime,
+}
+
+impl DeviceStats {
+    /// Device utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: SimTime) -> f64 {
+        if horizon.nanos() == 0 {
+            0.0
+        } else {
+            self.busy.nanos() as f64 / horizon.nanos() as f64
+        }
+    }
+}
+
+/// The simulated GPU.
+#[derive(Debug)]
+pub struct SimDevice {
+    cfg: DeviceConfig,
+    /// Time at which the device finishes everything currently queued.
+    free_at: SimTime,
+    stats: DeviceStats,
+    /// `(finish_time, is_fill)` of kernels not yet finished — used to
+    /// answer "how many kernels are pending ahead of time t" (feedback
+    /// overhead-2 accounting). Small (≤ queue depth), pruned lazily.
+    in_flight: Vec<(SimTime, bool)>,
+}
+
+impl SimDevice {
+    pub fn new(cfg: DeviceConfig) -> SimDevice {
+        SimDevice {
+            cfg,
+            free_at: SimTime::ZERO,
+            stats: DeviceStats::default(),
+            in_flight: Vec::with_capacity(8),
+        }
+    }
+
+    pub fn config(&self) -> &DeviceConfig {
+        &self.cfg
+    }
+
+    /// Submit a kernel launch at CPU time `now`. Returns the completed
+    /// execution record (FIFO + non-preemptive ⇒ deterministic at
+    /// submission).
+    pub fn submit(&mut self, launch: &KernelLaunch, now: SimTime, source: LaunchSource) -> KernelRecord {
+        let ready = now + self.cfg.launch_latency;
+        let start = ready.max(self.free_at);
+        // MIG slice: fewer SMs → kernels take proportionally longer.
+        let exec = if self.cfg.compute_scale >= 1.0 {
+            launch.true_duration
+        } else {
+            launch.true_duration.scale(1.0 / self.cfg.compute_scale)
+        };
+        let finish = start + exec;
+        self.free_at = finish;
+
+        self.stats.kernels += 1;
+        self.stats.busy += exec;
+        let is_fill = source == LaunchSource::GapFill;
+        if is_fill {
+            self.stats.fill_kernels += 1;
+            self.stats.fill_busy += exec;
+        }
+        self.stats.last_finish = self.stats.last_finish.max(finish);
+
+        self.prune(now);
+        self.in_flight.push((finish, is_fill));
+
+        KernelRecord {
+            task_key: launch.task_key.clone(),
+            task_id: launch.task_id,
+            kernel: launch.kernel.clone(),
+            priority: launch.priority,
+            seq: launch.seq,
+            source,
+            issued_at: now,
+            started_at: start,
+            finished_at: finish,
+        }
+    }
+
+    fn prune(&mut self, now: SimTime) {
+        self.in_flight.retain(|(finish, _)| *finish > now);
+    }
+
+    /// Time at which the device will have drained everything submitted.
+    pub fn free_at(&self) -> SimTime {
+        self.free_at
+    }
+
+    /// Remaining backlog as seen at `now` (0 if idle).
+    pub fn backlog(&self, now: SimTime) -> Duration {
+        self.free_at - now
+    }
+
+    /// Is the device idle at `now`?
+    pub fn is_idle(&self, now: SimTime) -> bool {
+        self.free_at <= now
+    }
+
+    /// Number of kernels still pending (queued or running) at `now`.
+    pub fn pending(&mut self, now: SimTime) -> usize {
+        self.prune(now);
+        self.in_flight.len()
+    }
+
+    /// Number of pending *fill* kernels at `now` — the un-recallable
+    /// kernels of the paper's "overhead 2" (Fig 12).
+    pub fn pending_fills(&mut self, now: SimTime) -> usize {
+        self.prune(now);
+        self.in_flight.iter().filter(|(_, f)| *f).count()
+    }
+
+    pub fn stats(&self) -> &DeviceStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, KernelId, Priority, TaskId, TaskKey};
+
+    fn launch(dur_us: u64, at: SimTime) -> KernelLaunch {
+        KernelLaunch {
+            task_key: TaskKey::new("svc"),
+            task_id: TaskId(0),
+            kernel: KernelId::new("k", Dim3::x(1), Dim3::x(32)),
+            priority: Priority::P0,
+            seq: 0,
+            true_duration: Duration::from_micros(dur_us),
+            issued_at: at,
+        }
+    }
+
+    fn dev() -> SimDevice {
+        SimDevice::new(DeviceConfig {
+            launch_latency: Duration::from_micros(5),
+            compute_scale: 1.0,
+        })
+    }
+
+    #[test]
+    fn fifo_back_to_back_execution() {
+        let mut d = dev();
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(&launch(100, t0), t0, LaunchSource::Direct);
+        assert_eq!(r1.started_at, SimTime(5_000)); // launch latency
+        assert_eq!(r1.finished_at, SimTime(105_000));
+
+        // Second kernel submitted while first still running: queues FIFO.
+        let r2 = d.submit(&launch(50, t0), t0, LaunchSource::Direct);
+        assert_eq!(r2.started_at, SimTime(105_000));
+        assert_eq!(r2.finished_at, SimTime(155_000));
+        assert_eq!(r2.queue_delay(), Duration::from_micros(105));
+
+        assert_eq!(d.stats().kernels, 2);
+        assert_eq!(d.stats().busy, Duration::from_micros(150));
+    }
+
+    #[test]
+    fn idle_gap_between_late_submissions() {
+        let mut d = dev();
+        let r1 = d.submit(&launch(100, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
+        // Device is idle once the first kernel drains.
+        assert!(d.is_idle(SimTime(r1.finished_at.nanos() + 1_000)));
+        // Next launch issued 80us after finish — device idled in between.
+        let t2 = r1.finished_at + Duration::from_micros(80);
+        let r2 = d.submit(&launch(100, t2), t2, LaunchSource::Direct);
+        assert_eq!(r2.started_at, t2 + Duration::from_micros(5));
+        assert!(!d.is_idle(t2));
+    }
+
+    #[test]
+    fn pending_and_fill_accounting() {
+        let mut d = dev();
+        let t0 = SimTime::ZERO;
+        d.submit(&launch(100, t0), t0, LaunchSource::Direct);
+        d.submit(&launch(100, t0), t0, LaunchSource::GapFill);
+        d.submit(&launch(100, t0), t0, LaunchSource::GapFill);
+        assert_eq!(d.pending(SimTime(10_000)), 3);
+        assert_eq!(d.pending_fills(SimTime(10_000)), 2);
+        // After the first two finish (5us + 200us), one fill remains.
+        assert_eq!(d.pending(SimTime(210_000)), 1);
+        assert_eq!(d.pending_fills(SimTime(210_000)), 1);
+        assert_eq!(d.pending(SimTime(400_000)), 0);
+        assert_eq!(d.stats().fill_kernels, 2);
+        assert_eq!(d.stats().fill_busy, Duration::from_micros(200));
+    }
+
+    #[test]
+    fn mig_instance_scales_execution_not_gaps() {
+        // A half-GPU MIG slice doubles kernel execution times.
+        let mut d = SimDevice::new(DeviceConfig {
+            launch_latency: Duration::from_micros(5),
+            ..DeviceConfig::mig_instance(0.5)
+        });
+        let r = d.submit(&launch(100, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
+        assert_eq!(r.exec_time(), Duration::from_micros(200));
+        assert_eq!(d.stats().busy, Duration::from_micros(200));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad MIG fraction")]
+    fn mig_fraction_validated() {
+        let _ = DeviceConfig::mig_instance(0.0);
+    }
+
+    #[test]
+    fn utilization() {
+        let mut d = dev();
+        d.submit(&launch(500, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
+        let horizon = SimTime(1_000_000); // 1ms
+        assert!((d.stats().utilization(horizon) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,107 @@
+//! Deterministic discrete-event queue.
+//!
+//! A binary heap keyed on `(time, seq)` — `seq` is a monotonically
+//! increasing insertion counter, so simultaneous events pop in insertion
+//! order and every run with the same seed replays identically.
+
+use crate::core::{KernelRecord, SimTime};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Events driving the simulation loop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A new task (invocation) of service `svc` arrives.
+    TaskArrival { svc: usize },
+    /// Service `svc`'s CPU side issues its next kernel launch.
+    IssueKernel { svc: usize },
+    /// A kernel previously submitted to the device finishes executing.
+    KernelDone { svc: usize, record: KernelRecord },
+}
+
+/// Min-heap of timestamped events with deterministic tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    time: SimTime,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at `time`.
+    pub fn push(&mut self, time: SimTime, event: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time, seq, event }));
+    }
+
+    /// Pop the earliest event (ties: insertion order).
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        self.heap.pop().map(|Reverse(e)| (e.time, e.event))
+    }
+
+    /// Time of the next event without popping.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(SimTime(30), Event::TaskArrival { svc: 3 });
+        q.push(SimTime(10), Event::TaskArrival { svc: 1 });
+        q.push(SimTime(10), Event::IssueKernel { svc: 2 });
+        q.push(SimTime(20), Event::IssueKernel { svc: 9 });
+
+        assert_eq!(q.peek_time(), Some(SimTime(10)));
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!((t1, e1), (SimTime(10), Event::TaskArrival { svc: 1 }));
+        // Same-time events pop in insertion order.
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!((t2, e2), (SimTime(10), Event::IssueKernel { svc: 2 }));
+        assert_eq!(q.pop().unwrap().0, SimTime(20));
+        assert_eq!(q.pop().unwrap().0, SimTime(30));
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,30 @@
+//! Discrete-event GPU device simulation.
+//!
+//! This is the substrate the paper ran on real silicon: a single GPU with
+//! a **FIFO device queue** (the property both NVIDIA default sharing and
+//! FIKIT build on), plus the CPU-side launch loop of each hosted service.
+//!
+//! The model (DESIGN.md §6):
+//!
+//! * The device executes exactly one kernel at a time, in submission
+//!   (FIFO) order, non-preemptively — kernel-granularity scheduling is
+//!   the paper's whole premise.
+//! * Each service is a *closed-loop* CPU process: it issues kernel *i+1*
+//!   of a task only after observing kernel *i* complete and then spending
+//!   the trace's CPU-side gap (post-processing, glue code, launch
+//!   overhead). In exclusive mode this reproduces Fig 1's inter-kernel
+//!   device idle exactly; in shared modes the queueing delays compound
+//!   through the loop — which is precisely the JCT inflation the paper
+//!   measures.
+//! * Submitting a kernel is deterministic: a FIFO, non-preemptive device
+//!   means `(start, finish)` are fixed at submission time, so the device
+//!   returns the completed [`KernelRecord`] synchronously and the driver
+//!   schedules a completion *event* at `finished_at`.
+
+mod device;
+mod event;
+mod process;
+
+pub use device::{DeviceConfig, DeviceStats, SimDevice};
+pub use event::{Event, EventQueue};
+pub use process::{ProcessAction, ServiceProcess, Stage, TaskOutcome};

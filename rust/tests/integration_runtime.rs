@@ -1,0 +1,150 @@
+//! PJRT runtime integration: load every AOT artifact, verify numerics
+//! against both the manifest self-checks and independently-computed
+//! references, and run the real-time engine end to end.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise —
+//! `make test` always builds artifacts first).
+
+use fikit::coordinator::Mode;
+use fikit::core::{Priority, TaskKey};
+use fikit::runtime::engine::{EngineConfig, RealTimeEngine, RtKernelStep, RtService};
+use fikit::runtime::executor::PjrtRuntime;
+use fikit::runtime::manifest::{test_input, Manifest};
+use std::time::Duration as StdDuration;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping runtime integration test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_artifacts_load_and_self_verify() {
+    let Some(manifest) = manifest() else { return };
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    rt.load_all(&manifest).unwrap();
+    assert_eq!(rt.loaded_names().len(), manifest.artifacts.len());
+    rt.verify_all(1e-3).unwrap();
+}
+
+/// Independent numerics check: execute the matmul artifact and compare
+/// against a plain-Rust matrix multiply of the same inputs — catching
+/// any transposition/layout bug the mean-abs self-check could miss.
+#[test]
+fn matmul_artifact_matches_rust_reference() {
+    let Some(manifest) = manifest() else { return };
+    let name = "matmul_128x256x128";
+    let spec = manifest.get(name).expect("manifest has matmul").clone();
+    let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let n = spec.inputs[1].shape[1];
+
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    rt.load(&manifest, name).unwrap();
+
+    let a = test_input(&spec.inputs[0], 0, spec.check.seed);
+    let b = test_input(&spec.inputs[1], 1, spec.check.seed);
+    let outputs = rt.execute_f32(name, &[a.clone(), b.clone()]).unwrap();
+    assert_eq!(outputs.len(), 1);
+    let got = &outputs[0];
+    assert_eq!(got.len(), m * n);
+
+    // Plain-Rust reference (f64 accumulation).
+    let mut worst = 0.0f64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+            }
+            let diff = (got[i * n + j] as f64 - acc).abs();
+            let denom = acc.abs().max(1.0);
+            worst = worst.max(diff / denom);
+        }
+    }
+    assert!(
+        worst < 1e-4,
+        "Pallas matmul vs Rust reference: worst rel err {worst:.2e}"
+    );
+}
+
+/// Softmax artifact: rows must sum to one (independent invariant).
+#[test]
+fn softmax_artifact_rows_sum_to_one() {
+    let Some(manifest) = manifest() else { return };
+    let name = "softmax_128x512";
+    let spec = manifest.get(name).unwrap().clone();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    rt.load(&manifest, name).unwrap();
+    let x = test_input(&spec.inputs[0], 0, spec.check.seed);
+    let out = &rt.execute_f32(name, &[x]).unwrap()[0];
+    let (rows, cols) = (spec.outputs[0].shape[0], spec.outputs[0].shape[1]);
+    for r in 0..rows {
+        let sum: f32 = out[r * cols..(r + 1) * cols].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row {r} sums to {sum}");
+    }
+}
+
+#[test]
+fn executor_rejects_bad_inputs() {
+    let Some(manifest) = manifest() else { return };
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    rt.load(&manifest, "softmax_128x512").unwrap();
+    // Wrong arity.
+    assert!(rt.execute_f32("softmax_128x512", &[]).is_err());
+    // Wrong element count.
+    assert!(rt
+        .execute_f32("softmax_128x512", &[vec![0.0; 7]])
+        .is_err());
+    // Unknown artifact.
+    assert!(rt.execute_f32("nope", &[]).is_err());
+    // Unknown artifact load.
+    assert!(rt.load(&manifest, "nope").is_err());
+}
+
+/// End-to-end: real services over real compute through the FIKIT
+/// engine; priority ordering must hold.
+#[test]
+fn realtime_engine_serves_with_priority() {
+    let Some(manifest) = manifest() else { return };
+    let ms = StdDuration::from_millis;
+    let services = vec![
+        RtService {
+            key: TaskKey::new("rt-high"),
+            priority: Priority::P0,
+            steps: vec![
+                RtKernelStep { artifact: "layernorm_128x512".into(), think_gap: ms(8) },
+                RtKernelStep { artifact: "softmax_128x512".into(), think_gap: ms(0) },
+            ],
+            requests: 6,
+            inter_request: ms(4),
+        },
+        RtService {
+            key: TaskKey::new("batch-low"),
+            priority: Priority::P5,
+            steps: vec![
+                RtKernelStep { artifact: "matmul_128x256x128".into(), think_gap: ms(0) },
+                RtKernelStep { artifact: "fused_linear_64x256x512_relu".into(), think_gap: ms(0) },
+            ],
+            requests: 10,
+            inter_request: ms(0),
+        },
+    ];
+    let engine = RealTimeEngine::new(EngineConfig::default(), services, &manifest).unwrap();
+    let profiles = engine.profile().unwrap();
+    // Profiles exist and carry the think gap.
+    let p = profiles.get(&TaskKey::new("rt-high")).unwrap();
+    assert!(p.num_unique() >= 2);
+
+    let report = engine.serve(&profiles).unwrap();
+    assert_eq!(report.mode, Mode::Fikit);
+    let high = report.service(&TaskKey::new("rt-high")).unwrap();
+    let low = report.service(&TaskKey::new("batch-low")).unwrap();
+    assert_eq!(high.completed, 6);
+    assert_eq!(low.completed, 10);
+    assert!(high.jct.mean_ms() > 0.0 && low.jct.mean_ms() > 0.0);
+    assert!(report.kernels_executed >= 6 * 2 + 10 * 2);
+}

@@ -1,0 +1,147 @@
+//! Distributed-deployment integration: real hook clients talking to the
+//! UDP scheduler daemon over loopback — the paper's client-server split.
+
+use fikit::core::{Dim3, Duration, KernelId, Priority, SimTime, TaskId, TaskKey};
+use fikit::hook::client::{HookClient, LaunchDecision};
+use fikit::hook::protocol::ClientMsg;
+use fikit::hook::transport::UdpTransport;
+use fikit::profile::{ProfileStore, SymbolResolver, SymbolTableModel, TaskProfile};
+use fikit::server::{SchedulerServer, ServerConfig};
+use std::time::Duration as StdDuration;
+
+fn kid(name: &str) -> KernelId {
+    KernelId::new(name, Dim3::x(8), Dim3::x(128))
+}
+
+fn profiles() -> ProfileStore {
+    let mut store = ProfileStore::new();
+    let mut hi = TaskProfile::new(TaskKey::new("hi"));
+    hi.record(&kid("hk"), Duration::from_micros(300), Some(Duration::from_millis(5)));
+    hi.finish_run(1);
+    store.insert(hi);
+    let mut lo = TaskProfile::new(TaskKey::new("lo"));
+    lo.record(&kid("lk"), Duration::from_micros(500), Some(Duration::from_micros(30)));
+    lo.finish_run(1);
+    store.insert(lo);
+    store
+}
+
+fn spawn_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let cfg = ServerConfig {
+        bind: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    };
+    let mut server = SchedulerServer::bind(cfg, profiles()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        server.run_for(Some(StdDuration::from_secs(8))).unwrap();
+    });
+    (addr, handle)
+}
+
+fn client(addr: std::net::SocketAddr, key: &str, prio: Priority) -> HookClient<UdpTransport> {
+    let transport = UdpTransport::connect(&addr.to_string()).unwrap();
+    HookClient::new(
+        transport,
+        TaskKey::new(key),
+        prio,
+        SymbolResolver::new(SymbolTableModel::default()),
+    )
+}
+
+#[test]
+fn udp_register_reports_stage() {
+    let (addr, handle) = spawn_server();
+    // Profiled service → sharing stage.
+    let mut hi = client(addr, "hi", Priority::P0);
+    assert!(hi.register().unwrap());
+    // Unprofiled service → measurement stage.
+    let mut unknown = client(addr, "brand-new", Priority::P4);
+    assert!(!unknown.register().unwrap());
+    drop(handle); // server thread exits after its deadline
+}
+
+#[test]
+fn udp_priority_scheduling_round_trip() {
+    let (addr, _handle) = spawn_server();
+
+    let mut hi = client(addr, "hi", Priority::P0);
+    let mut lo = client(addr, "lo", Priority::P4);
+    assert!(hi.register().unwrap());
+    assert!(lo.register().unwrap());
+
+    // Both start a task; the high-priority service holds the GPU.
+    hi.task_start(TaskId(0)).unwrap();
+    lo.task_start(TaskId(0)).unwrap();
+
+    // Holder launch: immediate release.
+    let d = hi
+        .intercept_launch(&kid("hk"), TaskId(0), 0, SimTime(0))
+        .unwrap();
+    assert_eq!(d, LaunchDecision::LaunchNow);
+
+    // Low-priority launch: held.
+    let d = lo
+        .intercept_launch(&kid("lk"), TaskId(0), 0, SimTime(0))
+        .unwrap();
+    assert_eq!(d, LaunchDecision::Held);
+
+    // Holder kernel completes → window (SG=5ms) opens → the held 500µs
+    // kernel fits and is released to the low-priority client.
+    hi.report_completion(TaskId(0), 0, Duration::from_micros(300), SimTime(1_000_000))
+        .unwrap();
+    lo.wait_release(0).unwrap();
+
+    // Tear down cleanly.
+    hi.task_end(TaskId(0)).unwrap();
+    lo.task_end(TaskId(0)).unwrap();
+    hi.disconnect().unwrap();
+    lo.disconnect().unwrap();
+}
+
+#[test]
+fn udp_holder_change_releases_waiters() {
+    let (addr, _handle) = spawn_server();
+    let mut hi = client(addr, "hi", Priority::P0);
+    let mut lo = client(addr, "lo", Priority::P4);
+    hi.register().unwrap();
+    lo.register().unwrap();
+    hi.task_start(TaskId(0)).unwrap();
+    lo.task_start(TaskId(0)).unwrap();
+
+    // Low-priority launch parks.
+    assert_eq!(
+        lo.intercept_launch(&kid("lk"), TaskId(0), 3, SimTime(0)).unwrap(),
+        LaunchDecision::Held
+    );
+    // Holder's task ends → low becomes holder → release arrives.
+    hi.task_end(TaskId(0)).unwrap();
+    lo.wait_release(3).unwrap();
+}
+
+#[test]
+fn udp_server_rejects_garbage() {
+    let (addr, _handle) = spawn_server();
+    let sock = std::net::UdpSocket::bind("127.0.0.1:0").unwrap();
+    sock.connect(addr).unwrap();
+    sock.send(&[0xFF, 0xFF, b'x']).unwrap();
+    sock.set_read_timeout(Some(StdDuration::from_secs(2))).unwrap();
+    let mut buf = [0u8; 4096];
+    let n = sock.recv(&mut buf).unwrap();
+    let reply = fikit::hook::protocol::SchedulerMsg::decode(&buf[..n]).unwrap();
+    assert!(matches!(reply, fikit::hook::protocol::SchedulerMsg::Error { .. }));
+}
+
+#[test]
+fn udp_wire_is_inspectable_json() {
+    // Operational property the protocol docs promise: frames after the
+    // 2-byte header are plain JSON (tcpdump-debuggable).
+    let msg = ClientMsg::TaskStart {
+        task_key: TaskKey::new("svc"),
+        task_id: TaskId(7),
+    };
+    let bytes = msg.encode().unwrap();
+    let body = std::str::from_utf8(&bytes[2..]).unwrap();
+    let parsed = fikit::util::json::Json::parse(body).unwrap();
+    assert_eq!(parsed.req_str("type").unwrap(), "task_start");
+}

@@ -1,0 +1,338 @@
+//! Randomized property tests over coordinator invariants (the offline
+//! environment has no proptest; `fikit::util::rng::Rng` drives seeded
+//! case generation — failures print the seed for replay).
+//!
+//! Invariants (DESIGN.md §7):
+//!  1. BestPrioFit optimality: the fit is the longest fitting request of
+//!     the highest fitting priority; it never exceeds the idle window.
+//!  2. FIKIT fill budget: Σ predicted durations of launched fills ≤ the
+//!     predicted gap at open time.
+//!  3. Scheduler routing: no queued request ever has priority ≥ the
+//!     holder's; with no holder, queues are empty.
+//!  4. End-to-end conservation: every launched kernel completes exactly
+//!     once; device busy time = Σ true durations.
+//!  5. Priority protection: in FIKIT mode the high-priority service's
+//!     JCT never exceeds its default-sharing JCT by more than the
+//!     overhead-2 bound (one fill kernel per gap window).
+//!  6. Wire protocol: arbitrary messages round-trip bit-exactly.
+
+use fikit::config::{ExperimentConfig, ServiceConfig};
+use fikit::coordinator::best_prio_fit::best_prio_fit;
+use fikit::coordinator::driver::run_experiment;
+use fikit::coordinator::fikit::{fikit_fill, FillWindow, DEFAULT_EPSILON};
+use fikit::coordinator::queues::PriorityQueues;
+use fikit::coordinator::Mode;
+use fikit::core::{
+    Dim3, Duration, KernelId, KernelLaunch, Priority, SimTime, TaskId, TaskKey,
+};
+use fikit::hook::protocol::{ClientMsg, SchedulerMsg};
+use fikit::profile::{ProfileStore, TaskProfile};
+use fikit::util::rng::Rng;
+use fikit::workload::ModelKind;
+
+const CASES: usize = 60;
+
+fn kid(i: u64) -> KernelId {
+    KernelId::new(format!("k{i}"), Dim3::x(4), Dim3::x(64))
+}
+
+/// Random queues + a matching profile store.
+fn random_state(rng: &mut Rng) -> (PriorityQueues, ProfileStore, Vec<(Priority, Duration)>) {
+    let n_services = 1 + rng.index(6);
+    let mut store = ProfileStore::new();
+    let mut queues = PriorityQueues::new();
+    let mut contents = Vec::new();
+    for s in 0..n_services {
+        let key = TaskKey::new(format!("svc{s}"));
+        let mut profile = TaskProfile::new(key.clone());
+        let n_kernels = 1 + rng.index(5);
+        for k in 0..n_kernels {
+            let dur = Duration::from_micros(1 + rng.below(800));
+            profile.record(&kid(k as u64), dur, Some(Duration::from_micros(50)));
+        }
+        profile.finish_run(n_kernels);
+        // Queue up to 4 pending requests for this service.
+        let prio = Priority::from_index(1 + rng.index(9)).unwrap();
+        for q in 0..rng.index(4) {
+            let k = rng.index(n_kernels) as u64;
+            let predicted = profile.sk(&kid(k)).unwrap();
+            queues.push(
+                KernelLaunch {
+                    task_key: key.clone(),
+                    task_id: TaskId(q as u64),
+                    kernel: kid(k),
+                    priority: prio,
+                    seq: q as u32,
+                    true_duration: predicted,
+                    issued_at: SimTime::ZERO,
+                },
+                SimTime::ZERO,
+            );
+            contents.push((prio, predicted));
+        }
+        store.insert(profile);
+    }
+    (queues, store, contents)
+}
+
+#[test]
+fn prop_best_prio_fit_is_optimal() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let (mut queues, store, contents) = random_state(&mut rng);
+        let idle = Duration::from_micros(1 + rng.below(1_000));
+        let before = queues.len();
+
+        match best_prio_fit(&mut queues, idle, &store) {
+            Some(fit) => {
+                assert!(fit.predicted < idle, "seed {seed}: fit exceeds window");
+                assert_eq!(queues.len(), before - 1, "seed {seed}: exactly one removed");
+                // Optimality: no request of strictly higher priority fits,
+                // and no same-priority request is longer yet still fits.
+                for (prio, predicted) in &contents {
+                    if *predicted >= idle {
+                        continue;
+                    }
+                    assert!(
+                        !prio.is_higher_than(fit.launch.priority),
+                        "seed {seed}: higher-priority fitting request ignored"
+                    );
+                    if *prio == fit.launch.priority {
+                        assert!(
+                            *predicted <= fit.predicted,
+                            "seed {seed}: longer same-priority fit ignored"
+                        );
+                    }
+                }
+            }
+            None => {
+                // Nothing fits: every queued request's prediction ≥ idle.
+                for (_, predicted) in &contents {
+                    assert!(
+                        *predicted >= idle,
+                        "seed {seed}: fitting request {predicted:?} not selected for idle {idle:?}"
+                    );
+                }
+                assert_eq!(queues.len(), before, "seed {seed}: None must not mutate");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fikit_fill_respects_budget() {
+    for seed in 100..100 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let (mut queues, store, _) = random_state(&mut rng);
+        let gap = Duration::from_micros(150 + rng.below(3_000));
+        let Some(mut window) =
+            FillWindow::open(TaskKey::new("holder"), SimTime::ZERO, gap, DEFAULT_EPSILON)
+        else {
+            continue;
+        };
+        let fills = fikit_fill(&mut window, SimTime::ZERO, &mut queues, &store);
+        let spent: Duration = fills.iter().map(|f| f.predicted).collect::<Vec<_>>().iter().copied().sum();
+        assert!(
+            spent.nanos() <= gap.nanos(),
+            "seed {seed}: fills {spent:?} exceed predicted gap {gap:?}"
+        );
+        assert_eq!(window.fills as usize, fills.len());
+        // Fills come out in non-ascending priority order.
+        for w in fills.windows(2) {
+            assert!(
+                !w[1].launch.priority.is_higher_than(w[0].launch.priority),
+                "seed {seed}: fill priority order violated"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_simulation_conservation_random_configs() {
+    let models = [
+        ModelKind::Alexnet,
+        ModelKind::Googlenet,
+        ModelKind::Resnet50,
+        ModelKind::Vgg16,
+        ModelKind::FcosResnet50Fpn,
+    ];
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed);
+        let mode = match rng.index(3) {
+            0 => Mode::Sharing,
+            1 => Mode::Exclusive,
+            _ => Mode::Fikit,
+        };
+        let mut cfg = ExperimentConfig {
+            mode,
+            seed,
+            ..ExperimentConfig::default()
+        };
+        cfg.measurement.runs = 3;
+        let n_services = 2 + rng.index(2);
+        for s in 0..n_services {
+            let model = models[rng.index(models.len())];
+            let prio = Priority::from_index(rng.index(10)).unwrap();
+            let tasks = 3 + rng.below(8) as u32;
+            cfg.services.push(
+                ServiceConfig::new(model, prio)
+                    .tasks(tasks)
+                    .with_key(&format!("svc{s}")),
+            );
+        }
+        let total_tasks: u32 = cfg
+            .services
+            .iter()
+            .map(|s| match s.pattern {
+                fikit::workload::InvocationPattern::BackToBack { count } => count,
+                _ => 0,
+            })
+            .sum();
+
+        let report = run_experiment(&cfg).unwrap_or_else(|e| panic!("seed {seed} ({mode}): {e}"));
+        assert_eq!(
+            report.outcomes.len() as u32,
+            total_tasks,
+            "seed {seed} ({mode}): all tasks complete"
+        );
+        let kernels: u64 = report.outcomes.iter().map(|o| o.kernels as u64).sum();
+        assert_eq!(
+            report.device.kernels, kernels,
+            "seed {seed} ({mode}): kernel conservation"
+        );
+        // JCTs are positive and finite.
+        for o in &report.outcomes {
+            assert!(o.jct() > Duration::ZERO, "seed {seed}: zero JCT");
+            assert!(o.finished >= o.started, "seed {seed}: time travel");
+        }
+    }
+}
+
+#[test]
+fn prop_priority_protection_bound() {
+    // In FIKIT mode, the high-priority service is never *worse* than
+    // default sharing by more than 25% (overhead-2 is bounded by one
+    // fill kernel per window).
+    let pairs = [
+        (ModelKind::KeypointRcnnResnet50Fpn, ModelKind::FcnResnet50),
+        (ModelKind::FasterrcnnResnet50Fpn, ModelKind::Vgg16),
+        (ModelKind::Alexnet, ModelKind::Resnet101),
+        (ModelKind::FcosResnet50Fpn, ModelKind::Deeplabv3Resnet50),
+    ];
+    for (seed, (high, low)) in pairs.iter().enumerate() {
+        let build = |mode: Mode| {
+            let mut cfg = ExperimentConfig {
+                mode,
+                seed: seed as u64,
+                ..ExperimentConfig::default()
+            };
+            cfg.measurement.runs = 5;
+            cfg.services
+                .push(ServiceConfig::new(*high, Priority::P0).tasks(15).with_key("h"));
+            cfg.services
+                .push(ServiceConfig::new(*low, Priority::P5).tasks(15).with_key("l"));
+            cfg
+        };
+        let fikit = run_experiment(&build(Mode::Fikit)).unwrap();
+        let share = run_experiment(&build(Mode::Sharing)).unwrap();
+        let f = fikit.service(&TaskKey::new("h")).unwrap().jct.mean_ms();
+        let s = share.service(&TaskKey::new("h")).unwrap().jct.mean_ms();
+        assert!(
+            f < s * 1.25,
+            "{high}/{low}: FIKIT high-prio {f:.2}ms vs sharing {s:.2}ms"
+        );
+    }
+}
+
+#[test]
+fn prop_protocol_round_trip_random() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let key = TaskKey::new(format!("svc-{}", rng.below(1000)));
+        let msg = match rng.index(6) {
+            0 => ClientMsg::Register {
+                task_key: key,
+                priority: Priority::from_index(rng.index(10)).unwrap(),
+                has_symbols: rng.chance(0.5),
+            },
+            1 => ClientMsg::TaskStart {
+                task_key: key,
+                task_id: TaskId(rng.next_u64() >> 1),
+            },
+            2 => ClientMsg::Launch {
+                task_key: key,
+                task_id: TaskId(rng.below(1 << 40)),
+                kernel_name: format!("kern<{}, \"квант\\n\">", rng.below(100)),
+                grid: Dim3::new(rng.below(65536) as u32, 1 + rng.below(64) as u32, 1),
+                block: Dim3::new(1 + rng.below(1024) as u32, 1, 1),
+                seq: rng.below(1 << 20) as u32,
+                issued_at: SimTime(rng.next_u64() >> 2),
+            },
+            3 => ClientMsg::Completion {
+                task_key: key,
+                task_id: TaskId(rng.below(1 << 30)),
+                seq: rng.below(1 << 16) as u32,
+                exec: Duration::from_nanos(rng.next_u64() >> 3),
+                finished_at: SimTime(rng.next_u64() >> 3),
+            },
+            4 => ClientMsg::TaskEnd {
+                task_key: key,
+                task_id: TaskId(rng.below(1 << 30)),
+            },
+            _ => ClientMsg::Disconnect { task_key: key },
+        };
+        let back = ClientMsg::decode(&msg.encode().unwrap())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(back, msg, "seed {seed}");
+    }
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed + 999);
+        let key = TaskKey::new("svc");
+        let msg = match rng.index(3) {
+            0 => SchedulerMsg::Registered {
+                task_key: key,
+                sharing_stage: rng.chance(0.5),
+            },
+            1 => SchedulerMsg::LaunchNow {
+                task_key: key,
+                task_id: TaskId(rng.below(1 << 30)),
+                seq: rng.below(1 << 16) as u32,
+            },
+            _ => SchedulerMsg::Hold {
+                task_key: key,
+                task_id: TaskId(rng.below(1 << 30)),
+                seq: rng.below(1 << 16) as u32,
+            },
+        };
+        assert_eq!(SchedulerMsg::decode(&msg.encode().unwrap()).unwrap(), msg);
+    }
+}
+
+#[test]
+fn prop_json_round_trip_random_documents() {
+    use fikit::util::json::Json;
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Int(rng.next_u64() as i64),
+            3 => Json::Str(format!("s{}\"\\\n→{}", rng.below(100), rng.below(100))),
+            4 => Json::Arr((0..rng.index(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut obj = Json::obj();
+                for i in 0..rng.index(5) {
+                    obj = obj.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                obj
+            }
+        }
+    }
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed);
+        let doc = random_json(&mut rng, 4);
+        let compact = Json::parse(&doc.encode()).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(compact, doc, "seed {seed} (compact)");
+        let pretty = Json::parse(&doc.encode_pretty()).unwrap();
+        assert_eq!(pretty, doc, "seed {seed} (pretty)");
+    }
+}
