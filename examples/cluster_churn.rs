@@ -1,0 +1,110 @@
+//! Dynamic cluster serving with churn: services arrive, live, migrate,
+//! and depart while the fleet stays up (DESIGN.md §8).
+//!
+//! Two acts:
+//!
+//! 1. **The rescue.** A workload-blind LeastLoaded placer is forced to
+//!    park a dense low-priority stream next to the high-priority
+//!    detector (the compatible device is momentarily full). We run the
+//!    exact same schedule twice — QoS migration off, then on — and show
+//!    the violation count and the windowed slowdown trajectory recover.
+//! 2. **Steady churn.** Seeded Poisson arrivals over a 3-GPU fleet with
+//!    per-GPU FIKIT coordinators and compatibility-aware BestMatch
+//!    placement: the serving regime the ROADMAP points at.
+//!
+//! ```bash
+//! cargo run --release --example cluster_churn
+//! ```
+
+use fikit::cluster::{run_churn, ChurnConfig, CompatMatrix, PlacementPolicy};
+use fikit::coordinator::Mode;
+use fikit::core::{Duration, Priority, SimTime};
+use fikit::workload::{ArrivalProcess, MixEntry, ModelKind, ServiceArrival};
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+/// Act 1: the scripted rescue schedule (see the cluster_churn experiment
+/// for the same scenario under shape checks).
+fn rescue(migration: bool) -> ChurnConfig {
+    let arrivals = ArrivalProcess::Trace(vec![
+        ServiceArrival::new(
+            SimTime::ZERO,
+            ModelKind::KeypointRcnnResnet50Fpn,
+            Priority::P0,
+            ms(3_000),
+        ),
+        ServiceArrival::new(SimTime(10_000_000), ModelKind::Vgg16, Priority::P7, ms(400)),
+        ServiceArrival::new(SimTime(20_000_000), ModelKind::Vgg16, Priority::P7, ms(3_000)),
+        ServiceArrival::new(
+            SimTime(30_000_000),
+            ModelKind::Resnet101,
+            Priority::P6,
+            ms(3_000),
+        ),
+    ]);
+    let mut cfg = ChurnConfig::new(2, PlacementPolicy::LeastLoaded, arrivals);
+    cfg.capacity = 2;
+    cfg.mode = Mode::Sharing;
+    cfg.qos.high_slowdown_bound = 1.3;
+    cfg.qos.scan_interval = ms(250);
+    cfg.qos.window = ms(1_000);
+    cfg.qos.migration = migration;
+    cfg.metrics_window = ms(500);
+    cfg
+}
+
+/// Act 2: Poisson churn on a FIKIT fleet.
+fn steady_churn() -> ChurnConfig {
+    let mix = vec![
+        MixEntry::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 1.0),
+        MixEntry::new(ModelKind::FasterrcnnResnet50Fpn, Priority::P1, 1.0),
+        MixEntry::new(ModelKind::FcnResnet50, Priority::P5, 2.0),
+        MixEntry::new(ModelKind::Resnet101, Priority::P6, 2.0),
+        MixEntry::new(ModelKind::Vgg16, Priority::P7, 1.0),
+    ];
+    let arrivals = ArrivalProcess::Poisson {
+        mean_interarrival: ms(300),
+        mean_lifetime: ms(600),
+        mix,
+        horizon: ms(2_000),
+    };
+    let mut cfg = ChurnConfig::new(3, PlacementPolicy::BestMatch, arrivals);
+    cfg.capacity = 2;
+    cfg.mode = Mode::Fikit;
+    cfg.qos.scan_interval = ms(250);
+    cfg.qos.window = ms(750);
+    cfg.metrics_window = ms(500);
+    cfg
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let compat = CompatMatrix::new(); // analytic predictions; swap in a
+                                      // measured matrix via CompatMatrix::load
+
+    println!("== Act 1: the rescue (same schedule, migration off vs on) ==\n");
+    for migration in [false, true] {
+        let report = run_churn(&rescue(migration), &compat)?;
+        println!(
+            "migration {}:",
+            if migration { "ON " } else { "OFF" }
+        );
+        println!("{}", report.summary());
+    }
+    println!(
+        "With migration ON, the scanner moves resnet101 off the detector's device\n\
+         as soon as the short-lived vgg departs; the windowed high-priority slowdown\n\
+         drops back under the bound instead of staying pinned above it.\n"
+    );
+
+    println!("== Act 2: steady Poisson churn on a FIKIT fleet ==\n");
+    let report = run_churn(&steady_churn(), &compat)?;
+    println!("{}", report.summary());
+    println!(
+        "Per-GPU FIKIT coordinators protect the high-priority tenants through\n\
+         arrivals and departures; BestMatch placement keeps dense fillers away\n\
+         from gappy detectors when it has the choice."
+    );
+    Ok(())
+}

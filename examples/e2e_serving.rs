@@ -1,5 +1,6 @@
-//! **End-to-end driver** (DESIGN.md deliverable): serve real compiled
-//! models through the FIKIT coordinator and report latency/throughput.
+//! **End-to-end driver** (DESIGN.md §1, the three-layer stack composed):
+//! serve real compiled models through the FIKIT coordinator and report
+//! latency/throughput.
 //!
 //! All three layers compose here:
 //!
@@ -12,8 +13,8 @@
 //!   feedback), with a high-priority transformer service and a
 //!   low-priority MLP batch service sharing the single CPU "device".
 //!
-//! Requires `make artifacts` first. Results are recorded in
-//! EXPERIMENTS.md §E2E.
+//! Requires `make artifacts` first. The simulation-side counterpart of
+//! this composition is mapped in DESIGN.md §5.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_serving
@@ -117,7 +118,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let speedup = hp[0] / hp[1];
     println!(
         "high-priority mean JCT: {:.2}ms (sharing) -> {:.2}ms (FIKIT) = {speedup:.2}x speedup\n\
-         (real PJRT compute; record in EXPERIMENTS.md §E2E)",
+         (real PJRT compute; the simulated counterpart is DESIGN.md §5)",
         hp[0], hp[1]
     );
     Ok(())

@@ -1,5 +1,5 @@
 //! `cargo bench --bench scheduler_hotpath` — microbenchmarks of the L3
-//! hot paths (DESIGN.md §Perf / EXPERIMENTS.md §Perf).
+//! hot paths (DESIGN.md §Perf).
 //!
 //! Budget reasoning: the paper's ε = 0.1 ms is the smallest gap worth
 //! filling, so every scheduling decision (BestPrioFit scan + queue ops +

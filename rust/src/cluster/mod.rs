@@ -1,5 +1,5 @@
 //! Cluster-level GPU task scheduling — the paper's §5 "Future Work",
-//! implemented.
+//! implemented and extended to a live serving fleet.
 //!
 //! > *"We also need to implement a cluster-level scheduling policy to
 //! > decide which concurrent tasks should be allocated to share the same
@@ -8,7 +8,7 @@
 //! > the same device. These measurements will be preloaded for
 //! > prediction in a cluster-level scheduling policy."*
 //!
-//! Components:
+//! Components (DESIGN.md §8):
 //!
 //! * [`compat`] — the **combination compatibility matrix**: measured (or
 //!   profile-predicted) high-priority slowdown and low-priority
@@ -17,14 +17,24 @@
 //!   time).
 //! * [`placement`] — placement policies that assign arriving services to
 //!   GPUs: the compatibility-aware **BestMatch** policy vs the
-//!   **LeastLoaded** and **RoundRobin** baselines.
-//! * [`sim`] — a multi-GPU cluster simulation that drives per-GPU FIKIT
-//!   simulations from a placement decision and reports fleet-wide QoS.
+//!   **LeastLoaded** and **RoundRobin** baselines. Two layers: the
+//!   incremental, capacity-aware [`placement::FleetState`] a live fleet
+//!   mutates (place / evict / migrate), and the one-shot batch
+//!   [`PlacementPolicy::place`] built on top of it.
+//! * [`sim`] — the cluster simulations. [`run_cluster`] is the static
+//!   batch run (fixed tenant set per GPU); [`run_churn`] is the
+//!   **dynamic serving loop**: services arrive over time (Poisson or
+//!   scripted), attach to per-GPU FIKIT coordinators mid-run, depart by
+//!   draining, and get reactively migrated when a device's trailing
+//!   high-priority slowdown exceeds the QoS bound.
 
 pub mod compat;
 pub mod placement;
 pub mod sim;
 
 pub use compat::{CompatEntry, CompatMatrix};
-pub use placement::{Placement, PlacementPolicy, ServiceRequest};
-pub use sim::{run_cluster, ClusterConfig, ClusterReport};
+pub use placement::{FleetState, Placement, PlacementPolicy, Resident, ServiceRequest};
+pub use sim::{
+    run_churn, run_cluster, ChurnConfig, ChurnReport, ChurnServiceOutcome, ClusterConfig,
+    ClusterReport, QosConfig,
+};

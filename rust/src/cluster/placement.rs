@@ -2,21 +2,36 @@
 //! on? (Paper §5: "when a task request arrives, the policy finds the GPU
 //! on which its optimal matching task resides using the preloaded
 //! measurement data".)
+//!
+//! Two API layers:
+//!
+//! * [`FleetState`] — the **incremental** interface a live cluster uses:
+//!   place one service at a time into the current resident set, evict a
+//!   departing service, and pick migration targets. Capacity-aware — a
+//!   device never hosts more than its configured number of services.
+//! * [`PlacementPolicy::place`] — the one-shot batch interface (all
+//!   requests known up front); it is a thin loop over the incremental
+//!   path, so both layers share one scoring implementation
+//!   (DESIGN.md §8).
 
 use super::compat::CompatMatrix;
 use crate::core::Priority;
+use crate::metrics::fleet::is_high_priority;
 use crate::workload::ModelKind;
 
 /// A service asking to be placed.
 #[derive(Debug, Clone)]
 pub struct ServiceRequest {
+    /// Model the service runs.
     pub model: ModelKind,
+    /// Task priority (P0 highest).
     pub priority: Priority,
     /// Back-to-back tasks the service will issue.
     pub tasks: u32,
 }
 
 impl ServiceRequest {
+    /// Convenience constructor.
     pub fn new(model: ModelKind, priority: Priority, tasks: u32) -> ServiceRequest {
         ServiceRequest {
             model,
@@ -29,7 +44,9 @@ impl ServiceRequest {
 /// A placement decision: service index → GPU index.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
+    /// `assignments[i]` is the GPU hosting request `i`.
     pub assignments: Vec<usize>,
+    /// Number of devices placed onto.
     pub gpus: usize,
 }
 
@@ -48,7 +65,8 @@ impl Placement {
 /// Available placement policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlacementPolicy {
-    /// Spread by index, ignoring workloads (the naive k8s default).
+    /// Spread by arrival order, ignoring workloads (the naive k8s
+    /// default).
     RoundRobin,
     /// Place each service on the GPU with the least total device-time
     /// demand so far (classic load balancing, workload-blind).
@@ -74,72 +92,301 @@ impl std::str::FromStr for PlacementPolicy {
     }
 }
 
+/// One service currently resident on a GPU (the incremental-placement
+/// view of a live fleet).
+#[derive(Debug, Clone)]
+pub struct Resident {
+    /// Cluster-unique service instance id.
+    pub id: u64,
+    /// Model the service runs.
+    pub model: ModelKind,
+    /// Priority of its tasks.
+    pub priority: Priority,
+    /// Device-time demand used for load accounting, in milliseconds.
+    /// Batch placement uses total demand (`mean_exec × tasks`); the churn
+    /// loop uses per-task demand since lifetimes are open-ended.
+    pub demand_ms: f64,
+}
+
+impl Resident {
+    /// A resident with per-task demand derived from the model spec.
+    pub fn per_task(id: u64, model: ModelKind, priority: Priority) -> Resident {
+        Resident {
+            id,
+            model,
+            priority,
+            demand_ms: model.spec().mean_exec().as_millis_f64(),
+        }
+    }
+}
+
+/// Live per-GPU occupancy: the mutable state behind incremental
+/// place / evict / migrate decisions.
+#[derive(Debug, Clone)]
+pub struct FleetState {
+    capacity: usize,
+    residents: Vec<Vec<Resident>>,
+    load_ms: Vec<f64>,
+    /// RoundRobin cursor (next GPU to try).
+    rr_next: usize,
+}
+
+impl FleetState {
+    /// An empty fleet of `gpus` devices, each hosting at most `capacity`
+    /// concurrent services.
+    pub fn new(gpus: usize, capacity: usize) -> FleetState {
+        assert!(gpus > 0, "cluster has no GPUs");
+        assert!(capacity > 0, "GPU capacity must be at least 1");
+        FleetState {
+            capacity,
+            residents: vec![Vec::new(); gpus],
+            load_ms: vec![0.0; gpus],
+            rr_next: 0,
+        }
+    }
+
+    /// Number of devices.
+    pub fn gpus(&self) -> usize {
+        self.residents.len()
+    }
+
+    /// Per-device service capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Services currently resident on `gpu`.
+    pub fn residents_on(&self, gpu: usize) -> &[Resident] {
+        &self.residents[gpu]
+    }
+
+    /// Accumulated demand on `gpu` in milliseconds.
+    pub fn load_ms(&self, gpu: usize) -> f64 {
+        self.load_ms[gpu]
+    }
+
+    /// Total residents across the fleet.
+    pub fn total_residents(&self) -> usize {
+        self.residents.iter().map(Vec::len).sum()
+    }
+
+    /// Whether `gpu` can take one more service.
+    pub fn has_room(&self, gpu: usize) -> bool {
+        self.residents[gpu].len() < self.capacity
+    }
+
+    /// The GPU hosting service `id`, if it is resident anywhere.
+    pub fn gpu_of(&self, id: u64) -> Option<usize> {
+        self.residents
+            .iter()
+            .position(|rs| rs.iter().any(|r| r.id == id))
+    }
+
+    /// Place one arriving service per `policy`. Returns the chosen GPU,
+    /// or `None` if every device is at capacity (the caller queues or
+    /// rejects the request).
+    pub fn place(
+        &mut self,
+        policy: PlacementPolicy,
+        resident: Resident,
+        compat: &CompatMatrix,
+    ) -> Option<usize> {
+        let gpu = self.pick(policy, &resident, compat, None)?;
+        self.insert(gpu, resident);
+        Some(gpu)
+    }
+
+    /// Remove a departing service. Returns the GPU it occupied.
+    pub fn evict(&mut self, id: u64) -> Option<usize> {
+        let gpu = self.gpu_of(id)?;
+        let pos = self.residents[gpu].iter().position(|r| r.id == id)?;
+        let r = self.residents[gpu].remove(pos);
+        self.load_ms[gpu] = (self.load_ms[gpu] - r.demand_ms).max(0.0);
+        Some(gpu)
+    }
+
+    /// Re-place service `id` onto the best device *other than its
+    /// current one* per `policy`. Returns `(from, to)` on success; `None`
+    /// (state unchanged) when no other device has room.
+    pub fn migrate(
+        &mut self,
+        id: u64,
+        policy: PlacementPolicy,
+        compat: &CompatMatrix,
+    ) -> Option<(usize, usize)> {
+        let from = self.gpu_of(id)?;
+        let pos = self.residents[from].iter().position(|r| r.id == id)?;
+        let resident = self.residents[from][pos].clone();
+        let to = self.pick(policy, &resident, compat, Some(from))?;
+        self.evict(id);
+        self.insert(to, resident);
+        Some((from, to))
+    }
+
+    /// Move a resident to a specific device, bypassing policy scoring
+    /// (rollback path: a migration target refused the service because a
+    /// previous instance is still draining there). Returns `false` —
+    /// with the state unchanged — if the service is unknown or `to` has
+    /// no room.
+    pub fn force_move(&mut self, id: u64, to: usize) -> bool {
+        let Some(from) = self.gpu_of(id) else {
+            return false;
+        };
+        if from == to {
+            return true;
+        }
+        if !self.has_room(to) {
+            return false;
+        }
+        let pos = self.residents[from]
+            .iter()
+            .position(|r| r.id == id)
+            .expect("gpu_of found it");
+        let r = self.residents[from].remove(pos);
+        self.load_ms[from] = (self.load_ms[from] - r.demand_ms).max(0.0);
+        self.insert(to, r);
+        true
+    }
+
+    /// Worst *predicted* high-priority slowdown on `gpu` given its
+    /// current residents: every high-priority (P0–P2) resident's
+    /// predicted slowdown is scored against each of its co-tenants, and
+    /// the worst value wins. `1.0` when no high-priority service is
+    /// co-located with anything.
+    ///
+    /// For the senior member of a pair this is exactly the compat
+    /// entry's semantics (host slowed by filler). A *junior* high-band
+    /// member (e.g. a P1 tenant beside a P0 host) suffers at least as
+    /// much; the flipped-orientation entry is the best available
+    /// predictor for it, so both orientations are consulted whenever the
+    /// victim is in the high band.
+    pub fn predicted_high_slowdown(&self, gpu: usize, compat: &CompatMatrix) -> f64 {
+        let rs = &self.residents[gpu];
+        let mut worst = 1.0f64;
+        for (i, victim) in rs.iter().enumerate() {
+            if !is_high_priority(victim.priority) {
+                continue;
+            }
+            for (j, other) in rs.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                worst = worst.max(compat.get(victim.model, other.model).high_slowdown);
+            }
+        }
+        worst
+    }
+
+    /// Fleet-wide worst predicted high-priority slowdown.
+    pub fn worst_predicted_high_slowdown(&self, compat: &CompatMatrix) -> f64 {
+        (0..self.gpus())
+            .map(|g| self.predicted_high_slowdown(g, compat))
+            .fold(1.0, f64::max)
+    }
+
+    fn insert(&mut self, gpu: usize, resident: Resident) {
+        debug_assert!(self.has_room(gpu), "placement exceeded GPU capacity");
+        self.load_ms[gpu] += resident.demand_ms;
+        self.residents[gpu].push(resident);
+    }
+
+    /// Choose a GPU for `resident` per `policy`, skipping full devices
+    /// and `exclude` (migration source). `None` if nothing has room.
+    fn pick(
+        &mut self,
+        policy: PlacementPolicy,
+        resident: &Resident,
+        compat: &CompatMatrix,
+        exclude: Option<usize>,
+    ) -> Option<usize> {
+        let gpus = self.gpus();
+        match policy {
+            PlacementPolicy::RoundRobin => {
+                for step in 0..gpus {
+                    let g = (self.rr_next + step) % gpus;
+                    if self.has_room(g) && Some(g) != exclude {
+                        self.rr_next = (g + 1) % gpus;
+                        return Some(g);
+                    }
+                }
+                None
+            }
+            PlacementPolicy::LeastLoaded => {
+                let mut best: Option<usize> = None;
+                for g in 0..gpus {
+                    if !self.has_room(g) || Some(g) == exclude {
+                        continue;
+                    }
+                    if best.map_or(true, |b| self.load_ms[g] < self.load_ms[b]) {
+                        best = Some(g);
+                    }
+                }
+                best
+            }
+            PlacementPolicy::BestMatch => {
+                let mut best: Option<(usize, f64)> = None;
+                for g in 0..gpus {
+                    if !self.has_room(g) || Some(g) == exclude {
+                        continue;
+                    }
+                    let mut score = if self.residents[g].is_empty() {
+                        // Empty GPU: always preferable to co-location
+                        // (pair scores cap at 1/1.0 + 0.5·1.0 = 1.5).
+                        2.0
+                    } else {
+                        self.residents[g]
+                            .iter()
+                            .map(|r| pair_score(resident, r, compat))
+                            .fold(f64::INFINITY, f64::min)
+                    };
+                    // Load tiebreak: 1ms of queued demand ≈ −1e-5.
+                    score -= self.load_ms[g] * 1e-5;
+                    if best.map_or(true, |(_, s)| score > s) {
+                        best = Some((g, score));
+                    }
+                }
+                best.map(|(g, _)| g)
+            }
+        }
+    }
+}
+
 impl PlacementPolicy {
-    /// Place `requests` (in arrival order) onto `gpus` devices.
+    /// Place `requests` (in arrival order) onto `gpus` devices with
+    /// unbounded per-device capacity — the one-shot batch interface,
+    /// implemented as a loop over [`FleetState::place`].
     pub fn place(
         self,
         requests: &[ServiceRequest],
         gpus: usize,
         compat: &CompatMatrix,
     ) -> Placement {
-        assert!(gpus > 0, "cluster has no GPUs");
-        let mut assignments = Vec::with_capacity(requests.len());
-        // Per-GPU state for the online policies.
-        let mut load_ms = vec![0.0f64; gpus];
-        let mut residents: Vec<Vec<usize>> = vec![Vec::new(); gpus];
-
-        for (idx, req) in requests.iter().enumerate() {
-            let demand_ms =
-                req.model.spec().mean_exec().as_millis_f64() * req.tasks as f64;
-            let gpu = match self {
-                PlacementPolicy::RoundRobin => idx % gpus,
-                PlacementPolicy::LeastLoaded => {
-                    (0..gpus)
-                        .min_by(|a, b| load_ms[*a].partial_cmp(&load_ms[*b]).unwrap())
-                        .unwrap()
-                }
-                PlacementPolicy::BestMatch => {
-                    // Score each GPU by the worst pairwise compatibility
-                    // the new service would create with residents
-                    // (bottleneck metric), with a mild load tiebreak.
-                    let mut best_gpu = 0;
-                    let mut best_score = f64::MIN;
-                    for g in 0..gpus {
-                        let mut score = if residents[g].is_empty() {
-                            // Empty GPU: always preferable to co-location
-                            // (scores cap at 1/1.0 + 0.5·1.0 = 1.5).
-                            2.0
-                        } else {
-                            residents[g]
-                                .iter()
-                                .map(|&r| {
-                                    let other = &requests[r];
-                                    pair_score(req, other, compat)
-                                })
-                                .fold(f64::INFINITY, f64::min)
-                        };
-                        // Load tiebreak: 1ms of queued demand ≈ −1e-5.
-                        score -= load_ms[g] * 1e-5;
-                        if score > best_score {
-                            best_score = score;
-                            best_gpu = g;
-                        }
-                    }
-                    best_gpu
-                }
-            };
-            assignments.push(gpu);
-            load_ms[gpu] += demand_ms;
-            residents[gpu].push(idx);
-        }
+        let mut fleet = FleetState::new(gpus, usize::MAX);
+        let assignments = requests
+            .iter()
+            .enumerate()
+            .map(|(idx, req)| {
+                let demand_ms =
+                    req.model.spec().mean_exec().as_millis_f64() * req.tasks as f64;
+                let resident = Resident {
+                    id: idx as u64,
+                    model: req.model,
+                    priority: req.priority,
+                    demand_ms,
+                };
+                fleet
+                    .place(self, resident, compat)
+                    .expect("unbounded capacity always has room")
+            })
+            .collect();
         Placement { assignments, gpus }
     }
 }
 
-/// Compatibility score between a new request and one resident, oriented
-/// by priority (the higher-priority one is the "host" whose gaps get
-/// filled).
-fn pair_score(a: &ServiceRequest, b: &ServiceRequest, compat: &CompatMatrix) -> f64 {
+/// Compatibility score between an arriving service and one resident,
+/// oriented by priority (the higher-priority one is the "host" whose
+/// gaps get filled).
+fn pair_score(a: &Resident, b: &Resident, compat: &CompatMatrix) -> f64 {
     let (high, low) = if a.priority.is_higher_than(b.priority) {
         (a.model, b.model)
     } else if b.priority.is_higher_than(a.priority) {
@@ -215,5 +462,148 @@ mod tests {
         assert_eq!("bm".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::BestMatch);
         assert_eq!("rr".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::RoundRobin);
         assert!("x".parse::<PlacementPolicy>().is_err());
+    }
+
+    // ----- incremental FleetState -----
+
+    #[test]
+    fn capacity_is_never_exceeded() {
+        let compat = CompatMatrix::new();
+        let mut fleet = FleetState::new(2, 2);
+        for id in 0..4 {
+            let r = Resident::per_task(id, ModelKind::Resnet50, Priority::P4);
+            assert!(fleet.place(PlacementPolicy::LeastLoaded, r, &compat).is_some());
+        }
+        // Fleet is full: a fifth service is refused, not squeezed in.
+        let r = Resident::per_task(99, ModelKind::Alexnet, Priority::P0);
+        assert!(fleet.place(PlacementPolicy::LeastLoaded, r, &compat).is_none());
+        assert_eq!(fleet.residents_on(0).len(), 2);
+        assert_eq!(fleet.residents_on(1).len(), 2);
+    }
+
+    #[test]
+    fn evict_frees_room_and_load() {
+        let compat = CompatMatrix::new();
+        let mut fleet = FleetState::new(1, 1);
+        let r = Resident::per_task(7, ModelKind::Vgg16, Priority::P3);
+        let demand = r.demand_ms;
+        fleet.place(PlacementPolicy::RoundRobin, r, &compat).unwrap();
+        assert!((fleet.load_ms(0) - demand).abs() < 1e-9);
+        assert!(!fleet.has_room(0));
+        assert_eq!(fleet.evict(7), Some(0));
+        assert_eq!(fleet.load_ms(0), 0.0);
+        assert!(fleet.has_room(0));
+        assert_eq!(fleet.evict(7), None, "double evict is a no-op");
+    }
+
+    #[test]
+    fn migrate_moves_off_the_current_gpu() {
+        let compat = CompatMatrix::new();
+        let mut fleet = FleetState::new(2, 2);
+        // A high-priority detector on GPU 0, a dense filler beside it.
+        fleet
+            .place(
+                PlacementPolicy::RoundRobin,
+                Resident::per_task(0, ModelKind::KeypointRcnnResnet50Fpn, Priority::P0),
+                &compat,
+            )
+            .unwrap();
+        let vgg = Resident::per_task(1, ModelKind::Vgg16, Priority::P7);
+        // Force co-location for the test.
+        fleet.insert(0, vgg);
+        let (from, to) = fleet.migrate(1, PlacementPolicy::BestMatch, &compat).unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(to, 1);
+        assert_eq!(fleet.gpu_of(1), Some(1));
+        assert_eq!(fleet.residents_on(0).len(), 1);
+    }
+
+    #[test]
+    fn migrate_with_nowhere_to_go_is_a_no_op() {
+        let compat = CompatMatrix::new();
+        let mut fleet = FleetState::new(2, 1);
+        fleet
+            .place(
+                PlacementPolicy::RoundRobin,
+                Resident::per_task(0, ModelKind::Resnet50, Priority::P0),
+                &compat,
+            )
+            .unwrap();
+        fleet
+            .place(
+                PlacementPolicy::RoundRobin,
+                Resident::per_task(1, ModelKind::Vgg16, Priority::P7),
+                &compat,
+            )
+            .unwrap();
+        // Both GPUs are full: service 1 has no migration target.
+        assert_eq!(fleet.migrate(1, PlacementPolicy::BestMatch, &compat), None);
+        assert_eq!(fleet.gpu_of(1), Some(1), "failed migration left state intact");
+    }
+
+    #[test]
+    fn round_robin_skips_full_gpus() {
+        let compat = CompatMatrix::new();
+        let mut fleet = FleetState::new(3, 1);
+        let g0 = fleet
+            .place(
+                PlacementPolicy::RoundRobin,
+                Resident::per_task(0, ModelKind::Alexnet, Priority::P4),
+                &compat,
+            )
+            .unwrap();
+        assert_eq!(g0, 0);
+        // Evicting nothing: next services take 1 and 2, then the wheel
+        // finds no room anywhere.
+        assert_eq!(
+            fleet
+                .place(
+                    PlacementPolicy::RoundRobin,
+                    Resident::per_task(1, ModelKind::Alexnet, Priority::P4),
+                    &compat,
+                )
+                .unwrap(),
+            1
+        );
+        assert_eq!(
+            fleet
+                .place(
+                    PlacementPolicy::RoundRobin,
+                    Resident::per_task(2, ModelKind::Alexnet, Priority::P4),
+                    &compat,
+                )
+                .unwrap(),
+            2
+        );
+        assert!(fleet
+            .place(
+                PlacementPolicy::RoundRobin,
+                Resident::per_task(3, ModelKind::Alexnet, Priority::P4),
+                &compat,
+            )
+            .is_none());
+    }
+
+    #[test]
+    fn predicted_slowdown_flags_bad_colocation() {
+        let compat = CompatMatrix::new();
+        let mut fleet = FleetState::new(2, 2);
+        fleet.insert(
+            0,
+            Resident::per_task(0, ModelKind::KeypointRcnnResnet50Fpn, Priority::P0),
+        );
+        fleet.insert(0, Resident::per_task(1, ModelKind::Vgg16, Priority::P7));
+        fleet.insert(
+            1,
+            Resident::per_task(2, ModelKind::FasterrcnnResnet50Fpn, Priority::P0),
+        );
+        // GPU 0 hosts a high-prio detector with a dense co-tenant; GPU 1's
+        // detector runs alone.
+        assert!(fleet.predicted_high_slowdown(0, &compat) > 1.0);
+        assert_eq!(fleet.predicted_high_slowdown(1, &compat), 1.0);
+        assert_eq!(
+            fleet.worst_predicted_high_slowdown(&compat),
+            fleet.predicted_high_slowdown(0, &compat)
+        );
     }
 }

@@ -1,26 +1,51 @@
-//! Multi-GPU cluster simulation: place services with a policy, run each
-//! GPU's tenant set through the single-GPU FIKIT simulator, and report
-//! fleet-wide QoS.
+//! Multi-GPU cluster simulation — static and **dynamic**.
+//!
+//! Two entry points (DESIGN.md §8):
+//!
+//! * [`run_cluster`] — the one-shot batch run: place a fixed request set
+//!   with a policy, run each GPU's tenant set through the single-GPU
+//!   FIKIT simulator, report fleet-wide QoS. This is the paper's §5
+//!   proposal evaluated in vitro.
+//! * [`run_churn`] — the serving version: a fleet-level event loop where
+//!   services *arrive over time* (seeded Poisson or scripted trace,
+//!   [`ArrivalProcess`]), are placed incrementally by the live
+//!   [`FleetState`], run on per-GPU [`GpuSim`] coordinators via
+//!   mid-run attach, and *depart* (drain, detach). A periodic QoS scan
+//!   watches each device's trailing-window high-priority slowdown and —
+//!   when it exceeds the configured bound — reactively **migrates** the
+//!   most disruptive low-priority tenant to the policy's best other
+//!   device.
 
 use super::compat::CompatMatrix;
-use super::placement::{Placement, PlacementPolicy, ServiceRequest};
+use super::placement::{FleetState, Placement, PlacementPolicy, Resident, ServiceRequest};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::run_experiment;
+use crate::coordinator::driver::{run_experiment, profile_service, GpuSim};
 use crate::coordinator::Mode;
-use crate::core::{Priority, Result};
-use crate::metrics::{JctStats, TextTable};
+use crate::core::{Duration, Priority, Result, SimTime, TaskKey};
+use crate::metrics::fleet::is_high_priority;
+use crate::metrics::{FleetMetrics, FleetSample, JctStats, TextTable};
+use crate::profile::ProfileStore;
+use crate::workload::{ArrivalProcess, InvocationPattern, ModelKind};
+use std::collections::BTreeMap;
+use std::collections::HashMap;
 
-/// Cluster experiment description.
+/// Cluster experiment description (static batch run).
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// Number of identical devices in the fleet.
     pub gpus: usize,
+    /// Placement policy under test.
     pub policy: PlacementPolicy,
+    /// The request set, in arrival order.
     pub requests: Vec<ServiceRequest>,
+    /// Per-GPU scheduling mode.
     pub mode: Mode,
+    /// Root seed.
     pub seed: u64,
 }
 
 impl ClusterConfig {
+    /// A config with no requests yet.
     pub fn new(gpus: usize, policy: PlacementPolicy) -> ClusterConfig {
         ClusterConfig {
             gpus,
@@ -35,18 +60,24 @@ impl ClusterConfig {
 /// Per-service outcome across the cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterServiceOutcome {
+    /// Device the service ran on.
     pub gpu: usize,
+    /// Model the service ran.
     pub model: crate::workload::ModelKind,
+    /// Its task priority.
     pub priority: Priority,
+    /// JCT statistics over its completed tasks.
     pub jct: JctStats,
     /// Mean JCT / solo mean JCT (1.0 = unharmed by sharing).
     pub slowdown: f64,
 }
 
-/// Fleet-wide results.
+/// Fleet-wide results of a static batch run.
 #[derive(Debug)]
 pub struct ClusterReport {
+    /// The placement decision that was simulated.
     pub placement: Placement,
+    /// One outcome per placed service.
     pub services: Vec<ClusterServiceOutcome>,
 }
 
@@ -57,7 +88,7 @@ impl ClusterReport {
         let highs: Vec<f64> = self
             .services
             .iter()
-            .filter(|s| (s.priority as u8) <= 2)
+            .filter(|s| is_high_priority(s.priority))
             .map(|s| s.slowdown)
             .collect();
         if highs.is_empty() {
@@ -71,11 +102,12 @@ impl ClusterReport {
     pub fn worst_high_priority_slowdown(&self) -> f64 {
         self.services
             .iter()
-            .filter(|s| (s.priority as u8) <= 2)
+            .filter(|s| is_high_priority(s.priority))
             .map(|s| s.slowdown)
             .fold(1.0, f64::max)
     }
 
+    /// Human-readable per-service table plus the headline QoS line.
     pub fn summary(&self) -> String {
         let mut t = TextTable::new(&["gpu", "model", "prio", "mean JCT (ms)", "slowdown"]);
         let mut rows: Vec<&ClusterServiceOutcome> = self.services.iter().collect();
@@ -98,7 +130,7 @@ impl ClusterReport {
     }
 }
 
-/// Run the full cluster experiment: place, then simulate each GPU.
+/// Run the full static cluster experiment: place, then simulate each GPU.
 pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<ClusterReport> {
     let placement = cfg.policy.place(&cfg.requests, cfg.gpus, compat);
 
@@ -107,14 +139,7 @@ pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<Cluster
     for req in &cfg.requests {
         let name = req.model.name();
         if !solo_ms.contains_key(name) {
-            let mut solo = ExperimentConfig {
-                mode: Mode::Sharing,
-                seed: cfg.seed,
-                ..ExperimentConfig::default()
-            };
-            solo.services
-                .push(ServiceConfig::new(req.model, Priority::P0).tasks(req.tasks.min(50)));
-            solo_ms.insert(name, run_experiment(&solo)?.services[0].jct.mean_ms());
+            solo_ms.insert(name, solo_mean_ms(req.model, req.tasks.min(50), cfg.seed)?);
         }
     }
 
@@ -160,10 +185,493 @@ pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<Cluster
     })
 }
 
+/// Mean solo JCT of `model` (no co-tenant, default sharing path) — the
+/// denominator of every slowdown in this module.
+fn solo_mean_ms(model: ModelKind, tasks: u32, seed: u64) -> Result<f64> {
+    let mut solo = ExperimentConfig {
+        mode: Mode::Sharing,
+        seed,
+        ..ExperimentConfig::default()
+    };
+    solo.services
+        .push(ServiceConfig::new(model, Priority::P0).tasks(tasks.max(3)));
+    Ok(run_experiment(&solo)?.services[0].jct.mean_ms())
+}
+
+// ---------------------------------------------------------------------
+// Dynamic serving: churn + reactive migration
+// ---------------------------------------------------------------------
+
+/// QoS policy of the churn loop: when is a device "in violation", how
+/// often do we look, and do we act on it.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// A device violates QoS when the mean high-priority slowdown of its
+    /// trailing [`QosConfig::window`] exceeds this bound.
+    pub high_slowdown_bound: f64,
+    /// How often the fleet scans every device.
+    pub scan_interval: Duration,
+    /// Trailing window the scan evaluates.
+    pub window: Duration,
+    /// Whether a violating device triggers a reactive migration of its
+    /// most disruptive low-priority tenant.
+    pub migration: bool,
+}
+
+impl Default for QosConfig {
+    fn default() -> QosConfig {
+        QosConfig {
+            high_slowdown_bound: 1.5,
+            scan_interval: Duration::from_millis(250),
+            window: Duration::from_millis(1_000),
+            migration: true,
+        }
+    }
+}
+
+/// Dynamic cluster serving experiment description.
+#[derive(Debug, Clone)]
+pub struct ChurnConfig {
+    /// Number of identical devices.
+    pub gpus: usize,
+    /// Max concurrent services per device.
+    pub capacity: usize,
+    /// Placement policy for arrivals *and* migration targets.
+    pub policy: PlacementPolicy,
+    /// Per-GPU scheduling mode.
+    pub mode: Mode,
+    /// Root seed (drives the arrival process and every GPU sim).
+    pub seed: u64,
+    /// The service churn schedule generator.
+    pub arrivals: ArrivalProcess,
+    /// QoS scanning and migration policy.
+    pub qos: QosConfig,
+    /// Fleet metrics bucket width (trajectory reporting).
+    pub metrics_window: Duration,
+}
+
+impl ChurnConfig {
+    /// A config with sensible defaults around the given arrival process.
+    pub fn new(gpus: usize, policy: PlacementPolicy, arrivals: ArrivalProcess) -> ChurnConfig {
+        ChurnConfig {
+            gpus,
+            capacity: 3,
+            policy,
+            mode: Mode::Fikit,
+            seed: 0xF1C1,
+            arrivals,
+            qos: QosConfig::default(),
+            metrics_window: Duration::from_millis(1_000),
+        }
+    }
+}
+
+/// Lifetime summary of one service instance in a churn run.
+#[derive(Debug, Clone)]
+pub struct ChurnServiceOutcome {
+    /// Schedule-order instance id.
+    pub id: u64,
+    /// Model the service ran.
+    pub model: ModelKind,
+    /// Its task priority.
+    pub priority: Priority,
+    /// When it asked to be placed.
+    pub arrived: SimTime,
+    /// When it departed (equals `arrived` for rejected services).
+    pub departed: SimTime,
+    /// Tasks it completed over its lifetime.
+    pub completed: usize,
+    /// Mean slowdown over its completions (1.0 if it completed nothing).
+    pub mean_slowdown: f64,
+    /// Times it was migrated between devices.
+    pub migrations: u32,
+    /// True when the fleet was at capacity and the service was refused.
+    pub rejected: bool,
+}
+
+/// Results of a dynamic churn run.
+#[derive(Debug)]
+pub struct ChurnReport {
+    /// One entry per scheduled service instance.
+    pub services: Vec<ChurnServiceOutcome>,
+    /// Fleet-wide windowed samples (trajectory of QoS over the run).
+    pub fleet: FleetMetrics,
+    /// Fleet time at which the last GPU went quiescent.
+    pub sim_end: SimTime,
+    /// QoS scans performed (one per device per scan tick).
+    pub scans: usize,
+    /// Scans that found a device over the slowdown bound.
+    pub qos_violations: usize,
+    /// Reactive migrations executed.
+    pub migrations: usize,
+    /// Arrivals refused because no device had capacity.
+    pub rejected: usize,
+    /// Total completed tasks fleet-wide.
+    pub completed_total: usize,
+}
+
+impl ChurnReport {
+    /// Mean slowdown across every high-priority completion.
+    pub fn high_mean_slowdown(&self) -> f64 {
+        self.fleet.high_mean_slowdown()
+    }
+
+    /// Low-priority completions per second of fleet time.
+    pub fn low_throughput_per_s(&self) -> f64 {
+        self.fleet.low_throughput_per_s(self.sim_end)
+    }
+
+    /// Human-readable run summary: headline counters plus the windowed
+    /// QoS trajectory.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "services={} rejected={} completed={} migrations={} qos_violations={}/{} \
+             high mean slowdown={:.2}x low throughput={:.1}/s sim_end={:.2}s\n",
+            self.services.len(),
+            self.rejected,
+            self.completed_total,
+            self.migrations,
+            self.qos_violations,
+            self.scans,
+            self.high_mean_slowdown(),
+            self.low_throughput_per_s(),
+            self.sim_end.as_secs_f64(),
+        );
+        out.push_str(&self.fleet.summary_table(self.sim_end).render());
+        out
+    }
+}
+
+/// Fleet-level events, processed in `(time, seq)` order.
+#[derive(Debug, Clone)]
+enum FleetEvent {
+    /// Schedule entry `idx` arrives and requests placement.
+    Arrive(usize),
+    /// Service instance `id` departs (drain + detach).
+    Depart(u64),
+    /// Periodic QoS scan over every device.
+    Scan,
+}
+
+/// Book-keeping for one live service instance.
+struct LiveService {
+    key: TaskKey,
+    cfg: ServiceConfig,
+    gpu: usize,
+}
+
+/// Run the dynamic cluster serving simulation.
+///
+/// Deterministic for a fixed config: the arrival schedule, every GPU
+/// sim, and the scan cadence all derive from `cfg.seed`.
+pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport> {
+    assert!(cfg.gpus > 0, "cluster has no GPUs");
+    let schedule = cfg.arrivals.generate(cfg.seed);
+
+    // --- offline phase: solo baselines + profiles (paper lifecycle) ---
+    let mut solo_ms: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut store = ProfileStore::new();
+    let mut model_profiles: HashMap<&'static str, crate::profile::TaskProfile> = HashMap::new();
+    for arrival in &schedule {
+        let name = arrival.model.name();
+        if !solo_ms.contains_key(name) {
+            solo_ms.insert(name, solo_mean_ms(arrival.model, 12, cfg.seed)?);
+        }
+        if cfg.mode == Mode::Fikit && !model_profiles.contains_key(name) {
+            let mut base = ExperimentConfig {
+                seed: cfg.seed,
+                ..ExperimentConfig::default()
+            };
+            base.measurement.runs = 5;
+            let svc = ServiceConfig::new(arrival.model, Priority::P0);
+            model_profiles.insert(name, profile_service(&base, &svc)?.profile);
+        }
+    }
+    // Each instance shares its model's measured profile under its own key.
+    if cfg.mode == Mode::Fikit {
+        for (idx, arrival) in schedule.iter().enumerate() {
+            let mut profile = model_profiles[arrival.model.name()].clone();
+            profile.task_key = TaskKey::new(format!("svc{idx}").as_str());
+            store.insert(profile);
+        }
+    }
+
+    // --- per-GPU sims ---
+    let gpu_cfgs: Vec<ExperimentConfig> = (0..cfg.gpus)
+        .map(|g| {
+            let mut c = ExperimentConfig {
+                mode: cfg.mode,
+                seed: cfg.seed ^ (g as u64) << 32,
+                ..ExperimentConfig::default()
+            };
+            c.measurement.runs = 5;
+            c
+        })
+        .collect();
+    let mut sims: Vec<GpuSim> = Vec::with_capacity(cfg.gpus);
+    for gpu_cfg in &gpu_cfgs {
+        sims.push(GpuSim::new(gpu_cfg, &store)?);
+    }
+    let mut harvested: Vec<usize> = vec![0; cfg.gpus];
+
+    // --- fleet event queue ---
+    let mut fleet_q: BTreeMap<(SimTime, u64), FleetEvent> = BTreeMap::new();
+    let mut seq: u64 = 0;
+    let push = |q: &mut BTreeMap<(SimTime, u64), FleetEvent>, seq: &mut u64, t, ev| {
+        q.insert((t, *seq), ev);
+        *seq += 1;
+    };
+    for (idx, arrival) in schedule.iter().enumerate() {
+        push(&mut fleet_q, &mut seq, arrival.at, FleetEvent::Arrive(idx));
+    }
+    let churn_end = schedule
+        .iter()
+        .map(|a| a.departs_at())
+        .max()
+        .unwrap_or(SimTime::ZERO);
+    if !cfg.qos.scan_interval.is_zero() {
+        let mut t = SimTime::ZERO + cfg.qos.scan_interval;
+        while t <= churn_end {
+            push(&mut fleet_q, &mut seq, t, FleetEvent::Scan);
+            t = t + cfg.qos.scan_interval;
+        }
+    }
+
+    // --- fleet state + accounting ---
+    let mut fleet = FleetState::new(cfg.gpus, cfg.capacity);
+    let mut live: HashMap<u64, LiveService> = HashMap::new();
+    let mut key_to_id: HashMap<TaskKey, u64> = HashMap::new();
+    let mut metrics = FleetMetrics::new(cfg.metrics_window);
+    let mut services: Vec<ChurnServiceOutcome> = schedule
+        .iter()
+        .enumerate()
+        .map(|(idx, a)| ChurnServiceOutcome {
+            id: idx as u64,
+            model: a.model,
+            priority: a.priority,
+            arrived: a.at,
+            departed: a.departs_at(),
+            completed: 0,
+            mean_slowdown: 1.0,
+            migrations: 0,
+            rejected: false,
+        })
+        .collect();
+    let mut slowdown_sums: Vec<f64> = vec![0.0; schedule.len()];
+    let mut scans = 0usize;
+    let mut qos_violations = 0usize;
+    let mut migrations = 0usize;
+    let mut rejected = 0usize;
+
+    // --- the serving loop ---
+    while let Some(((t, _), ev)) = fleet_q.pop_first() {
+        // Bring every GPU up to the fleet clock, then harvest completions
+        // so scan decisions see everything that finished before `t`.
+        for sim in sims.iter_mut() {
+            sim.run_until(t);
+        }
+        harvest(
+            &sims,
+            &mut harvested,
+            &key_to_id,
+            &schedule,
+            &solo_ms,
+            &mut metrics,
+            &mut services,
+            &mut slowdown_sums,
+        );
+
+        match ev {
+            FleetEvent::Arrive(idx) => {
+                let arrival = &schedule[idx];
+                let id = idx as u64;
+                let resident = Resident::per_task(id, arrival.model, arrival.priority);
+                match fleet.place(cfg.policy, resident, compat) {
+                    None => {
+                        rejected += 1;
+                        services[idx].rejected = true;
+                        services[idx].departed = arrival.at;
+                    }
+                    Some(gpu) => {
+                        let key = TaskKey::new(format!("svc{idx}").as_str());
+                        let mut svc_cfg = ServiceConfig::new(arrival.model, arrival.priority)
+                            .with_key(key.as_str());
+                        svc_cfg.pattern = InvocationPattern::ContinuousUntil {
+                            until: SimTime::MAX,
+                        };
+                        sims[gpu].attach(&svc_cfg, t)?;
+                        key_to_id.insert(key.clone(), id);
+                        live.insert(
+                            id,
+                            LiveService {
+                                key,
+                                cfg: svc_cfg,
+                                gpu,
+                            },
+                        );
+                        push(&mut fleet_q, &mut seq, arrival.departs_at(), FleetEvent::Depart(id));
+                    }
+                }
+            }
+            FleetEvent::Depart(id) => {
+                if let Some(svc) = live.remove(&id) {
+                    fleet.evict(id);
+                    sims[svc.gpu].detach(&svc.key)?;
+                    services[id as usize].departed = t;
+                }
+            }
+            FleetEvent::Scan => {
+                for gpu in 0..cfg.gpus {
+                    scans += 1;
+                    let from = SimTime(t.nanos().saturating_sub(cfg.qos.window.nanos()));
+                    let slice = metrics.samples_in(gpu, from, t);
+                    let highs: Vec<f64> = slice
+                        .iter()
+                        .filter(|smp| is_high_priority(smp.priority))
+                        .map(|smp| smp.slowdown)
+                        .collect();
+                    if highs.is_empty() {
+                        continue;
+                    }
+                    let mean = highs.iter().sum::<f64>() / highs.len() as f64;
+                    if mean <= cfg.qos.high_slowdown_bound {
+                        continue;
+                    }
+                    qos_violations += 1;
+                    if !cfg.qos.migration {
+                        continue;
+                    }
+                    // Victim: the low-priority resident predicted to hurt
+                    // the device's high-priority tenants the most.
+                    let victim = pick_victim(&fleet, gpu, compat);
+                    let Some(victim_id) = victim else { continue };
+                    let Some((vfrom, vto)) = fleet.migrate(victim_id, cfg.policy, compat)
+                    else {
+                        continue; // nowhere to go; keep suffering
+                    };
+                    let svc = live.get_mut(&victim_id).expect("victim is live");
+                    if !sims[vto].can_attach(&svc.key) {
+                        // A drained-enough slot isn't available on the
+                        // target (the service lived there moments ago and
+                        // its last task is still in flight): undo.
+                        fleet.force_move(victim_id, vfrom);
+                        continue;
+                    }
+                    sims[vfrom].detach(&svc.key)?;
+                    sims[vto].attach(&svc.cfg, t)?;
+                    svc.gpu = vto;
+                    migrations += 1;
+                    services[victim_id as usize].migrations += 1;
+                }
+            }
+        }
+    }
+
+    // Drain: departures all processed; let in-flight tasks finish.
+    for sim in sims.iter_mut() {
+        sim.run_until(SimTime::MAX);
+    }
+    harvest(
+        &sims,
+        &mut harvested,
+        &key_to_id,
+        &schedule,
+        &solo_ms,
+        &mut metrics,
+        &mut services,
+        &mut slowdown_sums,
+    );
+
+    for (idx, svc) in services.iter_mut().enumerate() {
+        if svc.completed > 0 {
+            svc.mean_slowdown = slowdown_sums[idx] / svc.completed as f64;
+        }
+    }
+    let sim_end = sims
+        .iter()
+        .map(|s| s.now())
+        .max()
+        .unwrap_or(SimTime::ZERO)
+        .max(churn_end);
+    let completed_total = services.iter().map(|s| s.completed).sum();
+    Ok(ChurnReport {
+        services,
+        fleet: metrics,
+        sim_end,
+        scans,
+        qos_violations,
+        migrations,
+        rejected,
+        completed_total,
+    })
+}
+
+/// Pull new task outcomes out of every GPU sim into the fleet metrics.
+#[allow(clippy::too_many_arguments)]
+fn harvest(
+    sims: &[GpuSim],
+    harvested: &mut [usize],
+    key_to_id: &HashMap<TaskKey, u64>,
+    schedule: &[crate::workload::ServiceArrival],
+    solo_ms: &BTreeMap<&'static str, f64>,
+    metrics: &mut FleetMetrics,
+    services: &mut [ChurnServiceOutcome],
+    slowdown_sums: &mut [f64],
+) {
+    for (gpu, sim) in sims.iter().enumerate() {
+        let outcomes = sim.outcomes();
+        for outcome in &outcomes[harvested[gpu]..] {
+            let Some(&id) = key_to_id.get(&outcome.task_key) else {
+                continue; // not a churn-managed service (defensive)
+            };
+            let idx = id as usize;
+            let model = schedule[idx].model;
+            let jct_ms = outcome.jct().as_millis_f64();
+            let slowdown = (jct_ms / solo_ms[model.name()]).max(0.0);
+            services[idx].completed += 1;
+            slowdown_sums[idx] += slowdown;
+            metrics.record(FleetSample {
+                gpu,
+                priority: outcome.priority,
+                arrival: outcome.arrival,
+                jct: outcome.jct(),
+                slowdown,
+            });
+        }
+        harvested[gpu] = outcomes.len();
+    }
+}
+
+/// The low-priority tenant on `gpu` with the worst predicted impact on
+/// the device's high-priority residents (`None` if the device hosts no
+/// low-priority service or no high-priority service to protect).
+fn pick_victim(fleet: &FleetState, gpu: usize, compat: &CompatMatrix) -> Option<u64> {
+    let residents = fleet.residents_on(gpu);
+    let highs: Vec<&Resident> = residents
+        .iter()
+        .filter(|r| is_high_priority(r.priority))
+        .collect();
+    if highs.is_empty() {
+        return None;
+    }
+    residents
+        .iter()
+        .filter(|r| !is_high_priority(r.priority))
+        .map(|r| {
+            let impact = highs
+                .iter()
+                .map(|h| compat.get(h.model, r.model).high_slowdown)
+                .fold(1.0, f64::max);
+            (r.id, impact)
+        })
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("impacts are finite"))
+        .map(|(id, _)| id)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::ModelKind;
+    use crate::workload::{MixEntry, ModelKind, ServiceArrival};
 
     fn requests() -> Vec<ServiceRequest> {
         vec![
@@ -209,5 +717,130 @@ mod tests {
         cfg.requests = vec![ServiceRequest::new(ModelKind::Alexnet, Priority::P0, 5)];
         let report = run_cluster(&cfg, &CompatMatrix::new()).unwrap();
         assert_eq!(report.services.len(), 1);
+    }
+
+    // ----- dynamic churn -----
+
+    /// A short scripted churn: one high-priority detector and two
+    /// low-priority fillers overlapping on a small fleet.
+    fn small_trace() -> ArrivalProcess {
+        ArrivalProcess::Trace(vec![
+            ServiceArrival::new(
+                SimTime::ZERO,
+                ModelKind::KeypointRcnnResnet50Fpn,
+                Priority::P0,
+                Duration::from_millis(400),
+            ),
+            ServiceArrival::new(
+                SimTime(50_000_000),
+                ModelKind::FcnResnet50,
+                Priority::P5,
+                Duration::from_millis(300),
+            ),
+            ServiceArrival::new(
+                SimTime(100_000_000),
+                ModelKind::Vgg16,
+                Priority::P7,
+                Duration::from_millis(250),
+            ),
+        ])
+    }
+
+    #[test]
+    fn churn_run_completes_and_accounts_every_service() {
+        let mut cfg = ChurnConfig::new(2, PlacementPolicy::BestMatch, small_trace());
+        cfg.qos.scan_interval = Duration::from_millis(100);
+        cfg.qos.window = Duration::from_millis(200);
+        let report = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(report.services.len(), 3);
+        assert_eq!(report.rejected, 0);
+        // Every service got GPU time.
+        for svc in &report.services {
+            assert!(svc.completed > 0, "{:?} completed nothing", svc.model);
+            assert!(svc.departed > svc.arrived);
+        }
+        assert_eq!(
+            report.completed_total,
+            report.services.iter().map(|s| s.completed).sum::<usize>()
+        );
+        assert!(report.sim_end >= SimTime(350_000_000));
+        assert!(report.summary().contains("qos_violations"));
+    }
+
+    #[test]
+    fn churn_is_deterministic_per_seed() {
+        let mix = vec![
+            MixEntry::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 1.0),
+            MixEntry::new(ModelKind::FcnResnet50, Priority::P5, 1.0),
+            MixEntry::new(ModelKind::Vgg16, Priority::P7, 1.0),
+        ];
+        let arrivals = ArrivalProcess::Poisson {
+            mean_interarrival: Duration::from_millis(120),
+            mean_lifetime: Duration::from_millis(250),
+            mix,
+            horizon: Duration::from_millis(800),
+        };
+        let mut cfg = ChurnConfig::new(2, PlacementPolicy::BestMatch, arrivals);
+        cfg.seed = 0xC0FFEE;
+        let a = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        let b = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(a.completed_total, b.completed_total);
+        assert_eq!(a.qos_violations, b.qos_violations);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.sim_end, b.sim_end);
+        assert_eq!(a.fleet.len(), b.fleet.len());
+    }
+
+    #[test]
+    fn capacity_overflow_rejects_instead_of_overpacking() {
+        // 1 GPU × capacity 1, two overlapping services: the second is
+        // rejected, not squeezed in.
+        let arrivals = ArrivalProcess::Trace(vec![
+            ServiceArrival::new(
+                SimTime::ZERO,
+                ModelKind::Alexnet,
+                Priority::P0,
+                Duration::from_millis(200),
+            ),
+            ServiceArrival::new(
+                SimTime(50_000_000),
+                ModelKind::Vgg16,
+                Priority::P5,
+                Duration::from_millis(100),
+            ),
+        ]);
+        let mut cfg = ChurnConfig::new(1, PlacementPolicy::LeastLoaded, arrivals);
+        cfg.capacity = 1;
+        let report = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(report.rejected, 1);
+        assert!(report.services[1].rejected);
+        assert_eq!(report.services[1].completed, 0);
+        assert!(report.services[0].completed > 0);
+    }
+
+    #[test]
+    fn departures_free_capacity_for_replacement() {
+        // Same 1×1 fleet, but the second service arrives after the first
+        // departs: both run.
+        let arrivals = ArrivalProcess::Trace(vec![
+            ServiceArrival::new(
+                SimTime::ZERO,
+                ModelKind::Alexnet,
+                Priority::P0,
+                Duration::from_millis(100),
+            ),
+            ServiceArrival::new(
+                SimTime(150_000_000),
+                ModelKind::Vgg16,
+                Priority::P5,
+                Duration::from_millis(100),
+            ),
+        ]);
+        let mut cfg = ChurnConfig::new(1, PlacementPolicy::LeastLoaded, arrivals);
+        cfg.capacity = 1;
+        let report = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(report.rejected, 0);
+        assert!(report.services[0].completed > 0);
+        assert!(report.services[1].completed > 0);
     }
 }

@@ -26,7 +26,7 @@ pub struct Fit {
 /// Within-priority selection rule for gap filling. The paper's
 /// Algorithm 2 uses LongestFit; the alternatives are kept as explicit
 /// ablations (bench `ablation_fill_policy`) for the design-choice
-/// analysis in DESIGN.md.
+/// analysis in DESIGN.md §Perf.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum FillPolicy {
     /// Paper Algorithm 2: the longest request that still fits (maximizes

@@ -159,7 +159,7 @@ pub fn profile_service(cfg: &ExperimentConfig, svc: &ServiceConfig) -> Result<Pr
         ..cfg.clone()
     };
     let empty_store = ProfileStore::new();
-    let mut sim = Sim::new(&solo, &empty_store)?;
+    let mut sim = GpuSim::new(&solo, &empty_store)?;
     // Replace the process with a measuring-stage one.
     let measuring_proc = sim.make_process(&service, 0, Stage::Measuring);
     sim.procs[0] = measuring_proc;
@@ -197,13 +197,35 @@ pub fn run_with_profiles(cfg: &ExperimentConfig, store: &ProfileStore) -> Result
         }
     }
     let start = std::time::Instant::now();
-    let mut sim = Sim::new(cfg, store)?;
+    let mut sim = GpuSim::new(cfg, store)?;
     sim.run();
     Ok(sim.into_report(start.elapsed()))
 }
 
-/// The discrete-event simulation state.
-struct Sim<'a> {
+/// What detaching a service left behind (DESIGN.md §8: departures drain,
+/// they never cut a task mid-kernel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetachOutcome {
+    /// The service was idle: nothing left on this GPU.
+    Idle,
+    /// A task is still in flight; it will run to completion (and only
+    /// then is the service fully gone from this GPU).
+    Draining,
+}
+
+/// The discrete-event simulation state of **one GPU**: its device FIFO,
+/// its hosted service processes, and (in FIKIT mode) its coordinator.
+///
+/// Two ways to drive it:
+///
+/// * the one-shot path ([`run_experiment`] / [`run_with_profiles`])
+///   builds a `GpuSim` from a config and runs it to completion — every
+///   paper experiment uses this;
+/// * the **dynamic** path keeps the sim alive and interleaves
+///   [`GpuSim::run_until`] with [`GpuSim::attach`] /
+///   [`GpuSim::detach`] calls — services come and go mid-run, which is
+///   what the cluster churn loop (DESIGN.md §8) is built on.
+pub struct GpuSim<'a> {
     cfg: &'a ExperimentConfig,
     store: &'a ProfileStore,
     procs: Vec<ServiceProcess>,
@@ -213,6 +235,8 @@ struct Sim<'a> {
     outcomes: Vec<TaskOutcome>,
     /// Remaining follow-up arrivals for BackToBack patterns.
     b2b_remaining: Vec<u32>,
+    /// Services that departed: no new arrivals, in-flight tasks drain.
+    detached: Vec<bool>,
     key_to_idx: HashMap<TaskKey, usize>,
     /// Exclusive modes: pending task order + lock state. Entries are
     /// (svc, priority, arrival seq); plain Exclusive picks by arrival,
@@ -224,13 +248,10 @@ struct Sim<'a> {
     sim_now: SimTime,
 }
 
-impl<'a> Sim<'a> {
-    fn new(cfg: &'a ExperimentConfig, store: &'a ProfileStore) -> Result<Sim<'a>> {
-        let mut procs = Vec::with_capacity(cfg.services.len());
-        let mut key_to_idx = HashMap::new();
-        let mut b2b_remaining = vec![0u32; cfg.services.len()];
-        let mut events = EventQueue::new();
-
+impl<'a> GpuSim<'a> {
+    /// Build a sim hosting `cfg.services` (which may be empty for a
+    /// dynamic fleet GPU that receives services via [`GpuSim::attach`]).
+    pub fn new(cfg: &'a ExperimentConfig, store: &'a ProfileStore) -> Result<GpuSim<'a>> {
         let scheduler = (cfg.mode == Mode::Fikit).then(|| {
             FikitScheduler::new(SchedulerConfig {
                 epsilon: cfg.epsilon,
@@ -239,15 +260,16 @@ impl<'a> Sim<'a> {
             })
         });
 
-        let sim_base = Sim {
+        let mut sim = GpuSim {
             cfg,
             store,
             procs: Vec::new(),
             device: SimDevice::new(cfg.device.clone()),
             events: EventQueue::new(),
-            scheduler: None,
+            scheduler,
             outcomes: Vec::new(),
             b2b_remaining: Vec::new(),
+            detached: Vec::new(),
             key_to_idx: HashMap::new(),
             excl_queue: VecDeque::new(),
             excl_seq: 0,
@@ -255,39 +277,140 @@ impl<'a> Sim<'a> {
             events_processed: 0,
             sim_now: SimTime::ZERO,
         };
+        for svc_cfg in &cfg.services {
+            sim.register_service(svc_cfg, SimTime::ZERO)?;
+        }
+        Ok(sim)
+    }
 
-        for (idx, svc_cfg) in cfg.services.iter().enumerate() {
-            let service = svc_cfg.to_service();
-            key_to_idx.insert(service.key.clone(), idx);
-            // Initial arrivals per pattern.
-            match service.pattern {
-                InvocationPattern::BackToBack { count } => {
-                    if count > 0 {
-                        events.push(SimTime::ZERO, Event::TaskArrival { svc: idx });
-                        b2b_remaining[idx] = count - 1;
-                    }
-                }
-                InvocationPattern::Every { interval, count } => {
-                    for i in 0..count {
-                        let t = SimTime(interval.nanos() * i as u64);
-                        events.push(t, Event::TaskArrival { svc: idx });
-                    }
-                }
-                InvocationPattern::ContinuousUntil { .. } => {
-                    events.push(SimTime::ZERO, Event::TaskArrival { svc: idx });
+    /// Attach a service to this GPU at time `at` (≥ the sim clock): its
+    /// arrival pattern starts ticking from `at`. In FIKIT mode the
+    /// service's profile must already be in the store — the cluster
+    /// layer profiles offline, exactly the paper's lifecycle.
+    ///
+    /// A key that was previously detached *and* fully drained may be
+    /// reused (service migrating back); an undrained or live key is
+    /// rejected so in-flight kernel completions can never be routed to
+    /// the wrong process.
+    pub fn attach(&mut self, svc_cfg: &ServiceConfig, at: SimTime) -> Result<usize> {
+        if at < self.sim_now {
+            return Err(crate::core::Error::Invariant(format!(
+                "attach at {at} is before the sim clock {}",
+                self.sim_now
+            )));
+        }
+        self.register_service(svc_cfg, at)
+    }
+
+    /// Detach a service: queued arrivals are dropped, no new arrivals are
+    /// accepted, and any in-flight task drains to completion under the
+    /// normal scheduling rules.
+    pub fn detach(&mut self, key: &TaskKey) -> Result<DetachOutcome> {
+        let idx = *self.key_to_idx.get(key).ok_or_else(|| {
+            crate::core::Error::Invariant(format!("detach of unknown service {key}"))
+        })?;
+        if !self.detached[idx] {
+            self.detached[idx] = true;
+            self.procs[idx].clear_arrivals();
+            // Exclusive modes: forget its waiting (never-started) tasks.
+            self.excl_queue.retain(|(s, _, _)| *s != idx);
+        }
+        Ok(if self.procs[idx].is_active() {
+            DetachOutcome::Draining
+        } else {
+            DetachOutcome::Idle
+        })
+    }
+
+    /// Could a service with this key be attached right now? False while
+    /// a live instance or an undrained (still in-flight) detached
+    /// predecessor holds the key.
+    pub fn can_attach(&self, key: &TaskKey) -> bool {
+        match self.key_to_idx.get(key) {
+            None => true,
+            Some(&idx) => self.detached[idx] && !self.procs[idx].is_active(),
+        }
+    }
+
+    /// Is this service still draining an in-flight task?
+    pub fn is_draining(&self, key: &TaskKey) -> bool {
+        self.key_to_idx
+            .get(key)
+            .is_some_and(|&idx| self.detached[idx] && self.procs[idx].is_active())
+    }
+
+    /// Number of attached (non-departed) services.
+    pub fn live_services(&self) -> usize {
+        self.detached.iter().filter(|d| !**d).count()
+    }
+
+    /// The sim clock (time of the last processed event, or the last
+    /// `run_until` bound if later).
+    pub fn now(&self) -> SimTime {
+        self.sim_now
+    }
+
+    /// All completed tasks so far, in completion order. The cluster loop
+    /// keeps a cursor into this to harvest new outcomes per epoch.
+    pub fn outcomes(&self) -> &[TaskOutcome] {
+        &self.outcomes
+    }
+
+    /// Device-side counters (busy time, fill time, queue stats).
+    pub fn device_stats(&self) -> &DeviceStats {
+        self.device.stats()
+    }
+
+    /// Scheduler counters (FIKIT mode only).
+    pub fn scheduler_stats(&self) -> Option<&SchedulerStats> {
+        self.scheduler.as_ref().map(|s| s.stats())
+    }
+
+    /// No events left: every attached service is quiescent.
+    pub fn is_idle(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Common attach path for initial and mid-run services.
+    fn register_service(&mut self, svc_cfg: &ServiceConfig, at: SimTime) -> Result<usize> {
+        let service = svc_cfg.to_service();
+        if let Some(&existing) = self.key_to_idx.get(&service.key) {
+            if !self.detached[existing] || self.procs[existing].is_active() {
+                return Err(crate::core::Error::Invariant(format!(
+                    "service key {} is already attached to this GPU",
+                    service.key
+                )));
+            }
+        }
+        if self.scheduler.is_some() {
+            // FIKIT mode shares against preloaded profiles.
+            self.store.require(&service.key)?;
+        }
+        let idx = self.procs.len();
+        self.key_to_idx.insert(service.key.clone(), idx);
+        self.b2b_remaining.push(0);
+        self.detached.push(false);
+        // Initial arrivals per pattern, offset to the attach time.
+        match service.pattern {
+            InvocationPattern::BackToBack { count } => {
+                if count > 0 {
+                    self.events.push(at, Event::TaskArrival { svc: idx });
+                    self.b2b_remaining[idx] = count - 1;
                 }
             }
-            procs.push(sim_base.make_process(&service, idx, Stage::Sharing));
+            InvocationPattern::Every { interval, count } => {
+                for i in 0..count {
+                    let t = at + Duration::from_nanos(interval.nanos() * i as u64);
+                    self.events.push(t, Event::TaskArrival { svc: idx });
+                }
+            }
+            InvocationPattern::ContinuousUntil { .. } => {
+                self.events.push(at, Event::TaskArrival { svc: idx });
+            }
         }
-
-        Ok(Sim {
-            procs,
-            events,
-            scheduler,
-            b2b_remaining,
-            key_to_idx,
-            ..sim_base
-        })
+        let proc = self.make_process(&service, idx, Stage::Sharing);
+        self.procs.push(proc);
+        Ok(idx)
     }
 
     /// Build a service process with the experiment's cost models applied.
@@ -375,6 +498,8 @@ impl<'a> Sim<'a> {
         self.events.push(issue_at, Event::IssueKernel { svc });
     }
 
+    /// Run to completion (all arrival patterns exhausted), subject to the
+    /// config's optional horizon.
     fn run(&mut self) {
         let horizon = self.cfg.horizon.map(|h| SimTime::ZERO + h);
         while let Some((now, event)) = self.events.pop() {
@@ -385,48 +510,82 @@ impl<'a> Sim<'a> {
             }
             self.sim_now = now;
             self.events_processed += 1;
-            match event {
-                Event::TaskArrival { svc } => {
-                    self.procs[svc].enqueue_arrival(now);
-                    if matches!(self.cfg.mode, Mode::Exclusive | Mode::SoftExclusive) {
-                        let prio = self.procs[svc].priority();
-                        let seq = self.excl_seq;
-                        self.excl_seq += 1;
-                        self.excl_queue.push_back((svc, prio, seq));
-                    }
-                    self.maybe_start(svc, now);
+            self.handle_event(event, now);
+        }
+    }
+
+    /// Process every event with timestamp ≤ `bound`, then advance the sim
+    /// clock to `bound`. The dynamic cluster loop calls this between
+    /// fleet events (arrivals, departures, QoS scans) so all GPUs stay in
+    /// step on the fleet clock. The config's optional horizon caps the
+    /// bound, matching [`GpuSim::run`]'s behavior on the same config.
+    pub fn run_until(&mut self, bound: SimTime) {
+        let bound = match self.cfg.horizon {
+            Some(h) => bound.min(SimTime::ZERO + h),
+            None => bound,
+        };
+        while let Some(t) = self.events.peek_time() {
+            if t > bound {
+                break;
+            }
+            let (now, event) = self.events.pop().expect("peeked event exists");
+            self.sim_now = now;
+            self.events_processed += 1;
+            self.handle_event(event, now);
+        }
+        if bound != SimTime::MAX && bound > self.sim_now {
+            self.sim_now = bound;
+        }
+    }
+
+    /// One event-loop step (shared by [`GpuSim::run`] and
+    /// [`GpuSim::run_until`]).
+    fn handle_event(&mut self, event: Event, now: SimTime) {
+        match event {
+            Event::TaskArrival { svc } => {
+                if self.detached[svc] {
+                    // The service departed before this arrival fired.
+                    return;
                 }
-                Event::IssueKernel { svc } => {
-                    let launch = self.procs[svc].issue_next(now);
-                    match self.cfg.mode {
-                        Mode::Sharing | Mode::Exclusive | Mode::SoftExclusive => {
-                            self.submit(launch, LaunchSource::Direct, now);
-                        }
-                        Mode::Fikit => {
-                            let subs = self
-                                .scheduler
-                                .as_mut()
-                                .expect("fikit mode has scheduler")
-                                .on_launch(launch, now, self.store);
-                            self.submit_all(subs, now);
-                        }
-                    }
+                self.procs[svc].enqueue_arrival(now);
+                if matches!(self.cfg.mode, Mode::Exclusive | Mode::SoftExclusive) {
+                    let prio = self.procs[svc].priority();
+                    let seq = self.excl_seq;
+                    self.excl_seq += 1;
+                    self.excl_queue.push_back((svc, prio, seq));
                 }
-                Event::KernelDone { svc, record } => {
-                    // Scheduler reacts first (fill windows open on holder
-                    // kernel completions).
-                    if let Some(sched) = self.scheduler.as_mut() {
-                        let subs = sched.on_kernel_done(&record, now, self.store);
+                self.maybe_start(svc, now);
+            }
+            Event::IssueKernel { svc } => {
+                let launch = self.procs[svc].issue_next(now);
+                match self.cfg.mode {
+                    Mode::Sharing | Mode::Exclusive | Mode::SoftExclusive => {
+                        self.submit(launch, LaunchSource::Direct, now);
+                    }
+                    Mode::Fikit => {
+                        let subs = self
+                            .scheduler
+                            .as_mut()
+                            .expect("fikit mode has scheduler")
+                            .on_launch(launch, now, self.store);
                         self.submit_all(subs, now);
                     }
-                    match self.procs[svc].on_kernel_done(record, now) {
-                        ProcessAction::IssueAt(t) => {
-                            self.events.push(t, Event::IssueKernel { svc });
-                        }
-                        ProcessAction::None => {}
-                        ProcessAction::TaskCompleted(outcome) => {
-                            self.on_task_completed(svc, outcome, now);
-                        }
+                }
+            }
+            Event::KernelDone { svc, record } => {
+                // Scheduler reacts first (fill windows open on holder
+                // kernel completions).
+                if let Some(sched) = self.scheduler.as_mut() {
+                    let subs = sched.on_kernel_done(&record, now, self.store);
+                    self.submit_all(subs, now);
+                }
+                match self.procs[svc].on_kernel_done(record, now) {
+                    ProcessAction::IssueAt(t) => {
+                        self.events.push(t, Event::IssueKernel { svc });
+                    }
+                    ProcessAction::None => {}
+                    ProcessAction::TaskCompleted(outcome) => {
+                        self.on_task_completed(svc, outcome, now);
                     }
                 }
             }
@@ -442,16 +601,17 @@ impl<'a> Sim<'a> {
             self.submit_all(drains, now);
         }
 
-        // Pattern follow-up arrivals.
+        // Pattern follow-up arrivals (suppressed once the service has
+        // departed — its closed loop ends with the drained task).
         match self.procs[svc].service.pattern {
             InvocationPattern::BackToBack { .. } => {
-                if self.b2b_remaining[svc] > 0 {
+                if self.b2b_remaining[svc] > 0 && !self.detached[svc] {
                     self.b2b_remaining[svc] -= 1;
                     self.events.push(now, Event::TaskArrival { svc });
                 }
             }
             InvocationPattern::ContinuousUntil { until } => {
-                if now < until {
+                if now < until && !self.detached[svc] {
                     self.events.push(now, Event::TaskArrival { svc });
                 }
             }
@@ -470,7 +630,13 @@ impl<'a> Sim<'a> {
 
     fn into_report(self, wall: std::time::Duration) -> ExperimentReport {
         let mut services = Vec::with_capacity(self.procs.len());
-        for proc in &self.procs {
+        for (idx, proc) in self.procs.iter().enumerate() {
+            // A reattached key leaves its superseded predecessor slot in
+            // `procs`; report each key once, via its newest slot (which
+            // aggregates every outcome recorded under the key).
+            if self.key_to_idx.get(proc.key()) != Some(&idx) {
+                continue;
+            }
             let key = proc.key().clone();
             let mine: Vec<&TaskOutcome> =
                 self.outcomes.iter().filter(|o| o.task_key == key).collect();

@@ -16,8 +16,11 @@
 //!   the GPU (the highest-priority active task), routes direct vs queued
 //!   launches (the three cases of Fig 11), and reacts to kernel
 //!   completions.
-//! * [`driver`] — the simulation event loop that runs a set of services
-//!   under a [`Mode`] and produces an [`driver::ExperimentReport`].
+//! * [`driver`] — the simulation event loop ([`driver::GpuSim`]) that
+//!   runs a set of services under a [`Mode`] and produces an
+//!   [`driver::ExperimentReport`]. Besides the one-shot experiment path
+//!   it supports **dynamic membership** — services attach and detach
+//!   mid-run — which the cluster churn loop (DESIGN.md §8) drives.
 
 pub mod best_prio_fit;
 pub mod driver;

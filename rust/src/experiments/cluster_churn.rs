@@ -1,0 +1,251 @@
+//! **Cluster churn** — dynamic serving with arrivals, departures, and
+//! reactive QoS migration (DESIGN.md §8; the serving-scale extension of
+//! the paper's §5 cluster proposal).
+//!
+//! Two built-in scenarios:
+//!
+//! * **rescue** — a scripted trace that forces a workload-blind
+//!   LeastLoaded placer into a bad co-location: a dense low-priority
+//!   stream lands next to the high-priority detector because the only
+//!   compatible device is momentarily full. Once capacity frees up, the
+//!   QoS scanner migrates the offender away. Run twice (migration off /
+//!   on) under a fixed seed, the scenario isolates exactly what reactive
+//!   re-placement buys: the violation count drops and the high-priority
+//!   slowdown trajectory recovers instead of staying pinned above the
+//!   bound.
+//! * **fikit-churn** — seeded Poisson arrivals over a 3-GPU fleet with
+//!   per-GPU FIKIT coordinators and BestMatch placement: the steady-state
+//!   serving regime (churn + kernel-granularity protection together).
+
+use super::{ExperimentResult, Options, ShapeCheck};
+use crate::cluster::{run_churn, ChurnConfig, ChurnReport, CompatMatrix, PlacementPolicy};
+use crate::coordinator::Mode;
+use crate::core::{Duration, Priority, Result, SimTime};
+use crate::metrics::TextTable;
+use crate::workload::{ArrivalProcess, MixEntry, ModelKind, ServiceArrival};
+
+/// Time stretch: quick mode shrinks every duration proportionally, which
+/// preserves the scenario logic (scan cadence, windows, and lifetimes
+/// scale together). Floor keeps windows ≫ one detector JCT (~30 ms).
+fn stretch(opts: Options) -> f64 {
+    opts.scale.clamp(0.25, 1.0)
+}
+
+fn ms(v: f64) -> Duration {
+    Duration::from_millis_f64(v)
+}
+
+/// The scripted rescue trace (times in fleet ms, scaled by `k`):
+///
+/// * t=0      keypointrcnn  P0, life 3000k — the protected tenant (GPU 0)
+/// * t=10     vgg16         P7, life  400k — fills GPU 1...
+/// * t=20     vgg16         P7, life 3000k — ...to capacity
+/// * t=30     resnet101     P6, life 3000k — forced next to the detector
+///
+/// When the short-lived vgg departs (~400k), GPU 1 has room again and the
+/// scanner can move resnet101 off the detector's device.
+fn rescue_arrivals(k: f64) -> ArrivalProcess {
+    ArrivalProcess::Trace(vec![
+        ServiceArrival::new(
+            SimTime::ZERO,
+            ModelKind::KeypointRcnnResnet50Fpn,
+            Priority::P0,
+            ms(3_000.0 * k),
+        ),
+        ServiceArrival::new(
+            SimTime(10_000_000),
+            ModelKind::Vgg16,
+            Priority::P7,
+            ms(400.0 * k),
+        ),
+        ServiceArrival::new(
+            SimTime(20_000_000),
+            ModelKind::Vgg16,
+            Priority::P7,
+            ms(3_000.0 * k),
+        ),
+        ServiceArrival::new(
+            SimTime(30_000_000),
+            ModelKind::Resnet101,
+            Priority::P6,
+            ms(3_000.0 * k),
+        ),
+    ])
+}
+
+fn rescue_cfg(opts: Options, migration: bool) -> ChurnConfig {
+    let k = stretch(opts);
+    let mut cfg = ChurnConfig::new(2, PlacementPolicy::LeastLoaded, rescue_arrivals(k));
+    cfg.capacity = 2;
+    // Default sharing inside each GPU: the co-location pain is maximal,
+    // so the experiment isolates the placement/migration effect.
+    cfg.mode = Mode::Sharing;
+    cfg.seed = opts.seed;
+    cfg.qos.high_slowdown_bound = 1.3;
+    cfg.qos.scan_interval = ms(250.0 * k);
+    cfg.qos.window = ms(1_000.0 * k);
+    cfg.qos.migration = migration;
+    cfg.metrics_window = ms(500.0 * k);
+    cfg
+}
+
+fn fikit_churn_cfg(opts: Options) -> ChurnConfig {
+    let k = stretch(opts);
+    let mix = vec![
+        MixEntry::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 1.0),
+        MixEntry::new(ModelKind::FasterrcnnResnet50Fpn, Priority::P1, 1.0),
+        MixEntry::new(ModelKind::FcnResnet50, Priority::P5, 2.0),
+        MixEntry::new(ModelKind::Resnet101, Priority::P6, 2.0),
+        MixEntry::new(ModelKind::Vgg16, Priority::P7, 1.0),
+    ];
+    let arrivals = ArrivalProcess::Poisson {
+        mean_interarrival: ms(300.0 * k),
+        mean_lifetime: ms(600.0 * k),
+        mix,
+        horizon: ms(2_000.0 * k),
+    };
+    let mut cfg = ChurnConfig::new(3, PlacementPolicy::BestMatch, arrivals);
+    cfg.capacity = 2;
+    cfg.mode = Mode::Fikit;
+    cfg.seed = opts.seed;
+    cfg.qos.scan_interval = ms(250.0 * k);
+    cfg.qos.window = ms(750.0 * k);
+    cfg.metrics_window = ms(500.0 * k);
+    cfg
+}
+
+fn row(t: &mut TextTable, name: &str, r: &ChurnReport) {
+    t.row(vec![
+        name.to_string(),
+        r.services.len().to_string(),
+        r.rejected.to_string(),
+        r.completed_total.to_string(),
+        format!("{}/{}", r.qos_violations, r.scans),
+        r.migrations.to_string(),
+        format!("{:.2}x", r.high_mean_slowdown()),
+        format!("{:.1}", r.low_throughput_per_s()),
+    ]);
+}
+
+/// Run the cluster-churn experiment.
+pub fn run(opts: Options) -> Result<ExperimentResult> {
+    let compat = CompatMatrix::new(); // analytic prediction fallback
+
+    let no_mig = run_churn(&rescue_cfg(opts, false), &compat)?;
+    let mig = run_churn(&rescue_cfg(opts, true), &compat)?;
+    let mig_replay = run_churn(&rescue_cfg(opts, true), &compat)?;
+    let fikit = run_churn(&fikit_churn_cfg(opts), &compat)?;
+
+    let mut table = TextTable::new(&[
+        "scenario",
+        "services",
+        "rejected",
+        "completed",
+        "QoS viol.",
+        "migrations",
+        "H mean slow",
+        "L thr (/s)",
+    ]);
+    row(&mut table, "rescue (no migration)", &no_mig);
+    row(&mut table, "rescue (migration)", &mig);
+    row(&mut table, "fikit-churn (poisson)", &fikit);
+
+    let series = vec![
+        ("violations/no_migration".to_string(), no_mig.qos_violations as f64),
+        ("violations/migration".to_string(), mig.qos_violations as f64),
+        ("migrations".to_string(), mig.migrations as f64),
+        ("h_slowdown/no_migration".to_string(), no_mig.high_mean_slowdown()),
+        ("h_slowdown/migration".to_string(), mig.high_mean_slowdown()),
+        ("low_thr/migration".to_string(), mig.low_throughput_per_s()),
+        ("fikit/h_slowdown".to_string(), fikit.high_mean_slowdown()),
+        ("fikit/completed".to_string(), fikit.completed_total as f64),
+    ];
+
+    let accepted_all_ran = fikit
+        .services
+        .iter()
+        .filter(|s| !s.rejected)
+        .all(|s| s.completed > 0);
+    let checks = vec![
+        ShapeCheck::new(
+            "the bad co-location is detected",
+            no_mig.qos_violations > 0,
+            format!("{} violations without migration", no_mig.qos_violations),
+        ),
+        ShapeCheck::new(
+            "reactive migration fires",
+            mig.migrations >= 1,
+            format!("{} migrations", mig.migrations),
+        ),
+        ShapeCheck::new(
+            "migration reduces QoS bound violations",
+            mig.qos_violations < no_mig.qos_violations,
+            format!(
+                "violations: {} with migration vs {} without",
+                mig.qos_violations, no_mig.qos_violations
+            ),
+        ),
+        ShapeCheck::new(
+            "low-priority work keeps completing after migration",
+            mig.low_throughput_per_s() > 0.0,
+            format!("{:.1} low-prio tasks/s", mig.low_throughput_per_s()),
+        ),
+        ShapeCheck::new(
+            "deterministic replay under the fixed seed",
+            mig.qos_violations == mig_replay.qos_violations
+                && mig.migrations == mig_replay.migrations
+                && mig.completed_total == mig_replay.completed_total
+                && mig.sim_end == mig_replay.sim_end,
+            format!(
+                "run A: ({}, {}, {}, {}); run B: ({}, {}, {}, {})",
+                mig.qos_violations,
+                mig.migrations,
+                mig.completed_total,
+                mig.sim_end,
+                mig_replay.qos_violations,
+                mig_replay.migrations,
+                mig_replay.completed_total,
+                mig_replay.sim_end
+            ),
+        ),
+        ShapeCheck::new(
+            "every accepted service in the poisson churn completes work",
+            accepted_all_ran,
+            format!(
+                "{} services, {} rejected, {} tasks completed",
+                fikit.services.len(),
+                fikit.rejected,
+                fikit.completed_total
+            ),
+        ),
+    ];
+
+    let notes = format!(
+        "rescue: LeastLoaded forces resnet101 (P6) next to keypointrcnn (P0) while the \
+         compatible device is full; once the short-lived vgg departs, the scanner \
+         (bound {:.1}x) migrates it away. windowed trajectory (migration run):\n{}",
+        rescue_cfg(opts, true).qos.high_slowdown_bound,
+        mig.fleet.summary_table(mig.sim_end).render()
+    );
+
+    Ok(ExperimentResult {
+        id: "cluster_churn",
+        title: "Dynamic cluster serving: churn + reactive QoS migration",
+        table,
+        series,
+        checks,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_churn_runs_quick() {
+        let r = run(Options::quick()).unwrap();
+        assert!(r.series.len() >= 8);
+        assert!(r.all_checks_pass(), "{}", r.render());
+    }
+}

@@ -10,6 +10,7 @@
 //! Run all of them via `cargo bench --bench paper_experiments` or one at
 //! a time via `fikit experiment <id>`.
 
+pub mod cluster_churn;
 pub mod combos;
 pub mod fig13;
 pub mod fig14;
@@ -133,6 +134,7 @@ pub const ALL: &[&str] = &[
     "fig21",
     "ablation_feedback",
     "ablation_fill_policy",
+    "cluster_churn",
 ];
 
 /// Run one experiment by id.
@@ -149,6 +151,7 @@ pub fn run(id: &str, opts: Options) -> Result<ExperimentResult> {
         "fig21" | "table3" => fig21_table3::run(opts),
         "ablation_feedback" => perf_ablation::run(opts),
         "ablation_fill_policy" => fill_policy::run(opts),
+        "cluster_churn" => cluster_churn::run(opts),
         other => Err(crate::core::Error::Parse(format!(
             "unknown experiment {other:?}; known: {ALL:?}"
         ))),

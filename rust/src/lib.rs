@@ -27,6 +27,9 @@
 //!   timelines.
 //! * [`experiments`] — one module per paper table/figure; the bench
 //!   harness regenerates the full evaluation section.
+//! * [`cluster`] — the paper's §5 cluster-level proposal, grown into a
+//!   dynamic serving fleet: compatibility-aware placement, service
+//!   churn, and reactive QoS migration (see `DESIGN.md` §8).
 //!
 //! ## Quickstart
 //!

@@ -33,6 +33,8 @@ USAGE:
   fikit serve [--bind ADDR] [--profiles profiles.json]
   fikit cluster [--gpus N] [--policy bestmatch|leastloaded|roundrobin]
                 [--compat compat.json] [--measure-compat]
+  fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
+                      [--seed S] [--secs T] [--bound X] [--no-migration]
   fikit list-models
   fikit verify-artifacts [--dir artifacts]
 ";
@@ -56,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("profile") => cmd_profile(args),
         Some("serve") => cmd_serve(args),
         Some("cluster") => cmd_cluster(args),
+        Some("cluster-churn") => cmd_cluster_churn(args),
         Some("list-models") => cmd_list_models(),
         Some("verify-artifacts") => cmd_verify_artifacts(args),
         _ => {
@@ -249,6 +252,47 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     ];
     let report = run_cluster(&cfg, &compat)?;
     println!("policy={policy:?} gpus={gpus}");
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_cluster_churn(args: &Args) -> Result<()> {
+    use fikit::cluster::{run_churn, ChurnConfig, CompatMatrix, PlacementPolicy};
+    use fikit::core::Duration;
+    use fikit::workload::{ArrivalProcess, MixEntry};
+
+    let gpus: usize = args.opt_parse("gpus", 3usize)?;
+    let capacity: usize = args.opt_parse("capacity", 2usize)?;
+    let policy: PlacementPolicy = args.opt("policy").unwrap_or("bestmatch").parse()?;
+    let mode: Mode = args.opt("mode").unwrap_or("fikit").parse()?;
+    let secs: f64 = args.opt_parse("secs", 2.0f64)?;
+
+    // A representative mixed-priority churn workload.
+    let mix = vec![
+        MixEntry::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 1.0),
+        MixEntry::new(ModelKind::FasterrcnnResnet50Fpn, Priority::P1, 1.0),
+        MixEntry::new(ModelKind::FcnResnet50, Priority::P5, 2.0),
+        MixEntry::new(ModelKind::Resnet101, Priority::P6, 2.0),
+        MixEntry::new(ModelKind::Vgg16, Priority::P7, 1.0),
+    ];
+    let arrivals = ArrivalProcess::Poisson {
+        mean_interarrival: Duration::from_millis(300),
+        mean_lifetime: Duration::from_millis(600),
+        mix,
+        horizon: Duration::from_millis_f64(secs * 1_000.0),
+    };
+    let mut cfg = ChurnConfig::new(gpus, policy, arrivals);
+    cfg.capacity = capacity;
+    cfg.mode = mode;
+    cfg.seed = args.opt_parse("seed", 0xF1C1u64)?;
+    cfg.qos.high_slowdown_bound = args.opt_parse("bound", 1.5f64)?;
+    cfg.qos.migration = !args.flag("no-migration");
+
+    let report = run_churn(&cfg, &CompatMatrix::new())?;
+    println!(
+        "policy={policy:?} mode={mode} gpus={gpus} capacity={capacity} migration={}",
+        cfg.qos.migration
+    );
     println!("{}", report.summary());
     Ok(())
 }

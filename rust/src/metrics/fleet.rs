@@ -1,0 +1,333 @@
+//! Fleet-wide metrics: windowed JCT/slowdown aggregation **across
+//! devices** for the dynamic cluster simulation (DESIGN.md §8).
+//!
+//! The single-GPU [`JctStats`](super::JctStats) summarizes one service on
+//! one device over a whole run. A serving fleet needs two more axes:
+//!
+//! * **across devices** — one headline number for "how are the
+//!   high-priority tenants doing fleet-wide right now";
+//! * **across time** — churn makes QoS a *trajectory*: a migration at
+//!   t=4s should be visible as window 4's slowdown dropping, not be
+//!   averaged away over the full run.
+//!
+//! [`FleetMetrics`] collects one [`FleetSample`] per completed task
+//! (tagged with device, priority, and its slowdown vs the service's solo
+//! baseline) and reduces them into fixed-width [`FleetWindowStats`]
+//! buckets.
+
+use super::{JctStats, TextTable};
+use crate::core::{Duration, Priority, SimTime};
+
+/// High-priority classes are P0–P2, matching the cluster layer's QoS
+/// definition (the paper's inserted real-time tasks all sit in this
+/// band).
+pub fn is_high_priority(p: Priority) -> bool {
+    (p as u8) <= 2
+}
+
+/// One completed task, as the fleet sees it.
+#[derive(Debug, Clone)]
+pub struct FleetSample {
+    /// Device the task ran on.
+    pub gpu: usize,
+    /// Priority of the owning service.
+    pub priority: Priority,
+    /// Fleet time at which the task's invocation arrived.
+    pub arrival: SimTime,
+    /// Job completion time of the task.
+    pub jct: Duration,
+    /// JCT / the service's solo-baseline mean JCT (1.0 = unharmed).
+    pub slowdown: f64,
+}
+
+/// Aggregate statistics of one fixed-width time window.
+#[derive(Debug, Clone)]
+pub struct FleetWindowStats {
+    /// Window ordinal (0 = `[0, width)`).
+    pub index: usize,
+    /// Inclusive window start.
+    pub start: SimTime,
+    /// High-priority completions in the window (fleet-wide).
+    pub high: JctStats,
+    /// Mean high-priority slowdown (1.0 when no high-priority task
+    /// completed in the window).
+    pub high_mean_slowdown: f64,
+    /// p99 high-priority slowdown (tail QoS; 1.0 when empty).
+    pub high_p99_slowdown: f64,
+    /// Low-priority completions in the window (fleet-wide).
+    pub low_completed: usize,
+    /// Low-priority completion rate over the window, tasks/second.
+    pub low_throughput_per_s: f64,
+}
+
+/// Fleet-wide sample collector with fixed-width windowed reduction.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    window: Duration,
+    samples: Vec<FleetSample>,
+    /// Per-device sample indices in recording order. Within one device
+    /// samples arrive completion-ordered (each GPU sim emits outcomes in
+    /// completion order and harvests are chronological), which lets
+    /// [`FleetMetrics::samples_in`] binary-search the trailing window
+    /// instead of walking the whole history on every QoS scan.
+    per_gpu: Vec<Vec<usize>>,
+}
+
+impl FleetMetrics {
+    /// A collector bucketing by `window`-wide intervals of fleet time.
+    pub fn new(window: Duration) -> FleetMetrics {
+        assert!(!window.is_zero(), "fleet metrics window must be non-zero");
+        FleetMetrics {
+            window,
+            samples: Vec::new(),
+            per_gpu: Vec::new(),
+        }
+    }
+
+    /// Window width.
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Record one completed task. Per device, calls must come in
+    /// non-decreasing completion-time order (`arrival + jct`) — the
+    /// churn harvester guarantees this; the trailing-window lookup of
+    /// [`FleetMetrics::samples_in`] relies on it.
+    pub fn record(&mut self, sample: FleetSample) {
+        if sample.gpu >= self.per_gpu.len() {
+            self.per_gpu.resize_with(sample.gpu + 1, Vec::new);
+        }
+        self.per_gpu[sample.gpu].push(self.samples.len());
+        self.samples.push(sample);
+    }
+
+    /// Total samples recorded.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// No samples recorded yet?
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// All recorded samples.
+    pub fn samples(&self) -> &[FleetSample] {
+        &self.samples
+    }
+
+    /// Mean slowdown across every high-priority completion (1.0 if none).
+    pub fn high_mean_slowdown(&self) -> f64 {
+        mean_slowdown(self.high_slowdowns())
+    }
+
+    /// p99 slowdown across every high-priority completion (1.0 if none).
+    pub fn high_p99_slowdown(&self) -> f64 {
+        percentile(self.high_slowdowns(), 0.99)
+    }
+
+    /// Total low-priority completions.
+    pub fn low_completed(&self) -> usize {
+        self.samples
+            .iter()
+            .filter(|s| !is_high_priority(s.priority))
+            .count()
+    }
+
+    /// Low-priority completions per second of fleet time up to `end`.
+    pub fn low_throughput_per_s(&self, end: SimTime) -> f64 {
+        let secs = end.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.low_completed() as f64 / secs
+        }
+    }
+
+    /// Samples restricted to arrivals in `(from, to]` — the trailing-
+    /// window slice the QoS scanner evaluates per device.
+    ///
+    /// Cost: O(log n + window) rather than O(history). A sample with
+    /// `arrival > from` necessarily completed after `from` (completion ≥
+    /// arrival), and the per-device index is completion-ordered, so only
+    /// the suffix past the last sample completed at or before `from`
+    /// needs scanning.
+    pub fn samples_in(&self, gpu: usize, from: SimTime, to: SimTime) -> Vec<&FleetSample> {
+        let Some(idxs) = self.per_gpu.get(gpu) else {
+            return Vec::new();
+        };
+        let start = idxs.partition_point(|&i| {
+            let s = &self.samples[i];
+            s.arrival + s.jct <= from
+        });
+        idxs[start..]
+            .iter()
+            .map(|&i| &self.samples[i])
+            .filter(|s| s.arrival > from && s.arrival <= to)
+            .collect()
+    }
+
+    /// Reduce into fixed-width windows covering `[0, end)`.
+    pub fn windows(&self, end: SimTime) -> Vec<FleetWindowStats> {
+        let width = self.window.nanos();
+        let count = (end.nanos().div_ceil(width)).max(1) as usize;
+        let mut out = Vec::with_capacity(count);
+        for index in 0..count {
+            let start = SimTime(width * index as u64);
+            let stop = start + self.window;
+            let in_window = |s: &&FleetSample| s.arrival >= start && s.arrival < stop;
+            let highs: Vec<&FleetSample> = self
+                .samples
+                .iter()
+                .filter(in_window)
+                .filter(|s| is_high_priority(s.priority))
+                .collect();
+            let lows = self
+                .samples
+                .iter()
+                .filter(in_window)
+                .filter(|s| !is_high_priority(s.priority))
+                .count();
+            let slowdowns: Vec<f64> = highs.iter().map(|s| s.slowdown).collect();
+            out.push(FleetWindowStats {
+                index,
+                start,
+                high: JctStats::from_durations(highs.iter().map(|s| s.jct).collect()),
+                high_mean_slowdown: mean_slowdown(slowdowns.clone()),
+                high_p99_slowdown: percentile(slowdowns, 0.99),
+                low_completed: lows,
+                low_throughput_per_s: lows as f64 / self.window.as_secs_f64(),
+            });
+        }
+        out
+    }
+
+    /// Render the windowed trajectory as a table (experiment output).
+    pub fn summary_table(&self, end: SimTime) -> TextTable {
+        let mut t = TextTable::new(&[
+            "window",
+            "t (s)",
+            "H done",
+            "H mean slow",
+            "H p99 slow",
+            "L done",
+            "L thr (/s)",
+        ]);
+        for w in self.windows(end) {
+            t.row(vec![
+                w.index.to_string(),
+                format!("{:.1}", w.start.as_secs_f64()),
+                w.high.count.to_string(),
+                format!("{:.2}x", w.high_mean_slowdown),
+                format!("{:.2}x", w.high_p99_slowdown),
+                w.low_completed.to_string(),
+                format!("{:.1}", w.low_throughput_per_s),
+            ]);
+        }
+        t
+    }
+
+    fn high_slowdowns(&self) -> Vec<f64> {
+        self.samples
+            .iter()
+            .filter(|s| is_high_priority(s.priority))
+            .map(|s| s.slowdown)
+            .collect()
+    }
+}
+
+fn mean_slowdown(vals: Vec<f64>) -> f64 {
+    if vals.is_empty() {
+        1.0
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+/// Nearest-rank percentile over raw f64 values (1.0 for empty input —
+/// the neutral slowdown).
+fn percentile(mut vals: Vec<f64>, q: f64) -> f64 {
+    if vals.is_empty() {
+        return 1.0;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).expect("slowdowns are finite"));
+    let idx = (q * vals.len() as f64).ceil() as usize;
+    vals[idx.saturating_sub(1).min(vals.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(gpu: usize, prio: Priority, at_ms: u64, jct_ms: u64, slow: f64) -> FleetSample {
+        FleetSample {
+            gpu,
+            priority: prio,
+            arrival: SimTime(at_ms * 1_000_000),
+            jct: Duration::from_millis(jct_ms),
+            slowdown: slow,
+        }
+    }
+
+    #[test]
+    fn windows_bucket_by_arrival_time() {
+        let mut m = FleetMetrics::new(Duration::from_secs(1));
+        m.record(sample(0, Priority::P0, 100, 30, 1.1));
+        m.record(sample(1, Priority::P0, 1_500, 35, 2.0));
+        m.record(sample(0, Priority::P6, 200, 10, 3.0));
+        m.record(sample(0, Priority::P6, 1_700, 10, 3.0));
+        let w = m.windows(SimTime(2_000_000_000));
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].high.count, 1);
+        assert!((w[0].high_mean_slowdown - 1.1).abs() < 1e-9);
+        assert_eq!(w[0].low_completed, 1);
+        assert!((w[1].high_mean_slowdown - 2.0).abs() < 1e-9);
+        assert!((w[1].low_throughput_per_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_windows_report_neutral_slowdown() {
+        let m = FleetMetrics::new(Duration::from_secs(1));
+        let w = m.windows(SimTime(3_000_000_000));
+        assert_eq!(w.len(), 3);
+        for win in w {
+            assert_eq!(win.high_mean_slowdown, 1.0);
+            assert_eq!(win.high_p99_slowdown, 1.0);
+            assert_eq!(win.low_completed, 0);
+        }
+    }
+
+    #[test]
+    fn fleet_rollups() {
+        let mut m = FleetMetrics::new(Duration::from_millis(500));
+        for i in 0..100 {
+            m.record(sample(i % 4, Priority::P1, i, 20, 1.0 + i as f64 / 100.0));
+        }
+        m.record(sample(0, Priority::P9, 10, 5, 4.0));
+        assert_eq!(m.len(), 101);
+        assert_eq!(m.low_completed(), 1);
+        // Mean of 1.0..1.99 ≈ 1.495.
+        assert!((m.high_mean_slowdown() - 1.495).abs() < 0.01);
+        assert!(m.high_p99_slowdown() >= 1.98);
+        assert!(m.low_throughput_per_s(SimTime(1_000_000_000)) > 0.9);
+    }
+
+    #[test]
+    fn trailing_slice_filters_by_gpu_and_time() {
+        let mut m = FleetMetrics::new(Duration::from_secs(1));
+        m.record(sample(0, Priority::P0, 100, 30, 1.2));
+        m.record(sample(1, Priority::P0, 150, 30, 1.8));
+        m.record(sample(0, Priority::P0, 900, 30, 1.4));
+        let slice = m.samples_in(0, SimTime(500_000_000), SimTime(1_000_000_000));
+        assert_eq!(slice.len(), 1);
+        assert!((slice[0].slowdown - 1.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priority_band_split() {
+        assert!(is_high_priority(Priority::P0));
+        assert!(is_high_priority(Priority::P2));
+        assert!(!is_high_priority(Priority::P3));
+        assert!(!is_high_priority(Priority::P9));
+    }
+}

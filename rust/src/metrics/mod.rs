@@ -3,21 +3,35 @@
 //! Every paper figure reduces to ratios of JCT statistics between modes;
 //! this module owns those reductions: mean/σ/CV (Table 3), percentiles,
 //! speedup ratios (Figs 16–20), and per-arrival timelines (Fig 21).
+//! The [`fleet`] submodule extends them across devices and time for the
+//! dynamic cluster simulation (windowed fleet-wide QoS trajectories).
+
+pub mod fleet;
+
+pub use fleet::{FleetMetrics, FleetSample, FleetWindowStats};
 
 use crate::core::{Duration, SimTime};
 
 /// Summary statistics over a set of job completion times.
 #[derive(Debug, Clone, Default)]
 pub struct JctStats {
+    /// Number of completed tasks.
     pub count: usize,
+    /// Mean JCT.
     pub mean: Duration,
+    /// Population standard deviation.
     pub std: Duration,
     /// Coefficient of variation σ/μ (Table 3's stability metric).
     pub cv: f64,
+    /// Fastest completion.
     pub min: Duration,
+    /// Slowest completion.
     pub max: Duration,
+    /// Median (nearest-rank).
     pub p50: Duration,
+    /// 95th percentile (nearest-rank).
     pub p95: Duration,
+    /// 99th percentile (nearest-rank).
     pub p99: Duration,
     /// Σ of all JCTs.
     pub total: Duration,
@@ -90,13 +104,16 @@ pub fn pct_diff(baseline: &JctStats, candidate: &JctStats) -> f64 {
 /// One point of a per-arrival JCT timeline (Fig 21).
 #[derive(Debug, Clone)]
 pub struct TimelinePoint {
+    /// When the task's invocation arrived.
     pub arrival: SimTime,
+    /// Its job completion time.
     pub jct: Duration,
 }
 
 /// A per-service JCT timeline with its stability statistics.
 #[derive(Debug, Clone)]
 pub struct Timeline {
+    /// Points sorted by arrival time.
     pub points: Vec<TimelinePoint>,
 }
 

@@ -59,13 +59,21 @@ struct ClientState {
 /// Counters exposed after a run.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
+    /// `Register` messages accepted.
     pub registered: u64,
+    /// `Launch` messages received.
     pub launches: u64,
+    /// Launches released immediately (holder-class).
     pub releases_immediate: u64,
+    /// Launches parked in the priority queues.
     pub holds: u64,
+    /// Held launches released through fill windows.
     pub releases_filled: u64,
+    /// Fill windows opened.
     pub windows: u64,
+    /// Windows closed early by holder feedback.
     pub early_stops: u64,
+    /// Datagrams that failed to decode.
     pub decode_errors: u64,
 }
 
@@ -109,6 +117,7 @@ impl SchedulerServer {
         Ok(self.socket.local_addr()?)
     }
 
+    /// Counters accumulated so far.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
     }

@@ -165,6 +165,15 @@ impl ServiceProcess {
         self.arrival_queue.push_back(now);
     }
 
+    /// Drop every queued (not-yet-started) arrival — a departing service
+    /// abandons its backlog; the in-flight task (if any) still drains.
+    /// Returns how many arrivals were dropped.
+    pub fn clear_arrivals(&mut self) -> usize {
+        let dropped = self.arrival_queue.len();
+        self.arrival_queue.clear();
+        dropped
+    }
+
     /// Start the next queued task if the process is idle. Returns the
     /// time at which its first kernel should be issued.
     pub fn try_start_task(&mut self, now: SimTime) -> Option<SimTime> {

@@ -7,15 +7,22 @@ use std::time::{Duration as StdDuration, Instant};
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name as printed in the report.
     pub name: String,
+    /// Total iterations measured (across all samples).
     pub iters: u64,
+    /// Mean time per iteration.
     pub mean: StdDuration,
+    /// Median per-sample time per iteration.
     pub median: StdDuration,
+    /// 95th-percentile per-sample time per iteration.
     pub p95: StdDuration,
+    /// Fastest sample (closest to noise-free cost).
     pub min: StdDuration,
 }
 
 impl BenchResult {
+    /// Mean time per iteration in nanoseconds.
     pub fn mean_ns(&self) -> f64 {
         self.mean.as_nanos() as f64
     }
@@ -51,6 +58,7 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 impl Bencher {
+    /// Default full-fidelity harness (~1 s per case).
     pub fn new() -> Bencher {
         Bencher::default()
     }

@@ -41,10 +41,12 @@ impl Args {
         out
     }
 
+    /// Was the boolean flag `--name` given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of option `--name`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
@@ -59,10 +61,12 @@ impl Args {
         }
     }
 
+    /// All positional arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
 
+    /// Positional argument `idx` (0 is the subcommand).
     pub fn pos(&self, idx: usize) -> Option<&str> {
         self.positional.get(idx).map(|s| s.as_str())
     }

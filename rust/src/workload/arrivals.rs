@@ -1,0 +1,272 @@
+//! Fleet-level arrival processes: *which services* show up at the
+//! cluster, *when*, and *for how long*.
+//!
+//! The single-GPU simulator models task arrivals within one service
+//! (see [`InvocationPattern`](super::InvocationPattern)); this module
+//! models the layer above — **service churn**: whole services arriving
+//! at the fleet, living for a while, and departing. Two generators are
+//! provided, mirroring the seeded-sampler idiom of
+//! [`TraceGenerator`](super::TraceGenerator):
+//!
+//! * [`ArrivalProcess::Poisson`] — seeded memoryless arrivals with
+//!   exponential lifetimes and a weighted model/priority mix. The same
+//!   seed always yields the same schedule, so every churn experiment is
+//!   replayable (DESIGN.md §8).
+//! * [`ArrivalProcess::Trace`] — an explicit, hand-written schedule for
+//!   scripted scenarios (the "rescue" scenario of the cluster-churn
+//!   experiment pins exact arrival times to make the migration effect
+//!   deterministic and inspectable).
+
+use crate::core::{Duration, Priority, SimTime};
+use crate::util::rng::Rng;
+use crate::workload::ModelKind;
+
+/// One scheduled service arrival: the service appears at [`ServiceArrival::at`]
+/// and departs at `at + lifetime` (its last in-flight task is drained,
+/// never cut mid-kernel — the device is non-preemptive, DESIGN.md §6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceArrival {
+    /// Fleet time at which the service requests placement.
+    pub at: SimTime,
+    /// Model the service runs.
+    pub model: ModelKind,
+    /// Priority of every task the service issues.
+    pub priority: Priority,
+    /// How long the service stays before departing.
+    pub lifetime: Duration,
+}
+
+impl ServiceArrival {
+    /// Convenience constructor.
+    pub fn new(at: SimTime, model: ModelKind, priority: Priority, lifetime: Duration) -> Self {
+        ServiceArrival {
+            at,
+            model,
+            priority,
+            lifetime,
+        }
+    }
+
+    /// Fleet time at which the service departs.
+    pub fn departs_at(&self) -> SimTime {
+        self.at + self.lifetime
+    }
+}
+
+/// One entry of a Poisson workload mix: a candidate service type and its
+/// relative arrival weight.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    /// Model of services drawn from this entry.
+    pub model: ModelKind,
+    /// Priority of services drawn from this entry.
+    pub priority: Priority,
+    /// Relative arrival rate (weights need not sum to 1).
+    pub weight: f64,
+}
+
+impl MixEntry {
+    /// Convenience constructor.
+    pub fn new(model: ModelKind, priority: Priority, weight: f64) -> MixEntry {
+        MixEntry {
+            model,
+            priority,
+            weight,
+        }
+    }
+}
+
+/// A generator of service-churn schedules.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival times with the
+    /// given mean, exponential lifetimes, and a weighted service mix.
+    /// Generation stops at `horizon` (services arriving later than the
+    /// horizon are not emitted; lifetimes may extend past it).
+    Poisson {
+        /// Mean time between consecutive service arrivals.
+        mean_interarrival: Duration,
+        /// Mean service lifetime.
+        mean_lifetime: Duration,
+        /// Weighted candidate service types (must be non-empty).
+        mix: Vec<MixEntry>,
+        /// No arrivals are generated at or after this fleet time.
+        horizon: Duration,
+    },
+    /// An explicit schedule (scripted scenarios, replayed traces).
+    Trace(Vec<ServiceArrival>),
+}
+
+impl ArrivalProcess {
+    /// Materialize the schedule. Deterministic per `seed`; the output is
+    /// sorted by arrival time (ties keep generation order).
+    pub fn generate(&self, seed: u64) -> Vec<ServiceArrival> {
+        match self {
+            ArrivalProcess::Trace(list) => {
+                let mut out = list.clone();
+                out.sort_by_key(|a| a.at);
+                out
+            }
+            ArrivalProcess::Poisson {
+                mean_interarrival,
+                mean_lifetime,
+                mix,
+                horizon,
+            } => {
+                assert!(!mix.is_empty(), "Poisson arrival mix is empty");
+                let total_weight: f64 = mix.iter().map(|e| e.weight.max(0.0)).sum();
+                assert!(total_weight > 0.0, "Poisson arrival mix has zero weight");
+                let mut rng = Rng::new(seed ^ 0xA221_7A15);
+                let mut out = Vec::new();
+                let mut t = SimTime::ZERO;
+                loop {
+                    let step = rng.exponential(mean_interarrival.nanos() as f64);
+                    t = t + Duration::from_nanos(step.round().max(1.0) as u64);
+                    if t.nanos() >= horizon.nanos() {
+                        break;
+                    }
+                    // Weighted mix draw.
+                    let mut pick = rng.f64() * total_weight;
+                    let mut chosen = &mix[0];
+                    for entry in mix {
+                        let w = entry.weight.max(0.0);
+                        if pick < w {
+                            chosen = entry;
+                            break;
+                        }
+                        pick -= w;
+                        chosen = entry;
+                    }
+                    let life = rng.exponential(mean_lifetime.nanos() as f64);
+                    out.push(ServiceArrival {
+                        at: t,
+                        model: chosen.model,
+                        priority: chosen.priority,
+                        // Floor at 1ms so every service gets a chance to
+                        // run at least part of one task.
+                        lifetime: Duration::from_nanos(life.round().max(1_000_000.0) as u64),
+                    });
+                }
+                out
+            }
+        }
+    }
+
+    /// Latest departure in the generated schedule (drain deadline for a
+    /// churn run). `SimTime::ZERO` for an empty schedule.
+    pub fn last_departure(&self, seed: u64) -> SimTime {
+        self.generate(seed)
+            .iter()
+            .map(ServiceArrival::departs_at)
+            .max()
+            .unwrap_or(SimTime::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix() -> Vec<MixEntry> {
+        vec![
+            MixEntry::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 1.0),
+            MixEntry::new(ModelKind::FcnResnet50, Priority::P5, 2.0),
+            MixEntry::new(ModelKind::Vgg16, Priority::P7, 1.0),
+        ]
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let p = ArrivalProcess::Poisson {
+            mean_interarrival: Duration::from_millis(200),
+            mean_lifetime: Duration::from_secs(1),
+            mix: mix(),
+            horizon: Duration::from_secs(5),
+        };
+        let a = p.generate(42);
+        let b = p.generate(42);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = p.generate(43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn poisson_respects_horizon_and_ordering() {
+        let p = ArrivalProcess::Poisson {
+            mean_interarrival: Duration::from_millis(100),
+            mean_lifetime: Duration::from_millis(500),
+            mix: mix(),
+            horizon: Duration::from_secs(2),
+        };
+        let schedule = p.generate(7);
+        for w in schedule.windows(2) {
+            assert!(w[0].at <= w[1].at, "arrivals unsorted");
+        }
+        for a in &schedule {
+            assert!(a.at.nanos() < 2_000_000_000, "arrival past horizon");
+            assert!(a.lifetime >= Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn poisson_interarrival_mean_roughly_matches() {
+        let p = ArrivalProcess::Poisson {
+            mean_interarrival: Duration::from_millis(50),
+            mean_lifetime: Duration::from_millis(200),
+            mix: mix(),
+            horizon: Duration::from_secs(60),
+        };
+        let schedule = p.generate(11);
+        assert!(schedule.len() > 500, "expected ~1200 arrivals, got {}", schedule.len());
+        let mean_gap_ms = schedule.last().unwrap().at.as_millis_f64() / schedule.len() as f64;
+        assert!(
+            (mean_gap_ms - 50.0).abs() < 10.0,
+            "mean inter-arrival {mean_gap_ms:.1}ms vs 50ms target"
+        );
+    }
+
+    #[test]
+    fn mix_weights_bias_the_draw() {
+        let p = ArrivalProcess::Poisson {
+            mean_interarrival: Duration::from_millis(20),
+            mean_lifetime: Duration::from_millis(100),
+            mix: mix(),
+            horizon: Duration::from_secs(30),
+        };
+        let schedule = p.generate(3);
+        let fcn = schedule
+            .iter()
+            .filter(|a| a.model == ModelKind::FcnResnet50)
+            .count();
+        let kp = schedule
+            .iter()
+            .filter(|a| a.model == ModelKind::KeypointRcnnResnet50Fpn)
+            .count();
+        // fcn has 2x the weight of keypointrcnn.
+        assert!(fcn > kp, "weighted mix ignored: fcn {fcn} vs kp {kp}");
+    }
+
+    #[test]
+    fn trace_schedule_is_sorted_and_passthrough() {
+        let t = ArrivalProcess::Trace(vec![
+            ServiceArrival::new(
+                SimTime(2_000),
+                ModelKind::Vgg16,
+                Priority::P7,
+                Duration::from_millis(5),
+            ),
+            ServiceArrival::new(
+                SimTime(1_000),
+                ModelKind::Alexnet,
+                Priority::P0,
+                Duration::from_millis(5),
+            ),
+        ]);
+        let s = t.generate(0);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].model, ModelKind::Alexnet);
+        assert_eq!(s[1].departs_at(), SimTime(2_000) + Duration::from_millis(5));
+        assert_eq!(t.last_departure(0), s[1].departs_at());
+    }
+}

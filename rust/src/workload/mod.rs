@@ -12,10 +12,12 @@
 //!
 //! See DESIGN.md §2 for the substitution rationale.
 
+mod arrivals;
 mod models;
 mod service;
 mod trace;
 
+pub use arrivals::{ArrivalProcess, MixEntry, ServiceArrival};
 pub use models::{ModelClass, ModelKind, ModelSpec, Segment};
 pub use service::{InvocationPattern, Service};
 pub use trace::{KernelTrace, TraceGenerator, TraceKernel};

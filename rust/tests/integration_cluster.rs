@@ -1,0 +1,314 @@
+//! Cross-layer cluster tests: incremental placement invariants
+//! (DESIGN.md §7/§8) and dynamic service membership on a live GPU sim.
+//!
+//! The invariants under test:
+//!
+//! 1. **Capacity**: no place → depart → re-place sequence ever leaves a
+//!    device hosting more services than its capacity, and load
+//!    accounting never goes negative.
+//! 2. **Compatibility dominance**: on mixed detector/filler sequences,
+//!    the compatibility-aware BestMatch policy never ends up with a
+//!    worse *predicted* high-priority slowdown than workload-blind
+//!    LeastLoaded on the same sequence.
+//! 3. **Dynamic membership**: a service attached to a running GPU sim
+//!    does real work; detaching drains (never cuts) its in-flight task;
+//!    a drained key can be reattached (migration back).
+
+use fikit::cluster::{CompatMatrix, FleetState, PlacementPolicy, Resident};
+use fikit::config::{ExperimentConfig, ServiceConfig};
+use fikit::coordinator::driver::{DetachOutcome, GpuSim};
+use fikit::coordinator::Mode;
+use fikit::core::{Duration, Priority, SimTime, TaskKey};
+use fikit::profile::ProfileStore;
+use fikit::util::rng::Rng;
+use fikit::workload::{InvocationPattern, ModelKind};
+
+/// Every model a fleet test draws from, split by role.
+const DETECTORS: [ModelKind; 3] = [
+    ModelKind::KeypointRcnnResnet50Fpn,
+    ModelKind::MaskrcnnResnet50Fpn,
+    ModelKind::FasterrcnnResnet50Fpn,
+];
+const FILLERS: [ModelKind; 4] = [
+    ModelKind::FcnResnet50,
+    ModelKind::Resnet101,
+    ModelKind::Vgg16,
+    ModelKind::Googlenet,
+];
+
+fn check_fleet_invariants(fleet: &FleetState) {
+    for gpu in 0..fleet.gpus() {
+        assert!(
+            fleet.residents_on(gpu).len() <= fleet.capacity(),
+            "GPU {gpu} over capacity: {} > {}",
+            fleet.residents_on(gpu).len(),
+            fleet.capacity()
+        );
+        assert!(
+            fleet.load_ms(gpu) >= 0.0,
+            "GPU {gpu} negative load {}",
+            fleet.load_ms(gpu)
+        );
+    }
+}
+
+#[test]
+fn random_place_depart_replace_respects_capacity() {
+    let compat = CompatMatrix::new();
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xCAFE + seed);
+        let mut fleet = FleetState::new(3, 2);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        let mut placed = 0usize;
+        let mut refused = 0usize;
+        for _ in 0..200 {
+            let arrive = live.is_empty() || rng.chance(0.55);
+            if arrive {
+                let model = if rng.chance(0.4) {
+                    DETECTORS[rng.index(DETECTORS.len())]
+                } else {
+                    FILLERS[rng.index(FILLERS.len())]
+                };
+                let prio = Priority::from_index(rng.index(10)).unwrap();
+                let id = next_id;
+                next_id += 1;
+                let policy = match rng.index(3) {
+                    0 => PlacementPolicy::RoundRobin,
+                    1 => PlacementPolicy::LeastLoaded,
+                    _ => PlacementPolicy::BestMatch,
+                };
+                match fleet.place(policy, Resident::per_task(id, model, prio), &compat) {
+                    Some(gpu) => {
+                        assert_eq!(fleet.gpu_of(id), Some(gpu));
+                        live.push(id);
+                        placed += 1;
+                    }
+                    None => {
+                        // Refusal is only legal when the fleet really is full.
+                        assert_eq!(
+                            fleet.total_residents(),
+                            fleet.gpus() * fleet.capacity(),
+                            "placement refused with free capacity (seed {seed})"
+                        );
+                        refused += 1;
+                    }
+                }
+            } else {
+                let pos = rng.index(live.len());
+                let id = live.swap_remove(pos);
+                assert!(fleet.evict(id).is_some(), "live service {id} not resident");
+                assert_eq!(fleet.gpu_of(id), None);
+            }
+            check_fleet_invariants(&fleet);
+        }
+        assert!(placed > 50, "seed {seed}: degenerate sequence ({placed} placements)");
+        // Both outcomes should occur over a 200-op random walk on a 6-slot fleet.
+        assert!(refused > 0, "seed {seed}: capacity never binding");
+    }
+}
+
+#[test]
+fn best_match_dominates_least_loaded_on_predicted_qos() {
+    let compat = CompatMatrix::new();
+    let mut bm_total = 0.0f64;
+    let mut ll_total = 0.0f64;
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(0xBEEF + seed);
+        // Mixed sequence: two high-priority detectors plus low-priority
+        // fillers, arriving interleaved; enough slack that no policy is
+        // ever forced into a bad pairing.
+        let mut residents: Vec<Resident> = vec![
+            Resident::per_task(0, DETECTORS[rng.index(DETECTORS.len())], Priority::P0),
+            Resident::per_task(1, DETECTORS[rng.index(DETECTORS.len())], Priority::P1),
+        ];
+        for id in 2..7u64 {
+            residents.push(Resident::per_task(
+                id,
+                FILLERS[rng.index(FILLERS.len())],
+                Priority::from_index(4 + rng.index(6)).unwrap(),
+            ));
+        }
+        // Shuffle the fillers' arrival order (Fisher–Yates on the seeded
+        // rng); the detectors arrive first, as real fleets pin their
+        // latency-critical tenants before backfilling.
+        for i in (3..residents.len()).rev() {
+            let j = 2 + rng.index(i - 1);
+            residents.swap(i, j);
+        }
+
+        let play = |policy: PlacementPolicy| -> f64 {
+            let mut fleet = FleetState::new(3, 3);
+            for r in &residents {
+                fleet
+                    .place(policy, r.clone(), &compat)
+                    .expect("9 slots for 7 services");
+                check_fleet_invariants(&fleet);
+            }
+            fleet.worst_predicted_high_slowdown(&compat)
+        };
+        let bm = play(PlacementPolicy::BestMatch);
+        let ll = play(PlacementPolicy::LeastLoaded);
+        bm_total += bm;
+        ll_total += ll;
+        assert!(
+            bm <= ll * 1.05 + 1e-9,
+            "seed {seed}: BestMatch predicted slowdown {bm:.3} worse than LeastLoaded {ll:.3}"
+        );
+    }
+    assert!(
+        bm_total <= ll_total + 1e-9,
+        "aggregate: BestMatch {bm_total:.3} vs LeastLoaded {ll_total:.3}"
+    );
+}
+
+#[test]
+fn depart_then_replace_reuses_freed_capacity() {
+    let compat = CompatMatrix::new();
+    let mut fleet = FleetState::new(2, 1);
+    assert!(fleet
+        .place(
+            PlacementPolicy::LeastLoaded,
+            Resident::per_task(0, ModelKind::Resnet50, Priority::P0),
+            &compat
+        )
+        .is_some());
+    assert!(fleet
+        .place(
+            PlacementPolicy::LeastLoaded,
+            Resident::per_task(1, ModelKind::Vgg16, Priority::P5),
+            &compat
+        )
+        .is_some());
+    // Full. A third service is refused until someone leaves.
+    assert!(fleet
+        .place(
+            PlacementPolicy::LeastLoaded,
+            Resident::per_task(2, ModelKind::Alexnet, Priority::P2),
+            &compat
+        )
+        .is_none());
+    let freed = fleet.evict(0).unwrap();
+    let gpu = fleet
+        .place(
+            PlacementPolicy::LeastLoaded,
+            Resident::per_task(2, ModelKind::Alexnet, Priority::P2),
+            &compat,
+        )
+        .unwrap();
+    assert_eq!(gpu, freed, "replacement lands on the freed device");
+    check_fleet_invariants(&fleet);
+}
+
+// ---------------------------------------------------------------------
+// Dynamic membership on a live GpuSim
+// ---------------------------------------------------------------------
+
+fn continuous(model: ModelKind, prio: Priority, key: &str) -> ServiceConfig {
+    let mut svc = ServiceConfig::new(model, prio).with_key(key);
+    svc.pattern = InvocationPattern::ContinuousUntil {
+        until: SimTime::MAX,
+    };
+    svc
+}
+
+#[test]
+fn attach_detach_drains_and_allows_reattach() {
+    let cfg = ExperimentConfig {
+        mode: Mode::Sharing,
+        ..ExperimentConfig::default()
+    };
+    let store = ProfileStore::new();
+    let mut sim = GpuSim::new(&cfg, &store).unwrap();
+    assert!(sim.is_idle());
+    assert_eq!(sim.live_services(), 0);
+
+    let svc = continuous(ModelKind::Alexnet, Priority::P0, "dyn");
+    let key = TaskKey::new("dyn");
+    sim.attach(&svc, SimTime::ZERO).unwrap();
+    assert_eq!(sim.live_services(), 1);
+    assert!(!sim.can_attach(&key), "live key must be refused");
+    assert!(
+        sim.attach(&svc, SimTime::ZERO).is_err(),
+        "duplicate live key rejected"
+    );
+
+    // Run 50 ms of serving: alexnet (~1.4 ms JCT) completes many tasks.
+    let t1 = SimTime::ZERO + Duration::from_millis(50);
+    sim.run_until(t1);
+    let after_50ms = sim.outcomes().len();
+    assert!(after_50ms >= 10, "only {after_50ms} tasks in 50ms");
+    assert_eq!(sim.now(), t1);
+
+    // Detach mid-run: the in-flight task drains, nothing new starts.
+    let outcome = sim.detach(&key).unwrap();
+    assert!(matches!(
+        outcome,
+        DetachOutcome::Draining | DetachOutcome::Idle
+    ));
+    assert_eq!(sim.live_services(), 0);
+    sim.run_until(SimTime::MAX);
+    let drained = sim.outcomes().len();
+    assert!(
+        drained == after_50ms || drained == after_50ms + 1,
+        "drain may finish at most the one in-flight task: {after_50ms} -> {drained}"
+    );
+    assert!(sim.is_idle());
+    assert!(!sim.is_draining(&key));
+
+    // The drained key is reusable: attach again (migration back).
+    assert!(sim.can_attach(&key));
+    sim.attach(&svc, sim.now() + Duration::from_millis(1)).unwrap();
+    assert_eq!(sim.live_services(), 1);
+    let t2 = sim.now() + Duration::from_millis(20);
+    sim.run_until(t2);
+    assert!(
+        sim.outcomes().len() > drained,
+        "reattached service does no work"
+    );
+}
+
+#[test]
+fn attach_in_fikit_mode_requires_a_profile() {
+    let cfg = ExperimentConfig {
+        mode: Mode::Fikit,
+        ..ExperimentConfig::default()
+    };
+    let store = ProfileStore::new();
+    let mut sim = GpuSim::new(&cfg, &store).unwrap();
+    let svc = continuous(ModelKind::Alexnet, Priority::P0, "unprofiled");
+    assert!(
+        sim.attach(&svc, SimTime::ZERO).is_err(),
+        "FIKIT attach without a preloaded profile must fail"
+    );
+}
+
+#[test]
+fn detached_service_stops_consuming_device_time() {
+    let cfg = ExperimentConfig {
+        mode: Mode::Sharing,
+        ..ExperimentConfig::default()
+    };
+    let store = ProfileStore::new();
+    let mut sim = GpuSim::new(&cfg, &store).unwrap();
+    sim.attach(
+        &continuous(ModelKind::Alexnet, Priority::P5, "bg"),
+        SimTime::ZERO,
+    )
+    .unwrap();
+    sim.run_until(SimTime::ZERO + Duration::from_millis(20));
+    sim.detach(&TaskKey::new("bg")).unwrap();
+    sim.run_until(SimTime::MAX);
+    let busy_after_drain = sim.device_stats().busy;
+    let end_after_drain = sim.now();
+
+    // Idle long after the drain: no further device time accrues.
+    assert!(sim.is_idle());
+    assert_eq!(sim.device_stats().busy, busy_after_drain);
+    // The drain finished shortly after the detach (one task ≈ 1.4 ms),
+    // not at some far-future point.
+    assert!(
+        end_after_drain < SimTime::ZERO + Duration::from_millis(40),
+        "drain ran too long: {end_after_drain}"
+    );
+}

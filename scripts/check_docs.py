@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Docs health check — the repo's "docs job".
+
+Three checks, zero dependencies:
+
+1. **Markdown links**: every relative link target in every tracked
+   `*.md` file must exist (anchors are checked against the target
+   file's headings).
+2. **DESIGN.md section references**: every ``DESIGN.md §<token>``
+   citation in source and docs (``*.rs``, ``*.py``, ``*.md``) must
+   resolve to a real ``§<token>`` heading in ``rust/DESIGN.md`` — the
+   dangling-citation failure mode this script exists to prevent.
+3. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
+   (skipped with a notice when no cargo toolchain is available, e.g. in
+   the offline container).
+
+Exit code 0 = healthy. Run from anywhere inside the repo:
+
+    python3 scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DESIGN = os.path.join(REPO, "rust", "DESIGN.md")
+SKIP_DIRS = {".git", ".claude", "target", "node_modules", "__pycache__", ".venv"}
+
+# [text](target) — excluding images and in-cell pipes; good enough for
+# the hand-written markdown in this repo.
+MD_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_REF = re.compile(r"DESIGN\.md\s+§([A-Za-z0-9_-]+)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def walk(exts: tuple[str, ...]):
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        for name in files:
+            if name.endswith(exts):
+                yield os.path.join(root, name)
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    text = heading.strip().lower()
+    text = re.sub(r"[^\w\s§-]", "", text, flags=re.UNICODE)
+    text = text.replace("§", "")
+    return re.sub(r"\s+", "-", text.strip())
+
+
+def anchors_of(md_path: str) -> set[str]:
+    with open(md_path, encoding="utf-8") as f:
+        content = f.read()
+    return {github_anchor(h) for h in HEADING.findall(content)}
+
+
+def check_markdown_links() -> list[str]:
+    errors = []
+    for path in walk((".md",)):
+        with open(path, encoding="utf-8") as f:
+            content = f.read()
+        for target in MD_LINK.findall(content):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, anchor = target.partition("#")
+            if base:
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), base)
+                )
+                if not os.path.exists(resolved):
+                    errors.append(
+                        f"{os.path.relpath(path, REPO)}: broken link -> {target}"
+                    )
+                    continue
+            else:
+                resolved = path
+            if anchor and resolved.endswith(".md"):
+                if github_anchor("# " + anchor) not in anchors_of(resolved) and \
+                        anchor not in anchors_of(resolved):
+                    errors.append(
+                        f"{os.path.relpath(path, REPO)}: broken anchor -> {target}"
+                    )
+    return errors
+
+
+def check_design_refs() -> list[str]:
+    if not os.path.exists(DESIGN):
+        return ["rust/DESIGN.md does not exist but the code cites it"]
+    with open(DESIGN, encoding="utf-8") as f:
+        design = f.read()
+    sections = set(re.findall(r"^#{1,6}\s+§([A-Za-z0-9_-]+)", design, re.MULTILINE))
+    errors = []
+    for path in walk((".rs", ".py", ".md")):
+        if os.path.abspath(path) == os.path.abspath(DESIGN):
+            continue
+        # ISSUE.md is the per-PR task brief: it talks *about* "§N"
+        # references generically rather than citing a section.
+        if os.path.basename(path) == "ISSUE.md":
+            continue
+        with open(path, encoding="utf-8") as f:
+            content = f.read()
+        for tok in SECTION_REF.findall(content):
+            if tok not in sections:
+                errors.append(
+                    f"{os.path.relpath(path, REPO)}: cites DESIGN.md §{tok}, "
+                    f"but rust/DESIGN.md has no such section "
+                    f"(has: {', '.join(sorted(sections))})"
+                )
+    return errors
+
+
+def check_rustdoc() -> list[str]:
+    if shutil.which("cargo") is None:
+        print("  [skip] cargo not on PATH — rustdoc check skipped")
+        return []
+    env = dict(os.environ, RUSTDOCFLAGS="-D warnings")
+    proc = subprocess.run(
+        ["cargo", "doc", "--no-deps", "--quiet"],
+        cwd=os.path.join(REPO, "rust"),
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    if proc.returncode != 0:
+        tail = "\n".join((proc.stderr or proc.stdout).splitlines()[-30:])
+        return [f"cargo doc --no-deps failed:\n{tail}"]
+    return []
+
+
+def main() -> int:
+    failures = 0
+    for name, check in [
+        ("markdown links", check_markdown_links),
+        ("DESIGN.md § references", check_design_refs),
+        ("rustdoc (cargo doc --no-deps)", check_rustdoc),
+    ]:
+        print(f"checking {name} ...")
+        errors = check()
+        for e in errors:
+            print(f"  FAIL {e}")
+        failures += len(errors)
+        if not errors:
+            print("  ok")
+    if failures:
+        print(f"\n{failures} docs problem(s) found")
+        return 1
+    print("\ndocs healthy")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
