@@ -8,10 +8,16 @@
 //! predicted duration. Lower priority levels are only examined when no
 //! request at a higher level fits ("best fit" = highest priority first,
 //! then closest-to-gap among candidates of that priority).
+//!
+//! Predictions are resolved **once at enqueue time** (from the service's
+//! attach-time [`crate::profile::ResolvedProfile`]); selection here is a
+//! binary search over each lane's duration-ordered fit index — O(log n)
+//! per level, no hashing, no allocation (DESIGN.md §Perf). Requests with
+//! no prediction (unprofiled tasks) are invisible to the index and thus
+//! never gamble a high-priority task's gap.
 
 use super::queues::PriorityQueues;
 use crate::core::{Duration, KernelLaunch, Priority};
-use crate::profile::ProfileStore;
 
 /// The selection made by one `BestPrioFit` invocation.
 #[derive(Debug, Clone)]
@@ -55,84 +61,33 @@ impl std::str::FromStr for FillPolicy {
 }
 
 /// Run Algorithm 2 over the message queues (paper policy: LongestFit).
-///
-/// Requests whose task has no profile, or whose kernel id was never seen
-/// during measurement, are skipped — the scheduler cannot predict their
-/// duration, so it must not gamble a high-priority task's gap on them.
-pub fn best_prio_fit(
-    queues: &mut PriorityQueues,
-    idle_time: Duration,
-    profiles: &ProfileStore,
-) -> Option<Fit> {
-    select_fit(queues, idle_time, profiles, FillPolicy::LongestFit)
+pub fn best_prio_fit(queues: &mut PriorityQueues, idle_time: Duration) -> Option<Fit> {
+    select_fit(queues, idle_time, FillPolicy::LongestFit)
 }
 
 /// Policy-parameterized variant of Algorithm 2.
 pub fn select_fit(
     queues: &mut PriorityQueues,
     idle_time: Duration,
-    profiles: &ProfileStore,
     policy: FillPolicy,
 ) -> Option<Fit> {
     if idle_time.is_zero() {
         return None;
     }
-    // From the highest priority to the lowest (Algorithm 2, line 5).
+    // From the highest priority to the lowest (Algorithm 2, line 5); the
+    // first level with a fitting candidate wins — lower priorities are
+    // not considered (lines 20-23). The strict `predicted < idle_time`
+    // bound (line 13) lives in the lane selectors.
     for priority in Priority::ALL {
-        let mut best_time = Duration::ZERO;
-        let mut best_idx: Option<usize> = None;
-        let mut shortest = Duration(u64::MAX);
-        // Examine every kernel request at this priority (line 7). The
-        // profiled duration was resolved at enqueue time; fall back to a
-        // store lookup only for requests enqueued without one.
-        for (idx, req) in queues.iter_at(priority).enumerate() {
-            let predicted = match req.predicted {
-                Some(p) => p,
-                None => {
-                    let Some(p) = profiles
-                        .get(&req.launch.task_key)
-                        .and_then(|prof| prof.sk(&req.launch.kernel))
-                    else {
-                        continue;
-                    };
-                    p
-                }
-            };
-            if predicted >= idle_time {
-                continue; // does not fit the gap
-            }
-            match policy {
-                // Longest so far AND fits (Algorithm 2 line 13:
-                // bestKernelTime < predictedKernelTime < idleTime).
-                FillPolicy::LongestFit => {
-                    if predicted > best_time {
-                        best_time = predicted;
-                        best_idx = Some(idx);
-                    }
-                }
-                FillPolicy::FirstFit => {
-                    best_time = predicted;
-                    best_idx = Some(idx);
-                    break;
-                }
-                FillPolicy::ShortestFit => {
-                    if predicted < shortest {
-                        shortest = predicted;
-                        best_time = predicted;
-                        best_idx = Some(idx);
-                    }
-                }
-            }
-        }
-        // Found the longest fitting kernel at this priority level: stop —
-        // lower priorities are not considered (line 20-23).
-        if let Some(idx) = best_idx {
-            let req = queues
-                .remove_at(priority, idx)
-                .expect("index valid: found during scan");
+        let taken = match policy {
+            FillPolicy::LongestFit => queues.take_longest_fit_at(priority, idle_time),
+            FillPolicy::FirstFit => queues.take_first_fit_at(priority, idle_time),
+            FillPolicy::ShortestFit => queues.take_shortest_fit_at(priority, idle_time),
+        };
+        if let Some((req, predicted)) = taken {
             return Some(Fit {
                 launch: req.launch,
-                predicted: best_time,
+                predicted,
             });
         }
     }
@@ -142,8 +97,7 @@ pub fn select_fit(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{Dim3, KernelId, SimTime, TaskId, TaskKey};
-    use crate::profile::TaskProfile;
+    use crate::core::{Dim3, KernelHandle, KernelId, SimTime, TaskHandle, TaskId, TaskKey};
 
     fn kid(name: &str) -> KernelId {
         KernelId::new(name, Dim3::x(8), Dim3::x(128))
@@ -152,8 +106,10 @@ mod tests {
     fn launch(key: &str, kernel: &str, prio: Priority) -> KernelLaunch {
         KernelLaunch {
             task_key: TaskKey::new(key),
+            task_handle: TaskHandle::UNBOUND,
             task_id: TaskId(0),
             kernel: kid(kernel),
+            kernel_handle: KernelHandle::UNBOUND,
             priority: prio,
             seq: 0,
             true_duration: Duration::from_micros(999), // scheduler must not read this
@@ -161,28 +117,23 @@ mod tests {
         }
     }
 
-    /// Store with one profile per (key, kernel → duration µs) entry.
-    fn store(entries: &[(&str, &str, u64)]) -> ProfileStore {
-        let mut s = ProfileStore::new();
-        for (key, kernel, us) in entries {
-            let tk = TaskKey::new(*key);
-            let mut p = s.remove(&tk).unwrap_or_else(|| TaskProfile::new(tk));
-            p.record(&kid(kernel), Duration::from_micros(*us), None);
-            p.finish_run(1);
-            s.insert(p);
-        }
-        s
+    /// Enqueue with the prediction pre-resolved, as the scheduler does.
+    fn push(q: &mut PriorityQueues, key: &str, kernel: &str, prio: Priority, us: u64) {
+        q.push_predicted(
+            launch(key, kernel, prio),
+            Some(Duration::from_micros(us)),
+            SimTime::ZERO,
+        );
     }
 
     #[test]
     fn picks_longest_fit_within_priority() {
         let mut q = PriorityQueues::new();
-        q.push(launch("a", "short", Priority::P5), SimTime::ZERO);
-        q.push(launch("a", "long", Priority::P5), SimTime::ZERO);
-        q.push(launch("a", "toolong", Priority::P5), SimTime::ZERO);
-        let s = store(&[("a", "short", 100), ("a", "long", 400), ("a", "toolong", 900)]);
+        push(&mut q, "a", "short", Priority::P5, 100);
+        push(&mut q, "a", "long", Priority::P5, 400);
+        push(&mut q, "a", "toolong", Priority::P5, 900);
 
-        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500)).unwrap();
         assert_eq!(fit.launch.kernel.name.as_ref(), "long");
         assert_eq!(fit.predicted, Duration::from_micros(400));
         assert_eq!(q.len(), 2); // selected request removed, others kept
@@ -191,22 +142,20 @@ mod tests {
     #[test]
     fn higher_priority_wins_even_if_shorter() {
         let mut q = PriorityQueues::new();
-        q.push(launch("hi", "small", Priority::P1), SimTime::ZERO);
-        q.push(launch("lo", "big", Priority::P7), SimTime::ZERO);
-        let s = store(&[("hi", "small", 50), ("lo", "big", 450)]);
+        push(&mut q, "hi", "small", Priority::P1, 50);
+        push(&mut q, "lo", "big", Priority::P7, 450);
 
-        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500)).unwrap();
         assert_eq!(fit.launch.task_key, TaskKey::new("hi"));
     }
 
     #[test]
     fn falls_through_to_lower_priority_when_nothing_fits() {
         let mut q = PriorityQueues::new();
-        q.push(launch("hi", "huge", Priority::P1), SimTime::ZERO);
-        q.push(launch("lo", "small", Priority::P7), SimTime::ZERO);
-        let s = store(&[("hi", "huge", 2_000), ("lo", "small", 100)]);
+        push(&mut q, "hi", "huge", Priority::P1, 2_000);
+        push(&mut q, "lo", "small", Priority::P7, 100);
 
-        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500)).unwrap();
         assert_eq!(fit.launch.task_key, TaskKey::new("lo"));
         // The non-fitting high-priority request stays queued.
         assert_eq!(q.len_at(Priority::P1), 1);
@@ -216,19 +165,18 @@ mod tests {
     fn strict_fit_boundary() {
         // predicted must be strictly less than idle (line 13).
         let mut q = PriorityQueues::new();
-        q.push(launch("a", "exact", Priority::P3), SimTime::ZERO);
-        let s = store(&[("a", "exact", 500)]);
-        assert!(best_prio_fit(&mut q, Duration::from_micros(500), &s).is_none());
-        assert!(best_prio_fit(&mut q, Duration::from_micros(501), &s).is_some());
+        push(&mut q, "a", "exact", Priority::P3, 500);
+        assert!(best_prio_fit(&mut q, Duration::from_micros(500)).is_none());
+        assert!(best_prio_fit(&mut q, Duration::from_micros(501)).is_some());
     }
 
     #[test]
     fn unprofiled_requests_are_skipped() {
         let mut q = PriorityQueues::new();
+        // "unknown" has no profile → enqueued without a prediction.
         q.push(launch("unknown", "k", Priority::P2), SimTime::ZERO);
-        q.push(launch("known", "k", Priority::P6), SimTime::ZERO);
-        let s = store(&[("known", "k", 100)]);
-        let fit = best_prio_fit(&mut q, Duration::from_micros(500), &s).unwrap();
+        push(&mut q, "known", "k", Priority::P6, 100);
+        let fit = best_prio_fit(&mut q, Duration::from_micros(500)).unwrap();
         assert_eq!(fit.launch.task_key, TaskKey::new("known"));
         // The unprofiled one is left in place.
         assert_eq!(q.len_at(Priority::P2), 1);
@@ -239,25 +187,24 @@ mod tests {
         use super::FillPolicy;
         let build = || {
             let mut q = PriorityQueues::new();
-            q.push(launch("a", "mid", Priority::P5), SimTime::ZERO);
-            q.push(launch("a", "short", Priority::P5), SimTime::ZERO);
-            q.push(launch("a", "long", Priority::P5), SimTime::ZERO);
+            push(&mut q, "a", "mid", Priority::P5, 250);
+            push(&mut q, "a", "short", Priority::P5, 100);
+            push(&mut q, "a", "long", Priority::P5, 400);
             q
         };
-        let s = store(&[("a", "mid", 250), ("a", "short", 100), ("a", "long", 400)]);
         let idle = Duration::from_micros(500);
 
-        let fit = select_fit(&mut build(), idle, &s, FillPolicy::LongestFit).unwrap();
+        let fit = select_fit(&mut build(), idle, FillPolicy::LongestFit).unwrap();
         assert_eq!(fit.launch.kernel.name.as_ref(), "long");
-        let fit = select_fit(&mut build(), idle, &s, FillPolicy::FirstFit).unwrap();
+        let fit = select_fit(&mut build(), idle, FillPolicy::FirstFit).unwrap();
         assert_eq!(fit.launch.kernel.name.as_ref(), "mid"); // FIFO head
-        let fit = select_fit(&mut build(), idle, &s, FillPolicy::ShortestFit).unwrap();
+        let fit = select_fit(&mut build(), idle, FillPolicy::ShortestFit).unwrap();
         assert_eq!(fit.launch.kernel.name.as_ref(), "short");
 
         // All policies respect the fit bound.
         let tiny = Duration::from_micros(50);
         for policy in [FillPolicy::LongestFit, FillPolicy::FirstFit, FillPolicy::ShortestFit] {
-            assert!(select_fit(&mut build(), tiny, &s, policy).is_none());
+            assert!(select_fit(&mut build(), tiny, policy).is_none());
         }
         assert!("longest".parse::<FillPolicy>().is_ok());
         assert!("bogus".parse::<FillPolicy>().is_err());
@@ -266,10 +213,8 @@ mod tests {
     #[test]
     fn empty_queues_or_zero_idle_yield_none() {
         let mut q = PriorityQueues::new();
-        let s = store(&[]);
-        assert!(best_prio_fit(&mut q, Duration::from_micros(100), &s).is_none());
-        q.push(launch("a", "k", Priority::P1), SimTime::ZERO);
-        let s = store(&[("a", "k", 10)]);
-        assert!(best_prio_fit(&mut q, Duration::ZERO, &s).is_none());
+        assert!(best_prio_fit(&mut q, Duration::from_micros(100)).is_none());
+        push(&mut q, "a", "k", Priority::P1, 10);
+        assert!(best_prio_fit(&mut q, Duration::ZERO).is_none());
     }
 }

@@ -15,9 +15,9 @@
 use super::scheduler::{FikitScheduler, SchedulerConfig, SchedulerStats, Submission};
 use super::Mode;
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::core::{Duration, LaunchSource, Result, SimTime, TaskKey};
+use crate::core::{Duration, Interner, LaunchSource, Result, SimTime, TaskKey};
 use crate::metrics::{JctStats, TextTable, Timeline, TimelinePoint};
-use crate::profile::{ProfileStore, SymbolResolver, TaskProfile};
+use crate::profile::{ProfileStore, ResolvedProfile, SymbolResolver, TaskProfile};
 use crate::simulator::{
     DeviceStats, Event, EventQueue, ProcessAction, ServiceProcess, SimDevice, Stage, TaskOutcome,
 };
@@ -163,6 +163,7 @@ pub fn profile_service(cfg: &ExperimentConfig, svc: &ServiceConfig) -> Result<Pr
     // Replace the process with a measuring-stage one.
     let measuring_proc = sim.make_process(&service, 0, Stage::Measuring);
     sim.procs[0] = measuring_proc;
+    sim.rebind(0);
     sim.run();
     let profile = sim.procs[0]
         .finish_measurement()
@@ -237,7 +238,19 @@ pub struct GpuSim<'a> {
     b2b_remaining: Vec<u32>,
     /// Services that departed: no new arrivals, in-flight tasks drain.
     detached: Vec<bool>,
+    /// Key → newest process slot. Technically derivable from the
+    /// interner + `handle_to_idx`, but kept as a direct map for the
+    /// cold paths (attach/detach/can_attach/report) that start from a
+    /// string key — the submit hot path never touches it.
     key_to_idx: HashMap<TaskKey, usize>,
+    /// Per-sim identity interner (append-only; see `core::Interner`).
+    /// Services and their kernel ids are interned once at attach; every
+    /// later per-launch structure works on the dense handles.
+    interner: Interner,
+    /// TaskHandle → newest process slot hosting that key. The submit
+    /// path's process lookup (`handle_to_idx[launch.task_handle]`) is an
+    /// array index, not a string-keyed map probe.
+    handle_to_idx: Vec<usize>,
     /// Exclusive modes: pending task order + lock state. Entries are
     /// (svc, priority, arrival seq); plain Exclusive picks by arrival,
     /// SoftExclusive by (priority, arrival).
@@ -271,6 +284,8 @@ impl<'a> GpuSim<'a> {
             b2b_remaining: Vec::new(),
             detached: Vec::new(),
             key_to_idx: HashMap::new(),
+            interner: Interner::new(),
+            handle_to_idx: Vec::new(),
             excl_queue: VecDeque::new(),
             excl_seq: 0,
             excl_locked: false,
@@ -312,8 +327,17 @@ impl<'a> GpuSim<'a> {
         if !self.detached[idx] {
             self.detached[idx] = true;
             self.procs[idx].clear_arrivals();
-            // Exclusive modes: forget its waiting (never-started) tasks.
-            self.excl_queue.retain(|(s, _, _)| *s != idx);
+            // Exclusive modes: its waiting (never-started) entries are
+            // dropped lazily by `excl_try_start` — detach itself is O(1)
+            // instead of an O(n) queue scan per departure.
+            if !self.procs[idx].is_active() {
+                // Idle departure: no task will ever complete for this
+                // service, so release its resolved profile now (the
+                // draining case does this in `on_task_completed`).
+                if let Some(sched) = self.scheduler.as_mut() {
+                    sched.unregister_service(self.procs[idx].task_handle());
+                }
+            }
         }
         Ok(if self.procs[idx].is_active() {
             DetachOutcome::Draining
@@ -382,12 +406,21 @@ impl<'a> GpuSim<'a> {
                 )));
             }
         }
-        if self.scheduler.is_some() {
-            // FIKIT mode shares against preloaded profiles.
-            self.store.require(&service.key)?;
-        }
         let idx = self.procs.len();
+        let handle = self.interner.intern_task(&service.key);
+        if let Some(sched) = self.scheduler.as_mut() {
+            // FIKIT mode shares against preloaded profiles, resolved to
+            // dense handle-indexed tables ONCE here — the scheduler never
+            // touches the string-keyed store again for this service.
+            let profile = self.store.require(&service.key)?;
+            let resolved = ResolvedProfile::resolve(profile, &mut self.interner);
+            sched.register_service(handle, resolved);
+        }
         self.key_to_idx.insert(service.key.clone(), idx);
+        if handle.index() >= self.handle_to_idx.len() {
+            self.handle_to_idx.resize(handle.index() + 1, usize::MAX);
+        }
+        self.handle_to_idx[handle.index()] = idx;
         self.b2b_remaining.push(0);
         self.detached.push(false);
         // Initial arrivals per pattern, offset to the attach time.
@@ -408,9 +441,18 @@ impl<'a> GpuSim<'a> {
                 self.events.push(at, Event::TaskArrival { svc: idx });
             }
         }
-        let proc = self.make_process(&service, idx, Stage::Sharing);
+        let mut proc = self.make_process(&service, idx, Stage::Sharing);
+        proc.bind(handle, &mut self.interner);
         self.procs.push(proc);
         Ok(idx)
+    }
+
+    /// Re-bind a replaced process slot to its interned identities (used
+    /// when a measurement-stage process is swapped in).
+    fn rebind(&mut self, idx: usize) {
+        let key = self.procs[idx].service.key.clone();
+        let handle = self.interner.intern_task(&key);
+        self.procs[idx].bind(handle, &mut self.interner);
     }
 
     /// Build a service process with the experiment's cost models applied.
@@ -441,8 +483,11 @@ impl<'a> GpuSim<'a> {
     /// let the owning process pipeline its next issue (async launch-ahead
     /// resumes the moment the held/direct launch reaches the device).
     fn submit(&mut self, launch: crate::core::KernelLaunch, source: LaunchSource, now: SimTime) {
-        let svc = self.key_to_idx[&launch.task_key];
-        let record = self.device.submit(&launch, now, source);
+        // Dense-table process lookup: launches inside a sim always carry
+        // a bound handle (processes are bound at attach).
+        debug_assert!(launch.task_handle.is_bound(), "unbound launch in sim");
+        let svc = self.handle_to_idx[launch.task_handle.index()];
+        let record = self.device.submit(launch, now, source);
         self.events
             .push(record.finished_at, Event::KernelDone { svc, record });
         if let Some(next_issue) = self.procs[svc].on_submitted(now) {
@@ -462,7 +507,11 @@ impl<'a> GpuSim<'a> {
             Mode::Sharing | Mode::Fikit => {
                 if let Some(issue_at) = self.procs[svc].try_start_task(now) {
                     if let Some(sched) = self.scheduler.as_mut() {
-                        sched.task_started(self.procs[svc].key(), self.procs[svc].priority(), now);
+                        sched.task_started(
+                            self.procs[svc].task_handle(),
+                            self.procs[svc].priority(),
+                            now,
+                        );
                     }
                     self.events.push(issue_at, Event::IssueKernel { svc });
                 }
@@ -479,14 +528,32 @@ impl<'a> GpuSim<'a> {
         if self.excl_locked {
             return;
         }
+        // Entries of departed services are dropped lazily here instead of
+        // by an O(n) retain per detach. Plain Exclusive only ever consumes
+        // the front, so purging the front is amortized O(1); SoftExclusive
+        // scans the whole queue anyway, so folding the purge into its scan
+        // adds no asymptotic cost and keeps stale entries from piling up
+        // behind a starved front entry.
         let pick = match self.cfg.mode {
-            Mode::SoftExclusive => self
-                .excl_queue
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, (_, prio, seq))| (*prio, *seq))
-                .map(|(pos, _)| pos),
-            _ => (!self.excl_queue.is_empty()).then_some(0),
+            Mode::SoftExclusive => {
+                let detached = &self.detached;
+                self.excl_queue.retain(|&(s, _, _)| !detached[s]);
+                self.excl_queue
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (_, prio, seq))| (*prio, *seq))
+                    .map(|(pos, _)| pos)
+            }
+            _ => {
+                while self
+                    .excl_queue
+                    .front()
+                    .is_some_and(|&(s, _, _)| self.detached[s])
+                {
+                    self.excl_queue.pop_front();
+                }
+                (!self.excl_queue.is_empty()).then_some(0)
+            }
         };
         let Some(pos) = pick else { return };
         let (svc, _, _) = self.excl_queue.remove(pos).expect("pos valid");
@@ -567,7 +634,7 @@ impl<'a> GpuSim<'a> {
                             .scheduler
                             .as_mut()
                             .expect("fikit mode has scheduler")
-                            .on_launch(launch, now, self.store);
+                            .on_launch(launch, now);
                         self.submit_all(subs, now);
                     }
                 }
@@ -576,7 +643,7 @@ impl<'a> GpuSim<'a> {
                 // Scheduler reacts first (fill windows open on holder
                 // kernel completions).
                 if let Some(sched) = self.scheduler.as_mut() {
-                    let subs = sched.on_kernel_done(&record, now, self.store);
+                    let subs = sched.on_kernel_done(&record, now);
                     self.submit_all(subs, now);
                 }
                 match self.procs[svc].on_kernel_done(record, now) {
@@ -593,12 +660,21 @@ impl<'a> GpuSim<'a> {
     }
 
     fn on_task_completed(&mut self, svc: usize, outcome: TaskOutcome, now: SimTime) {
-        let key = outcome.task_key.clone();
         self.outcomes.push(outcome);
 
         if let Some(sched) = self.scheduler.as_mut() {
-            let drains = sched.task_finished(&key, now);
+            let drains = sched.task_finished(self.procs[svc].task_handle(), now);
             self.submit_all(drains, now);
+        }
+
+        // A detached service that just drained its last task is gone for
+        // good (no new arrivals can exist): release its resolved profile
+        // so churn-heavy sims hold per-service state only for live
+        // services. A later re-attach re-registers under the same handle.
+        if self.detached[svc] && !self.procs[svc].is_active() {
+            if let Some(sched) = self.scheduler.as_mut() {
+                sched.unregister_service(self.procs[svc].task_handle());
+            }
         }
 
         // Pattern follow-up arrivals (suppressed once the service has
@@ -663,7 +739,7 @@ impl<'a> GpuSim<'a> {
             services,
             outcomes: self.outcomes,
             device: self.device.stats().clone(),
-            scheduler: self.scheduler.map(|s| s.final_stats()),
+            scheduler: self.scheduler.map(|s| s.into_stats()),
             sim_end: self.sim_now,
             events: self.events_processed,
             wall,

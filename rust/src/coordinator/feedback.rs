@@ -46,29 +46,34 @@ impl FeedbackStats {
 /// The feedback controller. With `enabled = false` it degrades to the
 /// pure profile-driven scheduler of the paper's Fig 12 case C — kept as
 /// an explicit ablation (bench `ablation_feedback`).
-#[derive(Debug)]
+///
+/// The controller is stateless policy: telemetry accumulates into the
+/// caller-owned [`FeedbackStats`] (the scheduler keeps it inside its
+/// `SchedulerStats`, so the live counters view is never stale).
+#[derive(Debug, Clone, Copy)]
 pub struct FeedbackController {
     pub enabled: bool,
-    stats: FeedbackStats,
 }
 
 impl FeedbackController {
     pub fn new(enabled: bool) -> FeedbackController {
-        FeedbackController {
-            enabled,
-            stats: FeedbackStats::default(),
-        }
+        FeedbackController { enabled }
     }
 
     /// Record that a fill window was opened.
-    pub fn on_window_open(&mut self) {
-        self.stats.windows += 1;
+    pub fn on_window_open(&self, stats: &mut FeedbackStats) {
+        stats.windows += 1;
     }
 
     /// The holder's next kernel launch arrived at `now`. If feedback is
     /// enabled, close the window (early-stop signal); always record the
     /// prediction error. Returns `true` if an open window was closed.
-    pub fn on_holder_arrival(&mut self, window: &mut Option<FillWindow>, now: SimTime) -> bool {
+    pub fn on_holder_arrival(
+        &self,
+        window: &mut Option<FillWindow>,
+        now: SimTime,
+        stats: &mut FeedbackStats,
+    ) -> bool {
         let Some(w) = window.as_mut() else {
             return false;
         };
@@ -76,13 +81,13 @@ impl FeedbackController {
         if w.predicted_end > now {
             let remaining = w.remaining(now);
             if !remaining.is_zero() {
-                self.stats.early_stops += 1;
-                self.stats.reclaimed_budget += remaining;
+                stats.early_stops += 1;
+                stats.reclaimed_budget += remaining;
             }
-            self.stats.abs_error += w.predicted_end - now;
+            stats.abs_error += w.predicted_end - now;
         } else {
-            self.stats.underestimates += 1;
-            self.stats.abs_error += now - w.predicted_end;
+            stats.underestimates += 1;
+            stats.abs_error += now - w.predicted_end;
         }
 
         if self.enabled {
@@ -92,21 +97,17 @@ impl FeedbackController {
             false
         }
     }
-
-    pub fn stats(&self) -> &FeedbackStats {
-        &self.stats
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::TaskKey;
+    use crate::core::TaskHandle;
     use crate::coordinator::fikit::DEFAULT_EPSILON;
 
     fn window(gap_us: u64) -> Option<FillWindow> {
         FillWindow::open(
-            TaskKey::new("h"),
+            TaskHandle::from_index(0),
             SimTime::ZERO,
             Duration::from_micros(gap_us),
             DEFAULT_EPSILON,
@@ -115,14 +116,14 @@ mod tests {
 
     #[test]
     fn early_stop_closes_window_and_reclaims_budget() {
-        let mut fc = FeedbackController::new(true);
+        let fc = FeedbackController::new(true);
+        let mut s = FeedbackStats::default();
         let mut w = window(1_000); // predicted 1ms
-        fc.on_window_open();
+        fc.on_window_open(&mut s);
         // Holder's next kernel arrives at 0.4ms — 0.6ms overestimated.
-        let closed = fc.on_holder_arrival(&mut w, SimTime(400_000));
+        let closed = fc.on_holder_arrival(&mut w, SimTime(400_000), &mut s);
         assert!(closed);
         assert!(w.is_none());
-        let s = fc.stats();
         assert_eq!(s.early_stops, 1);
         assert_eq!(s.underestimates, 0);
         assert_eq!(s.abs_error, Duration::from_micros(600));
@@ -132,12 +133,12 @@ mod tests {
 
     #[test]
     fn underestimate_recorded() {
-        let mut fc = FeedbackController::new(true);
+        let fc = FeedbackController::new(true);
+        let mut s = FeedbackStats::default();
         let mut w = window(1_000);
-        fc.on_window_open();
+        fc.on_window_open(&mut s);
         // Holder arrives 0.5ms *after* the predicted end.
-        fc.on_holder_arrival(&mut w, SimTime(1_500_000));
-        let s = fc.stats();
+        fc.on_holder_arrival(&mut w, SimTime(1_500_000), &mut s);
         assert_eq!(s.early_stops, 0);
         assert_eq!(s.underestimates, 1);
         assert_eq!(s.abs_error, Duration::from_micros(500));
@@ -145,21 +146,23 @@ mod tests {
 
     #[test]
     fn disabled_feedback_leaves_window_open() {
-        let mut fc = FeedbackController::new(false);
+        let fc = FeedbackController::new(false);
+        let mut s = FeedbackStats::default();
         let mut w = window(1_000);
-        fc.on_window_open();
-        let closed = fc.on_holder_arrival(&mut w, SimTime(100_000));
+        fc.on_window_open(&mut s);
+        let closed = fc.on_holder_arrival(&mut w, SimTime(100_000), &mut s);
         assert!(!closed);
         assert!(w.is_some(), "ablation: window must stay open");
         // Error is still recorded for telemetry.
-        assert_eq!(fc.stats().early_stops, 1);
+        assert_eq!(s.early_stops, 1);
     }
 
     #[test]
     fn no_window_is_a_noop() {
-        let mut fc = FeedbackController::new(true);
+        let fc = FeedbackController::new(true);
+        let mut s = FeedbackStats::default();
         let mut w: Option<FillWindow> = None;
-        assert!(!fc.on_holder_arrival(&mut w, SimTime::ZERO));
-        assert_eq!(fc.stats().windows, 0);
+        assert!(!fc.on_holder_arrival(&mut w, SimTime::ZERO, &mut s));
+        assert_eq!(s.windows, 0);
     }
 }

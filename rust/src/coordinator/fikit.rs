@@ -20,8 +20,7 @@
 
 use super::best_prio_fit::{select_fit, FillPolicy, Fit};
 use super::queues::PriorityQueues;
-use crate::core::{Duration, SimTime, TaskKey};
-use crate::profile::ProfileStore;
+use crate::core::{Duration, SimTime, TaskHandle};
 
 /// Default small-gap threshold ε: "a kernel launched on the GPU typically
 /// costs 0.1 ms to 2 ms; the function avoids filling negligible idle gaps
@@ -31,8 +30,9 @@ pub const DEFAULT_EPSILON: Duration = Duration(100_000);
 /// An open gap-filling window for the GPU-holding task.
 #[derive(Debug, Clone)]
 pub struct FillWindow {
-    /// The task whose inter-kernel gap is being filled.
-    pub holder: TaskKey,
+    /// The task whose inter-kernel gap is being filled (interned handle;
+    /// holder comparisons on the hot path are integer compares).
+    pub holder: TaskHandle,
     /// When the gap began (holder kernel completion time).
     pub opened_at: SimTime,
     /// Predicted end of the gap: `opened_at + SG[kernel]`.
@@ -47,7 +47,7 @@ impl FillWindow {
     /// Open a window for a predicted gap, or return `None` when the gap
     /// is at-or-below ε (Algorithm 1 lines 6–8: skip small gaps).
     pub fn open(
-        holder: TaskKey,
+        holder: TaskHandle,
         now: SimTime,
         predicted_gap: Duration,
         epsilon: Duration,
@@ -89,9 +89,8 @@ pub fn fikit_fill(
     window: &mut FillWindow,
     now: SimTime,
     queues: &mut PriorityQueues,
-    profiles: &ProfileStore,
 ) -> Vec<Fit> {
-    fikit_fill_with(window, now, queues, profiles, FillPolicy::LongestFit)
+    fikit_fill_with(window, now, queues, FillPolicy::LongestFit)
 }
 
 /// Policy-parameterized variant (fill-policy ablation).
@@ -99,7 +98,6 @@ pub fn fikit_fill_with(
     window: &mut FillWindow,
     now: SimTime,
     queues: &mut PriorityQueues,
-    profiles: &ProfileStore,
     policy: FillPolicy,
 ) -> Vec<Fit> {
     let mut fills = Vec::new();
@@ -109,8 +107,9 @@ pub fn fikit_fill_with(
         if remaining.is_zero() {
             break;
         }
-        // ...find the best fitting kernel request (line 10).
-        let Some(fit) = select_fit(queues, remaining, profiles, policy) else {
+        // ...find the best fitting kernel request (line 10). Predictions
+        // were resolved at enqueue time; no profile store is consulted.
+        let Some(fit) = select_fit(queues, remaining, policy) else {
             break; // no suitable kernel (lines 11-13)
         };
         // Launch it and charge the budget (lines 14-15).
@@ -124,8 +123,9 @@ pub fn fikit_fill_with(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{Dim3, KernelId, KernelLaunch, Priority, TaskId};
-    use crate::profile::TaskProfile;
+    use crate::core::{Dim3, KernelHandle, KernelId, KernelLaunch, Priority, TaskId, TaskKey};
+
+    const HOLDER: TaskHandle = TaskHandle::UNBOUND;
 
     fn kid(name: &str) -> KernelId {
         KernelId::new(name, Dim3::x(1), Dim3::x(64))
@@ -134,8 +134,10 @@ mod tests {
     fn launch(key: &str, kernel: &str, prio: Priority) -> KernelLaunch {
         KernelLaunch {
             task_key: TaskKey::new(key),
+            task_handle: TaskHandle::UNBOUND,
             task_id: TaskId(0),
             kernel: kid(kernel),
+            kernel_handle: KernelHandle::UNBOUND,
             priority: prio,
             seq: 0,
             true_duration: Duration::from_micros(1),
@@ -143,36 +145,30 @@ mod tests {
         }
     }
 
-    fn store(entries: &[(&str, &str, u64)]) -> ProfileStore {
-        let mut s = ProfileStore::new();
-        for (key, kernel, us) in entries {
-            let tk = TaskKey::new(*key);
-            let mut p = s.remove(&tk).unwrap_or_else(|| TaskProfile::new(tk));
-            p.record(&kid(kernel), Duration::from_micros(*us), None);
-            p.finish_run(1);
-            s.insert(p);
-        }
-        s
+    /// Enqueue with the prediction pre-resolved (as the scheduler does
+    /// from the attach-time ResolvedProfile).
+    fn push(q: &mut PriorityQueues, key: &str, kernel: &str, prio: Priority, us: u64) {
+        q.push_predicted(
+            launch(key, kernel, prio),
+            Some(Duration::from_micros(us)),
+            SimTime::ZERO,
+        );
     }
 
     #[test]
     fn small_gaps_are_skipped() {
         assert!(FillWindow::open(
-            TaskKey::new("h"),
+            HOLDER,
             SimTime::ZERO,
             Duration::from_micros(100),
             DEFAULT_EPSILON
         )
         .is_none());
+        assert!(
+            FillWindow::open(HOLDER, SimTime::ZERO, DEFAULT_EPSILON, DEFAULT_EPSILON).is_none()
+        );
         assert!(FillWindow::open(
-            TaskKey::new("h"),
-            SimTime::ZERO,
-            DEFAULT_EPSILON,
-            DEFAULT_EPSILON
-        )
-        .is_none());
-        assert!(FillWindow::open(
-            TaskKey::new("h"),
+            HOLDER,
             SimTime::ZERO,
             Duration::from_micros(101),
             DEFAULT_EPSILON
@@ -186,19 +182,18 @@ mod tests {
         // as in the real system where each waiting task holds one
         // pending request).
         let mut w = FillWindow::open(
-            TaskKey::new("h"),
+            HOLDER,
             SimTime::ZERO,
             Duration::from_millis(1),
             DEFAULT_EPSILON,
         )
         .unwrap();
-        let s = store(&[("lo", "k400", 400)]);
         let mut q = PriorityQueues::new();
-        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
-        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
-        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
+        push(&mut q, "lo", "k400", Priority::P5, 400);
+        push(&mut q, "lo", "k400", Priority::P5, 400);
+        push(&mut q, "lo", "k400", Priority::P5, 400);
 
-        let fills = fikit_fill(&mut w, SimTime::ZERO, &mut q, &s);
+        let fills = fikit_fill(&mut w, SimTime::ZERO, &mut q);
         // 1000us budget: 400 + 400 launched; remaining 200us < 400 → stop.
         assert_eq!(fills.len(), 2);
         assert_eq!(w.fills, 2);
@@ -212,19 +207,18 @@ mod tests {
         // only use the remaining 0.1ms of wall clock even though the
         // budget is still 1ms.
         let mut w = FillWindow::open(
-            TaskKey::new("h"),
+            HOLDER,
             SimTime::ZERO,
             Duration::from_millis(1),
             DEFAULT_EPSILON,
         )
         .unwrap();
-        let s = store(&[("lo", "k400", 400)]);
         let mut q = PriorityQueues::new();
-        q.push(launch("lo", "k400", Priority::P5), SimTime::ZERO);
+        push(&mut q, "lo", "k400", Priority::P5, 400);
 
         let late = SimTime(900_000);
         assert_eq!(w.remaining(late), Duration::from_micros(100));
-        let fills = fikit_fill(&mut w, late, &mut q, &s);
+        let fills = fikit_fill(&mut w, late, &mut q);
         assert!(fills.is_empty(), "400us kernel must not fit 100us remainder");
         assert_eq!(q.len(), 1);
     }
@@ -232,7 +226,7 @@ mod tests {
     #[test]
     fn close_stops_filling() {
         let mut w = FillWindow::open(
-            TaskKey::new("h"),
+            HOLDER,
             SimTime::ZERO,
             Duration::from_millis(1),
             DEFAULT_EPSILON,
@@ -240,27 +234,25 @@ mod tests {
         .unwrap();
         w.close();
         assert!(w.is_exhausted(SimTime::ZERO));
-        let s = store(&[("lo", "k", 100)]);
         let mut q = PriorityQueues::new();
-        q.push(launch("lo", "k", Priority::P5), SimTime::ZERO);
-        assert!(fikit_fill(&mut w, SimTime::ZERO, &mut q, &s).is_empty());
+        push(&mut q, "lo", "k", Priority::P5, 100);
+        assert!(fikit_fill(&mut w, SimTime::ZERO, &mut q).is_empty());
     }
 
     #[test]
     fn priority_order_respected_across_fills() {
         let mut w = FillWindow::open(
-            TaskKey::new("h"),
+            HOLDER,
             SimTime::ZERO,
             Duration::from_millis(1),
             DEFAULT_EPSILON,
         )
         .unwrap();
-        let s = store(&[("mid", "k", 300), ("low", "k", 300)]);
         let mut q = PriorityQueues::new();
-        q.push(launch("low", "k", Priority::P8), SimTime::ZERO);
-        q.push(launch("mid", "k", Priority::P4), SimTime::ZERO);
+        push(&mut q, "low", "k", Priority::P8, 300);
+        push(&mut q, "mid", "k", Priority::P4, 300);
 
-        let fills = fikit_fill(&mut w, SimTime::ZERO, &mut q, &s);
+        let fills = fikit_fill(&mut w, SimTime::ZERO, &mut q);
         assert_eq!(fills.len(), 2);
         assert_eq!(fills[0].launch.task_key, TaskKey::new("mid"));
         assert_eq!(fills[1].launch.task_key, TaskKey::new("low"));

@@ -5,9 +5,30 @@
 //! always scans Q0 → Q9, so high-priority requests are always considered
 //! first — the structural guarantee behind the paper's "high-priority
 //! tasks will be scheduled first".
+//!
+//! ## Hot-path layout (DESIGN.md §Perf)
+//!
+//! Each priority lane is a **linked slab**: requests live in a slab of
+//! slots threaded into a doubly-linked FIFO, with a freelist recycling
+//! vacated slots. On top sits `fit`, a duration-ordered index over the
+//! *profiled* requests, sorted by `(predicted asc, arrival desc)`.
+//!
+//! * LongestFit ("longest request strictly under the gap, oldest wins
+//!   ties" — Algorithm 2) is one `partition_point` binary search —
+//!   O(log n) instead of the old full FIFO scan;
+//! * removing the selected request is an O(1) FIFO unlink plus an
+//!   in-place memmove of 24-byte fit-index triples — the old
+//!   `VecDeque::remove` memmoved O(n) ~130-byte queued requests;
+//! * every container reuses retained capacity (slab via freelist, index
+//!   via in-place memmoves of 24-byte triples), so a steady-state
+//!   enqueue → select → dispatch cycle performs **zero heap
+//!   allocations** — asserted by a counting allocator in
+//!   `tests/hotpath_alloc.rs`.
+//!
+//! Requests are stamped with a per-lane monotone arrival counter; stamps
+//! order FIFO tie-breaks in the fit index deterministically.
 
-use crate::core::{KernelLaunch, Priority, SimTime, NUM_PRIORITIES};
-use std::collections::VecDeque;
+use crate::core::{Duration, KernelLaunch, Priority, SimTime, NUM_PRIORITIES};
 
 /// A kernel request waiting in a priority queue.
 #[derive(Debug, Clone)]
@@ -15,16 +36,216 @@ pub struct QueuedRequest {
     pub launch: KernelLaunch,
     /// When the request entered the queue (for wait metrics).
     pub enqueued_at: SimTime,
-    /// Profiled execution time `SK`, resolved **once** at enqueue time so
-    /// the BestPrioFit scan is a pure comparison loop (no hashing or
-    /// string work on the hot path — see EXPERIMENTS.md §Perf).
+    /// Profiled execution time `SK`, resolved **once** at enqueue time
+    /// (from the attach-time [`crate::profile::ResolvedProfile`]), so
+    /// BestPrioFit is a pure index lookup — no hashing or string work on
+    /// the hot path. `None` = unprofiled: never selected for gap filling
+    /// (the scheduler cannot predict it, so it must not gamble a
+    /// high-priority task's gap on it).
     pub predicted: Option<crate::core::Duration>,
+}
+
+/// Niche link value for "no slot".
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug)]
+struct Slot {
+    /// `None` = free slot (on the freelist).
+    req: Option<QueuedRequest>,
+    prev: u32,
+    next: u32,
+    /// Arrival stamp (monotone per lane) — FIFO tie-break key.
+    stamp: u64,
+}
+
+/// One priority lane: linked-slab FIFO + duration-ordered fit index.
+#[derive(Debug)]
+struct Lane {
+    slab: Vec<Slot>,
+    free: Vec<u32>,
+    /// Oldest live slot (`NIL` when empty).
+    head: u32,
+    /// Newest live slot (`NIL` when empty).
+    tail: u32,
+    next_stamp: u64,
+    /// `(predicted, stamp, slot)` of every live profiled request, sorted
+    /// by `(predicted asc, stamp desc)` — see [`Lane::fit_pos`].
+    fit: Vec<(Duration, u64, u32)>,
+    live: usize,
+}
+
+impl Default for Lane {
+    fn default() -> Lane {
+        Lane {
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            next_stamp: 0,
+            fit: Vec::new(),
+            live: 0,
+        }
+    }
+}
+
+impl Lane {
+    /// Position of / insertion point for `(d, stamp)` in the fit index.
+    /// Sorting stamps *descending* within equal durations puts the
+    /// oldest request last in its duration run, so "longest fitting,
+    /// FIFO tie-break" is always the element just before the partition
+    /// point — identical selection to the old strict `predicted > best`
+    /// scan.
+    #[inline]
+    fn fit_pos(&self, d: Duration, stamp: u64) -> usize {
+        self.fit
+            .partition_point(|&(fd, fs, _)| (fd, !fs) < (d, !stamp))
+    }
+
+    fn push(&mut self, req: QueuedRequest) {
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        let predicted = req.predicted;
+        let prev_tail = self.tail;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let sl = &mut self.slab[s as usize];
+                debug_assert!(sl.req.is_none());
+                *sl = Slot {
+                    req: Some(req),
+                    prev: prev_tail,
+                    next: NIL,
+                    stamp,
+                };
+                s
+            }
+            None => {
+                let s = self.slab.len() as u32;
+                debug_assert!(s < NIL, "lane slab exhausted");
+                self.slab.push(Slot {
+                    req: Some(req),
+                    prev: prev_tail,
+                    next: NIL,
+                    stamp,
+                });
+                s
+            }
+        };
+        if prev_tail != NIL {
+            self.slab[prev_tail as usize].next = slot;
+        } else {
+            self.head = slot;
+        }
+        self.tail = slot;
+        if let Some(d) = predicted {
+            let pos = self.fit_pos(d, stamp);
+            self.fit.insert(pos, (d, stamp, slot));
+        }
+        self.live += 1;
+    }
+
+    /// Unlink a live slot from the FIFO and free it. The caller must
+    /// have already removed any fit-index entry for it.
+    fn unlink(&mut self, slot: u32) -> QueuedRequest {
+        let (prev, next) = {
+            let sl = &self.slab[slot as usize];
+            (sl.prev, sl.next)
+        };
+        if prev != NIL {
+            self.slab[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        let req = self.slab[slot as usize].req.take().expect("live slot");
+        self.free.push(slot);
+        self.live -= 1;
+        req
+    }
+
+    /// Drop the fit entry of a live slot (no-op for unprofiled slots).
+    fn unfit(&mut self, slot: u32) {
+        let sl = &self.slab[slot as usize];
+        let stamp = sl.stamp;
+        if let Some(d) = sl.req.as_ref().and_then(|r| r.predicted) {
+            let pos = self.fit_pos(d, stamp);
+            debug_assert!(
+                matches!(self.fit.get(pos), Some(&(fd, fs, _)) if fd == d && fs == stamp),
+                "fit index desync"
+            );
+            self.fit.remove(pos);
+        }
+    }
+
+    fn pop_front(&mut self) -> Option<QueuedRequest> {
+        if self.head == NIL {
+            return None;
+        }
+        let slot = self.head;
+        self.unfit(slot);
+        Some(self.unlink(slot))
+    }
+
+    /// Remove the fit entry at `pos` and its request.
+    fn take_fit(&mut self, pos: usize) -> (QueuedRequest, Duration) {
+        let (d, _stamp, slot) = self.fit.remove(pos);
+        (self.unlink(slot), d)
+    }
+
+    /// Live requests in FIFO order.
+    fn iter(&self) -> LaneIter<'_> {
+        LaneIter {
+            lane: self,
+            cur: self.head,
+        }
+    }
+
+    /// Empty the lane in FIFO order. O(n): walks the links once and
+    /// clears the fit index wholesale (per-element `unfit` would memmove
+    /// the index per pop — O(n²) on the holder-change drain path).
+    fn drain(&mut self) -> Vec<QueuedRequest> {
+        let mut out = Vec::with_capacity(self.live);
+        let mut slot = self.head;
+        while slot != NIL {
+            let sl = &mut self.slab[slot as usize];
+            out.push(sl.req.take().expect("linked slots are live"));
+            let next = sl.next;
+            self.free.push(slot);
+            slot = next;
+        }
+        self.head = NIL;
+        self.tail = NIL;
+        self.live = 0;
+        self.fit.clear();
+        out
+    }
+}
+
+struct LaneIter<'a> {
+    lane: &'a Lane,
+    cur: u32,
+}
+
+impl<'a> Iterator for LaneIter<'a> {
+    type Item = &'a QueuedRequest;
+
+    fn next(&mut self) -> Option<&'a QueuedRequest> {
+        if self.cur == NIL {
+            return None;
+        }
+        let sl = &self.lane.slab[self.cur as usize];
+        self.cur = sl.next;
+        Some(sl.req.as_ref().expect("linked slots are live"))
+    }
 }
 
 /// The Q0–Q9 message-queue array.
 #[derive(Debug, Default)]
 pub struct PriorityQueues {
-    queues: [VecDeque<QueuedRequest>; NUM_PRIORITIES],
+    lanes: [Lane; NUM_PRIORITIES],
     len: usize,
 }
 
@@ -33,8 +254,8 @@ impl PriorityQueues {
         PriorityQueues::default()
     }
 
-    /// Enqueue a request into the queue of its priority (prediction
-    /// unresolved; BestPrioFit will fall back to a store lookup).
+    /// Enqueue a request with no resolved prediction (unprofiled: it can
+    /// drain or dispatch on holder change, but never gap-fills).
     pub fn push(&mut self, launch: KernelLaunch, now: SimTime) {
         self.push_predicted(launch, None, now);
     }
@@ -47,7 +268,7 @@ impl PriorityQueues {
         now: SimTime,
     ) {
         let idx = launch.priority.index();
-        self.queues[idx].push_back(QueuedRequest {
+        self.lanes[idx].push(QueuedRequest {
             launch,
             enqueued_at: now,
             predicted,
@@ -66,7 +287,7 @@ impl PriorityQueues {
 
     /// Number of requests queued at one priority.
     pub fn len_at(&self, p: Priority) -> usize {
-        self.queues[p.index()].len()
+        self.lanes[p.index()].live
     }
 
     /// Highest (numerically smallest) non-empty priority, scanning
@@ -74,31 +295,116 @@ impl PriorityQueues {
     pub fn highest_nonempty(&self) -> Option<Priority> {
         Priority::ALL
             .into_iter()
-            .find(|p| !self.queues[p.index()].is_empty())
+            .find(|p| self.lanes[p.index()].live > 0)
     }
 
     /// Iterate requests at one priority in FIFO order.
     pub fn iter_at(&self, p: Priority) -> impl Iterator<Item = &QueuedRequest> {
-        self.queues[p.index()].iter()
+        self.lanes[p.index()].iter()
     }
 
     /// Pop the front request at one priority.
     pub fn pop_front_at(&mut self, p: Priority) -> Option<QueuedRequest> {
-        let r = self.queues[p.index()].pop_front();
+        let r = self.lanes[p.index()].pop_front();
         if r.is_some() {
             self.len -= 1;
         }
         r
     }
 
-    /// Remove the request at position `idx` within priority `p`'s queue
-    /// (used by BestPrioFit after it has chosen a specific request).
+    /// Remove the request at FIFO position `idx` within priority `p`'s
+    /// queue. Diagnostic/test helper — O(idx) link walk plus an index
+    /// memmove; production removal goes through the `take_*_fit_at`
+    /// selectors or `pop_front_at`, never this.
     pub fn remove_at(&mut self, p: Priority, idx: usize) -> Option<QueuedRequest> {
-        let r = self.queues[p.index()].remove(idx);
-        if r.is_some() {
-            self.len -= 1;
+        let lane = &mut self.lanes[p.index()];
+        let mut slot = lane.head;
+        for _ in 0..idx {
+            if slot == NIL {
+                return None;
+            }
+            slot = lane.slab[slot as usize].next;
         }
-        r
+        if slot == NIL {
+            return None;
+        }
+        lane.unfit(slot);
+        let req = lane.unlink(slot);
+        self.len -= 1;
+        Some(req)
+    }
+
+    /// **LongestFit** (Algorithm 2's selection): the request at priority
+    /// `p` with the longest predicted duration strictly below `idle`;
+    /// FIFO order breaks ties. O(log n) via the fit index.
+    pub fn take_longest_fit_at(
+        &mut self,
+        p: Priority,
+        idle: Duration,
+    ) -> Option<(QueuedRequest, Duration)> {
+        let lane = &mut self.lanes[p.index()];
+        // Entries [0..i) have predicted < idle; the last of them has the
+        // max fitting duration and — stamps sorting descending within a
+        // duration — the oldest arrival among its ties.
+        let i = lane.fit.partition_point(|&(d, _, _)| d < idle);
+        if i == 0 {
+            return None;
+        }
+        // A zero-duration maximum means only zero-SK requests fit; the
+        // replaced scan's strict `predicted > best` (best starting at
+        // zero) never selected those — preserve that exactly.
+        if lane.fit[i - 1].0.is_zero() {
+            return None;
+        }
+        let taken = lane.take_fit(i - 1);
+        self.len -= 1;
+        Some(taken)
+    }
+
+    /// **ShortestFit** ablation: shortest predicted duration strictly
+    /// below `idle`; FIFO order breaks ties.
+    pub fn take_shortest_fit_at(
+        &mut self,
+        p: Priority,
+        idle: Duration,
+    ) -> Option<(QueuedRequest, Duration)> {
+        let lane = &mut self.lanes[p.index()];
+        let &(d0, _, _) = lane.fit.first()?;
+        if d0 >= idle {
+            return None;
+        }
+        // Oldest among the d0 ties = last element of the d0 run.
+        let i = lane.fit.partition_point(|&(d, _, _)| d <= d0);
+        let taken = lane.take_fit(i - 1);
+        self.len -= 1;
+        Some(taken)
+    }
+
+    /// **FirstFit** ablation: the oldest profiled request fitting `idle`
+    /// (FIFO scan — this policy is inherently order-dependent).
+    pub fn take_first_fit_at(
+        &mut self,
+        p: Priority,
+        idle: Duration,
+    ) -> Option<(QueuedRequest, Duration)> {
+        let lane = &mut self.lanes[p.index()];
+        let mut slot = lane.head;
+        while slot != NIL {
+            let (next, predicted) = {
+                let sl = &lane.slab[slot as usize];
+                (sl.next, sl.req.as_ref().and_then(|r| r.predicted))
+            };
+            if let Some(d) = predicted {
+                if d < idle {
+                    lane.unfit(slot);
+                    let req = lane.unlink(slot);
+                    self.len -= 1;
+                    return Some((req, d));
+                }
+            }
+            slot = next;
+        }
+        None
     }
 
     /// Pop the overall-highest-priority request (Q0→Q9 scan, FIFO within
@@ -110,9 +416,9 @@ impl PriorityQueues {
 
     /// Drain every request at exactly priority `p`, FIFO order.
     pub fn drain_at(&mut self, p: Priority) -> Vec<QueuedRequest> {
-        let q = &mut self.queues[p.index()];
-        self.len -= q.len();
-        q.drain(..).collect()
+        let out = self.lanes[p.index()].drain();
+        self.len -= out.len();
+        out
     }
 
     /// Remove every queued request (e.g. on reset). Returns them in
@@ -120,23 +426,54 @@ impl PriorityQueues {
     pub fn drain_all(&mut self) -> Vec<QueuedRequest> {
         let mut out = Vec::with_capacity(self.len);
         for p in Priority::ALL {
-            out.extend(self.queues[p.index()].drain(..));
+            out.extend(self.drain_at(p));
         }
-        self.len = 0;
         out
+    }
+
+    /// Debug check: every lane's fit index and links agree with its
+    /// slots.
+    #[cfg(test)]
+    fn check_consistency(&self) {
+        for lane in &self.lanes {
+            assert_eq!(lane.iter().count(), lane.live, "link/live desync");
+            let profiled = lane.iter().filter(|r| r.predicted.is_some()).count();
+            assert_eq!(lane.fit.len(), profiled, "fit index out of sync");
+            assert!(
+                lane.fit
+                    .windows(2)
+                    .all(|w| (w[0].0, !w[0].1) < (w[1].0, !w[1].1)),
+                "fit index out of order"
+            );
+            for &(d, stamp, slot) in &lane.fit {
+                let sl = &lane.slab[slot as usize];
+                assert_eq!(sl.stamp, stamp);
+                assert_eq!(sl.req.as_ref().and_then(|r| r.predicted), Some(d));
+            }
+            assert_eq!(
+                lane.free.len() + lane.live,
+                lane.slab.len(),
+                "slab leak"
+            );
+        }
+        assert_eq!(self.len, self.lanes.iter().map(|l| l.live).sum::<usize>());
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{Dim3, Duration, KernelId, TaskId, TaskKey};
+    use crate::core::{
+        Dim3, Duration, KernelHandle, KernelId, TaskHandle, TaskId, TaskKey,
+    };
 
     fn launch(prio: Priority, seq: u32) -> KernelLaunch {
         KernelLaunch {
             task_key: TaskKey::new(format!("svc{}", prio.index())),
+            task_handle: TaskHandle::UNBOUND,
             task_id: TaskId(0),
             kernel: KernelId::new("k", Dim3::x(1), Dim3::x(32)),
+            kernel_handle: KernelHandle::UNBOUND,
             priority: prio,
             seq,
             true_duration: Duration::from_micros(10),
@@ -157,6 +494,7 @@ mod tests {
         assert_eq!(q.pop_highest().unwrap().launch.priority, Priority::P8);
         assert!(q.pop_highest().is_none());
         assert!(q.is_empty());
+        q.check_consistency();
     }
 
     #[test]
@@ -182,6 +520,9 @@ mod tests {
         assert_eq!(q.len(), 2);
         let seqs: Vec<u32> = q.iter_at(Priority::P1).map(|r| r.launch.seq).collect();
         assert_eq!(seqs, vec![10, 12]);
+        q.check_consistency();
+        // Removing past the end is a no-op.
+        assert!(q.remove_at(Priority::P1, 5).is_none());
     }
 
     #[test]
@@ -196,5 +537,162 @@ mod tests {
         let rest = q.drain_all();
         assert_eq!(rest.len(), 1);
         assert!(q.is_empty());
+    }
+
+    fn push_us(q: &mut PriorityQueues, p: Priority, seq: u32, us: u64) {
+        q.push_predicted(
+            launch(p, seq),
+            Some(Duration::from_micros(us)),
+            SimTime::ZERO,
+        );
+    }
+
+    #[test]
+    fn longest_fit_is_strict_and_fifo_tiebroken() {
+        let mut q = PriorityQueues::new();
+        push_us(&mut q, Priority::P5, 0, 100);
+        push_us(&mut q, Priority::P5, 1, 400);
+        push_us(&mut q, Priority::P5, 2, 400); // tie: seq 1 is older
+        push_us(&mut q, Priority::P5, 3, 900);
+        let (req, d) = q
+            .take_longest_fit_at(Priority::P5, Duration::from_micros(500))
+            .unwrap();
+        assert_eq!(d, Duration::from_micros(400));
+        assert_eq!(req.launch.seq, 1, "FIFO tie-break: oldest 400us wins");
+        q.check_consistency();
+        // Strict bound: a 400us request does not fit a 400us window.
+        let (req, _) = q
+            .take_longest_fit_at(Priority::P5, Duration::from_micros(400))
+            .unwrap();
+        assert_eq!(req.launch.seq, 0, "only the 100us request fits");
+        assert!(q
+            .take_longest_fit_at(Priority::P5, Duration::from_micros(100))
+            .is_none());
+        assert_eq!(q.len(), 2);
+        q.check_consistency();
+    }
+
+    #[test]
+    fn shortest_fit_and_first_fit() {
+        let build = || {
+            let mut q = PriorityQueues::new();
+            push_us(&mut q, Priority::P5, 0, 250);
+            push_us(&mut q, Priority::P5, 1, 100);
+            push_us(&mut q, Priority::P5, 2, 100); // tie: seq 1 older
+            push_us(&mut q, Priority::P5, 3, 400);
+            q
+        };
+        let idle = Duration::from_micros(500);
+        let (req, d) = build().take_shortest_fit_at(Priority::P5, idle).unwrap();
+        assert_eq!((req.launch.seq, d), (1, Duration::from_micros(100)));
+        let (req, d) = build().take_first_fit_at(Priority::P5, idle).unwrap();
+        assert_eq!((req.launch.seq, d), (0, Duration::from_micros(250)));
+        // Nothing fits a tiny window under any policy.
+        let tiny = Duration::from_micros(50);
+        assert!(build().take_shortest_fit_at(Priority::P5, tiny).is_none());
+        assert!(build().take_first_fit_at(Priority::P5, tiny).is_none());
+        assert!(build().take_longest_fit_at(Priority::P5, tiny).is_none());
+    }
+
+    /// Parity with the replaced scan: `predicted > best` (best starting
+    /// at zero) never picked zero-SK requests for LongestFit, while
+    /// Shortest/FirstFit did select them.
+    #[test]
+    fn zero_duration_predictions_match_legacy_scan() {
+        let mut q = PriorityQueues::new();
+        push_us(&mut q, Priority::P3, 0, 0);
+        assert!(q
+            .take_longest_fit_at(Priority::P3, Duration::from_micros(500))
+            .is_none());
+        assert!(q
+            .take_shortest_fit_at(Priority::P3, Duration::from_micros(500))
+            .is_some());
+        push_us(&mut q, Priority::P3, 1, 0);
+        assert!(q
+            .take_first_fit_at(Priority::P3, Duration::from_micros(500))
+            .is_some());
+        // With a positive candidate present, LongestFit picks it.
+        push_us(&mut q, Priority::P3, 2, 0);
+        push_us(&mut q, Priority::P3, 3, 40);
+        let (req, d) = q
+            .take_longest_fit_at(Priority::P3, Duration::from_micros(500))
+            .unwrap();
+        assert_eq!((req.launch.seq, d), (3, Duration::from_micros(40)));
+        q.check_consistency();
+    }
+
+    #[test]
+    fn unprofiled_requests_invisible_to_fit_index() {
+        let mut q = PriorityQueues::new();
+        q.push(launch(Priority::P2, 0), SimTime::ZERO); // no prediction
+        push_us(&mut q, Priority::P2, 1, 50);
+        let (req, _) = q
+            .take_longest_fit_at(Priority::P2, Duration::from_micros(500))
+            .unwrap();
+        assert_eq!(req.launch.seq, 1);
+        assert!(q
+            .take_longest_fit_at(Priority::P2, Duration::from_micros(500))
+            .is_none());
+        // The unprofiled request still drains in FIFO order.
+        assert_eq!(q.pop_front_at(Priority::P2).unwrap().launch.seq, 0);
+        assert!(q.is_empty());
+        q.check_consistency();
+    }
+
+    /// Interleaved pushes, fit-takes and pops keep the slab, links and
+    /// fit index in sync (freelist reuse, FIFO preservation).
+    #[test]
+    fn mixed_operations_stay_consistent() {
+        let mut q = PriorityQueues::new();
+        let mut seq = 0u32;
+        for round in 0..60u64 {
+            for _ in 0..3 {
+                push_us(&mut q, Priority::P4, seq, 10 + (seq as u64 * 37) % 500);
+                seq += 1;
+            }
+            match round % 3 {
+                0 => {
+                    q.take_longest_fit_at(Priority::P4, Duration::from_micros(400));
+                }
+                1 => {
+                    q.pop_front_at(Priority::P4);
+                    q.take_shortest_fit_at(Priority::P4, Duration::from_micros(600));
+                }
+                _ => {
+                    q.take_first_fit_at(Priority::P4, Duration::from_micros(200));
+                    q.remove_at(Priority::P4, 0);
+                }
+            }
+            q.check_consistency();
+        }
+        // FIFO order survives: seqs of remaining requests ascend.
+        let seqs: Vec<u32> = q.iter_at(Priority::P4).map(|r| r.launch.seq).collect();
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted, "FIFO order broken: {seqs:?}");
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), seqs.len());
+        q.check_consistency();
+        assert!(q.is_empty());
+    }
+
+    /// The slab never grows past the high-water mark of live requests:
+    /// sustained enqueue/select churn reuses freed slots.
+    #[test]
+    fn slab_is_bounded_by_peak_live() {
+        let mut q = PriorityQueues::new();
+        for i in 0..8 {
+            push_us(&mut q, Priority::P5, i, 100 + i as u64);
+        }
+        for i in 8..5_000u32 {
+            let (req, d) = q
+                .take_longest_fit_at(Priority::P5, Duration::from_micros(1_000))
+                .unwrap();
+            let _ = req;
+            push_us(&mut q, Priority::P5, i, d.nanos() / 1_000);
+        }
+        assert_eq!(q.len_at(Priority::P5), 8);
+        assert_eq!(q.lanes[Priority::P5.index()].slab.len(), 8, "slab grew");
+        q.check_consistency();
     }
 }

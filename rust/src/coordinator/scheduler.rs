@@ -26,9 +26,9 @@ use super::feedback::{FeedbackController, FeedbackStats};
 use super::fikit::{fikit_fill_with, FillWindow};
 use super::queues::PriorityQueues;
 use crate::core::{
-    Duration, KernelLaunch, KernelRecord, LaunchSource, Priority, SimTime, TaskKey,
+    Duration, KernelLaunch, KernelRecord, LaunchSource, Priority, SimTime, TaskHandle,
 };
-use crate::profile::ProfileStore;
+use crate::profile::ResolvedProfile;
 
 /// Scheduler tuning knobs.
 #[derive(Debug, Clone)]
@@ -51,7 +51,10 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// Counters exposed for experiments and perf work.
+/// Counters exposed for experiments and perf work. All fields —
+/// including `feedback` — are live: the controller accumulates its
+/// telemetry directly into this struct, so any borrowed view is always
+/// current.
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerStats {
     /// Launches routed straight to the device (holder / equal priority).
@@ -76,9 +79,9 @@ pub struct Submission {
     pub source: LaunchSource,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct ActiveTask {
-    key: TaskKey,
+    handle: TaskHandle,
     priority: Priority,
     acquired: u64,
 }
@@ -91,6 +94,10 @@ pub struct FikitScheduler {
     feedback: FeedbackController,
     active: Vec<ActiveTask>,
     acquire_seq: u64,
+    /// Attach-time resolved predictions, indexed by [`TaskHandle`]. The
+    /// only profile view the hot path ever touches — see
+    /// [`FikitScheduler::register_service`].
+    resolved: Vec<Option<ResolvedProfile>>,
     stats: SchedulerStats,
 }
 
@@ -104,24 +111,67 @@ impl FikitScheduler {
             feedback,
             active: Vec::new(),
             acquire_seq: 0,
+            resolved: Vec::new(),
             stats: SchedulerStats::default(),
         }
     }
 
+    /// Register a service's attach-time [`ResolvedProfile`] under its
+    /// interned handle. Called once per attach by the driver — after
+    /// this, every `SK`/`SG` lookup for the service is a handle-keyed
+    /// probe of its own resolved table (zero hashing, zero allocation
+    /// on the hot path).
+    pub fn register_service(&mut self, handle: TaskHandle, profile: ResolvedProfile) {
+        let idx = handle.index();
+        if idx >= self.resolved.len() {
+            self.resolved.resize_with(idx + 1, || None);
+        }
+        self.resolved[idx] = Some(profile);
+    }
+
+    /// Drop a departed service's resolved profile (driver calls this
+    /// when a detached service has fully drained). The handle itself
+    /// stays valid — the interner is append-only — but its slot reads
+    /// as unprofiled again, so a long churn run's memory tracks *live*
+    /// services, not every service ever attached.
+    pub fn unregister_service(&mut self, handle: TaskHandle) {
+        if let Some(slot) = self.resolved.get_mut(handle.index()) {
+            *slot = None;
+        }
+    }
+
+    /// Predicted execution time `SK` for a launch (hot path).
+    #[inline]
+    fn sk(&self, launch: &KernelLaunch) -> Option<Duration> {
+        self.resolved
+            .get(launch.task_handle.index())?
+            .as_ref()?
+            .sk(launch.kernel_handle)
+    }
+
+    /// Predicted following gap `SG` for a completed kernel (hot path).
+    #[inline]
+    fn sg(&self, record: &KernelRecord) -> Option<Duration> {
+        self.resolved
+            .get(record.task_handle.index())?
+            .as_ref()?
+            .sg(record.kernel_handle)
+    }
+
     /// The current GPU holder: highest-priority active task, earliest
     /// acquisition breaking ties.
-    pub fn holder(&self) -> Option<(&TaskKey, Priority)> {
+    pub fn holder(&self) -> Option<(TaskHandle, Priority)> {
         self.active
             .iter()
             .min_by_key(|t| (t.priority, t.acquired))
-            .map(|t| (&t.key, t.priority))
+            .map(|t| (t.handle, t.priority))
     }
 
     /// A service began a new task (invocation).
-    pub fn task_started(&mut self, key: &TaskKey, priority: Priority, _now: SimTime) {
+    pub fn task_started(&mut self, handle: TaskHandle, priority: Priority, _now: SimTime) {
         let prev_holder_prio = self.holder().map(|(_, p)| p);
         self.active.push(ActiveTask {
-            key: key.clone(),
+            handle,
             priority,
             acquired: self.acquire_seq,
         });
@@ -139,12 +189,12 @@ impl FikitScheduler {
 
     /// A service's task completed. Returns kernels to dispatch now that
     /// the holder may have changed.
-    pub fn task_finished(&mut self, key: &TaskKey, now: SimTime) -> Vec<Submission> {
-        if let Some(pos) = self.active.iter().position(|t| &t.key == key) {
+    pub fn task_finished(&mut self, handle: TaskHandle, now: SimTime) -> Vec<Submission> {
+        if let Some(pos) = self.active.iter().position(|t| t.handle == handle) {
             self.active.swap_remove(pos);
         }
         // The finished task's gap (if a window was open for it) is over.
-        if self.window.as_ref().is_some_and(|w| &w.holder == key) {
+        if self.window.as_ref().is_some_and(|w| w.holder == handle) {
             self.window = None;
         }
 
@@ -171,13 +221,12 @@ impl FikitScheduler {
     }
 
     /// Route an intercepted kernel launch (hook → scheduler message).
-    pub fn on_launch(
-        &mut self,
-        launch: KernelLaunch,
-        now: SimTime,
-        profiles: &ProfileStore,
-    ) -> Vec<Submission> {
-        let Some((holder_key, holder_prio)) = self.holder() else {
+    ///
+    /// Steady-state cost: two integer compares (holder / priority), one
+    /// dense `SK` lookup, one indexed enqueue — no hashing, no
+    /// allocation beyond retained queue capacity (DESIGN.md §Perf).
+    pub fn on_launch(&mut self, launch: KernelLaunch, now: SimTime) -> Vec<Submission> {
+        let Some((holder_handle, holder_prio)) = self.holder() else {
             // Defensive: no active task should mean no launches, but if a
             // stray one appears, let it through.
             self.stats.direct += 1;
@@ -187,10 +236,11 @@ impl FikitScheduler {
             }];
         };
 
-        if &launch.task_key == holder_key {
+        if launch.task_handle == holder_handle {
             // The holder's next kernel: ground-truth end of the current
             // gap — the feedback early-stop signal (Fig 12).
-            self.feedback.on_holder_arrival(&mut self.window, now);
+            self.feedback
+                .on_holder_arrival(&mut self.window, now, &mut self.stats.feedback);
             if self.feedback.enabled {
                 debug_assert!(self.window.is_none());
             }
@@ -213,61 +263,51 @@ impl FikitScheduler {
         // Strictly lower priority: park in the message queues, resolving
         // the profiled duration once here (not per BestPrioFit scan).
         self.stats.queued += 1;
-        let predicted = profiles
-            .get(&launch.task_key)
-            .and_then(|p| p.sk(&launch.kernel));
+        let predicted = self.sk(&launch);
         self.queues.push_predicted(launch, predicted, now);
         // …and, if a fill window is open, immediately re-run the FIKIT
         // procedure — the new request may fit the remaining gap (this is
         // the "when a kernel is added to any priority queue, the
         // scheduler triggers a priority scan" rule of Fig 7/8).
-        self.pump_fills(now, profiles)
+        self.pump_fills(now)
     }
 
     /// React to a kernel completion on the device.
-    pub fn on_kernel_done(
-        &mut self,
-        record: &KernelRecord,
-        now: SimTime,
-        profiles: &ProfileStore,
-    ) -> Vec<Submission> {
-        let Some((holder_key, _)) = self.holder() else {
+    pub fn on_kernel_done(&mut self, record: &KernelRecord, now: SimTime) -> Vec<Submission> {
+        let Some((holder_handle, _)) = self.holder() else {
             return Vec::new();
         };
 
-        if &record.task_key == holder_key && record.source != LaunchSource::GapFill {
+        if record.task_handle == holder_handle && record.source != LaunchSource::GapFill {
             // A holder kernel finished: its profiled following gap starts
             // now. Open a fill window if the gap is worth filling.
-            let predicted_gap = profiles
-                .get(&record.task_key)
-                .and_then(|p| p.sg(&record.kernel));
-            if let Some(gap) = predicted_gap {
+            if let Some(gap) = self.sg(record) {
                 self.window =
-                    FillWindow::open(record.task_key.clone(), now, gap, self.cfg.epsilon);
+                    FillWindow::open(record.task_handle, now, gap, self.cfg.epsilon);
                 if self.window.is_some() {
-                    self.feedback.on_window_open();
+                    self.feedback.on_window_open(&mut self.stats.feedback);
                 }
             } else {
                 self.window = None;
             }
-            return self.pump_fills(now, profiles);
+            return self.pump_fills(now);
         }
 
         if record.source == LaunchSource::GapFill {
             // A fill kernel completed; the window may still have budget
             // for more (requests that arrived since the last pump).
-            return self.pump_fills(now, profiles);
+            return self.pump_fills(now);
         }
         Vec::new()
     }
 
     /// Run Algorithm 1 against the open window (if any).
-    fn pump_fills(&mut self, now: SimTime, profiles: &ProfileStore) -> Vec<Submission> {
+    fn pump_fills(&mut self, now: SimTime) -> Vec<Submission> {
         let Some(window) = self.window.as_mut() else {
             return Vec::new();
         };
         let fills: Vec<Fit> =
-            fikit_fill_with(window, now, &mut self.queues, profiles, self.cfg.fill_policy);
+            fikit_fill_with(window, now, &mut self.queues, self.cfg.fill_policy);
         self.stats.fills += fills.len() as u64;
         fills
             .into_iter()
@@ -278,16 +318,22 @@ impl FikitScheduler {
             .collect()
     }
 
+    /// Live counters, borrowed — no per-call clone (the old accessor
+    /// cloned the whole struct every call). Every field, `feedback`
+    /// included, is current.
     pub fn stats(&self) -> &SchedulerStats {
-        let _ = &self.stats.feedback; // keep field referenced
         &self.stats
     }
 
-    /// Consolidated stats including feedback telemetry.
-    pub fn final_stats(&self) -> SchedulerStats {
-        let mut s = self.stats.clone();
-        s.feedback = self.feedback.stats().clone();
-        s
+    /// Live feedback telemetry, borrowed (shorthand for
+    /// `stats().feedback`).
+    pub fn feedback_stats(&self) -> &FeedbackStats {
+        &self.stats.feedback
+    }
+
+    /// Consume the scheduler, yielding its counters (end-of-run report).
+    pub fn into_stats(self) -> SchedulerStats {
+        self.stats
     }
 
     /// Number of queued (waiting) kernel requests.
@@ -327,30 +373,74 @@ impl FikitScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{Dim3, KernelId, TaskId};
+    use crate::core::{Dim3, Interner, KernelId, KernelRecord, TaskId, TaskKey};
     use crate::profile::TaskProfile;
 
     fn kid(name: &str) -> KernelId {
         KernelId::new(name, Dim3::x(1), Dim3::x(64))
     }
 
-    fn launch(key: &str, kernel: &str, prio: Priority, seq: u32, now: SimTime) -> KernelLaunch {
-        KernelLaunch {
-            task_key: TaskKey::new(key),
-            task_id: TaskId(0),
-            kernel: kid(kernel),
-            priority: prio,
-            seq,
-            true_duration: Duration::from_micros(100),
-            issued_at: now,
+    /// Scheduler + interner with "hi" (kernel hk: exec 200us, gap 1ms)
+    /// and "lo" (kernel lk: exec 300us, gap 50us) registered the way the
+    /// driver does at attach time.
+    struct Harness {
+        sched: FikitScheduler,
+        interner: Interner,
+    }
+
+    fn harness() -> Harness {
+        harness_with(|p| p)
+    }
+
+    fn harness_with(extend: impl Fn(TaskProfile) -> TaskProfile) -> Harness {
+        let mut interner = Interner::new();
+        let mut sched = FikitScheduler::new(SchedulerConfig::default());
+
+        let mut hi = TaskProfile::new(TaskKey::new("hi"));
+        hi.record(&kid("hk"), Duration::from_micros(200), Some(Duration::from_millis(1)));
+        hi.finish_run(1);
+        let hi = extend(hi);
+        let th = interner.intern_task(&TaskKey::new("hi"));
+        let rp = ResolvedProfile::resolve(&hi, &mut interner);
+        sched.register_service(th, rp);
+
+        let mut lo = TaskProfile::new(TaskKey::new("lo"));
+        lo.record(&kid("lk"), Duration::from_micros(300), Some(Duration::from_micros(50)));
+        lo.finish_run(1);
+        let tl = interner.intern_task(&TaskKey::new("lo"));
+        let rp = ResolvedProfile::resolve(&lo, &mut interner);
+        sched.register_service(tl, rp);
+
+        Harness { sched, interner }
+    }
+
+    impl Harness {
+        fn th(&mut self, key: &str) -> TaskHandle {
+            self.interner.intern_task(&TaskKey::new(key))
+        }
+
+        fn launch(&mut self, key: &str, kernel: &str, prio: Priority, seq: u32, now: SimTime) -> KernelLaunch {
+            KernelLaunch {
+                task_key: TaskKey::new(key),
+                task_handle: self.interner.intern_task(&TaskKey::new(key)),
+                task_id: TaskId(0),
+                kernel: kid(kernel),
+                kernel_handle: self.interner.intern_kernel(&kid(kernel)),
+                priority: prio,
+                seq,
+                true_duration: Duration::from_micros(100),
+                issued_at: now,
+            }
         }
     }
 
     fn record(l: &KernelLaunch, source: LaunchSource, start: SimTime, dur_us: u64) -> KernelRecord {
         KernelRecord {
             task_key: l.task_key.clone(),
+            task_handle: l.task_handle,
             task_id: l.task_id,
             kernel: l.kernel.clone(),
+            kernel_handle: l.kernel_handle,
             priority: l.priority,
             seq: l.seq,
             source,
@@ -360,152 +450,191 @@ mod tests {
         }
     }
 
-    /// Profile store: holder "hi" has kernel hk (exec 200us, gap 1ms);
-    /// low-prio "lo" has kernel lk (exec 300us).
-    fn profiles() -> ProfileStore {
-        let mut s = ProfileStore::new();
-        let mut hi = TaskProfile::new(TaskKey::new("hi"));
-        hi.record(&kid("hk"), Duration::from_micros(200), Some(Duration::from_millis(1)));
-        hi.finish_run(1);
-        s.insert(hi);
-        let mut lo = TaskProfile::new(TaskKey::new("lo"));
-        lo.record(&kid("lk"), Duration::from_micros(300), Some(Duration::from_micros(50)));
-        lo.finish_run(1);
-        s.insert(lo);
-        s
-    }
-
     #[test]
     fn holder_launches_direct_lower_queued() {
-        let p = profiles();
-        let mut s = FikitScheduler::new(SchedulerConfig::default());
-        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
-        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
-        assert_eq!(s.holder().unwrap().0, &TaskKey::new("hi"));
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
+        assert_eq!(h.sched.holder().unwrap().0, hi);
 
-        let subs = s.on_launch(launch("hi", "hk", Priority::P0, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        let l = h.launch("hi", "hk", Priority::P0, 0, SimTime::ZERO);
+        let subs = h.sched.on_launch(l, SimTime::ZERO);
         assert_eq!(subs.len(), 1);
         assert_eq!(subs[0].source, LaunchSource::Direct);
 
-        let subs = s.on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        let l = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        let subs = h.sched.on_launch(l, SimTime::ZERO);
         assert!(subs.is_empty(), "no window open yet: low-prio waits");
-        assert_eq!(s.queued_len(), 1);
-        s.check_invariants();
+        assert_eq!(h.sched.queued_len(), 1);
+        h.sched.check_invariants();
     }
 
     #[test]
     fn gap_fill_cycle_and_feedback_close() {
-        let p = profiles();
-        let mut s = FikitScheduler::new(SchedulerConfig::default());
-        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
-        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
 
         // Low-prio request arrives first, parks.
-        let l0 = launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
-        assert!(s.on_launch(l0, SimTime::ZERO, &p).is_empty());
+        let l0 = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        assert!(h.sched.on_launch(l0, SimTime::ZERO).is_empty());
 
         // Holder kernel hk completes at t=1ms → SG(hk)=1ms window opens,
         // queued lk (SK=300us) fits → launched as fill.
-        let hl = launch("hi", "hk", Priority::P0, 0, SimTime::ZERO);
+        let hl = h.launch("hi", "hk", Priority::P0, 0, SimTime::ZERO);
         let rec = record(&hl, LaunchSource::Direct, SimTime(800_000), 200);
         let done_at = rec.finished_at;
-        let subs = s.on_kernel_done(&rec, done_at, &p);
+        let subs = h.sched.on_kernel_done(&rec, done_at);
         assert_eq!(subs.len(), 1);
         assert_eq!(subs[0].source, LaunchSource::GapFill);
-        assert!(s.window_open());
-        assert_eq!(s.queued_len(), 0);
+        assert!(h.sched.window_open());
+        assert_eq!(h.sched.queued_len(), 0);
 
         // Holder's next kernel arrives before predicted end → early stop.
-        let next = launch("hi", "hk", Priority::P0, 1, done_at + Duration::from_micros(400));
+        let next = h.launch("hi", "hk", Priority::P0, 1, done_at + Duration::from_micros(400));
         let at = next.issued_at;
-        let subs = s.on_launch(next, at, &p);
+        let subs = h.sched.on_launch(next, at);
         assert_eq!(subs[0].source, LaunchSource::Direct);
-        assert!(!s.window_open(), "feedback must close the window");
-        let stats = s.final_stats();
-        assert_eq!(stats.fills, 1);
-        assert_eq!(stats.feedback.windows, 1);
-        assert_eq!(stats.feedback.early_stops, 1);
+        assert!(!h.sched.window_open(), "feedback must close the window");
+        assert_eq!(h.sched.stats().fills, 1);
+        let fb = h.sched.feedback_stats();
+        assert_eq!(fb.windows, 1);
+        assert_eq!(fb.early_stops, 1);
+        // End-of-run consolidation stitches feedback into the counters.
+        let final_stats = h.sched.into_stats();
+        assert_eq!(final_stats.fills, 1);
+        assert_eq!(final_stats.feedback.early_stops, 1);
     }
 
     #[test]
     fn preemption_case_a() {
-        let p = profiles();
-        let mut s = FikitScheduler::new(SchedulerConfig::default());
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
         // Low-prio task holds the GPU first (it is the only active task).
-        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
-        let subs = s.on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
+        let l = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        let subs = h.sched.on_launch(l, SimTime::ZERO);
         assert_eq!(subs[0].source, LaunchSource::Direct);
 
         // High-priority task arrives: becomes holder (preemption).
-        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime(100));
-        assert_eq!(s.holder().unwrap().0, &TaskKey::new("hi"));
-        assert_eq!(s.final_stats().preemptions, 1);
+        h.sched.task_started(hi, Priority::P0, SimTime(100));
+        assert_eq!(h.sched.holder().unwrap().0, hi);
+        assert_eq!(h.sched.stats().preemptions, 1);
 
         // lo's next launch is now lower than the holder: queued.
-        let subs = s.on_launch(launch("lo", "lk", Priority::P3, 1, SimTime(200)), SimTime(200), &p);
+        let l = h.launch("lo", "lk", Priority::P3, 1, SimTime(200));
+        let subs = h.sched.on_launch(l, SimTime(200));
         assert!(subs.is_empty());
-        assert_eq!(s.queued_len(), 1);
-        s.check_invariants();
+        assert_eq!(h.sched.queued_len(), 1);
+        h.sched.check_invariants();
     }
 
     #[test]
     fn holder_change_drains_new_priority_class() {
-        let p = profiles();
-        let mut s = FikitScheduler::new(SchedulerConfig::default());
-        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
-        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
-        assert!(s
-            .on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p)
-            .is_empty());
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
+        let l = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        assert!(h.sched.on_launch(l, SimTime::ZERO).is_empty());
 
         // Holder's task finishes: lo becomes holder, its parked kernel
         // is dispatched as a drain.
-        let subs = s.task_finished(&TaskKey::new("hi"), SimTime(1_000));
+        let subs = h.sched.task_finished(hi, SimTime(1_000));
         assert_eq!(subs.len(), 1);
         assert_eq!(subs[0].source, LaunchSource::Drain);
-        assert_eq!(s.holder().unwrap().0, &TaskKey::new("lo"));
-        assert_eq!(s.queued_len(), 0);
-        s.check_invariants();
+        assert_eq!(h.sched.holder().unwrap().0, lo);
+        assert_eq!(h.sched.queued_len(), 0);
+        h.sched.check_invariants();
     }
 
     #[test]
     fn equal_priority_case_c_goes_direct() {
-        let p = profiles();
-        let mut s = FikitScheduler::new(SchedulerConfig::default());
-        s.task_started(&TaskKey::new("hi"), Priority::P2, SimTime::ZERO);
-        s.task_started(&TaskKey::new("lo"), Priority::P2, SimTime::ZERO);
-        let subs = s.on_launch(launch("lo", "lk", Priority::P2, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P2, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P2, SimTime::ZERO);
+        let l = h.launch("lo", "lk", Priority::P2, 0, SimTime::ZERO);
+        let subs = h.sched.on_launch(l, SimTime::ZERO);
         assert_eq!(subs[0].source, LaunchSource::Direct);
-        assert_eq!(s.queued_len(), 0);
+        assert_eq!(h.sched.queued_len(), 0);
     }
 
     #[test]
     fn no_window_for_small_or_unknown_gaps() {
-        let mut p = profiles();
-        // Add a holder kernel with a tiny gap.
-        let mut hi = p.remove(&TaskKey::new("hi")).unwrap();
-        hi.record(&kid("tiny"), Duration::from_micros(10), Some(Duration::from_micros(20)));
-        hi.finish_run(1);
-        p.insert(hi);
-
-        let mut s = FikitScheduler::new(SchedulerConfig::default());
-        s.task_started(&TaskKey::new("hi"), Priority::P0, SimTime::ZERO);
-        s.task_started(&TaskKey::new("lo"), Priority::P3, SimTime::ZERO);
-        let _ = s.on_launch(launch("lo", "lk", Priority::P3, 0, SimTime::ZERO), SimTime::ZERO, &p);
+        // Holder profile additionally has a kernel with a tiny gap.
+        let mut h = harness_with(|mut hi| {
+            hi.record(&kid("tiny"), Duration::from_micros(10), Some(Duration::from_micros(20)));
+            hi.finish_run(1);
+            hi
+        });
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
+        let l = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        let _ = h.sched.on_launch(l, SimTime::ZERO);
 
         // Tiny gap (20us < ε=100us): no window, no fills.
-        let hl = launch("hi", "tiny", Priority::P0, 0, SimTime::ZERO);
+        let hl = h.launch("hi", "tiny", Priority::P0, 0, SimTime::ZERO);
         let rec = record(&hl, LaunchSource::Direct, SimTime::ZERO, 10);
         let t = rec.finished_at;
-        assert!(s.on_kernel_done(&rec, t, &p).is_empty());
-        assert!(!s.window_open());
+        assert!(h.sched.on_kernel_done(&rec, t).is_empty());
+        assert!(!h.sched.window_open());
 
         // Unknown kernel (no SG): no window either.
-        let ul = launch("hi", "unseen", Priority::P0, 1, SimTime::ZERO);
+        let ul = h.launch("hi", "unseen", Priority::P0, 1, SimTime::ZERO);
         let rec = record(&ul, LaunchSource::Direct, SimTime::ZERO, 10);
         let t = rec.finished_at;
-        assert!(s.on_kernel_done(&rec, t, &p).is_empty());
-        assert!(!s.window_open());
-        assert_eq!(s.queued_len(), 1, "low-prio stays parked");
+        assert!(h.sched.on_kernel_done(&rec, t).is_empty());
+        assert!(!h.sched.window_open());
+        assert_eq!(h.sched.queued_len(), 1, "low-prio stays parked");
+    }
+
+    /// Unregistering a departed service frees its resolved profile: its
+    /// handle stays valid but reads as unprofiled; re-registering
+    /// restores predictions (the churn attach→drain→re-attach cycle).
+    #[test]
+    fn unregister_releases_resolved_profile() {
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
+        h.sched.unregister_service(lo);
+
+        // lo's launch now parks unprofiled: a holder gap will not fill it.
+        let l = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        assert!(h.sched.on_launch(l, SimTime::ZERO).is_empty());
+        let hl = h.launch("hi", "hk", Priority::P0, 0, SimTime::ZERO);
+        let rec = record(&hl, LaunchSource::Direct, SimTime::ZERO, 200);
+        let t = rec.finished_at;
+        assert!(h.sched.on_kernel_done(&rec, t).is_empty());
+        assert_eq!(h.sched.queued_len(), 1, "unprofiled request stays parked");
+
+        // Out-of-range / unknown handles are a no-op.
+        h.sched.unregister_service(TaskHandle::from_index(999));
+    }
+
+    /// A launch whose task never registered a profile (unbound handles)
+    /// is enqueued unprofiled and never selected for filling.
+    #[test]
+    fn unregistered_task_is_unprofiled() {
+        let mut h = harness();
+        let (hi, ghost) = (h.th("hi"), h.th("ghost"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(ghost, Priority::P7, SimTime::ZERO);
+        let l = h.launch("ghost", "gk", Priority::P7, 0, SimTime::ZERO);
+        assert!(h.sched.on_launch(l, SimTime::ZERO).is_empty());
+        assert_eq!(h.sched.queued_len(), 1);
+
+        // Holder completion opens a window, but the unprofiled request
+        // must not be gambled into it.
+        let hl = h.launch("hi", "hk", Priority::P0, 0, SimTime::ZERO);
+        let rec = record(&hl, LaunchSource::Direct, SimTime::ZERO, 200);
+        let t = rec.finished_at;
+        let subs = h.sched.on_kernel_done(&rec, t);
+        assert!(subs.is_empty(), "unprofiled request must stay parked");
+        assert_eq!(h.sched.queued_len(), 1);
     }
 }

@@ -84,7 +84,13 @@ impl KernelId {
     }
 
     /// Stable string form used as a JSON map key in persisted profiles.
+    ///
+    /// Allocates — must never be reachable from the scheduler fill loop
+    /// (DESIGN.md §Perf); debug builds count every call so tests can
+    /// assert the hot path stays canonical-free.
     pub fn canonical(&self) -> String {
+        #[cfg(debug_assertions)]
+        canonical_audit::bump();
         format!(
             "{}|g{}x{}x{}|b{}x{}x{}",
             self.name,
@@ -112,6 +118,26 @@ impl KernelId {
             grid: parse3(grid)?,
             block: parse3(block)?,
         })
+    }
+}
+
+/// Debug-build call counter for [`KernelId::canonical`]. The zero-
+/// allocation acceptance test ([`crate::coordinator::best_prio_fit`]
+/// callers, `tests/hotpath_alloc.rs`) snapshots this around the fill loop
+/// to prove no canonical-string work is reachable from it.
+#[cfg(debug_assertions)]
+pub mod canonical_audit {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static CALLS: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn bump() {
+        CALLS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total `canonical()` calls in this process so far.
+    pub fn count() -> u64 {
+        CALLS.load(Ordering::Relaxed)
     }
 }
 
@@ -199,6 +225,47 @@ mod tests {
     fn canonical_rejects_garbage() {
         assert!(KernelId::from_canonical("nonsense").is_none());
         assert!(KernelId::from_canonical("k|g1x1|b1x1x1").is_none());
+    }
+
+    /// Property-style sweep: `from_canonical(canonical())` is the
+    /// identity for every awkward name shape the wire can produce —
+    /// names containing the `|` separator, the `x` dimension separator,
+    /// empty names, and combinations (the parser splits from the right,
+    /// so separators inside the name must never confuse it).
+    #[test]
+    fn canonical_round_trip_is_identity_for_awkward_names() {
+        let names = [
+            "",
+            "x",
+            "xxx",
+            "|",
+            "||",
+            "a|b",
+            "k|g1x2x3|b4x5x6", // a name that *looks* like a canonical tail
+            "vec<4, float>|x",
+            "op_x|gx|bx",
+            "trailing|",
+            "|leading",
+            "1x2x3",
+            "g1x1x1",
+            "b128x1x1",
+        ];
+        let dims = [
+            (Dim3::x(1), Dim3::x(32)),
+            (Dim3::new(1024, 2, 3), Dim3::new(128, 4, 1)),
+            (Dim3::new(0, 0, 0), Dim3::new(0, 0, 0)),
+            (Dim3::new(u32::MAX, 1, 1), Dim3::new(1, 1, u32::MAX)),
+        ];
+        for name in names {
+            for (grid, block) in dims {
+                let k = KernelId::new(name, grid, block);
+                let c = k.canonical();
+                let back = KernelId::from_canonical(&c)
+                    .unwrap_or_else(|| panic!("canonical {c:?} failed to parse"));
+                assert_eq!(back, k, "round trip broke for name {name:?}");
+                assert_eq!(back.canonical(), c, "second trip not stable");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Dense identity interning for the scheduler hot path.
+//!
+//! Scheduling decisions happen per kernel launch, and ε = 0.1 ms gaps
+//! (DESIGN.md §Perf) leave no room for string work per decision. The
+//! [`Interner`] maps every [`KernelId`] and [`TaskKey`] a simulation will
+//! ever route to a dense `u32` handle **once, at service-attach time**;
+//! from then on every per-launch structure (queued requests, resolved
+//! profiles, holder tracking) is keyed by handle, so the steady-state
+//! `IssueKernel → enqueue → BestPrioFit` loop does zero hashing and zero
+//! allocation. Canonical strings survive only at persistence boundaries
+//! (profile JSON, wire protocol, reports).
+//!
+//! Invariants (DESIGN.md §Perf "hot-path data structures"):
+//!
+//! * **Append-only, per simulation** — handles are never recycled or
+//!   remapped while a sim lives; a handle minted at attach time stays
+//!   valid (and means the same identity) for the whole run.
+//! * **Dense** — handle `h` indexes slot `h` of any side table sized by
+//!   [`Interner::kernel_count`] / [`Interner::task_count`], so lookups
+//!   are plain array indexing.
+//! * **Deterministic** — interning the same identities in the same order
+//!   yields the same handles (no randomized iteration is involved), which
+//!   keeps experiment replays byte-identical.
+
+use super::ids::{KernelId, TaskKey};
+use std::collections::HashMap;
+
+/// Dense per-sim handle for a [`KernelId`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelHandle(u32);
+
+/// Dense per-sim handle for a [`TaskKey`] (one per attached service).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskHandle(u32);
+
+macro_rules! handle_impl {
+    ($name:ident) => {
+        impl $name {
+            /// Sentinel for identities that never went through an
+            /// interner (boundary constructions, tests). Unbound handles
+            /// miss every side table, so the scheduler treats their
+            /// owners as unprofiled — never selected for gap filling.
+            pub const UNBOUND: $name = $name(u32::MAX);
+
+            /// Slot index into a dense side table.
+            #[inline]
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+
+            /// `false` for [`Self::UNBOUND`].
+            #[inline]
+            pub fn is_bound(self) -> bool {
+                self != Self::UNBOUND
+            }
+
+            /// Rebuild from a slot index (inverse of [`Self::index`]).
+            pub fn from_index(idx: usize) -> $name {
+                debug_assert!(idx < u32::MAX as usize, "handle space exhausted");
+                $name(idx as u32)
+            }
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                if self.is_bound() {
+                    write!(f, "#{}", self.0)
+                } else {
+                    write!(f, "#unbound")
+                }
+            }
+        }
+    };
+}
+
+handle_impl!(KernelHandle);
+handle_impl!(TaskHandle);
+
+/// The per-sim identity interner (see module docs for the invariants).
+#[derive(Debug, Default)]
+pub struct Interner {
+    kernels: Vec<KernelId>,
+    kernel_index: HashMap<KernelId, KernelHandle>,
+    tasks: Vec<TaskKey>,
+    task_index: HashMap<TaskKey, TaskHandle>,
+}
+
+impl Interner {
+    pub fn new() -> Interner {
+        Interner::default()
+    }
+
+    /// Handle for a kernel id, minting one on first sight. Hashes the id
+    /// (string content) — call at attach/registration time only.
+    pub fn intern_kernel(&mut self, id: &KernelId) -> KernelHandle {
+        if let Some(&h) = self.kernel_index.get(id) {
+            return h;
+        }
+        let h = KernelHandle::from_index(self.kernels.len());
+        self.kernels.push(id.clone());
+        self.kernel_index.insert(id.clone(), h);
+        h
+    }
+
+    /// Handle for a task key, minting one on first sight.
+    pub fn intern_task(&mut self, key: &TaskKey) -> TaskHandle {
+        if let Some(&h) = self.task_index.get(key) {
+            return h;
+        }
+        let h = TaskHandle::from_index(self.tasks.len());
+        self.tasks.push(key.clone());
+        self.task_index.insert(key.clone(), h);
+        h
+    }
+
+    /// Non-minting lookup.
+    pub fn kernel_handle(&self, id: &KernelId) -> Option<KernelHandle> {
+        self.kernel_index.get(id).copied()
+    }
+
+    /// Non-minting lookup.
+    pub fn task_handle(&self, key: &TaskKey) -> Option<TaskHandle> {
+        self.task_index.get(key).copied()
+    }
+
+    /// Resolve a handle back to its kernel id (reporting boundary).
+    pub fn kernel(&self, h: KernelHandle) -> Option<&KernelId> {
+        self.kernels.get(h.index())
+    }
+
+    /// Resolve a handle back to its task key (reporting boundary).
+    pub fn task(&self, h: TaskHandle) -> Option<&TaskKey> {
+        self.tasks.get(h.index())
+    }
+
+    /// Number of interned kernel ids — the size any kernel-handle-indexed
+    /// side table must have to cover every handle minted so far.
+    pub fn kernel_count(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Number of interned task keys.
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dim3;
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(4), Dim3::x(64))
+    }
+
+    #[test]
+    fn handles_are_dense_and_stable() {
+        let mut i = Interner::new();
+        let a = i.intern_kernel(&kid("a"));
+        let b = i.intern_kernel(&kid("b"));
+        assert_eq!(a.index(), 0);
+        assert_eq!(b.index(), 1);
+        // Re-interning is idempotent.
+        assert_eq!(i.intern_kernel(&kid("a")), a);
+        assert_eq!(i.kernel_count(), 2);
+        assert_eq!(i.kernel(a), Some(&kid("a")));
+        assert_eq!(i.kernel_handle(&kid("b")), Some(b));
+        assert_eq!(i.kernel_handle(&kid("c")), None);
+    }
+
+    #[test]
+    fn task_handles_independent_of_kernel_handles() {
+        let mut i = Interner::new();
+        let t = i.intern_task(&TaskKey::new("svc"));
+        let k = i.intern_kernel(&kid("k"));
+        assert_eq!(t.index(), 0);
+        assert_eq!(k.index(), 0);
+        assert_eq!(i.task(t), Some(&TaskKey::new("svc")));
+        assert_eq!(i.task_count(), 1);
+    }
+
+    #[test]
+    fn unbound_sentinel_misses_everything() {
+        let i = Interner::new();
+        assert!(!KernelHandle::UNBOUND.is_bound());
+        assert!(!TaskHandle::UNBOUND.is_bound());
+        assert!(i.kernel(KernelHandle::UNBOUND).is_none());
+        assert!(i.task(TaskHandle::UNBOUND).is_none());
+        assert!(KernelHandle::from_index(3).is_bound());
+        assert_eq!(format!("{}", TaskHandle::from_index(3)), "#3");
+        assert_eq!(format!("{}", TaskHandle::UNBOUND), "#unbound");
+    }
+
+    #[test]
+    fn dim_only_ids_are_distinct_identities() {
+        // Erased-name ids (release-build frameworks) collide exactly when
+        // their dims collide — matching the string-keyed behavior.
+        let mut i = Interner::new();
+        let a = i.intern_kernel(&KernelId::new("", Dim3::x(1), Dim3::x(32)));
+        let b = i.intern_kernel(&KernelId::new("", Dim3::x(2), Dim3::x(32)));
+        let c = i.intern_kernel(&KernelId::new("", Dim3::x(1), Dim3::x(32)));
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+}

@@ -2,7 +2,7 @@
 //! system: hook client → scheduler queues → device queue → completion
 //! records.
 
-use super::{Duration, KernelId, Priority, SimTime, TaskId, TaskKey};
+use super::{Duration, KernelHandle, KernelId, Priority, SimTime, TaskHandle, TaskId, TaskKey};
 
 /// Where a launch entered the device queue from — used by metrics to
 /// attribute device busy time and by the feedback mechanism to account
@@ -23,10 +23,18 @@ pub enum LaunchSource {
 pub struct KernelLaunch {
     /// The service this launch belongs to.
     pub task_key: TaskKey,
+    /// Interned handle of `task_key` — the identity the scheduler hot
+    /// path uses (integer compares and dense-table lookups; the string
+    /// key is only read at reporting/persistence boundaries).
+    /// [`TaskHandle::UNBOUND`] for launches built outside a sim.
+    pub task_handle: TaskHandle,
     /// The specific task (invocation) within the service.
     pub task_id: TaskId,
     /// The paper's Kernel ID for this launch.
     pub kernel: KernelId,
+    /// Interned handle of `kernel`, resolved once at service-attach time
+    /// (never per launch). [`KernelHandle::UNBOUND`] outside a sim.
+    pub kernel_handle: KernelHandle,
     /// Priority inherited from the task.
     pub priority: Priority,
     /// Sequence number of this kernel within its task (0-based).
@@ -51,8 +59,13 @@ impl KernelLaunch {
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelRecord {
     pub task_key: TaskKey,
+    /// Interned task identity, carried over from the launch so completion
+    /// handling (holder checks, SG lookups) stays hash-free.
+    pub task_handle: TaskHandle,
     pub task_id: TaskId,
     pub kernel: KernelId,
+    /// Interned kernel identity, carried over from the launch.
+    pub kernel_handle: KernelHandle,
     pub priority: Priority,
     pub seq: u32,
     pub source: LaunchSource,
@@ -84,8 +97,10 @@ mod tests {
     fn record() -> KernelRecord {
         KernelRecord {
             task_key: TaskKey::new("svc"),
+            task_handle: TaskHandle::UNBOUND,
             task_id: TaskId(1),
             kernel: KernelId::new("k", Dim3::x(8), Dim3::x(64)),
+            kernel_handle: KernelHandle::UNBOUND,
             priority: Priority::P0,
             seq: 3,
             source: LaunchSource::Direct,
@@ -106,8 +121,10 @@ mod tests {
     fn launch_clone_round_trip() {
         let l = KernelLaunch {
             task_key: TaskKey::new("svc"),
+            task_handle: TaskHandle::UNBOUND,
             task_id: TaskId(7),
             kernel: KernelId::new("k", Dim3::x(8), Dim3::x(64)),
+            kernel_handle: KernelHandle::UNBOUND,
             priority: Priority::P3,
             seq: 0,
             true_duration: Duration::from_micros(250),

@@ -8,11 +8,15 @@
 
 mod error;
 mod ids;
+mod intern;
 mod launch;
 mod time;
 
 pub use error::{Error, Result};
 pub use ids::{Dim3, KernelId, TaskId, TaskKey};
+#[cfg(debug_assertions)]
+pub use ids::canonical_audit;
+pub use intern::{Interner, KernelHandle, TaskHandle};
 pub use launch::{KernelLaunch, KernelRecord, LaunchSource};
 pub use time::{Duration, SimTime};
 

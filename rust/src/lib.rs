@@ -46,6 +46,7 @@
 //! println!("{}", report.summary());
 //! ```
 
+pub mod benchsuite;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

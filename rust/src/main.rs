@@ -35,6 +35,9 @@ USAGE:
                 [--compat compat.json] [--measure-compat]
   fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
                       [--seed S] [--secs T] [--bound X] [--no-migration]
+  fikit bench [--quick] [--json [PATH]]
+        runs the scheduler hot-path suite; --json writes BENCH_sched.json
+        (or PATH) and fails if any case exceeds its declared budget
   fikit list-models
   fikit verify-artifacts [--dir artifacts]
 ";
@@ -59,6 +62,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("cluster") => cmd_cluster(args),
         Some("cluster-churn") => cmd_cluster_churn(args),
+        Some("bench") => cmd_bench(args),
         Some("list-models") => cmd_list_models(),
         Some("verify-artifacts") => cmd_verify_artifacts(args),
         _ => {
@@ -295,6 +299,40 @@ fn cmd_cluster_churn(args: &Args) -> Result<()> {
     );
     println!("{}", report.summary());
     Ok(())
+}
+
+/// Run the scheduler hot-path bench suite and (optionally) write the
+/// `BENCH_sched.json` perf-trajectory artifact. The single documented
+/// regeneration command, from the repo root:
+///
+/// ```text
+/// cargo run --manifest-path rust/Cargo.toml --release -- bench --json
+/// ```
+fn cmd_bench(args: &Args) -> Result<()> {
+    let suite = fikit::benchsuite::run_hotpath_suite(args.flag("quick"));
+    println!("{}", suite.table);
+
+    let json_path = args
+        .opt("json")
+        .map(str::to_string)
+        .or_else(|| args.flag("json").then(|| "BENCH_sched.json".to_string()));
+    if let Some(path) = json_path {
+        suite.write_json(&path)?;
+        println!("wrote bench results -> {path}");
+    }
+
+    let violations = suite.violations();
+    for v in &violations {
+        eprintln!("BUDGET VIOLATION: {v}");
+    }
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(fikit::core::Error::Invariant(format!(
+            "{} bench case(s) over budget",
+            violations.len()
+        )))
+    }
 }
 
 fn cmd_list_models() -> Result<()> {

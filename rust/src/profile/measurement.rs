@@ -112,13 +112,17 @@ impl MeasurementRecorder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{Dim3, KernelId, LaunchSource, Priority, SimTime, TaskId};
+    use crate::core::{
+        Dim3, KernelHandle, KernelId, LaunchSource, Priority, SimTime, TaskHandle, TaskId,
+    };
 
     fn rec(name: &str, start_us: u64, end_us: u64) -> KernelRecord {
         KernelRecord {
             task_key: TaskKey::new("svc"),
+            task_handle: TaskHandle::UNBOUND,
             task_id: TaskId(0),
             kernel: KernelId::new(name, Dim3::x(1), Dim3::x(32)),
+            kernel_handle: KernelHandle::UNBOUND,
             priority: Priority::P0,
             seq: 0,
             source: LaunchSource::Direct,

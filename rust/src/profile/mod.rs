@@ -14,11 +14,13 @@
 //! zero per-kernel measurement cost.
 
 mod measurement;
+mod resolved;
 mod statistics;
 mod store;
 mod symbols;
 
 pub use measurement::{MeasurementConfig, MeasurementRecorder};
+pub use resolved::ResolvedProfile;
 pub use statistics::{KernelStats, StatSummary, TaskProfile};
 pub use store::ProfileStore;
 pub use symbols::{SymbolResolver, SymbolTableModel};

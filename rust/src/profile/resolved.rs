@@ -1,0 +1,155 @@
+//! Attach-time profile resolution: [`TaskProfile`] → [`ResolvedProfile`].
+//!
+//! The scheduler consults profiled data (`SK` per enqueue, `SG` per
+//! holder completion) on every kernel event. A [`ResolvedProfile`] is the
+//! profile flattened into a handle-sorted table, built **once** when a
+//! service attaches to a GPU (`coordinator/driver.rs`), so steady-state
+//! lookups are a short binary probe over the service's own kernels —
+//! zero hashing, zero allocation (DESIGN.md §Perf).
+//!
+//! Handle assignment is deterministic: kernels are interned in sorted
+//! canonical order, independent of the profile's in-memory observation
+//! order. A profile saved to JSON and loaded back therefore resolves to
+//! the **same handles** (see the stability test below) — side tables
+//! built before a persistence round trip stay valid after it.
+
+use super::statistics::TaskProfile;
+use crate::core::{Duration, Interner, KernelHandle};
+
+/// One service's predictions, keyed by interned kernel handle.
+///
+/// Storage is a handle-sorted compact table — O(k) memory for a
+/// k-kernel service regardless of how many kernels the sim-global
+/// interner has minted (a dense global-handle-indexed table would make
+/// every *live* profile scale with total-services-ever-attached in
+/// churn runs). Lookups are a binary search over the service's own
+/// `(handle, SK, SG)` triples: k ≈ tens, so ~5 branch-predictable
+/// probes of 24-byte rows — no hashing, no allocation.
+#[derive(Debug, Clone, Default)]
+pub struct ResolvedProfile {
+    /// Sorted by handle: `(handle, SK, SG)`; `SG` is `None` when the
+    /// kernel never had a following gap.
+    entries: Vec<(KernelHandle, Duration, Option<Duration>)>,
+}
+
+impl ResolvedProfile {
+    /// Flatten `profile` against `interner`, minting handles for any
+    /// kernel ids not seen before. This is the one place profile lookup
+    /// still does string work (sorting canonicals for determinism) — it
+    /// runs at attach time, never per launch.
+    pub fn resolve(profile: &TaskProfile, interner: &mut Interner) -> ResolvedProfile {
+        let mut ids: Vec<_> = profile.unique_ids().collect();
+        ids.sort_by_cached_key(|id| id.canonical());
+        let mut entries: Vec<(KernelHandle, Duration, Option<Duration>)> = ids
+            .iter()
+            .map(|id| {
+                let h = interner.intern_kernel(id);
+                let sk = profile.sk(id).expect("unique_ids entries have stats");
+                (h, sk, profile.sg(id))
+            })
+            .collect();
+        entries.sort_unstable_by_key(|&(h, _, _)| h);
+        ResolvedProfile { entries }
+    }
+
+    #[inline]
+    fn row(&self, h: KernelHandle) -> Option<&(KernelHandle, Duration, Option<Duration>)> {
+        self.entries
+            .binary_search_by_key(&h, |&(eh, _, _)| eh)
+            .ok()
+            .map(|i| &self.entries[i])
+    }
+
+    /// Predicted execution time `SK` for an interned kernel.
+    #[inline]
+    pub fn sk(&self, h: KernelHandle) -> Option<Duration> {
+        self.row(h).map(|&(_, sk, _)| sk)
+    }
+
+    /// Predicted following idle gap `SG` for an interned kernel.
+    #[inline]
+    pub fn sg(&self, h: KernelHandle) -> Option<Duration> {
+        self.row(h).and_then(|&(_, _, sg)| sg)
+    }
+
+    /// Number of observed kernels in this resolution.
+    pub fn observed(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, KernelId, TaskKey};
+    use crate::profile::ProfileStore;
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(8), Dim3::x(128))
+    }
+
+    fn profile(keys: &[(&str, u64, Option<u64>)]) -> TaskProfile {
+        let mut p = TaskProfile::new(TaskKey::new("svc"));
+        for (name, sk_us, sg_us) in keys {
+            p.record(
+                &kid(name),
+                Duration::from_micros(*sk_us),
+                sg_us.map(Duration::from_micros),
+            );
+        }
+        p.finish_run(keys.len());
+        p
+    }
+
+    #[test]
+    fn resolves_sk_and_sg_by_handle() {
+        let p = profile(&[("a", 100, Some(40)), ("b", 250, None)]);
+        let mut interner = Interner::new();
+        let rp = ResolvedProfile::resolve(&p, &mut interner);
+        let ha = interner.kernel_handle(&kid("a")).unwrap();
+        let hb = interner.kernel_handle(&kid("b")).unwrap();
+        assert_eq!(rp.sk(ha), Some(Duration::from_micros(100)));
+        assert_eq!(rp.sg(ha), Some(Duration::from_micros(40)));
+        assert_eq!(rp.sk(hb), Some(Duration::from_micros(250)));
+        assert_eq!(rp.sg(hb), None, "never-gapped kernel has no SG");
+        assert_eq!(rp.observed(), 2);
+        // A handle minted later (another service's kernel) is unobserved.
+        let hc = interner.intern_kernel(&kid("c"));
+        assert_eq!(rp.sk(hc), None);
+        assert_eq!(rp.sk(KernelHandle::UNBOUND), None);
+    }
+
+    /// Satellite acceptance: interner handles are stable across a
+    /// save/load of the profile store JSON. The slab order of a loaded
+    /// profile differs from the measured one (sorted vs observation
+    /// order); resolution must still mint identical handles.
+    #[test]
+    fn handles_stable_across_store_save_load() {
+        // Observation order deliberately unsorted vs canonical order.
+        let p = profile(&[("zeta", 10, Some(5)), ("alpha", 20, None), ("mid", 30, Some(1))]);
+        let mut store = ProfileStore::new();
+        store.insert(p);
+
+        let dir = std::env::temp_dir().join(format!("fikit-rp-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+        store.save(&path).unwrap();
+        let loaded = ProfileStore::load(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        let key = TaskKey::new("svc");
+        let mut i1 = Interner::new();
+        let rp1 = ResolvedProfile::resolve(store.get(&key).unwrap(), &mut i1);
+        let mut i2 = Interner::new();
+        let rp2 = ResolvedProfile::resolve(loaded.get(&key).unwrap(), &mut i2);
+
+        for name in ["zeta", "alpha", "mid"] {
+            let h1 = i1.kernel_handle(&kid(name)).unwrap();
+            let h2 = i2.kernel_handle(&kid(name)).unwrap();
+            assert_eq!(h1, h2, "handle for {name} drifted across save/load");
+            assert_eq!(rp1.sk(h1), rp2.sk(h2));
+            assert_eq!(rp1.sg(h1), rp2.sg(h2));
+        }
+        assert_eq!(i1.kernel_count(), i2.kernel_count());
+    }
+}

@@ -151,14 +151,24 @@ pub struct KernelStats {
 /// The profiled result of one service: `TaskKey = (SK, SG)` in the
 /// paper's notation, i.e. per-unique-kernel-ID statistics gathered over
 /// `T` measurement runs.
+///
+/// Storage is a dense **slab**: kernel ids live in `ids` (append-only,
+/// slot = local handle), stats in the parallel `stats` vector, and
+/// `index` maps a [`KernelId`] to its slot. Lookups hash the structured
+/// id directly — no canonical-string allocation anywhere near a lookup;
+/// canonical strings exist only inside [`TaskProfile::to_json`] /
+/// [`TaskProfile::from_json`] (DESIGN.md §Perf).
 #[derive(Debug, Clone)]
 pub struct TaskProfile {
     pub task_key: TaskKey,
     /// Number of measured runs `T` that produced this profile.
     pub runs: u32,
-    /// Per-kernel-ID statistics, keyed by canonical kernel-id string for
-    /// stable JSON serialization.
-    stats: HashMap<String, KernelStats>,
+    /// Slab of unique kernel ids, in first-observation order.
+    ids: Vec<KernelId>,
+    /// Per-kernel statistics, parallel to `ids`.
+    stats: Vec<KernelStats>,
+    /// Kernel id → slab slot.
+    index: HashMap<KernelId, u32>,
     /// Mean number of kernels per run (used for sanity checks / metrics).
     pub mean_kernels_per_run: f64,
 }
@@ -168,15 +178,35 @@ impl TaskProfile {
         TaskProfile {
             task_key,
             runs: 0,
-            stats: HashMap::new(),
+            ids: Vec::new(),
+            stats: Vec::new(),
+            index: HashMap::new(),
             mean_kernels_per_run: 0.0,
         }
+    }
+
+    /// Slab slot of a kernel id, if it was ever observed.
+    #[inline]
+    fn slot(&self, kernel: &KernelId) -> Option<usize> {
+        self.index.get(kernel).map(|&s| s as usize)
+    }
+
+    fn slot_or_insert(&mut self, kernel: &KernelId) -> usize {
+        if let Some(s) = self.slot(kernel) {
+            return s;
+        }
+        let s = self.ids.len();
+        self.ids.push(kernel.clone());
+        self.stats.push(KernelStats::default());
+        self.index.insert(kernel.clone(), s as u32);
+        s
     }
 
     /// Record one kernel occurrence: its execution time and, if it was
     /// followed by another kernel in the same run, the idle gap after it.
     pub fn record(&mut self, kernel: &KernelId, exec: Duration, gap_after: Option<Duration>) {
-        let entry = self.stats.entry(kernel.canonical()).or_default();
+        let s = self.slot_or_insert(kernel);
+        let entry = &mut self.stats[s];
         entry.exec.record(exec);
         if let Some(g) = gap_after {
             entry.gap.record(g);
@@ -192,33 +222,33 @@ impl TaskProfile {
         self.runs += 1;
     }
 
-    /// The set of unique kernel IDs, `S_UID`.
+    /// The set of unique kernel IDs, `S_UID`, in first-observation order.
+    /// (Clones are `Arc` refcount bumps.)
     pub fn unique_ids(&self) -> impl Iterator<Item = KernelId> + '_ {
-        self.stats.keys().filter_map(|k| KernelId::from_canonical(k))
+        self.ids.iter().cloned()
     }
 
     /// Number of unique kernel IDs, `|S_UID|`.
     pub fn num_unique(&self) -> usize {
-        self.stats.len()
+        self.ids.len()
     }
 
     /// `SK_j`: predicted execution time for kernel `j`. `None` if the
     /// kernel was never observed during measurement.
     pub fn sk(&self, kernel: &KernelId) -> Option<Duration> {
-        self.stats.get(&kernel.canonical()).map(|s| s.exec.mean())
+        self.slot(kernel).map(|s| self.stats[s].exec.mean())
     }
 
     /// `SG_j`: predicted idle gap after kernel `j`.
     pub fn sg(&self, kernel: &KernelId) -> Option<Duration> {
-        self.stats
-            .get(&kernel.canonical())
-            .filter(|s| s.gap.count > 0)
-            .map(|s| s.gap.mean())
+        self.slot(kernel)
+            .filter(|&s| self.stats[s].gap.count > 0)
+            .map(|s| self.stats[s].gap.mean())
     }
 
     /// Full statistics for a kernel id.
     pub fn stats_for(&self, kernel: &KernelId) -> Option<&KernelStats> {
-        self.stats.get(&kernel.canonical())
+        self.slot(kernel).map(|s| &self.stats[s])
     }
 
     /// Whether this profile has enough runs to be used for sharing-stage
@@ -229,14 +259,22 @@ impl TaskProfile {
 
     // ----- JSON persistence (see profile/store.rs) -----
 
-    /// Serialize to a JSON value.
+    /// Serialize to a JSON value. Kernels are keyed by canonical string,
+    /// sorted, so output is byte-stable regardless of observation order —
+    /// this is the only place (besides [`TaskProfile::from_json`]) where
+    /// canonical strings are materialized.
     pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(String, &KernelStats)> = self
+            .ids
+            .iter()
+            .zip(&self.stats)
+            .map(|(id, v)| (id.canonical(), v))
+            .collect();
+        entries.sort_by(|(a, _), (b, _)| a.cmp(b));
         let mut stats = Json::obj();
-        let mut entries: Vec<(&String, &KernelStats)> = self.stats.iter().collect();
-        entries.sort_by_key(|(k, _)| k.as_str());
         for (k, v) in entries {
             stats = stats.set(
-                k,
+                &k,
                 Json::obj()
                     .set("exec", v.exec.to_json())
                     .set("gap", v.gap.to_json()),
@@ -249,26 +287,26 @@ impl TaskProfile {
             .set("stats", stats)
     }
 
-    /// Parse from a JSON value.
+    /// Parse from a JSON value. Kernels enter the slab in sorted-canonical
+    /// order (the JSON object's key order), so a freshly-loaded profile
+    /// has a deterministic slab layout.
     pub fn from_json(v: &Json) -> crate::core::Result<TaskProfile> {
-        let mut stats = HashMap::new();
+        let mut profile = TaskProfile::new(TaskKey::new(v.req_str("task_key")?));
         if let Some(obj) = v.require("stats")?.as_obj() {
             for (k, entry) in obj {
-                stats.insert(
-                    k.clone(),
-                    KernelStats {
-                        exec: StatSummary::from_json(entry.require("exec")?)?,
-                        gap: StatSummary::from_json(entry.require("gap")?)?,
-                    },
-                );
+                let id = KernelId::from_canonical(k).ok_or_else(|| {
+                    crate::core::Error::Parse(format!("bad canonical kernel id {k:?}"))
+                })?;
+                let s = profile.slot_or_insert(&id);
+                profile.stats[s] = KernelStats {
+                    exec: StatSummary::from_json(entry.require("exec")?)?,
+                    gap: StatSummary::from_json(entry.require("gap")?)?,
+                };
             }
         }
-        Ok(TaskProfile {
-            task_key: TaskKey::new(v.req_str("task_key")?),
-            runs: v.req_u64("runs")? as u32,
-            stats,
-            mean_kernels_per_run: v.req_f64("mean_kernels_per_run")?,
-        })
+        profile.runs = v.req_u64("runs")? as u32;
+        profile.mean_kernels_per_run = v.req_f64("mean_kernels_per_run")?;
+        Ok(profile)
     }
 
     /// Merge another profile for the same task key (e.g. partials from
@@ -283,8 +321,9 @@ impl TaskProfile {
                 / (n1 + n2);
         }
         self.runs += other.runs;
-        for (k, v) in &other.stats {
-            let e = self.stats.entry(k.clone()).or_default();
+        for (id, v) in other.ids.iter().zip(&other.stats) {
+            let s = self.slot_or_insert(id);
+            let e = &mut self.stats[s];
             e.exec.merge(&v.exec);
             e.gap.merge(&v.gap);
         }

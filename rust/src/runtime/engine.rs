@@ -27,7 +27,8 @@ use crate::coordinator::fikit::FillWindow;
 use crate::coordinator::queues::PriorityQueues;
 use crate::coordinator::Mode;
 use crate::core::{
-    Dim3, Duration, Error, KernelId, KernelLaunch, Priority, Result, SimTime, TaskId, TaskKey,
+    Dim3, Duration, Error, KernelHandle, KernelId, KernelLaunch, Priority, Result, SimTime,
+    TaskHandle, TaskId, TaskKey,
 };
 use crate::metrics::JctStats;
 use crate::profile::{ProfileStore, TaskProfile};
@@ -263,7 +264,7 @@ impl RealTimeEngine {
                         window = None;
                         break;
                     }
-                    let Some(fit) = best_prio_fit(&mut queues, remaining, profiles) else {
+                    let Some(fit) = best_prio_fit(&mut queues, remaining) else {
                         break;
                     };
                     w.budget = w.budget.saturating_sub(fit.predicted);
@@ -333,8 +334,10 @@ impl RealTimeEngine {
                                 .and_then(|p| p.sg(kid));
                             if let Some(g) = gap {
                                 let now = now_sim(Instant::now());
+                                // The engine's service index doubles as a
+                                // dense task handle (one slot per service).
                                 window = FillWindow::open(
-                                    self.services[svc].key.clone(),
+                                    TaskHandle::from_index(svc),
                                     now,
                                     g,
                                     self.cfg.epsilon,
@@ -348,8 +351,10 @@ impl RealTimeEngine {
                         // Lower priority: park in the message queues.
                         let launch = KernelLaunch {
                             task_key: self.services[svc].key.clone(),
+                            task_handle: TaskHandle::from_index(svc),
                             task_id: TaskId(seq as u64),
                             kernel: self.kernel_ids[svc][step].clone(),
+                            kernel_handle: KernelHandle::UNBOUND,
                             priority: my_prio,
                             seq: step as u32,
                             true_duration: Duration::ZERO,

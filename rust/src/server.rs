@@ -22,7 +22,9 @@
 
 use crate::coordinator::fikit::{FillWindow, DEFAULT_EPSILON};
 use crate::coordinator::queues::PriorityQueues;
-use crate::core::{Duration, KernelLaunch, Priority, Result, SimTime, TaskKey};
+use crate::core::{
+    Duration, Interner, KernelLaunch, Priority, Result, SimTime, TaskHandle, TaskKey,
+};
 use crate::hook::protocol::{ClientMsg, SchedulerMsg};
 use crate::profile::ProfileStore;
 use std::collections::HashMap;
@@ -86,6 +88,12 @@ pub struct SchedulerServer {
     active: Vec<(TaskKey, Priority)>,
     queues: PriorityQueues,
     window: Option<FillWindow>,
+    /// Identity interner for fill-window holders. Only *holder* task
+    /// keys are interned (when a window opens — bounded by registered,
+    /// active services, like the `clients` map); arbitrary wire traffic
+    /// must never mint handles, or hostile/buggy clients could grow the
+    /// interner without bound.
+    interner: Interner,
     /// Kernel ids of recently released launches, so `Completion`
     /// messages (which carry only task/seq) can look up the profiled
     /// gap. One entry per (service, seq), overwritten in place on reuse.
@@ -106,6 +114,7 @@ impl SchedulerServer {
             active: Vec::new(),
             queues: PriorityQueues::new(),
             window: None,
+            interner: Interner::new(),
             launched_kernels: HashMap::new(),
             epoch: Instant::now(),
             stats: ServerStats::default(),
@@ -218,7 +227,15 @@ impl SchedulerServer {
             }
             ClientMsg::TaskEnd { task_key, .. } => {
                 self.active.retain(|(k, _)| k != &task_key);
-                if self.window.as_ref().is_some_and(|w| w.holder == task_key) {
+                // Non-minting lookup: a key never interned cannot be the
+                // window holder, and minting here would let arbitrary
+                // wire traffic grow the interner unboundedly.
+                let ended: Option<TaskHandle> = self.interner.task_handle(&task_key);
+                if self
+                    .window
+                    .as_ref()
+                    .is_some_and(|w| Some(w.holder) == ended)
+                {
                     self.window = None;
                 }
                 // Release the new holder class's parked launches.
@@ -282,7 +299,19 @@ impl SchedulerServer {
                     )]
                 } else {
                     self.stats.holds += 1;
+                    // Wire boundary: the prediction is resolved from the
+                    // string-keyed store here, and the daemon's release
+                    // messages address clients by task key — held
+                    // launches never consume their handles, so nothing
+                    // is interned (minting per wire message would let
+                    // arbitrary clients grow the interner unboundedly).
+                    let predicted = self
+                        .profiles
+                        .get(&task_key)
+                        .and_then(|p| p.sk(&kernel));
                     let launch = KernelLaunch {
+                        task_handle: TaskHandle::UNBOUND,
+                        kernel_handle: crate::core::KernelHandle::UNBOUND,
                         task_key: task_key.clone(),
                         task_id,
                         kernel,
@@ -291,10 +320,6 @@ impl SchedulerServer {
                         true_duration: Duration::ZERO,
                         issued_at: now,
                     };
-                    let predicted = self
-                        .profiles
-                        .get(&launch.task_key)
-                        .and_then(|p| p.sk(&launch.kernel));
                     self.queues.push_predicted(launch, predicted, now);
                     let mut out = vec![(
                         addr,
@@ -337,7 +362,8 @@ impl SchedulerServer {
             return Vec::new();
         };
         let now = self.now();
-        self.window = FillWindow::open(task_key.clone(), now, gap, self.cfg.epsilon);
+        let holder = self.interner.intern_task(task_key);
+        self.window = FillWindow::open(holder, now, gap, self.cfg.epsilon);
         if self.window.is_some() {
             self.stats.windows += 1;
         }
@@ -349,7 +375,7 @@ impl SchedulerServer {
             return Vec::new();
         };
         let now = SimTime(self.epoch.elapsed().as_nanos() as u64);
-        let fits = crate::coordinator::fikit::fikit_fill(window, now, &mut self.queues, &self.profiles);
+        let fits = crate::coordinator::fikit::fikit_fill(window, now, &mut self.queues);
         let mut out = Vec::new();
         for fit in fits {
             if let Some(c) = self.clients.get(&fit.launch.task_key) {

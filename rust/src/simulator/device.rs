@@ -8,6 +8,8 @@
 //! driver turns `finished_at` into a completion event.
 
 use crate::core::{Duration, KernelLaunch, KernelRecord, LaunchSource, SimTime};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Hardware/driver timing parameters.
 #[derive(Debug, Clone)]
@@ -78,10 +80,14 @@ pub struct SimDevice {
     /// Time at which the device finishes everything currently queued.
     free_at: SimTime,
     stats: DeviceStats,
-    /// `(finish_time, is_fill)` of kernels not yet finished — used to
-    /// answer "how many kernels are pending ahead of time t" (feedback
-    /// overhead-2 accounting). Small (≤ queue depth), pruned lazily.
-    in_flight: Vec<(SimTime, bool)>,
+    /// Completion min-heap: `(finish_time, is_fill)` of kernels not yet
+    /// finished — answers "how many kernels are pending ahead of time t"
+    /// (feedback overhead-2 accounting). Pruning pops expired heads in
+    /// O(log n) each instead of the old O(n) retain-scan per submit.
+    in_flight: BinaryHeap<Reverse<(SimTime, bool)>>,
+    /// Pending gap-fill kernels (subset of `in_flight`), maintained
+    /// incrementally so `pending_fills` needs no iteration.
+    fills_in_flight: usize,
 }
 
 impl SimDevice {
@@ -90,7 +96,8 @@ impl SimDevice {
             cfg,
             free_at: SimTime::ZERO,
             stats: DeviceStats::default(),
-            in_flight: Vec::with_capacity(8),
+            in_flight: BinaryHeap::with_capacity(8),
+            fills_in_flight: 0,
         }
     }
 
@@ -98,10 +105,12 @@ impl SimDevice {
         &self.cfg
     }
 
-    /// Submit a kernel launch at CPU time `now`. Returns the completed
-    /// execution record (FIFO + non-preemptive ⇒ deterministic at
-    /// submission).
-    pub fn submit(&mut self, launch: &KernelLaunch, now: SimTime, source: LaunchSource) -> KernelRecord {
+    /// Submit a kernel launch at CPU time `now`, consuming it. Returns
+    /// the completed execution record (FIFO + non-preemptive ⇒
+    /// deterministic at submission). Taking the launch by value lets the
+    /// record inherit its `task_key`/`kernel` by move — the submit path
+    /// does not even bump `Arc` refcounts.
+    pub fn submit(&mut self, launch: KernelLaunch, now: SimTime, source: LaunchSource) -> KernelRecord {
         let ready = now + self.cfg.launch_latency;
         let start = ready.max(self.free_at);
         // MIG slice: fewer SMs → kernels take proportionally longer.
@@ -123,12 +132,17 @@ impl SimDevice {
         self.stats.last_finish = self.stats.last_finish.max(finish);
 
         self.prune(now);
-        self.in_flight.push((finish, is_fill));
+        self.in_flight.push(Reverse((finish, is_fill)));
+        if is_fill {
+            self.fills_in_flight += 1;
+        }
 
         KernelRecord {
-            task_key: launch.task_key.clone(),
+            task_key: launch.task_key,
+            task_handle: launch.task_handle,
             task_id: launch.task_id,
-            kernel: launch.kernel.clone(),
+            kernel: launch.kernel,
+            kernel_handle: launch.kernel_handle,
             priority: launch.priority,
             seq: launch.seq,
             source,
@@ -139,7 +153,15 @@ impl SimDevice {
     }
 
     fn prune(&mut self, now: SimTime) {
-        self.in_flight.retain(|(finish, _)| *finish > now);
+        while let Some(&Reverse((finish, is_fill))) = self.in_flight.peek() {
+            if finish > now {
+                break;
+            }
+            self.in_flight.pop();
+            if is_fill {
+                self.fills_in_flight -= 1;
+            }
+        }
     }
 
     /// Time at which the device will have drained everything submitted.
@@ -167,7 +189,7 @@ impl SimDevice {
     /// kernels of the paper's "overhead 2" (Fig 12).
     pub fn pending_fills(&mut self, now: SimTime) -> usize {
         self.prune(now);
-        self.in_flight.iter().filter(|(_, f)| *f).count()
+        self.fills_in_flight
     }
 
     pub fn stats(&self) -> &DeviceStats {
@@ -178,13 +200,15 @@ impl SimDevice {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{Dim3, KernelId, Priority, TaskId, TaskKey};
+    use crate::core::{Dim3, KernelHandle, KernelId, Priority, TaskHandle, TaskId, TaskKey};
 
     fn launch(dur_us: u64, at: SimTime) -> KernelLaunch {
         KernelLaunch {
             task_key: TaskKey::new("svc"),
+            task_handle: TaskHandle::UNBOUND,
             task_id: TaskId(0),
             kernel: KernelId::new("k", Dim3::x(1), Dim3::x(32)),
+            kernel_handle: KernelHandle::UNBOUND,
             priority: Priority::P0,
             seq: 0,
             true_duration: Duration::from_micros(dur_us),
@@ -203,12 +227,12 @@ mod tests {
     fn fifo_back_to_back_execution() {
         let mut d = dev();
         let t0 = SimTime::ZERO;
-        let r1 = d.submit(&launch(100, t0), t0, LaunchSource::Direct);
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
         assert_eq!(r1.started_at, SimTime(5_000)); // launch latency
         assert_eq!(r1.finished_at, SimTime(105_000));
 
         // Second kernel submitted while first still running: queues FIFO.
-        let r2 = d.submit(&launch(50, t0), t0, LaunchSource::Direct);
+        let r2 = d.submit(launch(50, t0), t0, LaunchSource::Direct);
         assert_eq!(r2.started_at, SimTime(105_000));
         assert_eq!(r2.finished_at, SimTime(155_000));
         assert_eq!(r2.queue_delay(), Duration::from_micros(105));
@@ -220,12 +244,12 @@ mod tests {
     #[test]
     fn idle_gap_between_late_submissions() {
         let mut d = dev();
-        let r1 = d.submit(&launch(100, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
+        let r1 = d.submit(launch(100, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
         // Device is idle once the first kernel drains.
         assert!(d.is_idle(SimTime(r1.finished_at.nanos() + 1_000)));
         // Next launch issued 80us after finish — device idled in between.
         let t2 = r1.finished_at + Duration::from_micros(80);
-        let r2 = d.submit(&launch(100, t2), t2, LaunchSource::Direct);
+        let r2 = d.submit(launch(100, t2), t2, LaunchSource::Direct);
         assert_eq!(r2.started_at, t2 + Duration::from_micros(5));
         assert!(!d.is_idle(t2));
     }
@@ -234,9 +258,9 @@ mod tests {
     fn pending_and_fill_accounting() {
         let mut d = dev();
         let t0 = SimTime::ZERO;
-        d.submit(&launch(100, t0), t0, LaunchSource::Direct);
-        d.submit(&launch(100, t0), t0, LaunchSource::GapFill);
-        d.submit(&launch(100, t0), t0, LaunchSource::GapFill);
+        d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        d.submit(launch(100, t0), t0, LaunchSource::GapFill);
+        d.submit(launch(100, t0), t0, LaunchSource::GapFill);
         assert_eq!(d.pending(SimTime(10_000)), 3);
         assert_eq!(d.pending_fills(SimTime(10_000)), 2);
         // After the first two finish (5us + 200us), one fill remains.
@@ -254,7 +278,7 @@ mod tests {
             launch_latency: Duration::from_micros(5),
             ..DeviceConfig::mig_instance(0.5)
         });
-        let r = d.submit(&launch(100, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
+        let r = d.submit(launch(100, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
         assert_eq!(r.exec_time(), Duration::from_micros(200));
         assert_eq!(d.stats().busy, Duration::from_micros(200));
     }
@@ -268,7 +292,7 @@ mod tests {
     #[test]
     fn utilization() {
         let mut d = dev();
-        d.submit(&launch(500, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
+        d.submit(launch(500, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
         let horizon = SimTime(1_000_000); // 1ms
         assert!((d.stats().utilization(horizon) - 0.5).abs() < 1e-9);
     }

@@ -8,7 +8,8 @@
 //! overheads, which is where FIKIT's cost models attach).
 
 use crate::core::{
-    Duration, KernelLaunch, KernelRecord, Priority, SimTime, TaskId, TaskKey,
+    Duration, Interner, KernelHandle, KernelLaunch, KernelRecord, Priority, SimTime, TaskHandle,
+    TaskId, TaskKey,
 };
 use crate::profile::{MeasurementConfig, MeasurementRecorder, SymbolResolver, TaskProfile};
 use crate::workload::{KernelTrace, Service, TraceGenerator};
@@ -69,7 +70,17 @@ pub enum ProcessAction {
 pub struct ServiceProcess {
     pub service: Service,
     gen: TraceGenerator,
-    resolver: SymbolResolver,
+    /// Symbol-resolved kernel id per generator segment, computed once at
+    /// construction (the resolver is deterministic). Issue-time launches
+    /// clone these — an `Arc` refcount bump, never a fresh allocation
+    /// (the old per-launch `resolve()` allocated an erased id on every
+    /// launch under release-build symbol tables).
+    seg_ids: Vec<crate::core::KernelId>,
+    /// Interned handle per segment, assigned by [`ServiceProcess::bind`]
+    /// at attach time ([`KernelHandle::UNBOUND`] until then).
+    seg_handles: Vec<KernelHandle>,
+    /// Interned service identity ([`TaskHandle::UNBOUND`] until bound).
+    task_handle: TaskHandle,
     /// Extra CPU cost added before each launch (hook interception +
     /// scheduler round trip), set by the driver per mode.
     pub per_launch_overhead: Duration,
@@ -110,6 +121,12 @@ impl ServiceProcess {
     ) -> ServiceProcess {
         let spec = service.model.spec();
         let gen = TraceGenerator::new(&spec, seed);
+        let seg_ids: Vec<crate::core::KernelId> = gen
+            .ids()
+            .iter()
+            .map(|id| resolver.resolve(id).0)
+            .collect();
+        let seg_handles = vec![KernelHandle::UNBOUND; seg_ids.len()];
         let recorder = match stage {
             Stage::Measuring => Some(MeasurementRecorder::new(service.key.clone())),
             Stage::Sharing => None,
@@ -117,7 +134,9 @@ impl ServiceProcess {
         ServiceProcess {
             service,
             gen,
-            resolver,
+            seg_ids,
+            seg_handles,
+            task_handle: TaskHandle::UNBOUND,
             per_launch_overhead: Duration::ZERO,
             stage,
             measurement_cfg,
@@ -139,6 +158,22 @@ impl ServiceProcess {
 
     pub fn stage(&self) -> Stage {
         self.stage
+    }
+
+    /// Intern this process's identities: its task key's handle plus one
+    /// kernel handle per trace segment. Called once at attach by the
+    /// driver; after this every issued launch carries bound handles and
+    /// the issue path does zero hashing.
+    pub fn bind(&mut self, handle: TaskHandle, interner: &mut Interner) {
+        self.task_handle = handle;
+        for (slot, id) in self.seg_handles.iter_mut().zip(&self.seg_ids) {
+            *slot = interner.intern_kernel(id);
+        }
+    }
+
+    /// Interned service identity (unbound outside a sim).
+    pub fn task_handle(&self) -> TaskHandle {
+        self.task_handle
     }
 
     pub fn priority(&self) -> Priority {
@@ -201,11 +236,15 @@ impl ServiceProcess {
     pub fn issue_next(&mut self, now: SimTime) -> KernelLaunch {
         debug_assert!(self.active, "issue_next on idle process");
         let tk = &self.trace.kernels[self.cursor];
-        let (kernel, _lookup_cost) = self.resolver.resolve(&tk.kernel);
+        // Symbol resolution and interning happened once per segment (at
+        // construction / bind); issuing is clones of `Arc`s plus copies.
+        let seg = tk.seg as usize;
         let launch = KernelLaunch {
             task_key: self.service.key.clone(),
+            task_handle: self.task_handle,
             task_id: self.task_id,
-            kernel,
+            kernel: self.seg_ids[seg].clone(),
+            kernel_handle: self.seg_handles[seg],
             priority: self.service.priority,
             seq: self.cursor as u32,
             true_duration: tk.exec,
@@ -350,8 +389,10 @@ mod tests {
             let begin = issue_at.max(device_free);
             let rec = KernelRecord {
                 task_key: launch.task_key.clone(),
+                task_handle: launch.task_handle,
                 task_id: launch.task_id,
                 kernel: launch.kernel.clone(),
+                kernel_handle: launch.kernel_handle,
                 priority: launch.priority,
                 seq: launch.seq,
                 source: LaunchSource::Direct,

@@ -26,6 +26,18 @@ impl BenchResult {
     pub fn mean_ns(&self) -> f64 {
         self.mean.as_nanos() as f64
     }
+
+    /// Serialize to the `BENCH_*.json` case shape (see
+    /// `scripts/check_bench.py` for the consumed schema).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean.as_nanos() as u64)
+            .set("median_ns", self.median.as_nanos() as u64)
+            .set("p95_ns", self.p95.as_nanos() as u64)
+            .set("min_ns", self.min.as_nanos() as u64)
+    }
 }
 
 /// Harness configuration.
@@ -173,6 +185,18 @@ mod tests {
         let rep = b.report();
         assert!(rep.contains("noop"));
         assert!(rep.contains("mean"));
+    }
+
+    #[test]
+    fn result_serializes_to_json() {
+        let mut b = Bencher::quick();
+        b.bench("case_a", || 1u64);
+        let j = b.results()[0].to_json();
+        assert_eq!(j.req_str("name").unwrap(), "case_a");
+        assert!(j.req_u64("iters").unwrap() > 0);
+        for field in ["mean_ns", "median_ns", "p95_ns", "min_ns"] {
+            assert!(j.req_u64(field).is_ok(), "missing {field}");
+        }
     }
 
     #[test]

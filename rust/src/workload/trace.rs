@@ -18,6 +18,11 @@ use std::sync::Arc;
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceKernel {
     pub kernel: KernelId,
+    /// Index of the generator segment this kernel was sampled from —
+    /// stable across tasks, so per-segment side tables (resolved kernel
+    /// ids, interned handles) can be indexed without hashing at issue
+    /// time.
+    pub seg: u32,
     /// True device execution duration for this occurrence.
     pub exec: Duration,
     /// CPU-side think time after this kernel (post-completion for sync
@@ -98,6 +103,12 @@ impl TraceGenerator {
         TraceGenerator::from_segments(segments, seed)
     }
 
+    /// Pre-built kernel ids, one per segment, in segment order — the
+    /// targets of [`TraceKernel::seg`].
+    pub fn ids(&self) -> &[KernelId] {
+        &self.ids
+    }
+
     /// Build from raw segments (custom workloads, tests).
     pub fn from_segments(segments: Vec<Segment>, seed: u64) -> TraceGenerator {
         let ids = segments
@@ -130,12 +141,13 @@ impl TraceGenerator {
         let mut kernels = Vec::with_capacity(
             self.segments.iter().map(|s| s.count as usize).sum::<usize>(),
         );
-        for (seg, id) in self.segments.iter().zip(&self.ids) {
+        for (si, (seg, id)) in self.segments.iter().zip(&self.ids).enumerate() {
             for _ in 0..seg.count {
                 let exec = Self::sample(&mut self.rng, seg.exec, seg.exec_jitter);
                 let gap = Self::sample(&mut self.rng, seg.gap, seg.gap_jitter);
                 kernels.push(TraceKernel {
                     kernel: id.clone(),
+                    seg: si as u32,
                     exec,
                     gap_after: gap,
                     sync: seg.sync,

@@ -23,10 +23,11 @@ use fikit::coordinator::fikit::{fikit_fill, FillWindow, DEFAULT_EPSILON};
 use fikit::coordinator::queues::PriorityQueues;
 use fikit::coordinator::Mode;
 use fikit::core::{
-    Dim3, Duration, KernelId, KernelLaunch, Priority, SimTime, TaskId, TaskKey,
+    Dim3, Duration, KernelHandle, KernelId, KernelLaunch, Priority, SimTime, TaskHandle, TaskId,
+    TaskKey,
 };
 use fikit::hook::protocol::{ClientMsg, SchedulerMsg};
-use fikit::profile::{ProfileStore, TaskProfile};
+use fikit::profile::TaskProfile;
 use fikit::util::rng::Rng;
 use fikit::workload::ModelKind;
 
@@ -36,10 +37,11 @@ fn kid(i: u64) -> KernelId {
     KernelId::new(format!("k{i}"), Dim3::x(4), Dim3::x(64))
 }
 
-/// Random queues + a matching profile store.
-fn random_state(rng: &mut Rng) -> (PriorityQueues, ProfileStore, Vec<(Priority, Duration)>) {
+/// Random queues seeded from per-service profiles. Requests are
+/// enqueued with their profiled `SK` pre-resolved, exactly as the
+/// scheduler does from the attach-time ResolvedProfile.
+fn random_state(rng: &mut Rng) -> (PriorityQueues, Vec<(Priority, Duration)>) {
     let n_services = 1 + rng.index(6);
-    let mut store = ProfileStore::new();
     let mut queues = PriorityQueues::new();
     let mut contents = Vec::new();
     for s in 0..n_services {
@@ -56,34 +58,36 @@ fn random_state(rng: &mut Rng) -> (PriorityQueues, ProfileStore, Vec<(Priority, 
         for q in 0..rng.index(4) {
             let k = rng.index(n_kernels) as u64;
             let predicted = profile.sk(&kid(k)).unwrap();
-            queues.push(
+            queues.push_predicted(
                 KernelLaunch {
                     task_key: key.clone(),
+                    task_handle: TaskHandle::UNBOUND,
                     task_id: TaskId(q as u64),
                     kernel: kid(k),
+                    kernel_handle: KernelHandle::UNBOUND,
                     priority: prio,
                     seq: q as u32,
                     true_duration: predicted,
                     issued_at: SimTime::ZERO,
                 },
+                Some(predicted),
                 SimTime::ZERO,
             );
             contents.push((prio, predicted));
         }
-        store.insert(profile);
     }
-    (queues, store, contents)
+    (queues, contents)
 }
 
 #[test]
 fn prop_best_prio_fit_is_optimal() {
     for seed in 0..CASES as u64 {
         let mut rng = Rng::new(seed);
-        let (mut queues, store, contents) = random_state(&mut rng);
+        let (mut queues, contents) = random_state(&mut rng);
         let idle = Duration::from_micros(1 + rng.below(1_000));
         let before = queues.len();
 
-        match best_prio_fit(&mut queues, idle, &store) {
+        match best_prio_fit(&mut queues, idle) {
             Some(fit) => {
                 assert!(fit.predicted < idle, "seed {seed}: fit exceeds window");
                 assert_eq!(queues.len(), before - 1, "seed {seed}: exactly one removed");
@@ -123,14 +127,14 @@ fn prop_best_prio_fit_is_optimal() {
 fn prop_fikit_fill_respects_budget() {
     for seed in 100..100 + CASES as u64 {
         let mut rng = Rng::new(seed);
-        let (mut queues, store, _) = random_state(&mut rng);
+        let (mut queues, _) = random_state(&mut rng);
         let gap = Duration::from_micros(150 + rng.below(3_000));
         let Some(mut window) =
-            FillWindow::open(TaskKey::new("holder"), SimTime::ZERO, gap, DEFAULT_EPSILON)
+            FillWindow::open(TaskHandle::from_index(0), SimTime::ZERO, gap, DEFAULT_EPSILON)
         else {
             continue;
         };
-        let fills = fikit_fill(&mut window, SimTime::ZERO, &mut queues, &store);
+        let fills = fikit_fill(&mut window, SimTime::ZERO, &mut queues);
         let spent: Duration = fills.iter().map(|f| f.predicted).collect::<Vec<_>>().iter().copied().sum();
         assert!(
             spent.nanos() <= gap.nanos(),

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Validate BENCH_sched.json (the scheduler hot-path perf trajectory).
+
+Checks, in order:
+
+1. shape — version, suite id, non-empty case list, required numeric
+   fields per case (name, iters, mean_ns, median_ns, p95_ns, min_ns);
+2. the headline gate is present: case ``best_prio_fit/select_n512``
+   declaring ``budget_ns`` ≤ 1000 (a BestPrioFit decision at 512 queued
+   requests must stay ≤ 1 µs mean — DESIGN.md §Perf);
+3. budgets — every case that declares ``budget_ns`` has
+   ``mean_ns`` ≤ ``budget_ns``.
+
+Exit 0 on success, 1 on any failure. A missing artifact is a SKIP
+(exit 0) because the offline container has no Rust toolchain to produce
+it; the single regeneration command is printed so CI (or any box with
+cargo) can produce and gate it:
+
+    cargo run --manifest-path rust/Cargo.toml --release -- bench --json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BENCH = REPO / "BENCH_sched.json"
+
+REQUIRED_CASE_FIELDS = ("name", "iters", "mean_ns", "median_ns", "p95_ns", "min_ns")
+HEADLINE_CASE = "best_prio_fit/select_n512"
+HEADLINE_BUDGET_NS = 1000
+EXPECTED_VERSION = 1  # keep in lockstep with rust/src/benchsuite.rs
+
+
+def fail(msg: str) -> "int":
+    print(f"check_bench: FAIL: {msg}")
+    return 1
+
+
+def main() -> int:
+    if not BENCH.exists():
+        print(
+            "check_bench: SKIP: BENCH_sched.json not found (no cargo in this "
+            "container). Regenerate with:\n"
+            "  cargo run --manifest-path rust/Cargo.toml --release -- bench --json"
+        )
+        return 0
+
+    try:
+        doc = json.loads(BENCH.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return fail(f"unreadable JSON: {e}")
+
+    if doc.get("version") != EXPECTED_VERSION:
+        return fail(f"version {doc.get('version')!r} != {EXPECTED_VERSION}")
+    if doc.get("suite") != "scheduler_hotpath":
+        return fail(f"unexpected suite {doc.get('suite')!r}")
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        return fail("cases must be a non-empty list")
+
+    names = set()
+    for i, case in enumerate(cases):
+        if not isinstance(case, dict):
+            return fail(f"case {i} is not an object")
+        for field in REQUIRED_CASE_FIELDS:
+            if field not in case:
+                return fail(f"case {i} missing field {field!r}")
+        for field in REQUIRED_CASE_FIELDS[1:]:
+            v = case[field]
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                return fail(f"case {case['name']!r}: {field} must be a non-negative int")
+        if case["name"] in names:
+            return fail(f"duplicate case name {case['name']!r}")
+        names.add(case["name"])
+        budget = case.get("budget_ns")
+        if budget is not None and (not isinstance(budget, int) or budget <= 0):
+            return fail(f"case {case['name']!r}: bad budget_ns {budget!r}")
+
+    by_name = {c["name"]: c for c in cases}
+    headline = by_name.get(HEADLINE_CASE)
+    if headline is None:
+        return fail(f"required case {HEADLINE_CASE!r} missing")
+    if headline.get("budget_ns") is None or headline["budget_ns"] > HEADLINE_BUDGET_NS:
+        return fail(
+            f"{HEADLINE_CASE!r} must declare budget_ns <= {HEADLINE_BUDGET_NS} "
+            f"(got {headline.get('budget_ns')!r})"
+        )
+
+    violations = [
+        f"  {c['name']}: mean {c['mean_ns']}ns > budget {c['budget_ns']}ns"
+        for c in cases
+        if c.get("budget_ns") is not None and c["mean_ns"] > c["budget_ns"]
+    ]
+    if violations:
+        print("check_bench: FAIL: hot-path budget violations:")
+        print("\n".join(violations))
+        return 1
+
+    gated = sum(1 for c in cases if c.get("budget_ns") is not None)
+    print(
+        f"check_bench: OK: {len(cases)} cases, {gated} budget-gated, "
+        f"{HEADLINE_CASE} mean {headline['mean_ns']}ns "
+        f"(budget {headline['budget_ns']}ns)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
