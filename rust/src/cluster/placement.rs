@@ -175,6 +175,13 @@ impl FleetState {
         self.residents[gpu].len() < self.capacity
     }
 
+    /// Whether every device is at capacity — the saturation probe behind
+    /// the scheduler daemon's `Register` rejections (DESIGN.md §Daemon);
+    /// also useful for back-pressure telemetry.
+    pub fn is_full(&self) -> bool {
+        (0..self.gpus()).all(|g| !self.has_room(g))
+    }
+
     /// The GPU hosting service `id`, if it is resident anywhere.
     pub fn gpu_of(&self, id: u64) -> Option<usize> {
         self.residents
@@ -194,6 +201,34 @@ impl FleetState {
         let gpu = self.pick(policy, &resident, compat, None)?;
         self.insert(gpu, resident);
         Some(gpu)
+    }
+
+    /// Update a resident's model/priority/demand **in place** (it keeps
+    /// its device): the re-registration path, where a service announces
+    /// new parameters but must not be re-placed mid-life — its
+    /// scheduling state lives on its current device. Load accounting is
+    /// adjusted by the demand delta. Returns `false` if the id is
+    /// unknown.
+    pub fn requalify(
+        &mut self,
+        id: u64,
+        model: ModelKind,
+        priority: Priority,
+        demand_ms: f64,
+    ) -> bool {
+        let Some(gpu) = self.gpu_of(id) else {
+            return false;
+        };
+        let r = self.residents[gpu]
+            .iter_mut()
+            .find(|r| r.id == id)
+            .expect("gpu_of found it");
+        let delta = demand_ms - r.demand_ms;
+        r.model = model;
+        r.priority = priority;
+        r.demand_ms = demand_ms;
+        self.load_ms[gpu] = (self.load_ms[gpu] + delta).max(0.0);
+        true
     }
 
     /// Remove a departing service. Returns the GPU it occupied.
@@ -475,6 +510,7 @@ mod tests {
             assert!(fleet.place(PlacementPolicy::LeastLoaded, r, &compat).is_some());
         }
         // Fleet is full: a fifth service is refused, not squeezed in.
+        assert!(fleet.is_full());
         let r = Resident::per_task(99, ModelKind::Alexnet, Priority::P0);
         assert!(fleet.place(PlacementPolicy::LeastLoaded, r, &compat).is_none());
         assert_eq!(fleet.residents_on(0).len(), 2);
@@ -494,6 +530,29 @@ mod tests {
         assert_eq!(fleet.load_ms(0), 0.0);
         assert!(fleet.has_room(0));
         assert_eq!(fleet.evict(7), None, "double evict is a no-op");
+    }
+
+    #[test]
+    fn requalify_updates_in_place_without_moving() {
+        let compat = CompatMatrix::new();
+        let mut fleet = FleetState::new(2, 2);
+        fleet
+            .place(
+                PlacementPolicy::RoundRobin,
+                Resident::per_task(5, ModelKind::Alexnet, Priority::P5),
+                &compat,
+            )
+            .unwrap();
+        let gpu = fleet.gpu_of(5).unwrap();
+        let new_demand = ModelKind::Vgg16.spec().mean_exec().as_millis_f64();
+        assert!(fleet.requalify(5, ModelKind::Vgg16, Priority::P0, new_demand));
+        assert_eq!(fleet.gpu_of(5), Some(gpu), "requalify never re-places");
+        assert!((fleet.load_ms(gpu) - new_demand).abs() < 1e-9, "load delta applied");
+        let r = &fleet.residents_on(gpu)[0];
+        assert_eq!(r.model, ModelKind::Vgg16);
+        assert_eq!(r.priority, Priority::P0);
+        // Unknown id → no-op.
+        assert!(!fleet.requalify(99, ModelKind::Vgg16, Priority::P0, 1.0));
     }
 
     #[test]

@@ -421,6 +421,50 @@ impl PriorityQueues {
         out
     }
 
+    /// Remove every queued request matching `pred`, preserving FIFO
+    /// order among the survivors. Returns the removed requests in
+    /// priority-then-FIFO order.
+    ///
+    /// Lifecycle path, not the hot path: the daemon uses this to purge a
+    /// departed service's parked launches on `Disconnect`
+    /// (DESIGN.md §Daemon) so they cannot sit in the queues forever.
+    /// Cost is O(total · fit-index memmove) in the worst case, which is
+    /// fine at client-churn frequency.
+    pub fn purge_where<F: FnMut(&KernelLaunch) -> bool>(
+        &mut self,
+        mut pred: F,
+    ) -> Vec<QueuedRequest> {
+        let mut out = Vec::new();
+        for lane in &mut self.lanes {
+            // Collect first (walking links), then unlink one by one —
+            // `unfit` needs the slot still live to find its fit entry.
+            let mut doomed = Vec::new();
+            let mut slot = lane.head;
+            while slot != NIL {
+                let sl = &lane.slab[slot as usize];
+                if pred(&sl.req.as_ref().expect("linked slots are live").launch) {
+                    doomed.push(slot);
+                }
+                slot = sl.next;
+            }
+            for slot in doomed {
+                lane.unfit(slot);
+                out.push(lane.unlink(slot));
+                self.len -= 1;
+            }
+        }
+        out
+    }
+
+    /// Whether a launch of service `key` with kernel sequence `seq` is
+    /// parked anywhere. Recovery-path lookup (`ReleaseQuery`), O(n).
+    pub fn contains(&self, key: &crate::core::TaskKey, seq: u32) -> bool {
+        self.lanes.iter().any(|lane| {
+            lane.iter()
+                .any(|r| r.launch.seq == seq && &r.launch.task_key == key)
+        })
+    }
+
     /// Remove every queued request (e.g. on reset). Returns them in
     /// priority-then-FIFO order.
     pub fn drain_all(&mut self) -> Vec<QueuedRequest> {
@@ -537,6 +581,38 @@ mod tests {
         let rest = q.drain_all();
         assert_eq!(rest.len(), 1);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn purge_where_removes_matching_and_keeps_fifo() {
+        let mut q = PriorityQueues::new();
+        // Interleave two services at one priority plus one at another,
+        // with a mix of profiled and unprofiled requests.
+        let mut mk = |key: &str, prio: Priority, seq: u32, us: Option<u64>| {
+            let mut l = launch(prio, seq);
+            l.task_key = TaskKey::new(key);
+            q.push_predicted(l, us.map(Duration::from_micros), SimTime::ZERO);
+        };
+        mk("gone", Priority::P4, 0, Some(100));
+        mk("stay", Priority::P4, 1, Some(200));
+        mk("gone", Priority::P4, 2, None);
+        mk("stay", Priority::P4, 3, None);
+        mk("gone", Priority::P7, 4, Some(300));
+        let purged = q.purge_where(|l| l.task_key == TaskKey::new("gone"));
+        assert_eq!(purged.len(), 3);
+        assert_eq!(q.len(), 2);
+        assert!(!q.contains(&TaskKey::new("gone"), 0));
+        assert!(q.contains(&TaskKey::new("stay"), 1));
+        let seqs: Vec<u32> = q.iter_at(Priority::P4).map(|r| r.launch.seq).collect();
+        assert_eq!(seqs, vec![1, 3], "survivors keep FIFO order");
+        q.check_consistency();
+        // The fit index forgot the purged profiled request too.
+        assert!(q
+            .take_longest_fit_at(Priority::P7, Duration::from_micros(500))
+            .is_none());
+        // Purging nothing is a no-op.
+        assert!(q.purge_where(|l| l.task_key == TaskKey::new("gone")).is_empty());
+        q.check_consistency();
     }
 
     fn push_us(q: &mut PriorityQueues, p: Priority, seq: u32, us: u64) {

@@ -1,0 +1,951 @@
+//! The sharded FIKIT scheduler daemon (DESIGN.md §Daemon).
+//!
+//! The paper's deployment shape is a standalone scheduler process hook
+//! clients talk to over UDP. This module grows that from a single-device
+//! control plane into a fleet daemon:
+//!
+//! * [`Shard`] — one per GPU; owns that device's `PriorityQueues`,
+//!   `FillWindow`, `Interner` and active set (the whole FIKIT control
+//!   plane), pure of any socket;
+//! * [`Registry`] — admits services and routes them to shards through
+//!   [`crate::cluster::placement::FleetState`] capacity accounting,
+//!   and keeps the per-client retransmit-dedup + released-sequence
+//!   state;
+//! * [`SchedulerDaemon`] — decodes datagrams, deduplicates retransmits
+//!   (protocol v2 `msg_seq`), dispatches to the owning shard and routes
+//!   the shard's outbound messages back to client addresses.
+//!
+//! The daemon is transport-generic ([`ServerTransport`]): production
+//! runs it over UDP (`fikit serve --devices N`), tests run it over the
+//! deterministic in-process [`crate::hook::transport::LossyNet`] to
+//! prove dropped-datagram recovery without real sockets.
+
+pub mod registry;
+pub mod shard;
+
+pub use registry::{Admission, ClientEntry, Registry};
+pub use shard::{ServerStats, Shard, ShardSizes};
+
+use crate::cluster::placement::PlacementPolicy;
+use crate::coordinator::fikit::DEFAULT_EPSILON;
+use crate::core::{Duration, Result, SimTime, TaskKey};
+use crate::hook::protocol::{ClientMsg, SchedulerMsg};
+use crate::hook::transport::ServerTransport;
+use crate::profile::ProfileStore;
+use std::net::SocketAddr;
+use std::time::{Duration as StdDuration, Instant};
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// GPU devices served — one shard each.
+    pub devices: usize,
+    /// Concurrent services a device may host (admission bound).
+    pub capacity: usize,
+    /// Placement policy routing services to shards.
+    pub policy: PlacementPolicy,
+    /// Small-gap threshold ε.
+    pub epsilon: Duration,
+    /// Runs required before a profile counts as ready.
+    pub min_profile_runs: u32,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> DaemonConfig {
+        DaemonConfig {
+            devices: 1,
+            capacity: 32,
+            policy: PlacementPolicy::LeastLoaded,
+            epsilon: DEFAULT_EPSILON,
+            min_profile_runs: 1,
+        }
+    }
+}
+
+/// Wire/routing counters (the shards keep the scheduling counters).
+#[derive(Debug, Clone, Default)]
+pub struct DaemonStats {
+    /// Datagrams that failed to decode.
+    pub decode_errors: u64,
+    /// Retransmits absorbed by the dedup layer (reply re-sent or stale
+    /// frame dropped; side effects not re-executed).
+    pub duplicates: u64,
+    /// Non-`Register` messages from services with no registry entry.
+    pub unknown_service: u64,
+    /// `Register` attempts turned away because every device was full.
+    pub rejected_capacity: u64,
+    /// Releases minted by a shard whose client had vanished by routing
+    /// time — previously dropped silently in `pump_fills`, now counted.
+    pub releases_unroutable: u64,
+}
+
+/// The sharded scheduler daemon: registry + one shard per device.
+pub struct SchedulerDaemon {
+    cfg: DaemonConfig,
+    profiles: ProfileStore,
+    registry: Registry,
+    shards: Vec<Shard>,
+    stats: DaemonStats,
+    epoch: Instant,
+}
+
+impl SchedulerDaemon {
+    pub fn new(cfg: DaemonConfig, profiles: ProfileStore) -> SchedulerDaemon {
+        assert!(cfg.devices > 0, "daemon needs at least one device");
+        let registry = Registry::new(cfg.devices, cfg.capacity, cfg.policy);
+        let shards = (0..cfg.devices).map(|_| Shard::new(cfg.epsilon)).collect();
+        SchedulerDaemon {
+            cfg,
+            profiles,
+            registry,
+            shards,
+            stats: DaemonStats::default(),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Wire/routing counters.
+    pub fn stats(&self) -> &DaemonStats {
+        &self.stats
+    }
+
+    /// One shard's scheduling counters.
+    pub fn shard_stats(&self, device: usize) -> &ServerStats {
+        self.shards[device].stats()
+    }
+
+    /// Fleet-wide scheduling counters (field-wise sum over shards).
+    pub fn stats_total(&self) -> ServerStats {
+        let mut total = ServerStats::default();
+        for s in &self.shards {
+            total.add(s.stats());
+        }
+        total
+    }
+
+    /// Number of shards (devices).
+    pub fn devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard hosting `key`, if registered.
+    pub fn shard_of(&self, key: &TaskKey) -> Option<usize> {
+        self.registry.get(key).map(|e| e.shard)
+    }
+
+    /// Fill windows currently open across the fleet.
+    pub fn open_windows(&self) -> usize {
+        self.shards.iter().filter(|s| s.window_open()).count()
+    }
+
+    /// Map sizes per shard (leak probes for tests).
+    pub fn shard_sizes(&self) -> Vec<ShardSizes> {
+        self.shards.iter().map(Shard::sizes).collect()
+    }
+
+    /// Registered clients.
+    pub fn clients(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Direct access for tests that probe a shard.
+    pub fn shard(&self, device: usize) -> &Shard {
+        &self.shards[device]
+    }
+
+    fn now(&self) -> SimTime {
+        SimTime(self.epoch.elapsed().as_nanos() as u64)
+    }
+
+    /// Serve datagrams from `transport` until `deadline` elapses
+    /// (`None` = forever). With `exit_when_drained`, also return once
+    /// every client that ever registered has disconnected — the clean
+    /// shutdown tests and `LossyNet` runs use.
+    pub fn serve<T: ServerTransport>(
+        &mut self,
+        transport: &T,
+        deadline: Option<StdDuration>,
+        exit_when_drained: bool,
+    ) -> Result<()> {
+        let start = Instant::now();
+        let mut had_clients = false;
+        loop {
+            if let Some(d) = deadline {
+                if start.elapsed() >= d {
+                    return Ok(());
+                }
+            }
+            if exit_when_drained && had_clients && self.registry.is_empty() {
+                return Ok(());
+            }
+            match transport.recv_from(StdDuration::from_millis(20))? {
+                Some((buf, addr)) => {
+                    for (to, reply) in self.handle_datagram(&buf, addr) {
+                        if let Ok(bytes) = reply.encode() {
+                            transport.send_to(&bytes, to).ok();
+                        }
+                    }
+                    had_clients |= !self.registry.is_empty();
+                }
+                None => continue,
+            }
+        }
+    }
+
+    /// Decode one datagram and handle it; returns the replies to send.
+    pub fn handle_datagram(
+        &mut self,
+        buf: &[u8],
+        addr: SocketAddr,
+    ) -> Vec<(SocketAddr, SchedulerMsg)> {
+        match ClientMsg::decode_seq(buf) {
+            Ok((msg_seq, msg)) => self.handle(msg_seq, msg, addr),
+            Err(e) => {
+                self.stats.decode_errors += 1;
+                vec![(
+                    addr,
+                    SchedulerMsg::Error {
+                        message: e.to_string(),
+                    },
+                )]
+            }
+        }
+    }
+
+    /// Handle one decoded message; returns the replies to send. The
+    /// dedup layer makes every retransmit (same `msg_seq`) safe: the
+    /// cached reply is re-sent and side effects are not re-executed.
+    pub fn handle(
+        &mut self,
+        msg_seq: u64,
+        msg: ClientMsg,
+        addr: SocketAddr,
+    ) -> Vec<(SocketAddr, SchedulerMsg)> {
+        let msg = match msg {
+            ClientMsg::Register {
+                task_key,
+                priority,
+                has_symbols,
+                model,
+            } => {
+                return self.handle_register(msg_seq, task_key, priority, has_symbols, model, addr)
+            }
+            other => other,
+        };
+
+        let key = msg.task_key().clone();
+        let Some(entry) = self.registry.get_mut(&key) else {
+            // Disconnect for an unknown service is already done — ack it
+            // so a client whose first Disconnect datagram was processed
+            // (but whose ack was dropped) converges on retransmit.
+            if matches!(msg, ClientMsg::Disconnect { .. }) {
+                return vec![(addr, SchedulerMsg::Ack { msg_seq })];
+            }
+            self.stats.unknown_service += 1;
+            return vec![(
+                addr,
+                SchedulerMsg::Error {
+                    message: format!("service {:?} is not registered", key.as_str()),
+                },
+            )];
+        };
+        if msg_seq < entry.last_msg_seq {
+            self.stats.duplicates += 1;
+            return Vec::new(); // stale straggler
+        }
+        if msg_seq == entry.last_msg_seq {
+            // Retransmit: re-send what the original processing answered.
+            self.stats.duplicates += 1;
+            let to = entry.addr;
+            return entry.last_replies.iter().cloned().map(|m| (to, m)).collect();
+        }
+        entry.last_msg_seq = msg_seq;
+        entry.addr = addr;
+        let (shard_idx, prio) = (entry.shard, entry.priority);
+        let now = self.now();
+
+        let produced: Vec<SchedulerMsg> = match msg {
+            ClientMsg::Register { .. } => unreachable!("handled above"),
+            ClientMsg::TaskStart { task_key, .. } => {
+                self.shards[shard_idx].task_start(&task_key, prio);
+                vec![SchedulerMsg::Ack { msg_seq }]
+            }
+            ClientMsg::TaskEnd { task_key, .. } => {
+                // Seqs may be reused by the service's next task.
+                if let Some(e) = self.registry.get_mut(&task_key) {
+                    e.released.clear();
+                }
+                let mut out = self.shards[shard_idx].task_end(&task_key);
+                out.push(SchedulerMsg::Ack { msg_seq });
+                out
+            }
+            ClientMsg::Launch {
+                task_key,
+                task_id,
+                kernel_name,
+                grid,
+                block,
+                seq,
+                ..
+            } => {
+                let kernel = crate::hook::client::kernel_id_from_wire(&kernel_name, grid, block);
+                self.shards[shard_idx].launch(
+                    &task_key,
+                    prio,
+                    task_id,
+                    kernel,
+                    seq,
+                    &self.profiles,
+                    now,
+                )
+            }
+            ClientMsg::Completion { task_key, seq, .. } => {
+                let mut out =
+                    self.shards[shard_idx].completion(&task_key, seq, &self.profiles, now);
+                out.push(SchedulerMsg::Ack { msg_seq });
+                out
+            }
+            ClientMsg::Disconnect { task_key } => {
+                self.registry.disconnect(&task_key);
+                let mut out = self.shards[shard_idx].disconnect(&task_key);
+                out.push(SchedulerMsg::Ack { msg_seq });
+                out
+            }
+            ClientMsg::ReleaseQuery { task_key, seq } => {
+                // Pure query — answered from the released record / queue
+                // state, no side effects.
+                let entry = self.registry.get(&task_key).expect("checked above");
+                if entry.released.contains(&seq) {
+                    vec![SchedulerMsg::LaunchNow {
+                        task_key,
+                        task_id: crate::core::TaskId(0),
+                        seq,
+                    }]
+                } else if self.shards[shard_idx].is_queued(&task_key, seq) {
+                    vec![SchedulerMsg::Hold {
+                        task_key,
+                        task_id: crate::core::TaskId(0),
+                        seq,
+                    }]
+                } else {
+                    vec![SchedulerMsg::Error {
+                        message: format!("launch seq {seq} is unknown (never held or purged)"),
+                    }]
+                }
+            }
+        };
+        self.route(&key, msg_seq, addr, produced)
+    }
+
+    fn handle_register(
+        &mut self,
+        msg_seq: u64,
+        task_key: TaskKey,
+        priority: crate::core::Priority,
+        has_symbols: bool,
+        model: Option<String>,
+        addr: SocketAddr,
+    ) -> Vec<(SocketAddr, SchedulerMsg)> {
+        // Retransmit / straggler handling. From the SAME address, only a
+        // Register with msg_seq > last is a genuine (in-session)
+        // re-registration: an equal sequence is a byte-identical
+        // retransmit (replay the cached reply), and a smaller one is a
+        // delayed duplicate from earlier in the session — processing it
+        // would rewind the dedup baseline and wipe the released-seq
+        // record mid-task, so it is dropped. A DIFFERENT address is a
+        // restarted client and is always processed (its initial msg_seq
+        // may collide with the old session's).
+        if let Some(entry) = self.registry.get(&task_key) {
+            if entry.addr == addr && msg_seq <= entry.last_msg_seq {
+                self.stats.duplicates += 1;
+                if msg_seq == entry.last_msg_seq {
+                    let to = entry.addr;
+                    return entry.last_replies.iter().cloned().map(|m| (to, m)).collect();
+                }
+                return Vec::new(); // stale straggler
+            }
+        }
+        match self
+            .registry
+            .register(&task_key, priority, model.as_deref(), addr, msg_seq)
+        {
+            Admission::Rejected => {
+                self.stats.rejected_capacity += 1;
+                vec![(
+                    addr,
+                    SchedulerMsg::Error {
+                        message: format!(
+                            "fleet at capacity ({} devices × {} services)",
+                            self.cfg.devices, self.cfg.capacity
+                        ),
+                    },
+                )]
+            }
+            Admission::Placed(shard) | Admission::Refreshed(shard) => {
+                self.shards[shard].stats_mut().registered += 1;
+                // Without exported symbols kernels cannot be identified —
+                // profiles would be meaningless (paper §3.2), so such
+                // services never reach sharing stage.
+                let sharing = has_symbols
+                    && self
+                        .profiles
+                        .has_ready(&task_key, self.cfg.min_profile_runs);
+                let reply = SchedulerMsg::Registered {
+                    task_key: task_key.clone(),
+                    sharing_stage: sharing,
+                };
+                self.route(&task_key, msg_seq, addr, vec![reply])
+            }
+        }
+    }
+
+    /// Address each produced message: by its own task key for
+    /// `LaunchNow`/`Hold`/`Registered`, to the sender for `Ack`/`Error`.
+    /// Messages addressed to the sender are cached for retransmit
+    /// replay; `LaunchNow` routing records the seq in the target's
+    /// released set (the `ReleaseQuery` answer book).
+    fn route(
+        &mut self,
+        sender: &TaskKey,
+        msg_seq: u64,
+        sender_addr: SocketAddr,
+        produced: Vec<SchedulerMsg>,
+    ) -> Vec<(SocketAddr, SchedulerMsg)> {
+        let mut out = Vec::with_capacity(produced.len());
+        let mut sender_replies = Vec::new();
+        for msg in produced {
+            let target_key = match &msg {
+                SchedulerMsg::Registered { task_key, .. }
+                | SchedulerMsg::LaunchNow { task_key, .. }
+                | SchedulerMsg::Hold { task_key, .. } => Some(task_key.clone()),
+                SchedulerMsg::Ack { .. } | SchedulerMsg::Error { .. } => None,
+            };
+            let to = match &target_key {
+                Some(k) => {
+                    if let SchedulerMsg::LaunchNow { seq, .. } = &msg {
+                        if let Some(e) = self.registry.get_mut(k) {
+                            e.released.insert(*seq);
+                        }
+                    }
+                    match self.registry.get(k) {
+                        Some(e) => e.addr,
+                        None => {
+                            // Client vanished between minting and routing
+                            // — count it instead of losing it silently.
+                            self.stats.releases_unroutable += 1;
+                            continue;
+                        }
+                    }
+                }
+                None => sender_addr,
+            };
+            if target_key.as_ref() == Some(sender) || target_key.is_none() {
+                sender_replies.push(msg.clone());
+            }
+            out.push((to, msg));
+        }
+        if let Some(entry) = self.registry.get_mut(sender) {
+            if entry.last_msg_seq == msg_seq {
+                entry.last_replies = sender_replies;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, Duration, KernelId, Priority, SimTime, TaskId};
+    use crate::profile::TaskProfile;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(4), Dim3::x(64))
+    }
+
+    fn profiles() -> ProfileStore {
+        let mut profiles = ProfileStore::new();
+        let mut hi = TaskProfile::new(TaskKey::new("hi"));
+        hi.record(&kid("hk"), Duration::from_micros(200), Some(Duration::from_millis(2)));
+        hi.finish_run(1);
+        profiles.insert(hi);
+        let mut lo = TaskProfile::new(TaskKey::new("lo"));
+        lo.record(&kid("lk"), Duration::from_micros(400), Some(Duration::from_micros(20)));
+        lo.finish_run(1);
+        profiles.insert(lo);
+        profiles
+    }
+
+    fn daemon(devices: usize) -> SchedulerDaemon {
+        SchedulerDaemon::new(
+            DaemonConfig {
+                devices,
+                ..Default::default()
+            },
+            profiles(),
+        )
+    }
+
+    /// Drive a message with an auto-incrementing per-client counter.
+    struct Driver {
+        seqs: std::collections::HashMap<TaskKey, u64>,
+    }
+
+    impl Driver {
+        fn new() -> Driver {
+            Driver {
+                seqs: std::collections::HashMap::new(),
+            }
+        }
+
+        fn send(
+            &mut self,
+            d: &mut SchedulerDaemon,
+            msg: ClientMsg,
+            from: SocketAddr,
+        ) -> Vec<(SocketAddr, SchedulerMsg)> {
+            let seq = self.seqs.entry(msg.task_key().clone()).or_insert(0);
+            *seq += 1;
+            d.handle(*seq, msg, from)
+        }
+    }
+
+    fn register(key: &str, prio: Priority) -> ClientMsg {
+        ClientMsg::Register {
+            task_key: TaskKey::new(key),
+            priority: prio,
+            has_symbols: true,
+            model: None,
+        }
+    }
+
+    fn task_start(key: &str) -> ClientMsg {
+        ClientMsg::TaskStart {
+            task_key: TaskKey::new(key),
+            task_id: TaskId(0),
+        }
+    }
+
+    fn launch_msg(key: &str, kernel: &str, seq: u32) -> ClientMsg {
+        ClientMsg::Launch {
+            task_key: TaskKey::new(key),
+            task_id: TaskId(0),
+            kernel_name: kernel.to_string(),
+            grid: Dim3::x(4),
+            block: Dim3::x(64),
+            seq,
+            issued_at: SimTime::ZERO,
+        }
+    }
+
+    fn completion(key: &str, seq: u32) -> ClientMsg {
+        ClientMsg::Completion {
+            task_key: TaskKey::new(key),
+            task_id: TaskId(0),
+            seq,
+            exec: Duration::from_micros(200),
+            finished_at: SimTime(1),
+        }
+    }
+
+    #[test]
+    fn register_reports_stage() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        let r = drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        assert!(matches!(
+            r[0].1,
+            SchedulerMsg::Registered { sharing_stage: true, .. }
+        ));
+        // Unknown service → measurement stage.
+        let r = drv.send(&mut d, register("new", Priority::P5), addr(9002));
+        assert!(matches!(
+            r[0].1,
+            SchedulerMsg::Registered { sharing_stage: false, .. }
+        ));
+        // No symbols → never sharing stage, even with a profile.
+        let r = d.handle(
+            99,
+            ClientMsg::Register {
+                task_key: TaskKey::new("hi"),
+                priority: Priority::P0,
+                has_symbols: false,
+                model: None,
+            },
+            addr(9001),
+        );
+        assert!(matches!(
+            r[0].1,
+            SchedulerMsg::Registered { sharing_stage: false, .. }
+        ));
+    }
+
+    #[test]
+    fn priority_hold_window_release_and_stats() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
+            drv.send(&mut d, register(key, prio), addr(port));
+            drv.send(&mut d, task_start(key), addr(port));
+        }
+        // Holder launch → immediate release.
+        let r = drv.send(&mut d, launch_msg("hi", "hk", 0), addr(9001));
+        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
+        // Low-priority launch → held.
+        let r = drv.send(&mut d, launch_msg("lo", "lk", 0), addr(9002));
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
+        assert_eq!(d.shard_stats(0).holds, 1);
+        // Holder kernel completes → window opens → held launch released
+        // to lo's address (plus the Ack to hi).
+        let r = drv.send(&mut d, completion("hi", 0), addr(9001));
+        let released: Vec<_> = r
+            .iter()
+            .filter(|(_, m)| matches!(m, SchedulerMsg::LaunchNow { .. }))
+            .collect();
+        assert_eq!(released.len(), 1);
+        assert_eq!(released[0].0, addr(9002));
+        assert!(r.iter().any(|(to, m)| matches!(m, SchedulerMsg::Ack { .. }) && *to == addr(9001)));
+        assert_eq!(d.shard_stats(0).windows, 1);
+        assert_eq!(d.shard_stats(0).releases_filled, 1);
+        assert_eq!(d.shard_stats(0).releases_drained, 0);
+        assert_eq!(
+            d.shard_sizes()[0].launched_kernels,
+            0,
+            "the completion consumed its lookup entry (map bounded by in-flight kernels)"
+        );
+        // Next holder launch with the window still open → early stop.
+        let r = drv.send(&mut d, launch_msg("hi", "hk", 1), addr(9001));
+        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
+        assert_eq!(d.shard_stats(0).early_stops, 1);
+    }
+
+    #[test]
+    fn task_end_drain_counts_as_drained_not_filled() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
+            drv.send(&mut d, register(key, prio), addr(port));
+            drv.send(&mut d, task_start(key), addr(port));
+        }
+        drv.send(&mut d, launch_msg("lo", "lk", 3), addr(9002));
+        // Holder finishes its task: lo becomes holder, gets released.
+        let r = drv.send(
+            &mut d,
+            ClientMsg::TaskEnd {
+                task_key: TaskKey::new("hi"),
+                task_id: TaskId(0),
+            },
+            addr(9001),
+        );
+        assert!(r
+            .iter()
+            .any(|(to, m)| matches!(m, SchedulerMsg::LaunchNow { seq: 3, .. }) && *to == addr(9002)));
+        let s = d.shard_stats(0);
+        assert_eq!(s.releases_drained, 1, "drain released it");
+        assert_eq!(s.releases_filled, 0, "no window was involved");
+    }
+
+    #[test]
+    fn unregistered_sender_gets_error_not_queue_entry() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        drv.send(&mut d, task_start("hi"), addr(9001));
+        let r = drv.send(&mut d, launch_msg("ghost", "gk", 0), addr(9009));
+        assert!(matches!(r[0].1, SchedulerMsg::Error { .. }));
+        assert_eq!(d.stats().unknown_service, 1);
+        assert_eq!(d.shard_sizes()[0].queued, 0, "hostile traffic parks nothing");
+    }
+
+    #[test]
+    fn duplicate_task_start_is_idempotent() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        drv.send(&mut d, task_start("hi"), addr(9001));
+        // Same msg_seq (true retransmit): dedup layer absorbs it.
+        let r = d.handle(2, task_start("hi"), addr(9001));
+        assert!(matches!(r[0].1, SchedulerMsg::Ack { .. }), "cached ack re-sent");
+        assert_eq!(d.stats().duplicates, 1);
+        // New msg_seq but semantically duplicate: shard guard absorbs it.
+        drv.send(&mut d, task_start("hi"), addr(9001));
+        assert_eq!(d.shard_stats(0).duplicate_task_starts, 1);
+        assert_eq!(d.shard_sizes()[0].active, 1, "active set never double-pushed");
+    }
+
+    #[test]
+    fn duplicate_launch_retransmit_does_not_double_park() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
+            drv.send(&mut d, register(key, prio), addr(port));
+            drv.send(&mut d, task_start(key), addr(port));
+        }
+        let r = drv.send(&mut d, launch_msg("lo", "lk", 0), addr(9002));
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
+        // Retransmit (same msg_seq = 3): cached Hold resent, not re-parked.
+        let r = d.handle(3, launch_msg("lo", "lk", 0), addr(9002));
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
+        assert_eq!(d.shard_sizes()[0].queued, 1, "parked exactly once");
+        assert_eq!(d.shard_stats(0).launches, 1, "side effects not re-executed");
+        // Duplicate holder Launch: immediate release replayed, stats flat.
+        let r = drv.send(&mut d, launch_msg("hi", "hk", 0), addr(9001));
+        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
+        let immediate_before = d.shard_stats(0).releases_immediate;
+        let r = d.handle(3, launch_msg("hi", "hk", 0), addr(9001));
+        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
+        assert_eq!(d.shard_stats(0).releases_immediate, immediate_before);
+        assert_eq!(d.shard_sizes()[0].launched_kernels, 1);
+    }
+
+    #[test]
+    fn holder_disconnect_mid_window_promotes_and_purges() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
+            drv.send(&mut d, register(key, prio), addr(port));
+            drv.send(&mut d, task_start(key), addr(port));
+        }
+        // hi launches seq 0; its completion opens a 2ms window. lo then
+        // parks a launch (released through the window if the wall clock
+        // cooperates, drained on promotion otherwise — both paths are
+        // asserted by the conservation check below).
+        drv.send(&mut d, launch_msg("hi", "hk", 0), addr(9001));
+        drv.send(&mut d, completion("hi", 0), addr(9001));
+        assert!(d.shard(0).window_open(), "window open mid-scenario");
+        drv.send(&mut d, launch_msg("lo", "lk", 7), addr(9002));
+        let r = drv.send(
+            &mut d,
+            ClientMsg::Disconnect {
+                task_key: TaskKey::new("hi"),
+            },
+            addr(9001),
+        );
+        // hi's window is gone, lo was promoted and its parked launch (if
+        // the window had not already released it) drained.
+        assert!(!d.shard(0).window_open(), "stale window cleared");
+        assert_eq!(d.clients(), 1);
+        let sizes = d.shard_sizes()[0];
+        assert_eq!(sizes.queued, 0, "no orphaned launches");
+        assert_eq!(
+            sizes.launched_kernels, 0,
+            "holder's completion-lookup entries purged"
+        );
+        // Every parked lo launch was released one way or the other.
+        let s = d.shard_stats(0);
+        assert_eq!(s.holds, s.releases_filled + s.releases_drained);
+        assert!(r.iter().any(|(_, m)| matches!(m, SchedulerMsg::Ack { .. })));
+    }
+
+    #[test]
+    fn orphaned_held_launches_are_purged_on_disconnect() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
+            drv.send(&mut d, register(key, prio), addr(port));
+            drv.send(&mut d, task_start(key), addr(port));
+        }
+        for seq in 0..4 {
+            drv.send(&mut d, launch_msg("lo", "lk", seq), addr(9002));
+        }
+        assert_eq!(d.shard_sizes()[0].queued, 4);
+        // lo leaves without waiting: its parked launches must not sit in
+        // the queues forever.
+        drv.send(
+            &mut d,
+            ClientMsg::Disconnect {
+                task_key: TaskKey::new("lo"),
+            },
+            addr(9002),
+        );
+        assert_eq!(d.shard_sizes()[0].queued, 0);
+        assert_eq!(d.shard_stats(0).purged_launches, 4);
+    }
+
+    #[test]
+    fn launched_kernels_purged_on_task_end() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        drv.send(&mut d, task_start("hi"), addr(9001));
+        for seq in 0..16 {
+            drv.send(&mut d, launch_msg("hi", "hk", seq), addr(9001));
+        }
+        assert_eq!(d.shard_sizes()[0].launched_kernels, 16);
+        drv.send(
+            &mut d,
+            ClientMsg::TaskEnd {
+                task_key: TaskKey::new("hi"),
+                task_id: TaskId(0),
+            },
+            addr(9001),
+        );
+        assert_eq!(
+            d.shard_sizes()[0].launched_kernels,
+            0,
+            "the per-(service,seq) map must not grow without bound"
+        );
+    }
+
+    #[test]
+    fn release_query_answers_from_record_queue_or_error() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
+            drv.send(&mut d, register(key, prio), addr(port));
+            drv.send(&mut d, task_start(key), addr(port));
+        }
+        drv.send(&mut d, launch_msg("lo", "lk", 0), addr(9002));
+        // Still parked → Hold.
+        let r = drv.send(
+            &mut d,
+            ClientMsg::ReleaseQuery {
+                task_key: TaskKey::new("lo"),
+                seq: 0,
+            },
+            addr(9002),
+        );
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { seq: 0, .. }));
+        // Window releases it → LaunchNow replayed from the record.
+        drv.send(&mut d, launch_msg("hi", "hk", 0), addr(9001));
+        drv.send(&mut d, completion("hi", 0), addr(9001));
+        let r = drv.send(
+            &mut d,
+            ClientMsg::ReleaseQuery {
+                task_key: TaskKey::new("lo"),
+                seq: 0,
+            },
+            addr(9002),
+        );
+        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { seq: 0, .. }));
+        // Never-held seq → Error.
+        let r = drv.send(
+            &mut d,
+            ClientMsg::ReleaseQuery {
+                task_key: TaskKey::new("lo"),
+                seq: 55,
+            },
+            addr(9002),
+        );
+        assert!(matches!(r[0].1, SchedulerMsg::Error { .. }));
+    }
+
+    /// The `--devices 2` acceptance shape: two high/low pairs land on
+    /// different devices and fill independently — two concurrent windows
+    /// observable in stats, one fill each, no cross-device interference.
+    #[test]
+    fn two_devices_fill_independently() {
+        let mut profiles = ProfileStore::new();
+        for key in ["hi1", "hi2"] {
+            let mut p = TaskProfile::new(TaskKey::new(key));
+            p.record(&kid("hk"), Duration::from_micros(200), Some(Duration::from_millis(2)));
+            p.finish_run(1);
+            profiles.insert(p);
+        }
+        for key in ["lo1", "lo2"] {
+            let mut p = TaskProfile::new(TaskKey::new(key));
+            p.record(&kid("lk"), Duration::from_micros(400), Some(Duration::from_micros(20)));
+            p.finish_run(1);
+            profiles.insert(p);
+        }
+        let mut d = SchedulerDaemon::new(
+            DaemonConfig {
+                devices: 2,
+                capacity: 2,
+                ..Default::default()
+            },
+            profiles,
+        );
+        let mut drv = Driver::new();
+        // LeastLoaded with equal demands alternates devices: hi1→0,
+        // hi2→1, lo1→0, lo2→1.
+        for (i, (key, prio)) in [
+            ("hi1", Priority::P0),
+            ("hi2", Priority::P0),
+            ("lo1", Priority::P5),
+            ("lo2", Priority::P5),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            drv.send(&mut d, register(key, prio), addr(9001 + i as u16));
+            drv.send(&mut d, task_start(key), addr(9001 + i as u16));
+        }
+        assert_eq!(d.shard_of(&TaskKey::new("hi1")), Some(0));
+        assert_eq!(d.shard_of(&TaskKey::new("hi2")), Some(1));
+        assert_eq!(d.shard_of(&TaskKey::new("lo1")), Some(0));
+        assert_eq!(d.shard_of(&TaskKey::new("lo2")), Some(1));
+        // Holders launch immediately; each device's low service parks.
+        drv.send(&mut d, launch_msg("hi1", "hk", 0), addr(9001));
+        drv.send(&mut d, launch_msg("hi2", "hk", 0), addr(9002));
+        let r = drv.send(&mut d, launch_msg("lo1", "lk", 0), addr(9003));
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
+        let r = drv.send(&mut d, launch_msg("lo2", "lk", 0), addr(9004));
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
+        // Both holders complete → two windows open concurrently, each
+        // filling its own device's parked launch.
+        let r = drv.send(&mut d, completion("hi1", 0), addr(9001));
+        assert!(r
+            .iter()
+            .any(|(to, m)| matches!(m, SchedulerMsg::LaunchNow { .. }) && *to == addr(9003)));
+        let r = drv.send(&mut d, completion("hi2", 0), addr(9002));
+        assert!(r
+            .iter()
+            .any(|(to, m)| matches!(m, SchedulerMsg::LaunchNow { .. }) && *to == addr(9004)));
+        assert_eq!(d.open_windows(), 2, "two concurrent windows, one per device");
+        for device in [0, 1] {
+            let s = d.shard_stats(device);
+            assert_eq!(s.windows, 1);
+            assert_eq!(s.holds, 1);
+            assert_eq!(s.releases_filled, 1);
+        }
+    }
+
+    /// A delayed duplicate of an old Register (same address, old
+    /// msg_seq) must not rewind the dedup baseline or wipe session
+    /// state; a genuinely restarted client (new address, colliding
+    /// msg_seq) must be processed.
+    #[test]
+    fn stale_mid_session_register_duplicate_is_dropped() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001)); // msg_seq 1
+        drv.send(&mut d, task_start("hi"), addr(9001)); // msg_seq 2
+        drv.send(&mut d, launch_msg("hi", "hk", 0), addr(9001)); // msg_seq 3
+        let r = d.handle(1, register("hi", Priority::P0), addr(9001));
+        assert!(r.is_empty(), "stale Register straggler dropped");
+        assert_eq!(d.stats().duplicates, 1);
+        // Dedup baseline intact: the Launch retransmit is still replayed
+        // from cache, not re-executed.
+        let r = d.handle(3, launch_msg("hi", "hk", 0), addr(9001));
+        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
+        assert_eq!(d.shard_stats(0).launches, 1);
+        // Restarted client, new socket, colliding initial msg_seq →
+        // processed and answered at the NEW address.
+        let r = d.handle(1, register("hi", Priority::P0), addr(9005));
+        assert!(matches!(r[0].1, SchedulerMsg::Registered { .. }));
+        assert_eq!(r[0].0, addr(9005));
+    }
+
+    #[test]
+    fn capacity_rejection_is_counted_and_replied() {
+        let mut d = SchedulerDaemon::new(
+            DaemonConfig {
+                devices: 1,
+                capacity: 1,
+                ..Default::default()
+            },
+            profiles(),
+        );
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        let r = drv.send(&mut d, register("lo", Priority::P4), addr(9002));
+        assert!(matches!(r[0].1, SchedulerMsg::Error { .. }));
+        assert_eq!(d.stats().rejected_capacity, 1);
+        assert_eq!(d.clients(), 1);
+    }
+}

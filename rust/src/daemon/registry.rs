@@ -1,0 +1,234 @@
+//! Service admission and shard routing (DESIGN.md §Daemon).
+//!
+//! The registry is the daemon's client table: one entry per registered
+//! hook client, carrying its reply address, priority, assigned shard,
+//! retransmit-dedup state (`last_msg_seq` + cached replies) and the
+//! released-sequence record that answers `ReleaseQuery` polls.
+//!
+//! Placement goes through [`crate::cluster::placement::FleetState`] —
+//! the same capacity-aware incremental accounting the cluster simulator
+//! uses — so a service lands on a shard by policy (least-loaded by
+//! default, compatibility-scored `BestMatch` when model hints are
+//! given), and a full fleet rejects admission instead of oversubscribing
+//! a device.
+
+use crate::cluster::compat::CompatMatrix;
+use crate::cluster::placement::{FleetState, PlacementPolicy, Resident};
+use crate::core::{Priority, TaskKey};
+use crate::hook::protocol::SchedulerMsg;
+use crate::workload::ModelKind;
+use std::collections::{HashMap, HashSet};
+use std::net::SocketAddr;
+
+/// Fallback demand model when `Register` carries no model hint: a
+/// mid-weight classifier, so unhinted services still get sane
+/// load-balancing demand without biasing BestMatch scoring much.
+const DEFAULT_MODEL: ModelKind = ModelKind::Resnet50;
+
+/// One registered hook client.
+#[derive(Debug)]
+pub struct ClientEntry {
+    /// Latest reply address (re-registration updates it).
+    pub addr: SocketAddr,
+    pub priority: Priority,
+    /// Shard (device index) this service is placed on.
+    pub shard: usize,
+    /// Fleet resident id (for `FleetState::evict`).
+    pub service_id: u64,
+    /// Highest message sequence processed from this client.
+    pub last_msg_seq: u64,
+    /// Replies addressed to this client from processing `last_msg_seq`
+    /// — resent verbatim when the same sequence arrives again, without
+    /// re-executing side effects.
+    pub last_replies: Vec<SchedulerMsg>,
+    /// Kernel seqs already released to this client (immediate, filled or
+    /// drained). Answers `ReleaseQuery` when the release datagram was
+    /// dropped. Cleared on `TaskEnd` (seqs may be reused by the next
+    /// task); the whole entry goes on `Disconnect`.
+    pub released: HashSet<u32>,
+}
+
+/// What `Register` resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Newly placed onto this shard.
+    Placed(usize),
+    /// Already registered; kept its shard (address/priority refreshed).
+    Refreshed(usize),
+    /// Every device is at capacity — the service was turned away.
+    Rejected,
+}
+
+/// The daemon's client table + fleet capacity accounting.
+pub struct Registry {
+    clients: HashMap<TaskKey, ClientEntry>,
+    fleet: FleetState,
+    policy: PlacementPolicy,
+    compat: CompatMatrix,
+    next_service_id: u64,
+}
+
+impl Registry {
+    pub fn new(devices: usize, capacity: usize, policy: PlacementPolicy) -> Registry {
+        Registry {
+            clients: HashMap::new(),
+            fleet: FleetState::new(devices, capacity),
+            policy,
+            compat: CompatMatrix::new(),
+            next_service_id: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    pub fn get(&self, key: &TaskKey) -> Option<&ClientEntry> {
+        self.clients.get(key)
+    }
+
+    pub fn get_mut(&mut self, key: &TaskKey) -> Option<&mut ClientEntry> {
+        self.clients.get_mut(key)
+    }
+
+    /// Services currently resident across the fleet (capacity view).
+    pub fn total_residents(&self) -> usize {
+        self.fleet.total_residents()
+    }
+
+    /// Admit (or refresh) a service. A new service is placed by policy
+    /// through the fleet's capacity accounting; re-registration keeps
+    /// the shard and refreshes address/priority — so `Register`
+    /// retransmits and client restarts are idempotent with respect to
+    /// placement.
+    pub fn register(
+        &mut self,
+        key: &TaskKey,
+        priority: Priority,
+        model_hint: Option<&str>,
+        addr: SocketAddr,
+        msg_seq: u64,
+    ) -> Admission {
+        let model = model_hint
+            .and_then(|m| m.parse::<ModelKind>().ok())
+            .unwrap_or(DEFAULT_MODEL);
+        if let Some(entry) = self.clients.get_mut(key) {
+            entry.addr = addr;
+            entry.priority = priority;
+            // A fresh Register starts a new client session: accept its
+            // msg_seq as the new baseline (a restarted client restarts
+            // its counter).
+            entry.last_msg_seq = msg_seq;
+            entry.last_replies.clear();
+            entry.released.clear();
+            // Keep the fleet's capacity/compat accounting in step with
+            // the announced parameters — the service keeps its device.
+            self.fleet.requalify(
+                entry.service_id,
+                model,
+                priority,
+                model.spec().mean_exec().as_millis_f64(),
+            );
+            return Admission::Refreshed(entry.shard);
+        }
+        let id = self.next_service_id;
+        let resident = Resident::per_task(id, model, priority);
+        let Some(shard) = self.fleet.place(self.policy, resident, &self.compat) else {
+            return Admission::Rejected;
+        };
+        self.next_service_id += 1;
+        self.clients.insert(
+            key.clone(),
+            ClientEntry {
+                addr,
+                priority,
+                shard,
+                service_id: id,
+                last_msg_seq: msg_seq,
+                last_replies: Vec::new(),
+                released: HashSet::new(),
+            },
+        );
+        Admission::Placed(shard)
+    }
+
+    /// Remove a departed service and free its fleet slot. Returns its
+    /// shard, or `None` if it was never registered (idempotent).
+    pub fn disconnect(&mut self, key: &TaskKey) -> Option<usize> {
+        let entry = self.clients.remove(key)?;
+        self.fleet.evict(entry.service_id);
+        Some(entry.shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    #[test]
+    fn placement_spreads_and_respects_capacity() {
+        let mut r = Registry::new(2, 1, PlacementPolicy::LeastLoaded);
+        assert_eq!(
+            r.register(&TaskKey::new("a"), Priority::P0, None, addr(1), 1),
+            Admission::Placed(0)
+        );
+        assert_eq!(
+            r.register(&TaskKey::new("b"), Priority::P4, None, addr(2), 1),
+            Admission::Placed(1)
+        );
+        // Fleet full → rejected, not oversubscribed.
+        assert_eq!(
+            r.register(&TaskKey::new("c"), Priority::P4, None, addr(3), 1),
+            Admission::Rejected
+        );
+        assert_eq!(r.total_residents(), 2);
+        // Departure frees the slot for the next arrival.
+        assert_eq!(r.disconnect(&TaskKey::new("a")), Some(0));
+        assert_eq!(r.disconnect(&TaskKey::new("a")), None, "idempotent");
+        assert_eq!(
+            r.register(&TaskKey::new("c"), Priority::P4, None, addr(3), 1),
+            Admission::Placed(0)
+        );
+    }
+
+    #[test]
+    fn re_registration_keeps_shard_and_resets_session() {
+        let mut r = Registry::new(2, 4, PlacementPolicy::LeastLoaded);
+        let Admission::Placed(shard) =
+            r.register(&TaskKey::new("a"), Priority::P3, Some("vgg16"), addr(1), 5)
+        else {
+            panic!("expected placement");
+        };
+        let entry = r.get_mut(&TaskKey::new("a")).unwrap();
+        entry.last_msg_seq = 40;
+        entry.released.insert(7);
+        // Client restarted: counter went backwards, address moved.
+        assert_eq!(
+            r.register(&TaskKey::new("a"), Priority::P2, Some("vgg16"), addr(9), 1),
+            Admission::Refreshed(shard)
+        );
+        let entry = r.get(&TaskKey::new("a")).unwrap();
+        assert_eq!(entry.addr, addr(9));
+        assert_eq!(entry.priority, Priority::P2);
+        assert_eq!(entry.last_msg_seq, 1, "new session baseline accepted");
+        assert!(entry.released.is_empty(), "stale releases dropped");
+        assert_eq!(r.total_residents(), 1, "no double-count in the fleet");
+    }
+
+    #[test]
+    fn unknown_model_hint_falls_back_to_default() {
+        let mut r = Registry::new(1, 2, PlacementPolicy::BestMatch);
+        assert_eq!(
+            r.register(&TaskKey::new("a"), Priority::P0, Some("no-such-model"), addr(1), 1),
+            Admission::Placed(0)
+        );
+    }
+}

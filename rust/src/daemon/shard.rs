@@ -1,0 +1,353 @@
+//! One per-GPU scheduling shard (DESIGN.md §Daemon).
+//!
+//! The shard is the old single-device `SchedulerServer` body made pure:
+//! it owns the device's `PriorityQueues`, `FillWindow`, `Interner`,
+//! active set and recently-launched-kernel map, and turns lifecycle /
+//! launch / completion events into [`SchedulerMsg`]s. It never touches a
+//! socket and never looks up client addresses — the daemon routes its
+//! outbound messages by task key — so every lifecycle path is unit- and
+//! integration-testable without timing.
+//!
+//! Lifecycle hygiene (the bugs this layer fixes over the old server):
+//!
+//! * `launched_kernels` entries are purged on `TaskEnd`/`Disconnect`
+//!   instead of accumulating per `(service, seq)` forever;
+//! * a disconnecting window-holder closes its `FillWindow`, its parked
+//!   launches are purged from the queues, and the next holder class is
+//!   promoted exactly like `TaskEnd` does;
+//! * duplicate `TaskStart` is idempotent (no double-push of the active
+//!   set);
+//! * holder-change drains are counted as `releases_drained`, not
+//!   `releases_filled` — fill-rate telemetry only counts real window
+//!   fills.
+
+use crate::coordinator::fikit::{fikit_fill, FillWindow};
+use crate::coordinator::queues::PriorityQueues;
+use crate::core::{
+    Duration, Interner, KernelId, KernelLaunch, Priority, SimTime, TaskHandle, TaskId, TaskKey,
+};
+use crate::hook::protocol::SchedulerMsg;
+use crate::profile::ProfileStore;
+use std::collections::HashMap;
+
+/// Counters exposed per shard (and summed fleet-wide by the daemon).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    /// `Register` messages placed onto this shard.
+    pub registered: u64,
+    /// `Launch` messages received.
+    pub launches: u64,
+    /// Launches released immediately (holder-class).
+    pub releases_immediate: u64,
+    /// Launches parked in the priority queues.
+    pub holds: u64,
+    /// Held launches released through fill windows (and only those —
+    /// the honest numerator of fill-rate telemetry).
+    pub releases_filled: u64,
+    /// Held launches released by a holder-class drain on `TaskEnd` /
+    /// `Disconnect` promotion (no window involved).
+    pub releases_drained: u64,
+    /// Parked launches purged because their service disconnected.
+    pub purged_launches: u64,
+    /// Duplicate `TaskStart` events ignored (already active).
+    pub duplicate_task_starts: u64,
+    /// Fill windows opened.
+    pub windows: u64,
+    /// Windows closed early by holder feedback.
+    pub early_stops: u64,
+}
+
+impl ServerStats {
+    /// Field-wise sum (fleet aggregation).
+    pub fn add(&mut self, other: &ServerStats) {
+        self.registered += other.registered;
+        self.launches += other.launches;
+        self.releases_immediate += other.releases_immediate;
+        self.holds += other.holds;
+        self.releases_filled += other.releases_filled;
+        self.releases_drained += other.releases_drained;
+        self.purged_launches += other.purged_launches;
+        self.duplicate_task_starts += other.duplicate_task_starts;
+        self.windows += other.windows;
+        self.early_stops += other.early_stops;
+    }
+}
+
+/// Map sizes of one shard — the leak probes the integration tests
+/// assert on ("zero daemon-side map growth after churn").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSizes {
+    /// Services currently in the active set.
+    pub active: usize,
+    /// Launches parked in the priority queues.
+    pub queued: usize,
+    /// `(service, seq) → kernel` entries awaiting a `Completion`.
+    pub launched_kernels: usize,
+    /// Interned task keys (append-only; bounded by distinct holder
+    /// services ever seen, NOT by traffic volume).
+    pub interned_tasks: usize,
+    /// Interned kernel ids (same bound).
+    pub interned_kernels: usize,
+}
+
+/// One device's scheduling state inside the daemon.
+pub struct Shard {
+    epsilon: Duration,
+    active: Vec<(TaskKey, Priority)>,
+    queues: PriorityQueues,
+    window: Option<FillWindow>,
+    /// Identity interner for fill-window holders. Only *holder* task
+    /// keys are interned (when a window opens — bounded by registered,
+    /// active services); arbitrary wire traffic must never mint handles,
+    /// or hostile/buggy clients could grow the interner without bound.
+    interner: Interner,
+    /// Kernel ids of recently released holder launches, so `Completion`
+    /// messages (which carry only task/seq) can look up the profiled
+    /// gap. Purged when the service's task ends or it disconnects.
+    launched_kernels: HashMap<(TaskKey, u32), KernelId>,
+    stats: ServerStats,
+}
+
+impl Shard {
+    pub fn new(epsilon: Duration) -> Shard {
+        Shard {
+            epsilon,
+            active: Vec::new(),
+            queues: PriorityQueues::new(),
+            window: None,
+            interner: Interner::new(),
+            launched_kernels: HashMap::new(),
+            stats: ServerStats::default(),
+        }
+    }
+
+    /// Counters accumulated so far.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    pub fn stats_mut(&mut self) -> &mut ServerStats {
+        &mut self.stats
+    }
+
+    /// Current map sizes (leak probes).
+    pub fn sizes(&self) -> ShardSizes {
+        ShardSizes {
+            active: self.active.len(),
+            queued: self.queues.len(),
+            launched_kernels: self.launched_kernels.len(),
+            interned_tasks: self.interner.task_count(),
+            interned_kernels: self.interner.kernel_count(),
+        }
+    }
+
+    /// Whether a fill window is currently open.
+    pub fn window_open(&self) -> bool {
+        self.window.is_some()
+    }
+
+    /// Whether a held launch of `key` with kernel sequence `seq` is
+    /// still parked here (`ReleaseQuery` recovery path).
+    pub fn is_queued(&self, key: &TaskKey, seq: u32) -> bool {
+        self.queues.contains(key, seq)
+    }
+
+    fn holder(&self) -> Option<(TaskKey, Priority)> {
+        self.active.iter().min_by_key(|(_, p)| *p).cloned()
+    }
+
+    /// A task (invocation) of `key` started. Idempotent: a retransmitted
+    /// or duplicate `TaskStart` never double-pushes the active set.
+    pub fn task_start(&mut self, key: &TaskKey, prio: Priority) {
+        if self.active.iter().any(|(k, _)| k == key) {
+            self.stats.duplicate_task_starts += 1;
+            return;
+        }
+        // Preemption: a higher-priority arrival invalidates the current
+        // window.
+        if let Some((_, hp)) = self.holder() {
+            if prio.is_higher_than(hp) {
+                self.window = None;
+            }
+        }
+        self.active.push((key.clone(), prio));
+    }
+
+    /// A task of `key` ended: retire it from the active set, drop its
+    /// completion-lookup entries and its window, then promote the new
+    /// holder class (their parked launches drain).
+    pub fn task_end(&mut self, key: &TaskKey) -> Vec<SchedulerMsg> {
+        self.active.retain(|(k, _)| k != key);
+        self.retire(key);
+        self.promote_holder_class()
+    }
+
+    /// `key`'s hook client disconnected: full lifecycle teardown — the
+    /// active entry, the window it may hold, its completion-lookup
+    /// entries AND its parked launches all go, then the new holder class
+    /// is promoted exactly like `TaskEnd`.
+    pub fn disconnect(&mut self, key: &TaskKey) -> Vec<SchedulerMsg> {
+        self.active.retain(|(k, _)| k != key);
+        self.retire(key);
+        let purged = self.queues.purge_where(|l| &l.task_key == key);
+        self.stats.purged_launches += purged.len() as u64;
+        self.promote_holder_class()
+    }
+
+    /// Shared `TaskEnd`/`Disconnect` teardown: completion-lookup purge
+    /// (the old `launched_kernels` leak) and window invalidation.
+    fn retire(&mut self, key: &TaskKey) {
+        self.launched_kernels.retain(|(k, _), _| k != key);
+        // Non-minting lookup: a key never interned cannot be the window
+        // holder, and minting here would let arbitrary wire traffic grow
+        // the interner unboundedly.
+        let ended: Option<TaskHandle> = self.interner.task_handle(key);
+        if self
+            .window
+            .as_ref()
+            .is_some_and(|w| Some(w.holder) == ended)
+        {
+            self.window = None;
+        }
+    }
+
+    /// Release every parked launch of the (new) holder class. Counted as
+    /// `releases_drained` — no fill window is involved.
+    fn promote_holder_class(&mut self) -> Vec<SchedulerMsg> {
+        let mut out = Vec::new();
+        if let Some((_, hp)) = self.holder() {
+            for req in self.queues.drain_at(hp) {
+                self.stats.releases_drained += 1;
+                out.push(SchedulerMsg::LaunchNow {
+                    task_key: req.launch.task_key.clone(),
+                    task_id: req.launch.task_id,
+                    seq: req.launch.seq,
+                });
+            }
+        }
+        out
+    }
+
+    /// An intercepted kernel launch arrived. Holder-class → immediate
+    /// release (plus feedback early-stop); otherwise park it and pump
+    /// the open window.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch(
+        &mut self,
+        key: &TaskKey,
+        prio: Priority,
+        task_id: TaskId,
+        kernel: KernelId,
+        seq: u32,
+        profiles: &ProfileStore,
+        now: SimTime,
+    ) -> Vec<SchedulerMsg> {
+        self.stats.launches += 1;
+        let holder = self.holder();
+        let holder_class = match &holder {
+            None => true,
+            Some((hk, hp)) => hk == key || *hp == prio,
+        };
+        if holder_class {
+            // Feedback early stop: the gap ended.
+            if holder.as_ref().is_some_and(|(hk, _)| hk == key) && self.window.take().is_some() {
+                self.stats.early_stops += 1;
+            }
+            self.stats.releases_immediate += 1;
+            self.launched_kernels.insert((key.clone(), seq), kernel);
+            vec![SchedulerMsg::LaunchNow {
+                task_key: key.clone(),
+                task_id,
+                seq,
+            }]
+        } else {
+            self.stats.holds += 1;
+            // Wire boundary: the prediction is resolved from the
+            // string-keyed store here, and release messages address
+            // clients by task key — held launches never consume their
+            // handles, so nothing is interned (minting per wire message
+            // would let arbitrary clients grow the interner unboundedly).
+            let predicted = profiles.get(key).and_then(|p| p.sk(&kernel));
+            let launch = KernelLaunch {
+                task_handle: TaskHandle::UNBOUND,
+                kernel_handle: crate::core::KernelHandle::UNBOUND,
+                task_key: key.clone(),
+                task_id,
+                kernel,
+                priority: prio,
+                seq,
+                true_duration: Duration::ZERO,
+                issued_at: now,
+            };
+            self.queues.push_predicted(launch, predicted, now);
+            let mut out = vec![SchedulerMsg::Hold {
+                task_key: key.clone(),
+                task_id,
+                seq,
+            }];
+            out.extend(self.pump_fills(now));
+            out
+        }
+    }
+
+    /// A holder kernel finished on the client's device: its profiled gap
+    /// starts now — open a fill window. The lookup entry is *consumed*:
+    /// each `(service, seq)` is completed at most once (retransmitted
+    /// `Completion`s are replayed from the daemon's dedup cache, never
+    /// re-executed), so the map is bounded by in-flight kernels, not by
+    /// task length. Completions for an unknown/retired pair are no-ops.
+    pub fn completion(
+        &mut self,
+        key: &TaskKey,
+        seq: u32,
+        profiles: &ProfileStore,
+        now: SimTime,
+    ) -> Vec<SchedulerMsg> {
+        let is_holder = self.holder().is_some_and(|(hk, _)| &hk == key);
+        if !is_holder {
+            return Vec::new();
+        }
+        let Some(kernel) = self.launched_kernels.remove(&(key.clone(), seq)) else {
+            return Vec::new();
+        };
+        self.open_window(key, &kernel, profiles, now)
+    }
+
+    /// Open a fill window after a holder kernel completion (split out so
+    /// tests can drive it directly).
+    pub fn open_window(
+        &mut self,
+        key: &TaskKey,
+        kernel: &KernelId,
+        profiles: &ProfileStore,
+        now: SimTime,
+    ) -> Vec<SchedulerMsg> {
+        let Some(gap) = profiles.get(key).and_then(|p| p.sg(kernel)) else {
+            self.window = None;
+            return Vec::new();
+        };
+        let holder = self.interner.intern_task(key);
+        self.window = FillWindow::open(holder, now, gap, self.epsilon);
+        if self.window.is_some() {
+            self.stats.windows += 1;
+        }
+        self.pump_fills(now)
+    }
+
+    fn pump_fills(&mut self, now: SimTime) -> Vec<SchedulerMsg> {
+        let Some(window) = self.window.as_mut() else {
+            return Vec::new();
+        };
+        let fits = fikit_fill(window, now, &mut self.queues);
+        let mut out = Vec::new();
+        for fit in fits {
+            self.stats.releases_filled += 1;
+            out.push(SchedulerMsg::LaunchNow {
+                task_key: fit.launch.task_key.clone(),
+                task_id: fit.launch.task_id,
+                seq: fit.launch.seq,
+            });
+        }
+        out
+    }
+}

@@ -5,13 +5,30 @@
 //! via the `-rdynamic` framework symbols, forwards the launch to the
 //! FIKIT scheduler, and releases it to the GPU only when told to. Here it
 //! fronts a [`Transport`] and is used by the real-time serving engine
-//! (`runtime::engine`) and the UDP server integration tests.
+//! (`runtime::engine`) and the UDP daemon integration tests.
+//!
+//! ## Loss tolerance (DESIGN.md §Daemon)
+//!
+//! The client assumes datagrams can vanish in either direction:
+//!
+//! * every message carries a monotonic `msg_seq`; a request is
+//!   retransmitted **byte-identically** (same `msg_seq`) up to
+//!   [`HookClient::set_retry`] attempts until its expected reply (or an
+//!   [`SchedulerMsg::Ack`]) arrives — the daemon deduplicates on
+//!   `msg_seq`, so retries never double-apply side effects;
+//! * out-of-band `LaunchNow` releases observed while waiting for some
+//!   other reply are buffered, so a release can never be lost between
+//!   two client states;
+//! * [`HookClient::wait_release`] polls with
+//!   [`ClientMsg::ReleaseQuery`] when the wait times out, recovering
+//!   releases whose datagram was dropped.
 
 use super::protocol::{ClientMsg, SchedulerMsg};
 use super::transport::Transport;
 use crate::core::{Dim3, Error, KernelId, Priority, Result, SimTime, TaskId, TaskKey};
 use crate::profile::SymbolResolver;
-use std::time::Duration as StdDuration;
+use std::collections::HashSet;
+use std::time::{Duration as StdDuration, Instant};
 
 /// Decision returned by the scheduler for one held launch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,9 +45,18 @@ pub struct HookClient<T: Transport> {
     task_key: TaskKey,
     priority: Priority,
     resolver: SymbolResolver,
+    /// Model name hint forwarded in `Register` for placement scoring.
+    model_hint: Option<String>,
     /// Scheduler-assigned stage from registration.
     sharing_stage: Option<bool>,
+    /// Per-attempt reply wait.
     recv_timeout: StdDuration,
+    /// Bounded retransmit attempts per request.
+    max_attempts: u32,
+    /// Monotonic wire sequence (starts at 1; 0 means "never sent").
+    next_msg_seq: u64,
+    /// Kernel seqs whose `LaunchNow` arrived out of band.
+    released: HashSet<u32>,
 }
 
 impl<T: Transport> HookClient<T> {
@@ -45,13 +71,32 @@ impl<T: Transport> HookClient<T> {
             task_key,
             priority,
             resolver,
+            model_hint: None,
             sharing_stage: None,
             recv_timeout: StdDuration::from_millis(500),
+            max_attempts: 5,
+            next_msg_seq: 1,
+            released: HashSet::new(),
         }
     }
 
     pub fn task_key(&self) -> &TaskKey {
         &self.task_key
+    }
+
+    /// Forward a model name in `Register` so the daemon's registry can
+    /// score shard placement with the compatibility matrix.
+    pub fn with_model(mut self, model: &str) -> Self {
+        self.model_hint = Some(model.to_string());
+        self
+    }
+
+    /// Tune the bounded-retry loop: per-attempt reply wait and number of
+    /// attempts. Lossy links want more attempts; in-process tests want
+    /// shorter waits.
+    pub fn set_retry(&mut self, recv_timeout: StdDuration, max_attempts: u32) {
+        self.recv_timeout = recv_timeout;
+        self.max_attempts = max_attempts.max(1);
     }
 
     /// Register with the scheduler; returns `true` if the service enters
@@ -62,31 +107,30 @@ impl<T: Transport> HookClient<T> {
             task_key: self.task_key.clone(),
             priority: self.priority,
             has_symbols: self.resolver.model().symbols_exported,
+            model: self.model_hint.clone(),
         };
-        self.transport.send(&msg.encode()?)?;
-        match self.expect_reply()? {
+        match self.request(&msg)? {
             SchedulerMsg::Registered { sharing_stage, .. } => {
                 self.sharing_stage = Some(sharing_stage);
                 Ok(sharing_stage)
             }
-            SchedulerMsg::Error { message } => Err(Error::Protocol(message)),
             other => Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
         }
     }
 
-    /// Announce a new task (invocation).
-    pub fn task_start(&self, task_id: TaskId) -> Result<()> {
+    /// Announce a new task (invocation). Blocks until acknowledged.
+    pub fn task_start(&mut self, task_id: TaskId) -> Result<()> {
         let msg = ClientMsg::TaskStart {
             task_key: self.task_key.clone(),
             task_id,
         };
-        self.transport.send(&msg.encode()?)
+        self.request(&msg).map(|_| ())
     }
 
     /// Intercept one kernel launch: resolve the kernel id, forward it,
     /// and return the scheduler's immediate decision.
     pub fn intercept_launch(
-        &self,
+        &mut self,
         kernel: &KernelId,
         task_id: TaskId,
         seq: u32,
@@ -102,30 +146,60 @@ impl<T: Transport> HookClient<T> {
             seq,
             issued_at: now,
         };
-        self.transport.send(&msg.encode()?)?;
-        match self.expect_reply()? {
+        match self.request(&msg)? {
             SchedulerMsg::LaunchNow { .. } => Ok(LaunchDecision::LaunchNow),
             SchedulerMsg::Hold { .. } => Ok(LaunchDecision::Held),
-            SchedulerMsg::Error { message } => Err(Error::Protocol(message)),
             other => Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
         }
     }
 
-    /// Wait for a deferred `LaunchNow` for a held kernel.
-    pub fn wait_release(&self, seq: u32) -> Result<()> {
-        loop {
-            match self.expect_reply()? {
+    /// Wait for a deferred `LaunchNow` for a held kernel. When the wait
+    /// times out, polls the daemon with `ReleaseQuery` — the release
+    /// datagram itself may have been dropped.
+    pub fn wait_release(&mut self, seq: u32) -> Result<()> {
+        if self.released.remove(&seq) {
+            return Ok(());
+        }
+        for _ in 0..self.max_attempts {
+            let deadline = Instant::now() + self.recv_timeout;
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.transport.recv(deadline - now)? {
+                    Some(buf) => match SchedulerMsg::decode(&buf)? {
+                        SchedulerMsg::LaunchNow { seq: s, .. } if s == seq => return Ok(()),
+                        other => self.absorb(&other),
+                    },
+                    None => break,
+                }
+            }
+            // Timed out: the release may have been dropped — poll.
+            let query = ClientMsg::ReleaseQuery {
+                task_key: self.task_key.clone(),
+                seq,
+            };
+            match self.request(&query)? {
                 SchedulerMsg::LaunchNow { seq: s, .. } if s == seq => return Ok(()),
-                SchedulerMsg::LaunchNow { .. } | SchedulerMsg::Hold { .. } => continue,
-                SchedulerMsg::Error { message } => return Err(Error::Protocol(message)),
-                other => return Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
+                SchedulerMsg::Hold { .. } => continue, // still parked
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "release query for seq {seq} answered {other:?}"
+                    )))
+                }
             }
         }
+        Err(Error::Protocol(format!(
+            "launch seq {seq} was never released"
+        )))
     }
 
     /// Report a kernel completion (measurement stage / holder kernels).
+    /// Blocks until acknowledged — a lost completion would silently cost
+    /// a fill window.
     pub fn report_completion(
-        &self,
+        &mut self,
         task_id: TaskId,
         seq: u32,
         exec: crate::core::Duration,
@@ -138,30 +212,87 @@ impl<T: Transport> HookClient<T> {
             exec,
             finished_at,
         };
-        self.transport.send(&msg.encode()?)
+        self.request(&msg).map(|_| ())
     }
 
-    /// Announce the current task finished.
-    pub fn task_end(&self, task_id: TaskId) -> Result<()> {
+    /// Announce the current task finished. Blocks until acknowledged.
+    pub fn task_end(&mut self, task_id: TaskId) -> Result<()> {
         let msg = ClientMsg::TaskEnd {
             task_key: self.task_key.clone(),
             task_id,
         };
-        self.transport.send(&msg.encode()?)
+        let r = self.request(&msg).map(|_| ());
+        // Seqs may be reused by the next task; drop stale buffered
+        // releases (the daemon clears its released record too).
+        self.released.clear();
+        r
     }
 
-    /// Clean shutdown.
-    pub fn disconnect(&self) -> Result<()> {
+    /// Clean shutdown. Blocks until acknowledged (the daemon treats
+    /// `Disconnect` for an unknown service as already-done and acks it,
+    /// so retransmits converge).
+    pub fn disconnect(&mut self) -> Result<()> {
         let msg = ClientMsg::Disconnect {
             task_key: self.task_key.clone(),
         };
-        self.transport.send(&msg.encode()?)
+        self.request(&msg).map(|_| ())
     }
 
-    fn expect_reply(&self) -> Result<SchedulerMsg> {
-        match self.transport.recv(self.recv_timeout)? {
-            Some(buf) => SchedulerMsg::decode(&buf),
-            None => Err(Error::Protocol("scheduler reply timed out".into())),
+    /// Send `msg` with a fresh `msg_seq` and retransmit byte-identically
+    /// until a reply *for this request* arrives. Out-of-band traffic
+    /// (deferred releases, stale acks) is absorbed, never dropped.
+    fn request(&mut self, msg: &ClientMsg) -> Result<SchedulerMsg> {
+        let msg_seq = self.next_msg_seq;
+        self.next_msg_seq += 1;
+        let bytes = msg.encode_seq(msg_seq)?;
+        for _ in 0..self.max_attempts {
+            self.transport.send(&bytes)?;
+            let deadline = Instant::now() + self.recv_timeout;
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break; // attempt timed out → retransmit
+                }
+                let Some(buf) = self.transport.recv(deadline - now)? else {
+                    break;
+                };
+                let reply = SchedulerMsg::decode(&buf)?;
+                if Self::matches(msg, msg_seq, &reply) {
+                    return Ok(reply);
+                }
+                if let SchedulerMsg::Error { message } = &reply {
+                    return Err(Error::Protocol(message.clone()));
+                }
+                self.absorb(&reply);
+            }
+        }
+        Err(Error::Protocol(format!(
+            "no reply after {} attempts (msg_seq {msg_seq})",
+            self.max_attempts
+        )))
+    }
+
+    /// Is `reply` the direct answer to `msg`?
+    fn matches(msg: &ClientMsg, msg_seq: u64, reply: &SchedulerMsg) -> bool {
+        match (msg, reply) {
+            (ClientMsg::Register { .. }, SchedulerMsg::Registered { .. }) => true,
+            (
+                ClientMsg::Launch { seq, .. },
+                SchedulerMsg::LaunchNow { seq: s, .. } | SchedulerMsg::Hold { seq: s, .. },
+            )
+            | (
+                ClientMsg::ReleaseQuery { seq, .. },
+                SchedulerMsg::LaunchNow { seq: s, .. } | SchedulerMsg::Hold { seq: s, .. },
+            ) => s == seq,
+            (_, SchedulerMsg::Ack { msg_seq: acked }) => *acked == msg_seq,
+            _ => false,
+        }
+    }
+
+    /// Bank out-of-band messages that matter later; ignore the rest.
+    fn absorb(&mut self, reply: &SchedulerMsg) {
+        if let SchedulerMsg::LaunchNow { seq, .. } = reply {
+            self.released.insert(*seq);
         }
     }
 
@@ -214,7 +345,7 @@ mod tests {
         let h = std::thread::spawn(move || {
             let buf = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
             let msg = ClientMsg::decode(&buf).unwrap();
-            let ClientMsg::Register { task_key, priority, has_symbols } = msg else {
+            let ClientMsg::Register { task_key, priority, has_symbols, .. } = msg else {
                 panic!("expected Register, got {msg:?}");
             };
             assert_eq!(priority, Priority::P1);
@@ -231,7 +362,7 @@ mod tests {
 
     #[test]
     fn launch_decision_round_trip() {
-        let (client, server) = pair();
+        let (mut client, server) = pair();
         let kernel = KernelId::new("gemm", Dim3::x(8), Dim3::x(128));
         let h = std::thread::spawn(move || {
             let buf = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
@@ -255,10 +386,67 @@ mod tests {
         h.join().unwrap();
     }
 
+    /// A dropped reply triggers a byte-identical retransmit; the first
+    /// answered attempt wins.
+    #[test]
+    fn register_retransmits_until_answered() {
+        let (mut client, server) = pair();
+        client.set_retry(StdDuration::from_millis(30), 5);
+        let h = std::thread::spawn(move || {
+            // "Drop" the first datagram by ignoring it.
+            let first = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let second = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            assert_eq!(first, second, "retransmit must be byte-identical");
+            let ClientMsg::Register { task_key, .. } = ClientMsg::decode(&second).unwrap() else {
+                panic!("expected Register");
+            };
+            let reply = SchedulerMsg::Registered {
+                task_key,
+                sharing_stage: false,
+            };
+            server.send(&reply.encode().unwrap()).unwrap();
+        });
+        assert!(!client.register().unwrap());
+        h.join().unwrap();
+    }
+
+    /// Lifecycle messages block for the matching Ack, skipping stale
+    /// out-of-band traffic; buffered releases satisfy a later
+    /// wait_release without touching the wire.
+    #[test]
+    fn ack_matching_and_release_buffering() {
+        let (mut client, server) = pair();
+        client.set_retry(StdDuration::from_millis(200), 3);
+        let h = std::thread::spawn(move || {
+            let buf = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let (msg_seq, msg) = ClientMsg::decode_seq(&buf).unwrap();
+            assert!(matches!(msg, ClientMsg::TaskStart { .. }));
+            // Interleave an out-of-band release and a stale ack before
+            // the real ack.
+            let release = SchedulerMsg::LaunchNow {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(0),
+                seq: 9,
+            };
+            server.send(&release.encode().unwrap()).unwrap();
+            server
+                .send(&SchedulerMsg::Ack { msg_seq: msg_seq + 100 }.encode().unwrap())
+                .unwrap();
+            server
+                .send(&SchedulerMsg::Ack { msg_seq }.encode().unwrap())
+                .unwrap();
+        });
+        client.task_start(TaskId(0)).unwrap();
+        h.join().unwrap();
+        // The banked release resolves instantly — no server needed.
+        client.set_retry(StdDuration::from_millis(10), 1);
+        client.wait_release(9).unwrap();
+    }
+
     #[test]
     fn timeout_is_an_error() {
         let (mut client, _server) = pair();
-        client.recv_timeout = StdDuration::from_millis(10);
+        client.set_retry(StdDuration::from_millis(5), 2);
         assert!(client.register().is_err());
     }
 }

@@ -8,12 +8,15 @@
 //! Here the same split exists:
 //!
 //! * [`protocol`] — the versioned wire format (client↔scheduler
-//!   messages; serde-JSON frames over datagrams).
+//!   messages; JSON frames over datagrams) with the v2 loss-tolerant
+//!   retransmit envelope (`msg_seq`, `Ack`, `ReleaseQuery`).
 //! * [`client`] — the per-service hook client: intercept → resolve →
-//!   forward → hold/launch.
+//!   forward → hold/launch, with bounded byte-identical retransmit.
 //! * [`transport`] — pluggable datagram transports: an in-process
-//!   channel pair (used by deterministic simulations and tests) and real
-//!   UDP sockets (used by `fikit serve`, see [`crate::server`]).
+//!   channel pair (deterministic simulations and tests), real UDP
+//!   sockets (used by `fikit serve`, see [`crate::server`]), and the
+//!   seeded lossy in-process fabric ([`LossyNet`]) that proves
+//!   dropped-datagram recovery (DESIGN.md §Daemon).
 
 pub mod client;
 pub mod protocol;
@@ -21,4 +24,7 @@ pub mod transport;
 
 pub use client::HookClient;
 pub use protocol::{ClientMsg, SchedulerMsg, WIRE_VERSION};
-pub use transport::{ChannelTransport, Transport, UdpTransport};
+pub use transport::{
+    ChannelTransport, LossyNet, LossyServerTransport, LossyTransport, ServerTransport, Transport,
+    UdpServerTransport, UdpTransport,
+};

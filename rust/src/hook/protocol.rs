@@ -7,12 +7,33 @@
 //! with tcpdump in production debugging — at the message rates involved
 //! (one frame per kernel launch, ≤ tens of kHz) encoding cost is
 //! irrelevant next to the network round trip.
+//!
+//! ## Version 2: the loss-tolerant envelope (DESIGN.md §Daemon)
+//!
+//! UDP drops datagrams, so v2 makes every client message safely
+//! *retransmittable*:
+//!
+//! * every client frame carries a per-client monotonic `msg_seq`; the
+//!   daemon remembers the last `msg_seq` it processed per client and
+//!   answers a retransmit (same `msg_seq`) by **resending the cached
+//!   reply without re-executing side effects** — duplicate `Register`,
+//!   `Launch`, `TaskStart` and `Completion` frames are idempotent;
+//! * fire-and-forget messages are gone: lifecycle messages are
+//!   acknowledged with [`SchedulerMsg::Ack`] echoing the `msg_seq`, so
+//!   the client's bounded-retry loop knows when to stop;
+//! * a client whose deferred `LaunchNow` was itself dropped recovers by
+//!   polling with [`ClientMsg::ReleaseQuery`] — the daemon answers from
+//!   its released-sequence record (`LaunchNow` if already released,
+//!   `Hold` if still parked).
+//!
+//! v1 frames (no `msg_seq`) are rejected by the version byte.
 
 use crate::core::{Dim3, Duration, Error, Priority, Result, SimTime, TaskId, TaskKey};
 use crate::util::json::Json;
 
-/// Protocol version; bumped on breaking changes.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version; bumped on breaking changes. v2 added the
+/// `msg_seq` retransmit envelope, `Ack` and `ReleaseQuery`.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Messages sent by a hook client to the scheduler.
 #[derive(Debug, Clone, PartialEq)]
@@ -25,6 +46,10 @@ pub enum ClientMsg {
         /// (`-rdynamic`); without it the scheduler will keep the service
         /// in measurement-incapable degraded mode.
         has_symbols: bool,
+        /// Optional model name hint (`fikit list-models` vocabulary).
+        /// The daemon's registry uses it for compatibility-aware shard
+        /// placement; absent → a neutral default demand profile.
+        model: Option<String>,
     },
     /// A new task (invocation) of the service started.
     TaskStart { task_key: TaskKey, task_id: TaskId },
@@ -53,6 +78,28 @@ pub enum ClientMsg {
     TaskEnd { task_key: TaskKey, task_id: TaskId },
     /// Clean shutdown of the hook client.
     Disconnect { task_key: TaskKey },
+    /// Loss-recovery poll: "was my held launch `seq` released yet?"
+    /// Pure query — the daemon answers `LaunchNow` (already released),
+    /// `Hold` (still parked) or `Error` (unknown launch) without side
+    /// effects, so a client whose deferred release datagram was dropped
+    /// can converge instead of blocking forever.
+    ReleaseQuery { task_key: TaskKey, seq: u32 },
+}
+
+impl ClientMsg {
+    /// The service this message belongs to (every variant carries one —
+    /// the daemon routes on it).
+    pub fn task_key(&self) -> &TaskKey {
+        match self {
+            ClientMsg::Register { task_key, .. }
+            | ClientMsg::TaskStart { task_key, .. }
+            | ClientMsg::Launch { task_key, .. }
+            | ClientMsg::Completion { task_key, .. }
+            | ClientMsg::TaskEnd { task_key, .. }
+            | ClientMsg::Disconnect { task_key }
+            | ClientMsg::ReleaseQuery { task_key, .. } => task_key,
+        }
+    }
 }
 
 /// Messages sent by the scheduler back to a hook client.
@@ -69,6 +116,10 @@ pub enum SchedulerMsg {
     LaunchNow { task_key: TaskKey, task_id: TaskId, seq: u32 },
     /// Keep holding the launch (it is parked in a priority queue).
     Hold { task_key: TaskKey, task_id: TaskId, seq: u32 },
+    /// Acknowledge a lifecycle message (`TaskStart`/`Completion`/
+    /// `TaskEnd`/`Disconnect`), echoing its `msg_seq` so the client's
+    /// bounded-retry loop can stop retransmitting.
+    Ack { msg_seq: u64 },
     /// Scheduler-side error (e.g. unknown task key).
     Error { message: String },
 }
@@ -125,11 +176,18 @@ impl ClientMsg {
                 task_key,
                 priority,
                 has_symbols,
-            } => Json::obj()
-                .set("type", "register")
-                .set("task_key", task_key.as_str())
-                .set("priority", priority.to_string())
-                .set("has_symbols", *has_symbols),
+                model,
+            } => {
+                let j = Json::obj()
+                    .set("type", "register")
+                    .set("task_key", task_key.as_str())
+                    .set("priority", priority.to_string())
+                    .set("has_symbols", *has_symbols);
+                match model {
+                    Some(m) => j.set("model", m.as_str()),
+                    None => j,
+                }
+            }
             ClientMsg::TaskStart { task_key, task_id } => Json::obj()
                 .set("type", "task_start")
                 .set("task_key", task_key.as_str())
@@ -171,6 +229,10 @@ impl ClientMsg {
             ClientMsg::Disconnect { task_key } => Json::obj()
                 .set("type", "disconnect")
                 .set("task_key", task_key.as_str()),
+            ClientMsg::ReleaseQuery { task_key, seq } => Json::obj()
+                .set("type", "release_query")
+                .set("task_key", task_key.as_str())
+                .set("seq", *seq),
         }
     }
 
@@ -182,6 +244,11 @@ impl ClientMsg {
                 task_key: key()?,
                 priority: v.req_str("priority")?.parse()?,
                 has_symbols: v.req_bool("has_symbols")?,
+                model: v
+                    .require("model")
+                    .ok()
+                    .and_then(|m| m.as_str())
+                    .map(str::to_string),
             }),
             "task_start" => Ok(ClientMsg::TaskStart {
                 task_key: key()?,
@@ -208,24 +275,43 @@ impl ClientMsg {
                 task_id: tid()?,
             }),
             "disconnect" => Ok(ClientMsg::Disconnect { task_key: key()? }),
+            "release_query" => Ok(ClientMsg::ReleaseQuery {
+                task_key: key()?,
+                seq: v.req_u64("seq")? as u32,
+            }),
             other => Err(Error::Protocol(format!("unknown client msg type {other:?}"))),
         }
     }
 
-    /// Encode to a datagram frame.
-    pub fn encode(&self) -> Result<Vec<u8>> {
-        Ok(frame(KIND_CLIENT, &self.to_json().encode()))
+    /// Encode to a datagram frame carrying the retransmit envelope.
+    /// Retransmits MUST reuse the same bytes (same `msg_seq`) so the
+    /// daemon can recognize them.
+    pub fn encode_seq(&self, msg_seq: u64) -> Result<Vec<u8>> {
+        Ok(frame(
+            KIND_CLIENT,
+            &self.to_json().set("msg_seq", msg_seq).encode(),
+        ))
     }
 
-    /// Decode from a datagram frame.
-    pub fn decode(buf: &[u8]) -> Result<ClientMsg> {
+    /// Encode without a meaningful sequence (tests / one-shot tools).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        self.encode_seq(0)
+    }
+
+    /// Decode a datagram frame into `(msg_seq, message)`.
+    pub fn decode_seq(buf: &[u8]) -> Result<(u64, ClientMsg)> {
         let (kind, body) = unframe(buf)?;
         if kind != KIND_CLIENT {
             return Err(Error::Protocol(format!(
                 "expected client frame, got kind {kind}"
             )));
         }
-        ClientMsg::from_json(&body)
+        Ok((body.req_u64("msg_seq")?, ClientMsg::from_json(&body)?))
+    }
+
+    /// Decode, discarding the envelope (tests / inspection).
+    pub fn decode(buf: &[u8]) -> Result<ClientMsg> {
+        ClientMsg::decode_seq(buf).map(|(_, m)| m)
     }
 }
 
@@ -257,6 +343,9 @@ impl SchedulerMsg {
                 .set("task_key", task_key.as_str())
                 .set("task_id", task_id.0)
                 .set("seq", *seq),
+            SchedulerMsg::Ack { msg_seq } => {
+                Json::obj().set("type", "ack").set("msg_seq", *msg_seq)
+            }
             SchedulerMsg::Error { message } => Json::obj()
                 .set("type", "error")
                 .set("message", message.as_str()),
@@ -279,6 +368,9 @@ impl SchedulerMsg {
                 task_key: key()?,
                 task_id: TaskId(v.req_u64("task_id")?),
                 seq: v.req_u64("seq")? as u32,
+            }),
+            "ack" => Ok(SchedulerMsg::Ack {
+                msg_seq: v.req_u64("msg_seq")?,
             }),
             "error" => Ok(SchedulerMsg::Error {
                 message: v.req_str("message")?.to_string(),
@@ -315,6 +407,13 @@ mod tests {
                 task_key: TaskKey::new("svc"),
                 priority: Priority::P3,
                 has_symbols: true,
+                model: Some("resnet50".into()),
+            },
+            ClientMsg::Register {
+                task_key: TaskKey::new("svc"),
+                priority: Priority::P3,
+                has_symbols: true,
+                model: None,
             },
             ClientMsg::TaskStart {
                 task_key: TaskKey::new("svc"),
@@ -343,13 +442,34 @@ mod tests {
             ClientMsg::Disconnect {
                 task_key: TaskKey::new("svc"),
             },
+            ClientMsg::ReleaseQuery {
+                task_key: TaskKey::new("svc"),
+                seq: 41,
+            },
         ];
-        for msg in msgs {
-            let enc = msg.encode().unwrap();
+        for (i, msg) in msgs.into_iter().enumerate() {
+            let enc = msg.encode_seq(i as u64 + 1).unwrap();
             assert_eq!(enc[0], WIRE_VERSION);
-            let dec = ClientMsg::decode(&enc).unwrap();
+            let (msg_seq, dec) = ClientMsg::decode_seq(&enc).unwrap();
+            assert_eq!(msg_seq, i as u64 + 1, "envelope survives the round trip");
             assert_eq!(dec, msg);
+            assert_eq!(dec.task_key(), &TaskKey::new("svc"));
         }
+    }
+
+    #[test]
+    fn retransmits_are_byte_identical_and_seq_is_required() {
+        let msg = ClientMsg::TaskStart {
+            task_key: TaskKey::new("svc"),
+            task_id: TaskId(1),
+        };
+        // Same msg_seq → same bytes: the retransmit invariant the
+        // daemon's dedup relies on.
+        assert_eq!(msg.encode_seq(7).unwrap(), msg.encode_seq(7).unwrap());
+        assert_ne!(msg.encode_seq(7).unwrap(), msg.encode_seq(8).unwrap());
+        // A v2 frame without the envelope is rejected.
+        let bare = frame(KIND_CLIENT, &msg.to_json().encode());
+        assert!(ClientMsg::decode_seq(&bare).is_err());
     }
 
     #[test]
@@ -369,6 +489,7 @@ mod tests {
                 task_id: TaskId(1),
                 seq: 3,
             },
+            SchedulerMsg::Ack { msg_seq: 99 },
             SchedulerMsg::Error {
                 message: "unknown task".into(),
             },

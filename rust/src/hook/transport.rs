@@ -1,18 +1,27 @@
 //! Datagram transports for the hook↔scheduler protocol.
 //!
-//! Two interchangeable implementations:
+//! Client-side endpoints (the [`Transport`] trait):
 //!
-//! * [`ChannelTransport`] — an in-process crossbeam channel pair.
-//!   Deterministic and allocation-cheap; used by tests and by the
-//!   real-time engine when client and scheduler share a process.
+//! * [`ChannelTransport`] — an in-process channel pair. Deterministic
+//!   and allocation-cheap; used by tests and by single-process setups.
 //! * [`UdpTransport`] — real UDP sockets, the paper's deployment shape
 //!   (hook clients and the scheduler may sit on different machines).
+//! * [`LossyTransport`] — a client endpoint on a [`LossyNet`], the
+//!   deterministic lossy in-process fabric the daemon's loss-recovery
+//!   tests run on (DESIGN.md §Daemon).
+//!
+//! Daemon-side endpoints (the [`ServerTransport`] trait) mirror UDP's
+//! `recv_from`/`send_to` shape: [`UdpServerTransport`] for real sockets
+//! and [`LossyNet::server_endpoint`] for the in-process fabric.
 
 use crate::core::{Error, Result};
-use std::net::UdpSocket;
+use crate::util::rng::Rng;
+use std::cell::Cell;
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, UdpSocket};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Mutex;
-use std::time::Duration as StdDuration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration as StdDuration, Instant};
 
 /// A bidirectional datagram endpoint.
 pub trait Transport: Send {
@@ -21,6 +30,17 @@ pub trait Transport: Send {
     /// Receive one datagram, waiting up to `timeout`. `Ok(None)` on
     /// timeout.
     fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>>;
+}
+
+/// A daemon-side datagram endpoint serving many clients: datagrams come
+/// with a reply address, and replies are addressed explicitly.
+pub trait ServerTransport: Send {
+    /// Receive one datagram and its sender, waiting up to `timeout`.
+    /// `Ok(None)` on timeout.
+    fn recv_from(&self, timeout: StdDuration) -> Result<Option<(Vec<u8>, SocketAddr)>>;
+    /// Send one datagram to `addr`. Datagram semantics: best-effort,
+    /// errors on unreachable peers may be swallowed.
+    fn send_to(&self, buf: &[u8], addr: SocketAddr) -> Result<()>;
 }
 
 /// In-process channel transport. [`ChannelTransport::pair`] yields two
@@ -68,10 +88,70 @@ impl Transport for ChannelTransport {
     }
 }
 
-/// Blocking UDP transport (client side; the scheduler daemon uses tokio,
-/// see [`crate::server`]).
-pub struct UdpTransport {
+/// Maximum datagram we ever expect (messages are small JSON frames; this
+/// is headroom, not a protocol limit).
+const RECV_BUF_LEN: usize = 64 * 1024;
+
+/// Shared recv-side caching for both UDP endpoints: the last applied
+/// read timeout (so `set_read_timeout` — a syscall — is only re-issued
+/// when the timeout actually changes) and a reusable scratch buffer (so
+/// each call allocates only the returned payload, not a fresh 64 KiB
+/// buffer).
+struct CachedUdpSocket {
     socket: UdpSocket,
+    applied_timeout: Cell<Option<StdDuration>>,
+    recv_buf: Mutex<Vec<u8>>,
+}
+
+impl CachedUdpSocket {
+    fn new(socket: UdpSocket) -> CachedUdpSocket {
+        CachedUdpSocket {
+            socket,
+            applied_timeout: Cell::new(None),
+            recv_buf: Mutex::new(vec![0u8; RECV_BUF_LEN]),
+        }
+    }
+
+    fn apply_timeout(&self, timeout: StdDuration) -> Result<()> {
+        if self.applied_timeout.get() != Some(timeout) {
+            self.socket.set_read_timeout(Some(timeout))?;
+            self.applied_timeout.set(Some(timeout));
+        }
+        Ok(())
+    }
+
+    fn is_timeout(e: &std::io::Error) -> bool {
+        e.kind() == std::io::ErrorKind::WouldBlock || e.kind() == std::io::ErrorKind::TimedOut
+    }
+
+    /// `recv` on a connected socket.
+    fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>> {
+        self.apply_timeout(timeout)?;
+        let mut buf = self.recv_buf.lock().expect("transport mutex poisoned");
+        match self.socket.recv(&mut buf) {
+            Ok(n) => Ok(Some(buf[..n].to_vec())),
+            Err(e) if Self::is_timeout(&e) => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// `recv_from` on an unconnected (daemon) socket.
+    fn recv_from(&self, timeout: StdDuration) -> Result<Option<(Vec<u8>, SocketAddr)>> {
+        self.apply_timeout(timeout)?;
+        let mut buf = self.recv_buf.lock().expect("transport mutex poisoned");
+        match self.socket.recv_from(&mut buf) {
+            Ok((n, addr)) => Ok(Some((buf[..n].to_vec(), addr))),
+            Err(e) if Self::is_timeout(&e) => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// Blocking UDP transport (client side; the scheduler daemon is a
+/// blocking `recv_from` loop too — see [`crate::daemon`] — so the whole
+/// deployment is plain sockets, no async runtime).
+pub struct UdpTransport {
+    inner: CachedUdpSocket,
 }
 
 impl UdpTransport {
@@ -79,37 +159,239 @@ impl UdpTransport {
     pub fn connect(scheduler_addr: &str) -> Result<UdpTransport> {
         let socket = UdpSocket::bind("0.0.0.0:0")?;
         socket.connect(scheduler_addr)?;
-        Ok(UdpTransport { socket })
+        Ok(UdpTransport {
+            inner: CachedUdpSocket::new(socket),
+        })
     }
 
     /// Local address (tests).
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
-        Ok(self.socket.local_addr()?)
+        Ok(self.inner.socket.local_addr()?)
     }
 }
 
 impl Transport for UdpTransport {
     fn send(&self, buf: &[u8]) -> Result<()> {
-        self.socket.send(buf)?;
+        self.inner.socket.send(buf)?;
         Ok(())
     }
 
     fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>> {
-        self.socket.set_read_timeout(Some(timeout))?;
-        let mut buf = vec![0u8; 64 * 1024];
-        match self.socket.recv(&mut buf) {
-            Ok(n) => {
-                buf.truncate(n);
-                Ok(Some(buf))
-            }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                Ok(None)
-            }
-            Err(e) => Err(e.into()),
+        self.inner.recv(timeout)
+    }
+}
+
+/// Daemon-side UDP endpoint with the same timeout/buffer caching as
+/// [`UdpTransport`].
+pub struct UdpServerTransport {
+    inner: CachedUdpSocket,
+}
+
+impl UdpServerTransport {
+    /// Bind the daemon socket (e.g. `127.0.0.1:7700`, or port 0 in
+    /// tests).
+    pub fn bind(addr: &str) -> Result<UdpServerTransport> {
+        Ok(UdpServerTransport {
+            inner: CachedUdpSocket::new(UdpSocket::bind(addr)?),
+        })
+    }
+
+    /// Bound address (useful with port 0 in tests).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.inner.socket.local_addr()?)
+    }
+}
+
+impl ServerTransport for UdpServerTransport {
+    fn recv_from(&self, timeout: StdDuration) -> Result<Option<(Vec<u8>, SocketAddr)>> {
+        self.inner.recv_from(timeout)
+    }
+
+    fn send_to(&self, buf: &[u8], addr: SocketAddr) -> Result<()> {
+        self.inner.socket.send_to(buf, addr)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// LossyNet: deterministic lossy in-process datagram fabric
+// ---------------------------------------------------------------------
+
+struct LossyState {
+    /// Client → daemon datagrams (with the sending client's address).
+    to_server: VecDeque<(Vec<u8>, SocketAddr)>,
+    /// Daemon → client inboxes, one per registered endpoint.
+    inboxes: HashMap<SocketAddr, VecDeque<Vec<u8>>>,
+    /// Independent drop-decision streams per direction, so the upstream
+    /// decision sequence does not depend on downstream traffic volume.
+    rng_up: Rng,
+    rng_down: Rng,
+    drop_permille: u32,
+    dropped_up: u64,
+    dropped_down: u64,
+}
+
+impl LossyState {
+    fn roll(rng: &mut Rng, permille: u32) -> bool {
+        permille > 0 && rng.next_u64() % 1000 < permille as u64
+    }
+}
+
+/// A deterministic lossy in-process "network" between hook clients and
+/// the scheduler daemon: every datagram in either direction is dropped
+/// with probability `drop_permille`/1000, decided by a seeded PRNG (one
+/// independent stream per direction). With `drop_permille == 0` it is a
+/// reliable fabric — the same test scenario can run lossless and lossy
+/// and compare outcomes, which is how dropped-datagram recovery is
+/// proven in-process (`tests/integration_udp.rs`).
+///
+/// The *decision sequence* per direction is fixed by the seed; which
+/// message an unlucky decision lands on can vary with thread
+/// interleaving, so tests assert interleaving-independent invariants
+/// (eventual release of every launch, conservation of hold/release
+/// counters, empty daemon maps after churn) rather than exact drop
+/// positions.
+pub struct LossyNet {
+    state: Mutex<LossyState>,
+    cv: Condvar,
+}
+
+impl LossyNet {
+    /// Build a fabric with the given seed and drop rate (per mille).
+    pub fn new(seed: u64, drop_permille: u32) -> Arc<LossyNet> {
+        assert!(drop_permille < 1000, "a fabric dropping everything cannot converge");
+        Arc::new(LossyNet {
+            state: Mutex::new(LossyState {
+                to_server: VecDeque::new(),
+                inboxes: HashMap::new(),
+                rng_up: Rng::new(seed ^ 0x5157_4550),
+                rng_down: Rng::new(seed ^ 0x444F_574E),
+                drop_permille,
+                dropped_up: 0,
+                dropped_down: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Register a client endpoint under a synthetic address.
+    pub fn client_endpoint(self: &Arc<Self>, port: u16) -> LossyTransport {
+        let addr: SocketAddr = format!("127.0.0.1:{port}").parse().expect("synthetic addr");
+        let mut s = self.state.lock().expect("lossy net poisoned");
+        s.inboxes.entry(addr).or_default();
+        drop(s);
+        LossyTransport {
+            net: Arc::clone(self),
+            addr,
         }
+    }
+
+    /// The daemon-side endpoint of this fabric.
+    pub fn server_endpoint(self: &Arc<Self>) -> LossyServerTransport {
+        LossyServerTransport {
+            net: Arc::clone(self),
+        }
+    }
+
+    /// Datagrams dropped so far as `(client→daemon, daemon→client)`.
+    pub fn dropped(&self) -> (u64, u64) {
+        let s = self.state.lock().expect("lossy net poisoned");
+        (s.dropped_up, s.dropped_down)
+    }
+}
+
+/// Client endpoint on a [`LossyNet`].
+pub struct LossyTransport {
+    net: Arc<LossyNet>,
+    addr: SocketAddr,
+}
+
+impl LossyTransport {
+    /// The synthetic address the daemon sees for this endpoint.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Transport for LossyTransport {
+    fn send(&self, buf: &[u8]) -> Result<()> {
+        let mut s = self.net.state.lock().expect("lossy net poisoned");
+        let permille = s.drop_permille;
+        if LossyState::roll(&mut s.rng_up, permille) {
+            s.dropped_up += 1;
+            return Ok(()); // the datagram silently vanishes, as UDP would
+        }
+        s.to_server.push_back((buf.to_vec(), self.addr));
+        drop(s);
+        self.net.cv.notify_all();
+        Ok(())
+    }
+
+    fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.net.state.lock().expect("lossy net poisoned");
+        loop {
+            if let Some(buf) = s
+                .inboxes
+                .get_mut(&self.addr)
+                .and_then(VecDeque::pop_front)
+            {
+                return Ok(Some(buf));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (next, _) = self
+                .net
+                .cv
+                .wait_timeout(s, deadline - now)
+                .expect("lossy net poisoned");
+            s = next;
+        }
+    }
+}
+
+/// Daemon endpoint on a [`LossyNet`].
+pub struct LossyServerTransport {
+    net: Arc<LossyNet>,
+}
+
+impl ServerTransport for LossyServerTransport {
+    fn recv_from(&self, timeout: StdDuration) -> Result<Option<(Vec<u8>, SocketAddr)>> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.net.state.lock().expect("lossy net poisoned");
+        loop {
+            if let Some(item) = s.to_server.pop_front() {
+                return Ok(Some(item));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (next, _) = self
+                .net
+                .cv
+                .wait_timeout(s, deadline - now)
+                .expect("lossy net poisoned");
+            s = next;
+        }
+    }
+
+    fn send_to(&self, buf: &[u8], addr: SocketAddr) -> Result<()> {
+        let mut s = self.net.state.lock().expect("lossy net poisoned");
+        let permille = s.drop_permille;
+        if LossyState::roll(&mut s.rng_down, permille) {
+            s.dropped_down += 1;
+            return Ok(());
+        }
+        if let Some(inbox) = s.inboxes.get_mut(&addr) {
+            inbox.push_back(buf.to_vec());
+        }
+        // Unknown address → the void, exactly like UDP.
+        drop(s);
+        self.net.cv.notify_all();
+        Ok(())
     }
 }
 
@@ -133,6 +415,63 @@ mod tests {
         let (client, _server) = ChannelTransport::pair();
         let got = client.recv(StdDuration::from_millis(10)).unwrap();
         assert!(got.is_none());
+    }
+
+    #[test]
+    fn lossless_net_delivers_in_order_both_ways() {
+        let net = LossyNet::new(1, 0);
+        let client = net.client_endpoint(9001);
+        let server = net.server_endpoint();
+        client.send(b"a").unwrap();
+        client.send(b"b").unwrap();
+        let (m1, from) = server.recv_from(StdDuration::from_millis(100)).unwrap().unwrap();
+        let (m2, _) = server.recv_from(StdDuration::from_millis(100)).unwrap().unwrap();
+        assert_eq!((m1.as_slice(), m2.as_slice()), (&b"a"[..], &b"b"[..]));
+        assert_eq!(from, client.addr());
+        server.send_to(b"c", from).unwrap();
+        assert_eq!(
+            client.recv(StdDuration::from_millis(100)).unwrap().unwrap(),
+            b"c"
+        );
+        assert_eq!(net.dropped(), (0, 0));
+        // Timeouts surface as None, not errors.
+        assert!(client.recv(StdDuration::from_millis(5)).unwrap().is_none());
+        assert!(server.recv_from(StdDuration::from_millis(5)).unwrap().is_none());
+    }
+
+    #[test]
+    fn lossy_net_drops_are_seeded_and_counted() {
+        let send_n = |seed: u64| -> (u64, u64) {
+            let net = LossyNet::new(seed, 500);
+            let client = net.client_endpoint(9001);
+            let server = net.server_endpoint();
+            for _ in 0..200 {
+                client.send(b"x").unwrap();
+                server.send_to(b"y", client.addr()).unwrap();
+            }
+            net.dropped()
+        };
+        let (up, down) = send_n(42);
+        // ~50% drop rate on 200 datagrams per direction.
+        assert!((50..150).contains(&up), "up drops way off: {up}");
+        assert!((50..150).contains(&down), "down drops way off: {down}");
+        // Deterministic per seed, different across seeds.
+        assert_eq!(send_n(42), (up, down));
+        assert_ne!(send_n(43), (up, down));
+    }
+
+    #[test]
+    fn lossy_net_wakes_blocked_receiver() {
+        let net = LossyNet::new(7, 0);
+        let client = net.client_endpoint(9001);
+        let server = net.server_endpoint();
+        let h = std::thread::spawn(move || {
+            server.recv_from(StdDuration::from_secs(2)).unwrap().unwrap()
+        });
+        std::thread::sleep(StdDuration::from_millis(20));
+        client.send(b"wake").unwrap();
+        let (buf, _) = h.join().unwrap();
+        assert_eq!(buf, b"wake");
     }
 
     #[test]

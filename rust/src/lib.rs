@@ -20,7 +20,11 @@
 //!   the `FIKIT` gap-filling procedure (Algorithm 1), `BestPrioFit`
 //!   (Algorithm 2), and the real-time feedback early-stop (Fig 12).
 //! * [`hook`] — the CUDA-hook-analogue interception layer and the
-//!   client↔scheduler wire protocol (in-proc and UDP transports).
+//!   client↔scheduler wire protocol (in-proc, UDP and deterministic
+//!   lossy transports; versioned loss-tolerant framing).
+//! * [`daemon`] — the standalone scheduler daemon's control plane:
+//!   per-GPU scheduling shards behind a placement registry, with an
+//!   idempotent-retransmit wire layer (DESIGN.md §Daemon).
 //! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them as real kernels.
 //! * [`metrics`] — JCT statistics, speedups, coefficients of variation,
@@ -51,6 +55,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod core;
+pub mod daemon;
 pub mod experiments;
 pub mod hook;
 pub mod metrics;

@@ -30,7 +30,10 @@ USAGE:
   fikit experiment <id|all> [--scale F] [--seed S] [--json out.json]
         ids: fig13 fig14 fig15 table2 fig16 fig18 fig19 fig21 ablation_feedback
   fikit profile --model MODEL [--runs T] [--out profiles.json]
-  fikit serve [--bind ADDR] [--profiles profiles.json]
+  fikit serve [--bind ADDR] [--profiles profiles.json] [--devices N]
+              [--capacity C] [--placement bestmatch|leastloaded|roundrobin]
+        one scheduling shard per device; services are routed to shards
+        by the placement policy's capacity accounting
   fikit cluster [--gpus N] [--policy bestmatch|leastloaded|roundrobin]
                 [--compat compat.json] [--measure-compat]
   fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
@@ -204,12 +207,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(path) => ProfileStore::load(path)?,
         None => ProfileStore::new(),
     };
+    let devices: usize = args.opt_parse("devices", 1usize)?;
+    if devices == 0 {
+        return Err(fikit::core::Error::Parse("--devices must be ≥ 1".into()));
+    }
     let cfg = ServerConfig {
         bind,
+        devices,
+        capacity: args.opt_parse("capacity", 32usize)?,
+        policy: args.opt("placement").unwrap_or("leastloaded").parse()?,
         ..Default::default()
     };
+    let policy = cfg.policy;
+    let capacity = cfg.capacity;
     let mut server = SchedulerServer::bind(cfg, profiles)?;
-    println!("fikit scheduler daemon listening on {}", server.local_addr()?);
+    println!(
+        "fikit scheduler daemon listening on {} ({} device shard(s), capacity {}/device, {:?} placement)",
+        server.local_addr()?,
+        devices,
+        capacity,
+        policy,
+    );
     server.run_for(None)
 }
 

@@ -1,41 +1,38 @@
-//! The FIKIT scheduler daemon: the paper's standalone scheduler process.
+//! `fikit serve` — the UDP front of the scheduler daemon.
 //!
-//! Hook clients (one per hosted service, possibly on other machines)
-//! speak the [`crate::hook::protocol`] wire format over UDP. The daemon
-//! runs the control plane of the FIKIT algorithm:
-//!
-//! * `Register` — admit a service; tell it whether it has a ready
-//!   profile (sharing stage) or must run measurement first.
-//! * `TaskStart`/`TaskEnd` — track the active set; the highest-priority
-//!   active service holds the GPU.
-//! * `Launch` — holder-class launches are released immediately
-//!   (`LaunchNow`); lower-priority launches are parked (`Hold`) in the
-//!   priority queues Q0–Q9.
-//! * `Completion` — a holder kernel finished on the client's GPU: open a
-//!   fill window for its profiled gap `SG` and release queued kernels
-//!   chosen by BestPrioFit until the budget is spent. The next holder
-//!   `Launch` closes the window early (feedback).
+//! The paper's deployment shape is a standalone scheduler process that
+//! hook clients (one per hosted service, possibly on other machines)
+//! talk to over UDP. All scheduling logic lives in [`crate::daemon`]
+//! now — per-GPU [`crate::daemon::Shard`]s behind a placement
+//! [`crate::daemon::Registry`] (DESIGN.md §Daemon); this module only
+//! binds the socket and pumps datagrams through it with a blocking
+//! `recv_from` loop (no async runtime anywhere).
 //!
 //! The data plane (actually running kernels) stays in the hook client,
 //! exactly as in the paper — the daemon only decides *when* each held
 //! launch may proceed.
 
-use crate::coordinator::fikit::{FillWindow, DEFAULT_EPSILON};
-use crate::coordinator::queues::PriorityQueues;
-use crate::core::{
-    Duration, Interner, KernelLaunch, Priority, Result, SimTime, TaskHandle, TaskKey,
-};
-use crate::hook::protocol::{ClientMsg, SchedulerMsg};
+use crate::cluster::placement::PlacementPolicy;
+use crate::coordinator::fikit::DEFAULT_EPSILON;
+use crate::core::{Duration, Result};
+use crate::daemon::{DaemonConfig, SchedulerDaemon};
+pub use crate::daemon::{DaemonStats, ServerStats};
+use crate::hook::transport::UdpServerTransport;
 use crate::profile::ProfileStore;
-use std::collections::HashMap;
-use std::net::{SocketAddr, UdpSocket};
-use std::time::{Duration as StdDuration, Instant};
+use std::net::SocketAddr;
+use std::time::Duration as StdDuration;
 
-/// Daemon configuration.
+/// Daemon configuration (UDP binding + fleet shape).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// UDP bind address, e.g. `127.0.0.1:7700`.
     pub bind: String,
+    /// GPU devices served by this daemon — one scheduling shard each.
+    pub devices: usize,
+    /// Concurrent services one device may host (admission bound).
+    pub capacity: usize,
+    /// Policy routing newly registered services to devices.
+    pub policy: PlacementPolicy,
     /// Small-gap threshold ε.
     pub epsilon: Duration,
     /// Runs required before a profile counts as ready.
@@ -46,652 +43,67 @@ impl Default for ServerConfig {
     fn default() -> ServerConfig {
         ServerConfig {
             bind: "127.0.0.1:7700".to_string(),
+            devices: 1,
+            capacity: 32,
+            policy: PlacementPolicy::LeastLoaded,
             epsilon: DEFAULT_EPSILON,
             min_profile_runs: 1,
         }
     }
 }
 
-#[derive(Debug, Clone)]
-struct ClientState {
-    addr: SocketAddr,
-    priority: Priority,
-}
-
-/// Counters exposed after a run.
-#[derive(Debug, Clone, Default)]
-pub struct ServerStats {
-    /// `Register` messages accepted.
-    pub registered: u64,
-    /// `Launch` messages received.
-    pub launches: u64,
-    /// Launches released immediately (holder-class).
-    pub releases_immediate: u64,
-    /// Launches parked in the priority queues.
-    pub holds: u64,
-    /// Held launches released through fill windows.
-    pub releases_filled: u64,
-    /// Fill windows opened.
-    pub windows: u64,
-    /// Windows closed early by holder feedback.
-    pub early_stops: u64,
-    /// Datagrams that failed to decode.
-    pub decode_errors: u64,
-}
-
-/// The UDP scheduler daemon.
+/// The UDP scheduler daemon: a bound socket plus the sharded control
+/// plane.
 pub struct SchedulerServer {
-    cfg: ServerConfig,
-    socket: UdpSocket,
-    profiles: ProfileStore,
-    clients: HashMap<TaskKey, ClientState>,
-    active: Vec<(TaskKey, Priority)>,
-    queues: PriorityQueues,
-    window: Option<FillWindow>,
-    /// Identity interner for fill-window holders. Only *holder* task
-    /// keys are interned (when a window opens — bounded by registered,
-    /// active services, like the `clients` map); arbitrary wire traffic
-    /// must never mint handles, or hostile/buggy clients could grow the
-    /// interner without bound.
-    interner: Interner,
-    /// Kernel ids of recently released launches, so `Completion`
-    /// messages (which carry only task/seq) can look up the profiled
-    /// gap. One entry per (service, seq), overwritten in place on reuse.
-    launched_kernels: HashMap<(TaskKey, u32), crate::core::KernelId>,
-    epoch: Instant,
-    stats: ServerStats,
+    daemon: SchedulerDaemon,
+    transport: UdpServerTransport,
 }
 
 impl SchedulerServer {
     /// Bind the daemon.
     pub fn bind(cfg: ServerConfig, profiles: ProfileStore) -> Result<SchedulerServer> {
-        let socket = UdpSocket::bind(&cfg.bind)?;
-        Ok(SchedulerServer {
-            cfg,
-            socket,
+        let transport = UdpServerTransport::bind(&cfg.bind)?;
+        let daemon = SchedulerDaemon::new(
+            DaemonConfig {
+                devices: cfg.devices,
+                capacity: cfg.capacity,
+                policy: cfg.policy,
+                epsilon: cfg.epsilon,
+                min_profile_runs: cfg.min_profile_runs,
+            },
             profiles,
-            clients: HashMap::new(),
-            active: Vec::new(),
-            queues: PriorityQueues::new(),
-            window: None,
-            interner: Interner::new(),
-            launched_kernels: HashMap::new(),
-            epoch: Instant::now(),
-            stats: ServerStats::default(),
-        })
+        );
+        Ok(SchedulerServer { daemon, transport })
     }
 
     /// Bound address (useful with port 0 in tests).
     pub fn local_addr(&self) -> Result<SocketAddr> {
-        Ok(self.socket.local_addr()?)
+        self.transport.local_addr()
     }
 
-    /// Counters accumulated so far.
-    pub fn stats(&self) -> &ServerStats {
-        &self.stats
+    /// Fleet-wide scheduling counters (summed over shards).
+    pub fn stats(&self) -> ServerStats {
+        self.daemon.stats_total()
     }
 
-    fn now(&self) -> SimTime {
-        SimTime(self.epoch.elapsed().as_nanos() as u64)
+    /// Wire/routing counters.
+    pub fn daemon_stats(&self) -> &DaemonStats {
+        self.daemon.stats()
     }
 
-    fn holder(&self) -> Option<(TaskKey, Priority)> {
-        self.active
-            .iter()
-            .min_by_key(|(_, p)| *p)
-            .cloned()
+    /// The sharded control plane (probes for tests and tooling).
+    pub fn daemon(&self) -> &SchedulerDaemon {
+        &self.daemon
     }
 
     /// Serve until `deadline` elapses (`None` = forever).
     pub fn run_for(&mut self, deadline: Option<StdDuration>) -> Result<()> {
-        let start = Instant::now();
-        self.socket
-            .set_read_timeout(Some(StdDuration::from_millis(50)))?;
-        let mut buf = vec![0u8; 64 * 1024];
-        loop {
-            if let Some(d) = deadline {
-                if start.elapsed() >= d {
-                    return Ok(());
-                }
-            }
-            match self.socket.recv_from(&mut buf) {
-                Ok((n, addr)) => {
-                    let replies = match ClientMsg::decode(&buf[..n]) {
-                        Ok(msg) => self.handle(msg, addr),
-                        Err(e) => {
-                            self.stats.decode_errors += 1;
-                            vec![(
-                                addr,
-                                SchedulerMsg::Error {
-                                    message: e.to_string(),
-                                },
-                            )]
-                        }
-                    };
-                    for (to, reply) in replies {
-                        if let Ok(bytes) = reply.encode() {
-                            self.socket.send_to(&bytes, to).ok();
-                        }
-                    }
-                }
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    continue;
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
+        self.daemon.serve(&self.transport, deadline, false)
     }
 
-    /// Handle one message; returns the replies to send.
-    pub fn handle(&mut self, msg: ClientMsg, addr: SocketAddr) -> Vec<(SocketAddr, SchedulerMsg)> {
-        match msg {
-            ClientMsg::Register {
-                task_key,
-                priority,
-                has_symbols,
-            } => {
-                self.stats.registered += 1;
-                // Without exported symbols kernels cannot be identified —
-                // profiles would be meaningless (paper §3.2), so such
-                // services never reach sharing stage.
-                let sharing = has_symbols
-                    && self
-                        .profiles
-                        .has_ready(&task_key, self.cfg.min_profile_runs);
-                self.clients
-                    .insert(task_key.clone(), ClientState { addr, priority });
-                vec![(
-                    addr,
-                    SchedulerMsg::Registered {
-                        task_key,
-                        sharing_stage: sharing,
-                    },
-                )]
-            }
-            ClientMsg::TaskStart { task_key, .. } => {
-                if let Some(c) = self.clients.get(&task_key) {
-                    let prio = c.priority;
-                    // Preemption: a higher-priority arrival invalidates
-                    // the current window.
-                    if let Some((_, hp)) = self.holder() {
-                        if prio.is_higher_than(hp) {
-                            self.window = None;
-                        }
-                    }
-                    self.active.push((task_key, prio));
-                }
-                Vec::new()
-            }
-            ClientMsg::TaskEnd { task_key, .. } => {
-                self.active.retain(|(k, _)| k != &task_key);
-                // Non-minting lookup: a key never interned cannot be the
-                // window holder, and minting here would let arbitrary
-                // wire traffic grow the interner unboundedly.
-                let ended: Option<TaskHandle> = self.interner.task_handle(&task_key);
-                if self
-                    .window
-                    .as_ref()
-                    .is_some_and(|w| Some(w.holder) == ended)
-                {
-                    self.window = None;
-                }
-                // Release the new holder class's parked launches.
-                let mut out = Vec::new();
-                if let Some((_, hp)) = self.holder() {
-                    for req in self.queues.drain_at(hp) {
-                        if let Some(c) = self.clients.get(&req.launch.task_key) {
-                            self.stats.releases_filled += 1;
-                            out.push((
-                                c.addr,
-                                SchedulerMsg::LaunchNow {
-                                    task_key: req.launch.task_key.clone(),
-                                    task_id: req.launch.task_id,
-                                    seq: req.launch.seq,
-                                },
-                            ));
-                        }
-                    }
-                }
-                out
-            }
-            ClientMsg::Launch {
-                task_key,
-                task_id,
-                kernel_name,
-                grid,
-                block,
-                seq,
-                ..
-            } => {
-                self.stats.launches += 1;
-                let now = self.now();
-                let kernel = crate::hook::client::kernel_id_from_wire(&kernel_name, grid, block);
-                let prio = self
-                    .clients
-                    .get(&task_key)
-                    .map(|c| c.priority)
-                    .unwrap_or(Priority::LOWEST);
-                let holder = self.holder();
-                let holder_class = match &holder {
-                    None => true,
-                    Some((hk, hp)) => hk == &task_key || *hp == prio,
-                };
-                if holder_class {
-                    // Feedback early stop: the gap ended.
-                    if holder.as_ref().is_some_and(|(hk, _)| hk == &task_key)
-                        && self.window.take().is_some()
-                    {
-                        self.stats.early_stops += 1;
-                    }
-                    self.stats.releases_immediate += 1;
-                    self.launched_kernels
-                        .insert((task_key.clone(), seq), kernel);
-                    vec![(
-                        addr,
-                        SchedulerMsg::LaunchNow {
-                            task_key,
-                            task_id,
-                            seq,
-                        },
-                    )]
-                } else {
-                    self.stats.holds += 1;
-                    // Wire boundary: the prediction is resolved from the
-                    // string-keyed store here, and the daemon's release
-                    // messages address clients by task key — held
-                    // launches never consume their handles, so nothing
-                    // is interned (minting per wire message would let
-                    // arbitrary clients grow the interner unboundedly).
-                    let predicted = self
-                        .profiles
-                        .get(&task_key)
-                        .and_then(|p| p.sk(&kernel));
-                    let launch = KernelLaunch {
-                        task_handle: TaskHandle::UNBOUND,
-                        kernel_handle: crate::core::KernelHandle::UNBOUND,
-                        task_key: task_key.clone(),
-                        task_id,
-                        kernel,
-                        priority: prio,
-                        seq,
-                        true_duration: Duration::ZERO,
-                        issued_at: now,
-                    };
-                    self.queues.push_predicted(launch, predicted, now);
-                    let mut out = vec![(
-                        addr,
-                        SchedulerMsg::Hold {
-                            task_key,
-                            task_id,
-                            seq,
-                        },
-                    )];
-                    out.extend(self.pump_fills());
-                    out
-                }
-            }
-            ClientMsg::Completion { task_key, seq, .. } => {
-                // A holder kernel finished on the client's device: its
-                // profiled gap starts now — open a fill window.
-                let is_holder = self.holder().is_some_and(|(hk, _)| hk == task_key);
-                if !is_holder {
-                    return Vec::new();
-                }
-                let Some(kernel) = self.launched_kernels.get(&(task_key.clone(), seq)).cloned()
-                else {
-                    return Vec::new();
-                };
-                self.open_window(&task_key, &kernel)
-            }
-            ClientMsg::Disconnect { task_key } => {
-                self.active.retain(|(k, _)| k != &task_key);
-                self.clients.remove(&task_key);
-                Vec::new()
-            }
-        }
-    }
-
-    /// Open a fill window after a holder kernel completion (called by
-    /// `handle_completion` — split out so tests can drive it directly).
-    pub fn open_window(&mut self, task_key: &TaskKey, kernel: &crate::core::KernelId) -> Vec<(SocketAddr, SchedulerMsg)> {
-        let Some(gap) = self.profiles.get(task_key).and_then(|p| p.sg(kernel)) else {
-            self.window = None;
-            return Vec::new();
-        };
-        let now = self.now();
-        let holder = self.interner.intern_task(task_key);
-        self.window = FillWindow::open(holder, now, gap, self.cfg.epsilon);
-        if self.window.is_some() {
-            self.stats.windows += 1;
-        }
-        self.pump_fills()
-    }
-
-    fn pump_fills(&mut self) -> Vec<(SocketAddr, SchedulerMsg)> {
-        let Some(window) = self.window.as_mut() else {
-            return Vec::new();
-        };
-        let now = SimTime(self.epoch.elapsed().as_nanos() as u64);
-        let fits = crate::coordinator::fikit::fikit_fill(window, now, &mut self.queues);
-        let mut out = Vec::new();
-        for fit in fits {
-            if let Some(c) = self.clients.get(&fit.launch.task_key) {
-                self.stats.releases_filled += 1;
-                out.push((
-                    c.addr,
-                    SchedulerMsg::LaunchNow {
-                        task_key: fit.launch.task_key.clone(),
-                        task_id: fit.launch.task_id,
-                        seq: fit.launch.seq,
-                    },
-                ));
-            }
-        }
-        out
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::core::{Dim3, KernelId, TaskId};
-    use crate::profile::TaskProfile;
-
-    fn addr(port: u16) -> SocketAddr {
-        format!("127.0.0.1:{port}").parse().unwrap()
-    }
-
-    fn kid(name: &str) -> KernelId {
-        KernelId::new(name, Dim3::x(4), Dim3::x(64))
-    }
-
-    fn server_with_profiles() -> SchedulerServer {
-        let mut profiles = ProfileStore::new();
-        let mut hi = TaskProfile::new(TaskKey::new("hi"));
-        hi.record(&kid("hk"), Duration::from_micros(200), Some(Duration::from_millis(2)));
-        hi.finish_run(1);
-        profiles.insert(hi);
-        let mut lo = TaskProfile::new(TaskKey::new("lo"));
-        lo.record(&kid("lk"), Duration::from_micros(400), Some(Duration::from_micros(20)));
-        lo.finish_run(1);
-        profiles.insert(lo);
-        let cfg = ServerConfig {
-            bind: "127.0.0.1:0".to_string(),
-            ..Default::default()
-        };
-        SchedulerServer::bind(cfg, profiles).unwrap()
-    }
-
-    fn launch_msg(key: &str, kernel: &str, seq: u32) -> ClientMsg {
-        ClientMsg::Launch {
-            task_key: TaskKey::new(key),
-            task_id: TaskId(0),
-            kernel_name: kernel.to_string(),
-            grid: Dim3::x(4),
-            block: Dim3::x(64),
-            seq,
-            issued_at: SimTime::ZERO,
-        }
-    }
-
-    #[test]
-    fn register_reports_stage() {
-        let mut s = server_with_profiles();
-        let r = s.handle(
-            ClientMsg::Register {
-                task_key: TaskKey::new("hi"),
-                priority: Priority::P0,
-                has_symbols: true,
-            },
-            addr(9001),
-        );
-        assert!(matches!(
-            r[0].1,
-            SchedulerMsg::Registered { sharing_stage: true, .. }
-        ));
-        // Unknown service → measurement stage.
-        let r = s.handle(
-            ClientMsg::Register {
-                task_key: TaskKey::new("new"),
-                priority: Priority::P5,
-                has_symbols: true,
-            },
-            addr(9002),
-        );
-        assert!(matches!(
-            r[0].1,
-            SchedulerMsg::Registered { sharing_stage: false, .. }
-        ));
-        // No symbols → never sharing stage, even with a profile.
-        let r = s.handle(
-            ClientMsg::Register {
-                task_key: TaskKey::new("hi"),
-                priority: Priority::P0,
-                has_symbols: false,
-            },
-            addr(9001),
-        );
-        assert!(matches!(
-            r[0].1,
-            SchedulerMsg::Registered { sharing_stage: false, .. }
-        ));
-    }
-
-    #[test]
-    fn priority_hold_and_window_release() {
-        let mut s = server_with_profiles();
-        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
-            s.handle(
-                ClientMsg::Register {
-                    task_key: TaskKey::new(key),
-                    priority: prio,
-                    has_symbols: true,
-                },
-                addr(port),
-            );
-            s.handle(
-                ClientMsg::TaskStart {
-                    task_key: TaskKey::new(key),
-                    task_id: TaskId(0),
-                },
-                addr(port),
-            );
-        }
-
-        // Holder launch → immediate release.
-        let r = s.handle(launch_msg("hi", "hk", 0), addr(9001));
-        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
-
-        // Low-priority launch → held.
-        let r = s.handle(launch_msg("lo", "lk", 0), addr(9002));
-        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
-        assert_eq!(s.stats().holds, 1);
-
-        // Holder kernel completes → window opens → held launch released.
-        let releases = s.open_window(&TaskKey::new("hi"), &kid("hk"));
-        assert_eq!(releases.len(), 1);
-        assert_eq!(releases[0].0, addr(9002));
-        assert!(matches!(releases[0].1, SchedulerMsg::LaunchNow { seq: 0, .. }));
-        assert_eq!(s.stats().windows, 1);
-
-        // Next holder launch with the window still open → early stop.
-        let r = s.handle(launch_msg("hi", "hk", 1), addr(9001));
-        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
-        assert_eq!(s.stats().early_stops, 1);
-    }
-
-    #[test]
-    fn completion_message_opens_window() {
-        let mut s = server_with_profiles();
-        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
-            s.handle(
-                ClientMsg::Register {
-                    task_key: TaskKey::new(key),
-                    priority: prio,
-                    has_symbols: true,
-                },
-                addr(port),
-            );
-            s.handle(
-                ClientMsg::TaskStart {
-                    task_key: TaskKey::new(key),
-                    task_id: TaskId(0),
-                },
-                addr(port),
-            );
-        }
-        s.handle(launch_msg("hi", "hk", 0), addr(9001));
-        s.handle(launch_msg("lo", "lk", 0), addr(9002));
-        // The wire-level Completion (task/seq only) finds the kernel id
-        // and opens the window, releasing the held low-prio launch.
-        let r = s.handle(
-            ClientMsg::Completion {
-                task_key: TaskKey::new("hi"),
-                task_id: TaskId(0),
-                seq: 0,
-                exec: Duration::from_micros(200),
-                finished_at: SimTime(1),
-            },
-            addr(9001),
-        );
-        assert_eq!(r.len(), 1);
-        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
-    }
-
-    #[test]
-    fn unknown_task_key_launch_defaults_to_lowest_priority() {
-        let mut s = server_with_profiles();
-        // "hi" is registered and active; a launch arrives from a service
-        // that never registered — it must not jump the holder.
-        s.handle(
-            ClientMsg::Register {
-                task_key: TaskKey::new("hi"),
-                priority: Priority::P0,
-                has_symbols: true,
-            },
-            addr(9001),
-        );
-        s.handle(
-            ClientMsg::TaskStart {
-                task_key: TaskKey::new("hi"),
-                task_id: TaskId(0),
-            },
-            addr(9001),
-        );
-        let r = s.handle(launch_msg("ghost", "gk", 0), addr(9009));
-        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
-    }
-
-    #[test]
-    fn re_registration_updates_address() {
-        let mut s = server_with_profiles();
-        for port in [9001, 9002] {
-            s.handle(
-                ClientMsg::Register {
-                    task_key: TaskKey::new("lo"),
-                    priority: Priority::P4,
-                    has_symbols: true,
-                },
-                addr(port),
-            );
-        }
-        // Also a holder so lo's launch parks.
-        s.handle(
-            ClientMsg::Register {
-                task_key: TaskKey::new("hi"),
-                priority: Priority::P0,
-                has_symbols: true,
-            },
-            addr(9000),
-        );
-        for key in ["hi", "lo"] {
-            s.handle(
-                ClientMsg::TaskStart {
-                    task_key: TaskKey::new(key),
-                    task_id: TaskId(0),
-                },
-                addr(9000),
-            );
-        }
-        s.handle(launch_msg("hi", "hk", 0), addr(9000));
-        s.handle(launch_msg("lo", "lk", 0), addr(9002));
-        // Release goes to the LATEST registered address (9002).
-        let releases = s.open_window(&TaskKey::new("hi"), &kid("hk"));
-        assert_eq!(releases[0].0, addr(9002));
-    }
-
-    #[test]
-    fn disconnect_removes_client_and_active_entry() {
-        let mut s = server_with_profiles();
-        s.handle(
-            ClientMsg::Register {
-                task_key: TaskKey::new("hi"),
-                priority: Priority::P0,
-                has_symbols: true,
-            },
-            addr(9001),
-        );
-        s.handle(
-            ClientMsg::TaskStart {
-                task_key: TaskKey::new("hi"),
-                task_id: TaskId(0),
-            },
-            addr(9001),
-        );
-        s.handle(
-            ClientMsg::Disconnect {
-                task_key: TaskKey::new("hi"),
-            },
-            addr(9001),
-        );
-        // Re-registering after disconnect works and no stale holder blocks
-        // other traffic: a fresh low-priority launch is released (no
-        // active holder).
-        s.handle(
-            ClientMsg::Register {
-                task_key: TaskKey::new("lo"),
-                priority: Priority::P9,
-                has_symbols: true,
-            },
-            addr(9002),
-        );
-        let r = s.handle(launch_msg("lo", "lk", 0), addr(9002));
-        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
-    }
-
-    #[test]
-    fn task_end_releases_new_holder_class() {
-        let mut s = server_with_profiles();
-        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
-            s.handle(
-                ClientMsg::Register {
-                    task_key: TaskKey::new(key),
-                    priority: prio,
-                    has_symbols: true,
-                },
-                addr(port),
-            );
-            s.handle(
-                ClientMsg::TaskStart {
-                    task_key: TaskKey::new(key),
-                    task_id: TaskId(0),
-                },
-                addr(port),
-            );
-        }
-        s.handle(launch_msg("lo", "lk", 3), addr(9002));
-        // Holder finishes its task: lo becomes holder, gets released.
-        let r = s.handle(
-            ClientMsg::TaskEnd {
-                task_key: TaskKey::new("hi"),
-                task_id: TaskId(0),
-            },
-            addr(9001),
-        );
-        assert_eq!(r.len(), 1);
-        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { seq: 3, .. }));
+    /// Serve until every client that registered has disconnected (or
+    /// `deadline` elapses) — clean-shutdown test harnesses use this.
+    pub fn run_until_drained(&mut self, deadline: Option<StdDuration>) -> Result<()> {
+        self.daemon.serve(&self.transport, deadline, true)
     }
 }

@@ -253,12 +253,20 @@ fn prop_protocol_round_trip_random() {
     for seed in 0..200u64 {
         let mut rng = Rng::new(seed);
         let key = TaskKey::new(format!("svc-{}", rng.below(1000)));
-        let msg = match rng.index(6) {
-            0 => ClientMsg::Register {
-                task_key: key,
-                priority: Priority::from_index(rng.index(10)).unwrap(),
-                has_symbols: rng.chance(0.5),
-            },
+        let msg = match rng.index(7) {
+            0 => {
+                let model = if rng.chance(0.5) {
+                    Some(format!("model-{}", rng.below(50)))
+                } else {
+                    None
+                };
+                ClientMsg::Register {
+                    task_key: key,
+                    priority: Priority::from_index(rng.index(10)).unwrap(),
+                    has_symbols: rng.chance(0.5),
+                    model,
+                }
+            }
             1 => ClientMsg::TaskStart {
                 task_key: key,
                 task_id: TaskId(rng.next_u64() >> 1),
@@ -283,16 +291,23 @@ fn prop_protocol_round_trip_random() {
                 task_key: key,
                 task_id: TaskId(rng.below(1 << 30)),
             },
+            5 => ClientMsg::ReleaseQuery {
+                task_key: key,
+                seq: rng.below(1 << 20) as u32,
+            },
             _ => ClientMsg::Disconnect { task_key: key },
         };
-        let back = ClientMsg::decode(&msg.encode().unwrap())
+        // The v2 retransmit envelope survives the round trip too.
+        let msg_seq = rng.next_u64() >> 1;
+        let (seq_back, back) = ClientMsg::decode_seq(&msg.encode_seq(msg_seq).unwrap())
             .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(seq_back, msg_seq, "seed {seed}");
         assert_eq!(back, msg, "seed {seed}");
     }
     for seed in 0..60u64 {
         let mut rng = Rng::new(seed + 999);
         let key = TaskKey::new("svc");
-        let msg = match rng.index(3) {
+        let msg = match rng.index(4) {
             0 => SchedulerMsg::Registered {
                 task_key: key,
                 sharing_stage: rng.chance(0.5),
@@ -301,6 +316,9 @@ fn prop_protocol_round_trip_random() {
                 task_key: key,
                 task_id: TaskId(rng.below(1 << 30)),
                 seq: rng.below(1 << 16) as u32,
+            },
+            2 => SchedulerMsg::Ack {
+                msg_seq: rng.next_u64() >> 1,
             },
             _ => SchedulerMsg::Hold {
                 task_key: key,
