@@ -82,10 +82,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut hp = Vec::new();
 
     for mode in [Mode::Sharing, Mode::Fikit] {
-        let cfg = EngineConfig {
+        let mut cfg = EngineConfig {
             mode,
             ..EngineConfig::default()
         };
+        // Real compute drifts with machine load: let the sharing-stage
+        // refiner track it (DESIGN.md §9).
+        cfg.online.enabled = true;
         let engine = RealTimeEngine::new(cfg, services(requests), &manifest)?;
         // Measurement stage (real executions, real timings).
         let profiles = engine.profile()?;
@@ -105,12 +108,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let h = report.service(&TaskKey::new(HIGH)).unwrap().jct.mean_ms();
         hp.push(h);
         println!(
-            "{mode}: executed {} real kernels in {:.2}s  (fills={} windows={} early_stops={})",
+            "{mode}: executed {} real kernels in {:.2}s  (fills={} windows={} early_stops={} refined={})",
             report.kernels_executed,
             report.wall.as_secs_f64(),
             report.fills,
             report.windows,
             report.early_stops,
+            report.profiles_refined,
         );
     }
 

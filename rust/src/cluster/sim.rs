@@ -248,6 +248,15 @@ pub struct ChurnConfig {
     pub qos: QosConfig,
     /// Fleet metrics bucket width (trajectory reporting).
     pub metrics_window: Duration,
+    /// Cold-start admission (DESIGN.md §9): services enter sharing
+    /// stage with a same-model **prior** instead of blocking on an
+    /// exclusive measurement pass, and the per-GPU online refiner
+    /// converges the prior against observed behaviour. Off = the
+    /// paper's strict measurement-first lifecycle.
+    pub cold_start: bool,
+    /// Enable per-GPU online profile refinement even without cold-start
+    /// admission (implied by `cold_start`).
+    pub online: bool,
 }
 
 impl ChurnConfig {
@@ -262,6 +271,8 @@ impl ChurnConfig {
             arrivals,
             qos: QosConfig::default(),
             metrics_window: Duration::from_millis(1_000),
+            cold_start: false,
+            online: false,
         }
     }
 }
@@ -306,6 +317,9 @@ pub struct ChurnReport {
     pub migrations: usize,
     /// Arrivals refused because no device had capacity.
     pub rejected: usize,
+    /// Services admitted into sharing stage on a cold-start prior
+    /// (no exclusive measurement; DESIGN.md §9).
+    pub cold_starts: usize,
     /// Total completed tasks fleet-wide.
     pub completed_total: usize,
 }
@@ -325,10 +339,11 @@ impl ChurnReport {
     /// QoS trajectory.
     pub fn summary(&self) -> String {
         let mut out = format!(
-            "services={} rejected={} completed={} migrations={} qos_violations={}/{} \
+            "services={} rejected={} cold_starts={} completed={} migrations={} qos_violations={}/{} \
              high mean slowdown={:.2}x low throughput={:.1}/s sim_end={:.2}s\n",
             self.services.len(),
             self.rejected,
+            self.cold_starts,
             self.completed_total,
             self.migrations,
             self.qos_violations,
@@ -378,13 +393,25 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
             solo_ms.insert(name, solo_mean_ms(arrival.model, 12, cfg.seed)?);
         }
         if cfg.mode == Mode::Fikit && !model_profiles.contains_key(name) {
-            let mut base = ExperimentConfig {
-                seed: cfg.seed,
-                ..ExperimentConfig::default()
+            let profile = if cfg.cold_start {
+                // Cold-start admission (DESIGN.md §9): no exclusive
+                // measurement pass — the instance enters sharing stage
+                // on a same-model prior (origin = Prior) and the
+                // per-GPU online refiner converges it while serving.
+                arrival
+                    .model
+                    .spec()
+                    .structural_profile(TaskKey::new(name))
+            } else {
+                let mut base = ExperimentConfig {
+                    seed: cfg.seed,
+                    ..ExperimentConfig::default()
+                };
+                base.measurement.runs = 5;
+                let svc = ServiceConfig::new(arrival.model, Priority::P0);
+                profile_service(&base, &svc)?.profile
             };
-            base.measurement.runs = 5;
-            let svc = ServiceConfig::new(arrival.model, Priority::P0);
-            model_profiles.insert(name, profile_service(&base, &svc)?.profile);
+            model_profiles.insert(name, profile);
         }
     }
     // Each instance shares its model's measured profile under its own key.
@@ -397,6 +424,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
     }
 
     // --- per-GPU sims ---
+    let refine = (cfg.online || cfg.cold_start) && cfg.mode == Mode::Fikit;
     let gpu_cfgs: Vec<ExperimentConfig> = (0..cfg.gpus)
         .map(|g| {
             let mut c = ExperimentConfig {
@@ -405,6 +433,10 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                 ..ExperimentConfig::default()
             };
             c.measurement.runs = 5;
+            // Cold-start priors are only safe to serve on because the
+            // refiner converges them; plain online refinement is an
+            // opt-in QoS improvement under drift.
+            c.online.enabled = refine;
             c
         })
         .collect();
@@ -462,6 +494,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
     let mut qos_violations = 0usize;
     let mut migrations = 0usize;
     let mut rejected = 0usize;
+    let mut cold_starts = 0usize;
 
     // --- the serving loop ---
     while let Some(((t, _), ev)) = fleet_q.pop_first() {
@@ -493,6 +526,9 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                         services[idx].departed = arrival.at;
                     }
                     Some(gpu) => {
+                        if cfg.cold_start && cfg.mode == Mode::Fikit {
+                            cold_starts += 1;
+                        }
                         let key = TaskKey::new(format!("svc{idx}").as_str());
                         let mut svc_cfg = ServiceConfig::new(arrival.model, arrival.priority)
                             .with_key(key.as_str());
@@ -602,6 +638,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
         qos_violations,
         migrations,
         rejected,
+        cold_starts,
         completed_total,
     })
 }
@@ -789,6 +826,35 @@ mod tests {
         assert_eq!(a.migrations, b.migrations);
         assert_eq!(a.sim_end, b.sim_end);
         assert_eq!(a.fleet.len(), b.fleet.len());
+    }
+
+    /// Cold-start admission: no exclusive measurement happens, every
+    /// placed service enters sharing on a prior, the online refiner is
+    /// live, and the fleet still completes work deterministically.
+    #[test]
+    fn cold_start_admission_serves_on_priors() {
+        let mut cfg = ChurnConfig::new(2, PlacementPolicy::BestMatch, small_trace());
+        cfg.cold_start = true;
+        cfg.qos.scan_interval = Duration::from_millis(100);
+        cfg.qos.window = Duration::from_millis(200);
+        let report = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(report.cold_starts, 3, "every placed service cold-started");
+        for svc in &report.services {
+            assert!(svc.completed > 0, "{:?} completed nothing", svc.model);
+        }
+        assert!(report.summary().contains("cold_starts=3"));
+
+        // Deterministic under the fixed seed, like the measured path.
+        let replay = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(report.completed_total, replay.completed_total);
+        assert_eq!(report.sim_end, replay.sim_end);
+
+        // The strict lifecycle performs no cold starts.
+        let mut strict = ChurnConfig::new(2, PlacementPolicy::BestMatch, small_trace());
+        strict.qos.scan_interval = Duration::from_millis(100);
+        strict.qos.window = Duration::from_millis(200);
+        let strict_report = run_churn(&strict, &CompatMatrix::new()).unwrap();
+        assert_eq!(strict_report.cold_starts, 0);
     }
 
     #[test]

@@ -113,6 +113,9 @@ pub struct ExperimentConfig {
     pub measurement: MeasurementConfig,
     /// Enable the runtime feedback early stop (ablation switch).
     pub feedback: bool,
+    /// Online sharing-stage profile refinement (DESIGN.md §9). Disabled
+    /// by default: the paper's frozen-offline-profile behaviour.
+    pub online: crate::profile::OnlineConfig,
     /// Within-priority fill selection rule (ablation; paper: LongestFit).
     pub fill_policy: crate::coordinator::best_prio_fit::FillPolicy,
     /// Small-gap threshold ε for Algorithm 1.
@@ -141,6 +144,7 @@ impl Default for ExperimentConfig {
             symbols: SymbolTableModel::default(),
             measurement: MeasurementConfig::default(),
             feedback: true,
+            online: crate::profile::OnlineConfig::default(),
             fill_policy: crate::coordinator::best_prio_fit::FillPolicy::LongestFit,
             epsilon: default_epsilon(),
             seed: default_seed(),
@@ -210,6 +214,19 @@ impl ExperimentConfig {
             )
             .set("feedback", self.feedback)
             .set(
+                "online",
+                Json::obj()
+                    .set("enabled", self.online.enabled)
+                    .set("alpha", self.online.alpha)
+                    .set("z", self.online.z)
+                    .set("min_samples", self.online.min_samples)
+                    .set("shrink", self.online.shrink)
+                    .set("band_floor_frac", self.online.band_floor_frac)
+                    .set("cost_per_obs_ns", self.online.cost_per_obs.nanos())
+                    .set("track_errors", self.online.track_errors)
+                    .set("error_window", self.online.error_window),
+            )
+            .set(
                 "fill_policy",
                 match self.fill_policy {
                     crate::coordinator::best_prio_fit::FillPolicy::LongestFit => "longest",
@@ -271,6 +288,41 @@ impl ExperimentConfig {
             },
             None => defaults.measurement.clone(),
         };
+        let online = match v.get("online") {
+            Some(o) => {
+                let d = crate::profile::OnlineConfig::default();
+                crate::profile::OnlineConfig {
+                    enabled: o.get("enabled").and_then(Json::as_bool).unwrap_or(d.enabled),
+                    alpha: o.get("alpha").and_then(Json::as_f64).unwrap_or(d.alpha),
+                    z: o.get("z").and_then(Json::as_f64).unwrap_or(d.z),
+                    min_samples: o
+                        .get("min_samples")
+                        .and_then(Json::as_u64)
+                        .map(|n| n as u32)
+                        .unwrap_or(d.min_samples),
+                    shrink: o.get("shrink").and_then(Json::as_f64).unwrap_or(d.shrink),
+                    band_floor_frac: o
+                        .get("band_floor_frac")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(d.band_floor_frac),
+                    cost_per_obs: o
+                        .get("cost_per_obs_ns")
+                        .and_then(Json::as_u64)
+                        .map(Duration::from_nanos)
+                        .unwrap_or(d.cost_per_obs),
+                    track_errors: o
+                        .get("track_errors")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(d.track_errors),
+                    error_window: o
+                        .get("error_window")
+                        .and_then(Json::as_u64)
+                        .map(|n| n as u32)
+                        .unwrap_or(d.error_window),
+                }
+            }
+            None => defaults.online.clone(),
+        };
         Ok(ExperimentConfig {
             mode,
             services,
@@ -279,6 +331,7 @@ impl ExperimentConfig {
             symbols,
             measurement,
             feedback: v.get("feedback").and_then(Json::as_bool).unwrap_or(true),
+            online,
             fill_policy: match v.get("fill_policy").and_then(Json::as_str) {
                 Some(p) => p.parse()?,
                 None => Default::default(),
@@ -365,11 +418,22 @@ mod tests {
         cfg.services
             .push(ServiceConfig::new(ModelKind::Resnet50, Priority::P4).continuous_ms(5_000));
         cfg.horizon = Some(Duration::from_secs(30));
+        cfg.online.enabled = true;
+        cfg.online.band_floor_frac = 0.2;
+        cfg.online.cost_per_obs = Duration::from_nanos(275);
+        cfg.online.track_errors = true;
+        cfg.online.error_window = 48;
         cfg.validate().unwrap();
 
         let text = cfg.to_json().encode_pretty();
         let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.services.len(), 3);
+        assert!(back.online.enabled);
+        assert_eq!(back.online.band_floor_frac, 0.2);
+        assert_eq!(back.online.cost_per_obs, Duration::from_nanos(275));
+        assert!(back.online.track_errors);
+        assert_eq!(back.online.error_window, 48);
+        assert_eq!(back.online.alpha, cfg.online.alpha);
         assert_eq!(back.mode, Mode::Fikit);
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.horizon, cfg.horizon);

@@ -17,7 +17,9 @@ use super::Mode;
 use crate::config::{ExperimentConfig, ServiceConfig};
 use crate::core::{Duration, Interner, LaunchSource, Result, SimTime, TaskKey};
 use crate::metrics::{JctStats, TextTable, Timeline, TimelinePoint};
-use crate::profile::{ProfileStore, ResolvedProfile, SymbolResolver, TaskProfile};
+use crate::profile::{
+    OnlineRefiner, ProfileStore, RefinerStats, ResolvedProfile, SymbolResolver, TaskProfile,
+};
 use crate::simulator::{
     DeviceStats, Event, EventQueue, ProcessAction, ServiceProcess, SimDevice, Stage, TaskOutcome,
 };
@@ -44,6 +46,8 @@ pub struct ExperimentReport {
     pub outcomes: Vec<TaskOutcome>,
     pub device: DeviceStats,
     pub scheduler: Option<SchedulerStats>,
+    /// Online refinement counters (FIKIT mode with `cfg.online.enabled`).
+    pub refiner: Option<RefinerStats>,
     /// Simulated time at which the run ended.
     pub sim_end: SimTime,
     /// Events processed (sim-perf metric).
@@ -120,6 +124,16 @@ impl ExperimentReport {
                 sched.preemptions,
                 sched.feedback.windows,
                 sched.feedback.early_stops,
+            ));
+        }
+        if let Some(r) = &self.refiner {
+            out.push_str(&format!(
+                "refiner: obs={}+{} drifts={} snapshots={} max_epoch={}\n",
+                r.exec_observations,
+                r.gap_observations,
+                r.drifts,
+                r.snapshots_published,
+                r.max_epoch,
             ));
         }
         out
@@ -233,6 +247,10 @@ pub struct GpuSim<'a> {
     device: SimDevice,
     events: EventQueue,
     scheduler: Option<FikitScheduler>,
+    /// Sharing-stage profile refiner (FIKIT mode with online refinement
+    /// enabled). Fed from the event loop; its published snapshots are
+    /// swapped into the scheduler between events (DESIGN.md §9).
+    refiner: Option<OnlineRefiner>,
     outcomes: Vec<TaskOutcome>,
     /// Remaining follow-up arrivals for BackToBack patterns.
     b2b_remaining: Vec<u32>,
@@ -273,6 +291,9 @@ impl<'a> GpuSim<'a> {
             })
         });
 
+        let refiner = (cfg.mode == Mode::Fikit && cfg.online.enabled)
+            .then(|| OnlineRefiner::new(cfg.online.clone()));
+
         let mut sim = GpuSim {
             cfg,
             store,
@@ -280,6 +301,7 @@ impl<'a> GpuSim<'a> {
             device: SimDevice::new(cfg.device.clone()),
             events: EventQueue::new(),
             scheduler,
+            refiner,
             outcomes: Vec::new(),
             b2b_remaining: Vec::new(),
             detached: Vec::new(),
@@ -337,6 +359,9 @@ impl<'a> GpuSim<'a> {
                 if let Some(sched) = self.scheduler.as_mut() {
                     sched.unregister_service(self.procs[idx].task_handle());
                 }
+                if let Some(refiner) = self.refiner.as_mut() {
+                    refiner.unregister(self.procs[idx].task_handle());
+                }
             }
         }
         Ok(if self.procs[idx].is_active() {
@@ -390,6 +415,26 @@ impl<'a> GpuSim<'a> {
         self.scheduler.as_ref().map(|s| s.stats())
     }
 
+    /// The online refiner, when enabled (drift experiments read its
+    /// stats and error windows through this).
+    pub fn refiner(&self) -> Option<&OnlineRefiner> {
+        self.refiner.as_ref()
+    }
+
+    /// Inject gap interference into a hosted service: traces of its
+    /// future tasks sample CPU-side think gaps scaled by `scale`
+    /// (DESIGN.md §9 — the in-sim stand-in for co-location contention
+    /// shifting real gaps). The offline profile is deliberately NOT
+    /// updated: the divergence is exactly what the online refiner must
+    /// detect and re-converge on (`fikit drift`).
+    pub fn inject_gap_scale(&mut self, key: &TaskKey, scale: f64) -> Result<()> {
+        let idx = *self.key_to_idx.get(key).ok_or_else(|| {
+            crate::core::Error::Invariant(format!("gap injection on unknown service {key}"))
+        })?;
+        self.procs[idx].set_gap_scale(scale);
+        Ok(())
+    }
+
     /// No events left: every attached service is quiescent.
     pub fn is_idle(&self) -> bool {
         self.events.is_empty()
@@ -414,6 +459,9 @@ impl<'a> GpuSim<'a> {
             // touches the string-keyed store again for this service.
             let profile = self.store.require(&service.key)?;
             let resolved = ResolvedProfile::resolve(profile, &mut self.interner);
+            if let Some(refiner) = self.refiner.as_mut() {
+                refiner.register(handle, &resolved);
+            }
             sched.register_service(handle, resolved);
         }
         self.key_to_idx.insert(service.key.clone(), idx);
@@ -646,15 +694,53 @@ impl<'a> GpuSim<'a> {
                     let subs = sched.on_kernel_done(&record, now);
                     self.submit_all(subs, now);
                 }
+                let (th, kh, exec, finished) = (
+                    record.task_handle,
+                    record.kernel_handle,
+                    record.exec_time(),
+                    record.finished_at,
+                );
                 match self.procs[svc].on_kernel_done(record, now) {
                     ProcessAction::IssueAt(t) => {
+                        // Sync completion: the process resumes at `t`, so
+                        // the observed post-kernel think gap is `t −
+                        // finished` — the non-intrusive sharing-stage
+                        // signal the refiner learns SG drift from
+                        // (DESIGN.md §9; no timing events involved).
+                        self.refine(th, kh, exec, Some(t.since(finished)));
                         self.events.push(t, Event::IssueKernel { svc });
                     }
-                    ProcessAction::None => {}
+                    ProcessAction::None => {
+                        // Pipelined (async) completion: no attributable
+                        // device-idle gap — learn the exec time only.
+                        self.refine(th, kh, exec, None);
+                    }
                     ProcessAction::TaskCompleted(outcome) => {
+                        self.refine(th, kh, exec, None);
                         self.on_task_completed(svc, outcome, now);
                     }
                 }
+            }
+        }
+    }
+
+    /// Feed one completed kernel to the refiner; when the observation
+    /// trips drift, swap the refreshed snapshot into the scheduler —
+    /// the epoch swap happens here, between events, so no launch ever
+    /// sees a half-written table (DESIGN.md §9).
+    fn refine(
+        &mut self,
+        th: crate::core::TaskHandle,
+        kh: crate::core::KernelHandle,
+        exec: Duration,
+        gap_after: Option<Duration>,
+    ) {
+        let Some(refiner) = self.refiner.as_mut() else {
+            return;
+        };
+        if let Some(snapshot) = refiner.observe(th, kh, exec, gap_after) {
+            if let Some(sched) = self.scheduler.as_mut() {
+                sched.refresh_service(th, snapshot);
             }
         }
     }
@@ -674,6 +760,9 @@ impl<'a> GpuSim<'a> {
         if self.detached[svc] && !self.procs[svc].is_active() {
             if let Some(sched) = self.scheduler.as_mut() {
                 sched.unregister_service(self.procs[svc].task_handle());
+            }
+            if let Some(refiner) = self.refiner.as_mut() {
+                refiner.unregister(self.procs[svc].task_handle());
             }
         }
 
@@ -740,6 +829,7 @@ impl<'a> GpuSim<'a> {
             outcomes: self.outcomes,
             device: self.device.stats().clone(),
             scheduler: self.scheduler.map(|s| s.into_stats()),
+            refiner: self.refiner.map(|r| r.into_stats()),
             sim_end: self.sim_now,
             events: self.events_processed,
             wall,
@@ -853,6 +943,70 @@ mod tests {
         for (sa, sb) in a.services.iter().zip(&b.services) {
             assert_eq!(sa.jct.mean, sb.jct.mean);
         }
+    }
+
+    /// The online-refinement loop end to end: faithful observations
+    /// keep the offline profile (epoch 0); injected gap interference is
+    /// detected and a refreshed snapshot is swapped into the scheduler.
+    #[test]
+    fn online_refinement_detects_injected_gap_drift() {
+        let mut cfg = two_service_cfg(Mode::Fikit, 40);
+        cfg.online.enabled = true;
+        cfg.validate().unwrap();
+        let mut store = ProfileStore::new();
+        for svc in &cfg.services {
+            store.insert(profile_service(&cfg, svc).unwrap().profile);
+        }
+        let hi_key = cfg.services[0].to_service().key;
+
+        // Phase A: no interference — estimates converge, no (or nearly
+        // no) drift against the freshly measured profile.
+        let mut sim = GpuSim::new(&cfg, &store).unwrap();
+        sim.run_until(SimTime(200_000_000));
+        let drifts_a = sim.refiner().unwrap().stats().drifts;
+
+        // Phase B: inject 2x gap interference on the high-prio service.
+        sim.inject_gap_scale(&hi_key, 2.0).unwrap();
+        sim.run_until(SimTime::MAX);
+        let stats = sim.refiner().unwrap().stats();
+        assert!(
+            stats.drifts > drifts_a,
+            "injected interference undetected: {} drifts before, {} after",
+            drifts_a,
+            stats.drifts
+        );
+        assert!(stats.snapshots_published >= 1, "no snapshot published");
+        assert!(stats.max_epoch >= 1);
+        assert!(stats.gap_observations > 0 && stats.exec_observations > 0);
+        // The refinement cost stays inside the paper's 5 % budget.
+        let overhead = sim.refiner().unwrap().modeled_overhead();
+        assert!(
+            overhead.as_secs_f64() / sim.now().as_secs_f64() < 0.05,
+            "refinement overhead {overhead} vs sim {}",
+            sim.now()
+        );
+    }
+
+    /// Online refinement is deterministic and default-off: with the
+    /// switch off the refiner never exists, and two refined runs agree.
+    #[test]
+    fn online_refinement_default_off_and_deterministic() {
+        let cfg = two_service_cfg(Mode::Fikit, 10);
+        let report = run_experiment(&cfg).unwrap();
+        assert!(report.refiner.is_none(), "refiner must be opt-in");
+
+        let run = || {
+            let mut cfg = two_service_cfg(Mode::Fikit, 15);
+            cfg.online.enabled = true;
+            run_experiment(&cfg).unwrap()
+        };
+        let (a, b) = (run(), run());
+        let (ra, rb) = (a.refiner.unwrap(), b.refiner.unwrap());
+        assert_eq!(ra.exec_observations, rb.exec_observations);
+        assert_eq!(ra.gap_observations, rb.gap_observations);
+        assert_eq!(ra.drifts, rb.drifts);
+        assert_eq!(ra.snapshots_published, rb.snapshots_published);
+        assert_eq!(a.sim_end, b.sim_end);
     }
 
     #[test]

@@ -67,6 +67,9 @@ pub struct SchedulerStats {
     pub drained: u64,
     /// Holder changes caused by a higher-priority task starting.
     pub preemptions: u64,
+    /// Refreshed profile snapshots swapped in by the online refiner
+    /// (epoch swaps; DESIGN.md §9).
+    pub profile_refreshes: u64,
     /// Feedback telemetry.
     pub feedback: FeedbackStats,
 }
@@ -127,6 +130,34 @@ impl FikitScheduler {
             self.resolved.resize_with(idx + 1, || None);
         }
         self.resolved[idx] = Some(profile);
+    }
+
+    /// Swap in a refreshed snapshot for an already-registered service —
+    /// the online refiner's epoch swap (DESIGN.md §9). Single-writer
+    /// double-buffering: the driver calls this between events, so no
+    /// launch ever observes a half-written table; a snapshot for a
+    /// service that already drained is dropped (its slot is `None`
+    /// again and must not be resurrected).
+    pub fn refresh_service(&mut self, handle: TaskHandle, profile: ResolvedProfile) {
+        if let Some(slot) = self.resolved.get_mut(handle.index()) {
+            if let Some(current) = slot.as_mut() {
+                debug_assert!(
+                    profile.epoch() > current.epoch(),
+                    "epoch must advance on refresh"
+                );
+                *current = profile;
+                self.stats.profile_refreshes += 1;
+            }
+        }
+    }
+
+    /// Current profile epoch of a service (0 = offline attach-time
+    /// resolution or unregistered).
+    pub fn profile_epoch(&self, handle: TaskHandle) -> u64 {
+        self.resolved
+            .get(handle.index())
+            .and_then(|s| s.as_ref())
+            .map_or(0, |p| p.epoch())
     }
 
     /// Drop a departed service's resolved profile (driver calls this
@@ -614,6 +645,46 @@ mod tests {
 
         // Out-of-range / unknown handles are a no-op.
         h.sched.unregister_service(TaskHandle::from_index(999));
+    }
+
+    /// The online refiner's epoch swap: a refreshed snapshot replaces
+    /// the registered profile in place, the epoch advances, and a
+    /// refresh for a drained (unregistered) service is dropped.
+    #[test]
+    fn refresh_service_swaps_snapshot_in_place() {
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
+        assert_eq!(h.sched.profile_epoch(hi), 0);
+
+        // Refreshed prediction: hk's gap doubled to 2 ms.
+        let hk = h.interner.intern_kernel(&kid("hk"));
+        let snap = ResolvedProfile::from_rows(
+            vec![(hk, Duration::from_micros(200), Some(Duration::from_millis(2)))],
+            1,
+        );
+        h.sched.refresh_service(hi, snap);
+        assert_eq!(h.sched.profile_epoch(hi), 1);
+        assert_eq!(h.sched.stats().profile_refreshes, 1);
+
+        // The next window opens with the refreshed gap: a parked 300 µs
+        // fill plus a second one still fit the 2 ms budget.
+        let l0 = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        assert!(h.sched.on_launch(l0, SimTime::ZERO).is_empty());
+        let hl = h.launch("hi", "hk", Priority::P0, 0, SimTime::ZERO);
+        let rec = record(&hl, LaunchSource::Direct, SimTime::ZERO, 200);
+        let t = rec.finished_at;
+        let subs = h.sched.on_kernel_done(&rec, t);
+        assert_eq!(subs.len(), 1);
+        assert!(h.sched.window_open(), "2 ms refreshed gap leaves budget");
+
+        // A refresh for an unregistered handle must not resurrect it.
+        h.sched.unregister_service(lo);
+        let ghost = ResolvedProfile::from_rows(Vec::new(), 1);
+        h.sched.refresh_service(lo, ghost);
+        assert_eq!(h.sched.stats().profile_refreshes, 1);
+        assert_eq!(h.sched.profile_epoch(lo), 0);
     }
 
     /// A launch whose task never registered a profile (unbound handles)

@@ -48,6 +48,11 @@ pub struct DaemonConfig {
     pub epsilon: Duration,
     /// Runs required before a profile counts as ready.
     pub min_profile_runs: u32,
+    /// Online sharing-stage profile refinement, one refiner per shard
+    /// (DESIGN.md §9). Off by default — `fikit serve --online` enables
+    /// it; refined profiles shadow the loaded store and persist via
+    /// [`SchedulerDaemon::save_profiles`].
+    pub online: crate::profile::OnlineConfig,
 }
 
 impl Default for DaemonConfig {
@@ -58,6 +63,7 @@ impl Default for DaemonConfig {
             policy: PlacementPolicy::LeastLoaded,
             epsilon: DEFAULT_EPSILON,
             min_profile_runs: 1,
+            online: crate::profile::OnlineConfig::default(),
         }
     }
 }
@@ -77,6 +83,9 @@ pub struct DaemonStats {
     /// Releases minted by a shard whose client had vanished by routing
     /// time — previously dropped silently in `pump_fills`, now counted.
     pub releases_unroutable: u64,
+    /// Refined profiles harvested from shards and installed over the
+    /// loaded store (online refinement; DESIGN.md §9).
+    pub profiles_refined: u64,
 }
 
 /// The sharded scheduler daemon: registry + one shard per device.
@@ -93,7 +102,9 @@ impl SchedulerDaemon {
     pub fn new(cfg: DaemonConfig, profiles: ProfileStore) -> SchedulerDaemon {
         assert!(cfg.devices > 0, "daemon needs at least one device");
         let registry = Registry::new(cfg.devices, cfg.capacity, cfg.policy);
-        let shards = (0..cfg.devices).map(|_| Shard::new(cfg.epsilon)).collect();
+        let shards = (0..cfg.devices)
+            .map(|_| Shard::with_online(cfg.epsilon, cfg.online.clone()))
+            .collect();
         SchedulerDaemon {
             cfg,
             profiles,
@@ -299,9 +310,14 @@ impl SchedulerDaemon {
                     now,
                 )
             }
-            ClientMsg::Completion { task_key, seq, .. } => {
+            ClientMsg::Completion {
+                task_key,
+                seq,
+                exec,
+                ..
+            } => {
                 let mut out =
-                    self.shards[shard_idx].completion(&task_key, seq, &self.profiles, now);
+                    self.shards[shard_idx].completion(&task_key, seq, exec, &self.profiles, now);
                 out.push(SchedulerMsg::Ack { msg_seq });
                 out
             }
@@ -334,7 +350,31 @@ impl SchedulerDaemon {
                 }
             }
         };
+        // Harvest any profiles the shard's refiner republished while
+        // processing this message: they shadow the loaded store
+        // immediately (subsequent SK/SG lookups see refreshed numbers)
+        // and are what `save_profiles` persists across restarts.
+        let refined = self.shards[shard_idx].take_refined(&self.profiles);
+        if !refined.is_empty() {
+            self.stats.profiles_refined += refined.len() as u64;
+            for p in refined {
+                self.profiles.insert(p);
+            }
+        }
         self.route(&key, msg_seq, addr, produced)
+    }
+
+    /// The daemon's live profile store (loaded offline profiles plus
+    /// any refined overlays installed since).
+    pub fn profiles(&self) -> &ProfileStore {
+        &self.profiles
+    }
+
+    /// Persist the live store — including refined epochs — so a
+    /// restarted daemon resumes from the refined predictions instead of
+    /// the stale offline ones (versioned format: profile-format.md).
+    pub fn save_profiles(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.profiles.save(path)
     }
 
     fn handle_register(
@@ -929,6 +969,133 @@ mod tests {
         let r = d.handle(1, register("hi", Priority::P0), addr(9005));
         assert!(matches!(r[0].1, SchedulerMsg::Registered { .. }));
         assert_eq!(r[0].0, addr(9005));
+    }
+
+    /// The per-shard refiner end to end: wire completions whose exec
+    /// times drifted far from the offline SK make the shard republish a
+    /// refined profile; the daemon installs it over its store, persists
+    /// it, and a restarted daemon resolves the *identical*
+    /// `ResolvedProfile` from the saved file (the restart contract).
+    #[test]
+    fn shard_refiner_republishes_and_survives_restart() {
+        let mut cfg = DaemonConfig::default();
+        cfg.online.enabled = true;
+        let mut d = SchedulerDaemon::new(cfg, profiles());
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        drv.send(&mut d, task_start("hi"), addr(9001));
+        // Profiled SK(hk) = 200 µs; observed exec = 600 µs: drift.
+        for seq in 0..16 {
+            drv.send(&mut d, launch_msg("hi", "hk", seq), addr(9001));
+            drv.send(
+                &mut d,
+                ClientMsg::Completion {
+                    task_key: TaskKey::new("hi"),
+                    task_id: TaskId(0),
+                    seq,
+                    exec: Duration::from_micros(600),
+                    finished_at: SimTime(1),
+                },
+                addr(9001),
+            );
+        }
+        assert!(
+            d.stats().profiles_refined >= 1,
+            "exec drift must republish a refined profile"
+        );
+        let refined = d.profiles().get(&TaskKey::new("hi")).unwrap();
+        assert_eq!(refined.origin, crate::profile::ProfileOrigin::Refined);
+        assert!(refined.epoch >= 1);
+        let sk = refined.sk(&kid("hk")).unwrap();
+        assert!(
+            sk > Duration::from_micros(450),
+            "refined SK {sk} did not move toward the observed 600 µs"
+        );
+
+        // Persist → "restart" → identical ResolvedProfile.
+        let dir = std::env::temp_dir().join(format!("fikit-daemon-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+        d.save_profiles(&path).unwrap();
+        let reloaded_store = ProfileStore::load(&path).unwrap();
+        let restarted = SchedulerDaemon::new(DaemonConfig::default(), reloaded_store);
+        let persisted_epoch = restarted.profiles().get(&TaskKey::new("hi")).unwrap().epoch;
+
+        // Epochs never regress across a restart: a refining restarted
+        // daemon publishes *past* the persisted epoch, not from 1.
+        let mut cfg2 = DaemonConfig::default();
+        cfg2.online.enabled = true;
+        let mut d2 = SchedulerDaemon::new(cfg2, ProfileStore::load(&path).unwrap());
+        let mut drv2 = Driver::new();
+        drv2.send(&mut d2, register("hi", Priority::P0), addr(9011));
+        drv2.send(&mut d2, task_start("hi"), addr(9011));
+        for seq in 0..16 {
+            drv2.send(&mut d2, launch_msg("hi", "hk", seq), addr(9011));
+            drv2.send(
+                &mut d2,
+                ClientMsg::Completion {
+                    task_key: TaskKey::new("hi"),
+                    task_id: TaskId(0),
+                    seq,
+                    exec: Duration::from_millis(2),
+                    finished_at: SimTime(1),
+                },
+                addr(9011),
+            );
+        }
+        let re_refined = d2.profiles().get(&TaskKey::new("hi")).unwrap();
+        assert!(
+            re_refined.epoch > persisted_epoch,
+            "epoch regressed across restart: {} after, {} persisted",
+            re_refined.epoch,
+            persisted_epoch
+        );
+        std::fs::remove_dir_all(&dir).ok();
+
+        let before = d.profiles().get(&TaskKey::new("hi")).unwrap();
+        let after = restarted.profiles().get(&TaskKey::new("hi")).unwrap();
+        assert_eq!(after.epoch, before.epoch);
+        assert_eq!(after.origin, before.origin);
+        let mut i1 = crate::core::Interner::new();
+        let rp1 = crate::profile::ResolvedProfile::resolve(before, &mut i1);
+        let mut i2 = crate::core::Interner::new();
+        let rp2 = crate::profile::ResolvedProfile::resolve(after, &mut i2);
+        assert_eq!(i1.kernel_count(), i2.kernel_count());
+        let h1 = i1.kernel_handle(&kid("hk")).unwrap();
+        let h2 = i2.kernel_handle(&kid("hk")).unwrap();
+        assert_eq!(h1, h2, "handles stable across the restart");
+        assert_eq!(rp1.sk(h1), rp2.sk(h2));
+        assert_eq!(rp1.sg(h1), rp2.sg(h2));
+
+        // The refiner map is bounded by connected services.
+        assert_eq!(d.shard_sizes()[0].refiner_tasks, 1);
+        drv.send(
+            &mut d,
+            ClientMsg::Disconnect {
+                task_key: TaskKey::new("hi"),
+            },
+            addr(9001),
+        );
+        assert_eq!(d.shard_sizes()[0].refiner_tasks, 0);
+    }
+
+    /// With refinement off (the default) the wire path never tracks or
+    /// republishes anything — frozen offline profiles, as before.
+    #[test]
+    fn refinement_off_by_default_keeps_profiles_frozen() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        drv.send(&mut d, task_start("hi"), addr(9001));
+        for seq in 0..16 {
+            drv.send(&mut d, launch_msg("hi", "hk", seq), addr(9001));
+            drv.send(&mut d, completion("hi", seq), addr(9001));
+        }
+        assert_eq!(d.stats().profiles_refined, 0);
+        assert_eq!(d.shard_sizes()[0].refiner_tasks, 0);
+        let p = d.profiles().get(&TaskKey::new("hi")).unwrap();
+        assert_eq!(p.origin, crate::profile::ProfileOrigin::Measured);
+        assert_eq!(p.epoch, 0);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::core::{
     Duration, Interner, KernelId, KernelLaunch, Priority, SimTime, TaskHandle, TaskId, TaskKey,
 };
 use crate::hook::protocol::SchedulerMsg;
-use crate::profile::ProfileStore;
+use crate::profile::{KeyedRefiner, OnlineConfig, ProfileStore, RefinerStats, TaskProfile};
 use std::collections::HashMap;
 
 /// Counters exposed per shard (and summed fleet-wide by the daemon).
@@ -88,6 +88,9 @@ pub struct ShardSizes {
     pub interned_tasks: usize,
     /// Interned kernel ids (same bound).
     pub interned_kernels: usize,
+    /// Services tracked by the online refiner (purged on disconnect —
+    /// bounded by connected services, like the other maps).
+    pub refiner_tasks: usize,
 }
 
 /// One device's scheduling state inside the daemon.
@@ -105,11 +108,25 @@ pub struct Shard {
     /// messages (which carry only task/seq) can look up the profiled
     /// gap. Purged when the service's task ends or it disconnects.
     launched_kernels: HashMap<(TaskKey, u32), KernelId>,
+    /// Sharing-stage refiner (DESIGN.md §9): learns per-kernel SK from
+    /// wire `Completion` exec times and SG from completion→next-launch
+    /// arrival gaps — the daemon-side analogue of the driver's
+    /// `OnlineRefiner`, at the wire boundary where keys are strings.
+    /// One per shard; the daemon harvests [`Shard::take_refined`] and
+    /// shadows its profile store with the results.
+    refiner: KeyedRefiner,
     stats: ServerStats,
 }
 
 impl Shard {
     pub fn new(epsilon: Duration) -> Shard {
+        Shard::with_online(epsilon, OnlineConfig::default())
+    }
+
+    /// A shard with an explicit online-refinement config (the default
+    /// [`Shard::new`] keeps refinement off, matching the paper's frozen
+    /// profiles).
+    pub fn with_online(epsilon: Duration, online: OnlineConfig) -> Shard {
         Shard {
             epsilon,
             active: Vec::new(),
@@ -117,6 +134,7 @@ impl Shard {
             window: None,
             interner: Interner::new(),
             launched_kernels: HashMap::new(),
+            refiner: KeyedRefiner::new(online),
             stats: ServerStats::default(),
         }
     }
@@ -138,7 +156,22 @@ impl Shard {
             launched_kernels: self.launched_kernels.len(),
             interned_tasks: self.interner.task_count(),
             interned_kernels: self.interner.kernel_count(),
+            refiner_tasks: self.refiner.tracked_tasks(),
         }
+    }
+
+    /// Refinement counters of this shard.
+    pub fn refiner_stats(&self) -> &RefinerStats {
+        self.refiner.stats()
+    }
+
+    /// Harvest refined profiles for services whose observed behaviour
+    /// drifted outside the confidence band (empty when refinement is
+    /// off or nothing drifted). The daemon installs these into its
+    /// store — and persists them, so a restarted daemon resumes from
+    /// the refined predictions (`rust/docs/profile-format.md`).
+    pub fn take_refined(&mut self, profiles: &ProfileStore) -> Vec<TaskProfile> {
+        self.refiner.take_refined(profiles)
     }
 
     /// Whether a fill window is currently open.
@@ -179,6 +212,10 @@ impl Shard {
     pub fn task_end(&mut self, key: &TaskKey) -> Vec<SchedulerMsg> {
         self.active.retain(|(k, _)| k != key);
         self.retire(key);
+        // The gap between this task's last completion and the *next*
+        // task's first launch is inter-invocation idle, not a
+        // post-kernel think gap — never fold it into SG.
+        self.refiner.clear_pending(key);
         self.promote_holder_class()
     }
 
@@ -191,6 +228,9 @@ impl Shard {
         self.retire(key);
         let purged = self.queues.purge_where(|l| &l.task_key == key);
         self.stats.purged_launches += purged.len() as u64;
+        // A departed service's online estimates go with it (the refiner
+        // map is bounded by connected services, like every other map).
+        self.refiner.forget(key);
         self.promote_holder_class()
     }
 
@@ -253,6 +293,10 @@ impl Shard {
             if holder.as_ref().is_some_and(|(hk, _)| hk == key) && self.window.take().is_some() {
                 self.stats.early_stops += 1;
             }
+            // This launch's arrival closes the service's pending
+            // completion→launch gap observation (sharing-stage SG
+            // learning at zero kernel-timing cost; DESIGN.md §9).
+            self.refiner.observe_next_launch(key, now);
             self.stats.releases_immediate += 1;
             self.launched_kernels.insert((key.clone(), seq), kernel);
             vec![SchedulerMsg::LaunchNow {
@@ -300,6 +344,7 @@ impl Shard {
         &mut self,
         key: &TaskKey,
         seq: u32,
+        exec: Duration,
         profiles: &ProfileStore,
         now: SimTime,
     ) -> Vec<SchedulerMsg> {
@@ -310,6 +355,11 @@ impl Shard {
         let Some(kernel) = self.launched_kernels.remove(&(key.clone(), seq)) else {
             return Vec::new();
         };
+        // The wire Completion already carries the client-measured exec
+        // time — fold it into the online SK estimate and arm the gap
+        // observation that the next holder launch will close.
+        self.refiner
+            .observe_exec(key, &kernel, exec, now, profiles.get(key));
         self.open_window(key, &kernel, profiles, now)
     }
 

@@ -1,0 +1,240 @@
+//! **Drift** — online profile refinement under injected interference
+//! (DESIGN.md §9; `fikit drift`).
+//!
+//! The scenario: a high-priority detector and a low-priority segmenter
+//! share one FIKIT GPU with online refinement enabled. Mid-run, gap
+//! interference is injected into the detector — its real CPU think gaps
+//! inflate 3× (the in-sim stand-in for co-location contention shifting
+//! observed gaps) while the offline `SG` table stays stale. The
+//! experiment tracks the windowed relative gap-prediction error
+//! (`|observed − predicted| / predicted`, 24 observations per window)
+//! through three phases:
+//!
+//! 1. **converged** — sharing against the freshly measured profile:
+//!    the error floor is the workload's intrinsic log-normal jitter;
+//! 2. **injected** — the first post-injection window spikes while
+//!    predictions are stale;
+//! 3. **re-converged** — the refiner detects the drift (EWMA mean
+//!    leaves the confidence band), publishes refreshed epoch snapshots,
+//!    and the error returns to the converged band.
+//!
+//! Shape checks pin detection (drift + snapshot counters move), the
+//! spike, re-convergence (final windows back within 1.5× of the
+//! converged floor), the ≤ 5 % accounted refinement overhead, and
+//! deterministic replay. The zero-allocation guarantee of the
+//! refinement path is enforced separately by `tests/hotpath_alloc.rs`.
+
+use super::{ExperimentResult, Options, ShapeCheck};
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::driver::{profile_service, GpuSim};
+use crate::coordinator::Mode;
+use crate::core::{Priority, Result, SimTime, TaskKey};
+use crate::metrics::TextTable;
+use crate::profile::{ProfileStore, RefinerStats};
+use crate::workload::ModelKind;
+
+/// Gap inflation factor injected at the phase boundary.
+const INJECTED_SCALE: f64 = 3.0;
+
+/// One full scenario run: phase timings scale with `opts.scale`
+/// (clamped so windows stay ≫ one detector JCT).
+struct Outcome {
+    /// Closed error windows, in observation order.
+    windows: Vec<f64>,
+    /// Number of windows closed before the injection.
+    cut: usize,
+    /// Refiner counters before the injection.
+    before: RefinerStats,
+    /// Final refiner counters.
+    after: RefinerStats,
+    /// Modeled refinement overhead as a fraction of simulated time.
+    overhead_frac: f64,
+    sim_end: SimTime,
+}
+
+fn scenario(opts: Options) -> Result<Outcome> {
+    let k = opts.scale.clamp(0.25, 1.0);
+    let phase_ms = (1_200.0 * k) as u64;
+
+    let mut cfg = ExperimentConfig {
+        mode: Mode::Fikit,
+        seed: opts.seed,
+        ..ExperimentConfig::default()
+    };
+    cfg.online.enabled = true;
+    cfg.online.track_errors = true;
+    cfg.online.error_window = 24;
+    cfg.services.push(
+        ServiceConfig::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0)
+            .continuous_ms(2 * phase_ms)
+            .with_key("detector"),
+    );
+    cfg.services.push(
+        ServiceConfig::new(ModelKind::FcnResnet50, Priority::P5)
+            .continuous_ms(2 * phase_ms)
+            .with_key("segmenter"),
+    );
+    cfg.validate()?;
+
+    // Offline measurement (the paper's lifecycle), then serve.
+    let mut store = ProfileStore::new();
+    for svc in &cfg.services {
+        store.insert(profile_service(&cfg, svc)?.profile);
+    }
+    let mut sim = GpuSim::new(&cfg, &store)?;
+
+    // Phase 1: converge against the measured profile.
+    sim.run_until(SimTime(phase_ms * 1_000_000));
+    let refiner = sim.refiner().expect("online refinement enabled");
+    let cut = refiner.error_windows().windows().len();
+    let before = refiner.stats().clone();
+
+    // Phase 2+3: inject interference into the detector, run to the end.
+    sim.inject_gap_scale(&TaskKey::new("detector"), INJECTED_SCALE)?;
+    sim.run_until(SimTime::MAX);
+
+    let refiner = sim.refiner().expect("online refinement enabled");
+    let windows = refiner.error_windows().windows().to_vec();
+    let after = refiner.stats().clone();
+    let overhead_frac =
+        refiner.modeled_overhead().as_secs_f64() / sim.now().as_secs_f64().max(1e-9);
+    Ok(Outcome {
+        windows,
+        cut,
+        before,
+        after,
+        overhead_frac,
+        sim_end: sim.now(),
+    })
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Run the drift experiment.
+pub fn run(opts: Options) -> Result<ExperimentResult> {
+    let a = scenario(opts)?;
+    let b = scenario(opts)?; // replay for the determinism check
+
+    // Converged floor: the last windows before the injection.
+    let pre_slice = &a.windows[a.cut.saturating_sub(3)..a.cut.min(a.windows.len())];
+    let pre = mean(pre_slice);
+    // Spike: the first window that saw stale predictions.
+    let spike = a.windows.get(a.cut).copied().unwrap_or(0.0);
+    // Re-converged: the final windows of the run.
+    let post_slice = &a.windows[a.windows.len().saturating_sub(3)..];
+    let post = mean(post_slice);
+
+    let drifts_new = a.after.drifts.saturating_sub(a.before.drifts);
+    let snapshots_new = a
+        .after
+        .snapshots_published
+        .saturating_sub(a.before.snapshots_published);
+
+    let mut table = TextTable::new(&["phase", "windows", "mean rel err"]);
+    table.row(vec![
+        "converged (pre-injection)".into(),
+        format!("{}", a.cut),
+        format!("{pre:.3}"),
+    ]);
+    table.row(vec![
+        "injected (first stale window)".into(),
+        "1".into(),
+        format!("{spike:.3}"),
+    ]);
+    table.row(vec![
+        "re-converged (final)".into(),
+        format!("{}", a.windows.len().saturating_sub(a.cut)),
+        format!("{post:.3}"),
+    ]);
+
+    let series = vec![
+        ("err/converged".to_string(), pre),
+        ("err/spike".to_string(), spike),
+        ("err/reconverged".to_string(), post),
+        ("drifts".to_string(), drifts_new as f64),
+        ("snapshots".to_string(), snapshots_new as f64),
+        ("max_epoch".to_string(), a.after.max_epoch as f64),
+        ("overhead_pct".to_string(), a.overhead_frac * 100.0),
+        ("windows".to_string(), a.windows.len() as f64),
+    ];
+
+    let checks = vec![
+        ShapeCheck::new(
+            "enough windows on both sides of the injection",
+            a.cut >= 4 && a.windows.len() >= a.cut + 4,
+            format!("{} pre + {} post windows", a.cut, a.windows.len() - a.cut.min(a.windows.len())),
+        ),
+        ShapeCheck::new(
+            "injected interference is detected as drift",
+            drifts_new >= 1 && snapshots_new >= 1,
+            format!("{drifts_new} drifts, {snapshots_new} snapshots after injection"),
+        ),
+        ShapeCheck::new(
+            "stale predictions spike the error",
+            spike > pre * 1.2,
+            format!("spike {spike:.3} vs converged {pre:.3}"),
+        ),
+        ShapeCheck::new(
+            "predictions re-converge within the confidence band",
+            post <= (pre * 1.5).max(0.05) && post < spike,
+            format!("final {post:.3} vs converged {pre:.3} (spike {spike:.3})"),
+        ),
+        ShapeCheck::new(
+            "accounted refinement overhead within the 5% budget",
+            a.overhead_frac * 100.0 <= 5.0,
+            format!("{:.4}% of simulated time", a.overhead_frac * 100.0),
+        ),
+        ShapeCheck::new(
+            "deterministic replay under the fixed seed",
+            a.after.drifts == b.after.drifts
+                && a.after.snapshots_published == b.after.snapshots_published
+                && a.windows == b.windows
+                && a.sim_end == b.sim_end,
+            format!(
+                "run A: ({}, {}, {} windows, end {}); run B: ({}, {}, {} windows, end {})",
+                a.after.drifts,
+                a.after.snapshots_published,
+                a.windows.len(),
+                a.sim_end,
+                b.after.drifts,
+                b.after.snapshots_published,
+                b.windows.len(),
+                b.sim_end
+            ),
+        ),
+    ];
+
+    let notes = format!(
+        "gap interference x{INJECTED_SCALE} injected into the detector at the phase boundary; \
+         error = |observed gap - published SG| / SG over {}-observation windows. \
+         epochs published: {} (max epoch {}). The zero-alloc gate for the refinement \
+         path runs in tests/hotpath_alloc.rs.",
+        24, a.after.snapshots_published, a.after.max_epoch
+    );
+
+    Ok(ExperimentResult {
+        id: "drift",
+        title: "Online profile refinement: drift detection and re-convergence",
+        table,
+        series,
+        checks,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_runs_quick() {
+        let r = run(Options::quick()).unwrap();
+        assert!(r.series.len() >= 8);
+        assert!(r.all_checks_pass(), "{}", r.render());
+    }
+}

@@ -12,6 +12,7 @@
 
 pub mod cluster_churn;
 pub mod combos;
+pub mod drift;
 pub mod fig13;
 pub mod fig14;
 pub mod fig15;
@@ -135,6 +136,7 @@ pub const ALL: &[&str] = &[
     "ablation_feedback",
     "ablation_fill_policy",
     "cluster_churn",
+    "drift",
 ];
 
 /// Run one experiment by id.
@@ -152,6 +154,7 @@ pub fn run(id: &str, opts: Options) -> Result<ExperimentResult> {
         "ablation_feedback" => perf_ablation::run(opts),
         "ablation_fill_policy" => fill_policy::run(opts),
         "cluster_churn" => cluster_churn::run(opts),
+        "drift" => drift::run(opts),
         other => Err(crate::core::Error::Parse(format!(
             "unknown experiment {other:?}; known: {ALL:?}"
         ))),

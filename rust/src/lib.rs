@@ -10,7 +10,9 @@
 //!   [`core::TaskKey`], [`core::Priority`], virtual time).
 //! * [`profile`] — the paper's kernel-identification and offline
 //!   measurement pipeline: per-KernelID execution time (`SK`) and
-//!   post-kernel idle gap (`SG`) statistics.
+//!   post-kernel idle gap (`SG`) statistics — plus the sharing-stage
+//!   online refinement loop (EWMA drift detection, epoch-versioned
+//!   snapshot republish; DESIGN.md §9).
 //! * [`simulator`] — a discrete-event GPU device simulator reproducing the
 //!   FIFO device queue, NVIDIA default time-slice sharing and exclusive
 //!   modes the paper baselines against.

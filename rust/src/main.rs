@@ -29,15 +29,22 @@ USAGE:
             [--high MODEL] [--low MODEL] [--tasks N] [--seed S]
   fikit experiment <id|all> [--scale F] [--seed S] [--json out.json]
         ids: fig13 fig14 fig15 table2 fig16 fig18 fig19 fig21 ablation_feedback
+  fikit drift [--scale F] [--seed S]
+        online-refinement acceptance run: inject gap interference
+        mid-run, show drift detection + re-convergence + <=5% overhead
   fikit profile --model MODEL [--runs T] [--out profiles.json]
   fikit serve [--bind ADDR] [--profiles profiles.json] [--devices N]
               [--capacity C] [--placement bestmatch|leastloaded|roundrobin]
+              [--online] [--save-profiles PATH]
         one scheduling shard per device; services are routed to shards
-        by the placement policy's capacity accounting
+        by the placement policy's capacity accounting; --online refines
+        SK/SG from sharing-stage traffic and --save-profiles persists
+        the refined store periodically (every 30s)
   fikit cluster [--gpus N] [--policy bestmatch|leastloaded|roundrobin]
                 [--compat compat.json] [--measure-compat]
   fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
                       [--seed S] [--secs T] [--bound X] [--no-migration]
+                      [--cold-start] [--online]
   fikit bench [--quick] [--json [PATH]]
         runs the scheduler hot-path suite; --json writes BENCH_sched.json
         (or PATH) and fails if any case exceeds its declared budget
@@ -61,6 +68,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.pos(0) {
         Some("run") => cmd_run(args),
         Some("experiment") => cmd_experiment(args),
+        Some("drift") => cmd_drift(args),
         Some("profile") => cmd_profile(args),
         Some("serve") => cmd_serve(args),
         Some("cluster") => cmd_cluster(args),
@@ -171,6 +179,25 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the online-refinement acceptance experiment (`experiments::drift`):
+/// converge → inject gap interference → detect drift → re-converge, with
+/// the accounted refinement overhead held to the paper's 5 % budget.
+fn cmd_drift(args: &Args) -> Result<()> {
+    let opts = Options {
+        scale: args.opt_parse("scale", 1.0f64)?,
+        seed: args.opt_parse("seed", 0xF1C1u64)?,
+    };
+    let result = experiments::run("drift", opts)?;
+    println!("{}", result.render());
+    if result.all_checks_pass() {
+        Ok(())
+    } else {
+        Err(fikit::core::Error::Invariant(
+            "drift experiment has failing shape checks".into(),
+        ))
+    }
+}
+
 fn cmd_profile(args: &Args) -> Result<()> {
     let model: ModelKind = args
         .opt("model")
@@ -211,24 +238,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if devices == 0 {
         return Err(fikit::core::Error::Parse("--devices must be ≥ 1".into()));
     }
-    let cfg = ServerConfig {
+    let mut cfg = ServerConfig {
         bind,
         devices,
         capacity: args.opt_parse("capacity", 32usize)?,
         policy: args.opt("placement").unwrap_or("leastloaded").parse()?,
         ..Default::default()
     };
+    cfg.online.enabled = args.flag("online");
+    let save_path = args.opt("save-profiles").map(str::to_string);
     let policy = cfg.policy;
     let capacity = cfg.capacity;
+    let online = cfg.online.enabled;
     let mut server = SchedulerServer::bind(cfg, profiles)?;
     println!(
-        "fikit scheduler daemon listening on {} ({} device shard(s), capacity {}/device, {:?} placement)",
+        "fikit scheduler daemon listening on {} ({} device shard(s), capacity {}/device, {:?} placement, online refinement {})",
         server.local_addr()?,
         devices,
         capacity,
         policy,
+        if online { "on" } else { "off" },
     );
-    server.run_for(None)
+    match save_path {
+        None => server.run_for(None),
+        // A daemon is stopped by killing it (there is no clean-shutdown
+        // signal path without external deps), so "persist on exit"
+        // would never run. Persist periodically instead: at most one
+        // save interval of refined knowledge is ever lost.
+        Some(path) => {
+            const SAVE_EVERY: std::time::Duration = std::time::Duration::from_secs(30);
+            println!("persisting profile store (incl. refined epochs) -> {path} every {}s",
+                SAVE_EVERY.as_secs());
+            loop {
+                server.run_for(Some(SAVE_EVERY))?;
+                server.save_profiles(&path)?;
+            }
+        }
+    }
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
@@ -309,11 +355,13 @@ fn cmd_cluster_churn(args: &Args) -> Result<()> {
     cfg.seed = args.opt_parse("seed", 0xF1C1u64)?;
     cfg.qos.high_slowdown_bound = args.opt_parse("bound", 1.5f64)?;
     cfg.qos.migration = !args.flag("no-migration");
+    cfg.cold_start = args.flag("cold-start");
+    cfg.online = args.flag("online");
 
     let report = run_churn(&cfg, &CompatMatrix::new())?;
     println!(
-        "policy={policy:?} mode={mode} gpus={gpus} capacity={capacity} migration={}",
-        cfg.qos.migration
+        "policy={policy:?} mode={mode} gpus={gpus} capacity={capacity} migration={} cold_start={}",
+        cfg.qos.migration, cfg.cold_start
     );
     println!("{}", report.summary());
     Ok(())

@@ -101,6 +101,51 @@ pub fn pct_diff(baseline: &JctStats, candidate: &JctStats) -> f64 {
         * 100.0
 }
 
+/// Fixed-count windows of a prediction-error stream — the convergence
+/// trajectory of the online profile refiner (DESIGN.md §9): each closed
+/// window holds the mean error of `per` consecutive observations, so a
+/// drift injection is visible as one window spiking and later windows
+/// recovering rather than being averaged away (the same design as the
+/// fleet QoS windows in [`fleet`]).
+#[derive(Debug, Clone, Default)]
+pub struct WindowedError {
+    per: u64,
+    cur_n: u64,
+    cur_sum: f64,
+    closed: Vec<f64>,
+}
+
+impl WindowedError {
+    /// A tracker closing a window every `per` observations (`per ≥ 1`).
+    pub fn new(per: u64) -> WindowedError {
+        WindowedError {
+            per: per.max(1),
+            ..Default::default()
+        }
+    }
+
+    /// Record one error observation (e.g. a relative prediction error).
+    pub fn record(&mut self, err: f64) {
+        self.cur_sum += err;
+        self.cur_n += 1;
+        if self.cur_n >= self.per {
+            self.closed.push(self.cur_sum / self.cur_n as f64);
+            self.cur_n = 0;
+            self.cur_sum = 0.0;
+        }
+    }
+
+    /// Mean error per closed window, in observation order.
+    pub fn windows(&self) -> &[f64] {
+        &self.closed
+    }
+
+    /// Total observations recorded (closed windows plus the partial one).
+    pub fn observations(&self) -> u64 {
+        self.closed.len() as u64 * self.per + self.cur_n
+    }
+}
+
 /// One point of a per-arrival JCT timeline (Fig 21).
 #[derive(Debug, Clone)]
 pub struct TimelinePoint {

@@ -1,4 +1,5 @@
-//! Offline kernel measurement and profiling (paper §3.2).
+//! Kernel measurement and profiling: offline (paper §3.2) plus online
+//! sharing-stage refinement (DESIGN.md §9).
 //!
 //! FIKIT's core enabler is moving kernel measurement *offline*: a new
 //! service first runs a bounded number of times in **measurement stage**
@@ -9,17 +10,25 @@
 //! * `SG_j` — mean device idle gap following kernels with ID `j`.
 //!
 //! These are keyed by the service's [`TaskKey`](crate::core::TaskKey) and
-//! persisted; all later invocations run in **sharing stage** where the
+//! persisted; all later invocations run in **sharing stage**, where the
 //! scheduler predicts gaps from `SG` and kernel durations from `SK` with
-//! zero per-kernel measurement cost.
+//! zero per-kernel *timing-event* cost. The predictions are not frozen,
+//! though: the [`OnlineRefiner`] keeps learning from the completion and
+//! launch events the scheduler already sees in sharing stage, detects
+//! drift against a confidence band, and republishes epoch-versioned
+//! [`ResolvedProfile`] snapshots — still without re-inserting any
+//! kernel-timing instrumentation (the refinement loop's accounted cost
+//! is bounded against the paper's 5 % overhead budget; see ADR-002).
 
 mod measurement;
+mod online;
 mod resolved;
 mod statistics;
 mod store;
 mod symbols;
 
 pub use measurement::{MeasurementConfig, MeasurementRecorder};
+pub use online::{Ewma, KeyedRefiner, OnlineConfig, OnlineRefiner, ProfileOrigin, RefinerStats};
 pub use resolved::ResolvedProfile;
 pub use statistics::{KernelStats, StatSummary, TaskProfile};
 pub use store::ProfileStore;

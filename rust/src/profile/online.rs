@@ -1,0 +1,868 @@
+//! Online profile refinement during sharing stage (DESIGN.md §9).
+//!
+//! The offline measurement stage (paper §3.2) freezes `SK`/`SG` once,
+//! but co-location interference shifts real gaps over a service's
+//! lifetime. This module keeps learning from the completion and launch
+//! events the scheduler *already* observes in sharing stage — no timing
+//! events are re-inserted, so the per-kernel measurement cost stays
+//! zero — and republishes predictions when they drift:
+//!
+//! * per-kernel **EWMA mean + EWMA variance** of observed execution
+//!   times and post-kernel think gaps ([`Ewma`]);
+//! * **drift detection**: an estimate whose EWMA mean leaves the
+//!   confidence band around the currently-published prediction
+//!   (`z` standard errors, floored) marks the service *drifted*;
+//! * **epoch publishing**: a drifted service's predictions are
+//!   flattened into a fresh [`ResolvedProfile`] snapshot with a bumped
+//!   epoch; the driver swaps it into the scheduler between events
+//!   (single writer, no locks — the double-buffer swap of DESIGN.md §9).
+//!   Published predictions are **confidence-aware**: `SG` is shrunk and
+//!   `SK` padded by `shrink` standard errors, so low-confidence fills
+//!   cannot delay the high-priority holder.
+//!
+//! The steady-state observation path (no drift) is allocation-free —
+//! binary probe + in-place float updates — and is gated by
+//! `tests/hotpath_alloc.rs` alongside the scheduler hot path.
+//!
+//! Two frontends share the estimator math:
+//!
+//! * [`OnlineRefiner`] — handle-indexed, used by the per-GPU simulation
+//!   driver (`coordinator/driver.rs`);
+//! * [`KeyedRefiner`] — string-keyed, used at the wire boundary by the
+//!   daemon shards (`daemon/shard.rs`) and the real-compute runtime
+//!   engine, where launches never carry interned handles.
+
+use super::resolved::ResolvedProfile;
+use super::statistics::{KernelStats, StatSummary, TaskProfile};
+use crate::core::{Duration, KernelHandle, KernelId, SimTime, TaskHandle, TaskKey};
+use crate::metrics::WindowedError;
+use crate::profile::ProfileStore;
+use std::collections::HashMap;
+
+/// Where a profile's numbers came from (persisted; see
+/// `rust/docs/profile-format.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProfileOrigin {
+    /// Exclusive measurement stage (paper §3.2).
+    #[default]
+    Measured,
+    /// Online sharing-stage refinement (this module).
+    Refined,
+    /// Cold-start prior borrowed from same-model knowledge instead of
+    /// blocking on exclusive measurement (DESIGN.md §9).
+    Prior,
+}
+
+impl ProfileOrigin {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ProfileOrigin::Measured => "measured",
+            ProfileOrigin::Refined => "refined",
+            ProfileOrigin::Prior => "prior",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProfileOrigin> {
+        match s {
+            "measured" => Some(ProfileOrigin::Measured),
+            "refined" => Some(ProfileOrigin::Refined),
+            "prior" => Some(ProfileOrigin::Prior),
+            _ => None,
+        }
+    }
+}
+
+/// Tuning knobs of the online refinement loop.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Master switch. Off (the default) reproduces the paper's frozen
+    /// offline-profile behaviour exactly.
+    pub enabled: bool,
+    /// EWMA smoothing factor α ∈ (0, 1]: weight of the newest sample.
+    pub alpha: f64,
+    /// Confidence band half-width in standard-error units: an estimate
+    /// drifts when its EWMA mean leaves `± z·stderr` around the
+    /// currently-published prediction.
+    pub z: f64,
+    /// Observations a kernel needs before its estimate can declare
+    /// drift or be published.
+    pub min_samples: u32,
+    /// Confidence shrink in standard-error units applied at publish
+    /// time: published `SG = mean − shrink·stderr` (usable gap shrinks
+    /// when variance is high), published `SK = mean + shrink·stderr`.
+    pub shrink: f64,
+    /// Band floor as a fraction of the published prediction (guards
+    /// against hair-trigger drift on near-zero-variance estimates).
+    pub band_floor_frac: f64,
+    /// Modeled CPU cost of one observation (EWMA update + drift check)
+    /// — the overhead-accounting unit charged against the paper's 5 %
+    /// budget (ADR-002 has the derivation).
+    pub cost_per_obs: Duration,
+    /// Record per-observation gap-prediction error into fixed-size
+    /// windows (diagnostics for the drift experiment; allocates one
+    /// `Vec` slot per closed window, so keep it off on zero-alloc-gated
+    /// paths).
+    pub track_errors: bool,
+    /// Gap observations per error window when `track_errors` is on.
+    pub error_window: u32,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> OnlineConfig {
+        OnlineConfig {
+            enabled: false,
+            alpha: 0.2,
+            z: 3.0,
+            min_samples: 8,
+            shrink: 1.0,
+            band_floor_frac: 0.10,
+            cost_per_obs: Duration::from_nanos(150),
+            track_errors: false,
+            error_window: 64,
+        }
+    }
+}
+
+/// Exponentially-weighted running mean and variance.
+///
+/// `var` tracks the EWMA variance of the *samples*; the standard error
+/// of the EWMA *mean* is `std · sqrt(α / (2 − α))` (the steady-state
+/// variance ratio of an exponential filter), which is what the
+/// confidence band and the publish-time shrink use.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Ewma {
+    pub mean: f64,
+    var: f64,
+    pub n: u64,
+}
+
+impl Ewma {
+    /// Fold in one observation.
+    #[inline]
+    pub fn observe(&mut self, x: f64, alpha: f64) {
+        self.n += 1;
+        if self.n == 1 {
+            self.mean = x;
+            self.var = 0.0;
+            return;
+        }
+        let d = x - self.mean;
+        self.mean += alpha * d;
+        self.var = (1.0 - alpha) * (self.var + alpha * d * d);
+    }
+
+    /// EWMA standard deviation of the samples.
+    #[inline]
+    pub fn std(&self) -> f64 {
+        self.var.max(0.0).sqrt()
+    }
+
+    /// Standard error of the EWMA mean.
+    #[inline]
+    pub fn stderr(&self, alpha: f64) -> f64 {
+        self.std() * (alpha / (2.0 - alpha)).sqrt()
+    }
+}
+
+/// Confidence band half-width around a published prediction `base_ns`.
+#[inline]
+fn band_ns(base_ns: f64, est: &Ewma, cfg: &OnlineConfig) -> f64 {
+    (cfg.z * est.stderr(cfg.alpha))
+        .max(base_ns * cfg.band_floor_frac)
+        .max(1_000.0) // never tighter than 1 µs
+}
+
+/// Has `est` drifted outside the band around `base_ns`?
+#[inline]
+fn drifted(base_ns: f64, est: &Ewma, cfg: &OnlineConfig) -> bool {
+    est.n >= cfg.min_samples as u64 && (est.mean - base_ns).abs() > band_ns(base_ns, est, cfg)
+}
+
+#[inline]
+fn dur(ns: f64) -> Duration {
+    Duration::from_nanos(ns.max(0.0).round() as u64)
+}
+
+/// Counters of one refiner (simulation driver or daemon shard).
+#[derive(Debug, Clone, Default)]
+pub struct RefinerStats {
+    /// Execution-time observations folded in.
+    pub exec_observations: u64,
+    /// Post-kernel gap observations folded in.
+    pub gap_observations: u64,
+    /// Observations dropped because the kernel was not in the service's
+    /// published profile (never measured, never priored).
+    pub unknown_kernel: u64,
+    /// Per-kernel estimates that left their confidence band.
+    pub drifts: u64,
+    /// Snapshots published (epoch swaps handed to the scheduler).
+    pub snapshots_published: u64,
+    /// Highest epoch published by any service.
+    pub max_epoch: u64,
+}
+
+impl RefinerStats {
+    /// Modeled CPU time spent refining (overhead accounting against the
+    /// paper's 5 % budget; see ADR-002).
+    pub fn modeled_overhead(&self, cfg: &OnlineConfig) -> Duration {
+        cfg.cost_per_obs
+            .scale((self.exec_observations + self.gap_observations) as f64)
+    }
+}
+
+/// One kernel's online estimate next to its currently-published
+/// prediction.
+#[derive(Debug, Clone)]
+struct Row {
+    handle: KernelHandle,
+    /// Currently-published `SK` (offline value until the first epoch).
+    base_sk: Duration,
+    /// Currently-published `SG`.
+    base_sg: Option<Duration>,
+    exec: Ewma,
+    gap: Ewma,
+}
+
+/// Online estimates of one service, mirroring its [`ResolvedProfile`].
+#[derive(Debug, Clone)]
+struct ServiceRefiner {
+    /// Sorted by handle (same order as the resolved profile).
+    rows: Vec<Row>,
+    /// Snapshots published so far (0 = still on the offline profile).
+    epoch: u64,
+    /// A row drifted since the last publish.
+    dirty: bool,
+}
+
+impl ServiceRefiner {
+    fn new(baseline: &ResolvedProfile) -> ServiceRefiner {
+        ServiceRefiner {
+            rows: baseline
+                .rows()
+                .map(|(handle, sk, sg)| Row {
+                    handle,
+                    base_sk: sk,
+                    base_sg: sg,
+                    exec: Ewma::default(),
+                    gap: Ewma::default(),
+                })
+                .collect(),
+            epoch: baseline.epoch(),
+            dirty: false,
+        }
+    }
+
+    #[inline]
+    fn row_mut(&mut self, h: KernelHandle) -> Option<&mut Row> {
+        self.rows
+            .binary_search_by_key(&h, |r| r.handle)
+            .ok()
+            .map(|i| &mut self.rows[i])
+    }
+
+    /// Flatten the current estimates into a publishable snapshot and
+    /// advance the epoch. Published values become the new drift
+    /// baselines (hysteresis: the next drift must leave the band around
+    /// the *refreshed* prediction).
+    fn publish(&mut self, cfg: &OnlineConfig) -> ResolvedProfile {
+        self.epoch += 1;
+        let min = cfg.min_samples as u64;
+        let rows = self
+            .rows
+            .iter_mut()
+            .map(|r| {
+                if r.exec.n >= min {
+                    r.base_sk = dur(r.exec.mean + cfg.shrink * r.exec.stderr(cfg.alpha));
+                }
+                if r.gap.n >= min {
+                    r.base_sg = Some(dur(r.gap.mean - cfg.shrink * r.gap.stderr(cfg.alpha)));
+                }
+                (r.handle, r.base_sk, r.base_sg)
+            })
+            .collect();
+        self.dirty = false;
+        ResolvedProfile::from_rows(rows, self.epoch)
+    }
+}
+
+/// Handle-indexed sharing-stage refiner: one per GPU sim, covering every
+/// attached service (the driver feeds it from the event loop).
+#[derive(Debug)]
+pub struct OnlineRefiner {
+    cfg: OnlineConfig,
+    /// Indexed by [`TaskHandle`], like the scheduler's resolved table.
+    services: Vec<Option<ServiceRefiner>>,
+    stats: RefinerStats,
+    errors: WindowedError,
+}
+
+impl OnlineRefiner {
+    pub fn new(cfg: OnlineConfig) -> OnlineRefiner {
+        let errors = WindowedError::new(cfg.error_window.max(1) as u64);
+        OnlineRefiner {
+            cfg,
+            services: Vec::new(),
+            stats: RefinerStats::default(),
+            errors,
+        }
+    }
+
+    /// Start refining a service from its attach-time baseline. Called
+    /// by the driver right after it resolves the offline profile.
+    pub fn register(&mut self, handle: TaskHandle, baseline: &ResolvedProfile) {
+        let idx = handle.index();
+        if idx >= self.services.len() {
+            self.services.resize_with(idx + 1, || None);
+        }
+        self.services[idx] = Some(ServiceRefiner::new(baseline));
+    }
+
+    /// Drop a drained service's estimates (mirrors
+    /// `FikitScheduler::unregister_service`).
+    pub fn unregister(&mut self, handle: TaskHandle) {
+        if let Some(slot) = self.services.get_mut(handle.index()) {
+            *slot = None;
+        }
+    }
+
+    /// Fold in one completed kernel: its observed execution time and —
+    /// when the owning process immediately scheduled its next launch —
+    /// the observed post-kernel think gap. Returns a fresh snapshot if
+    /// this observation tripped drift (the caller swaps it into the
+    /// scheduler). Steady state (no drift) allocates nothing.
+    pub fn observe(
+        &mut self,
+        task: TaskHandle,
+        kernel: KernelHandle,
+        exec: Duration,
+        gap_after: Option<Duration>,
+    ) -> Option<ResolvedProfile> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let svc = self.services.get_mut(task.index())?.as_mut()?;
+        let Some(row) = svc.row_mut(kernel) else {
+            self.stats.unknown_kernel += 1;
+            return None;
+        };
+        let mut tripped = false;
+
+        self.stats.exec_observations += 1;
+        row.exec.observe(exec.nanos() as f64, self.cfg.alpha);
+        if drifted(row.base_sk.nanos() as f64, &row.exec, &self.cfg) {
+            tripped = true;
+        }
+
+        if let Some(gap) = gap_after {
+            self.stats.gap_observations += 1;
+            let base_ns = row.base_sg.unwrap_or(Duration::ZERO).nanos() as f64;
+            if self.cfg.track_errors && base_ns > 0.0 {
+                self.errors
+                    .record((gap.nanos() as f64 - base_ns).abs() / base_ns);
+            }
+            row.gap.observe(gap.nanos() as f64, self.cfg.alpha);
+            if drifted(base_ns, &row.gap, &self.cfg) {
+                tripped = true;
+            }
+        }
+
+        if !tripped {
+            return None;
+        }
+        self.stats.drifts += 1;
+        svc.dirty = true;
+        let snapshot = svc.publish(&self.cfg);
+        self.stats.snapshots_published += 1;
+        self.stats.max_epoch = self.stats.max_epoch.max(snapshot.epoch());
+        Some(snapshot)
+    }
+
+    /// Counters accumulated so far.
+    pub fn stats(&self) -> &RefinerStats {
+        &self.stats
+    }
+
+    /// Consume, yielding the counters (end-of-run report).
+    pub fn into_stats(self) -> RefinerStats {
+        self.stats
+    }
+
+    /// Windowed gap-prediction error trajectory (only populated with
+    /// `track_errors` on).
+    pub fn error_windows(&self) -> &WindowedError {
+        &self.errors
+    }
+
+    /// Modeled refinement overhead so far (see [`RefinerStats`]).
+    pub fn modeled_overhead(&self) -> Duration {
+        self.stats.modeled_overhead(&self.cfg)
+    }
+
+    /// Current epoch of a service (0 = never refreshed / unknown).
+    pub fn epoch_of(&self, task: TaskHandle) -> u64 {
+        self.services
+            .get(task.index())
+            .and_then(|s| s.as_ref())
+            .map_or(0, |s| s.epoch)
+    }
+}
+
+// ---------------------------------------------------------------------
+// String-keyed frontend (daemon shards, runtime engine)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+struct KeyedEstimate {
+    base_sk: Option<Duration>,
+    base_sg: Option<Duration>,
+    exec: Ewma,
+    gap: Ewma,
+}
+
+#[derive(Debug, Default)]
+struct KeyedTask {
+    kernels: HashMap<KernelId, KeyedEstimate>,
+    /// Last completed holder kernel, awaiting the gap-closing launch.
+    pending: Option<(KernelId, SimTime)>,
+    epoch: u64,
+    dirty: bool,
+}
+
+/// Wire-boundary refiner: learns from `Completion` exec times and
+/// completion→next-launch arrival gaps, keyed by `(TaskKey, KernelId)`.
+/// Lives on the cold side of the daemon (per-message hashing is already
+/// paid there), so it may allocate freely.
+#[derive(Debug)]
+pub struct KeyedRefiner {
+    cfg: OnlineConfig,
+    tasks: HashMap<TaskKey, KeyedTask>,
+    stats: RefinerStats,
+}
+
+impl KeyedRefiner {
+    pub fn new(cfg: OnlineConfig) -> KeyedRefiner {
+        KeyedRefiner {
+            cfg,
+            tasks: HashMap::new(),
+            stats: RefinerStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    fn estimate<'a>(
+        tasks: &'a mut HashMap<TaskKey, KeyedTask>,
+        key: &TaskKey,
+        kernel: &KernelId,
+        base: Option<&TaskProfile>,
+    ) -> &'a mut KeyedEstimate {
+        let task = tasks.entry(key.clone()).or_default();
+        task.kernels.entry(kernel.clone()).or_insert_with(|| {
+            KeyedEstimate {
+                base_sk: base.and_then(|p| p.sk(kernel)),
+                base_sg: base.and_then(|p| p.sg(kernel)),
+                ..Default::default()
+            }
+        })
+    }
+
+    /// A kernel of `key` completed with observed execution time `exec`
+    /// (carried by the wire `Completion`); remember it as the pending
+    /// gap source.
+    pub fn observe_exec(
+        &mut self,
+        key: &TaskKey,
+        kernel: &KernelId,
+        exec: Duration,
+        at: SimTime,
+        base: Option<&TaskProfile>,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let est = Self::estimate(&mut self.tasks, key, kernel, base);
+        est.exec.observe(exec.nanos() as f64, self.cfg.alpha);
+        let sk_drift = est
+            .base_sk
+            .is_some_and(|sk| drifted(sk.nanos() as f64, &est.exec, &self.cfg));
+        self.stats.exec_observations += 1;
+        let task = self.tasks.get_mut(key).expect("estimate() inserted task");
+        task.pending = Some((kernel.clone(), at));
+        if sk_drift {
+            self.stats.drifts += 1;
+            task.dirty = true;
+        }
+    }
+
+    /// The service's next launch arrived at `now`: close the pending
+    /// gap observation (the non-intrusive sharing-stage analogue of the
+    /// measurement stage's `G_i = start(i+1) − finish(i)`).
+    pub fn observe_next_launch(&mut self, key: &TaskKey, now: SimTime) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let Some(task) = self.tasks.get_mut(key) else {
+            return;
+        };
+        let Some((kernel, finished_at)) = task.pending.take() else {
+            return;
+        };
+        if now <= finished_at {
+            return; // clock skew / reordered wire events: skip
+        }
+        let gap = now.since(finished_at);
+        let Some(est) = task.kernels.get_mut(&kernel) else {
+            return;
+        };
+        let base_ns = est.base_sg.unwrap_or(Duration::ZERO).nanos() as f64;
+        est.gap.observe(gap.nanos() as f64, self.cfg.alpha);
+        self.stats.gap_observations += 1;
+        if drifted(base_ns, &est.gap, &self.cfg) {
+            self.stats.drifts += 1;
+            task.dirty = true;
+        }
+    }
+
+    /// Drop everything known about a departed service (bounds the maps
+    /// by live services, like the shard's other teardown paths).
+    pub fn forget(&mut self, key: &TaskKey) {
+        self.tasks.remove(key);
+    }
+
+    /// Disarm the pending gap observation without dropping the learned
+    /// estimates — called at task/request boundaries, where the
+    /// completion→next-launch delta spans inter-request idle rather
+    /// than a post-kernel think gap and must not pollute `SG`.
+    pub fn clear_pending(&mut self, key: &TaskKey) {
+        if let Some(task) = self.tasks.get_mut(key) {
+            task.pending = None;
+        }
+    }
+
+    /// Number of services currently tracked (leak probe).
+    pub fn tracked_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn stats(&self) -> &RefinerStats {
+        &self.stats
+    }
+
+    /// Harvest refined profiles for every drifted service: the offline
+    /// profile (or an empty one) with converged estimates overwritten,
+    /// a bumped epoch and `origin = Refined`. Published values are
+    /// confidence-shrunk exactly like [`OnlineRefiner`]'s snapshots.
+    /// The caller persists/installs them (`daemon/mod.rs` shadows its
+    /// store; `fikit serve --save-profiles` writes them to disk).
+    pub fn take_refined(&mut self, offline: &ProfileStore) -> Vec<TaskProfile> {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        let min = self.cfg.min_samples as u64;
+        let mut out = Vec::new();
+        for (key, task) in self.tasks.iter_mut() {
+            if !task.dirty {
+                continue;
+            }
+            task.dirty = false;
+            let mut profile = offline
+                .get(key)
+                .cloned()
+                .unwrap_or_else(|| TaskProfile::new(key.clone()));
+            // Epochs never regress: a restarted daemon resumes from the
+            // persisted epoch of the loaded (possibly already-refined)
+            // profile, not from this process's counter.
+            task.epoch = task.epoch.max(profile.epoch) + 1;
+            for (kid, est) in task.kernels.iter_mut() {
+                if est.exec.n < min && est.gap.n < min {
+                    continue;
+                }
+                let prev = profile.stats_for(kid).cloned().unwrap_or_default();
+                let exec = if est.exec.n >= min {
+                    let m = est.exec.mean + self.cfg.shrink * est.exec.stderr(self.cfg.alpha);
+                    est.base_sk = Some(dur(m));
+                    StatSummary::from_moments(est.exec.n, m, est.exec.std().powi(2))
+                } else {
+                    prev.exec
+                };
+                let gap = if est.gap.n >= min {
+                    let m = (est.gap.mean - self.cfg.shrink * est.gap.stderr(self.cfg.alpha))
+                        .max(0.0);
+                    est.base_sg = Some(dur(m));
+                    StatSummary::from_moments(est.gap.n, m, est.gap.std().powi(2))
+                } else {
+                    prev.gap
+                };
+                profile.set_kernel_stats(kid, KernelStats { exec, gap });
+            }
+            profile.epoch = task.epoch;
+            profile.origin = ProfileOrigin::Refined;
+            if profile.runs == 0 {
+                // A refined profile must count as ready even when it
+                // started from an empty (never-measured) baseline.
+                profile.finish_run(task.kernels.len());
+            }
+            self.stats.snapshots_published += 1;
+            self.stats.max_epoch = self.stats.max_epoch.max(task.epoch);
+            out.push(profile);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, Interner};
+    use crate::util::rng::Rng;
+
+    fn kid(name: &str) -> KernelId {
+        KernelId::new(name, Dim3::x(2), Dim3::x(64))
+    }
+
+    fn enabled_cfg() -> OnlineConfig {
+        OnlineConfig {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+
+    /// Baseline profile: kernel "k" with SK = 100 µs, SG = 500 µs.
+    fn world() -> (OnlineRefiner, TaskHandle, KernelHandle) {
+        let mut p = TaskProfile::new(TaskKey::new("svc"));
+        p.record(
+            &kid("k"),
+            Duration::from_micros(100),
+            Some(Duration::from_micros(500)),
+        );
+        p.finish_run(1);
+        let mut interner = Interner::new();
+        let th = interner.intern_task(&TaskKey::new("svc"));
+        let rp = ResolvedProfile::resolve(&p, &mut interner);
+        let kh = interner.kernel_handle(&kid("k")).unwrap();
+        let mut r = OnlineRefiner::new(enabled_cfg());
+        r.register(th, &rp);
+        (r, th, kh)
+    }
+
+    #[test]
+    fn ewma_tracks_mean_and_variance() {
+        let mut e = Ewma::default();
+        for _ in 0..200 {
+            e.observe(100.0, 0.2);
+        }
+        assert!((e.mean - 100.0).abs() < 1e-9);
+        assert!(e.std() < 1e-6, "constant stream has ~zero variance");
+        let mut rng = Rng::new(7);
+        let mut j = Ewma::default();
+        for _ in 0..500 {
+            j.observe(rng.range_f64(90.0, 110.0), 0.2);
+        }
+        assert!((j.mean - 100.0).abs() < 5.0);
+        assert!(j.std() > 2.0 && j.std() < 12.0, "std {}", j.std());
+        assert!(j.stderr(0.2) < j.std());
+    }
+
+    #[test]
+    fn no_drift_on_faithful_observations() {
+        let (mut r, th, kh) = world();
+        let mut rng = Rng::new(11);
+        for _ in 0..500 {
+            let exec = Duration::from_nanos(rng.range_f64(95_000.0, 105_000.0) as u64);
+            let gap = Duration::from_nanos(rng.range_f64(475_000.0, 525_000.0) as u64);
+            assert!(r.observe(th, kh, exec, Some(gap)).is_none());
+        }
+        assert_eq!(r.stats().drifts, 0);
+        assert_eq!(r.stats().snapshots_published, 0);
+        assert_eq!(r.epoch_of(th), 0);
+    }
+
+    #[test]
+    fn inflated_gaps_drift_and_publish_shrunk_prediction() {
+        let (mut r, th, kh) = world();
+        // Interference doubles the observed gap: 500 µs → 1 ms.
+        let mut published = None;
+        let mut detected_after = 0;
+        for i in 0..200 {
+            let snap = r.observe(
+                th,
+                kh,
+                Duration::from_micros(100),
+                Some(Duration::from_millis(1)),
+            );
+            if let Some(s) = snap {
+                published = Some(s);
+                detected_after = i + 1;
+                break;
+            }
+        }
+        let snap = published.expect("drift must be detected");
+        assert!(
+            detected_after <= 2 * OnlineConfig::default().min_samples as usize,
+            "detected only after {detected_after} observations"
+        );
+        assert_eq!(snap.epoch(), 1);
+        let sg = snap.sg(kh).expect("gap still predicted");
+        // Published SG converged toward the new 1 ms truth (minus the
+        // confidence shrink), far from the stale 500 µs.
+        assert!(
+            sg > Duration::from_micros(700),
+            "published SG {sg} still near the stale prediction"
+        );
+        assert!(sg <= Duration::from_millis(1));
+        assert_eq!(r.stats().snapshots_published, 1);
+        assert_eq!(r.epoch_of(th), 1);
+
+        // Steady observations at the new mean: the refreshed baseline
+        // holds (hysteresis), no publish storm.
+        for _ in 0..100 {
+            r.observe(
+                th,
+                kh,
+                Duration::from_micros(100),
+                Some(Duration::from_millis(1)),
+            );
+        }
+        assert!(
+            r.stats().snapshots_published <= 3,
+            "published {} times for one drift",
+            r.stats().snapshots_published
+        );
+    }
+
+    #[test]
+    fn exec_drift_pads_published_sk() {
+        let (mut r, th, kh) = world();
+        let mut snap = None;
+        for _ in 0..100 {
+            if let Some(s) =
+                r.observe(th, kh, Duration::from_micros(300), Some(Duration::from_micros(500)))
+            {
+                snap = Some(s);
+                break;
+            }
+        }
+        let snap = snap.expect("SK drift detected");
+        let sk = snap.sk(kh).unwrap();
+        assert!(sk >= Duration::from_micros(250), "SK {sk} not refreshed");
+    }
+
+    #[test]
+    fn unknown_kernel_and_unregistered_service_are_noops() {
+        let (mut r, th, _) = world();
+        let ghost_kernel = KernelHandle::from_index(999);
+        assert!(r
+            .observe(th, ghost_kernel, Duration::from_micros(1), None)
+            .is_none());
+        assert_eq!(r.stats().unknown_kernel, 1);
+        let ghost_task = TaskHandle::from_index(999);
+        assert!(r
+            .observe(ghost_task, ghost_kernel, Duration::from_micros(1), None)
+            .is_none());
+        r.unregister(th);
+        assert!(r
+            .observe(th, ghost_kernel, Duration::from_micros(1), None)
+            .is_none());
+    }
+
+    #[test]
+    fn disabled_refiner_observes_nothing() {
+        let mut r = OnlineRefiner::new(OnlineConfig::default());
+        let th = TaskHandle::from_index(0);
+        let kh = KernelHandle::from_index(0);
+        assert!(r.observe(th, kh, Duration::from_micros(1), None).is_none());
+        assert_eq!(r.stats().exec_observations, 0);
+    }
+
+    #[test]
+    fn overhead_accounting_scales_with_observations() {
+        let (mut r, th, kh) = world();
+        for _ in 0..100 {
+            r.observe(
+                th,
+                kh,
+                Duration::from_micros(100),
+                Some(Duration::from_micros(500)),
+            );
+        }
+        // 100 exec + 100 gap observations at 150 ns each.
+        assert_eq!(r.modeled_overhead(), Duration::from_micros(30));
+    }
+
+    // ----- KeyedRefiner -----
+
+    fn keyed_store() -> ProfileStore {
+        let mut p = TaskProfile::new(TaskKey::new("svc"));
+        p.record(
+            &kid("k"),
+            Duration::from_micros(100),
+            Some(Duration::from_micros(500)),
+        );
+        p.finish_run(1);
+        let mut store = ProfileStore::new();
+        store.insert(p);
+        store
+    }
+
+    #[test]
+    fn keyed_refiner_learns_gap_drift_from_wire_events() {
+        let store = keyed_store();
+        let key = TaskKey::new("svc");
+        let mut r = KeyedRefiner::new(enabled_cfg());
+        let mut t = SimTime::ZERO;
+        for _ in 0..40 {
+            r.observe_exec(&key, &kid("k"), Duration::from_micros(100), t, store.get(&key));
+            // The next launch arrives 1 ms later — twice the profiled gap.
+            t = t + Duration::from_millis(1);
+            r.observe_next_launch(&key, t);
+            t = t + Duration::from_micros(100);
+        }
+        assert!(r.stats().drifts > 0, "wire-side drift undetected");
+        let refined = r.take_refined(&store);
+        assert_eq!(refined.len(), 1);
+        let p = &refined[0];
+        assert_eq!(p.origin, ProfileOrigin::Refined);
+        assert_eq!(p.epoch, 1);
+        let sg = p.sg(&kid("k")).unwrap();
+        assert!(
+            sg > Duration::from_micros(700),
+            "refined SG {sg} did not move toward the observed 1 ms"
+        );
+        // Nothing more to take until the next drift.
+        assert!(r.take_refined(&store).is_empty());
+        assert_eq!(r.tracked_tasks(), 1);
+        r.forget(&key);
+        assert_eq!(r.tracked_tasks(), 0);
+    }
+
+    #[test]
+    fn keyed_refiner_refines_from_empty_baseline() {
+        // Cold start at the wire: no offline profile at all. The refiner
+        // still converges and its published profile counts as ready.
+        let store = ProfileStore::new();
+        let key = TaskKey::new("new-svc");
+        let mut r = KeyedRefiner::new(enabled_cfg());
+        let mut t = SimTime::ZERO;
+        for _ in 0..40 {
+            r.observe_exec(&key, &kid("k"), Duration::from_micros(200), t, store.get(&key));
+            t = t + Duration::from_micros(800);
+            r.observe_next_launch(&key, t);
+        }
+        let refined = r.take_refined(&store);
+        assert_eq!(refined.len(), 1);
+        assert!(refined[0].is_ready(1));
+        assert!(refined[0].sk(&kid("k")).unwrap() >= Duration::from_micros(190));
+    }
+
+    #[test]
+    fn stale_pending_gap_is_skipped_on_clock_skew() {
+        let store = keyed_store();
+        let key = TaskKey::new("svc");
+        let mut r = KeyedRefiner::new(enabled_cfg());
+        r.observe_exec(&key, &kid("k"), Duration::from_micros(100), SimTime(1_000), store.get(&key));
+        r.observe_next_launch(&key, SimTime(500)); // earlier than completion
+        assert_eq!(r.stats().gap_observations, 0);
+    }
+}

@@ -30,6 +30,10 @@ pub struct ResolvedProfile {
     /// Sorted by handle: `(handle, SK, SG)`; `SG` is `None` when the
     /// kernel never had a following gap.
     entries: Vec<(KernelHandle, Duration, Option<Duration>)>,
+    /// Snapshot version: 0 for the attach-time offline resolution,
+    /// bumped by every online-refinement publish (DESIGN.md §9 — the
+    /// "profile epoch" of the double-buffer swap).
+    epoch: u64,
 }
 
 impl ResolvedProfile {
@@ -49,7 +53,36 @@ impl ResolvedProfile {
             })
             .collect();
         entries.sort_unstable_by_key(|&(h, _, _)| h);
-        ResolvedProfile { entries }
+        ResolvedProfile { entries, epoch: 0 }
+    }
+
+    /// Build a refreshed snapshot from already-handle-sorted rows — the
+    /// online refiner's publish path (`profile/online.rs`).
+    pub fn from_rows(
+        rows: Vec<(KernelHandle, Duration, Option<Duration>)>,
+        epoch: u64,
+    ) -> ResolvedProfile {
+        debug_assert!(
+            rows.windows(2).all(|w| w[0].0 < w[1].0),
+            "snapshot rows must be strictly handle-sorted"
+        );
+        ResolvedProfile {
+            entries: rows,
+            epoch,
+        }
+    }
+
+    /// Snapshot version (0 = offline attach-time resolution).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Iterate `(handle, SK, SG)` rows in handle order (the refiner
+    /// seeds its estimates from this).
+    pub fn rows(
+        &self,
+    ) -> impl Iterator<Item = (KernelHandle, Duration, Option<Duration>)> + '_ {
+        self.entries.iter().copied()
     }
 
     #[inline]

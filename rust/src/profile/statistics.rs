@@ -117,6 +117,21 @@ impl StatSummary {
         })
     }
 
+    /// Build a summary from precomputed moments — the online refiner's
+    /// bridge from EWMA estimates into the persistable store format
+    /// (`profile/online.rs`; min/max degenerate to the mean since the
+    /// EWMA does not track extremes).
+    pub fn from_moments(count: u64, mean_ns: f64, variance: f64) -> StatSummary {
+        let mean_ns = mean_ns.max(0.0);
+        StatSummary {
+            count,
+            mean_ns,
+            m2: variance.max(0.0) * count as f64,
+            min_ns: mean_ns.round() as u64,
+            max_ns: mean_ns.round() as u64,
+        }
+    }
+
     /// Merge another summary into this one (parallel-merge form of
     /// Welford; used when combining per-run partials).
     pub fn merge(&mut self, other: &StatSummary) {
@@ -163,6 +178,12 @@ pub struct TaskProfile {
     pub task_key: TaskKey,
     /// Number of measured runs `T` that produced this profile.
     pub runs: u32,
+    /// Refinement version: 0 for a freshly measured profile, bumped by
+    /// every online-refinement publish (DESIGN.md §9; persisted since
+    /// store format v2 — see `rust/docs/profile-format.md`).
+    pub epoch: u64,
+    /// Provenance of the numbers (measured / refined / cold-start prior).
+    pub origin: crate::profile::ProfileOrigin,
     /// Slab of unique kernel ids, in first-observation order.
     ids: Vec<KernelId>,
     /// Per-kernel statistics, parallel to `ids`.
@@ -178,6 +199,8 @@ impl TaskProfile {
         TaskProfile {
             task_key,
             runs: 0,
+            epoch: 0,
+            origin: crate::profile::ProfileOrigin::Measured,
             ids: Vec::new(),
             stats: Vec::new(),
             index: HashMap::new(),
@@ -251,6 +274,14 @@ impl TaskProfile {
         self.slot(kernel).map(|s| &self.stats[s])
     }
 
+    /// Overwrite (or insert) a kernel's statistics — the online
+    /// refiner's publish path installs converged sharing-stage
+    /// estimates here (`profile/online.rs`).
+    pub fn set_kernel_stats(&mut self, kernel: &KernelId, stats: KernelStats) {
+        let s = self.slot_or_insert(kernel);
+        self.stats[s] = stats;
+    }
+
     /// Whether this profile has enough runs to be used for sharing-stage
     /// scheduling. The paper uses `T ∈ [10, 1000]`.
     pub fn is_ready(&self, min_runs: u32) -> bool {
@@ -283,6 +314,8 @@ impl TaskProfile {
         Json::obj()
             .set("task_key", self.task_key.as_str())
             .set("runs", self.runs)
+            .set("epoch", self.epoch)
+            .set("origin", self.origin.as_str())
             .set("mean_kernels_per_run", self.mean_kernels_per_run)
             .set("stats", stats)
     }
@@ -305,6 +338,14 @@ impl TaskProfile {
             }
         }
         profile.runs = v.req_u64("runs")? as u32;
+        // Format v1 predates epochs/origins (profile-format.md §compat):
+        // absent fields default to a freshly measured profile.
+        profile.epoch = v.get("epoch").and_then(Json::as_u64).unwrap_or(0);
+        profile.origin = v
+            .get("origin")
+            .and_then(Json::as_str)
+            .and_then(crate::profile::ProfileOrigin::parse)
+            .unwrap_or_default();
         profile.mean_kernels_per_run = v.req_f64("mean_kernels_per_run")?;
         Ok(profile)
     }

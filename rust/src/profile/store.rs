@@ -8,7 +8,11 @@ use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::Path;
 
-const STORE_VERSION: u64 = 1;
+/// Current on-disk format. v2 added per-profile `epoch` and `origin`
+/// (online refinement); v1 files load with both defaulted — the full
+/// format and compatibility rules live in `rust/docs/profile-format.md`.
+const STORE_VERSION: u64 = 2;
+const OLDEST_READABLE_VERSION: u64 = 1;
 
 /// In-memory registry of measured task profiles.
 #[derive(Debug, Default)]
@@ -82,9 +86,10 @@ impl ProfileStore {
         let text = std::fs::read_to_string(path.as_ref())?;
         let doc = Json::parse(&text)?;
         let version = doc.req_u64("version")?;
-        if version != STORE_VERSION {
+        if !(OLDEST_READABLE_VERSION..=STORE_VERSION).contains(&version) {
             return Err(Error::Config(format!(
-                "profile store version {version} unsupported (expected {STORE_VERSION})"
+                "profile store version {version} unsupported \
+                 (readable: {OLDEST_READABLE_VERSION}..={STORE_VERSION})"
             )));
         }
         let mut store = ProfileStore::new();
@@ -147,6 +152,55 @@ mod tests {
         let k = KernelId::new("k", Dim3::x(2), Dim3::x(64));
         assert_eq!(a.sk(&k).unwrap(), Duration::from_micros(120));
         assert_eq!(a.sg(&k).unwrap(), Duration::from_micros(30));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Format v1 (no `epoch`/`origin` fields) still loads, with both
+    /// defaulted — the compatibility rule of profile-format.md.
+    #[test]
+    fn v1_store_loads_with_defaulted_epoch_and_origin() {
+        let dir = temp_dir("v1");
+        let path = dir.join("profiles.json");
+        let v1 = r#"{
+            "version": 1,
+            "profiles": [{
+                "task_key": "legacy",
+                "runs": 4,
+                "mean_kernels_per_run": 1.0,
+                "stats": {
+                    "k|g2x1x1|b64x1x1": {
+                        "exec": {"count": 4, "mean_ns": 120000.0, "m2": 0.0,
+                                 "min_ns": 120000, "max_ns": 120000},
+                        "gap": {"count": 0}
+                    }
+                }
+            }]
+        }"#;
+        std::fs::write(&path, v1).unwrap();
+        let loaded = ProfileStore::load(&path).unwrap();
+        let p = loaded.get(&TaskKey::new("legacy")).unwrap();
+        assert_eq!(p.epoch, 0);
+        assert_eq!(p.origin, crate::profile::ProfileOrigin::Measured);
+        assert_eq!(p.runs, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A refined profile's epoch and origin survive the round trip (the
+    /// daemon's restart-persistence contract).
+    #[test]
+    fn epoch_and_origin_round_trip() {
+        let dir = temp_dir("epoch");
+        let path = dir.join("profiles.json");
+        let mut s = ProfileStore::new();
+        let mut p = profile("svcA", 3);
+        p.epoch = 7;
+        p.origin = crate::profile::ProfileOrigin::Refined;
+        s.insert(p);
+        s.save(&path).unwrap();
+        let loaded = ProfileStore::load(&path).unwrap();
+        let p = loaded.get(&TaskKey::new("svcA")).unwrap();
+        assert_eq!(p.epoch, 7);
+        assert_eq!(p.origin, crate::profile::ProfileOrigin::Refined);
         std::fs::remove_dir_all(&dir).ok();
     }
 

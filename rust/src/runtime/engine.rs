@@ -68,6 +68,11 @@ pub struct EngineConfig {
     pub profile_runs: u32,
     /// Small-gap threshold ε.
     pub epsilon: Duration,
+    /// Online sharing-stage profile refinement (DESIGN.md §9): learn
+    /// from the wall-clock executions the engine already performs (real
+    /// CPU load shifts them) and shadow the offline store with refined
+    /// predictions. Off by default.
+    pub online: crate::profile::OnlineConfig,
 }
 
 impl Default for EngineConfig {
@@ -76,6 +81,7 @@ impl Default for EngineConfig {
             mode: Mode::Fikit,
             profile_runs: 3,
             epsilon: crate::coordinator::fikit::DEFAULT_EPSILON,
+            online: crate::profile::OnlineConfig::default(),
         }
     }
 }
@@ -98,6 +104,9 @@ pub struct EngineReport {
     pub windows: u64,
     pub early_stops: u64,
     pub kernels_executed: u64,
+    /// Refined profiles republished by the online refiner during
+    /// serving (0 with refinement off).
+    pub profiles_refined: u64,
     pub wall: StdDuration,
 }
 
@@ -234,6 +243,12 @@ impl RealTimeEngine {
         let mut queues = PriorityQueues::new();
         let mut active: HashMap<usize, Priority> = HashMap::new();
         let mut window: Option<FillWindow> = None;
+        // Online refinement (DESIGN.md §9): wall-clock executions feed
+        // the refiner; refined profiles shadow the offline store for
+        // every later SK/SG lookup.
+        let mut refiner = crate::profile::KeyedRefiner::new(self.cfg.online.clone());
+        let mut refined = ProfileStore::new();
+        let mut profiles_refined = 0u64;
         let mut fills = 0u64;
         let mut windows = 0u64;
         let mut early_stops = 0u64;
@@ -307,6 +322,8 @@ impl RealTimeEngine {
                 RtMsg::RequestEnd { svc } => {
                     active.remove(&svc);
                     window = None;
+                    // Inter-request idle must not be learned as a gap.
+                    refiner.clear_pending(&self.services[svc].key);
                 }
                 RtMsg::ServiceDone => {
                     done += 1;
@@ -323,15 +340,36 @@ impl RealTimeEngine {
                         if window.take().is_some() {
                             early_stops += 1;
                         }
-                        self.execute(&self.services[svc].steps[step].artifact)?;
+                        // This arrival closes the service's pending
+                        // completion→launch gap observation.
+                        let key = self.services[svc].key.clone();
+                        refiner.observe_next_launch(&key, now_sim(Instant::now()));
+                        let exec = self.execute(&self.services[svc].steps[step].artifact)?;
                         kernels += 1;
+                        // Fold the real (wall-clock) execution into the
+                        // online SK estimate and arm the gap observation.
+                        refiner.observe_exec(
+                            &key,
+                            &self.kernel_ids[svc][step],
+                            Duration::from_nanos(exec.as_nanos() as u64),
+                            now_sim(Instant::now()),
+                            refined.get(&key).or_else(|| profiles.get(&key)),
+                        );
+                        for p in refiner.take_refined(profiles) {
+                            profiles_refined += 1;
+                            refined.insert(p);
+                        }
                         release_txs[svc].send(()).ok();
-                        // Open a fill window for the profiled think gap.
+                        // Open a fill window for the profiled think gap
+                        // (refined predictions shadow the offline store).
                         if self.cfg.mode == Mode::Fikit {
                             let kid = &self.kernel_ids[svc][step];
-                            let gap = profiles
+                            let gap = refined
                                 .get(&self.services[svc].key)
-                                .and_then(|p| p.sg(kid));
+                                .and_then(|p| p.sg(kid))
+                                .or_else(|| {
+                                    profiles.get(&self.services[svc].key).and_then(|p| p.sg(kid))
+                                });
                             if let Some(g) = gap {
                                 let now = now_sim(Instant::now());
                                 // The engine's service index doubles as a
@@ -349,6 +387,12 @@ impl RealTimeEngine {
                         }
                     } else {
                         // Lower priority: park in the message queues.
+                        // Any pending gap observation is stale the
+                        // moment the service stops being holder-class —
+                        // its completion→launch deltas now include hold
+                        // time, not think time (fill/drain executions
+                        // below never re-arm it).
+                        refiner.clear_pending(&self.services[svc].key);
                         let launch = KernelLaunch {
                             task_key: self.services[svc].key.clone(),
                             task_handle: TaskHandle::from_index(svc),
@@ -360,9 +404,14 @@ impl RealTimeEngine {
                             true_duration: Duration::ZERO,
                             issued_at: now_sim(Instant::now()),
                         };
-                        let predicted = profiles
+                        let predicted = refined
                             .get(&self.services[svc].key)
-                            .and_then(|p| p.sk(&launch.kernel));
+                            .and_then(|p| p.sk(&launch.kernel))
+                            .or_else(|| {
+                                profiles
+                                    .get(&self.services[svc].key)
+                                    .and_then(|p| p.sk(&launch.kernel))
+                            });
                         queues.push_predicted(launch, predicted, now_sim(Instant::now()));
                     }
                 }
@@ -389,6 +438,7 @@ impl RealTimeEngine {
             windows,
             early_stops,
             kernels_executed: kernels,
+            profiles_refined,
             wall: t_start.elapsed(),
         })
     }

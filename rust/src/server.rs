@@ -37,6 +37,9 @@ pub struct ServerConfig {
     pub epsilon: Duration,
     /// Runs required before a profile counts as ready.
     pub min_profile_runs: u32,
+    /// Online sharing-stage profile refinement per shard (DESIGN.md §9;
+    /// `fikit serve --online`).
+    pub online: crate::profile::OnlineConfig,
 }
 
 impl Default for ServerConfig {
@@ -48,6 +51,7 @@ impl Default for ServerConfig {
             policy: PlacementPolicy::LeastLoaded,
             epsilon: DEFAULT_EPSILON,
             min_profile_runs: 1,
+            online: crate::profile::OnlineConfig::default(),
         }
     }
 }
@@ -70,6 +74,7 @@ impl SchedulerServer {
                 policy: cfg.policy,
                 epsilon: cfg.epsilon,
                 min_profile_runs: cfg.min_profile_runs,
+                online: cfg.online.clone(),
             },
             profiles,
         );
@@ -105,5 +110,12 @@ impl SchedulerServer {
     /// `deadline` elapses) — clean-shutdown test harnesses use this.
     pub fn run_until_drained(&mut self, deadline: Option<StdDuration>) -> Result<()> {
         self.daemon.serve(&self.transport, deadline, true)
+    }
+
+    /// Persist the live profile store (offline + refined overlays) —
+    /// `fikit serve --save-profiles PATH` calls this on exit so a
+    /// restarted daemon resumes from refined predictions (DESIGN.md §9).
+    pub fn save_profiles(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.daemon.save_profiles(path)
     }
 }

@@ -176,6 +176,14 @@ impl ServiceProcess {
         self.task_handle
     }
 
+    /// Inject gap interference: traces of *future* tasks sample their
+    /// CPU-side think gaps scaled by `scale` (the in-flight task's
+    /// trace is already drawn). Drives the drift experiment
+    /// (DESIGN.md §9) through the driver's `GpuSim::inject_gap_scale`.
+    pub fn set_gap_scale(&mut self, scale: f64) {
+        self.gen.set_gap_scale(scale);
+    }
+
     pub fn priority(&self) -> Priority {
         self.service.priority
     }

@@ -261,6 +261,30 @@ impl ModelSpec {
             self.mean_sync_gap().nanos() as f64 / total
         }
     }
+
+    /// A zero-measurement **cold-start prior** for this model
+    /// (DESIGN.md §9): per-segment mean exec as `SK` and, for sync
+    /// segments, the mean think gap as `SG`. In a real fleet this prior
+    /// is a same-model profile borrowed from another instance; in the
+    /// simulation the segment means play that role (they are what a
+    /// sibling's measurement converges to). Marked `origin = Prior` so
+    /// admission and persistence can tell it from measured data; the
+    /// online refiner converges it against the service's actual
+    /// behaviour once it is serving.
+    pub fn structural_profile(&self, key: crate::core::TaskKey) -> crate::profile::TaskProfile {
+        let mut p = crate::profile::TaskProfile::new(key);
+        for seg in &self.segments {
+            let id = crate::core::KernelId::new(seg.kernel_name, seg.grid, seg.block);
+            // Async kernels back-to-back on the device: no fillable gap.
+            let gap = seg.sync.then_some(seg.gap);
+            for _ in 0..seg.count {
+                p.record(&id, seg.exec, gap);
+            }
+        }
+        p.finish_run(self.kernel_count() as usize);
+        p.origin = crate::profile::ProfileOrigin::Prior;
+        p
+    }
 }
 
 /// Calibrated specs (exec/gap in µs). Approximate structure:
@@ -445,6 +469,27 @@ mod tests {
         // resnet101 roughly 2x resnet50.
         let r = ms(ModelKind::Resnet101) / ms(ModelKind::Resnet50);
         assert!((1.4..2.6).contains(&r), "r101/r50 = {r}");
+    }
+
+    /// The cold-start prior covers exactly the kernels a service's
+    /// traces will launch, with the segment means as predictions.
+    #[test]
+    fn structural_prior_matches_trace_kernels() {
+        use crate::core::TaskKey;
+        let spec = ModelKind::KeypointRcnnResnet50Fpn.spec();
+        let prior = spec.structural_profile(TaskKey::new("svc"));
+        assert_eq!(prior.origin, crate::profile::ProfileOrigin::Prior);
+        assert!(prior.is_ready(1));
+        assert_eq!(prior.num_unique(), spec.segments.len());
+        for seg in &spec.segments {
+            let id = crate::core::KernelId::new(seg.kernel_name, seg.grid, seg.block);
+            assert_eq!(prior.sk(&id), Some(seg.exec));
+            if seg.sync {
+                assert_eq!(prior.sg(&id), Some(seg.gap));
+            } else {
+                assert_eq!(prior.sg(&id), None);
+            }
+        }
     }
 
     #[test]

@@ -94,6 +94,11 @@ pub struct TraceGenerator {
     rng: Rng,
     /// Pre-built kernel ids, one per segment (shared Arc names).
     ids: Vec<KernelId>,
+    /// Multiplier on sampled CPU-side gaps — the interference-injection
+    /// knob (DESIGN.md §9): co-location contention inflates a service's
+    /// real think gaps, which is exactly the drift the online refiner
+    /// must detect. 1.0 = no interference.
+    gap_scale: f64,
 }
 
 impl TraceGenerator {
@@ -119,7 +124,16 @@ impl TraceGenerator {
             segments,
             rng: Rng::new(seed),
             ids,
+            gap_scale: 1.0,
         }
+    }
+
+    /// Inject (or clear) gap interference: future traces sample their
+    /// CPU-side gaps scaled by `scale`. Exec times and the RNG stream
+    /// are untouched, so a run with `scale = 1.0` is bit-identical to
+    /// one that never called this.
+    pub fn set_gap_scale(&mut self, scale: f64) {
+        self.gap_scale = scale.max(0.0);
     }
 
     /// Sample one jittered duration around `mean` with log-normal σ
@@ -144,7 +158,10 @@ impl TraceGenerator {
         for (si, (seg, id)) in self.segments.iter().zip(&self.ids).enumerate() {
             for _ in 0..seg.count {
                 let exec = Self::sample(&mut self.rng, seg.exec, seg.exec_jitter);
-                let gap = Self::sample(&mut self.rng, seg.gap, seg.gap_jitter);
+                let mut gap = Self::sample(&mut self.rng, seg.gap, seg.gap_jitter);
+                if self.gap_scale != 1.0 {
+                    gap = gap.scale(self.gap_scale);
+                }
                 kernels.push(TraceKernel {
                     kernel: id.clone(),
                     seg: si as u32,
@@ -207,6 +224,23 @@ mod tests {
         let rel = (mean - expected).abs() / expected;
         // Log-normal with the calibrated sigmas: sample mean within 5%.
         assert!(rel < 0.05, "mean {mean:.2}ms vs expected {expected:.2}ms");
+    }
+
+    #[test]
+    fn gap_scale_inflates_only_gaps() {
+        let spec = ModelKind::KeypointRcnnResnet50Fpn.spec();
+        let mut base = TraceGenerator::new(&spec, 9);
+        let mut scaled = TraceGenerator::new(&spec, 9);
+        scaled.set_gap_scale(2.0);
+        let a = base.next_trace();
+        let b = scaled.next_trace();
+        assert_eq!(a.total_exec(), b.total_exec(), "exec untouched");
+        for (ka, kb) in a.kernels.iter().zip(&b.kernels) {
+            assert_eq!(kb.gap_after, ka.gap_after.scale(2.0));
+        }
+        // Clearing the injection restores the shared RNG stream exactly.
+        scaled.set_gap_scale(1.0);
+        assert_eq!(base.next_trace().kernels, scaled.next_trace().kernels);
     }
 
     #[test]

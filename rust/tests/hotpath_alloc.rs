@@ -25,7 +25,7 @@ use fikit::core::{
     Dim3, Duration, Interner, KernelId, KernelLaunch, KernelRecord, LaunchSource, Priority,
     SimTime, TaskId, TaskKey,
 };
-use fikit::profile::{ResolvedProfile, TaskProfile};
+use fikit::profile::{OnlineConfig, OnlineRefiner, ResolvedProfile, TaskProfile};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -144,6 +144,69 @@ fn best_prio_fit_cycle_is_allocation_free() {
         "canonical() reachable from the fill loop"
     );
     assert_eq!(q.len(), 512);
+}
+
+/// The online-refinement observation path (DESIGN.md §9): in steady
+/// state — observations inside the confidence band, so no drift, no
+/// snapshot publish — `OnlineRefiner::observe` must perform zero heap
+/// allocations and reach zero `canonical()` calls: it is on the
+/// per-completion path of every FIKIT event loop with refinement on.
+/// (Snapshot publishing allocates, by design: it happens only on
+/// drift-triggered epoch boundaries, never in steady state.)
+#[test]
+fn refinement_observe_path_is_allocation_free() {
+    let _gate = GATE.lock().unwrap();
+    let mut interner = Interner::new();
+    let k = KernelId::new("rk", Dim3::x(16), Dim3::x(128));
+    let mut profile = TaskProfile::new(TaskKey::new("svc"));
+    profile.record(
+        &k,
+        Duration::from_micros(100),
+        Some(Duration::from_micros(500)),
+    );
+    profile.finish_run(1);
+    let th = interner.intern_task(&TaskKey::new("svc"));
+    let rp = ResolvedProfile::resolve(&profile, &mut interner);
+    let kh = interner.kernel_handle(&k).unwrap();
+
+    let mut refiner = OnlineRefiner::new(OnlineConfig {
+        enabled: true,
+        ..Default::default()
+    });
+    refiner.register(th, &rp);
+
+    // Warm up past min_samples at the profiled truth (no drift).
+    for _ in 0..64 {
+        let snap = refiner.observe(
+            th,
+            kh,
+            Duration::from_micros(100),
+            Some(Duration::from_micros(500)),
+        );
+        assert!(snap.is_none(), "steady state must not publish");
+    }
+
+    let canonical_before = canonical_count();
+    let allocs = count_allocs(|| {
+        for _ in 0..10_000 {
+            let snap = refiner.observe(
+                th,
+                kh,
+                Duration::from_micros(100),
+                Some(Duration::from_micros(500)),
+            );
+            assert!(snap.is_none());
+        }
+    });
+    let canonical_calls = canonical_count() - canonical_before;
+
+    assert_eq!(allocs, 0, "refinement observe path allocated {allocs} times");
+    assert_eq!(
+        canonical_calls, 0,
+        "canonical() reachable from the refinement observe path"
+    );
+    assert_eq!(refiner.stats().snapshots_published, 0);
+    assert_eq!(refiner.stats().exec_observations, 10_064);
 }
 
 /// The full scheduler path — IssueKernel routing (`on_launch`), holder

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Docs health check — the repo's "docs job".
 
-Three checks, zero dependencies:
+Five checks, zero dependencies:
 
 1. **Markdown links**: every relative link target in every tracked
    `*.md` file must exist (anchors are checked against the target
@@ -10,7 +10,17 @@ Three checks, zero dependencies:
    citation in source and docs (``*.rs``, ``*.py``, ``*.md``) must
    resolve to a real ``§<token>`` heading in ``rust/DESIGN.md`` — the
    dangling-citation failure mode this script exists to prevent.
-3. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
+   (This is also what keeps the §9 online-refinement citations
+   honest.)
+3. **DESIGN.md table of contents**: every ``§<token>`` heading must be
+   listed in the TOC bullet list and vice versa — a new section that
+   is not announced, or a TOC entry whose section was renamed away,
+   fails the check.
+4. **ADR cross-links**: every ``ADR-<NNN>`` mention anywhere in the
+   docs/source must resolve to an existing
+   ``rust/docs/ADR-<NNN>-*.md`` file, and each ADR's ``Depends on`` /
+   ``Unlocks`` sections may only reference ADRs that exist.
+5. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
    (skipped with a notice when no cargo toolchain is available, e.g. in
    the offline container).
 
@@ -115,6 +125,66 @@ def check_design_refs() -> list[str]:
     return errors
 
 
+def check_design_toc() -> list[str]:
+    """The DESIGN.md TOC and the actual §-headings must agree."""
+    if not os.path.exists(DESIGN):
+        return []  # check_design_refs already reports this
+    with open(DESIGN, encoding="utf-8") as f:
+        design = f.read()
+    headings = set(re.findall(r"^#{2,6}\s+§([A-Za-z0-9_-]+)", design, re.MULTILINE))
+    toc = set(re.findall(r"^\*\s+\[§([A-Za-z0-9_-]+)[\s\]]", design, re.MULTILINE))
+    errors = []
+    for tok in sorted(headings - toc):
+        errors.append(f"rust/DESIGN.md: §{tok} heading missing from the TOC")
+    for tok in sorted(toc - headings):
+        errors.append(f"rust/DESIGN.md: TOC lists §{tok} but no such heading exists")
+    return errors
+
+
+ADR_REF = re.compile(r"\bADR-(\d{3})\b")
+
+
+def check_adr_links() -> list[str]:
+    """Every ADR-NNN mention must resolve to rust/docs/ADR-NNN-*.md."""
+    adr_dir = os.path.join(REPO, "rust", "docs")
+    existing: set[str] = set()
+    if os.path.isdir(adr_dir):
+        for name in os.listdir(adr_dir):
+            m = re.match(r"ADR-(\d{3})-.*\.md$", name)
+            if m:
+                existing.add(m.group(1))
+    errors = []
+    for path in walk((".rs", ".py", ".md")):
+        # ISSUE.md is the per-PR brief; SNIPPETS.md quotes exemplar code
+        # from other repositories (whose ADR numbering is their own).
+        if os.path.basename(path) in ("ISSUE.md", "SNIPPETS.md"):
+            continue
+        with open(path, encoding="utf-8") as f:
+            content = f.read()
+        for num in set(ADR_REF.findall(content)):
+            if num not in existing:
+                errors.append(
+                    f"{os.path.relpath(path, REPO)}: references ADR-{num}, "
+                    f"but rust/docs/ has no ADR-{num}-*.md "
+                    f"(existing: {', '.join('ADR-' + n for n in sorted(existing)) or 'none'})"
+                )
+    # Each ADR's "Depends on" / "Unlocks" sections must cite real ADRs
+    # (covered by the scan above) and, when they cite one, link it.
+    for num in sorted(existing):
+        for name in os.listdir(adr_dir):
+            if not name.startswith(f"ADR-{num}-"):
+                continue
+            with open(os.path.join(adr_dir, name), encoding="utf-8") as f:
+                content = f.read()
+            for ref in set(ADR_REF.findall(content)) - {num}:
+                if f"ADR-{ref}-" not in content:
+                    errors.append(
+                        f"rust/docs/{name}: mentions ADR-{ref} without linking "
+                        f"its file (expected a [ADR-{ref}](ADR-{ref}-*.md) link)"
+                    )
+    return errors
+
+
 def check_rustdoc() -> list[str]:
     if shutil.which("cargo") is None:
         print("  [skip] cargo not on PATH — rustdoc check skipped")
@@ -138,6 +208,8 @@ def main() -> int:
     for name, check in [
         ("markdown links", check_markdown_links),
         ("DESIGN.md § references", check_design_refs),
+        ("DESIGN.md table of contents", check_design_toc),
+        ("ADR cross-links", check_adr_links),
         ("rustdoc (cargo doc --no-deps)", check_rustdoc),
     ]:
         print(f"checking {name} ...")
