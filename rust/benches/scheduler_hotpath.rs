@@ -10,7 +10,7 @@
 //! Set `BENCH_JSON=path` to write the machine-readable `BENCH_sched.json`
 //! artifact (same shape as `fikit bench --json`).
 
-use fikit::benchsuite::run_hotpath_suite;
+use fikit::benchsuite::{run_hotpath_suite, run_sim_suite};
 use fikit::config::{ExperimentConfig, ServiceConfig};
 use fikit::coordinator::driver::run_experiment;
 use fikit::coordinator::Mode;
@@ -93,17 +93,28 @@ fn main() {
         );
     }
 
+    // --- shared simulator event-core suite (events/sec headline) ---
+    let sim_suite = run_sim_suite(false);
+
     println!("{}", suite.table);
+    println!("{}", sim_suite.table);
     println!("{}", b.report());
 
     // Machine-readable perf trajectory (budgets embedded per case).
     if let Ok(path) = std::env::var("BENCH_JSON") {
         suite.write_json(&path).expect("write BENCH_JSON");
         println!("wrote bench results -> {path}");
+        let sim_path = std::path::Path::new(&path)
+            .with_file_name("BENCH_sim.json")
+            .to_string_lossy()
+            .into_owned();
+        sim_suite.write_json(&sim_path).expect("write BENCH_sim.json");
+        println!("wrote bench results -> {sim_path}");
     }
 
     // Per-case budget gate (ε-floor reasoning in module docs).
-    let violations = suite.violations();
+    let mut violations = suite.violations();
+    violations.extend(sim_suite.violations());
     for v in &violations {
         eprintln!("BUDGET VIOLATION: {v}");
     }

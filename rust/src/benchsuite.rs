@@ -1,15 +1,19 @@
-//! The scheduler hot-path benchmark suite, shared by the `cargo bench`
-//! target (`benches/scheduler_hotpath.rs`) and the `fikit bench` CLI
-//! subcommand — both produce the same `BENCH_sched.json` artifact, the
-//! first point of the repo's measured perf trajectory (DESIGN.md §Perf).
+//! The perf benchmark suites, shared by the `cargo bench` target
+//! (`benches/scheduler_hotpath.rs`) and the `fikit bench` CLI
+//! subcommand — producing the `BENCH_sched.json` (scheduler hot path)
+//! and `BENCH_sim.json` (simulator event core) artifacts, the measured
+//! perf trajectory of the repo (DESIGN.md §Perf).
 //!
-//! Each case may declare a **budget** (mean ns); `scripts/check_bench.py`
-//! fails the build when a budgeted case exceeds it. The headline budget
-//! comes straight from the paper's ε: a BestPrioFit decision at 512
-//! queued requests must stay ≤ 1 µs mean, three orders of magnitude
-//! under the smallest gap worth filling.
+//! Each case may declare a **budget** (mean ns, or an events/sec floor
+//! for rate cases); `scripts/check_bench.py` fails the build when a
+//! budgeted case misses it. The scheduler headline budget comes straight
+//! from the paper's ε: a BestPrioFit decision at 512 queued requests
+//! must stay ≤ 1 µs mean, three orders of magnitude under the smallest
+//! gap worth filling. The simulator headline is fleet-scale capacity: a
+//! full deterministic run must push ≥ 500 k events/s through the
+//! calendar-wheel core (ADR-003).
 //!
-//! Regenerate the artifact from the repo root with ONE command:
+//! Regenerate both artifacts from the repo root with ONE command:
 //!
 //! ```text
 //! cargo run --manifest-path rust/Cargo.toml --release -- bench --json
@@ -19,28 +23,39 @@
 //! scheduler_hotpath` — cargo runs bench binaries with cwd at the
 //! package root `rust/`, and `check_bench.py` reads the repo root).
 
+use crate::config::{ExperimentConfig, ServiceConfig};
 use crate::coordinator::best_prio_fit::best_prio_fit;
+use crate::coordinator::driver::{run_experiment_scratch, SimScratch};
 use crate::coordinator::fikit::{fikit_fill, FillWindow, DEFAULT_EPSILON};
 use crate::coordinator::queues::PriorityQueues;
+use crate::coordinator::Mode;
 use crate::core::{
     Dim3, Duration, Interner, KernelId, KernelLaunch, Priority, Result, SimTime, TaskHandle,
     TaskId, TaskKey,
 };
 use crate::profile::{ResolvedProfile, TaskProfile};
+use crate::simulator::{BaselineHeapQueue, CalendarWheel};
 use crate::util::bench::{black_box, BenchResult, Bencher};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::workload::ModelKind;
 use std::collections::BTreeMap;
 
 /// Schema version of `BENCH_*.json` (bump on shape changes, in lockstep
 /// with `scripts/check_bench.py`).
 pub const BENCH_JSON_VERSION: u64 = 1;
 
-/// The suite's results plus per-case budgets.
+/// A suite's results plus per-case budgets.
 pub struct SuiteReport {
+    /// Suite name, emitted as the artifact's `suite` field.
+    pub suite: &'static str,
     pub results: Vec<BenchResult>,
     /// Case name → mean-ns budget. Only budgeted cases are gated.
     pub budgets: BTreeMap<String, u64>,
+    /// Case name → `(events_per_sec, floor)` throughput gates. The case
+    /// also appears in `results` (its mean is the per-run wall time);
+    /// this map adds the derived rate and its declared floor.
+    pub rates: BTreeMap<String, (u64, u64)>,
     /// Rendered text table (for terminal output).
     pub table: String,
 }
@@ -60,10 +75,17 @@ impl SuiteReport {
                 }
             }
         }
+        for (name, &(rate, floor)) in &self.rates {
+            if rate < floor {
+                out.push(format!(
+                    "{name}: {rate} events/s under budget {floor} events/s"
+                ));
+            }
+        }
         out
     }
 
-    /// The `BENCH_sched.json` document.
+    /// The `BENCH_*.json` document.
     pub fn to_json(&self) -> Json {
         let cases = self
             .results
@@ -73,12 +95,17 @@ impl SuiteReport {
                 if let Some(&budget) = self.budgets.get(&r.name) {
                     case = case.set("budget_ns", budget);
                 }
+                if let Some(&(rate, floor)) = self.rates.get(&r.name) {
+                    case = case
+                        .set("events_per_sec", rate)
+                        .set("budget_events_per_sec", floor);
+                }
                 case
             })
             .collect();
         Json::obj()
             .set("version", BENCH_JSON_VERSION)
-            .set("suite", "scheduler_hotpath")
+            .set("suite", self.suite)
             .set("cases", Json::Arr(cases))
     }
 
@@ -285,8 +312,130 @@ pub fn run_hotpath_suite(quick: bool) -> SuiteReport {
 
     let table = b.report();
     SuiteReport {
+        suite: "scheduler_hotpath",
         results: b.results().to_vec(),
         budgets,
+        rates: BTreeMap::new(),
+        table,
+    }
+}
+
+/// The deterministic fixture behind the `sim/events_per_sec` headline:
+/// a two-tenant contended run (high-priority Alexnet vs low-priority
+/// VGG16) on the default sharing path — no measurement stage, so every
+/// benched nanosecond is the event core, device model, and service
+/// loops.
+fn sim_headline_config() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        mode: Mode::Sharing,
+        seed: 0xBE7C,
+        ..ExperimentConfig::default()
+    };
+    cfg.services
+        .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0).tasks(12));
+    cfg.services
+        .push(ServiceConfig::new(ModelKind::Vgg16, Priority::P5).tasks(12));
+    cfg
+}
+
+/// Floor for the `sim/events_per_sec` headline (events per second a
+/// full run must sustain through the calendar-wheel event core).
+pub const SIM_EVENTS_PER_SEC_FLOOR: u64 = 500_000;
+
+/// Run the simulator event-core suite (`BENCH_sim.json`). `quick`
+/// trades fidelity for ~100 ms/case.
+pub fn run_sim_suite(quick: bool) -> SuiteReport {
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let mut rates = BTreeMap::new();
+
+    // --- event-wheel push/pop vs the old binary heap (the before/after
+    // trajectory of ADR-003). Dense band: 256 events ~1.5 µs apart, the
+    // shape a busy device queue produces. ---
+    const BURST: usize = 256;
+    b.bench("wheel/push_pop_burst_n256", {
+        let mut wheel: CalendarWheel<u64> = CalendarWheel::default();
+        let mut t = 0u64;
+        move || {
+            for i in 0..BURST {
+                t += 1_500;
+                wheel.push(SimTime(t), i as u64);
+            }
+            let mut sum = 0u64;
+            while let Some((_, v)) = wheel.pop() {
+                sum += v;
+            }
+            black_box(sum)
+        }
+    });
+    b.bench("wheel/heap_push_pop_burst_n256", {
+        let mut heap: BaselineHeapQueue<u64> = BaselineHeapQueue::new();
+        let mut t = 0u64;
+        move || {
+            for i in 0..BURST {
+                t += 1_500;
+                heap.push(SimTime(t), i as u64);
+            }
+            let mut sum = 0u64;
+            while let Some((_, v)) = heap.pop() {
+                sum += v;
+            }
+            black_box(sum)
+        }
+    });
+    // Far-future mix: every 4th event lands ~200 ms out, exercising the
+    // overflow ring and its refill on cursor advance.
+    b.bench("wheel/far_future_mix_n256", {
+        let mut wheel: CalendarWheel<u64> = CalendarWheel::default();
+        let mut t = 0u64;
+        move || {
+            for i in 0..BURST {
+                t += 1_500;
+                let at = if i % 4 == 0 { t + 200_000_000 } else { t };
+                wheel.push(SimTime(at), i as u64);
+            }
+            let mut sum = 0u64;
+            while let Some((_, v)) = wheel.pop() {
+                sum += v;
+            }
+            black_box(sum)
+        }
+    });
+
+    // --- headline: events/sec of a full deterministic run. The event
+    // count is fixed by the seed; the rate divides it by the measured
+    // mean wall time. Scratch reuse keeps every iteration allocation-
+    // stable, exactly like the fig-sweep callers. ---
+    let cfg = sim_headline_config();
+    let mut scratch = SimScratch::new();
+    let events = run_experiment_scratch(&cfg, &mut scratch)
+        .expect("sim bench fixture runs")
+        .events;
+    b.bench("sim/events_per_sec", || {
+        black_box(
+            run_experiment_scratch(&cfg, &mut scratch)
+                .expect("sim bench fixture runs")
+                .events,
+        )
+    });
+    let mean_ns = b
+        .results()
+        .last()
+        .expect("headline case just ran")
+        .mean
+        .as_nanos()
+        .max(1) as u64;
+    let rate = (events as u128 * 1_000_000_000 / mean_ns as u128) as u64;
+    rates.insert(
+        "sim/events_per_sec".to_string(),
+        (rate, SIM_EVENTS_PER_SEC_FLOOR),
+    );
+
+    let table = b.report();
+    SuiteReport {
+        suite: "sim_core",
+        results: b.results().to_vec(),
+        budgets: BTreeMap::new(),
+        rates,
         table,
     }
 }
@@ -323,6 +472,42 @@ mod tests {
         let name = report.results[0].name.clone();
         report.budgets.insert(name, 0);
         assert!(!report.violations().is_empty());
+    }
+
+    #[test]
+    fn sim_suite_emits_events_per_sec_headline() {
+        let report = run_sim_suite(true);
+        let doc = report.to_json();
+        assert_eq!(doc.req_str("suite").unwrap(), "sim_core");
+        let cases = doc.req_arr("cases").unwrap();
+        let headline = cases
+            .iter()
+            .find(|c| c.req_str("name").unwrap() == "sim/events_per_sec")
+            .expect("headline case missing");
+        assert!(headline.req_u64("events_per_sec").unwrap() > 0);
+        assert_eq!(
+            headline.req_u64("budget_events_per_sec").unwrap(),
+            SIM_EVENTS_PER_SEC_FLOOR
+        );
+        // Both wheel comparison cases made it into the artifact.
+        for name in ["wheel/push_pop_burst_n256", "wheel/heap_push_pop_burst_n256"] {
+            assert!(cases.iter().any(|c| c.req_str("name").unwrap() == name));
+        }
+    }
+
+    #[test]
+    fn rate_floors_gate_violations() {
+        let mut report = run_sim_suite(true);
+        let (rate, _) = report.rates["sim/events_per_sec"];
+        // An unreachable floor flags; the measured rate passes itself.
+        report
+            .rates
+            .insert("sim/events_per_sec".to_string(), (rate, u64::MAX));
+        assert!(!report.violations().is_empty());
+        report
+            .rates
+            .insert("sim/events_per_sec".to_string(), (rate, rate));
+        assert!(report.violations().is_empty());
     }
 
     #[test]

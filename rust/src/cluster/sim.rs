@@ -15,19 +15,32 @@
 //!   when it exceeds the configured bound — reactively **migrates** the
 //!   most disruptive low-priority tenant to the policy's best other
 //!   device.
+//!
+//! The churn loop is **bulk-synchronous parallel** (DESIGN.md §Perf):
+//! between consecutive fleet events every per-GPU sim is independent, so
+//! [`ShardCtrl`] advances the device shards to the next fleet-event time
+//! (the *merge horizon*) on `sim_threads` worker threads, then the main
+//! thread runs all fleet-level logic — harvest, placement, migration —
+//! serially in device order. Reports are byte-identical across thread
+//! counts because the merge order never depends on thread interleaving.
 
 use super::compat::CompatMatrix;
 use super::placement::{FleetState, Placement, PlacementPolicy, Resident, ServiceRequest};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::{run_experiment, profile_service, GpuSim};
+use crate::coordinator::driver::{
+    profile_service_scratch, run_experiment_scratch, GpuSim, SimScratch,
+};
 use crate::coordinator::Mode;
 use crate::core::{Duration, Priority, Result, SimTime, TaskKey};
 use crate::metrics::fleet::is_high_priority;
 use crate::metrics::{FleetMetrics, FleetSample, JctStats, TextTable};
 use crate::profile::ProfileStore;
+use crate::simulator::CalendarWheel;
 use crate::workload::{ArrivalProcess, InvocationPattern, ModelKind};
 use std::collections::BTreeMap;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
 
 /// Cluster experiment description (static batch run).
 #[derive(Debug, Clone)]
@@ -134,12 +147,18 @@ impl ClusterReport {
 pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<ClusterReport> {
     let placement = cfg.policy.place(&cfg.requests, cfg.gpus, compat);
 
+    // One event-core scratch reused across every run in this experiment.
+    let mut scratch = SimScratch::new();
+
     // Solo baselines per distinct model (for slowdown normalization).
     let mut solo_ms: std::collections::BTreeMap<&'static str, f64> = Default::default();
     for req in &cfg.requests {
         let name = req.model.name();
         if !solo_ms.contains_key(name) {
-            solo_ms.insert(name, solo_mean_ms(req.model, req.tasks.min(50), cfg.seed)?);
+            solo_ms.insert(
+                name,
+                solo_mean_ms(req.model, req.tasks.min(50), cfg.seed, &mut scratch)?,
+            );
         }
     }
 
@@ -163,7 +182,7 @@ pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<Cluster
                     .with_key(&format!("svc{idx}")),
             );
         }
-        let report = run_experiment(&gpu_cfg)?;
+        let report = run_experiment_scratch(&gpu_cfg, &mut scratch)?;
         for &idx in &tenant_idxs {
             let req = &cfg.requests[idx];
             let svc = report
@@ -187,7 +206,7 @@ pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<Cluster
 
 /// Mean solo JCT of `model` (no co-tenant, default sharing path) — the
 /// denominator of every slowdown in this module.
-fn solo_mean_ms(model: ModelKind, tasks: u32, seed: u64) -> Result<f64> {
+fn solo_mean_ms(model: ModelKind, tasks: u32, seed: u64, scratch: &mut SimScratch) -> Result<f64> {
     let mut solo = ExperimentConfig {
         mode: Mode::Sharing,
         seed,
@@ -195,7 +214,7 @@ fn solo_mean_ms(model: ModelKind, tasks: u32, seed: u64) -> Result<f64> {
     };
     solo.services
         .push(ServiceConfig::new(model, Priority::P0).tasks(tasks.max(3)));
-    Ok(run_experiment(&solo)?.services[0].jct.mean_ms())
+    Ok(run_experiment_scratch(&solo, scratch)?.services[0].jct.mean_ms())
 }
 
 // ---------------------------------------------------------------------
@@ -257,6 +276,11 @@ pub struct ChurnConfig {
     /// Enable per-GPU online profile refinement even without cold-start
     /// admission (implied by `cold_start`).
     pub online: bool,
+    /// Worker threads advancing device shards between fleet events
+    /// (clamped to `[1, gpus]`). The report is byte-identical for every
+    /// value — threads only split the shard-advance work, never the
+    /// fleet-level decisions (DESIGN.md §Perf).
+    pub sim_threads: usize,
 }
 
 impl ChurnConfig {
@@ -273,6 +297,7 @@ impl ChurnConfig {
             metrics_window: Duration::from_millis(1_000),
             cold_start: false,
             online: false,
+            sim_threads: 1,
         }
     }
 }
@@ -358,7 +383,7 @@ impl ChurnReport {
 }
 
 /// Fleet-level events, processed in `(time, seq)` order.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 enum FleetEvent {
     /// Schedule entry `idx` arrives and requests placement.
     Arrive(usize),
@@ -375,6 +400,81 @@ struct LiveService {
     gpu: usize,
 }
 
+/// Bulk-synchronous shard coordinator (DESIGN.md §Perf).
+///
+/// Device sims are striped across `workers + 1` stripes; stripe 0 is run
+/// by the main thread, stripes `1..=workers` by persistent worker
+/// threads. One round = main stores the **merge horizon**, releases the
+/// workers at the start barrier, runs its own stripe, and rejoins at the
+/// end barrier — after which every shard sits at the horizon and all
+/// worker mutations are visible to the main thread (the barrier is the
+/// synchronization edge). Determinism across thread counts is free:
+/// shards share nothing, every shard reaches the same horizons in the
+/// same sequence, and all cross-shard logic stays on the main thread.
+struct ShardCtrl {
+    barrier: Barrier,
+    /// Next merge horizon as raw nanos (`SimTime::MAX` = final drain).
+    horizon: AtomicU64,
+    shutdown: AtomicBool,
+    workers: usize,
+}
+
+impl ShardCtrl {
+    fn new(workers: usize) -> ShardCtrl {
+        ShardCtrl {
+            barrier: Barrier::new(workers + 1),
+            horizon: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            workers,
+        }
+    }
+
+    /// Advance every shard to `to` and return once all have arrived.
+    fn advance(&self, sims: &[Mutex<GpuSim>], to: SimTime) {
+        self.horizon.store(to.nanos(), Ordering::Relaxed);
+        self.barrier.wait(); // release workers into this round
+        self.run_stripe(sims, 0, to);
+        self.barrier.wait(); // every stripe done, mutations published
+    }
+
+    fn run_stripe(&self, sims: &[Mutex<GpuSim>], stripe: usize, to: SimTime) {
+        let stride = self.workers + 1;
+        for sim in sims.iter().skip(stripe).step_by(stride) {
+            sim.lock().expect("sim shard lock").run_until(to);
+        }
+    }
+
+    fn worker_loop(&self, sims: &[Mutex<GpuSim>], worker: usize) {
+        loop {
+            self.barrier.wait();
+            if self.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            let to = SimTime(self.horizon.load(Ordering::Relaxed));
+            self.run_stripe(sims, worker + 1, to);
+            self.barrier.wait();
+        }
+    }
+
+    /// Release the workers into a final round told to exit. Idempotent,
+    /// so the [`StopGuard`] can fire on both success and error paths.
+    fn stop(&self) {
+        if !self.shutdown.swap(true, Ordering::Relaxed) && self.workers > 0 {
+            self.barrier.wait();
+        }
+    }
+}
+
+/// Shuts the shard workers down when dropped — including on the `?`
+/// early-return paths of the serving loop, so `thread::scope` can join.
+struct StopGuard<'a>(&'a ShardCtrl);
+
+impl Drop for StopGuard<'_> {
+    fn drop(&mut self) {
+        self.0.stop();
+    }
+}
+
 /// Run the dynamic cluster serving simulation.
 ///
 /// Deterministic for a fixed config: the arrival schedule, every GPU
@@ -384,13 +484,18 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
     let schedule = cfg.arrivals.generate(cfg.seed);
 
     // --- offline phase: solo baselines + profiles (paper lifecycle) ---
+    // One event-core scratch serves every offline run back to back.
+    let mut scratch = SimScratch::new();
     let mut solo_ms: BTreeMap<&'static str, f64> = BTreeMap::new();
     let mut store = ProfileStore::new();
     let mut model_profiles: HashMap<&'static str, crate::profile::TaskProfile> = HashMap::new();
     for arrival in &schedule {
         let name = arrival.model.name();
         if !solo_ms.contains_key(name) {
-            solo_ms.insert(name, solo_mean_ms(arrival.model, 12, cfg.seed)?);
+            solo_ms.insert(
+                name,
+                solo_mean_ms(arrival.model, 12, cfg.seed, &mut scratch)?,
+            );
         }
         if cfg.mode == Mode::Fikit && !model_profiles.contains_key(name) {
             let profile = if cfg.cold_start {
@@ -409,7 +514,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                 };
                 base.measurement.runs = 5;
                 let svc = ServiceConfig::new(arrival.model, Priority::P0);
-                profile_service(&base, &svc)?.profile
+                profile_service_scratch(&base, &svc, &mut scratch)?.profile
             };
             model_profiles.insert(name, profile);
         }
@@ -440,21 +545,25 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
             c
         })
         .collect();
-    let mut sims: Vec<GpuSim> = Vec::with_capacity(cfg.gpus);
+    let mut sims: Vec<Mutex<GpuSim>> = Vec::with_capacity(cfg.gpus);
     for gpu_cfg in &gpu_cfgs {
-        sims.push(GpuSim::new(gpu_cfg, &store)?);
+        sims.push(Mutex::new(GpuSim::with_scratch(
+            gpu_cfg,
+            &store,
+            &mut scratch,
+        )?));
     }
     let mut harvested: Vec<usize> = vec![0; cfg.gpus];
 
     // --- fleet event queue ---
-    let mut fleet_q: BTreeMap<(SimTime, u64), FleetEvent> = BTreeMap::new();
-    let mut seq: u64 = 0;
-    let push = |q: &mut BTreeMap<(SimTime, u64), FleetEvent>, seq: &mut u64, t, ev| {
-        q.insert((t, *seq), ev);
-        *seq += 1;
-    };
+    // Fleet events ride the same calendar-queue wheel as device events
+    // (ADR-003); its insertion counter is the deterministic tie-break.
+    // Coarser geometry than the device queue: fleet events are ms-scale
+    // (scans, arrivals), so 2^20 ns ≈ 1.05 ms ticks × 1024 buckets spans
+    // ≈ 1.07 s before the overflow ring takes over.
+    let mut fleet_q: CalendarWheel<FleetEvent> = CalendarWheel::with_geometry(20, 1024);
     for (idx, arrival) in schedule.iter().enumerate() {
-        push(&mut fleet_q, &mut seq, arrival.at, FleetEvent::Arrive(idx));
+        fleet_q.push(arrival.at, FleetEvent::Arrive(idx));
     }
     let churn_end = schedule
         .iter()
@@ -464,7 +573,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
     if !cfg.qos.scan_interval.is_zero() {
         let mut t = SimTime::ZERO + cfg.qos.scan_interval;
         while t <= churn_end {
-            push(&mut fleet_q, &mut seq, t, FleetEvent::Scan);
+            fleet_q.push(t, FleetEvent::Scan);
             t = t + cfg.qos.scan_interval;
         }
     }
@@ -496,13 +605,125 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
     let mut rejected = 0usize;
     let mut cold_starts = 0usize;
 
-    // --- the serving loop ---
-    while let Some(((t, _), ev)) = fleet_q.pop_first() {
-        // Bring every GPU up to the fleet clock, then harvest completions
-        // so scan decisions see everything that finished before `t`.
-        for sim in sims.iter_mut() {
-            sim.run_until(t);
+    // --- the serving loop (bulk-synchronous across device shards) ---
+    let threads = cfg.sim_threads.max(1).min(cfg.gpus);
+    let ctrl = ShardCtrl::new(threads - 1);
+    std::thread::scope(|scope| -> Result<()> {
+        let guard = StopGuard(&ctrl);
+        for w in 0..ctrl.workers {
+            let ctrl = &ctrl;
+            let sims = &sims[..];
+            scope.spawn(move || ctrl.worker_loop(sims, w));
         }
+
+        while let Some((t, ev)) = fleet_q.pop() {
+            // Bring every GPU up to the fleet clock, then harvest
+            // completions so scan decisions see everything that finished
+            // before `t`. Workers park at the barrier in between, so the
+            // main thread mutates sims below without contention.
+            ctrl.advance(&sims, t);
+            harvest(
+                &sims,
+                &mut harvested,
+                &key_to_id,
+                &schedule,
+                &solo_ms,
+                &mut metrics,
+                &mut services,
+                &mut slowdown_sums,
+            );
+
+            match ev {
+                FleetEvent::Arrive(idx) => {
+                    let arrival = &schedule[idx];
+                    let id = idx as u64;
+                    let resident = Resident::per_task(id, arrival.model, arrival.priority);
+                    match fleet.place(cfg.policy, resident, compat) {
+                        None => {
+                            rejected += 1;
+                            services[idx].rejected = true;
+                            services[idx].departed = arrival.at;
+                        }
+                        Some(gpu) => {
+                            if cfg.cold_start && cfg.mode == Mode::Fikit {
+                                cold_starts += 1;
+                            }
+                            let key = TaskKey::new(format!("svc{idx}").as_str());
+                            let mut svc_cfg = ServiceConfig::new(arrival.model, arrival.priority)
+                                .with_key(key.as_str());
+                            svc_cfg.pattern = InvocationPattern::ContinuousUntil {
+                                until: SimTime::MAX,
+                            };
+                            sims[gpu].lock().expect("sim shard lock").attach(&svc_cfg, t)?;
+                            key_to_id.insert(key.clone(), id);
+                            live.insert(
+                                id,
+                                LiveService {
+                                    key,
+                                    cfg: svc_cfg,
+                                    gpu,
+                                },
+                            );
+                            fleet_q.push(arrival.departs_at(), FleetEvent::Depart(id));
+                        }
+                    }
+                }
+                FleetEvent::Depart(id) => {
+                    if let Some(svc) = live.remove(&id) {
+                        fleet.evict(id);
+                        sims[svc.gpu].lock().expect("sim shard lock").detach(&svc.key)?;
+                        services[id as usize].departed = t;
+                    }
+                }
+                FleetEvent::Scan => {
+                    for gpu in 0..cfg.gpus {
+                        scans += 1;
+                        let from = SimTime(t.nanos().saturating_sub(cfg.qos.window.nanos()));
+                        let slice = metrics.samples_in(gpu, from, t);
+                        let highs: Vec<f64> = slice
+                            .iter()
+                            .filter(|smp| is_high_priority(smp.priority))
+                            .map(|smp| smp.slowdown)
+                            .collect();
+                        if highs.is_empty() {
+                            continue;
+                        }
+                        let mean = highs.iter().sum::<f64>() / highs.len() as f64;
+                        if mean <= cfg.qos.high_slowdown_bound {
+                            continue;
+                        }
+                        qos_violations += 1;
+                        if !cfg.qos.migration {
+                            continue;
+                        }
+                        // Victim: the low-priority resident predicted to
+                        // hurt the device's high-priority tenants the most.
+                        let victim = pick_victim(&fleet, gpu, compat);
+                        let Some(victim_id) = victim else { continue };
+                        let Some((vfrom, vto)) = fleet.migrate(victim_id, cfg.policy, compat)
+                        else {
+                            continue; // nowhere to go; keep suffering
+                        };
+                        let svc = live.get_mut(&victim_id).expect("victim is live");
+                        if !sims[vto].lock().expect("sim shard lock").can_attach(&svc.key) {
+                            // A drained-enough slot isn't available on the
+                            // target (the service lived there moments ago
+                            // and its last task is still in flight): undo.
+                            fleet.force_move(victim_id, vfrom);
+                            continue;
+                        }
+                        sims[vfrom].lock().expect("sim shard lock").detach(&svc.key)?;
+                        sims[vto].lock().expect("sim shard lock").attach(&svc.cfg, t)?;
+                        svc.gpu = vto;
+                        migrations += 1;
+                        services[victim_id as usize].migrations += 1;
+                    }
+                }
+            }
+        }
+
+        // Drain: departures all processed; let in-flight tasks finish.
+        ctrl.advance(&sims, SimTime::MAX);
         harvest(
             &sims,
             &mut harvested,
@@ -513,110 +734,9 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
             &mut services,
             &mut slowdown_sums,
         );
-
-        match ev {
-            FleetEvent::Arrive(idx) => {
-                let arrival = &schedule[idx];
-                let id = idx as u64;
-                let resident = Resident::per_task(id, arrival.model, arrival.priority);
-                match fleet.place(cfg.policy, resident, compat) {
-                    None => {
-                        rejected += 1;
-                        services[idx].rejected = true;
-                        services[idx].departed = arrival.at;
-                    }
-                    Some(gpu) => {
-                        if cfg.cold_start && cfg.mode == Mode::Fikit {
-                            cold_starts += 1;
-                        }
-                        let key = TaskKey::new(format!("svc{idx}").as_str());
-                        let mut svc_cfg = ServiceConfig::new(arrival.model, arrival.priority)
-                            .with_key(key.as_str());
-                        svc_cfg.pattern = InvocationPattern::ContinuousUntil {
-                            until: SimTime::MAX,
-                        };
-                        sims[gpu].attach(&svc_cfg, t)?;
-                        key_to_id.insert(key.clone(), id);
-                        live.insert(
-                            id,
-                            LiveService {
-                                key,
-                                cfg: svc_cfg,
-                                gpu,
-                            },
-                        );
-                        push(&mut fleet_q, &mut seq, arrival.departs_at(), FleetEvent::Depart(id));
-                    }
-                }
-            }
-            FleetEvent::Depart(id) => {
-                if let Some(svc) = live.remove(&id) {
-                    fleet.evict(id);
-                    sims[svc.gpu].detach(&svc.key)?;
-                    services[id as usize].departed = t;
-                }
-            }
-            FleetEvent::Scan => {
-                for gpu in 0..cfg.gpus {
-                    scans += 1;
-                    let from = SimTime(t.nanos().saturating_sub(cfg.qos.window.nanos()));
-                    let slice = metrics.samples_in(gpu, from, t);
-                    let highs: Vec<f64> = slice
-                        .iter()
-                        .filter(|smp| is_high_priority(smp.priority))
-                        .map(|smp| smp.slowdown)
-                        .collect();
-                    if highs.is_empty() {
-                        continue;
-                    }
-                    let mean = highs.iter().sum::<f64>() / highs.len() as f64;
-                    if mean <= cfg.qos.high_slowdown_bound {
-                        continue;
-                    }
-                    qos_violations += 1;
-                    if !cfg.qos.migration {
-                        continue;
-                    }
-                    // Victim: the low-priority resident predicted to hurt
-                    // the device's high-priority tenants the most.
-                    let victim = pick_victim(&fleet, gpu, compat);
-                    let Some(victim_id) = victim else { continue };
-                    let Some((vfrom, vto)) = fleet.migrate(victim_id, cfg.policy, compat)
-                    else {
-                        continue; // nowhere to go; keep suffering
-                    };
-                    let svc = live.get_mut(&victim_id).expect("victim is live");
-                    if !sims[vto].can_attach(&svc.key) {
-                        // A drained-enough slot isn't available on the
-                        // target (the service lived there moments ago and
-                        // its last task is still in flight): undo.
-                        fleet.force_move(victim_id, vfrom);
-                        continue;
-                    }
-                    sims[vfrom].detach(&svc.key)?;
-                    sims[vto].attach(&svc.cfg, t)?;
-                    svc.gpu = vto;
-                    migrations += 1;
-                    services[victim_id as usize].migrations += 1;
-                }
-            }
-        }
-    }
-
-    // Drain: departures all processed; let in-flight tasks finish.
-    for sim in sims.iter_mut() {
-        sim.run_until(SimTime::MAX);
-    }
-    harvest(
-        &sims,
-        &mut harvested,
-        &key_to_id,
-        &schedule,
-        &solo_ms,
-        &mut metrics,
-        &mut services,
-        &mut slowdown_sums,
-    );
+        drop(guard);
+        Ok(())
+    })?;
 
     for (idx, svc) in services.iter_mut().enumerate() {
         if svc.completed > 0 {
@@ -625,7 +745,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
     }
     let sim_end = sims
         .iter()
-        .map(|s| s.now())
+        .map(|s| s.lock().expect("sim shard lock").now())
         .max()
         .unwrap_or(SimTime::ZERO)
         .max(churn_end);
@@ -644,9 +764,11 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
 }
 
 /// Pull new task outcomes out of every GPU sim into the fleet metrics.
+/// Runs on the main thread only, in device-index order — part of the
+/// deterministic merge (DESIGN.md §Perf).
 #[allow(clippy::too_many_arguments)]
 fn harvest(
-    sims: &[GpuSim],
+    sims: &[Mutex<GpuSim>],
     harvested: &mut [usize],
     key_to_id: &HashMap<TaskKey, u64>,
     schedule: &[crate::workload::ServiceArrival],
@@ -656,6 +778,7 @@ fn harvest(
     slowdown_sums: &mut [f64],
 ) {
     for (gpu, sim) in sims.iter().enumerate() {
+        let sim = sim.lock().expect("sim shard lock");
         let outcomes = sim.outcomes();
         for outcome in &outcomes[harvested[gpu]..] {
             let Some(&id) = key_to_id.get(&outcome.task_key) else {

@@ -21,7 +21,8 @@ use crate::profile::{
     OnlineRefiner, ProfileStore, RefinerStats, ResolvedProfile, SymbolResolver, TaskProfile,
 };
 use crate::simulator::{
-    DeviceStats, Event, EventQueue, ProcessAction, ServiceProcess, SimDevice, Stage, TaskOutcome,
+    DeviceStats, Event, EventQueue, KernelArena, ProcessAction, ServiceProcess, SimDevice, Stage,
+    TaskOutcome,
 };
 use crate::workload::{InvocationPattern, Service};
 use std::collections::{HashMap, VecDeque};
@@ -148,6 +149,24 @@ pub struct ProfilingResult {
     pub outcomes: Vec<TaskOutcome>,
 }
 
+/// Reusable event-core storage: the event wheel's buckets/overflow heap
+/// and the kernel-record arena's slab. A [`GpuSim`] built with
+/// [`GpuSim::with_scratch`] takes the storage and
+/// [`GpuSim::reclaim_scratch`] / [`run_with_profiles_scratch`] return it
+/// cleared — so a multi-run sweep (fig13–21, `fikit drift`, cluster solo
+/// baselines) allocates the event core once instead of per run.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    events: EventQueue,
+    arena: KernelArena,
+}
+
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+}
+
 /// Derive a per-service seed from the experiment seed (splitmix64 step —
 /// decorrelates services without external deps).
 fn derive_seed(root: u64, idx: u64, salt: u64) -> u64 {
@@ -162,6 +181,16 @@ fn derive_seed(root: u64, idx: u64, salt: u64) -> u64 {
 /// Run the measurement stage for one service: solo on the GPU, `runs`
 /// back-to-back tasks with kernel timing events (paper Fig 6).
 pub fn profile_service(cfg: &ExperimentConfig, svc: &ServiceConfig) -> Result<ProfilingResult> {
+    profile_service_scratch(cfg, svc, &mut SimScratch::new())
+}
+
+/// [`profile_service`] with caller-owned event-core storage — sweeps
+/// profiling many services reuse one [`SimScratch`] across passes.
+pub fn profile_service_scratch(
+    cfg: &ExperimentConfig,
+    svc: &ServiceConfig,
+    scratch: &mut SimScratch,
+) -> Result<ProfilingResult> {
     let runs = cfg.measurement.runs;
     let service = Service {
         pattern: InvocationPattern::BackToBack { count: runs },
@@ -173,7 +202,7 @@ pub fn profile_service(cfg: &ExperimentConfig, svc: &ServiceConfig) -> Result<Pr
         ..cfg.clone()
     };
     let empty_store = ProfileStore::new();
-    let mut sim = GpuSim::new(&solo, &empty_store)?;
+    let mut sim = GpuSim::with_scratch(&solo, &empty_store, scratch)?;
     // Replace the process with a measuring-stage one.
     let measuring_proc = sim.make_process(&service, 0, Stage::Measuring);
     sim.procs[0] = measuring_proc;
@@ -182,28 +211,44 @@ pub fn profile_service(cfg: &ExperimentConfig, svc: &ServiceConfig) -> Result<Pr
     let profile = sim.procs[0]
         .finish_measurement()
         .ok_or_else(|| crate::core::Error::Invariant("measurement did not complete".into()))?;
-    Ok(ProfilingResult {
-        profile,
-        outcomes: sim.outcomes,
-    })
+    let outcomes = std::mem::take(&mut sim.outcomes);
+    sim.reclaim_scratch(scratch);
+    Ok(ProfilingResult { profile, outcomes })
 }
 
 /// Run a full experiment. In FIKIT mode, services are profiled first
 /// (measurement stage) exactly as the paper's lifecycle prescribes.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
+    run_experiment_scratch(cfg, &mut SimScratch::new())
+}
+
+/// [`run_experiment`] with caller-owned event-core storage.
+pub fn run_experiment_scratch(
+    cfg: &ExperimentConfig,
+    scratch: &mut SimScratch,
+) -> Result<ExperimentReport> {
     cfg.validate()?;
     let mut store = ProfileStore::new();
     if cfg.mode == Mode::Fikit {
         for svc in &cfg.services {
-            store.insert(profile_service(cfg, svc)?.profile);
+            store.insert(profile_service_scratch(cfg, svc, scratch)?.profile);
         }
     }
-    run_with_profiles(cfg, &store)
+    run_with_profiles_scratch(cfg, &store, scratch)
 }
 
 /// Run an experiment against an existing profile store (lets experiments
 /// amortize one profiling pass across many runs, like a real deployment).
 pub fn run_with_profiles(cfg: &ExperimentConfig, store: &ProfileStore) -> Result<ExperimentReport> {
+    run_with_profiles_scratch(cfg, store, &mut SimScratch::new())
+}
+
+/// [`run_with_profiles`] with caller-owned event-core storage.
+pub fn run_with_profiles_scratch(
+    cfg: &ExperimentConfig,
+    store: &ProfileStore,
+    scratch: &mut SimScratch,
+) -> Result<ExperimentReport> {
     cfg.validate()?;
     if cfg.mode == Mode::Fikit {
         for svc in &cfg.services {
@@ -212,9 +257,9 @@ pub fn run_with_profiles(cfg: &ExperimentConfig, store: &ProfileStore) -> Result
         }
     }
     let start = std::time::Instant::now();
-    let mut sim = GpuSim::new(cfg, store)?;
+    let mut sim = GpuSim::with_scratch(cfg, store, scratch)?;
     sim.run();
-    Ok(sim.into_report(start.elapsed()))
+    Ok(sim.into_report_reclaiming(start.elapsed(), Some(scratch)))
 }
 
 /// What detaching a service left behind (DESIGN.md §8: departures drain,
@@ -246,6 +291,9 @@ pub struct GpuSim<'a> {
     procs: Vec<ServiceProcess>,
     device: SimDevice,
     events: EventQueue,
+    /// In-flight `KernelRecord`s; `KernelDone` events carry slots into
+    /// this arena (ADR-003).
+    arena: KernelArena,
     scheduler: Option<FikitScheduler>,
     /// Sharing-stage profile refiner (FIKIT mode with online refinement
     /// enabled). Fed from the event loop; its published snapshots are
@@ -283,6 +331,22 @@ impl<'a> GpuSim<'a> {
     /// Build a sim hosting `cfg.services` (which may be empty for a
     /// dynamic fleet GPU that receives services via [`GpuSim::attach`]).
     pub fn new(cfg: &'a ExperimentConfig, store: &'a ProfileStore) -> Result<GpuSim<'a>> {
+        GpuSim::with_scratch(cfg, store, &mut SimScratch::new())
+    }
+
+    /// [`GpuSim::new`], but the event wheel and kernel arena take their
+    /// storage from `scratch` (left empty). Pair with
+    /// [`GpuSim::reclaim_scratch`] or [`run_with_profiles_scratch`] to
+    /// hand the warm storage back for the next run.
+    pub fn with_scratch(
+        cfg: &'a ExperimentConfig,
+        store: &'a ProfileStore,
+        scratch: &mut SimScratch,
+    ) -> Result<GpuSim<'a>> {
+        let mut events = std::mem::take(&mut scratch.events);
+        events.clear();
+        let mut arena = std::mem::take(&mut scratch.arena);
+        arena.clear();
         let scheduler = (cfg.mode == Mode::Fikit).then(|| {
             FikitScheduler::new(SchedulerConfig {
                 epsilon: cfg.epsilon,
@@ -299,7 +363,8 @@ impl<'a> GpuSim<'a> {
             store,
             procs: Vec::new(),
             device: SimDevice::new(cfg.device.clone()),
-            events: EventQueue::new(),
+            events,
+            arena,
             scheduler,
             refiner,
             outcomes: Vec::new(),
@@ -536,8 +601,10 @@ impl<'a> GpuSim<'a> {
         debug_assert!(launch.task_handle.is_bound(), "unbound launch in sim");
         let svc = self.handle_to_idx[launch.task_handle.index()];
         let record = self.device.submit(launch, now, source);
+        let finished_at = record.finished_at;
+        let rec = self.arena.insert(record);
         self.events
-            .push(record.finished_at, Event::KernelDone { svc, record });
+            .push(finished_at, Event::KernelDone { svc, rec });
         if let Some(next_issue) = self.procs[svc].on_submitted(now) {
             self.events.push(next_issue, Event::IssueKernel { svc });
         }
@@ -616,13 +683,11 @@ impl<'a> GpuSim<'a> {
     /// Run to completion (all arrival patterns exhausted), subject to the
     /// config's optional horizon.
     fn run(&mut self) {
-        let horizon = self.cfg.horizon.map(|h| SimTime::ZERO + h);
-        while let Some((now, event)) = self.events.pop() {
-            if let Some(h) = horizon {
-                if now > h {
-                    break;
-                }
-            }
+        let bound = self
+            .cfg
+            .horizon
+            .map_or(SimTime::MAX, |h| SimTime::ZERO + h);
+        while let Some((now, event)) = self.events.pop_if_before(bound) {
             self.sim_now = now;
             self.events_processed += 1;
             self.handle_event(event, now);
@@ -639,11 +704,7 @@ impl<'a> GpuSim<'a> {
             Some(h) => bound.min(SimTime::ZERO + h),
             None => bound,
         };
-        while let Some(t) = self.events.peek_time() {
-            if t > bound {
-                break;
-            }
-            let (now, event) = self.events.pop().expect("peeked event exists");
+        while let Some((now, event)) = self.events.pop_if_before(bound) {
             self.sim_now = now;
             self.events_processed += 1;
             self.handle_event(event, now);
@@ -687,7 +748,8 @@ impl<'a> GpuSim<'a> {
                     }
                 }
             }
-            Event::KernelDone { svc, record } => {
+            Event::KernelDone { svc, rec } => {
+                let record = self.arena.take(rec);
                 // Scheduler reacts first (fill windows open on holder
                 // kernel completions).
                 if let Some(sched) = self.scheduler.as_mut() {
@@ -793,7 +855,27 @@ impl<'a> GpuSim<'a> {
         }
     }
 
-    fn into_report(self, wall: std::time::Duration) -> ExperimentReport {
+    /// Hand the event-core storage back to `scratch` (cleared, capacity
+    /// intact) and drop the rest of the sim. Callers that keep the sim's
+    /// measurements (outcomes, refiner stats) must extract them first.
+    pub fn reclaim_scratch(mut self, scratch: &mut SimScratch) {
+        self.events.clear();
+        self.arena.clear();
+        scratch.events = std::mem::take(&mut self.events);
+        scratch.arena = std::mem::take(&mut self.arena);
+    }
+
+    fn into_report_reclaiming(
+        mut self,
+        wall: std::time::Duration,
+        scratch: Option<&mut SimScratch>,
+    ) -> ExperimentReport {
+        if let Some(scratch) = scratch {
+            self.events.clear();
+            self.arena.clear();
+            scratch.events = std::mem::take(&mut self.events);
+            scratch.arena = std::mem::take(&mut self.arena);
+        }
         let mut services = Vec::with_capacity(self.procs.len());
         for (idx, proc) in self.procs.iter().enumerate() {
             // A reattached key leaves its superseded predecessor slot in

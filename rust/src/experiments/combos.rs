@@ -3,7 +3,9 @@
 
 use super::Options;
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::{profile_service, run_with_profiles, ExperimentReport};
+use crate::coordinator::driver::{
+    profile_service_scratch, run_with_profiles_scratch, ExperimentReport, SimScratch,
+};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result};
 use crate::profile::ProfileStore;
@@ -78,9 +80,18 @@ pub fn combo_config(combo: &Combo, mode: Mode, tasks: u32, opts: Options) -> Exp
 /// deployment lifecycle (measurement is paid once per service, not per
 /// experiment).
 pub fn profile_combo(cfg: &ExperimentConfig) -> Result<ProfileStore> {
+    profile_combo_scratch(cfg, &mut SimScratch::new())
+}
+
+/// [`profile_combo`] reusing a caller-owned event-core scratch — sweeps
+/// calling this per ratio/combo pay the queue allocation once.
+pub fn profile_combo_scratch(
+    cfg: &ExperimentConfig,
+    scratch: &mut SimScratch,
+) -> Result<ProfileStore> {
     let mut store = ProfileStore::new();
     for svc in &cfg.services {
-        store.insert(profile_service(cfg, svc)?.profile);
+        store.insert(profile_service_scratch(cfg, svc, scratch)?.profile);
     }
     Ok(store)
 }
@@ -92,11 +103,21 @@ pub fn run_combo_share_vs_fikit(
     tasks: u32,
     opts: Options,
 ) -> Result<(ExperimentReport, ExperimentReport)> {
+    run_combo_share_vs_fikit_scratch(combo, tasks, opts, &mut SimScratch::new())
+}
+
+/// [`run_combo_share_vs_fikit`] reusing a caller-owned scratch.
+pub fn run_combo_share_vs_fikit_scratch(
+    combo: &Combo,
+    tasks: u32,
+    opts: Options,
+    scratch: &mut SimScratch,
+) -> Result<(ExperimentReport, ExperimentReport)> {
     let fikit_cfg = combo_config(combo, Mode::Fikit, tasks, opts);
-    let profiles = profile_combo(&fikit_cfg)?;
-    let fikit = run_with_profiles(&fikit_cfg, &profiles)?;
+    let profiles = profile_combo_scratch(&fikit_cfg, scratch)?;
+    let fikit = run_with_profiles_scratch(&fikit_cfg, &profiles, scratch)?;
     let share_cfg = combo_config(combo, Mode::Sharing, tasks, opts);
-    let share = run_with_profiles(&share_cfg, &ProfileStore::new())?;
+    let share = run_with_profiles_scratch(&share_cfg, &ProfileStore::new(), scratch)?;
     Ok((share, fikit))
 }
 

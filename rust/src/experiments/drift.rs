@@ -26,7 +26,7 @@
 
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::{profile_service, GpuSim};
+use crate::coordinator::driver::{profile_service_scratch, GpuSim, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result, SimTime, TaskKey};
 use crate::metrics::TextTable;
@@ -76,12 +76,15 @@ fn scenario(opts: Options) -> Result<Outcome> {
     );
     cfg.validate()?;
 
-    // Offline measurement (the paper's lifecycle), then serve.
+    // Offline measurement (the paper's lifecycle), then serve — the
+    // measurement passes and the serving sim share one event-core
+    // scratch.
+    let mut scratch = SimScratch::new();
     let mut store = ProfileStore::new();
     for svc in &cfg.services {
-        store.insert(profile_service(&cfg, svc)?.profile);
+        store.insert(profile_service_scratch(&cfg, svc, &mut scratch)?.profile);
     }
-    let mut sim = GpuSim::new(&cfg, &store)?;
+    let mut sim = GpuSim::with_scratch(&cfg, &store, &mut scratch)?;
 
     // Phase 1: converge against the measured profile.
     sim.run_until(SimTime(phase_ms * 1_000_000));

@@ -11,7 +11,7 @@
 use super::combos::SINGLE_GROUPS;
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::run_experiment;
+use crate::coordinator::driver::{run_experiment_scratch, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result};
 use crate::metrics::TextTable;
@@ -22,9 +22,11 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     let mut table = TextTable::new(&["model", "base JCT (ms)", "rdynamic JCT (ms)", "diff %"]);
     let mut series = Vec::new();
     let mut max_abs = 0.0f64;
+    // One event-core scratch across all 14 runs of the sweep.
+    let mut scratch = SimScratch::new();
 
     for (gi, model) in SINGLE_GROUPS.iter().enumerate() {
-        let run_env = |symbols: SymbolTableModel, seed: u64| -> Result<f64> {
+        let mut run_env = |symbols: SymbolTableModel, seed: u64| -> Result<f64> {
             let mut cfg = ExperimentConfig {
                 mode: Mode::Sharing, // solo service, no scheduler attached
                 seed,
@@ -33,7 +35,7 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
             };
             cfg.services
                 .push(ServiceConfig::new(*model, Priority::P0).tasks(tasks));
-            let report = run_experiment(&cfg)?;
+            let report = run_experiment_scratch(&cfg, &mut scratch)?;
             Ok(report.services[0].jct.mean_ms())
         };
 

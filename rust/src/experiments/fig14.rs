@@ -10,7 +10,7 @@
 use super::combos::SINGLE_GROUPS;
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::run_experiment;
+use crate::coordinator::driver::{run_experiment_scratch, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result};
 use crate::metrics::TextTable;
@@ -21,9 +21,11 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     let mut series = Vec::new();
     let mut max_oh = f64::MIN;
     let mut min_oh = f64::MAX;
+    // One event-core scratch across the whole sweep.
+    let mut scratch = SimScratch::new();
 
     for model in SINGLE_GROUPS {
-        let run_mode = |mode: Mode| -> Result<f64> {
+        let mut run_mode = |mode: Mode| -> Result<f64> {
             let mut cfg = ExperimentConfig {
                 mode,
                 seed: opts.seed,
@@ -32,7 +34,7 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
             cfg.measurement.runs = 5; // profiling pass size (FIKIT mode only)
             cfg.services
                 .push(ServiceConfig::new(model, Priority::P0).tasks(tasks));
-            let report = run_experiment(&cfg)?;
+            let report = run_experiment_scratch(&cfg, &mut scratch)?;
             Ok(report.services[0].jct.mean_ms())
         };
         let base = run_mode(Mode::Sharing)?;

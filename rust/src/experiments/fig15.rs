@@ -10,7 +10,7 @@
 use super::combos::SINGLE_GROUPS;
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::{profile_service, run_experiment};
+use crate::coordinator::driver::{profile_service_scratch, run_experiment_scratch, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result};
 use crate::metrics::{JctStats, TextTable};
@@ -21,6 +21,8 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     let mut series = Vec::new();
     let mut max_oh = f64::MIN;
     let mut min_oh = f64::MAX;
+    // One event-core scratch across the whole sweep.
+    let mut scratch = SimScratch::new();
 
     for model in SINGLE_GROUPS {
         let mut cfg = ExperimentConfig {
@@ -33,9 +35,11 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
             .push(ServiceConfig::new(model, Priority::P0).tasks(tasks));
 
         // Base: plain solo run.
-        let base = run_experiment(&cfg)?.services[0].jct.mean_ms();
+        let base = run_experiment_scratch(&cfg, &mut scratch)?.services[0]
+            .jct
+            .mean_ms();
         // Measuring stage: the profiling pass itself, same task count.
-        let profiling = profile_service(&cfg, &cfg.services[0])?;
+        let profiling = profile_service_scratch(&cfg, &cfg.services[0], &mut scratch)?;
         let measuring =
             JctStats::from_durations(profiling.outcomes.iter().map(|o| o.jct()).collect())
                 .mean_ms();

@@ -14,7 +14,9 @@
 use super::combos::{base_config, HIGH_KEY, LOW_KEY};
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::ServiceConfig;
-use crate::coordinator::driver::{run_experiment, run_with_profiles};
+use crate::coordinator::driver::{
+    run_experiment_scratch, run_with_profiles_scratch, SimScratch,
+};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result, TaskKey};
 use crate::metrics::TextTable;
@@ -33,6 +35,9 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     let mut series = Vec::new();
     let mut ratios_out = Vec::new();
 
+    // One event-core scratch across the baselines and the ratio sweep.
+    let mut scratch = SimScratch::new();
+
     // Solo baselines (measured once; the paper measures each service
     // separately and composes).
     let mut a_cfg = base_config(opts);
@@ -40,14 +45,18 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     a_cfg
         .services
         .push(ServiceConfig::new(high, Priority::P0).tasks(b_tasks * 4).with_key(HIGH_KEY));
-    let a_solo_mean = run_experiment(&a_cfg)?.services[0].jct.mean_ms();
+    let a_solo_mean = run_experiment_scratch(&a_cfg, &mut scratch)?.services[0]
+        .jct
+        .mean_ms();
 
     let mut b_cfg = base_config(opts);
     b_cfg.mode = Mode::Sharing; // solo
     b_cfg
         .services
         .push(ServiceConfig::new(low, Priority::P3).tasks(b_tasks).with_key(LOW_KEY));
-    let b_solo_mean = run_experiment(&b_cfg)?.services[0].jct.mean_ms();
+    let b_solo_mean = run_experiment_scratch(&b_cfg, &mut scratch)?.services[0]
+        .jct
+        .mean_ms();
 
     for ratio in RATIOS {
         let a_tasks = b_tasks * ratio;
@@ -65,8 +74,8 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
         f_cfg
             .services
             .push(ServiceConfig::new(low, Priority::P3).tasks(b_tasks).with_key(LOW_KEY));
-        let profiles = super::combos::profile_combo(&f_cfg)?;
-        let fikit = run_with_profiles(&f_cfg, &profiles)?;
+        let profiles = super::combos::profile_combo_scratch(&f_cfg, &mut scratch)?;
+        let fikit = run_with_profiles_scratch(&f_cfg, &profiles, &mut scratch)?;
         let b_fikit_ms = fikit
             .service(&TaskKey::new(LOW_KEY))
             .map(|s| s.jct.mean_ms())

@@ -10,10 +10,10 @@
 //!   priority costs the background service almost nothing in this
 //!   arrival pattern (A is idle most of each second).
 
-use super::combos::{base_config, profile_combo, COMBOS, HIGH_KEY, LOW_KEY};
+use super::combos::{base_config, profile_combo_scratch, COMBOS, HIGH_KEY, LOW_KEY};
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::{run_with_profiles, ExperimentReport};
+use crate::coordinator::driver::{run_with_profiles_scratch, ExperimentReport, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result, TaskKey};
 use crate::metrics::TextTable;
@@ -63,13 +63,15 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     let mut series = Vec::new();
     let mut a_speedups = Vec::new();
     let mut b_ratios = Vec::new();
+    // One event-core scratch across all ten combos (×2 modes).
+    let mut scratch = SimScratch::new();
 
     for combo in &COMBOS {
         let fikit_cfg = preemption_config(combo, Mode::Fikit, inserts, interval_ms, opts);
-        let profiles = profile_combo(&fikit_cfg)?;
-        let fikit = run_with_profiles(&fikit_cfg, &profiles)?;
+        let profiles = profile_combo_scratch(&fikit_cfg, &mut scratch)?;
+        let fikit = run_with_profiles_scratch(&fikit_cfg, &profiles, &mut scratch)?;
         let share_cfg = preemption_config(combo, Mode::Sharing, inserts, interval_ms, opts);
-        let share = run_with_profiles(&share_cfg, &ProfileStore::new())?;
+        let share = run_with_profiles_scratch(&share_cfg, &ProfileStore::new(), &mut scratch)?;
 
         let a_speedup = mean_ms(&share, HIGH_KEY) / mean_ms(&fikit, HIGH_KEY);
         // Fig 20: B's FIKIT/share JCT ratio (≈1 = unharmed).

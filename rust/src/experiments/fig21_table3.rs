@@ -6,10 +6,10 @@
 //! coefficients of variation 0.095–0.164 across the ten combos — the
 //! stability/predictability guarantee FIKIT gives background tenants.
 
-use super::combos::{base_config, profile_combo, COMBOS, HIGH_KEY, LOW_KEY};
+use super::combos::{base_config, profile_combo_scratch, COMBOS, HIGH_KEY, LOW_KEY};
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::driver::run_with_profiles;
+use crate::coordinator::driver::{run_with_profiles_scratch, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result, TaskKey};
 use crate::metrics::TextTable;
@@ -21,6 +21,8 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     let mut table = TextTable::new(&["timeline", "σ (ms)", "μ (ms)", "CV = σ/μ", "sparkline"]);
     let mut series = Vec::new();
     let mut cvs = Vec::new();
+    // One event-core scratch across all ten combos.
+    let mut scratch = SimScratch::new();
 
     for combo in &COMBOS {
         let mut cfg: ExperimentConfig = base_config(opts);
@@ -38,8 +40,8 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
                 .every_ms(interval_ms, inserts)
                 .with_key(LOW_KEY),
         );
-        let profiles = profile_combo(&cfg)?;
-        let report = run_with_profiles(&cfg, &profiles)?;
+        let profiles = profile_combo_scratch(&cfg, &mut scratch)?;
+        let report = run_with_profiles_scratch(&cfg, &profiles, &mut scratch)?;
         let svc = report
             .service(&TaskKey::new(LOW_KEY))
             .ok_or_else(|| crate::core::Error::Invariant("missing low service".into()))?;

@@ -6,11 +6,11 @@
 //! high-priority protection (JCT) and low-priority progress (fills,
 //! scavenged device time).
 
-use super::combos::{base_config, profile_combo, windowed_mean_ms, HIGH_KEY};
+use super::combos::{base_config, profile_combo_scratch, windowed_mean_ms, HIGH_KEY};
 use super::{ExperimentResult, Options, ShapeCheck};
 use crate::config::{ExperimentConfig, ServiceConfig};
 use crate::coordinator::best_prio_fit::FillPolicy;
-use crate::coordinator::driver::run_with_profiles;
+use crate::coordinator::driver::{run_with_profiles_scratch, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::{Priority, Result};
 use crate::metrics::TextTable;
@@ -49,6 +49,8 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     ]);
     let mut series = Vec::new();
     let mut rows = Vec::new();
+    // One event-core scratch across the three policy runs.
+    let mut scratch = SimScratch::new();
 
     for (name, policy) in [
         ("longest (paper)", FillPolicy::LongestFit),
@@ -57,8 +59,8 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     ] {
         let mut cfg = ablation_config(tasks, opts);
         cfg.fill_policy = policy;
-        let profiles = profile_combo(&cfg)?;
-        let report = run_with_profiles(&cfg, &profiles)?;
+        let profiles = profile_combo_scratch(&cfg, &mut scratch)?;
+        let report = run_with_profiles_scratch(&cfg, &profiles, &mut scratch)?;
         let h = windowed_mean_ms(&report, HIGH_KEY);
         let l = ["low-fcn", "low-r101", "low-vgg"]
             .iter()

@@ -6,9 +6,9 @@
 //! (overhead 1). This ablation runs combo A with feedback on vs off and
 //! quantifies the damage to the high-priority service.
 
-use super::combos::{combo_config, profile_combo, windowed_mean_ms, COMBOS, HIGH_KEY};
+use super::combos::{combo_config, profile_combo_scratch, windowed_mean_ms, COMBOS, HIGH_KEY};
 use super::{ExperimentResult, Options, ShapeCheck};
-use crate::coordinator::driver::run_with_profiles;
+use crate::coordinator::driver::{run_with_profiles_scratch, SimScratch};
 use crate::coordinator::Mode;
 use crate::core::Result;
 use crate::metrics::TextTable;
@@ -20,16 +20,18 @@ pub fn run(opts: Options) -> Result<ExperimentResult> {
     ]);
     let mut series = Vec::new();
     let mut penalties = Vec::new();
+    // One event-core scratch across the on/off pairs.
+    let mut scratch = SimScratch::new();
 
     for combo in COMBOS.iter().take(3) {
         let mut on_cfg = combo_config(combo, Mode::Fikit, tasks, opts);
         on_cfg.feedback = true;
-        let profiles = profile_combo(&on_cfg)?;
-        let on = run_with_profiles(&on_cfg, &profiles)?;
+        let profiles = profile_combo_scratch(&on_cfg, &mut scratch)?;
+        let on = run_with_profiles_scratch(&on_cfg, &profiles, &mut scratch)?;
 
         let mut off_cfg = combo_config(combo, Mode::Fikit, tasks, opts);
         off_cfg.feedback = false;
-        let off = run_with_profiles(&off_cfg, &profiles)?;
+        let off = run_with_profiles_scratch(&off_cfg, &profiles, &mut scratch)?;
 
         let h_on = windowed_mean_ms(&on, HIGH_KEY);
         let h_off = windowed_mean_ms(&off, HIGH_KEY);

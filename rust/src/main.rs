@@ -44,10 +44,13 @@ USAGE:
                 [--compat compat.json] [--measure-compat]
   fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
                       [--seed S] [--secs T] [--bound X] [--no-migration]
-                      [--cold-start] [--online]
+                      [--cold-start] [--online] [--sim-threads N]
+        --sim-threads advances device shards on N worker threads between
+        fleet events; the report is byte-identical for every N
   fikit bench [--quick] [--json [PATH]]
-        runs the scheduler hot-path suite; --json writes BENCH_sched.json
-        (or PATH) and fails if any case exceeds its declared budget
+        runs the scheduler hot-path + simulator event-core suites; --json
+        writes BENCH_sched.json (or PATH) plus BENCH_sim.json alongside
+        it and fails if any case misses its declared budget
   fikit list-models
   fikit verify-artifacts [--dir artifacts]
 ";
@@ -357,6 +360,7 @@ fn cmd_cluster_churn(args: &Args) -> Result<()> {
     cfg.qos.migration = !args.flag("no-migration");
     cfg.cold_start = args.flag("cold-start");
     cfg.online = args.flag("online");
+    cfg.sim_threads = args.opt_parse("sim-threads", 1usize)?;
 
     let report = run_churn(&cfg, &CompatMatrix::new())?;
     println!(
@@ -367,27 +371,39 @@ fn cmd_cluster_churn(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Run the scheduler hot-path bench suite and (optionally) write the
-/// `BENCH_sched.json` perf-trajectory artifact. The single documented
-/// regeneration command, from the repo root:
+/// Run the scheduler hot-path + simulator event-core bench suites and
+/// (optionally) write the `BENCH_sched.json` / `BENCH_sim.json`
+/// perf-trajectory artifacts. The single documented regeneration
+/// command, from the repo root:
 ///
 /// ```text
 /// cargo run --manifest-path rust/Cargo.toml --release -- bench --json
 /// ```
 fn cmd_bench(args: &Args) -> Result<()> {
-    let suite = fikit::benchsuite::run_hotpath_suite(args.flag("quick"));
-    println!("{}", suite.table);
+    let quick = args.flag("quick");
+    let sched = fikit::benchsuite::run_hotpath_suite(quick);
+    println!("{}", sched.table);
+    let sim = fikit::benchsuite::run_sim_suite(quick);
+    println!("{}", sim.table);
 
     let json_path = args
         .opt("json")
         .map(str::to_string)
         .or_else(|| args.flag("json").then(|| "BENCH_sched.json".to_string()));
     if let Some(path) = json_path {
-        suite.write_json(&path)?;
+        sched.write_json(&path)?;
         println!("wrote bench results -> {path}");
+        // BENCH_sim.json lands next to the scheduler artifact.
+        let sim_path = std::path::Path::new(&path)
+            .with_file_name("BENCH_sim.json")
+            .to_string_lossy()
+            .into_owned();
+        sim.write_json(&sim_path)?;
+        println!("wrote bench results -> {sim_path}");
     }
 
-    let violations = suite.violations();
+    let mut violations = sched.violations();
+    violations.extend(sim.violations());
     for v in &violations {
         eprintln!("BUDGET VIOLATION: {v}");
     }

@@ -1,0 +1,146 @@
+//! Slab arena for in-flight [`KernelRecord`]s (ADR-003).
+//!
+//! A `KernelDone` event used to carry its full `KernelRecord` payload
+//! inline, making `Event` a large move-heavy enum. The arena parks the
+//! record between submission and completion and the event carries only a
+//! [`RecordSlot`] — a `u32` index — so `Event` is small and `Copy` and
+//! the event core moves fixed-width entries only.
+//!
+//! Freed slots go on a free list and are reused LIFO; after warm-up the
+//! steady-state insert/take cycle performs zero heap allocations (gated
+//! by `tests/hotpath_alloc.rs`). No unsafe: slots are `Option`s and a
+//! double-take panics instead of aliasing.
+
+use crate::core::KernelRecord;
+
+/// Handle to a parked [`KernelRecord`] — the `KernelDone` payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RecordSlot(u32);
+
+/// Slab + free list of in-flight kernel records, one per [`GpuSim`].
+///
+/// [`GpuSim`]: crate::coordinator::driver::GpuSim
+#[derive(Debug, Default)]
+pub struct KernelArena {
+    slots: Vec<Option<KernelRecord>>,
+    free: Vec<u32>,
+}
+
+impl KernelArena {
+    pub fn new() -> KernelArena {
+        KernelArena::default()
+    }
+
+    /// Records currently parked.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Park `record`, returning its slot. Reuses a freed slot when one
+    /// exists; grows the slab otherwise.
+    pub fn insert(&mut self, record: KernelRecord) -> RecordSlot {
+        match self.free.pop() {
+            Some(idx) => {
+                debug_assert!(self.slots[idx as usize].is_none(), "free-list slot occupied");
+                self.slots[idx as usize] = Some(record);
+                RecordSlot(idx)
+            }
+            None => {
+                let idx = u32::try_from(self.slots.len()).expect("arena exceeds u32 slots");
+                self.slots.push(Some(record));
+                RecordSlot(idx)
+            }
+        }
+    }
+
+    /// Remove and return the record parked at `slot`.
+    ///
+    /// Panics on a stale or double-taken slot — that would mean a
+    /// completion event fired twice, which the simulator must never do.
+    pub fn take(&mut self, slot: RecordSlot) -> KernelRecord {
+        let record = self.slots[slot.0 as usize]
+            .take()
+            .expect("take of an empty arena slot");
+        self.free.push(slot.0);
+        record
+    }
+
+    /// Drop every parked record but keep the slab and free-list storage
+    /// (the multi-run reuse path, paired with `EventQueue::clear`).
+    pub fn clear(&mut self) {
+        self.free.clear();
+        // Rebuild the free list in descending order so a cleared arena
+        // hands out slot 0 first — byte-identical replay across reuse.
+        for idx in (0..self.slots.len() as u32).rev() {
+            self.slots[idx as usize] = None;
+            self.free.push(idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{
+        Dim3, KernelHandle, KernelId, LaunchSource, Priority, SimTime, TaskHandle, TaskId, TaskKey,
+    };
+
+    fn record(seq: u32) -> KernelRecord {
+        KernelRecord {
+            task_key: TaskKey::new("svc"),
+            task_handle: TaskHandle::UNBOUND,
+            task_id: TaskId(seq as u64),
+            kernel: KernelId::new("k", Dim3::x(1), Dim3::x(32)),
+            kernel_handle: KernelHandle::UNBOUND,
+            priority: Priority::P0,
+            seq,
+            source: LaunchSource::Direct,
+            issued_at: SimTime::ZERO,
+            started_at: SimTime::ZERO,
+            finished_at: SimTime(10_000),
+        }
+    }
+
+    #[test]
+    fn insert_take_roundtrip_reuses_slots() {
+        let mut arena = KernelArena::new();
+        let a = arena.insert(record(1));
+        let b = arena.insert(record(2));
+        assert_ne!(a, b);
+        assert_eq!(arena.len(), 2);
+        assert_eq!(arena.take(a).seq, 1);
+        assert_eq!(arena.len(), 1);
+        // Freed slot is reused before the slab grows.
+        let c = arena.insert(record(3));
+        assert_eq!(c, a);
+        assert_eq!(arena.take(b).seq, 2);
+        assert_eq!(arena.take(c).seq, 3);
+        assert!(arena.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty arena slot")]
+    fn double_take_panics() {
+        let mut arena = KernelArena::new();
+        let slot = arena.insert(record(1));
+        let _ = arena.take(slot);
+        let _ = arena.take(slot);
+    }
+
+    #[test]
+    fn clear_retains_capacity_and_restarts_slot_order() {
+        let mut arena = KernelArena::new();
+        let first = arena.insert(record(1));
+        arena.insert(record(2));
+        arena.insert(record(3));
+        arena.clear();
+        assert!(arena.is_empty());
+        // After clear, allocation order restarts at slot 0.
+        let again = arena.insert(record(4));
+        assert_eq!(again, first);
+    }
+}

@@ -5,7 +5,9 @@
 //! `(start, finish)` are fully determined the moment it is submitted:
 //! `start = max(now + launch_latency, device_free)`. [`SimDevice::submit`]
 //! therefore returns the finished [`KernelRecord`] synchronously; the
-//! driver turns `finished_at` into a completion event.
+//! driver parks it in the sim's [`KernelArena`](super::KernelArena) and
+//! turns `finished_at` into a completion event carrying the slot handle
+//! (ADR-003 — events themselves stay small and `Copy`).
 
 use crate::core::{Duration, KernelLaunch, KernelRecord, LaunchSource, SimTime};
 use std::cmp::Reverse;

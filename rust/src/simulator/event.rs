@@ -1,53 +1,39 @@
 //! Deterministic discrete-event queue.
 //!
-//! A binary heap keyed on `(time, seq)` — `seq` is a monotonically
-//! increasing insertion counter, so simultaneous events pop in insertion
-//! order and every run with the same seed replays identically.
+//! The queue pops in strict `(time, seq)` order — `seq` is a
+//! monotonically increasing insertion counter, so simultaneous events
+//! pop in insertion order and every run with the same seed replays
+//! identically (ADR-001). Since ADR-003 the storage is a calendar-queue
+//! [`CalendarWheel`] (O(1) amortized push/pop for the near-future dense
+//! band, heap overflow ring for far-future events) instead of one big
+//! binary heap; the pop order is bit-identical to the heap's, pinned by
+//! the differential test in `tests/sim_core.rs`.
+//!
+//! [`Event`] is a small `Copy` enum: a completed kernel's payload lives
+//! in the per-sim [`KernelArena`](super::KernelArena) and `KernelDone`
+//! carries only its [`RecordSlot`] handle.
 
-use crate::core::{KernelRecord, SimTime};
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use super::arena::RecordSlot;
+use super::wheel::CalendarWheel;
+use crate::core::SimTime;
 
 /// Events driving the simulation loop.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
     /// A new task (invocation) of service `svc` arrives.
     TaskArrival { svc: usize },
     /// Service `svc`'s CPU side issues its next kernel launch.
     IssueKernel { svc: usize },
-    /// A kernel previously submitted to the device finishes executing.
-    KernelDone { svc: usize, record: KernelRecord },
+    /// A kernel previously submitted to the device finishes executing;
+    /// its [`KernelRecord`](crate::core::KernelRecord) is parked in the
+    /// sim's arena at `rec`.
+    KernelDone { svc: usize, rec: RecordSlot },
 }
 
-/// Min-heap of timestamped events with deterministic tie-breaking.
+/// Calendar-queue of timestamped events with deterministic tie-breaking.
 #[derive(Debug, Default)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Entry>>,
-    seq: u64,
-}
-
-#[derive(Debug)]
-struct Entry {
-    time: SimTime,
-    seq: u64,
-    event: Event,
-}
-
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
-    }
+    wheel: CalendarWheel<Event>,
 }
 
 impl EventQueue {
@@ -57,27 +43,41 @@ impl EventQueue {
 
     /// Schedule `event` at `time`.
     pub fn push(&mut self, time: SimTime, event: Event) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Reverse(Entry { time, seq, event }));
+        self.wheel.push(time, event);
     }
 
     /// Pop the earliest event (ties: insertion order).
     pub fn pop(&mut self) -> Option<(SimTime, Event)> {
-        self.heap.pop().map(|Reverse(e)| (e.time, e.event))
+        self.wheel.pop()
     }
 
-    /// Time of the next event without popping.
-    pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(e)| e.time)
+    /// Pop the earliest event only if it is at or before `bound`; the
+    /// wheel cursor never advances past the bound, so interleaved
+    /// pushes at the bound (mid-run attach) stay on the fast path.
+    pub fn pop_if_before(&mut self, bound: SimTime) -> Option<(SimTime, Event)> {
+        self.wheel.pop_if_before(bound)
+    }
+
+    /// Time of the next event without popping. (Positions the wheel
+    /// cursor, hence `&mut`.)
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        self.wheel.peek_time()
+    }
+
+    /// Reset to empty without releasing bucket/heap storage — the
+    /// multi-run reuse path (`SimScratch`): fig13–21 sweeps and `fikit
+    /// drift` rebuild sims per run but pay the queue's allocation cost
+    /// once.
+    pub fn clear(&mut self) {
+        self.wheel.clear();
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.wheel.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.wheel.is_empty()
     }
 }
 
@@ -103,5 +103,20 @@ mod tests {
         assert_eq!(q.pop().unwrap().0, SimTime(30));
         assert!(q.pop().is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clear_reuses_queue_across_runs() {
+        let mut q = EventQueue::new();
+        for i in 0..64u64 {
+            q.push(SimTime(i * 1_000_000), Event::IssueKernel { svc: 0 });
+        }
+        q.clear();
+        assert!(q.is_empty());
+        q.push(SimTime(5), Event::TaskArrival { svc: 7 });
+        assert_eq!(
+            q.pop(),
+            Some((SimTime(5), Event::TaskArrival { svc: 7 }))
+        );
     }
 }

@@ -18,13 +18,22 @@
 //!   measures.
 //! * Submitting a kernel is deterministic: a FIFO, non-preemptive device
 //!   means `(start, finish)` are fixed at submission time, so the device
-//!   returns the completed [`KernelRecord`] synchronously and the driver
-//!   schedules a completion *event* at `finished_at`.
+//!   returns the completed [`KernelRecord`] synchronously; the driver
+//!   parks it in the per-sim [`KernelArena`] and schedules a completion
+//!   *event* (carrying only the [`RecordSlot`] handle) at `finished_at`.
+//!
+//! The event core is a calendar-queue [`CalendarWheel`] (ADR-003): O(1)
+//! amortized push/pop for the dense near-future band, with far-future
+//! events on a heap **overflow ring** — see DESIGN.md §Perf.
 
+mod arena;
 mod device;
 mod event;
 mod process;
+mod wheel;
 
+pub use arena::{KernelArena, RecordSlot};
 pub use device::{DeviceConfig, DeviceStats, SimDevice};
 pub use event::{Event, EventQueue};
 pub use process::{ProcessAction, ServiceProcess, Stage, TaskOutcome};
+pub use wheel::{BaselineHeapQueue, CalendarWheel, DEFAULT_BUCKETS, DEFAULT_SHIFT};

@@ -1,0 +1,464 @@
+//! Calendar-queue **event wheel** — the simulator's event core
+//! (DESIGN.md §Perf, ADR-003).
+//!
+//! A bucketed calendar queue: time is quantized into ticks of `2^shift`
+//! nanoseconds, and each tick maps onto one of `N` buckets (`N` a power
+//! of two) by `tick & (N-1)`. Within one rotation window
+//! `[cursor, cursor + N)` the tick ↔ bucket mapping is a bijection, so
+//! the bucket at the cursor holds *only* entries of the current tick and
+//! a push into the window is a single `Vec::push` — O(1), no sift-up,
+//! no per-entry allocation once bucket capacities are warm.
+//!
+//! Events landing **beyond** the rotation window go to the **overflow
+//! ring**: a min-heap ordered by `(time, seq)`. The standing invariant is
+//!
+//! > every overflow entry's tick is `>= cursor + N`
+//!
+//! maintained by refilling (draining matured overflow entries into their
+//! buckets) every time the cursor advances. Popping positions the cursor
+//! on the next non-empty bucket (jumping straight to the overflow head's
+//! tick when the wheel is empty), then min-scans that one bucket by
+//! `(time, seq)` — a handful of entries in practice, since a bucket
+//! spans a single tick of the current rotation.
+//!
+//! Determinism: `seq` is a monotone insertion counter and every pop
+//! selects the globally least `(time, seq)` entry, so the wheel replays
+//! *exactly* the pop order of the binary-heap queue it replaced. The
+//! differential property test in `tests/sim_core.rs` pins this against
+//! [`BaselineHeapQueue`] on randomized schedules.
+
+use crate::core::SimTime;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Default tick width exponent: `2^16` ns ≈ 65.5 µs — the same order as
+/// the smallest kernel-gap band worth scheduling around, so consecutive
+/// device events land a few buckets apart and bucket occupancy stays
+/// O(1).
+pub const DEFAULT_SHIFT: u32 = 16;
+
+/// Default bucket count (must be a power of two). 1024 buckets × 65.5 µs
+/// ≈ 67 ms of rotation span: kernel completions, launch-ahead issues and
+/// think-gap resumes all land inside the window; only coarse arrival
+/// patterns (whole-run `Every` schedules) ride the overflow ring.
+pub const DEFAULT_BUCKETS: usize = 1024;
+
+/// One timestamped entry parked in a bucket.
+#[derive(Debug, Clone)]
+struct BucketEntry<T> {
+    time: u64,
+    seq: u64,
+    item: T,
+}
+
+/// Overflow-ring entry; the manual `Ord` on `(time, seq)` keeps `T` free
+/// of any ordering requirement.
+#[derive(Debug, Clone)]
+struct OverflowEntry<T> {
+    time: u64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for OverflowEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for OverflowEntry<T> {}
+impl<T> PartialOrd for OverflowEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for OverflowEntry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// A calendar-queue priority queue of timestamped items, popping in
+/// strict `(time, insertion seq)` order.
+///
+/// Generic over the payload so the per-device [`EventQueue`]
+/// (`simulator::Event`) and the fleet-level churn queue
+/// (`cluster::sim`'s `FleetEvent`) share one implementation with
+/// different geometries.
+///
+/// [`EventQueue`]: super::EventQueue
+#[derive(Debug)]
+pub struct CalendarWheel<T> {
+    buckets: Box<[Vec<BucketEntry<T>>]>,
+    /// `buckets.len() - 1` (bucket count is a power of two).
+    mask: u64,
+    /// Tick width: `2^shift` nanoseconds.
+    shift: u32,
+    /// Absolute tick the rotation window starts at. Never decreases
+    /// while the queue is non-empty.
+    cursor: u64,
+    /// Entries currently parked in buckets (excludes overflow).
+    in_wheel: usize,
+    /// Far-future entries: min-(time, seq) heap; every entry's tick is
+    /// `>= cursor + buckets.len()` (the refill invariant).
+    overflow: BinaryHeap<Reverse<OverflowEntry<T>>>,
+    /// Monotone insertion counter — the deterministic tie-break.
+    seq: u64,
+}
+
+impl<T> Default for CalendarWheel<T> {
+    fn default() -> CalendarWheel<T> {
+        CalendarWheel::with_geometry(DEFAULT_SHIFT, DEFAULT_BUCKETS)
+    }
+}
+
+impl<T> CalendarWheel<T> {
+    /// A wheel with `2^shift`-ns ticks and `buckets` buckets (power of
+    /// two). Span = `buckets << shift` nanoseconds per rotation.
+    pub fn with_geometry(shift: u32, buckets: usize) -> CalendarWheel<T> {
+        assert!(buckets.is_power_of_two(), "bucket count must be 2^k");
+        assert!(shift < 48, "tick width exponent out of range");
+        CalendarWheel {
+            buckets: (0..buckets).map(|_| Vec::new()).collect(),
+            mask: buckets as u64 - 1,
+            shift,
+            cursor: 0,
+            in_wheel: 0,
+            overflow: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.in_wheel + self.overflow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.in_wheel == 0 && self.overflow.is_empty()
+    }
+
+    /// Schedule `item` at `time`. O(1) for the in-window band, O(log n)
+    /// for overflow.
+    pub fn push(&mut self, time: SimTime, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        let t = time.nanos();
+        let tick = t >> self.shift;
+        if self.is_empty() {
+            // Nothing pending: snap the window to this event so a long
+            // quiet gap never costs an empty-bucket scan.
+            self.cursor = tick;
+        }
+        if tick >= self.cursor + self.buckets.len() as u64 {
+            self.overflow.push(Reverse(OverflowEntry { time: t, seq, item }));
+        } else {
+            // A push can trail the cursor by a tick when a bounded pop
+            // scanned up to its cap and the next push lands on the cap
+            // tick. Clamping keeps it correct: the entry joins the
+            // current bucket, which pops first, and the in-bucket
+            // min-scan ranks it by its true (time, seq).
+            let slot = (tick.max(self.cursor) & self.mask) as usize;
+            self.buckets[slot].push(BucketEntry { time: t, seq, item });
+            self.in_wheel += 1;
+        }
+    }
+
+    /// Drain matured overflow entries (tick < cursor + N) into their
+    /// buckets — restores the refill invariant after a cursor move.
+    fn refill(&mut self) {
+        let window_end = self.cursor + self.buckets.len() as u64;
+        while let Some(Reverse(head)) = self.overflow.peek() {
+            if head.time >> self.shift >= window_end {
+                break;
+            }
+            let Reverse(e) = self.overflow.pop().expect("peeked entry exists");
+            let slot = ((e.time >> self.shift) & self.mask) as usize;
+            self.buckets[slot].push(BucketEntry {
+                time: e.time,
+                seq: e.seq,
+                item: e.item,
+            });
+            self.in_wheel += 1;
+        }
+    }
+
+    /// Advance the cursor to the next non-empty bucket and return its
+    /// index, never stepping past `tick_cap`. `None` when the queue is
+    /// empty or everything pending lies beyond the cap — in the latter
+    /// case the cursor parks at `tick_cap + 1` (or stays put when only
+    /// the overflow holds entries), so it never crosses a bound that a
+    /// later push might land on.
+    fn position_capped(&mut self, tick_cap: u64) -> Option<usize> {
+        if self.in_wheel == 0 {
+            // Wheel drained: jump straight to the overflow head's tick
+            // instead of stepping through empty buckets. (The refill
+            // invariant guarantees head_tick >= cursor + N, so this only
+            // moves forward.)
+            let head_tick = {
+                let Reverse(head) = self.overflow.peek()?;
+                head.time >> self.shift
+            };
+            if head_tick > tick_cap {
+                return None;
+            }
+            self.cursor = head_tick;
+            self.refill();
+            debug_assert!(self.in_wheel > 0, "refill must land the overflow head");
+        }
+        loop {
+            if self.cursor > tick_cap {
+                return None;
+            }
+            let idx = (self.cursor & self.mask) as usize;
+            if !self.buckets[idx].is_empty() {
+                return Some(idx);
+            }
+            self.cursor += 1;
+            self.refill();
+        }
+    }
+
+    /// Time of the next item without removing it. (May advance the
+    /// cursor to that item's tick.)
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        let idx = self.position_capped(u64::MAX)?;
+        let t = self.buckets[idx]
+            .iter()
+            .map(|e| e.time)
+            .min()
+            .expect("positioned bucket is non-empty");
+        Some(SimTime(t))
+    }
+
+    /// Index of the least `(time, seq)` entry in `bucket`.
+    fn min_entry(bucket: &[BucketEntry<T>]) -> usize {
+        let mut best = 0;
+        for i in 1..bucket.len() {
+            if (bucket[i].time, bucket[i].seq) < (bucket[best].time, bucket[best].seq) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Remove and return the least `(time, seq)` item.
+    pub fn pop(&mut self) -> Option<(SimTime, T)> {
+        let idx = self.position_capped(u64::MAX)?;
+        let bucket = &mut self.buckets[idx];
+        let best = Self::min_entry(bucket);
+        let e = bucket.swap_remove(best);
+        self.in_wheel -= 1;
+        Some((SimTime(e.time), e.item))
+    }
+
+    /// Remove and return the least `(time, seq)` item **iff** its time
+    /// is `<= bound`; otherwise leave the queue untouched. The cursor
+    /// never advances past `bound`'s tick, so a bulk-synchronous caller
+    /// (`GpuSim::run_until` between fleet-event horizons) can keep
+    /// pushing events at the bound without falling behind the window.
+    pub fn pop_if_before(&mut self, bound: SimTime) -> Option<(SimTime, T)> {
+        let idx = self.position_capped(bound.nanos() >> self.shift)?;
+        let bucket = &mut self.buckets[idx];
+        let best = Self::min_entry(bucket);
+        if bucket[best].time > bound.nanos() {
+            return None; // same tick, but past the bound's nanosecond.
+        }
+        let e = bucket.swap_remove(best);
+        self.in_wheel -= 1;
+        Some((SimTime(e.time), e.item))
+    }
+
+    /// Reset to empty **without releasing storage**: bucket and overflow
+    /// capacities survive, so a multi-run sweep reusing one wheel pays
+    /// its allocation cost once (the `EventQueue::clear` path).
+    pub fn clear(&mut self) {
+        for bucket in self.buckets.iter_mut() {
+            bucket.clear();
+        }
+        self.overflow.clear();
+        self.cursor = 0;
+        self.in_wheel = 0;
+        self.seq = 0;
+    }
+}
+
+/// The binary-heap event queue the wheel replaced, kept as the reference
+/// implementation: the differential property test (`tests/sim_core.rs`)
+/// replays randomized schedules through both and demands identical pop
+/// sequences, and `BENCH_sim.json` carries a `wheel/heap_*` comparison
+/// case so the artifact documents its own before/after.
+#[derive(Debug)]
+pub struct BaselineHeapQueue<T> {
+    heap: BinaryHeap<Reverse<OverflowEntry<T>>>,
+    seq: u64,
+}
+
+impl<T> Default for BaselineHeapQueue<T> {
+    fn default() -> BaselineHeapQueue<T> {
+        BaselineHeapQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+}
+
+impl<T> BaselineHeapQueue<T> {
+    pub fn new() -> BaselineHeapQueue<T> {
+        BaselineHeapQueue::default()
+    }
+
+    pub fn push(&mut self, time: SimTime, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(OverflowEntry {
+            time: time.nanos(),
+            seq,
+            item,
+        }));
+    }
+
+    pub fn pop(&mut self) -> Option<(SimTime, T)> {
+        self.heap.pop().map(|Reverse(e)| (SimTime(e.time), e.item))
+    }
+
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| SimTime(e.time))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_insertion_ties() {
+        let mut w: CalendarWheel<u32> = CalendarWheel::default();
+        w.push(SimTime(30), 3);
+        w.push(SimTime(10), 1);
+        w.push(SimTime(10), 2);
+        w.push(SimTime(20), 9);
+        assert_eq!(w.peek_time(), Some(SimTime(10)));
+        assert_eq!(w.pop(), Some((SimTime(10), 1)));
+        assert_eq!(w.pop(), Some((SimTime(10), 2)));
+        assert_eq!(w.pop(), Some((SimTime(20), 9)));
+        assert_eq!(w.pop(), Some((SimTime(30), 3)));
+        assert_eq!(w.pop(), None);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn same_tick_burst_pops_in_insertion_order() {
+        let mut w: CalendarWheel<usize> = CalendarWheel::default();
+        for i in 0..100 {
+            w.push(SimTime(1_000_000), i);
+        }
+        for i in 0..100 {
+            assert_eq!(w.pop(), Some((SimTime(1_000_000), i)));
+        }
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn far_future_rides_the_overflow_ring() {
+        let mut w: CalendarWheel<u32> = CalendarWheel::with_geometry(4, 8);
+        // Span = 8 * 16 ns = 128 ns; 10_000 ns is deep overflow.
+        w.push(SimTime(10_000), 42);
+        w.push(SimTime(5), 1);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.pop(), Some((SimTime(5), 1)));
+        // Wheel drained → cursor jumps to the overflow head's tick.
+        assert_eq!(w.pop(), Some((SimTime(10_000), 42)));
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn overflow_interleaves_correctly_with_window_entries() {
+        let mut w: CalendarWheel<u32> = CalendarWheel::with_geometry(4, 8);
+        for i in 0..64u32 {
+            // Times step past several rotations; mix near and far.
+            w.push(SimTime(u64::from(i) * 40), i);
+        }
+        let mut prev = 0;
+        for _ in 0..64 {
+            let (t, _) = w.pop().unwrap();
+            assert!(t.nanos() >= prev, "pop went back in time");
+            prev = t.nanos();
+        }
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn empty_queue_snaps_cursor_forward_and_back() {
+        let mut w: CalendarWheel<u32> = CalendarWheel::default();
+        w.push(SimTime(1 << 40), 1);
+        assert_eq!(w.pop(), Some((SimTime(1 << 40), 1)));
+        // Empty again: an earlier time is acceptable (fresh epoch).
+        w.push(SimTime(7), 2);
+        assert_eq!(w.pop(), Some((SimTime(7), 2)));
+    }
+
+    #[test]
+    fn clear_resets_order_and_reuses_storage() {
+        let mut w: CalendarWheel<u32> = CalendarWheel::default();
+        for i in 0..100u32 {
+            w.push(SimTime(u64::from(i) * 1_000_000_000), i);
+        }
+        assert_eq!(w.len(), 100);
+        w.clear();
+        assert!(w.is_empty());
+        assert_eq!(w.len(), 0);
+        w.push(SimTime(20), 2);
+        w.push(SimTime(10), 1);
+        assert_eq!(w.pop(), Some((SimTime(10), 1)));
+        assert_eq!(w.pop(), Some((SimTime(20), 2)));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn bounded_pop_stops_at_bound_without_losing_order() {
+        let mut w: CalendarWheel<u32> = CalendarWheel::with_geometry(4, 8);
+        w.push(SimTime(10), 1);
+        w.push(SimTime(100), 2);
+        w.push(SimTime(100_000), 3); // deep overflow
+        assert_eq!(w.pop_if_before(SimTime(50)), Some((SimTime(10), 1)));
+        assert_eq!(w.pop_if_before(SimTime(50)), None);
+        assert_eq!(w.len(), 3 - 1);
+        // A push right at the previous bound still pops in order even
+        // though the capped scan may have parked the cursor on its tick.
+        w.push(SimTime(50), 4);
+        assert_eq!(w.pop_if_before(SimTime(200)), Some((SimTime(50), 4)));
+        assert_eq!(w.pop_if_before(SimTime(200)), Some((SimTime(100), 2)));
+        assert_eq!(w.pop_if_before(SimTime(200)), None);
+        assert_eq!(w.pop(), Some((SimTime(100_000), 3)));
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn bounded_pop_refuses_event_past_bound() {
+        let mut w: CalendarWheel<u32> = CalendarWheel::with_geometry(4, 8);
+        w.push(SimTime(100_000), 9);
+        assert_eq!(w.pop_if_before(SimTime(99_999)), None);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.pop_if_before(SimTime(100_000)), Some((SimTime(100_000), 9)));
+    }
+
+    #[test]
+    fn baseline_heap_matches_simple_sequence() {
+        let mut h: BaselineHeapQueue<u32> = BaselineHeapQueue::new();
+        h.push(SimTime(30), 3);
+        h.push(SimTime(10), 1);
+        h.push(SimTime(10), 2);
+        assert_eq!(h.peek_time(), Some(SimTime(10)));
+        assert_eq!(h.pop(), Some((SimTime(10), 1)));
+        assert_eq!(h.pop(), Some((SimTime(10), 2)));
+        assert_eq!(h.pop(), Some((SimTime(30), 3)));
+        assert!(h.is_empty());
+    }
+}

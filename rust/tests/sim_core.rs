@@ -1,0 +1,213 @@
+//! Acceptance gates for the fleet-scale simulator core (ADR-003,
+//! DESIGN.md §Perf):
+//!
+//! * **Differential property test** — the calendar wheel's pop order is
+//!   bit-identical to the reference binary heap's `(time, seq)` order on
+//!   randomized schedules: same-tick bursts, mid-rotation spreads,
+//!   far-future pushes that ride the overflow ring, and pops interleaved
+//!   with pushes so cursor advance and overflow refill happen mid-stream.
+//! * **Shard-merge determinism** — `run_churn` produces byte-identical
+//!   reports at `--sim-threads 1/2/4`. Device shards share nothing and
+//!   advance to the same merge horizons; all cross-device logic runs
+//!   serially on the main thread in device order, so thread count must
+//!   be unobservable in every output.
+
+use fikit::cluster::{run_churn, ChurnConfig, CompatMatrix, PlacementPolicy};
+use fikit::core::{Duration, Priority, SimTime};
+use fikit::simulator::{BaselineHeapQueue, CalendarWheel};
+use fikit::util::rng::Rng;
+use fikit::workload::{ArrivalProcess, MixEntry, ModelKind};
+
+/// Drive a wheel and the reference heap through one randomized
+/// push/pop schedule, asserting identical `(time, item)` pops
+/// throughout. Pushes never go backwards past a popped time — the
+/// simulator's monotonicity contract, which the wheel's cursor relies
+/// on.
+fn differential_schedule(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut wheel: CalendarWheel<u32> = CalendarWheel::default();
+    let mut heap: BaselineHeapQueue<u32> = BaselineHeapQueue::new();
+
+    let mut now = 0u64;
+    let mut id = 0u32;
+    for round in 0..2_000 {
+        // A burst of 1..=4 events with offsets spanning every band the
+        // wheel treats differently: exact ties, the near-future dense
+        // band, mid-rotation, and beyond the 67 ms span (overflow ring).
+        for _ in 0..1 + rng.index(4) {
+            let offset = match rng.index(4) {
+                0 => 0,
+                1 => rng.below(50_000),
+                2 => rng.below(5_000_000),
+                _ => 60_000_000 + rng.below(400_000_000),
+            };
+            let t = SimTime(now + offset);
+            wheel.push(t, id);
+            heap.push(t, id);
+            id += 1;
+        }
+        // Interleaved pops: cursor advance and overflow refill must
+        // agree with the heap mid-stream, not only in a final drain.
+        for _ in 0..rng.index(4) {
+            let got = wheel.pop();
+            let want = heap.pop();
+            assert_eq!(got, want, "mid-stream divergence (seed {seed}, round {round})");
+            if let Some((t, _)) = got {
+                now = now.max(t.0);
+            }
+        }
+        now += rng.below(200_000);
+    }
+
+    loop {
+        let got = wheel.pop();
+        let want = heap.pop();
+        assert_eq!(got, want, "drain divergence (seed {seed})");
+        if got.is_none() {
+            break;
+        }
+    }
+    assert!(wheel.is_empty());
+}
+
+#[test]
+fn wheel_matches_heap_on_randomized_schedules() {
+    for seed in [1, 42, 7_777, 0xDEAD_BEEF, 0x5EED_F00D] {
+        differential_schedule(seed);
+    }
+}
+
+/// Degenerate tie storm: hundreds of events on one tick must pop in
+/// exact insertion order (the in-bucket min-scan ranks by `seq`), with
+/// stragglers on neighboring ticks landing where the heap puts them.
+#[test]
+fn wheel_matches_heap_on_same_tick_bursts() {
+    let mut wheel: CalendarWheel<u32> = CalendarWheel::default();
+    let mut heap: BaselineHeapQueue<u32> = BaselineHeapQueue::new();
+    let t = SimTime(1_000_000);
+    for id in 0..300u32 {
+        // Every third event lands one tick earlier or later; the rest
+        // pile onto the same instant.
+        let time = match id % 3 {
+            0 => t,
+            1 => SimTime(t.0 + (1 << 16)),
+            _ => t,
+        };
+        wheel.push(time, id);
+        heap.push(time, id);
+    }
+    loop {
+        let got = wheel.pop();
+        assert_eq!(got, heap.pop());
+        if got.is_none() {
+            break;
+        }
+    }
+}
+
+/// `clear()` keeps storage but fully resets ordering state: a reused
+/// wheel must replay a schedule identically to a fresh one, including
+/// the insertion-order tie-break restarting from zero.
+#[test]
+fn cleared_wheel_replays_like_fresh() {
+    let mut reused: CalendarWheel<u32> = CalendarWheel::default();
+    // Dirty it across every band, pop a few to move the cursor deep.
+    for id in 0..64u32 {
+        reused.push(SimTime(id as u64 * 3_000_000), id);
+    }
+    reused.push(SimTime(500_000_000), 64);
+    for _ in 0..40 {
+        reused.pop();
+    }
+    reused.clear();
+    assert!(reused.is_empty());
+
+    let mut fresh: CalendarWheel<u32> = CalendarWheel::default();
+    let mut rng = Rng::new(9);
+    let mut now = 0u64;
+    for id in 0..500u32 {
+        let t = SimTime(now + rng.below(100_000_000));
+        reused.push(t, id);
+        fresh.push(t, id);
+        if rng.chance(0.4) {
+            let got = reused.pop();
+            let want = fresh.pop();
+            assert_eq!(got, want);
+            if let Some((t, _)) = got {
+                now = now.max(t.0);
+            }
+        }
+    }
+    loop {
+        let got = reused.pop();
+        assert_eq!(got, fresh.pop());
+        if got.is_none() {
+            break;
+        }
+    }
+}
+
+fn churn_cfg(sim_threads: usize) -> ChurnConfig {
+    let mix = vec![
+        MixEntry::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0, 1.0),
+        MixEntry::new(ModelKind::FcnResnet50, Priority::P5, 1.0),
+        MixEntry::new(ModelKind::Vgg16, Priority::P7, 1.0),
+    ];
+    let arrivals = ArrivalProcess::Poisson {
+        mean_interarrival: Duration::from_millis(120),
+        mean_lifetime: Duration::from_millis(250),
+        mix,
+        horizon: Duration::from_millis(800),
+    };
+    let mut cfg = ChurnConfig::new(4, PlacementPolicy::BestMatch, arrivals);
+    cfg.seed = 0x5EED;
+    cfg.sim_threads = sim_threads;
+    cfg
+}
+
+/// The acceptance criterion for the sharded serving loop: the
+/// `ChurnReport` — summary line, fleet counters, and every per-service
+/// outcome — is identical whether devices advance serially or on 2 or 4
+/// worker threads.
+#[test]
+fn churn_reports_identical_across_sim_threads() {
+    let serial = run_churn(&churn_cfg(1), &CompatMatrix::new()).unwrap();
+    // The scenario must actually exercise the fleet for the equality to
+    // mean anything.
+    assert!(serial.completed_total > 0, "scenario completed no work");
+    assert_eq!(serial.fleet.len(), 4);
+
+    for threads in [2usize, 4] {
+        let parallel = run_churn(&churn_cfg(threads), &CompatMatrix::new()).unwrap();
+        assert_eq!(
+            serial.summary(),
+            parallel.summary(),
+            "summary diverged at sim_threads={threads}"
+        );
+        assert_eq!(serial.completed_total, parallel.completed_total);
+        assert_eq!(serial.sim_end, parallel.sim_end);
+        assert_eq!(serial.qos_violations, parallel.qos_violations);
+        assert_eq!(serial.migrations, parallel.migrations);
+        assert_eq!(serial.scans, parallel.scans);
+        assert_eq!(serial.rejected, parallel.rejected);
+        assert_eq!(serial.fleet.len(), parallel.fleet.len());
+        assert_eq!(serial.services.len(), parallel.services.len());
+        for (a, b) in serial.services.iter().zip(&parallel.services) {
+            assert_eq!(a.id, b.id, "service order diverged at sim_threads={threads}");
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.arrived, b.arrived);
+            assert_eq!(a.departed, b.departed);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.migrations, b.migrations);
+            assert_eq!(a.rejected, b.rejected);
+        }
+    }
+}
+
+/// Thread counts above the device count clamp instead of erroring.
+#[test]
+fn sim_threads_clamp_to_device_count() {
+    let serial = run_churn(&churn_cfg(1), &CompatMatrix::new()).unwrap();
+    let oversubscribed = run_churn(&churn_cfg(16), &CompatMatrix::new()).unwrap();
+    assert_eq!(serial.summary(), oversubscribed.summary());
+}

@@ -1,20 +1,27 @@
 #!/usr/bin/env python3
-"""Validate BENCH_sched.json (the scheduler hot-path perf trajectory).
+"""Validate the perf-trajectory artifacts: BENCH_sched.json (scheduler
+hot path) and BENCH_sim.json (simulator event core).
 
-Checks, in order:
+Checks, per artifact:
 
 1. shape — version, suite id, non-empty case list, required numeric
    fields per case (name, iters, mean_ns, median_ns, p95_ns, min_ns);
-2. the headline gate is present: case ``best_prio_fit/select_n512``
-   declaring ``budget_ns`` ≤ 1000 (a BestPrioFit decision at 512 queued
-   requests must stay ≤ 1 µs mean — DESIGN.md §Perf);
+2. the headline gate is present:
+   * BENCH_sched.json — case ``best_prio_fit/select_n512`` declaring
+     ``budget_ns`` ≤ 1000 (a BestPrioFit decision at 512 queued requests
+     must stay ≤ 1 µs mean — DESIGN.md §Perf);
+   * BENCH_sim.json — case ``sim/events_per_sec`` declaring
+     ``budget_events_per_sec`` ≥ 500000 and meeting it (a full
+     deterministic run must sustain ≥ 500 k events/s through the
+     calendar-wheel event core — ADR-003);
 3. budgets — every case that declares ``budget_ns`` has
-   ``mean_ns`` ≤ ``budget_ns``.
+   ``mean_ns`` ≤ ``budget_ns``; every case that declares
+   ``budget_events_per_sec`` has ``events_per_sec`` ≥ the floor.
 
 Exit 0 on success, 1 on any failure. A missing artifact is a SKIP
-(exit 0) because the offline container has no Rust toolchain to produce
-it; the single regeneration command is printed so CI (or any box with
-cargo) can produce and gate it:
+(exit 0 for that artifact) because the offline container has no Rust
+toolchain to produce it; the single regeneration command is printed so
+CI (or any box with cargo) can produce and gate both:
 
     cargo run --manifest-path rust/Cargo.toml --release -- bench --json
 """
@@ -26,67 +33,101 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-BENCH = REPO / "BENCH_sched.json"
 
 REQUIRED_CASE_FIELDS = ("name", "iters", "mean_ns", "median_ns", "p95_ns", "min_ns")
-HEADLINE_CASE = "best_prio_fit/select_n512"
-HEADLINE_BUDGET_NS = 1000
 EXPECTED_VERSION = 1  # keep in lockstep with rust/src/benchsuite.rs
 
+SCHED_HEADLINE = "best_prio_fit/select_n512"
+SCHED_HEADLINE_BUDGET_NS = 1000
+SIM_HEADLINE = "sim/events_per_sec"
+SIM_HEADLINE_FLOOR = 500_000
 
-def fail(msg: str) -> "int":
-    print(f"check_bench: FAIL: {msg}")
+REGEN = "  cargo run --manifest-path rust/Cargo.toml --release -- bench --json"
+
+
+def fail(artifact: str, msg: str) -> int:
+    print(f"check_bench: FAIL: {artifact}: {msg}")
     return 1
 
 
-def main() -> int:
-    if not BENCH.exists():
+def check_artifact(path: Path, suite: str) -> int:
+    """Shared shape + budget validation. Returns 0/1; SKIP counts as 0."""
+    if not path.exists():
         print(
-            "check_bench: SKIP: BENCH_sched.json not found (no cargo in this "
-            "container). Regenerate with:\n"
-            "  cargo run --manifest-path rust/Cargo.toml --release -- bench --json"
+            f"check_bench: SKIP: {path.name} not found (no cargo in this "
+            f"container). Regenerate with:\n{REGEN}"
         )
         return 0
 
     try:
-        doc = json.loads(BENCH.read_text())
+        doc = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
-        return fail(f"unreadable JSON: {e}")
+        return fail(path.name, f"unreadable JSON: {e}")
 
     if doc.get("version") != EXPECTED_VERSION:
-        return fail(f"version {doc.get('version')!r} != {EXPECTED_VERSION}")
-    if doc.get("suite") != "scheduler_hotpath":
-        return fail(f"unexpected suite {doc.get('suite')!r}")
+        return fail(path.name, f"version {doc.get('version')!r} != {EXPECTED_VERSION}")
+    if doc.get("suite") != suite:
+        return fail(path.name, f"unexpected suite {doc.get('suite')!r} (want {suite!r})")
     cases = doc.get("cases")
     if not isinstance(cases, list) or not cases:
-        return fail("cases must be a non-empty list")
+        return fail(path.name, "cases must be a non-empty list")
 
     names = set()
     for i, case in enumerate(cases):
         if not isinstance(case, dict):
-            return fail(f"case {i} is not an object")
+            return fail(path.name, f"case {i} is not an object")
         for field in REQUIRED_CASE_FIELDS:
             if field not in case:
-                return fail(f"case {i} missing field {field!r}")
+                return fail(path.name, f"case {i} missing field {field!r}")
         for field in REQUIRED_CASE_FIELDS[1:]:
             v = case[field]
             if not isinstance(v, int) or isinstance(v, bool) or v < 0:
-                return fail(f"case {case['name']!r}: {field} must be a non-negative int")
+                return fail(
+                    path.name, f"case {case['name']!r}: {field} must be a non-negative int"
+                )
         if case["name"] in names:
-            return fail(f"duplicate case name {case['name']!r}")
+            return fail(path.name, f"duplicate case name {case['name']!r}")
         names.add(case["name"])
-        budget = case.get("budget_ns")
-        if budget is not None and (not isinstance(budget, int) or budget <= 0):
-            return fail(f"case {case['name']!r}: bad budget_ns {budget!r}")
+        for gate in ("budget_ns", "budget_events_per_sec", "events_per_sec"):
+            v = case.get(gate)
+            if v is not None and (not isinstance(v, int) or isinstance(v, bool) or v <= 0):
+                return fail(path.name, f"case {case['name']!r}: bad {gate} {v!r}")
 
     by_name = {c["name"]: c for c in cases}
-    headline = by_name.get(HEADLINE_CASE)
-    if headline is None:
-        return fail(f"required case {HEADLINE_CASE!r} missing")
-    if headline.get("budget_ns") is None or headline["budget_ns"] > HEADLINE_BUDGET_NS:
-        return fail(
-            f"{HEADLINE_CASE!r} must declare budget_ns <= {HEADLINE_BUDGET_NS} "
-            f"(got {headline.get('budget_ns')!r})"
+
+    if suite == "scheduler_hotpath":
+        headline = by_name.get(SCHED_HEADLINE)
+        if headline is None:
+            return fail(path.name, f"required case {SCHED_HEADLINE!r} missing")
+        if (
+            headline.get("budget_ns") is None
+            or headline["budget_ns"] > SCHED_HEADLINE_BUDGET_NS
+        ):
+            return fail(
+                path.name,
+                f"{SCHED_HEADLINE!r} must declare budget_ns <= "
+                f"{SCHED_HEADLINE_BUDGET_NS} (got {headline.get('budget_ns')!r})",
+            )
+        headline_desc = (
+            f"{SCHED_HEADLINE} mean {headline['mean_ns']}ns "
+            f"(budget {headline['budget_ns']}ns)"
+        )
+    else:
+        headline = by_name.get(SIM_HEADLINE)
+        if headline is None:
+            return fail(path.name, f"required case {SIM_HEADLINE!r} missing")
+        floor = headline.get("budget_events_per_sec")
+        if floor is None or floor < SIM_HEADLINE_FLOOR:
+            return fail(
+                path.name,
+                f"{SIM_HEADLINE!r} must declare budget_events_per_sec >= "
+                f"{SIM_HEADLINE_FLOOR} (got {floor!r})",
+            )
+        if headline.get("events_per_sec") is None:
+            return fail(path.name, f"{SIM_HEADLINE!r} missing events_per_sec")
+        headline_desc = (
+            f"{SIM_HEADLINE} {headline['events_per_sec']} events/s "
+            f"(floor {floor})"
         )
 
     violations = [
@@ -94,18 +135,35 @@ def main() -> int:
         for c in cases
         if c.get("budget_ns") is not None and c["mean_ns"] > c["budget_ns"]
     ]
+    violations += [
+        f"  {c['name']}: {c['events_per_sec']} events/s < floor "
+        f"{c['budget_events_per_sec']} events/s"
+        for c in cases
+        if c.get("budget_events_per_sec") is not None
+        and c.get("events_per_sec", 0) < c["budget_events_per_sec"]
+    ]
     if violations:
-        print("check_bench: FAIL: hot-path budget violations:")
+        print(f"check_bench: FAIL: {path.name}: budget violations:")
         print("\n".join(violations))
         return 1
 
-    gated = sum(1 for c in cases if c.get("budget_ns") is not None)
+    gated = sum(
+        1
+        for c in cases
+        if c.get("budget_ns") is not None or c.get("budget_events_per_sec") is not None
+    )
     print(
-        f"check_bench: OK: {len(cases)} cases, {gated} budget-gated, "
-        f"{HEADLINE_CASE} mean {headline['mean_ns']}ns "
-        f"(budget {headline['budget_ns']}ns)"
+        f"check_bench: OK: {path.name}: {len(cases)} cases, {gated} budget-gated, "
+        f"{headline_desc}"
     )
     return 0
+
+
+def main() -> int:
+    rc = 0
+    rc |= check_artifact(REPO / "BENCH_sched.json", "scheduler_hotpath")
+    rc |= check_artifact(REPO / "BENCH_sim.json", "sim_core")
+    return rc
 
 
 if __name__ == "__main__":
