@@ -231,6 +231,20 @@ impl FleetState {
         true
     }
 
+    /// Re-seat a service on a **known** device, bypassing policy — the
+    /// journal-recovery path (DESIGN.md §Daemon): a restarted daemon
+    /// restores each resident to the GPU recorded in its snapshot, not
+    /// wherever today's policy would put it. Returns `false` — with the
+    /// state unchanged — if `gpu` is out of range, full, or already
+    /// hosts service `id`.
+    pub fn admit_at(&mut self, gpu: usize, resident: Resident) -> bool {
+        if gpu >= self.gpus() || !self.has_room(gpu) || self.gpu_of(resident.id).is_some() {
+            return false;
+        }
+        self.insert(gpu, resident);
+        true
+    }
+
     /// Remove a departing service. Returns the GPU it occupied.
     pub fn evict(&mut self, id: u64) -> Option<usize> {
         let gpu = self.gpu_of(id)?;

@@ -1,0 +1,791 @@
+//! Write-ahead session journal: durable daemon sessions across restarts
+//! (DESIGN.md §Daemon, ADR-004).
+//!
+//! The daemon's registry, per-shard capacity accounting and open fill
+//! windows used to die with the process; a bounce violated exactly the
+//! QoS the scheduler exists to protect. This module makes every
+//! session-lifecycle mutation durable *before* it is acknowledged:
+//!
+//! * [`JournalRecord`] — one length-prefixed, CRC-32-checksummed record
+//!   per applied mutation: the decoded wire message plus the timestamp
+//!   it was processed at (`Apply`), and the placement decision of every
+//!   fresh admission (`Admit`). Replaying the records through the same
+//!   deterministic `handle` path reconstructs the registry, the shards'
+//!   queues/windows/maps, and the per-client retransmit-dedup state.
+//! * [`Journal`] — append-only file plus periodic snapshot + truncate
+//!   (the snapshot reuses the atomic tmp-write + rename idiom of
+//!   `profile/store.rs`), so the journal stays bounded. Records carry a
+//!   monotone LSN; a crash between snapshot rename and journal truncate
+//!   merely leaves already-snapshotted records behind, which replay
+//!   skips by LSN.
+//! * [`FaultPlan`] — scripted crash injection for the recovery tests:
+//!   die after record N, mid-append (torn tail), or between append and
+//!   apply. The recovery property suite (`tests/daemon_recovery.rs`)
+//!   drives every crash point and asserts the restarted daemon
+//!   converges to the uncrashed daemon's state.
+//!
+//! Torn-tail semantics (the crash-consistency contract): an append is a
+//! single sequential write, so process death leaves at most one
+//! *incomplete* frame at the end of the file — that prefix is truncated
+//! and the longest valid prefix replayed. A *complete* frame whose
+//! checksum or payload fails to decode is NOT a torn tail; it is
+//! mid-file corruption, and recovery fails loudly rather than silently
+//! replaying past it (ADR-004 §Recovery).
+
+use crate::core::{Error, Result, TaskKey};
+use crate::hook::protocol::ClientMsg;
+use crate::util::json::Json;
+use std::fs;
+use std::io::{Seek, SeekFrom, Write};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+
+/// Journal file name inside the `--journal` directory.
+pub const JOURNAL_FILE: &str = "journal.waj";
+/// Snapshot file name inside the `--journal` directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+/// Snapshot document format version.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Sanity cap on one record's payload. A length prefix beyond this is
+/// certainly corruption (session-lifecycle records are < 1 KiB), and
+/// failing loudly beats mis-classifying a corrupted length as a torn
+/// tail and silently dropping everything after it.
+pub const MAX_RECORD_LEN: usize = 1 << 20;
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE, reflected) — the checksum guarding each record.
+// ---------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32/IEEE of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------
+
+/// One durable session-lifecycle record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalRecord {
+    /// A wire message the daemon is about to apply (it passed decode and
+    /// the retransmit-dedup guards). Carries everything replay needs to
+    /// re-run the exact same deterministic `handle` path: the envelope
+    /// sequence, the sender address (rebuilds reply routing and dedup
+    /// state) and the timestamp the daemon processed it at (fill-window
+    /// arithmetic depends on `now`).
+    Apply {
+        lsn: u64,
+        now_ns: u64,
+        msg_seq: u64,
+        addr: SocketAddr,
+        msg: ClientMsg,
+    },
+    /// The placement decision of a fresh admission, appended after the
+    /// registry placed the service. Replay recomputes placement
+    /// deterministically from the `Apply` stream; this record lets it
+    /// *verify* convergence and fail loudly on divergence instead of
+    /// silently rebuilding a different fleet.
+    Admit {
+        lsn: u64,
+        task_key: TaskKey,
+        shard: usize,
+        service_id: u64,
+    },
+}
+
+impl JournalRecord {
+    /// Log sequence number — monotone across snapshots, so replay can
+    /// skip records already covered by a snapshot.
+    pub fn lsn(&self) -> u64 {
+        match self {
+            JournalRecord::Apply { lsn, .. } | JournalRecord::Admit { lsn, .. } => *lsn,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            JournalRecord::Apply {
+                lsn,
+                now_ns,
+                msg_seq,
+                addr,
+                msg,
+            } => Json::obj()
+                .set("kind", "apply")
+                .set("lsn", *lsn)
+                .set("now_ns", *now_ns)
+                .set("msg_seq", *msg_seq)
+                .set("addr", addr.to_string().as_str())
+                .set("msg", msg.to_json()),
+            JournalRecord::Admit {
+                lsn,
+                task_key,
+                shard,
+                service_id,
+            } => Json::obj()
+                .set("kind", "admit")
+                .set("lsn", *lsn)
+                .set("task_key", task_key.as_str())
+                .set("shard", *shard)
+                .set("service_id", *service_id),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<JournalRecord> {
+        match v.req_str("kind")? {
+            "apply" => Ok(JournalRecord::Apply {
+                lsn: v.req_u64("lsn")?,
+                now_ns: v.req_u64("now_ns")?,
+                msg_seq: v.req_u64("msg_seq")?,
+                addr: v
+                    .req_str("addr")?
+                    .parse()
+                    .map_err(|_| Error::Protocol("journal record has a bad addr".into()))?,
+                msg: ClientMsg::from_json(v.require("msg")?)?,
+            }),
+            "admit" => Ok(JournalRecord::Admit {
+                lsn: v.req_u64("lsn")?,
+                task_key: TaskKey::new(v.req_str("task_key")?),
+                shard: v.req_u64("shard")? as usize,
+                service_id: v.req_u64("service_id")?,
+            }),
+            other => Err(Error::Protocol(format!(
+                "unknown journal record kind {other:?}"
+            ))),
+        }
+    }
+
+    /// Frame: `[payload len: u32 LE][crc32(payload): u32 LE][payload]`.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.to_json().encode().into_bytes();
+        let mut out = Vec::with_capacity(payload.len() + 8);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+/// Result of scanning a journal file's bytes.
+#[derive(Debug)]
+pub struct ScanOutcome {
+    /// Every complete, checksum-valid record, in append order.
+    pub records: Vec<JournalRecord>,
+    /// Byte length of the valid prefix. Anything past it is a torn
+    /// (incomplete) final record and must be truncated before the file
+    /// is appended to again.
+    pub valid_len: u64,
+    /// Whether a torn tail was cut off.
+    pub torn: bool,
+}
+
+/// Decode a journal byte stream into the longest valid prefix of
+/// records. An incomplete frame at the end is a torn tail (truncated by
+/// the crash-consistency argument in the module docs); a *complete*
+/// frame with a bad checksum, a non-JSON payload or an insane length
+/// prefix is corruption and fails loudly.
+pub fn scan(bytes: &[u8]) -> Result<ScanOutcome> {
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    loop {
+        let rest = &bytes[off..];
+        if rest.is_empty() {
+            return Ok(ScanOutcome {
+                records,
+                valid_len: off as u64,
+                torn: false,
+            });
+        }
+        if rest.len() < 8 {
+            return Ok(ScanOutcome {
+                records,
+                valid_len: off as u64,
+                torn: true,
+            });
+        }
+        let len = u32::from_le_bytes(rest[0..4].try_into().expect("4 bytes")) as usize;
+        if len > MAX_RECORD_LEN {
+            return Err(Error::Invariant(format!(
+                "journal record at byte {off} claims {len} bytes (cap {MAX_RECORD_LEN}): \
+                 corrupted length prefix"
+            )));
+        }
+        if rest.len() < 8 + len {
+            return Ok(ScanOutcome {
+                records,
+                valid_len: off as u64,
+                torn: true,
+            });
+        }
+        let want = u32::from_le_bytes(rest[4..8].try_into().expect("4 bytes"));
+        let payload = &rest[8..8 + len];
+        if crc32(payload) != want {
+            return Err(Error::Invariant(format!(
+                "journal checksum mismatch at byte {off} (record {}): refusing to \
+                 replay past corruption",
+                records.len()
+            )));
+        }
+        let text = std::str::from_utf8(payload).map_err(|_| {
+            Error::Invariant(format!("journal record at byte {off} is not UTF-8"))
+        })?;
+        records.push(JournalRecord::from_json(&Json::parse(text)?)?);
+        off += 8 + len;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Crash injection
+// ---------------------------------------------------------------------
+
+/// Where a scripted crash kills the daemon (`tests/daemon_recovery.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Die after record `n` was appended, applied AND its replies routed
+    /// — a clean cut. Enforced by the test harness (it stops feeding),
+    /// not by the journal.
+    AfterProcess(u64),
+    /// Die after append `n` is fully durable but before the mutation is
+    /// applied. Replay applies it; the client's retransmit is then
+    /// absorbed by the rebuilt dedup state.
+    AfterAppend(u64),
+    /// Die mid-way through append `n`, leaving only the first `keep`
+    /// bytes of the frame on disk — the torn-tail case. Recovery
+    /// truncates the partial frame; the client's retransmit re-applies
+    /// the lost mutation.
+    MidAppend { record: u64, keep: usize },
+}
+
+/// A scripted crash plan, armed on a [`Journal`] by the test harness.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub point: CrashPoint,
+}
+
+impl FaultPlan {
+    pub fn new(point: CrashPoint) -> FaultPlan {
+        FaultPlan { point }
+    }
+}
+
+/// Outcome of one append.
+#[derive(Debug, Clone, Copy)]
+pub struct Appended {
+    /// An armed [`FaultPlan`] tripped: the daemon must treat itself as
+    /// dead and NOT apply the mutation this record announced.
+    pub crash_before_apply: bool,
+}
+
+// ---------------------------------------------------------------------
+// The journal
+// ---------------------------------------------------------------------
+
+/// Append/snapshot policy.
+#[derive(Debug, Clone)]
+pub struct JournalConfig {
+    /// `sync_data` after every append. Off by default: the journal then
+    /// survives process death (the kernel holds the pages) but not
+    /// machine power loss — the right trade for a scheduler daemon whose
+    /// sessions are also bounded by client retry windows.
+    pub fsync: bool,
+    /// Write a snapshot and truncate the journal after this many
+    /// appended records (`0` = never snapshot).
+    pub snapshot_every: u64,
+}
+
+impl Default for JournalConfig {
+    fn default() -> JournalConfig {
+        JournalConfig {
+            fsync: false,
+            snapshot_every: 1024,
+        }
+    }
+}
+
+/// What [`Journal::open`] recovered from the directory.
+pub struct Recovered {
+    pub journal: Journal,
+    /// The snapshot document, if one was ever written:
+    /// `{version, last_lsn, now_ns, state}`.
+    pub snapshot: Option<Json>,
+    /// Journal records newer than the snapshot, in append order.
+    pub tail: Vec<JournalRecord>,
+    /// Whether a torn final record was truncated during recovery.
+    pub torn_tail: bool,
+}
+
+/// The write-ahead session journal: an append-only record file plus a
+/// periodically rewritten snapshot, both inside one directory.
+pub struct Journal {
+    dir: PathBuf,
+    file: fs::File,
+    cfg: JournalConfig,
+    next_lsn: u64,
+    last_lsn: u64,
+    since_snapshot: u64,
+    /// Appends performed by THIS process incarnation (the fault-plan
+    /// counter — crash points are scripted per incarnation).
+    appends: u64,
+    fault: Option<FaultPlan>,
+    tripped: bool,
+}
+
+impl Journal {
+    /// Open (creating if needed) the journal directory, recover the
+    /// snapshot + valid record tail, and truncate any torn final record
+    /// so future appends extend a valid prefix.
+    pub fn open(dir: impl AsRef<Path>, cfg: JournalConfig) -> Result<Recovered> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        let snapshot = match fs::read_to_string(&snap_path) {
+            Ok(text) => {
+                let doc = Json::parse(&text)?;
+                let version = doc.req_u64("version")?;
+                if version != SNAPSHOT_VERSION {
+                    return Err(Error::Config(format!(
+                        "journal snapshot version {version} unsupported \
+                         (expected {SNAPSHOT_VERSION})"
+                    )));
+                }
+                Some(doc)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(e.into()),
+        };
+        let snap_lsn = match &snapshot {
+            Some(doc) => doc.req_u64("last_lsn")?,
+            None => 0,
+        };
+        let jpath = dir.join(JOURNAL_FILE);
+        let bytes = match fs::read(&jpath) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+        let outcome = scan(&bytes)?;
+        let mut file = fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&jpath)?;
+        file.set_len(outcome.valid_len)?;
+        file.seek(SeekFrom::End(0))?;
+        let last_lsn = outcome
+            .records
+            .last()
+            .map(JournalRecord::lsn)
+            .unwrap_or(0)
+            .max(snap_lsn);
+        // A crash between snapshot rename and journal truncate leaves
+        // already-covered records in the file; skip them by LSN.
+        let tail: Vec<JournalRecord> = outcome
+            .records
+            .into_iter()
+            .filter(|r| r.lsn() > snap_lsn)
+            .collect();
+        let since_snapshot = tail.len() as u64;
+        Ok(Recovered {
+            journal: Journal {
+                dir,
+                file,
+                cfg,
+                next_lsn: last_lsn + 1,
+                last_lsn,
+                since_snapshot,
+                appends: 0,
+                fault: None,
+                tripped: false,
+            },
+            snapshot,
+            tail,
+            torn_tail: outcome.torn,
+        })
+    }
+
+    /// Allocate the next record's LSN.
+    pub fn alloc_lsn(&mut self) -> u64 {
+        let lsn = self.next_lsn;
+        self.next_lsn += 1;
+        self.last_lsn = lsn;
+        lsn
+    }
+
+    /// Highest LSN allocated so far.
+    pub fn last_lsn(&self) -> u64 {
+        self.last_lsn
+    }
+
+    /// Appends performed by this process incarnation.
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+
+    /// Arm a scripted crash (recovery tests only).
+    pub fn arm(&mut self, plan: FaultPlan) {
+        self.fault = Some(plan);
+    }
+
+    /// Whether an armed crash plan has tripped.
+    pub fn tripped(&self) -> bool {
+        self.tripped
+    }
+
+    /// Append one record. Returns whether an injected crash tripped —
+    /// in which case the caller must NOT apply the mutation (the
+    /// "process" is dead from this point on; further appends no-op).
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<Appended> {
+        if self.tripped {
+            return Ok(Appended {
+                crash_before_apply: true,
+            });
+        }
+        self.appends += 1;
+        let frame = rec.encode();
+        let (write_len, trip) = match self.fault {
+            Some(FaultPlan {
+                point: CrashPoint::AfterAppend(n),
+            }) if self.appends == n => (frame.len(), true),
+            Some(FaultPlan {
+                point: CrashPoint::MidAppend { record, keep },
+            }) if self.appends == record => (keep.min(frame.len()), true),
+            _ => (frame.len(), false),
+        };
+        self.file.write_all(&frame[..write_len])?;
+        if self.cfg.fsync {
+            self.file.sync_data()?;
+        }
+        if trip {
+            self.tripped = true;
+            return Ok(Appended {
+                crash_before_apply: true,
+            });
+        }
+        self.since_snapshot += 1;
+        Ok(Appended {
+            crash_before_apply: false,
+        })
+    }
+
+    /// Whether the snapshot cadence has been reached.
+    pub fn snapshot_due(&self) -> bool {
+        self.cfg.snapshot_every > 0 && self.since_snapshot >= self.cfg.snapshot_every
+    }
+
+    /// Atomically write a snapshot covering every record appended so far
+    /// (tmp-write + rename, the `profile/store.rs` idiom), then truncate
+    /// the journal. The snapshot stores `last_lsn` so a crash between
+    /// the rename and the truncate is harmless — replay skips the stale
+    /// records by LSN.
+    pub fn write_snapshot(&mut self, state: &Json, now_ns: u64) -> Result<()> {
+        let doc = Json::obj()
+            .set("version", SNAPSHOT_VERSION)
+            .set("last_lsn", self.last_lsn)
+            .set("now_ns", now_ns)
+            .set("state", state.clone());
+        let path = self.dir.join(SNAPSHOT_FILE);
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, doc.encode_pretty())?;
+        fs::rename(&tmp, &path)?;
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.since_snapshot = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dim3, Duration, Priority, SimTime, TaskId};
+    use crate::util::rng::Rng;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    /// A randomized record (every variant and field shape reachable).
+    fn random_record(rng: &mut Rng, lsn: u64) -> JournalRecord {
+        let key = TaskKey::new(format!("svc-{}", rng.below(4)));
+        if rng.chance(0.15) {
+            return JournalRecord::Admit {
+                lsn,
+                task_key: key,
+                shard: rng.index(4),
+                service_id: rng.below(100),
+            };
+        }
+        let msg = match rng.below(7) {
+            0 => ClientMsg::Register {
+                task_key: key,
+                priority: Priority::from_index(rng.index(10)).unwrap(),
+                has_symbols: rng.chance(0.8),
+                model: if rng.chance(0.5) {
+                    Some("resnet50".to_string())
+                } else {
+                    None
+                },
+            },
+            1 => ClientMsg::TaskStart {
+                task_key: key,
+                task_id: TaskId(rng.below(8)),
+            },
+            2 => ClientMsg::Launch {
+                task_key: key,
+                task_id: TaskId(rng.below(8)),
+                kernel_name: format!("k{}", rng.below(6)),
+                grid: Dim3::x(1 + rng.below(64) as u32),
+                block: Dim3::x(32),
+                seq: rng.below(1000) as u32,
+                issued_at: SimTime(rng.below(1 << 40)),
+            },
+            3 => ClientMsg::Completion {
+                task_key: key,
+                task_id: TaskId(rng.below(8)),
+                seq: rng.below(1000) as u32,
+                exec: Duration::from_nanos(rng.below(1 << 30)),
+                finished_at: SimTime(rng.below(1 << 40)),
+            },
+            4 => ClientMsg::TaskEnd {
+                task_key: key,
+                task_id: TaskId(rng.below(8)),
+            },
+            5 => ClientMsg::Disconnect { task_key: key },
+            _ => ClientMsg::ReleaseQuery {
+                task_key: key,
+                seq: rng.below(1000) as u32,
+            },
+        };
+        JournalRecord::Apply {
+            lsn,
+            now_ns: rng.next_u64() >> 20,
+            msg_seq: rng.below(1 << 20),
+            addr: addr(1024 + rng.below(1000) as u16),
+            msg,
+        }
+    }
+
+    fn encode_all(records: &[JournalRecord]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for r in records {
+            bytes.extend_from_slice(&r.encode());
+        }
+        bytes
+    }
+
+    /// Satellite property 1: encode/decode round-trip over randomized
+    /// record sequences, across seeds.
+    #[test]
+    fn codec_round_trip_randomized_sequences() {
+        for seed in [1u64, 0xDEAD_BEEF, 0x5EED_5EED] {
+            let mut rng = Rng::new(seed);
+            let records: Vec<JournalRecord> = (0..64)
+                .map(|i| random_record(&mut rng, i + 1))
+                .collect();
+            let outcome = scan(&encode_all(&records)).unwrap();
+            assert!(!outcome.torn);
+            assert_eq!(outcome.records, records, "seed {seed:#x}");
+        }
+    }
+
+    /// Satellite property 2: truncating the stream at EVERY byte offset
+    /// recovers exactly the records fully contained in the prefix —
+    /// never an error, never a phantom record.
+    #[test]
+    fn torn_tail_truncation_at_every_byte_offset() {
+        let mut rng = Rng::new(42);
+        let records: Vec<JournalRecord> =
+            (0..8).map(|i| random_record(&mut rng, i + 1)).collect();
+        let frames: Vec<Vec<u8>> = records.iter().map(JournalRecord::encode).collect();
+        let bytes = encode_all(&records);
+        // Frame boundaries: records fully contained below each offset.
+        let mut boundaries = Vec::new();
+        let mut acc = 0usize;
+        for f in &frames {
+            acc += f.len();
+            boundaries.push(acc);
+        }
+        for cut in 0..=bytes.len() {
+            let outcome = scan(&bytes[..cut])
+                .unwrap_or_else(|e| panic!("cut at {cut} must not error: {e}"));
+            let complete = boundaries.iter().filter(|&&b| b <= cut).count();
+            assert_eq!(
+                outcome.records.len(),
+                complete,
+                "cut at byte {cut}: longest valid prefix"
+            );
+            assert_eq!(outcome.records[..], records[..complete]);
+            assert_eq!(outcome.valid_len as usize, boundaries[..complete].last().copied().unwrap_or(0));
+            assert_eq!(outcome.torn, cut != outcome.valid_len as usize);
+        }
+    }
+
+    /// Satellite property 3: a corrupted checksum mid-file fails loudly
+    /// instead of silently skipping — and so do a corrupted payload byte
+    /// and an insane length prefix.
+    #[test]
+    fn corrupted_checksum_mid_file_fails_loudly() {
+        let mut rng = Rng::new(7);
+        let records: Vec<JournalRecord> =
+            (0..5).map(|i| random_record(&mut rng, i + 1)).collect();
+        let first_len = records[0].encode().len();
+        let bytes = encode_all(&records);
+
+        // Flip one bit in record 1's stored CRC (mid-file).
+        let mut crc_bad = bytes.clone();
+        crc_bad[first_len + 4] ^= 0x01;
+        let err = scan(&crc_bad).unwrap_err();
+        assert!(
+            err.to_string().contains("checksum mismatch"),
+            "unexpected error: {err}"
+        );
+
+        // Flip one payload byte of record 1 (checksum catches it).
+        let mut payload_bad = bytes.clone();
+        payload_bad[first_len + 8] ^= 0x40;
+        assert!(scan(&payload_bad).is_err());
+
+        // Corrupt record 1's length prefix to an insane value.
+        let mut len_bad = bytes.clone();
+        len_bad[first_len..first_len + 4]
+            .copy_from_slice(&(u32::MAX).to_le_bytes());
+        let err = scan(&len_bad).unwrap_err();
+        assert!(
+            err.to_string().contains("length prefix"),
+            "unexpected error: {err}"
+        );
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fikit-journal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn open_append_reopen_replays_tail() {
+        let dir = temp_dir("reopen");
+        let mut rng = Rng::new(3);
+        let recovered = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert!(recovered.snapshot.is_none());
+        assert!(recovered.tail.is_empty());
+        let mut j = recovered.journal;
+        let mut written = Vec::new();
+        for _ in 0..6 {
+            let lsn = j.alloc_lsn();
+            let rec = random_record(&mut rng, lsn);
+            assert!(!j.append(&rec).unwrap().crash_before_apply);
+            written.push(rec);
+        }
+        drop(j);
+        let recovered = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert_eq!(recovered.tail, written);
+        assert!(!recovered.torn_tail);
+        assert_eq!(recovered.journal.last_lsn(), 6);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_truncates_journal_and_skips_covered_records() {
+        let dir = temp_dir("snap");
+        let mut rng = Rng::new(9);
+        let mut j = Journal::open(&dir, JournalConfig::default()).unwrap().journal;
+        for _ in 0..4 {
+            let lsn = j.alloc_lsn();
+            j.append(&random_record(&mut rng, lsn)).unwrap();
+        }
+        let state = Json::obj().set("probe", 1u64);
+        j.write_snapshot(&state, 777).unwrap();
+        // Post-snapshot records form the new tail.
+        let lsn = j.alloc_lsn();
+        let tail_rec = random_record(&mut rng, lsn);
+        j.append(&tail_rec).unwrap();
+        drop(j);
+
+        let recovered = Journal::open(&dir, JournalConfig::default()).unwrap();
+        let snap = recovered.snapshot.expect("snapshot written");
+        assert_eq!(snap.req_u64("last_lsn").unwrap(), 4);
+        assert_eq!(snap.req_u64("now_ns").unwrap(), 777);
+        assert_eq!(
+            snap.require("state").unwrap().req_u64("probe").unwrap(),
+            1
+        );
+        assert_eq!(recovered.tail, vec![tail_rec], "only post-snapshot records replay");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fault_plan_tears_and_trips() {
+        let dir = temp_dir("fault");
+        let mut rng = Rng::new(11);
+        let mut j = Journal::open(&dir, JournalConfig::default()).unwrap().journal;
+        j.arm(FaultPlan::new(CrashPoint::MidAppend { record: 2, keep: 5 }));
+        let r1 = random_record(&mut rng, j.alloc_lsn());
+        assert!(!j.append(&r1).unwrap().crash_before_apply);
+        let r2 = random_record(&mut rng, j.alloc_lsn());
+        assert!(j.append(&r2).unwrap().crash_before_apply, "torn append trips");
+        assert!(j.tripped());
+        // A dead journal swallows further appends without writing.
+        let r3 = random_record(&mut rng, 99);
+        assert!(j.append(&r3).unwrap().crash_before_apply);
+        drop(j);
+
+        let recovered = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert!(recovered.torn_tail, "5 bytes of record 2 were cut off");
+        assert_eq!(recovered.tail, vec![r1], "longest valid prefix recovered");
+        // The torn bytes were truncated: appending now yields a clean file.
+        let mut j = recovered.journal;
+        let r4 = random_record(&mut rng, j.alloc_lsn());
+        j.append(&r4).unwrap();
+        drop(j);
+        let recovered = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert!(!recovered.torn_tail);
+        assert_eq!(recovered.tail.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn after_append_crash_keeps_record_durable() {
+        let dir = temp_dir("afterappend");
+        let mut rng = Rng::new(13);
+        let mut j = Journal::open(&dir, JournalConfig::default()).unwrap().journal;
+        j.arm(FaultPlan::new(CrashPoint::AfterAppend(1)));
+        let r1 = random_record(&mut rng, j.alloc_lsn());
+        assert!(
+            j.append(&r1).unwrap().crash_before_apply,
+            "die between append and apply"
+        );
+        drop(j);
+        let recovered = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert!(!recovered.torn_tail);
+        assert_eq!(recovered.tail, vec![r1], "the record IS durable — replay applies it");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -19,20 +19,40 @@
 //! runs it over UDP (`fikit serve --devices N`), tests run it over the
 //! deterministic in-process [`crate::hook::transport::LossyNet`] to
 //! prove dropped-datagram recovery without real sockets.
+//!
+//! ## Durable sessions (ADR-004)
+//!
+//! With `fikit serve --journal <dir>` the daemon write-ahead journals
+//! every applied session-lifecycle message ([`journal`]) *before* the
+//! registry/shard mutation is acknowledged, and snapshots + truncates
+//! periodically. [`SchedulerDaemon::with_journal`] replays snapshot +
+//! tail on startup, reconstructing the registry, per-shard capacity
+//! accounting, open fill windows AND the per-client `msg_seq` dedup
+//! state — so clients reconnect through their ordinary retry loop and
+//! byte-identical retransmits that straddle the restart are still
+//! absorbed, not re-executed. Replay is deterministic because every
+//! record carries the wall-clock `now` the daemon processed it at and
+//! the whole `handle` path is a pure function of (message, now, state);
+//! `tests/daemon_recovery.rs` proves convergence from every scripted
+//! crash point.
 
+pub mod journal;
 pub mod registry;
 pub mod shard;
 
+pub use journal::{CrashPoint, FaultPlan, Journal, JournalConfig, JournalRecord};
 pub use registry::{Admission, ClientEntry, Registry};
 pub use shard::{ServerStats, Shard, ShardSizes};
 
 use crate::cluster::placement::PlacementPolicy;
 use crate::coordinator::fikit::DEFAULT_EPSILON;
-use crate::core::{Duration, Result, SimTime, TaskKey};
+use crate::core::{Duration, Error, Result, SimTime, TaskKey};
 use crate::hook::protocol::{ClientMsg, SchedulerMsg};
 use crate::hook::transport::ServerTransport;
 use crate::profile::ProfileStore;
+use crate::util::json::Json;
 use std::net::SocketAddr;
+use std::path::Path;
 use std::time::{Duration as StdDuration, Instant};
 
 /// Daemon configuration.
@@ -96,6 +116,20 @@ pub struct SchedulerDaemon {
     shards: Vec<Shard>,
     stats: DaemonStats,
     epoch: Instant,
+    /// Write-ahead session journal (ADR-004); `None` = ephemeral daemon.
+    journal: Option<Journal>,
+    /// True while startup replay re-runs journaled records through the
+    /// ordinary `handle_at` path — suppresses re-journaling and
+    /// snapshotting of what is already durable.
+    replaying: bool,
+    /// An injected [`FaultPlan`] tripped (or a journal write failed):
+    /// the daemon is fail-stop from here — it must not apply or
+    /// acknowledge anything it could not journal first.
+    crashed: bool,
+    /// Virtual-time offset: `now()` = `base_ns` + elapsed since process
+    /// start. Recovery sets it past every replayed timestamp so time
+    /// never runs backwards across a restart (no resurrected windows).
+    base_ns: u64,
 }
 
 impl SchedulerDaemon {
@@ -112,7 +146,43 @@ impl SchedulerDaemon {
             shards,
             stats: DaemonStats::default(),
             epoch: Instant::now(),
+            journal: None,
+            replaying: false,
+            crashed: false,
+            base_ns: 0,
         }
+    }
+
+    /// A durable daemon: open (or create) the session journal in `dir`,
+    /// restore the latest snapshot, replay the record tail through the
+    /// ordinary message path, and resume with virtual time strictly
+    /// after every replayed timestamp. The restored state includes each
+    /// client's `msg_seq` dedup baseline and cached replies, so
+    /// retransmits that straddle the restart are absorbed exactly as if
+    /// the daemon had never died (ADR-004).
+    pub fn with_journal(
+        cfg: DaemonConfig,
+        profiles: ProfileStore,
+        dir: impl AsRef<Path>,
+        jcfg: JournalConfig,
+    ) -> Result<SchedulerDaemon> {
+        let recovered = Journal::open(dir, jcfg)?;
+        let mut daemon = SchedulerDaemon::new(cfg, profiles);
+        let mut base_ns = 0u64;
+        if let Some(doc) = &recovered.snapshot {
+            base_ns = doc.req_u64("now_ns")?;
+            daemon.restore_state(doc.require("state")?)?;
+        }
+        daemon.journal = Some(recovered.journal);
+        daemon.replaying = true;
+        for rec in &recovered.tail {
+            let rec_ns = daemon.replay_record(rec)?;
+            base_ns = base_ns.max(rec_ns);
+        }
+        daemon.replaying = false;
+        daemon.base_ns = base_ns.saturating_add(1);
+        daemon.epoch = Instant::now();
+        Ok(daemon)
     }
 
     /// Wire/routing counters.
@@ -165,7 +235,24 @@ impl SchedulerDaemon {
     }
 
     fn now(&self) -> SimTime {
-        SimTime(self.epoch.elapsed().as_nanos() as u64)
+        SimTime(self.base_ns + self.epoch.elapsed().as_nanos() as u64)
+    }
+
+    /// Whether an injected fault (or journal write failure) has killed
+    /// this daemon — fail-stop: a crashed daemon applies nothing more.
+    pub fn crashed(&self) -> bool {
+        self.crashed
+    }
+
+    /// The session journal, if this daemon is durable.
+    pub fn journal(&self) -> Option<&Journal> {
+        self.journal.as_ref()
+    }
+
+    /// Mutable journal access (crash-injection tests arm [`FaultPlan`]s
+    /// through this).
+    pub fn journal_mut(&mut self) -> Option<&mut Journal> {
+        self.journal.as_mut()
     }
 
     /// Serve datagrams from `transport` until `deadline` elapses
@@ -178,9 +265,33 @@ impl SchedulerDaemon {
         deadline: Option<StdDuration>,
         exit_when_drained: bool,
     ) -> Result<()> {
+        self.serve_limited(transport, deadline, exit_when_drained, None)
+    }
+
+    /// [`SchedulerDaemon::serve`] with an optional datagram budget: stop
+    /// after handling `max_datagrams` frames. The restart tests use this
+    /// to cut a daemon off mid-traffic at a deterministic point; an
+    /// injected-fault "death" ([`SchedulerDaemon::crashed`]) also ends
+    /// the loop.
+    pub fn serve_limited<T: ServerTransport>(
+        &mut self,
+        transport: &T,
+        deadline: Option<StdDuration>,
+        exit_when_drained: bool,
+        max_datagrams: Option<u64>,
+    ) -> Result<()> {
         let start = Instant::now();
-        let mut had_clients = false;
+        // A journal-recovered daemon may begin life with live sessions:
+        // they count as "had clients" for drain-exit purposes.
+        let mut had_clients = !self.registry.is_empty();
+        let mut handled: u64 = 0;
         loop {
+            if self.crashed {
+                return Ok(());
+            }
+            if max_datagrams.is_some_and(|n| handled >= n) {
+                return Ok(());
+            }
             if let Some(d) = deadline {
                 if start.elapsed() >= d {
                     return Ok(());
@@ -191,6 +302,7 @@ impl SchedulerDaemon {
             }
             match transport.recv_from(StdDuration::from_millis(20))? {
                 Some((buf, addr)) => {
+                    handled += 1;
                     for (to, reply) in self.handle_datagram(&buf, addr) {
                         if let Ok(bytes) = reply.encode() {
                             transport.send_to(&bytes, to).ok();
@@ -232,6 +344,26 @@ impl SchedulerDaemon {
         msg: ClientMsg,
         addr: SocketAddr,
     ) -> Vec<(SocketAddr, SchedulerMsg)> {
+        let now = self.now();
+        self.handle_at(msg_seq, msg, addr, now)
+    }
+
+    /// [`SchedulerDaemon::handle`] at an explicit timestamp — the
+    /// journal-replay entry point (ADR-004): every journaled record
+    /// carries the `now` it was originally processed at, and replaying
+    /// through this exact path (same dedup checks, same shard calls,
+    /// same routing) is what makes recovery deterministic. Tests also
+    /// use it to drive the daemon on a synthetic clock.
+    pub fn handle_at(
+        &mut self,
+        msg_seq: u64,
+        msg: ClientMsg,
+        addr: SocketAddr,
+        now: SimTime,
+    ) -> Vec<(SocketAddr, SchedulerMsg)> {
+        if self.crashed {
+            return Vec::new(); // a dead process answers nothing
+        }
         let msg = match msg {
             ClientMsg::Register {
                 task_key,
@@ -239,41 +371,58 @@ impl SchedulerDaemon {
                 has_symbols,
                 model,
             } => {
-                return self.handle_register(msg_seq, task_key, priority, has_symbols, model, addr)
+                return self
+                    .handle_register(msg_seq, task_key, priority, has_symbols, model, addr, now)
             }
             other => other,
         };
 
         let key = msg.task_key().clone();
-        let Some(entry) = self.registry.get_mut(&key) else {
-            // Disconnect for an unknown service is already done — ack it
-            // so a client whose first Disconnect datagram was processed
-            // (but whose ack was dropped) converges on retransmit.
-            if matches!(msg, ClientMsg::Disconnect { .. }) {
-                return vec![(addr, SchedulerMsg::Ack { msg_seq })];
+        // Dedup / unknown-service guards, in a scope so the entry borrow
+        // ends before the journal append. Nothing in here mutates state,
+        // so none of it is journaled: replay never sees duplicates — the
+        // journal IS the post-dedup stream.
+        let (shard_idx, prio) = {
+            let Some(entry) = self.registry.get(&key) else {
+                // Disconnect for an unknown service is already done — ack
+                // it so a client whose first Disconnect datagram was
+                // processed (but whose ack was dropped) converges on
+                // retransmit.
+                if matches!(msg, ClientMsg::Disconnect { .. }) {
+                    return vec![(addr, SchedulerMsg::Ack { msg_seq })];
+                }
+                self.stats.unknown_service += 1;
+                return vec![(
+                    addr,
+                    SchedulerMsg::Error {
+                        message: format!("service {:?} is not registered", key.as_str()),
+                    },
+                )];
+            };
+            if msg_seq < entry.last_msg_seq {
+                self.stats.duplicates += 1;
+                return Vec::new(); // stale straggler
             }
-            self.stats.unknown_service += 1;
-            return vec![(
-                addr,
-                SchedulerMsg::Error {
-                    message: format!("service {:?} is not registered", key.as_str()),
-                },
-            )];
+            if msg_seq == entry.last_msg_seq {
+                // Retransmit: re-send what the original processing
+                // answered.
+                self.stats.duplicates += 1;
+                let to = entry.addr;
+                return entry.last_replies.iter().cloned().map(|m| (to, m)).collect();
+            }
+            (entry.shard, entry.priority)
         };
-        if msg_seq < entry.last_msg_seq {
-            self.stats.duplicates += 1;
-            return Vec::new(); // stale straggler
+        // Write-ahead point: the record must be durable before any
+        // mutation below executes or is acknowledged. An injected crash
+        // (or write failure) here means the message was never applied —
+        // the client retransmits and the restarted daemon processes it
+        // fresh (or replays it, if the append completed).
+        if !self.wal_apply(msg_seq, &msg, addr, now) {
+            return Vec::new();
         }
-        if msg_seq == entry.last_msg_seq {
-            // Retransmit: re-send what the original processing answered.
-            self.stats.duplicates += 1;
-            let to = entry.addr;
-            return entry.last_replies.iter().cloned().map(|m| (to, m)).collect();
-        }
+        let entry = self.registry.get_mut(&key).expect("presence checked above");
         entry.last_msg_seq = msg_seq;
         entry.addr = addr;
-        let (shard_idx, prio) = (entry.shard, entry.priority);
-        let now = self.now();
 
         let produced: Vec<SchedulerMsg> = match msg {
             ClientMsg::Register { .. } => unreachable!("handled above"),
@@ -361,7 +510,9 @@ impl SchedulerDaemon {
                 self.profiles.insert(p);
             }
         }
-        self.route(&key, msg_seq, addr, produced)
+        let out = self.route(&key, msg_seq, addr, produced);
+        self.maybe_snapshot(now);
+        out
     }
 
     /// The daemon's live profile store (loaded offline profiles plus
@@ -377,6 +528,7 @@ impl SchedulerDaemon {
         self.profiles.save(path)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn handle_register(
         &mut self,
         msg_seq: u64,
@@ -385,6 +537,7 @@ impl SchedulerDaemon {
         has_symbols: bool,
         model: Option<String>,
         addr: SocketAddr,
+        now: SimTime,
     ) -> Vec<(SocketAddr, SchedulerMsg)> {
         // Retransmit / straggler handling. From the SAME address, only a
         // Register with msg_seq > last is a genuine (in-session)
@@ -405,6 +558,17 @@ impl SchedulerDaemon {
                 return Vec::new(); // stale straggler
             }
         }
+        // Write-ahead point (post-dedup, like every journaled message):
+        // the Register must be durable before the registry mutates.
+        let wal_msg = ClientMsg::Register {
+            task_key: task_key.clone(),
+            priority,
+            has_symbols,
+            model: model.clone(),
+        };
+        if !self.wal_apply(msg_seq, &wal_msg, addr, now) {
+            return Vec::new();
+        }
         match self
             .registry
             .register(&task_key, priority, model.as_deref(), addr, msg_seq)
@@ -421,7 +585,27 @@ impl SchedulerDaemon {
                     },
                 )]
             }
-            Admission::Placed(shard) | Admission::Refreshed(shard) => {
+            admission @ (Admission::Placed(_) | Admission::Refreshed(_)) => {
+                let shard = match admission {
+                    Admission::Placed(s) | Admission::Refreshed(s) => s,
+                    Admission::Rejected => unreachable!("matched above"),
+                };
+                // A fresh placement also journals its decision (shard +
+                // service id), appended *after* the placement is known.
+                // Replay recomputes placement deterministically from the
+                // Apply record; the Admit record lets it verify
+                // convergence and fail loudly on divergence instead of
+                // silently rebuilding a different fleet.
+                if matches!(admission, Admission::Placed(_)) {
+                    let service_id = self
+                        .registry
+                        .get(&task_key)
+                        .expect("just placed")
+                        .service_id;
+                    if !self.wal_admit(&task_key, shard, service_id) {
+                        return Vec::new();
+                    }
+                }
                 self.shards[shard].stats_mut().registered += 1;
                 // Without exported symbols kernels cannot be identified —
                 // profiles would be meaningless (paper §3.2), so such
@@ -434,7 +618,9 @@ impl SchedulerDaemon {
                     task_key: task_key.clone(),
                     sharing_stage: sharing,
                 };
-                self.route(&task_key, msg_seq, addr, vec![reply])
+                let out = self.route(&task_key, msg_seq, addr, vec![reply]);
+                self.maybe_snapshot(now);
+                out
             }
         }
     }
@@ -490,6 +676,171 @@ impl SchedulerDaemon {
             }
         }
         out
+    }
+
+    /// Append an [`JournalRecord::Apply`] for a message that passed the
+    /// dedup guards and is about to mutate state. Returns whether the
+    /// caller may proceed: `false` means an injected crash (or a write
+    /// failure) killed the daemon and the mutation MUST NOT be applied —
+    /// an unjournaled mutation could never be replayed. No-op (true)
+    /// while replaying or when the daemon is ephemeral.
+    fn wal_apply(&mut self, msg_seq: u64, msg: &ClientMsg, addr: SocketAddr, now: SimTime) -> bool {
+        if self.replaying {
+            return true;
+        }
+        let Some(j) = self.journal.as_mut() else {
+            return true;
+        };
+        let rec = JournalRecord::Apply {
+            lsn: j.alloc_lsn(),
+            now_ns: now.nanos(),
+            msg_seq,
+            addr,
+            msg: msg.clone(),
+        };
+        match j.append(&rec) {
+            Ok(a) if !a.crash_before_apply => true,
+            _ => {
+                self.crashed = true;
+                false
+            }
+        }
+    }
+
+    /// Append an [`JournalRecord::Admit`] for a fresh placement (same
+    /// fail-stop contract as [`SchedulerDaemon::wal_apply`]).
+    fn wal_admit(&mut self, task_key: &TaskKey, shard: usize, service_id: u64) -> bool {
+        if self.replaying {
+            return true;
+        }
+        let Some(j) = self.journal.as_mut() else {
+            return true;
+        };
+        let rec = JournalRecord::Admit {
+            lsn: j.alloc_lsn(),
+            task_key: task_key.clone(),
+            shard,
+            service_id,
+        };
+        match j.append(&rec) {
+            Ok(a) if !a.crash_before_apply => true,
+            _ => {
+                self.crashed = true;
+                false
+            }
+        }
+    }
+
+    /// Write a snapshot + truncate the journal when the cadence is due.
+    /// Snapshot failure is deliberately non-fatal: the journal simply
+    /// keeps growing and the next cadence retries — durability is never
+    /// weaker than journal-only.
+    fn maybe_snapshot(&mut self, now: SimTime) {
+        if self.replaying || self.crashed {
+            return;
+        }
+        if !self.journal.as_ref().is_some_and(Journal::snapshot_due) {
+            return;
+        }
+        let state = self.state_json();
+        if let Some(j) = self.journal.as_mut() {
+            let _ = j.write_snapshot(&state, now.nanos());
+        }
+    }
+
+    /// Deterministic JSON image of the daemon's externally observable
+    /// state: registry (clients, dedup caches, fleet residency), every
+    /// shard (active sets, queues, windows, conservation counters) and
+    /// the live profile store. This is both the journal-snapshot body
+    /// and the convergence image the recovery property tests compare —
+    /// two daemons with equal `state_json` answer every future message
+    /// identically. Wire counters ([`DaemonStats`]) are deliberately
+    /// per-process and excluded: a restarted daemon legitimately sees
+    /// different duplicate/decode counts than one that never died.
+    pub fn state_json(&self) -> Json {
+        Json::obj()
+            .set("registry", self.registry.snapshot_json())
+            .set(
+                "shards",
+                Json::Arr(self.shards.iter().map(Shard::snapshot_json).collect()),
+            )
+            .set("profiles", self.profiles.to_json())
+    }
+
+    /// Restore registry, shards and profiles from a snapshot `state`
+    /// document (inverse of [`SchedulerDaemon::state_json`], onto the
+    /// freshly constructed daemon in [`SchedulerDaemon::with_journal`]).
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.registry = Registry::restore_snapshot(
+            state.require("registry")?,
+            self.cfg.devices,
+            self.cfg.capacity,
+            self.cfg.policy,
+        )?;
+        let shards = state.req_arr("shards")?;
+        if shards.len() != self.shards.len() {
+            return Err(Error::Config(format!(
+                "journal snapshot has {} shards but the daemon is configured \
+                 for {} devices",
+                shards.len(),
+                self.shards.len()
+            )));
+        }
+        for (shard, sj) in self.shards.iter_mut().zip(shards) {
+            shard.restore_snapshot(sj)?;
+        }
+        // Epoch precedence: journaled/snapshotted profile epochs must
+        // never be regressed by whatever store the daemon booted with
+        // (mirrors the refiner's never-regress restart contract).
+        self.profiles
+            .merge_newer(ProfileStore::from_json(state.require("profiles")?)?);
+        Ok(())
+    }
+
+    /// Re-run one journaled record through the ordinary message path.
+    /// Returns the record's timestamp (for the post-replay time base).
+    fn replay_record(&mut self, rec: &JournalRecord) -> Result<u64> {
+        match rec {
+            JournalRecord::Apply {
+                now_ns,
+                msg_seq,
+                addr,
+                msg,
+                ..
+            } => {
+                // Replies went to the wire before the crash (or were
+                // lost with it); either way the retry loop re-elicits
+                // them, so replay discards its output.
+                let _ = self.handle_at(*msg_seq, msg.clone(), *addr, SimTime(*now_ns));
+                Ok(*now_ns)
+            }
+            JournalRecord::Admit {
+                task_key,
+                shard,
+                service_id,
+                ..
+            } => {
+                // Placement convergence check: the replayed Register
+                // must have produced the journaled decision.
+                let entry = self.registry.get(task_key).ok_or_else(|| {
+                    Error::Invariant(format!(
+                        "replay divergence: journal admits {:?} but replay did not \
+                         register it",
+                        task_key.as_str()
+                    ))
+                })?;
+                if entry.shard != *shard || entry.service_id != *service_id {
+                    return Err(Error::Invariant(format!(
+                        "replay divergence for {:?}: journal admits shard {shard} \
+                         service {service_id}, replay placed shard {} service {}",
+                        task_key.as_str(),
+                        entry.shard,
+                        entry.service_id
+                    )));
+                }
+                Ok(0)
+            }
+        }
     }
 }
 
@@ -1096,6 +1447,62 @@ mod tests {
         let p = d.profiles().get(&TaskKey::new("hi")).unwrap();
         assert_eq!(p.origin, crate::profile::ProfileOrigin::Measured);
         assert_eq!(p.epoch, 0);
+    }
+
+    /// Journal round trip (ADR-004): a journaled daemon driven through a
+    /// full register→hold→window→fill scenario, restarted cold from its
+    /// journal directory, reconstructs byte-identical observable state —
+    /// including the dedup cache, so a retransmit that straddles the
+    /// restart replays the cached reply instead of re-executing.
+    #[test]
+    fn journal_round_trip_restores_state_and_dedup() {
+        let dir = std::env::temp_dir().join(format!("fikit-wal-unit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let jcfg = JournalConfig {
+            fsync: false,
+            snapshot_every: 0,
+        };
+        let mut d = SchedulerDaemon::with_journal(
+            DaemonConfig::default(),
+            profiles(),
+            &dir,
+            jcfg.clone(),
+        )
+        .unwrap();
+        let t = SimTime;
+        d.handle_at(1, register("hi", Priority::P0), addr(9001), t(1_000));
+        d.handle_at(2, task_start("hi"), addr(9001), t(2_000));
+        d.handle_at(1, register("lo", Priority::P4), addr(9002), t(3_000));
+        d.handle_at(2, task_start("lo"), addr(9002), t(4_000));
+        d.handle_at(3, launch_msg("hi", "hk", 0), addr(9001), t(5_000));
+        let r = d.handle_at(3, launch_msg("lo", "lk", 0), addr(9002), t(6_000));
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }));
+        // Window opens mid-scenario and fills lo's parked launch — the
+        // restart happens with a still-open window and released seqs.
+        let r = d.handle_at(4, completion("hi", 0), addr(9001), t(7_000));
+        assert!(r
+            .iter()
+            .any(|(to, m)| matches!(m, SchedulerMsg::LaunchNow { .. }) && *to == addr(9002)));
+        assert!(d.shard(0).window_open());
+        let reference = d.state_json();
+        drop(d);
+
+        let mut d2 =
+            SchedulerDaemon::with_journal(DaemonConfig::default(), profiles(), &dir, jcfg)
+                .unwrap();
+        assert_eq!(d2.state_json(), reference, "replay reconstructs the image");
+        assert!(d2.shard(0).window_open(), "open fill window survived");
+        assert_eq!(d2.clients(), 2, "no admitted live session was lost");
+        // Dedup state survived: hi's msg_seq 4 retransmit is absorbed.
+        let launches = d2.shard_stats(0).launches;
+        let r = d2.handle(4, completion("hi", 0), addr(9001));
+        assert!(r.iter().any(|(_, m)| matches!(m, SchedulerMsg::Ack { .. })));
+        assert_eq!(d2.stats().duplicates, 1, "retransmit hit the rebuilt cache");
+        assert_eq!(d2.shard_stats(0).launches, launches, "no duplicate side effects");
+        // And fresh traffic still works at a time past every replayed one.
+        let r = d2.handle(5, launch_msg("hi", "hk", 1), addr(9001));
+        assert!(matches!(r[0].1, SchedulerMsg::LaunchNow { .. }));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -14,8 +14,9 @@
 
 use crate::cluster::compat::CompatMatrix;
 use crate::cluster::placement::{FleetState, PlacementPolicy, Resident};
-use crate::core::{Priority, TaskKey};
+use crate::core::{Error, Priority, Result, TaskKey};
 use crate::hook::protocol::SchedulerMsg;
+use crate::util::json::Json;
 use crate::workload::ModelKind;
 use std::collections::{HashMap, HashSet};
 use std::net::SocketAddr;
@@ -162,6 +163,146 @@ impl Registry {
         let entry = self.clients.remove(key)?;
         self.fleet.evict(entry.service_id);
         Some(entry.shard)
+    }
+
+    /// Deterministic JSON image of the client table and fleet residency —
+    /// the registry's part of the daemon's journal snapshot (ADR-004).
+    /// Clients and released-seq sets are sorted so identical state
+    /// encodes to identical bytes regardless of hash-map order; the
+    /// recovery tests compare these images directly.
+    pub fn snapshot_json(&self) -> Json {
+        let mut keys: Vec<&TaskKey> = self.clients.keys().collect();
+        keys.sort();
+        let clients: Vec<Json> = keys
+            .iter()
+            .map(|key| {
+                let e = &self.clients[*key];
+                let mut released: Vec<u32> = e.released.iter().copied().collect();
+                released.sort_unstable();
+                Json::obj()
+                    .set("task_key", key.as_str())
+                    .set("addr", e.addr.to_string().as_str())
+                    .set("priority", e.priority.to_string().as_str())
+                    .set("shard", e.shard)
+                    .set("service_id", e.service_id)
+                    .set("last_msg_seq", e.last_msg_seq)
+                    .set(
+                        "last_replies",
+                        Json::Arr(e.last_replies.iter().map(SchedulerMsg::to_json).collect()),
+                    )
+                    .set(
+                        "released",
+                        Json::Arr(released.into_iter().map(Json::from).collect()),
+                    )
+            })
+            .collect();
+        let fleet: Vec<Json> = (0..self.fleet.gpus())
+            .map(|gpu| {
+                Json::Arr(
+                    self.fleet
+                        .residents_on(gpu)
+                        .iter()
+                        .map(|r| {
+                            Json::obj()
+                                .set("id", r.id)
+                                .set("model", r.model.to_string().as_str())
+                                .set("priority", r.priority.to_string().as_str())
+                                .set("demand_ms", r.demand_ms)
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj()
+            .set("next_service_id", self.next_service_id)
+            .set("clients", Json::Arr(clients))
+            .set("fleet", Json::Arr(fleet))
+    }
+
+    /// Rebuild a registry from [`Registry::snapshot_json`] output.
+    /// Residents go back onto the exact GPUs the snapshot recorded (via
+    /// `FleetState::admit_at`, not today's policy), so a restarted daemon
+    /// rejects no previously admitted, still-live session and changes
+    /// nobody's device.
+    pub fn restore_snapshot(
+        v: &Json,
+        devices: usize,
+        capacity: usize,
+        policy: PlacementPolicy,
+    ) -> Result<Registry> {
+        let mut fleet = FleetState::new(devices, capacity);
+        let gpus = v.req_arr("fleet")?;
+        if gpus.len() > devices {
+            return Err(Error::Config(format!(
+                "journal snapshot spans {} devices but the daemon is configured \
+                 for {devices}",
+                gpus.len()
+            )));
+        }
+        for (gpu, residents) in gpus.iter().enumerate() {
+            for r in residents
+                .as_arr()
+                .ok_or_else(|| Error::Protocol("fleet gpu entry must be an array".into()))?
+            {
+                let resident = Resident {
+                    id: r.req_u64("id")?,
+                    model: r.req_str("model")?.parse()?,
+                    priority: r.req_str("priority")?.parse()?,
+                    demand_ms: r.req_f64("demand_ms")?,
+                };
+                let id = resident.id;
+                if !fleet.admit_at(gpu, resident) {
+                    return Err(Error::Invariant(format!(
+                        "snapshot restore could not re-seat service {id} on gpu {gpu}"
+                    )));
+                }
+            }
+        }
+        let mut clients = HashMap::new();
+        let mut next_service_id = v.req_u64("next_service_id")?;
+        for c in v.req_arr("clients")? {
+            let key = TaskKey::new(c.req_str("task_key")?);
+            let entry = ClientEntry {
+                addr: c
+                    .req_str("addr")?
+                    .parse()
+                    .map_err(|_| Error::Protocol("snapshot client has a bad addr".into()))?,
+                priority: c.req_str("priority")?.parse()?,
+                shard: c.req_u64("shard")? as usize,
+                service_id: c.req_u64("service_id")?,
+                last_msg_seq: c.req_u64("last_msg_seq")?,
+                last_replies: c
+                    .req_arr("last_replies")?
+                    .iter()
+                    .map(SchedulerMsg::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                released: c
+                    .req_arr("released")?
+                    .iter()
+                    .map(|s| {
+                        s.as_u64().and_then(|s| u32::try_from(s).ok()).ok_or_else(|| {
+                            Error::Protocol("released seq out of range".into())
+                        })
+                    })
+                    .collect::<Result<HashSet<u32>>>()?,
+            };
+            if entry.shard >= devices {
+                return Err(Error::Invariant(format!(
+                    "snapshot client {} sits on shard {} of {devices}",
+                    key.as_str(),
+                    entry.shard
+                )));
+            }
+            next_service_id = next_service_id.max(entry.service_id + 1);
+            clients.insert(key, entry);
+        }
+        Ok(Registry {
+            clients,
+            fleet,
+            policy,
+            compat: CompatMatrix::new(),
+            next_service_id,
+        })
     }
 }
 

@@ -24,10 +24,12 @@
 use crate::coordinator::fikit::{fikit_fill, FillWindow};
 use crate::coordinator::queues::PriorityQueues;
 use crate::core::{
-    Duration, Interner, KernelId, KernelLaunch, Priority, SimTime, TaskHandle, TaskId, TaskKey,
+    Duration, Error, Interner, KernelId, KernelLaunch, Priority, Result, SimTime, TaskHandle,
+    TaskId, TaskKey,
 };
 use crate::hook::protocol::SchedulerMsg;
 use crate::profile::{KeyedRefiner, OnlineConfig, ProfileStore, RefinerStats, TaskProfile};
+use crate::util::json::Json;
 use std::collections::HashMap;
 
 /// Counters exposed per shard (and summed fleet-wide by the daemon).
@@ -58,6 +60,37 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
+    /// Deterministic JSON image (journal snapshots, ADR-004).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("registered", self.registered)
+            .set("launches", self.launches)
+            .set("releases_immediate", self.releases_immediate)
+            .set("holds", self.holds)
+            .set("releases_filled", self.releases_filled)
+            .set("releases_drained", self.releases_drained)
+            .set("purged_launches", self.purged_launches)
+            .set("duplicate_task_starts", self.duplicate_task_starts)
+            .set("windows", self.windows)
+            .set("early_stops", self.early_stops)
+    }
+
+    /// Inverse of [`ServerStats::to_json`].
+    pub fn from_json(v: &Json) -> Result<ServerStats> {
+        Ok(ServerStats {
+            registered: v.req_u64("registered")?,
+            launches: v.req_u64("launches")?,
+            releases_immediate: v.req_u64("releases_immediate")?,
+            holds: v.req_u64("holds")?,
+            releases_filled: v.req_u64("releases_filled")?,
+            releases_drained: v.req_u64("releases_drained")?,
+            purged_launches: v.req_u64("purged_launches")?,
+            duplicate_task_starts: v.req_u64("duplicate_task_starts")?,
+            windows: v.req_u64("windows")?,
+            early_stops: v.req_u64("early_stops")?,
+        })
+    }
+
     /// Field-wise sum (fleet aggregation).
     pub fn add(&mut self, other: &ServerStats) {
         self.registered += other.registered;
@@ -399,5 +432,174 @@ impl Shard {
             });
         }
         out
+    }
+
+    /// Deterministic JSON image of this shard's scheduling state — its
+    /// part of the daemon's journal snapshot (ADR-004) and the state the
+    /// recovery tests compare. Hash-keyed collections are sorted; the
+    /// `active` set and the interner keep their *insertion/mint order*
+    /// (holder selection breaks priority ties by arrival order, and
+    /// handles are positional, so order IS state here). Deliberately
+    /// absent: ε (config, not state) and the refiner's in-flight
+    /// accumulators — only *published* profiles persist, so at most one
+    /// un-published refinement epoch of observations is lost per restart
+    /// (the documented ADR-004 trade).
+    pub fn snapshot_json(&self) -> Json {
+        let active: Vec<Json> = self
+            .active
+            .iter()
+            .map(|(k, p)| {
+                Json::obj()
+                    .set("task_key", k.as_str())
+                    .set("priority", p.to_string().as_str())
+            })
+            .collect();
+        let interned: Vec<Json> = (0..self.interner.task_count())
+            .map(|i| {
+                let key = self
+                    .interner
+                    .task(TaskHandle::from_index(i))
+                    .expect("dense handle space");
+                Json::from(key.as_str())
+            })
+            .collect();
+        let window = match &self.window {
+            None => Json::Null,
+            Some(w) => Json::obj()
+                .set(
+                    "holder",
+                    self.interner
+                        .task(w.holder)
+                        .expect("window holder is interned")
+                        .as_str(),
+                )
+                .set("opened_at_ns", w.opened_at.nanos())
+                .set("predicted_end_ns", w.predicted_end.nanos())
+                .set("budget_ns", w.budget.nanos())
+                .set("fills", w.fills),
+        };
+        let mut launched: Vec<(&TaskKey, u32, &KernelId)> = self
+            .launched_kernels
+            .iter()
+            .map(|((k, seq), kernel)| (k, *seq, kernel))
+            .collect();
+        launched.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let launched: Vec<Json> = launched
+            .into_iter()
+            .map(|(k, seq, kernel)| {
+                Json::obj()
+                    .set("task_key", k.as_str())
+                    .set("seq", seq)
+                    .set("kernel", kernel.canonical().as_str())
+            })
+            .collect();
+        let mut queued = Vec::new();
+        for p in Priority::ALL {
+            for req in self.queues.iter_at(p) {
+                queued.push(
+                    Json::obj()
+                        .set("task_key", req.launch.task_key.as_str())
+                        .set("task_id", req.launch.task_id.0)
+                        .set("kernel", req.launch.kernel.canonical().as_str())
+                        .set("priority", req.launch.priority.to_string().as_str())
+                        .set("seq", req.launch.seq)
+                        .set("issued_at_ns", req.launch.issued_at.nanos())
+                        .set("enqueued_at_ns", req.enqueued_at.nanos())
+                        .set(
+                            "predicted_ns",
+                            match req.predicted {
+                                Some(d) => Json::from(d.nanos()),
+                                None => Json::Null,
+                            },
+                        ),
+                );
+            }
+        }
+        Json::obj()
+            .set("active", Json::Arr(active))
+            .set("interned", Json::Arr(interned))
+            .set("window", window)
+            .set("launched", Json::Arr(launched))
+            .set("queued", Json::Arr(queued))
+            .set("stats", self.stats.to_json())
+    }
+
+    /// Rebuild scheduling state from [`Shard::snapshot_json`] output onto
+    /// a freshly constructed shard (ε and the online config come from the
+    /// daemon's own configuration, not the snapshot). Task keys are
+    /// re-interned in recorded mint order so restored handles are
+    /// positionally identical to the originals.
+    pub fn restore_snapshot(&mut self, v: &Json) -> Result<()> {
+        for key in v.req_arr("interned")? {
+            let key = key
+                .as_str()
+                .ok_or_else(|| Error::Protocol("interned entry must be a string".into()))?;
+            self.interner.intern_task(&TaskKey::new(key));
+        }
+        for entry in v.req_arr("active")? {
+            self.active.push((
+                TaskKey::new(entry.req_str("task_key")?),
+                entry.req_str("priority")?.parse()?,
+            ));
+        }
+        match v.require("window")? {
+            Json::Null => self.window = None,
+            w => {
+                let holder_key = TaskKey::new(w.req_str("holder")?);
+                let holder = self.interner.task_handle(&holder_key).ok_or_else(|| {
+                    Error::Invariant(format!(
+                        "snapshot window holder {:?} is not interned",
+                        holder_key.as_str()
+                    ))
+                })?;
+                self.window = Some(FillWindow {
+                    holder,
+                    opened_at: SimTime(w.req_u64("opened_at_ns")?),
+                    predicted_end: SimTime(w.req_u64("predicted_end_ns")?),
+                    budget: Duration::from_nanos(w.req_u64("budget_ns")?),
+                    fills: w.req_u64("fills")? as u32,
+                });
+            }
+        }
+        for entry in v.req_arr("launched")? {
+            let canonical = entry.req_str("kernel")?;
+            let kernel = KernelId::from_canonical(canonical).ok_or_else(|| {
+                Error::Protocol(format!("bad canonical kernel id {canonical:?}"))
+            })?;
+            self.launched_kernels.insert(
+                (
+                    TaskKey::new(entry.req_str("task_key")?),
+                    entry.req_u64("seq")? as u32,
+                ),
+                kernel,
+            );
+        }
+        for entry in v.req_arr("queued")? {
+            let canonical = entry.req_str("kernel")?;
+            let kernel = KernelId::from_canonical(canonical).ok_or_else(|| {
+                Error::Protocol(format!("bad canonical kernel id {canonical:?}"))
+            })?;
+            let launch = KernelLaunch {
+                task_handle: TaskHandle::UNBOUND,
+                kernel_handle: crate::core::KernelHandle::UNBOUND,
+                task_key: TaskKey::new(entry.req_str("task_key")?),
+                task_id: TaskId(entry.req_u64("task_id")?),
+                kernel,
+                priority: entry.req_str("priority")?.parse()?,
+                seq: entry.req_u64("seq")? as u32,
+                true_duration: Duration::ZERO,
+                issued_at: SimTime(entry.req_u64("issued_at_ns")?),
+            };
+            let predicted = match entry.require("predicted_ns")? {
+                Json::Null => None,
+                d => Some(Duration::from_nanos(d.as_u64().ok_or_else(|| {
+                    Error::Parse("predicted_ns is not a u64".into())
+                })?)),
+            };
+            let enqueued_at = SimTime(entry.req_u64("enqueued_at_ns")?);
+            self.queues.push_predicted(launch, predicted, enqueued_at);
+        }
+        self.stats = ServerStats::from_json(v.require("stats")?)?;
+        Ok(())
     }
 }

@@ -22,6 +22,15 @@
 //! * [`HookClient::wait_release`] polls with
 //!   [`ClientMsg::ReleaseQuery`] when the wait times out, recovering
 //!   releases whose datagram was dropped.
+//!
+//! The same retransmit discipline makes a *daemon restart* transparent
+//! when the daemon runs with a session journal (ADR-004, `fikit serve
+//! --journal DIR`): replay rebuilds the per-client dedup cache
+//! (`last_msg_seq` + cached replies), so a request retransmitted across
+//! the restart is answered from the cache exactly as a same-incarnation
+//! duplicate would be, and a mutation lost to a torn final journal
+//! record is simply re-applied when the retransmit arrives. The client
+//! needs no reconnect logic and cannot tell the restart happened.
 
 use super::protocol::{ClientMsg, SchedulerMsg};
 use super::transport::Transport;

@@ -170,7 +170,9 @@ const KIND_CLIENT: u8 = 0x01;
 const KIND_SCHED: u8 = 0x02;
 
 impl ClientMsg {
-    fn to_json(&self) -> Json {
+    /// JSON body (no envelope). `pub(crate)` so the daemon's session
+    /// journal can persist decoded messages verbatim (DESIGN.md §Daemon).
+    pub(crate) fn to_json(&self) -> Json {
         match self {
             ClientMsg::Register {
                 task_key,
@@ -236,7 +238,7 @@ impl ClientMsg {
         }
     }
 
-    fn from_json(v: &Json) -> Result<ClientMsg> {
+    pub(crate) fn from_json(v: &Json) -> Result<ClientMsg> {
         let key = || -> Result<TaskKey> { Ok(TaskKey::new(v.req_str("task_key")?)) };
         let tid = || -> Result<TaskId> { Ok(TaskId(v.req_u64("task_id")?)) };
         match v.req_str("type")? {
@@ -316,7 +318,9 @@ impl ClientMsg {
 }
 
 impl SchedulerMsg {
-    fn to_json(&self) -> Json {
+    /// JSON body (no envelope). `pub(crate)` so journal snapshots can
+    /// persist each client's cached replies for post-restart dedup.
+    pub(crate) fn to_json(&self) -> Json {
         match self {
             SchedulerMsg::Registered {
                 task_key,
@@ -352,7 +356,7 @@ impl SchedulerMsg {
         }
     }
 
-    fn from_json(v: &Json) -> Result<SchedulerMsg> {
+    pub(crate) fn from_json(v: &Json) -> Result<SchedulerMsg> {
         let key = || -> Result<TaskKey> { Ok(TaskKey::new(v.req_str("task_key")?)) };
         match v.req_str("type")? {
             "registered" => Ok(SchedulerMsg::Registered {

@@ -35,11 +35,13 @@ USAGE:
   fikit profile --model MODEL [--runs T] [--out profiles.json]
   fikit serve [--bind ADDR] [--profiles profiles.json] [--devices N]
               [--capacity C] [--placement bestmatch|leastloaded|roundrobin]
-              [--online] [--save-profiles PATH]
+              [--online] [--save-profiles PATH] [--journal DIR]
         one scheduling shard per device; services are routed to shards
         by the placement policy's capacity accounting; --online refines
         SK/SG from sharing-stage traffic and --save-profiles persists
-        the refined store periodically (every 30s)
+        the refined store periodically (every 30s); --journal write-ahead
+        journals session lifecycle into DIR and replays it on startup so
+        a restarted daemon keeps every admitted session (ADR-004)
   fikit cluster [--gpus N] [--policy bestmatch|leastloaded|roundrobin]
                 [--compat compat.json] [--measure-compat]
   fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
@@ -249,10 +251,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     cfg.online.enabled = args.flag("online");
+    cfg.journal = args.opt("journal").map(std::path::PathBuf::from);
     let save_path = args.opt("save-profiles").map(str::to_string);
     let policy = cfg.policy;
     let capacity = cfg.capacity;
     let online = cfg.online.enabled;
+    let journal = cfg.journal.clone();
     let mut server = SchedulerServer::bind(cfg, profiles)?;
     println!(
         "fikit scheduler daemon listening on {} ({} device shard(s), capacity {}/device, {:?} placement, online refinement {})",
@@ -262,6 +266,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy,
         if online { "on" } else { "off" },
     );
+    if let Some(dir) = &journal {
+        println!(
+            "session journal -> {} ({} live session(s) replayed)",
+            dir.display(),
+            server.daemon().clients(),
+        );
+    }
     match save_path {
         None => server.run_for(None),
         // A daemon is stopped by killing it (there is no clean-shutdown

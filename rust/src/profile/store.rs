@@ -64,27 +64,23 @@ impl ProfileStore {
         self.profiles.remove(key)
     }
 
-    /// Serialize every profile to a JSON file (atomic: write + rename).
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
+    /// The store's on-disk document as a JSON value (profiles sorted by
+    /// task key for deterministic bytes). [`ProfileStore::save`] writes
+    /// this to a file; the daemon's journal snapshots embed it directly
+    /// (ADR-004).
+    pub fn to_json(&self) -> Json {
         let mut profiles: Vec<&TaskProfile> = self.profiles.values().collect();
         profiles.sort_by(|a, b| a.task_key.cmp(&b.task_key));
-        let doc = Json::obj()
-            .set("version", STORE_VERSION)
-            .set(
-                "profiles",
-                Json::Arr(profiles.iter().map(|p| p.to_json()).collect()),
-            );
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, doc.encode_pretty())?;
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        Json::obj().set("version", STORE_VERSION).set(
+            "profiles",
+            Json::Arr(profiles.iter().map(|p| p.to_json()).collect()),
+        )
     }
 
-    /// Load a store previously written by [`ProfileStore::save`].
-    pub fn load(path: impl AsRef<Path>) -> Result<ProfileStore> {
-        let text = std::fs::read_to_string(path.as_ref())?;
-        let doc = Json::parse(&text)?;
+    /// Inverse of [`ProfileStore::to_json`], with the version gate every
+    /// load path shares: outside
+    /// `OLDEST_READABLE_VERSION..=STORE_VERSION` → `Error::Config`.
+    pub fn from_json(doc: &Json) -> Result<ProfileStore> {
         let version = doc.req_u64("version")?;
         if !(OLDEST_READABLE_VERSION..=STORE_VERSION).contains(&version) {
             return Err(Error::Config(format!(
@@ -97,6 +93,37 @@ impl ProfileStore {
             store.insert(TaskProfile::from_json(p)?);
         }
         Ok(store)
+    }
+
+    /// Serialize every profile to a JSON file (atomic: write + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().encode_pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a store previously written by [`ProfileStore::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<ProfileStore> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        ProfileStore::from_json(&Json::parse(&text)?)
+    }
+
+    /// Fold `other` into `self`, keeping the higher-`epoch` profile per
+    /// key (ties keep `self`). This is the snapshot-vs-journal precedence
+    /// rule of daemon recovery (ADR-004): a journaled epoch bump must
+    /// never be regressed by an older snapshot or startup file, mirroring
+    /// the refiner's own never-regress contract.
+    pub fn merge_newer(&mut self, other: ProfileStore) {
+        for (key, profile) in other.profiles {
+            match self.profiles.get(&key) {
+                Some(existing) if existing.epoch >= profile.epoch => {}
+                _ => {
+                    self.profiles.insert(key, profile);
+                }
+            }
+        }
     }
 }
 
@@ -209,8 +236,95 @@ mod tests {
         let dir = temp_dir("ver");
         let path = dir.join("profiles.json");
         std::fs::write(&path, r#"{"version": 99, "profiles": []}"#).unwrap();
+        let err = ProfileStore::load(&path).unwrap_err();
+        assert!(
+            matches!(err, Error::Config(_)),
+            "version 99 must be a Config error, got {err:?}"
+        );
+        assert!(
+            err.to_string().contains("99"),
+            "error names the offending version: {err}"
+        );
+        // Version 0 predates OLDEST_READABLE_VERSION: same gate.
+        std::fs::write(&path, r#"{"version": 0, "profiles": []}"#).unwrap();
+        assert!(matches!(ProfileStore::load(&path), Err(Error::Config(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Truncated / malformed JSON fails as a load error, never a panic
+    /// and never a silently empty store.
+    #[test]
+    fn truncated_json_fails_loudly() {
+        let dir = temp_dir("trunc");
+        let path = dir.join("profiles.json");
+        let mut full = ProfileStore::new();
+        full.insert(profile("svcA", 3));
+        full.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Cut the valid document at several byte offsets, including a
+        // mid-token cut and an empty file. (The document ends in `}\n`,
+        // so the shortest truncation that actually breaks it drops two
+        // bytes — the closing brace, not just the newline.)
+        for cut in [0, 1, text.len() / 2, text.len() - 2] {
+            std::fs::write(&path, &text[..cut]).unwrap();
+            let err = ProfileStore::load(&path).unwrap_err();
+            assert!(
+                matches!(err, Error::Parse(_)),
+                "cut at {cut} must be a Parse error, got {err:?}"
+            );
+        }
+        // Valid JSON missing the required keys is also loud.
+        std::fs::write(&path, r#"{"not_a_store": true}"#).unwrap();
         assert!(ProfileStore::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Snapshot-vs-journal epoch precedence: merging never regresses a
+    /// profile to an older epoch, whichever side is newer — the daemon
+    /// recovery contract (ADR-004), mirroring the shard-refiner restart
+    /// test in `daemon/mod.rs`.
+    #[test]
+    fn merge_newer_never_regresses_epochs() {
+        let mut loaded = ProfileStore::new();
+        let mut p = profile("svcA", 3);
+        p.epoch = 5;
+        loaded.insert(p);
+        let mut stale_only = profile("svcB", 2);
+        stale_only.epoch = 1;
+        loaded.insert(stale_only);
+
+        let mut journaled = ProfileStore::new();
+        let mut older = profile("svcA", 9);
+        older.epoch = 2;
+        journaled.insert(older);
+        let mut newer_b = profile("svcB", 4);
+        newer_b.epoch = 3;
+        journaled.insert(newer_b);
+        let fresh = profile("svcC", 1);
+        journaled.insert(fresh);
+
+        loaded.merge_newer(journaled);
+        assert_eq!(
+            loaded.get(&TaskKey::new("svcA")).unwrap().epoch,
+            5,
+            "older journaled epoch must not regress the loaded profile"
+        );
+        assert_eq!(loaded.get(&TaskKey::new("svcA")).unwrap().runs, 3);
+        assert_eq!(
+            loaded.get(&TaskKey::new("svcB")).unwrap().epoch,
+            3,
+            "newer journaled epoch wins"
+        );
+        assert_eq!(loaded.get(&TaskKey::new("svcB")).unwrap().runs, 4);
+        assert!(loaded.get(&TaskKey::new("svcC")).is_some(), "new keys merge in");
+
+        // Equal epochs keep the receiver (no churn on ties).
+        let mut tie = ProfileStore::new();
+        let mut t = profile("svcA", 100);
+        t.epoch = 5;
+        tie.insert(t);
+        loaded.merge_newer(tie);
+        assert_eq!(loaded.get(&TaskKey::new("svcA")).unwrap().runs, 3);
     }
 
     #[test]

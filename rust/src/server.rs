@@ -40,6 +40,11 @@ pub struct ServerConfig {
     /// Online sharing-stage profile refinement per shard (DESIGN.md §9;
     /// `fikit serve --online`).
     pub online: crate::profile::OnlineConfig,
+    /// Session-journal directory (`fikit serve --journal DIR`). When set,
+    /// every session-lifecycle mutation is write-ahead journaled there and
+    /// the daemon replays snapshot + tail on startup (ADR-004), so a
+    /// restart rejects no previously admitted still-live session.
+    pub journal: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -52,6 +57,7 @@ impl Default for ServerConfig {
             epsilon: DEFAULT_EPSILON,
             min_profile_runs: 1,
             online: crate::profile::OnlineConfig::default(),
+            journal: None,
         }
     }
 }
@@ -67,17 +73,23 @@ impl SchedulerServer {
     /// Bind the daemon.
     pub fn bind(cfg: ServerConfig, profiles: ProfileStore) -> Result<SchedulerServer> {
         let transport = UdpServerTransport::bind(&cfg.bind)?;
-        let daemon = SchedulerDaemon::new(
-            DaemonConfig {
-                devices: cfg.devices,
-                capacity: cfg.capacity,
-                policy: cfg.policy,
-                epsilon: cfg.epsilon,
-                min_profile_runs: cfg.min_profile_runs,
-                online: cfg.online.clone(),
-            },
-            profiles,
-        );
+        let dcfg = DaemonConfig {
+            devices: cfg.devices,
+            capacity: cfg.capacity,
+            policy: cfg.policy,
+            epsilon: cfg.epsilon,
+            min_profile_runs: cfg.min_profile_runs,
+            online: cfg.online.clone(),
+        };
+        let daemon = match &cfg.journal {
+            Some(dir) => SchedulerDaemon::with_journal(
+                dcfg,
+                profiles,
+                dir,
+                crate::daemon::JournalConfig::default(),
+            )?,
+            None => SchedulerDaemon::new(dcfg, profiles),
+        };
         Ok(SchedulerServer { daemon, transport })
     }
 

@@ -1,0 +1,494 @@
+//! Crash-consistent replay of the durable scheduler daemon (ADR-004).
+//!
+//! Every test here follows the same shape: generate a seeded message
+//! script, run it through an *unjournaled* daemon to get the reference
+//! state image (`SchedulerDaemon::state_json`), then run it through a
+//! journaled daemon that is killed at a scripted [`CrashPoint`],
+//! recovered from its journal directory, and fed the rest of the script
+//! the way real hook clients would (retransmitting the last in-flight
+//! request). The recovered daemon's final image must be byte-identical
+//! to the reference — for every crash point, including a torn final
+//! journal record, across multiple seeds.
+//!
+//! Times are synthetic and scripted (`SchedulerDaemon::handle_at`), so
+//! the runs are fully deterministic; online refinement stays off, as its
+//! in-flight accumulators are deliberately not journaled (ADR-004).
+
+use fikit::core::{Dim3, Duration, Priority, SimTime, TaskId, TaskKey};
+use fikit::daemon::{CrashPoint, DaemonConfig, FaultPlan, JournalConfig, SchedulerDaemon};
+use fikit::hook::protocol::{ClientMsg, SchedulerMsg};
+use fikit::profile::{ProfileStore, TaskProfile};
+use fikit::util::json::Json;
+use fikit::util::rng::Rng;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+
+const SEEDS: [u64; 3] = [1, 0xF1C1, 0x5EED_5EED];
+
+/// (task_key, priority, client port, kernel name) — the script's cast.
+const CLIENTS: [(&str, Priority, u16, &str); 3] = [
+    ("hi", Priority::P0, 9001, "hk"),
+    ("md", Priority::P2, 9002, "mk"),
+    ("lo", Priority::P4, 9003, "lk"),
+];
+
+fn addr(port: u16) -> SocketAddr {
+    format!("127.0.0.1:{port}").parse().unwrap()
+}
+
+fn kid(name: &str) -> fikit::core::KernelId {
+    fikit::core::KernelId::new(name, Dim3::x(8), Dim3::x(128))
+}
+
+fn profiles() -> ProfileStore {
+    let mut store = ProfileStore::new();
+    for (key, _, _, kernel) in CLIENTS {
+        let mut p = TaskProfile::new(TaskKey::new(key));
+        p.record(
+            &kid(kernel),
+            Duration::from_micros(300),
+            Some(Duration::from_micros(2_000)),
+        );
+        p.finish_run(1);
+        store.insert(p);
+    }
+    store
+}
+
+/// One scripted datagram: what a hook client would have sent, with the
+/// daemon-side processing time pinned so replay is comparable.
+#[derive(Clone)]
+struct Step {
+    msg_seq: u64,
+    msg: ClientMsg,
+    addr: SocketAddr,
+    now: SimTime,
+}
+
+/// Script builder: per-client `msg_seq` counters plus a synthetic clock
+/// ticking 150µs per datagram.
+struct ScriptState {
+    steps: Vec<Step>,
+    msg_seq: [u64; CLIENTS.len()],
+    now: u64,
+}
+
+impl ScriptState {
+    fn new() -> ScriptState {
+        ScriptState {
+            steps: Vec::new(),
+            msg_seq: [0; CLIENTS.len()],
+            now: 1_000_000,
+        }
+    }
+
+    /// The processing time the NEXT pushed step will carry — used as
+    /// `issued_at` / `finished_at` inside that step's message.
+    fn next_now(&self) -> SimTime {
+        SimTime(self.now + 150_000)
+    }
+
+    fn push(&mut self, c: usize, msg: ClientMsg) {
+        self.msg_seq[c] += 1;
+        self.now += 150_000;
+        self.steps.push(Step {
+            msg_seq: self.msg_seq[c],
+            msg,
+            addr: addr(CLIENTS[c].2),
+            now: SimTime(self.now),
+        });
+    }
+}
+
+/// Generate a seeded session script: every client registers and starts
+/// a task, then `events` random launch / completion / release-query /
+/// task-churn actions interleave across clients. The scheduling
+/// semantics of any individual interleaving are irrelevant here — what
+/// matters is that the daemon's response to the stream is deterministic,
+/// so replay must reproduce it exactly.
+fn script(seed: u64, events: usize) -> Vec<Step> {
+    let mut rng = Rng::new(seed);
+    let mut st = ScriptState::new();
+    let mut task_id = [0u64; CLIENTS.len()];
+    let mut kseq = [0u32; CLIENTS.len()];
+    // Kernel seqs launched but not yet completed, per client.
+    let mut outstanding: [Vec<u32>; CLIENTS.len()] = [Vec::new(), Vec::new(), Vec::new()];
+
+    for (c, (key, prio, _, _)) in CLIENTS.iter().enumerate() {
+        st.push(
+            c,
+            ClientMsg::Register {
+                task_key: TaskKey::new(key),
+                priority: *prio,
+                has_symbols: true,
+                model: None,
+            },
+        );
+        st.push(
+            c,
+            ClientMsg::TaskStart {
+                task_key: TaskKey::new(key),
+                task_id: TaskId(0),
+            },
+        );
+    }
+
+    for _ in 0..events {
+        let c = rng.index(CLIENTS.len());
+        let (key, _, _, kernel) = CLIENTS[c];
+        let key = TaskKey::new(key);
+        let roll = rng.below(10);
+        if roll < 5 {
+            // Launch the next kernel seq.
+            let seq = kseq[c];
+            kseq[c] += 1;
+            outstanding[c].push(seq);
+            let issued_at = st.next_now();
+            st.push(
+                c,
+                ClientMsg::Launch {
+                    task_key: key,
+                    task_id: TaskId(task_id[c]),
+                    kernel_name: kernel.to_string(),
+                    grid: Dim3::x(8),
+                    block: Dim3::x(128),
+                    seq,
+                    issued_at,
+                },
+            );
+        } else if roll < 8 && !outstanding[c].is_empty() {
+            // Complete the oldest outstanding launch.
+            let seq = outstanding[c].remove(0);
+            let finished_at = st.next_now();
+            st.push(
+                c,
+                ClientMsg::Completion {
+                    task_key: key,
+                    task_id: TaskId(task_id[c]),
+                    seq,
+                    exec: Duration::from_micros(200 + rng.below(400)),
+                    finished_at,
+                },
+            );
+        } else if roll < 9 && kseq[c] > 0 {
+            // Loss-recovery poll for some already-launched seq.
+            let seq = rng.below(kseq[c] as u64) as u32;
+            st.push(c, ClientMsg::ReleaseQuery { task_key: key, seq });
+        } else {
+            // Task churn: end the current task, start the next one.
+            st.push(
+                c,
+                ClientMsg::TaskEnd {
+                    task_key: key.clone(),
+                    task_id: TaskId(task_id[c]),
+                },
+            );
+            task_id[c] += 1;
+            outstanding[c].clear();
+            st.push(
+                c,
+                ClientMsg::TaskStart {
+                    task_key: key,
+                    task_id: TaskId(task_id[c]),
+                },
+            );
+        }
+    }
+    st.steps
+}
+
+/// The reference image: the script applied by a daemon with no journal.
+fn reference_state(steps: &[Step]) -> Json {
+    let mut d = SchedulerDaemon::new(DaemonConfig::default(), profiles());
+    for s in steps {
+        d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+    }
+    d.state_json()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "fikit-recovery-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn no_snapshots() -> JournalConfig {
+    JournalConfig {
+        fsync: false,
+        snapshot_every: 0,
+    }
+}
+
+fn journaled(dir: &PathBuf, jcfg: &JournalConfig) -> SchedulerDaemon {
+    SchedulerDaemon::with_journal(DaemonConfig::default(), profiles(), dir, jcfg.clone())
+        .expect("journal recovery must succeed")
+}
+
+/// Feed `steps` until an armed crash trips (or the script ends).
+/// Returns the index of the step being processed when the daemon died.
+fn feed_until_crash(d: &mut SchedulerDaemon, steps: &[Step]) -> Option<usize> {
+    for (i, s) in steps.iter().enumerate() {
+        d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+        if d.crashed() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Recover from `dir` and feed the remainder of the script the way real
+/// clients would: the step in flight at the crash is retransmitted
+/// (byte-identical, same `msg_seq`) and everything after it follows.
+/// `resume_from` points at the first step to (re)send.
+fn recover_and_resume(dir: &PathBuf, jcfg: &JournalConfig, steps: &[Step], resume_from: usize) -> Json {
+    let mut d = journaled(dir, jcfg);
+    assert!(!d.crashed(), "a recovered daemon starts alive");
+    for s in &steps[resume_from..] {
+        d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+        assert!(!d.crashed(), "no fault armed in the second incarnation");
+    }
+    d.state_json()
+}
+
+/// Baseline: journaling changes nothing observable, and a clean restart
+/// (no crash at all) reconstructs the exact image.
+#[test]
+fn journaled_run_matches_unjournaled_reference() {
+    for (i, seed) in SEEDS.into_iter().enumerate() {
+        let steps = script(seed, 20);
+        let reference = reference_state(&steps);
+        let dir = fresh_dir(&format!("clean-{i}"));
+
+        let mut d = journaled(&dir, &no_snapshots());
+        for s in &steps {
+            d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+        }
+        assert!(!d.crashed());
+        assert_eq!(d.state_json(), reference, "journaling is observation-free (seed {seed})");
+        let live = d.clients();
+        drop(d);
+
+        let d2 = journaled(&dir, &no_snapshots());
+        assert_eq!(d2.state_json(), reference, "clean restart replays the image (seed {seed})");
+        assert_eq!(d2.clients(), live, "every live session survived (seed {seed})");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Clean-cut kills ([`CrashPoint::AfterProcess`]): the process dies
+/// between datagrams, after step `k` was fully processed. For EVERY cut
+/// point the recovered daemon, re-fed from step `k` on (the client
+/// retransmits its last acknowledged request first, exercising the
+/// rebuilt dedup cache), converges to the reference image.
+#[test]
+fn clean_cut_crash_at_every_step_replays_deterministically() {
+    for (i, seed) in SEEDS.into_iter().enumerate() {
+        let steps = script(seed, 14);
+        let reference = reference_state(&steps);
+        for k in 1..=steps.len() {
+            let _ = CrashPoint::AfterProcess(k as u64); // harness-level cut
+            let dir = fresh_dir(&format!("cut-{i}-{k}"));
+            let mut d = journaled(&dir, &no_snapshots());
+            for s in &steps[..k] {
+                d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+            }
+            drop(d); // the "kill"
+            // Retransmit of step k-1 first: must be absorbed, not re-applied.
+            let state = recover_and_resume(&dir, &no_snapshots(), &steps, k - 1);
+            assert_eq!(
+                state, reference,
+                "seed {seed}: clean cut after step {k} must replay to the reference"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// [`CrashPoint::AfterAppend`]: the record is durable but the daemon
+/// dies before applying the mutation. Replay applies it; the client's
+/// retransmit is absorbed by the replay-rebuilt dedup state. Swept over
+/// every append the clean run performs (Apply AND Admit records).
+#[test]
+fn durable_append_crash_at_every_append() {
+    for (i, seed) in SEEDS.into_iter().enumerate() {
+        let steps = script(seed, 14);
+        let reference = reference_state(&steps);
+
+        // Discover how many appends a clean journaled run performs.
+        let dir = fresh_dir(&format!("aa-count-{i}"));
+        let mut d = journaled(&dir, &no_snapshots());
+        for s in &steps {
+            d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+        }
+        let total_appends = d.journal().unwrap().appends();
+        assert!(total_appends > steps.len() as u64 / 2, "script must journal");
+        drop(d);
+        std::fs::remove_dir_all(&dir).ok();
+
+        for n in 1..=total_appends {
+            let dir = fresh_dir(&format!("aa-{i}-{n}"));
+            let mut d = journaled(&dir, &no_snapshots());
+            d.journal_mut()
+                .unwrap()
+                .arm(FaultPlan::new(CrashPoint::AfterAppend(n)));
+            let crash_idx = feed_until_crash(&mut d, &steps)
+                .expect("every append index within the total must trip");
+            assert!(d.journal().unwrap().tripped());
+            drop(d);
+            let state = recover_and_resume(&dir, &no_snapshots(), &steps, crash_idx);
+            assert_eq!(
+                state, reference,
+                "seed {seed}: crash after durable append {n} must replay to the reference"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// [`CrashPoint::MidAppend`]: the process dies partway through the
+/// write, leaving a torn frame on disk — including the torn FINAL
+/// record when `record == total_appends`. Recovery truncates the torn
+/// tail and the client's retransmit re-applies the lost mutation.
+/// Swept over every append at three tear offsets (empty, 1 byte into
+/// the length prefix, and into the payload).
+#[test]
+fn torn_write_crash_at_every_append_replays_deterministically() {
+    for (i, seed) in SEEDS.into_iter().enumerate() {
+        let steps = script(seed, 10);
+        let reference = reference_state(&steps);
+
+        let dir = fresh_dir(&format!("ma-count-{i}"));
+        let mut d = journaled(&dir, &no_snapshots());
+        for s in &steps {
+            d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+        }
+        let total_appends = d.journal().unwrap().appends();
+        drop(d);
+        std::fs::remove_dir_all(&dir).ok();
+
+        for n in 1..=total_appends {
+            for keep in [0usize, 1, 9] {
+                let dir = fresh_dir(&format!("ma-{i}-{n}-{keep}"));
+                let mut d = journaled(&dir, &no_snapshots());
+                d.journal_mut()
+                    .unwrap()
+                    .arm(FaultPlan::new(CrashPoint::MidAppend { record: n, keep }));
+                let crash_idx = feed_until_crash(&mut d, &steps)
+                    .expect("every append index within the total must trip");
+                drop(d);
+                let state = recover_and_resume(&dir, &no_snapshots(), &steps, crash_idx);
+                assert_eq!(
+                    state, reference,
+                    "seed {seed}: torn append {n} (keep {keep}) must replay to the reference"
+                );
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+    }
+}
+
+/// The snapshot + truncate cycle composes with crash recovery: with an
+/// aggressive snapshot cadence the recovered image (snapshot + tail
+/// replay) still matches the reference at every clean cut point.
+#[test]
+fn snapshot_cadence_preserves_replay_determinism() {
+    let jcfg = JournalConfig {
+        fsync: false,
+        snapshot_every: 3,
+    };
+    for (i, seed) in SEEDS.into_iter().enumerate() {
+        let steps = script(seed, 14);
+        let reference = reference_state(&steps);
+        for k in 1..=steps.len() {
+            let dir = fresh_dir(&format!("snap-{i}-{k}"));
+            let mut d = journaled(&dir, &jcfg);
+            for s in &steps[..k] {
+                d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+            }
+            drop(d);
+            let state = recover_and_resume(&dir, &jcfg, &steps, k - 1);
+            assert_eq!(
+                state, reference,
+                "seed {seed}: snapshot cadence must not change the cut-{k} replay image"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// The acceptance property stated directly: after a restart, no
+/// previously admitted, still-live session is rejected — each one can
+/// keep sending traffic under its existing registration, while a
+/// session that disconnected before the crash stays gone.
+#[test]
+fn restarted_daemon_rejects_no_live_session() {
+    let dir = fresh_dir("live");
+    let mut d = journaled(&dir, &no_snapshots());
+    let steps = script(7, 12);
+    for s in &steps {
+        d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+    }
+    // One session leaves cleanly before the crash.
+    let next_seq = steps
+        .iter()
+        .filter(|s| s.addr == addr(CLIENTS[2].2))
+        .map(|s| s.msg_seq)
+        .max()
+        .unwrap()
+        + 1;
+    d.handle_at(
+        next_seq,
+        ClientMsg::Disconnect {
+            task_key: TaskKey::new("lo"),
+        },
+        addr(CLIENTS[2].2),
+        SimTime(900_000_000),
+    );
+    assert_eq!(d.clients(), 2);
+    drop(d); // kill
+
+    let mut d2 = journaled(&dir, &no_snapshots());
+    assert_eq!(d2.clients(), 2, "both live sessions survived the restart");
+    // Each live session keeps operating under its pre-crash registration.
+    for (c, (key, _, port, kernel)) in CLIENTS.iter().enumerate().take(2) {
+        let last_seq = steps
+            .iter()
+            .filter(|s| s.addr == addr(*port))
+            .map(|s| s.msg_seq)
+            .max()
+            .unwrap();
+        let last_task = steps
+            .iter()
+            .filter_map(|s| match &s.msg {
+                ClientMsg::TaskStart { task_id, .. } if s.addr == addr(*port) => Some(task_id.0),
+                _ => None,
+            })
+            .max()
+            .unwrap();
+        let replies = d2.handle_at(
+            last_seq + 1,
+            ClientMsg::Launch {
+                task_key: TaskKey::new(key),
+                task_id: TaskId(last_task),
+                kernel_name: kernel.to_string(),
+                grid: Dim3::x(8),
+                block: Dim3::x(128),
+                seq: 1_000 + c as u32,
+                issued_at: SimTime(901_000_000),
+            },
+            addr(*port),
+            SimTime(901_000_000),
+        );
+        assert!(
+            !replies.is_empty()
+                && replies
+                    .iter()
+                    .all(|(_, m)| !matches!(m, SchedulerMsg::Error { .. })),
+            "live session {key:?} must not be rejected after the restart"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -418,3 +418,124 @@ fn lossy_transport_converges_to_lossless_outcome() {
         "no daemon-side map grew across a full reconnect/traffic/drain cycle"
     );
 }
+
+/// Durable-daemon acceptance over a lossy fabric (ADR-004): a journaled
+/// daemon is killed abruptly mid-scenario (fixed datagram budget, no
+/// clean shutdown) and a second incarnation recovers from the same
+/// journal directory while the clients keep retransmitting into the
+/// restart gap. Both admitted sessions must survive the restart, the
+/// run must converge to the same complete release sequence as a
+/// lossless run, and the recovered daemon must satisfy the exact same
+/// conservation + zero-map-growth drain asserts as the single-process
+/// lossy run above.
+#[test]
+fn daemon_restart_under_loss_converges() {
+    use fikit::daemon::JournalConfig;
+
+    let dir = std::env::temp_dir().join(format!("fikit-udp-restart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let jcfg = JournalConfig {
+        fsync: false,
+        snapshot_every: 4, // exercise snapshot + truncate mid-run too
+    };
+
+    let net = LossyNet::new(0xD00D, 200);
+    let server_t = net.server_endpoint();
+    let dir_d = dir.clone();
+    let jcfg_d = jcfg.clone();
+    let daemon_thread = std::thread::spawn(move || {
+        // Incarnation 1: dies after a fixed datagram budget lands the
+        // cut mid-traffic — registrations done, kernels in flight.
+        let mut d1 = SchedulerDaemon::with_journal(
+            DaemonConfig::default(),
+            profiles(),
+            &dir_d,
+            jcfg_d.clone(),
+        )
+        .unwrap();
+        d1.serve_limited(&server_t, Some(StdDuration::from_secs(30)), false, Some(12))
+            .unwrap();
+        let admitted = d1.clients();
+        drop(d1); // the kill: no clean shutdown, sessions still live
+
+        // Incarnation 2: recover and finish the scenario.
+        let mut d2 = SchedulerDaemon::with_journal(
+            DaemonConfig::default(),
+            profiles(),
+            &dir_d,
+            jcfg_d,
+        )
+        .unwrap();
+        assert_eq!(
+            d2.clients(),
+            admitted,
+            "every session admitted before the kill survived the restart"
+        );
+        d2.serve(&server_t, Some(StdDuration::from_secs(30)), true)
+            .unwrap();
+        d2
+    });
+
+    let mk = |port: u16, key: &str, prio: Priority| {
+        let mut c = HookClient::new(
+            net.client_endpoint(port),
+            TaskKey::new(key),
+            prio,
+            SymbolResolver::new(SymbolTableModel::default()),
+        );
+        // Generous retry budget: retransmits must ride out both 20%
+        // loss AND the restart gap.
+        c.set_retry(StdDuration::from_millis(40), 50);
+        c
+    };
+    let mut hi = mk(9001, "hi", Priority::P0);
+    let mut lo = mk(9002, "lo", Priority::P4);
+    hi.register().unwrap();
+    lo.register().unwrap();
+
+    let hi_thread = std::thread::spawn(move || {
+        hi.task_start(TaskId(0)).unwrap();
+        let mut releases = Vec::new();
+        for seq in 0..KERNELS_PER_TASK {
+            match hi.intercept_launch(&kid("hk"), TaskId(0), seq, SimTime(0)).unwrap() {
+                LaunchDecision::LaunchNow => {}
+                LaunchDecision::Held => hi.wait_release(seq).unwrap(),
+            }
+            releases.push(seq);
+            hi.report_completion(TaskId(0), seq, Duration::from_micros(300), SimTime(1)).unwrap();
+        }
+        hi.task_end(TaskId(0)).unwrap();
+        let _ = hi.disconnect();
+        releases
+    });
+    let lo_thread = std::thread::spawn(move || {
+        lo.task_start(TaskId(0)).unwrap();
+        let mut releases = Vec::new();
+        for seq in 0..KERNELS_PER_TASK {
+            match lo.intercept_launch(&kid("lk"), TaskId(0), seq, SimTime(0)).unwrap() {
+                LaunchDecision::LaunchNow => {}
+                LaunchDecision::Held => lo.wait_release(seq).unwrap(),
+            }
+            releases.push(seq);
+        }
+        lo.task_end(TaskId(0)).unwrap();
+        let _ = lo.disconnect();
+        releases
+    });
+
+    let hi_releases = hi_thread.join().expect("hi client panicked");
+    let lo_releases = lo_thread.join().expect("lo client panicked");
+    let daemon = daemon_thread.join().expect("daemon panicked");
+
+    // Convergence: the restart changed nothing observable — both clients
+    // were granted the complete in-order release sequence.
+    let expected: Vec<u32> = (0..KERNELS_PER_TASK).collect();
+    assert_eq!(hi_releases, expected, "holder granted every seq across the restart");
+    assert_eq!(lo_releases, expected, "waiter granted every seq across the restart");
+
+    // The recovered daemon drains to the same conservation + map-size
+    // image as an unbroken run (stats are journal-reconstructed, so the
+    // cross-incarnation totals must balance exactly).
+    assert_drained(&daemon, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -182,6 +182,25 @@ def check_adr_links() -> list[str]:
                         f"rust/docs/{name}: mentions ADR-{ref} without linking "
                         f"its file (expected a [ADR-{ref}](ADR-{ref}-*.md) link)"
                     )
+    # The lowest-numbered ADR doubles as the decision index: every other
+    # ADR must be mentioned (and therefore, by the rule above, linked)
+    # from it, so a new ADR nobody wires into the index fails here.
+    if existing:
+        index_num = min(existing)
+        index_name = next(
+            name
+            for name in sorted(os.listdir(adr_dir))
+            if name.startswith(f"ADR-{index_num}-")
+        )
+        with open(os.path.join(adr_dir, index_name), encoding="utf-8") as f:
+            index_content = f.read()
+        index_refs = set(ADR_REF.findall(index_content))
+        for num in sorted(existing - {index_num} - index_refs):
+            errors.append(
+                f"rust/docs/{index_name}: the decision index never mentions "
+                f"ADR-{num} — add a link so new ADRs are discoverable from "
+                f"the first one"
+            )
     return errors
 
 
