@@ -1,0 +1,371 @@
+//! Fleet control plane: the node-local view of peer daemons.
+//!
+//! Every daemon in a federated fleet periodically emits a capacity/
+//! health beacon ([`crate::hook::PeerMsg::Beacon`], emitted by
+//! `daemon::beacon::Beaconer`); every daemon also folds the beacons it
+//! *receives* into a [`FleetView`]. The view answers the two control-
+//! plane questions admission needs (DESIGN.md §Fleet-federation):
+//!
+//! * **Is this peer alive?** — missed-beacon failure detection: a peer
+//!   is live while its newest beacon arrived within
+//!   `beacon_interval × miss_limit` of now, by the *receiver's* clock
+//!   (no cross-node clock agreement is assumed).
+//! * **Where should an over-capacity `Register` go?** —
+//!   [`FleetView::best_redirect`] picks the live, non-draining peer
+//!   with the most free slots (deterministic name tie-break); when no
+//!   such peer exists the daemon sheds with `RetryAfter` instead.
+//!
+//! Beacons ride a lossy fabric, so the fold is monotone: each peer
+//! carries a per-node beacon `seq`, and only a *newer* seq updates the
+//! entry (state **and** arrival time). Duplicated, reordered or delayed
+//! beacons are counted and dropped — they can never regress a peer's
+//! capacity picture or extend its liveness, so liveness cannot flap
+//! from fabric noise alone (ADR-005).
+
+use crate::core::{Duration, SimTime};
+use crate::hook::PeerMsg;
+use std::collections::BTreeMap;
+
+/// Control-plane tuning for one node.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Cadence of outgoing beacons (and the unit of failure detection).
+    pub beacon_interval: Duration,
+    /// Consecutive missed beacon intervals before a peer is declared
+    /// dead. 3 tolerates two in-flight losses at 20% drop with ~1%
+    /// false-positive odds per window (ADR-005 derives the number).
+    pub miss_limit: u32,
+    /// Back-off hint carried by `RetryAfter` shed replies.
+    pub retry_after_ms: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            beacon_interval: Duration::from_millis(100),
+            miss_limit: 3,
+            retry_after_ms: 250,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The liveness horizon: a peer whose newest beacon is older than
+    /// this is considered dead.
+    pub fn liveness_window(&self) -> Duration {
+        Duration::from_nanos(self.beacon_interval.nanos() * u64::from(self.miss_limit.max(1)))
+    }
+
+    /// Seq regression at or beyond this is a peer **restart**, not a
+    /// stale delivery. A restarted daemon's `Beaconer` counts from 1
+    /// again; without this rule its beacons would be dropped as stale
+    /// forever and the node could never rejoin the fleet (ADR-005).
+    /// Fabric reordering can only regress by however many beacons fit
+    /// in the delivery spread — a handful at most — so several whole
+    /// liveness windows' worth of beacons cleanly separates the cases.
+    pub fn restart_seq_gap(&self) -> u64 {
+        u64::from(4 * self.miss_limit.max(1))
+    }
+}
+
+/// Last-known state of one peer, as advertised by its newest beacon.
+#[derive(Debug, Clone)]
+pub struct PeerState {
+    pub node: String,
+    /// Newest beacon seq folded in; lower-or-equal seqs are stale.
+    pub last_seq: u64,
+    /// Receiver-local arrival time of that beacon (drives liveness).
+    pub last_seen: SimTime,
+    pub devices: u32,
+    pub capacity: u32,
+    pub residents: u32,
+    pub draining: bool,
+}
+
+impl PeerState {
+    /// Advertised free admission slots.
+    pub fn free_slots(&self) -> u32 {
+        (self.devices * self.capacity).saturating_sub(self.residents)
+    }
+}
+
+/// One node's eventually-consistent picture of its peers.
+#[derive(Debug)]
+pub struct FleetView {
+    cfg: FleetConfig,
+    peers: BTreeMap<String, PeerState>,
+    /// Duplicated / reordered / delayed beacons dropped by the seq
+    /// guard. Monotonically interesting: fabric noise, not errors.
+    stale_beacons: u64,
+    /// Peer restarts detected by the seq-regression rule
+    /// ([`FleetConfig::restart_seq_gap`]).
+    restarts_observed: u64,
+}
+
+impl FleetView {
+    pub fn new(cfg: FleetConfig) -> FleetView {
+        FleetView {
+            cfg,
+            peers: BTreeMap::new(),
+            stale_beacons: 0,
+            restarts_observed: 0,
+        }
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Fold one received beacon in at receiver-local time `now`.
+    /// Returns `false` (and counts) when the beacon is stale — a
+    /// duplicate or an older reordering of something already folded.
+    pub fn observe(&mut self, beacon: &PeerMsg, now: SimTime) -> bool {
+        let PeerMsg::Beacon {
+            node,
+            seq,
+            sent_at_ns: _,
+            devices,
+            capacity,
+            residents,
+            draining,
+        } = beacon;
+        if let Some(p) = self.peers.get_mut(node) {
+            if *seq <= p.last_seq {
+                // Small regressions are fabric noise; a regression of
+                // several liveness windows' worth of beacons means the
+                // peer restarted and its seq counter began again — fold
+                // it in or the node could never rejoin the fleet.
+                if p.last_seq - *seq < self.cfg.restart_seq_gap() {
+                    self.stale_beacons += 1;
+                    return false;
+                }
+                self.restarts_observed += 1;
+            }
+            p.last_seq = *seq;
+            p.last_seen = now;
+            p.devices = *devices;
+            p.capacity = *capacity;
+            p.residents = *residents;
+            p.draining = *draining;
+        } else {
+            self.peers.insert(
+                node.clone(),
+                PeerState {
+                    node: node.clone(),
+                    last_seq: *seq,
+                    last_seen: now,
+                    devices: *devices,
+                    capacity: *capacity,
+                    residents: *residents,
+                    draining: *draining,
+                },
+            );
+        }
+        true
+    }
+
+    /// Missed-beacon failure detection: seen recently enough?
+    pub fn is_alive(&self, node: &str, now: SimTime) -> bool {
+        self.peers
+            .get(node)
+            .is_some_and(|p| now.nanos().saturating_sub(p.last_seen.nanos())
+                <= self.cfg.liveness_window().nanos())
+    }
+
+    /// The live, non-draining peer with the most advertised free slots
+    /// (ties broken by node name, so two nodes rejecting the same burst
+    /// redirect deterministically). `None` → shed with `RetryAfter`.
+    pub fn best_redirect(&self, now: SimTime) -> Option<&str> {
+        self.peers
+            .values()
+            .filter(|p| !p.draining && p.free_slots() > 0 && self.is_alive(&p.node, now))
+            .max_by(|a, b| {
+                a.free_slots()
+                    .cmp(&b.free_slots())
+                    // BTreeMap iterates name-ascending; prefer the
+                    // *smaller* name on equal slots, so invert here
+                    // (max_by keeps the later of equal elements).
+                    .then_with(|| b.node.cmp(&a.node))
+            })
+            .map(|p| p.node.as_str())
+    }
+
+    pub fn peer(&self, node: &str) -> Option<&PeerState> {
+        self.peers.get(node)
+    }
+
+    pub fn live_peers(&self, now: SimTime) -> usize {
+        self.peers
+            .keys()
+            .filter(|n| self.is_alive(n, now))
+            .count()
+    }
+
+    pub fn stale_beacons(&self) -> u64 {
+        self.stale_beacons
+    }
+
+    /// Peer restarts detected (beacon seq regressed past the
+    /// [`FleetConfig::restart_seq_gap`] threshold).
+    pub fn restarts_observed(&self) -> u64 {
+        self.restarts_observed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn beacon(node: &str, seq: u64, residents: u32) -> PeerMsg {
+        PeerMsg::Beacon {
+            node: node.into(),
+            seq,
+            sent_at_ns: seq * 100,
+            devices: 1,
+            capacity: 4,
+            residents,
+            draining: false,
+        }
+    }
+
+    fn cfg() -> FleetConfig {
+        FleetConfig {
+            beacon_interval: Duration::from_millis(100),
+            miss_limit: 3,
+            retry_after_ms: 250,
+        }
+    }
+
+    #[test]
+    fn newer_beacon_updates_stale_is_dropped() {
+        let mut v = FleetView::new(cfg());
+        let t = |ms: u64| SimTime(ms * 1_000_000);
+        assert!(v.observe(&beacon("a", 1, 0), t(0)));
+        assert!(v.observe(&beacon("a", 2, 3), t(100)));
+        // Duplicate and reordered deliveries are dropped and cannot
+        // regress state or liveness.
+        assert!(!v.observe(&beacon("a", 2, 0), t(150)));
+        assert!(!v.observe(&beacon("a", 1, 0), t(200)));
+        assert_eq!(v.stale_beacons(), 2);
+        let p = v.peer("a").unwrap();
+        assert_eq!(p.residents, 3);
+        assert_eq!(p.last_seen, t(100));
+        assert_eq!(p.free_slots(), 1);
+    }
+
+    #[test]
+    fn liveness_uses_window_and_heals() {
+        let mut v = FleetView::new(cfg());
+        let t = |ms: u64| SimTime(ms * 1_000_000);
+        v.observe(&beacon("a", 1, 0), t(0));
+        assert!(v.is_alive("a", t(300))); // exactly at the window edge
+        assert!(!v.is_alive("a", t(301))); // one tick past → dead
+        assert_eq!(v.best_redirect(t(301)), None);
+        // Partition heals: one fresh beacon re-enters placement.
+        v.observe(&beacon("a", 2, 1), t(900));
+        assert!(v.is_alive("a", t(1000)));
+        assert_eq!(v.best_redirect(t(1000)), Some("a"));
+        assert!(!v.is_alive("never-seen", t(0)));
+    }
+
+    #[test]
+    fn best_redirect_prefers_free_slots_then_name() {
+        let mut v = FleetView::new(cfg());
+        let t = SimTime(0);
+        v.observe(&beacon("b", 1, 1), t); // 3 free
+        v.observe(&beacon("a", 1, 2), t); // 2 free
+        assert_eq!(v.best_redirect(t), Some("b"));
+        v.observe(&beacon("a", 2, 1), t); // tie at 3 free → name order
+        assert_eq!(v.best_redirect(t), Some("a"));
+        // Draining and full peers are never redirect targets.
+        v.observe(
+            &PeerMsg::Beacon {
+                node: "a".into(),
+                seq: 3,
+                sent_at_ns: 0,
+                devices: 1,
+                capacity: 4,
+                residents: 1,
+                draining: true,
+            },
+            t,
+        );
+        assert_eq!(v.best_redirect(t), Some("b"));
+        v.observe(&beacon("b", 2, 4), t); // full
+        assert_eq!(v.best_redirect(t), None);
+    }
+
+    /// Property sweep: any seeded interleaving of duplicated, reordered
+    /// and delayed (but within-window) deliveries of the same beacon
+    /// stream keeps the peer live throughout, converges to the newest
+    /// state, and never lets a stale delivery extend `last_seen`.
+    #[test]
+    fn fabric_noise_never_flaps_liveness() {
+        for seed in [1u64, 7, 42, 1234] {
+            let mut rng = Rng::new(seed);
+            let c = cfg();
+            let mut v = FleetView::new(c);
+            // Ground truth: beacon k emitted at k*interval, residents k%5.
+            let emit =
+                |k: u64| (beacon("a", k + 1, (k % 5) as u32), k * c.beacon_interval.nanos());
+            // Build a delivery schedule: every beacon delivered 1–3
+            // times, each copy delayed 0..half-a-window, then sort by
+            // delivery time (which reorders aggressively).
+            let mut deliveries: Vec<(u64, u64)> = Vec::new(); // (deliver_at, k)
+            for k in 0..40u64 {
+                let copies = 1 + rng.below(3);
+                for _ in 0..copies {
+                    let delay = rng.below(c.liveness_window().nanos() / 2);
+                    deliveries.push((emit(k).1 + delay, k));
+                }
+            }
+            deliveries.sort_unstable();
+            let mut newest_applied = 0u64;
+            for (at, k) in deliveries {
+                let (b, _) = emit(k);
+                let applied = v.observe(&b, SimTime(at));
+                assert_eq!(
+                    applied,
+                    k + 1 > newest_applied,
+                    "seed {seed}: seq guard must accept exactly the newer-seq deliveries"
+                );
+                newest_applied = newest_applied.max(k + 1);
+                // Once the stream has started, the peer stays live at
+                // every delivery instant: delays are < half a window and
+                // beacons keep arriving.
+                assert!(
+                    v.is_alive("a", SimTime(at)),
+                    "seed {seed}: liveness flapped at {at}ns"
+                );
+            }
+            assert_eq!(v.peer("a").unwrap().last_seq, 40);
+            assert_eq!(v.restarts_observed(), 0, "seed {seed}: noise is not a restart");
+        }
+    }
+
+    /// A restarted peer's beacon seq counts from 1 again; the large
+    /// regression is folded in as a restart (so the node rejoins the
+    /// fleet), while small regressions stay stale-dropped.
+    #[test]
+    fn restart_seq_regression_rejoins_peer() {
+        let mut v = FleetView::new(cfg()); // miss_limit 3 → gap 12
+        let t = |ms: u64| SimTime(ms * 1_000_000);
+        for seq in 1..=40u64 {
+            v.observe(&beacon("a", seq, 2), t(seq * 100));
+        }
+        // Node "a" dies and restarts: first beacon of the new
+        // incarnation regresses 40 → 1.
+        assert!(v.observe(&beacon("a", 1, 0), t(9_000)));
+        assert_eq!(v.restarts_observed(), 1);
+        let p = v.peer("a").unwrap();
+        assert_eq!((p.last_seq, p.residents), (1, 0));
+        assert!(v.is_alive("a", t(9_100)));
+        // The new incarnation's stream then advances normally...
+        assert!(v.observe(&beacon("a", 2, 1), t(9_100)));
+        // ...and small regressions are still fabric noise.
+        assert!(!v.observe(&beacon("a", 1, 0), t(9_150)));
+        assert_eq!(v.stale_beacons(), 1);
+        assert_eq!(v.restarts_observed(), 1);
+    }
+}

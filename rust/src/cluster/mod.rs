@@ -27,14 +27,22 @@
 //!   scripted), attach to per-GPU FIKIT coordinators mid-run, depart by
 //!   draining, and get reactively migrated when a device's trailing
 //!   high-priority slowdown exceeds the QoS bound.
+//! * [`control`] — the federation control plane (DESIGN.md
+//!   §Fleet-federation): [`FleetView`] folds peer capacity/health
+//!   beacons with missed-beacon failure detection and answers the
+//!   shed-vs-redirect question for over-capacity admissions;
+//!   [`sim::run_node_churn`] is its fault-injection harness (node
+//!   kill/restart/partition over the lossy fabric).
 
 pub mod compat;
+pub mod control;
 pub mod placement;
 pub mod sim;
 
 pub use compat::{CompatEntry, CompatMatrix};
+pub use control::{FleetConfig, FleetView, PeerState};
 pub use placement::{FleetState, Placement, PlacementPolicy, Resident, ServiceRequest};
 pub use sim::{
-    run_churn, run_cluster, ChurnConfig, ChurnReport, ChurnServiceOutcome, ClusterConfig,
-    ClusterReport, QosConfig,
+    run_churn, run_cluster, run_node_churn, ChurnConfig, ChurnReport, ChurnServiceOutcome,
+    ClusterConfig, ClusterReport, NodeChurnConfig, NodeChurnOutcome, NodeChurnReport, QosConfig,
 };

@@ -25,22 +25,27 @@
 //! counts because the merge order never depends on thread interleaving.
 
 use super::compat::CompatMatrix;
+use super::control::FleetConfig;
 use super::placement::{FleetState, Placement, PlacementPolicy, Resident, ServiceRequest};
 use crate::config::{ExperimentConfig, ServiceConfig};
 use crate::coordinator::driver::{
     profile_service_scratch, run_experiment_scratch, GpuSim, SimScratch,
 };
 use crate::coordinator::Mode;
-use crate::core::{Duration, Priority, Result, SimTime, TaskKey};
+use crate::core::{Dim3, Duration, Error, KernelId, Priority, Result, SimTime, TaskId, TaskKey};
+use crate::daemon::{DaemonConfig, JournalConfig, SchedulerDaemon};
+use crate::hook::client::{HookClient, LaunchDecision};
+use crate::hook::transport::{GatedTransport, LossyNet};
 use crate::metrics::fleet::is_high_priority;
 use crate::metrics::{FleetMetrics, FleetSample, JctStats, TextTable};
-use crate::profile::ProfileStore;
+use crate::profile::{ProfileStore, SymbolResolver, SymbolTableModel, TaskProfile};
 use crate::simulator::CalendarWheel;
 use crate::workload::{ArrivalProcess, InvocationPattern, ModelKind};
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration as StdDuration, Instant};
 
 /// Cluster experiment description (static batch run).
 #[derive(Debug, Clone)]
@@ -828,6 +833,488 @@ fn pick_victim(fleet: &FleetState, gpu: usize, compat: &CompatMatrix) -> Option<
         .map(|(id, _)| id)
 }
 
+// ---------------------------------------------------------------------
+// Node-failure churn: the federation fault-injection harness
+// ---------------------------------------------------------------------
+
+/// Scripted node-failure scenario over a **real** federated daemon fleet
+/// (DESIGN.md §Fleet-federation): N journaled `SchedulerDaemon`s, each on
+/// its own seeded [`LossyNet`] fabric, exchanging beacons over gated
+/// peer links, serving real [`HookClient`]s that follow redirects and
+/// fail over. Faults are injected mid-traffic: an abrupt **kill** (the
+/// daemon's process image vanishes; only its ADR-004 journal survives),
+/// an optional journal **restart**, and a **partition** (the node's
+/// whole fabric drops both directions, its outgoing beacon links are
+/// severed, then everything heals).
+///
+/// [`run_node_churn`] asserts the robustness invariants inline — every
+/// clean node conserves held launches and drains to zero sessions, and
+/// no client operation exceeds `max_op_bound` (bounded failover
+/// latency) — and returns the per-client outcomes for scenario-level
+/// assertions. Unlike [`run_churn`] this harness runs real threads over
+/// wall-clock time: outcomes are convergent, not bit-deterministic.
+#[derive(Debug, Clone)]
+pub struct NodeChurnConfig {
+    /// Root seed for the per-node lossy fabrics.
+    pub seed: u64,
+    /// Fleet size (≥ 2; every node knows every other node).
+    pub nodes: usize,
+    /// Device shards per node.
+    pub devices_per_node: usize,
+    /// Admission capacity per device.
+    pub capacity: usize,
+    /// Client sessions, assigned round-robin to home nodes; every
+    /// client holds failover endpoints on every node.
+    pub clients: usize,
+    /// Tasks per client session.
+    pub tasks_per_client: u32,
+    /// Kernel launches per task.
+    pub kernels_per_task: u32,
+    /// Datagram drop rate of every fabric, per mille.
+    pub drop_permille: u32,
+    /// Client-side think time after each kernel, to keep sessions
+    /// in flight when the faults land.
+    pub kernel_pace: StdDuration,
+    /// Node killed abruptly `kill_after` into the run.
+    pub kill_node: Option<usize>,
+    pub kill_after: StdDuration,
+    /// Restart the killed node from its journal this long after the
+    /// kill (`None` = it stays dead).
+    pub restart_after: Option<StdDuration>,
+    /// Node partitioned (fabric + beacon links cut both ways)
+    /// `partition_after` into the run, healed `partition_for` later.
+    pub partition_node: Option<usize>,
+    pub partition_after: StdDuration,
+    pub partition_for: StdDuration,
+    /// Control-plane cadence. The liveness window
+    /// (`beacon_interval × miss_limit`) must comfortably exceed the
+    /// serve-slice + recv-timeout jitter (~50 ms) or liveness flaps.
+    pub beacon_interval: Duration,
+    pub miss_limit: u32,
+    /// Hard bound on any single client operation, failover included.
+    pub max_op_bound: StdDuration,
+}
+
+impl NodeChurnConfig {
+    /// Baseline: 3 nodes, 6 clients, 20% loss, no faults scheduled.
+    pub fn new(seed: u64) -> NodeChurnConfig {
+        NodeChurnConfig {
+            seed,
+            nodes: 3,
+            devices_per_node: 1,
+            capacity: 3,
+            clients: 6,
+            tasks_per_client: 4,
+            kernels_per_task: 6,
+            drop_permille: 200,
+            kernel_pace: StdDuration::from_millis(10),
+            kill_node: None,
+            kill_after: StdDuration::from_millis(1_000),
+            restart_after: None,
+            partition_node: None,
+            partition_after: StdDuration::from_millis(500),
+            partition_for: StdDuration::from_millis(1_500),
+            beacon_interval: Duration::from_millis(25),
+            miss_limit: 8,
+            max_op_bound: StdDuration::from_secs(8),
+        }
+    }
+}
+
+/// How one client session ended. There is no silent third state: any
+/// other error fails the whole run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeChurnOutcome {
+    /// Every task ran to completion (possibly on a failover node).
+    Completed,
+    /// The session ended with an explicit shed reply (`RetryAfter`, or
+    /// a redirect chain the client could not resolve).
+    Shed,
+}
+
+/// Results of one [`run_node_churn`] scenario.
+#[derive(Debug)]
+pub struct NodeChurnReport {
+    /// Per-client outcome, indexed by client id.
+    pub outcomes: Vec<NodeChurnOutcome>,
+    pub completed: usize,
+    pub shed: usize,
+    /// Endpoint switches forced by unresponsive nodes, fleet-wide.
+    pub failovers: u64,
+    /// Longest single client operation observed (failover included).
+    pub max_op_latency: StdDuration,
+    /// Sessions the restarted node re-admitted from its journal.
+    pub rejoined_sessions: usize,
+    /// Peer restarts detected by clean survivors' fleet views.
+    pub restarts_observed: u64,
+    /// `Redirect` answers issued by daemons (clean nodes only).
+    pub redirects: u64,
+    /// `RetryAfter` shed answers issued by daemons (clean nodes only).
+    pub sheds: u64,
+    /// Each node's live-peer count at shutdown (`None` = node dead).
+    pub live_peers: Vec<Option<usize>>,
+    /// Datagrams dropped fleet-wide as `(client→daemon, daemon→client)`.
+    pub dropped: (u64, u64),
+}
+
+/// Orchestrator→node fault switchboard.
+#[derive(Default)]
+struct NodeCtl {
+    kill: AtomicBool,
+    restart: AtomicBool,
+    partition: AtomicBool,
+    stop: AtomicBool,
+}
+
+/// What one node thread hands back at shutdown.
+struct NodeEnd {
+    daemon: Option<SchedulerDaemon>,
+    rejoined: usize,
+    live_peers: Option<usize>,
+    /// Fault target (killed or partitioned): its sessions may have been
+    /// abandoned mid-flight, so drain/conservation asserts don't apply.
+    faulted: bool,
+}
+
+/// The synthetic kernel each client launches (matches its profile).
+fn churn_kernel(high: bool) -> KernelId {
+    KernelId::new(if high { "hk" } else { "lk" }, Dim3::x(8), Dim3::x(128))
+}
+
+/// Every client key gets a ready profile so sessions enter sharing
+/// stage: even clients are high-priority holders (long gaps → fill
+/// windows), odd ones low-priority fillers.
+fn churn_profiles(clients: usize) -> ProfileStore {
+    let mut store = ProfileStore::new();
+    for c in 0..clients {
+        let high = c % 2 == 0;
+        let mut p = TaskProfile::new(TaskKey::new(format!("svc{c}").as_str()));
+        p.record(
+            &churn_kernel(high),
+            Duration::from_micros(if high { 300 } else { 500 }),
+            Some(Duration::from_micros(if high { 5_000 } else { 30 })),
+        );
+        p.finish_run(1);
+        store.insert(p);
+    }
+    store
+}
+
+/// One node's serve loop: slices of real serving with the fault
+/// switchboard checked between slices.
+fn run_node(
+    i: usize,
+    cfg: &NodeChurnConfig,
+    nets: &[Arc<LossyNet>],
+    ctl: &NodeCtl,
+    dir: &std::path::Path,
+) -> Result<NodeEnd> {
+    let mk = || -> Result<(SchedulerDaemon, Vec<Arc<AtomicBool>>)> {
+        let dcfg = DaemonConfig {
+            devices: cfg.devices_per_node,
+            capacity: cfg.capacity,
+            node: Some(format!("n{i}")),
+            fleet: FleetConfig {
+                beacon_interval: cfg.beacon_interval,
+                miss_limit: cfg.miss_limit,
+                retry_after_ms: 100,
+            },
+            ..DaemonConfig::default()
+        };
+        let mut d = SchedulerDaemon::with_journal(
+            dcfg,
+            churn_profiles(cfg.clients),
+            dir,
+            JournalConfig {
+                fsync: false,
+                snapshot_every: 64,
+            },
+        )?;
+        let mut gates = Vec::new();
+        for (j, net) in nets.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            // Beacons from node i enter node j's fabric as a synthetic
+            // client; the gate models severing that one link.
+            let (link, gate) = GatedTransport::new(net.client_endpoint(100 + i as u16));
+            gates.push(gate);
+            d.add_peer_link(Box::new(link));
+        }
+        Ok((d, gates))
+    };
+
+    let server_t = nets[i].server_endpoint();
+    let mut inst = Some(mk()?);
+    let mut rejoined = 0usize;
+    while !ctl.stop.load(Ordering::SeqCst) {
+        if ctl.kill.swap(false, Ordering::SeqCst) {
+            // Abrupt death: no drain, no goodbye — in-memory sessions
+            // vanish with the image; only the journal survives.
+            inst = None;
+        }
+        if inst.is_none() && ctl.restart.swap(false, Ordering::SeqCst) {
+            let re = mk()?;
+            rejoined = re.0.clients();
+            inst = Some(re);
+        }
+        let Some((daemon, gates)) = inst.as_mut() else {
+            std::thread::sleep(StdDuration::from_millis(5));
+            continue;
+        };
+        // Apply the desired partition state to this node's fabric
+        // (cuts inbound traffic and its own replies) and to its
+        // outgoing beacon links (cuts what peers hear from it).
+        let partitioned = ctl.partition.load(Ordering::SeqCst);
+        nets[i].set_partitioned(partitioned);
+        for g in gates.iter() {
+            g.store(!partitioned, Ordering::SeqCst);
+        }
+        daemon.serve(&server_t, Some(StdDuration::from_millis(30)), false)?;
+    }
+    let faulted = cfg.kill_node == Some(i) || cfg.partition_node == Some(i);
+    let live_peers = inst.as_ref().map(|(d, _)| d.live_peers());
+    Ok(NodeEnd {
+        daemon: inst.map(|(d, _)| d),
+        rejoined,
+        live_peers,
+        faulted,
+    })
+}
+
+/// One client session: register (following redirects), run every task
+/// stop-and-wait, disconnect. Returns the outcome, failover count, and
+/// the longest single operation.
+fn run_client(
+    c: usize,
+    cfg: &NodeChurnConfig,
+    nets: &[Arc<LossyNet>],
+) -> (Result<NodeChurnOutcome>, u64, StdDuration) {
+    let home = c % cfg.nodes;
+    let high = c % 2 == 0;
+    let kernel = churn_kernel(high);
+    let mut client = HookClient::new(
+        nets[home].client_endpoint(9000 + c as u16),
+        TaskKey::new(format!("svc{c}").as_str()),
+        if high { Priority::P0 } else { Priority::P5 },
+        SymbolResolver::new(SymbolTableModel::default()),
+    )
+    .with_primary_name(&format!("n{home}"));
+    for k in 1..cfg.nodes {
+        let j = (home + k) % cfg.nodes;
+        client.add_endpoint(&format!("n{j}"), nets[j].client_endpoint(9000 + c as u16));
+    }
+    // Short attempts, many of them: convergence under loss needs
+    // retries; endpoint death is declared after the full budget.
+    client.set_retry(StdDuration::from_millis(40), 25);
+    client.set_release_deadline(StdDuration::from_secs(20));
+
+    let mut max_op = StdDuration::ZERO;
+    macro_rules! op {
+        ($e:expr) => {{
+            let t0 = Instant::now();
+            let r = $e;
+            max_op = max_op.max(t0.elapsed());
+            r
+        }};
+    }
+    let mut session = || -> Result<NodeChurnOutcome> {
+        op!(client.register())?;
+        for task in 0..cfg.tasks_per_client {
+            let tid = TaskId(u64::from(task));
+            op!(client.task_start(tid))?;
+            for seq in 0..cfg.kernels_per_task {
+                match op!(client.intercept_launch(&kernel, tid, seq, SimTime(0)))? {
+                    LaunchDecision::LaunchNow => {}
+                    LaunchDecision::Held => op!(client.wait_release(seq))?,
+                }
+                if high {
+                    op!(client.report_completion(
+                        tid,
+                        seq,
+                        Duration::from_micros(300),
+                        SimTime(1)
+                    ))?;
+                }
+                std::thread::sleep(cfg.kernel_pace);
+            }
+            op!(client.task_end(tid))?;
+        }
+        // Best-effort: the daemon treats Disconnect idempotently and
+        // the fleet may be shutting down around the final ack.
+        let _ = op!(client.disconnect());
+        Ok(NodeChurnOutcome::Completed)
+    };
+    let outcome = match session() {
+        Ok(o) => Ok(o),
+        // An explicit shed is a legal, accounted end state — the
+        // whole point of graceful load shedding.
+        Err(Error::Shed(_)) => Ok(NodeChurnOutcome::Shed),
+        Err(e) => Err(e),
+    };
+    (outcome, client.failovers(), max_op)
+}
+
+/// Run the scripted node-failure churn scenario. Panics on invariant
+/// violations (lost sessions, broken conservation, unbounded failover
+/// latency); returns the outcome accounting for scenario asserts.
+pub fn run_node_churn(cfg: &NodeChurnConfig) -> Result<NodeChurnReport> {
+    assert!(cfg.nodes >= 2, "a fleet needs at least two nodes");
+    assert!(cfg.kill_node.map_or(true, |k| k < cfg.nodes));
+    assert!(cfg.partition_node.map_or(true, |p| p < cfg.nodes));
+
+    let nets: Vec<Arc<LossyNet>> = (0..cfg.nodes)
+        .map(|i| LossyNet::new(cfg.seed ^ ((i as u64 + 1) << 40), cfg.drop_permille))
+        .collect();
+    let ctls: Vec<NodeCtl> = (0..cfg.nodes).map(|_| NodeCtl::default()).collect();
+    let dirs: Vec<std::path::PathBuf> = (0..cfg.nodes)
+        .map(|i| {
+            let d = std::env::temp_dir().join(format!(
+                "fikit-node-churn-{}-{:x}-{i}",
+                std::process::id(),
+                cfg.seed
+            ));
+            let _ = std::fs::remove_dir_all(&d);
+            d
+        })
+        .collect();
+
+    // Fault schedule, ordered by wall-clock offset.
+    let mut events: Vec<(StdDuration, usize, u8)> = Vec::new();
+    if let Some(k) = cfg.kill_node {
+        events.push((cfg.kill_after, k, 0));
+        if let Some(after) = cfg.restart_after {
+            events.push((cfg.kill_after + after, k, 1));
+        }
+    }
+    if let Some(p) = cfg.partition_node {
+        events.push((cfg.partition_after, p, 2));
+        events.push((cfg.partition_after + cfg.partition_for, p, 3));
+    }
+    events.sort_by_key(|e| e.0);
+    let last_event = events.last().map(|e| e.0).unwrap_or_default();
+
+    let mut node_ends: Vec<Result<NodeEnd>> = Vec::new();
+    let mut client_results: Vec<(Result<NodeChurnOutcome>, u64, StdDuration)> = Vec::new();
+    std::thread::scope(|scope| {
+        let node_handles: Vec<_> = (0..cfg.nodes)
+            .map(|i| {
+                let (nets, ctl, dir) = (&nets, &ctls[i], &dirs[i]);
+                scope.spawn(move || run_node(i, cfg, nets, ctl, dir))
+            })
+            .collect();
+        let client_handles: Vec<_> = (0..cfg.clients)
+            .map(|c| {
+                let nets = &nets;
+                scope.spawn(move || run_client(c, cfg, nets))
+            })
+            .collect();
+
+        let start = Instant::now();
+        let wait_until = |t: StdDuration| {
+            let now = start.elapsed();
+            if t > now {
+                std::thread::sleep(t - now);
+            }
+        };
+        for (at, node, what) in events {
+            wait_until(at);
+            match what {
+                0 => ctls[node].kill.store(true, Ordering::SeqCst),
+                1 => ctls[node].restart.store(true, Ordering::SeqCst),
+                2 => ctls[node].partition.store(true, Ordering::SeqCst),
+                _ => ctls[node].partition.store(false, Ordering::SeqCst),
+            }
+        }
+        for h in client_handles {
+            client_results.push(h.join().expect("client thread panicked"));
+        }
+        // Settle past the last scheduled fault plus a few liveness
+        // windows, so restarted/healed nodes re-enter every fleet view
+        // before it is sampled.
+        let settle = StdDuration::from_nanos(
+            cfg.beacon_interval.nanos() * (u64::from(cfg.miss_limit) + 4),
+        ) + StdDuration::from_millis(200);
+        wait_until(last_event + settle);
+        for ctl in &ctls {
+            ctl.stop.store(true, Ordering::SeqCst);
+        }
+        for h in node_handles {
+            node_ends.push(h.join().expect("node thread panicked"));
+        }
+    });
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
+
+    let mut outcomes = Vec::new();
+    let mut failovers = 0u64;
+    let mut max_op = StdDuration::ZERO;
+    for (r, f, m) in client_results {
+        // No silent loss: every session either completed or was shed
+        // explicitly — anything else fails the scenario here.
+        outcomes.push(r?);
+        failovers += f;
+        max_op = max_op.max(m);
+    }
+    assert!(
+        max_op <= cfg.max_op_bound,
+        "failover latency unbounded: slowest op took {max_op:?} (bound {:?})",
+        cfg.max_op_bound
+    );
+
+    let mut rejoined_sessions = 0usize;
+    let mut restarts_observed = 0u64;
+    let mut redirects = 0u64;
+    let mut sheds = 0u64;
+    let mut live_peers = Vec::new();
+    for (i, end) in node_ends.into_iter().enumerate() {
+        let end = end?;
+        live_peers.push(end.live_peers);
+        if end.rejoined > 0 {
+            rejoined_sessions = end.rejoined;
+        }
+        let Some(d) = end.daemon else { continue };
+        if end.faulted {
+            continue; // abandoned sessions: drain asserts don't apply
+        }
+        // Conservation on every clean node: each held launch was
+        // released exactly one way — filled, drained, or purged with
+        // its disconnecting session. No duplicates, nothing lost.
+        let s = d.stats_total();
+        assert_eq!(
+            s.holds,
+            s.releases_filled + s.releases_drained + s.purged_launches,
+            "node {i}: held-launch conservation broken"
+        );
+        assert_eq!(d.clients(), 0, "node {i}: sessions leaked past disconnect");
+        restarts_observed += d.fleet_view().restarts_observed();
+        redirects += d.stats().redirects;
+        sheds += d.stats().sheds;
+    }
+
+    let completed = outcomes
+        .iter()
+        .filter(|o| **o == NodeChurnOutcome::Completed)
+        .count();
+    let dropped = nets.iter().map(|n| n.dropped()).fold((0, 0), |acc, d| {
+        (acc.0 + d.0, acc.1 + d.1)
+    });
+    Ok(NodeChurnReport {
+        shed: outcomes.len() - completed,
+        completed,
+        outcomes,
+        failovers,
+        max_op_latency: max_op,
+        rejoined_sessions,
+        restarts_observed,
+        redirects,
+        sheds,
+        live_peers,
+        dropped,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1031,5 +1518,50 @@ mod tests {
         assert_eq!(report.rejected, 0);
         assert!(report.services[0].completed > 0);
         assert!(report.services[1].completed > 0);
+    }
+
+    #[test]
+    fn node_fleet_serves_without_faults() {
+        // Two federated nodes, 10% loss, no faults scheduled: every
+        // session completes on its home node, nobody fails over, and
+        // both fleet views see each other alive at shutdown.
+        let mut cfg = NodeChurnConfig::new(0x51ee7);
+        cfg.nodes = 2;
+        cfg.clients = 2;
+        cfg.tasks_per_client = 2;
+        cfg.kernels_per_task = 3;
+        cfg.drop_permille = 100;
+        cfg.kernel_pace = StdDuration::from_millis(2);
+        let report = run_node_churn(&cfg).unwrap();
+        assert_eq!(report.completed, 2, "outcomes: {:?}", report.outcomes);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.failovers, 0, "no faults, no failovers");
+        for (i, lp) in report.live_peers.iter().enumerate() {
+            assert_eq!(*lp, Some(1), "node {i} lost sight of its peer");
+        }
+    }
+
+    #[test]
+    fn fleet_full_register_sheds_explicitly() {
+        // Three clients race for a fleet with total capacity two
+        // (2 nodes × 1 slot). Whatever order the race resolves in —
+        // RetryAfter, or a redirect chain that ping-pongs until the
+        // client's redirect-loop bound trips — the loser ends with an
+        // explicit `Error::Shed`, never a hang or silent loss.
+        let mut cfg = NodeChurnConfig::new(0xf0117);
+        cfg.nodes = 2;
+        cfg.capacity = 1;
+        cfg.clients = 3;
+        cfg.tasks_per_client = 2;
+        cfg.kernels_per_task = 4;
+        cfg.drop_permille = 0;
+        cfg.kernel_pace = StdDuration::from_millis(5);
+        let report = run_node_churn(&cfg).unwrap();
+        assert_eq!(
+            (report.completed, report.shed),
+            (2, 1),
+            "outcomes: {:?}",
+            report.outcomes
+        );
     }
 }

@@ -33,6 +33,13 @@ pub enum Error {
     #[error("protocol error: {0}")]
     Protocol(String),
 
+    /// Admission explicitly shed by the scheduler fleet (every visible
+    /// node full): the request was *answered*, not lost. Carries the
+    /// daemon's reason so callers can distinguish graceful load
+    /// shedding from transport failures.
+    #[error("admission shed: {0}")]
+    Shed(String),
+
     /// Simulation invariant violated (a bug, surfaced loudly).
     #[error("simulation invariant violated: {0}")]
     Invariant(String),

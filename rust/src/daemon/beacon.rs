@@ -1,0 +1,109 @@
+//! Outgoing capacity/health beacons for a federated daemon node.
+//!
+//! A node joins a fleet by doing exactly two things: emitting a
+//! [`PeerMsg::Beacon`] every `beacon_interval` on its peer links, and
+//! folding received beacons into its `FleetView`
+//! (`cluster::control`). The [`Beaconer`] owns the outgoing half: the
+//! cadence clock and the per-node monotonic beacon sequence receivers
+//! dedup on. It is polled from the daemon's serve loop (between
+//! datagrams, off the launch hot path) rather than from a timer
+//! thread, so a single-threaded daemon stays single-threaded
+//! (DESIGN.md §Fleet-federation, ADR-005).
+
+use crate::core::{Duration, SimTime};
+use crate::hook::PeerMsg;
+
+/// Capacity snapshot advertised in one beacon.
+#[derive(Debug, Clone, Copy)]
+pub struct Advertised {
+    pub devices: u32,
+    pub capacity: u32,
+    pub residents: u32,
+    pub draining: bool,
+}
+
+/// Emits this node's beacons on a fixed cadence.
+#[derive(Debug)]
+pub struct Beaconer {
+    node: String,
+    interval: Duration,
+    /// Monotonic beacon sequence; receivers drop `<=` last seen.
+    seq: u64,
+    last_sent: Option<SimTime>,
+}
+
+impl Beaconer {
+    pub fn new(node: &str, interval: Duration) -> Beaconer {
+        Beaconer {
+            node: node.to_string(),
+            interval,
+            seq: 0,
+            last_sent: None,
+        }
+    }
+
+    pub fn node(&self) -> &str {
+        &self.node
+    }
+
+    /// Emit a beacon if one is due at `now` (the first poll always
+    /// emits, so a freshly started node announces itself immediately —
+    /// that is what re-enters a restarted node into peers' views).
+    pub fn poll(&mut self, now: SimTime, adv: Advertised) -> Option<PeerMsg> {
+        let due = match self.last_sent {
+            None => true,
+            Some(last) => now.nanos().saturating_sub(last.nanos()) >= self.interval.nanos(),
+        };
+        if !due {
+            return None;
+        }
+        self.last_sent = Some(now);
+        self.seq += 1;
+        Some(PeerMsg::Beacon {
+            node: self.node.clone(),
+            seq: self.seq,
+            sent_at_ns: now.nanos(),
+            devices: adv.devices,
+            capacity: adv.capacity,
+            residents: adv.residents,
+            draining: adv.draining,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_and_monotonic_seq() {
+        let mut b = Beaconer::new("n0", Duration::from_millis(100));
+        let adv = Advertised {
+            devices: 1,
+            capacity: 4,
+            residents: 2,
+            draining: false,
+        };
+        let t = |ms: u64| SimTime(ms * 1_000_000);
+        // First poll emits immediately (startup announcement).
+        let Some(PeerMsg::Beacon { seq, node, residents, .. }) = b.poll(t(0), adv) else {
+            panic!("first poll must emit");
+        };
+        assert_eq!((seq, node.as_str(), residents), (1, "n0", 2));
+        // Not due again until a full interval has passed.
+        assert!(b.poll(t(50), adv).is_none());
+        assert!(b.poll(t(99), adv).is_none());
+        let Some(PeerMsg::Beacon { seq, .. }) = b.poll(t(100), adv) else {
+            panic!("due at the interval");
+        };
+        assert_eq!(seq, 2);
+        // Seq never repeats across a long run.
+        let mut last = seq;
+        for ms in (200..2000).step_by(100) {
+            if let Some(PeerMsg::Beacon { seq, .. }) = b.poll(t(ms), adv) {
+                assert!(seq > last);
+                last = seq;
+            }
+        }
+    }
+}

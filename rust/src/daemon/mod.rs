@@ -36,19 +36,22 @@
 //! `tests/daemon_recovery.rs` proves convergence from every scripted
 //! crash point.
 
+pub mod beacon;
 pub mod journal;
 pub mod registry;
 pub mod shard;
 
+pub use beacon::{Advertised, Beaconer};
 pub use journal::{CrashPoint, FaultPlan, Journal, JournalConfig, JournalRecord};
 pub use registry::{Admission, ClientEntry, Registry};
 pub use shard::{ServerStats, Shard, ShardSizes};
 
+use crate::cluster::control::{FleetConfig, FleetView};
 use crate::cluster::placement::PlacementPolicy;
 use crate::coordinator::fikit::DEFAULT_EPSILON;
 use crate::core::{Duration, Error, Result, SimTime, TaskKey};
-use crate::hook::protocol::{ClientMsg, SchedulerMsg};
-use crate::hook::transport::ServerTransport;
+use crate::hook::protocol::{self, ClientMsg, PeerMsg, SchedulerMsg};
+use crate::hook::transport::{ServerTransport, Transport};
 use crate::profile::ProfileStore;
 use crate::util::json::Json;
 use std::net::SocketAddr;
@@ -73,6 +76,14 @@ pub struct DaemonConfig {
     /// it; refined profiles shadow the loaded store and persist via
     /// [`SchedulerDaemon::save_profiles`].
     pub online: crate::profile::OnlineConfig,
+    /// Fleet membership: this node's advertised name (`fikit serve
+    /// --advertise n0`). `None` = standalone daemon — no beacons are
+    /// emitted and over-capacity registers shed with `RetryAfter`
+    /// (there is no peer to redirect to).
+    pub node: Option<String>,
+    /// Control-plane tuning (beacon cadence, failure-detection
+    /// threshold, shed back-off hint) — DESIGN.md §Fleet-federation.
+    pub fleet: FleetConfig,
 }
 
 impl Default for DaemonConfig {
@@ -84,6 +95,8 @@ impl Default for DaemonConfig {
             epsilon: DEFAULT_EPSILON,
             min_profile_runs: 1,
             online: crate::profile::OnlineConfig::default(),
+            node: None,
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -106,6 +119,19 @@ pub struct DaemonStats {
     /// Refined profiles harvested from shards and installed over the
     /// loaded store (online refinement; DESIGN.md §9).
     pub profiles_refined: u64,
+    /// Over-capacity registers answered with `Redirect{node}` (a live
+    /// peer advertised room).
+    pub redirects: u64,
+    /// Over-capacity registers answered with `RetryAfter` (no live
+    /// non-draining peer had room) — explicit load shedding.
+    pub sheds: u64,
+    /// Beacons emitted on peer links.
+    pub beacons_sent: u64,
+    /// Peer beacons received and folded into the fleet view…
+    pub beacons_received: u64,
+    /// …and received but dropped by the per-peer seq guard
+    /// (duplicated / reordered / delayed deliveries).
+    pub beacons_stale: u64,
 }
 
 /// The sharded scheduler daemon: registry + one shard per device.
@@ -130,6 +156,20 @@ pub struct SchedulerDaemon {
     /// start. Recovery sets it past every replayed timestamp so time
     /// never runs backwards across a restart (no resurrected windows).
     base_ns: u64,
+    /// This node's picture of its peers, folded from received beacons.
+    /// Control-plane state only: never journaled, never part of
+    /// `state_json` — a restarted node rebuilds it from live beacons
+    /// within one beacon interval (ADR-005).
+    fleet_view: FleetView,
+    /// Outgoing beacon clock+seq; `None` for a standalone daemon.
+    beaconer: Option<Beaconer>,
+    /// Client-shaped links to each peer daemon, used only to send
+    /// beacons (peer frames arrive on the ordinary server transport and
+    /// are forked off by the frame kind byte).
+    peer_links: Vec<Box<dyn Transport>>,
+    /// Draining for shutdown: advertised in beacons so peers stop
+    /// redirecting here.
+    draining: bool,
 }
 
 impl SchedulerDaemon {
@@ -139,6 +179,11 @@ impl SchedulerDaemon {
         let shards = (0..cfg.devices)
             .map(|_| Shard::with_online(cfg.epsilon, cfg.online.clone()))
             .collect();
+        let fleet_view = FleetView::new(cfg.fleet);
+        let beaconer = cfg
+            .node
+            .as_ref()
+            .map(|n| Beaconer::new(n, cfg.fleet.beacon_interval));
         SchedulerDaemon {
             cfg,
             profiles,
@@ -150,6 +195,10 @@ impl SchedulerDaemon {
             replaying: false,
             crashed: false,
             base_ns: 0,
+            fleet_view,
+            beaconer,
+            peer_links: Vec::new(),
+            draining: false,
         }
     }
 
@@ -255,6 +304,70 @@ impl SchedulerDaemon {
         self.journal.as_mut()
     }
 
+    /// This node's picture of its peers (read-only; tests and the churn
+    /// scenario assert re-entry of restarted nodes through it).
+    pub fn fleet_view(&self) -> &FleetView {
+        &self.fleet_view
+    }
+
+    /// Attach a send-only link to one peer daemon; this node's beacons
+    /// will be emitted on every attached link.
+    pub fn add_peer_link(&mut self, link: Box<dyn Transport>) {
+        self.peer_links.push(link);
+    }
+
+    /// Peers currently passing missed-beacon failure detection, by this
+    /// daemon's own clock (the `fikit serve` stats line prints it; the
+    /// churn scenario asserts partition healing through it).
+    pub fn live_peers(&self) -> usize {
+        self.fleet_view.live_peers(self.now())
+    }
+
+    /// Begin draining: keep serving resident sessions, but advertise
+    /// `draining` so peers stop redirecting new work here.
+    pub fn set_draining(&mut self, draining: bool) {
+        self.draining = draining;
+    }
+
+    /// Fold one peer beacon in as if it had arrived on the wire at
+    /// `now` (tests and the fleet-view unit drive this directly; the
+    /// serve loop reaches it through [`SchedulerDaemon::handle_datagram`]).
+    pub fn observe_beacon_at(&mut self, beacon: &PeerMsg, now: SimTime) {
+        self.stats.beacons_received += 1;
+        if !self.fleet_view.observe(beacon, now) {
+            self.stats.beacons_stale += 1;
+        }
+    }
+
+    /// Emit this node's beacon on every peer link when one is due.
+    /// Called from the serve loop between datagrams — the control plane
+    /// never runs on the launch hot path, and a standalone daemon
+    /// (no `cfg.node`) pays one branch.
+    fn pump_beacons(&mut self) {
+        if self.beaconer.is_none() || self.crashed {
+            return;
+        }
+        let now = self.now();
+        let adv = Advertised {
+            devices: self.cfg.devices as u32,
+            capacity: self.cfg.capacity as u32,
+            residents: self.registry.total_residents() as u32,
+            draining: self.draining,
+        };
+        let Some(msg) = self.beaconer.as_mut().expect("checked above").poll(now, adv) else {
+            return;
+        };
+        if let Ok(bytes) = msg.encode() {
+            for link in &self.peer_links {
+                // Beacons are gossip: losses are repaired by the next
+                // cadence tick, so send errors are deliberately dropped.
+                if link.send(&bytes).is_ok() {
+                    self.stats.beacons_sent += 1;
+                }
+            }
+        }
+    }
+
     /// Serve datagrams from `transport` until `deadline` elapses
     /// (`None` = forever). With `exit_when_drained`, also return once
     /// every client that ever registered has disconnected — the clean
@@ -300,6 +413,7 @@ impl SchedulerDaemon {
             if exit_when_drained && had_clients && self.registry.is_empty() {
                 return Ok(());
             }
+            self.pump_beacons();
             match transport.recv_from(StdDuration::from_millis(20))? {
                 Some((buf, addr)) => {
                     handled += 1;
@@ -316,11 +430,26 @@ impl SchedulerDaemon {
     }
 
     /// Decode one datagram and handle it; returns the replies to send.
+    ///
+    /// Peer control-plane frames (`KIND_PEER`) are forked off *before*
+    /// the client decode: they update the fleet view and nothing else —
+    /// no reply, no journal record, no dedup state — so the federation
+    /// layer cannot perturb ADR-004 replay determinism.
     pub fn handle_datagram(
         &mut self,
         buf: &[u8],
         addr: SocketAddr,
     ) -> Vec<(SocketAddr, SchedulerMsg)> {
+        if protocol::frame_kind(buf) == Some(protocol::KIND_PEER) {
+            match PeerMsg::decode(buf) {
+                Ok(beacon) => {
+                    let now = self.now();
+                    self.observe_beacon_at(&beacon, now);
+                }
+                Err(_) => self.stats.decode_errors += 1,
+            }
+            return Vec::new();
+        }
         match ClientMsg::decode_seq(buf) {
             Ok((msg_seq, msg)) => self.handle(msg_seq, msg, addr),
             Err(e) => {
@@ -574,16 +703,33 @@ impl SchedulerDaemon {
             .register(&task_key, priority, model.as_deref(), addr, msg_seq)
         {
             Admission::Rejected => {
+                // Never a silent rejection and never an unbounded queue:
+                // the client gets either a named live peer with room
+                // (follow the redirect) or an explicit shed with a
+                // back-off hint and a reason (satellite of ISSUE 8;
+                // ADR-005 §shed-vs-redirect).
                 self.stats.rejected_capacity += 1;
-                vec![(
-                    addr,
-                    SchedulerMsg::Error {
-                        message: format!(
-                            "fleet at capacity ({} devices × {} services)",
-                            self.cfg.devices, self.cfg.capacity
-                        ),
-                    },
-                )]
+                match self.fleet_view.best_redirect(now).map(str::to_string) {
+                    Some(node) => {
+                        self.stats.redirects += 1;
+                        vec![(addr, SchedulerMsg::Redirect { task_key, node })]
+                    }
+                    None => {
+                        self.stats.sheds += 1;
+                        vec![(
+                            addr,
+                            SchedulerMsg::RetryAfter {
+                                task_key,
+                                ms: self.cfg.fleet.retry_after_ms,
+                                reason: format!(
+                                    "node at capacity ({} devices × {} services) and no \
+                                     live peer has room",
+                                    self.cfg.devices, self.cfg.capacity
+                                ),
+                            },
+                        )]
+                    }
+                }
             }
             admission @ (Admission::Placed(_) | Admission::Refreshed(_)) => {
                 let shard = match admission {
@@ -644,7 +790,14 @@ impl SchedulerDaemon {
                 SchedulerMsg::Registered { task_key, .. }
                 | SchedulerMsg::LaunchNow { task_key, .. }
                 | SchedulerMsg::Hold { task_key, .. } => Some(task_key.clone()),
-                SchedulerMsg::Ack { .. } | SchedulerMsg::Error { .. } => None,
+                // Redirect/RetryAfter answer the rejected sender
+                // directly (they are minted in `handle_register`, which
+                // bypasses routing — a rejected client has no entry to
+                // route through).
+                SchedulerMsg::Ack { .. }
+                | SchedulerMsg::Error { .. }
+                | SchedulerMsg::Redirect { .. }
+                | SchedulerMsg::RetryAfter { .. } => None,
             };
             let to = match &target_key {
                 Some(k) => {
@@ -1505,8 +1658,11 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// With no live peer, an over-capacity register is answered with an
+    /// explicit `RetryAfter` shed (reason + back-off hint) — never a
+    /// silent timeout, never an unbounded queue.
     #[test]
-    fn capacity_rejection_is_counted_and_replied() {
+    fn capacity_rejection_sheds_explicitly_without_peers() {
         let mut d = SchedulerDaemon::new(
             DaemonConfig {
                 devices: 1,
@@ -1518,8 +1674,55 @@ mod tests {
         let mut drv = Driver::new();
         drv.send(&mut d, register("hi", Priority::P0), addr(9001));
         let r = drv.send(&mut d, register("lo", Priority::P4), addr(9002));
-        assert!(matches!(r[0].1, SchedulerMsg::Error { .. }));
+        let SchedulerMsg::RetryAfter { ms, ref reason, .. } = r[0].1 else {
+            panic!("expected RetryAfter shed, got {:?}", r[0].1);
+        };
+        assert_eq!(ms, d.cfg.fleet.retry_after_ms);
+        assert!(reason.contains("capacity"), "shed carries a reason: {reason}");
         assert_eq!(d.stats().rejected_capacity, 1);
+        assert_eq!(d.stats().sheds, 1);
+        assert_eq!(d.stats().redirects, 0);
         assert_eq!(d.clients(), 1);
+    }
+
+    /// With a live, non-draining peer advertising free slots, the same
+    /// rejection becomes a `Redirect{node}` — cross-node admission.
+    #[test]
+    fn capacity_rejection_redirects_to_live_peer() {
+        let mut d = SchedulerDaemon::new(
+            DaemonConfig {
+                devices: 1,
+                capacity: 1,
+                node: Some("n0".into()),
+                ..Default::default()
+            },
+            profiles(),
+        );
+        // Fold a peer beacon in as if it had just arrived on the wire.
+        let beacon = PeerMsg::Beacon {
+            node: "n1".into(),
+            seq: 1,
+            sent_at_ns: 0,
+            devices: 1,
+            capacity: 4,
+            residents: 1,
+            draining: false,
+        };
+        let now = SimTime(d.base_ns + d.epoch.elapsed().as_nanos() as u64);
+        d.observe_beacon_at(&beacon, now);
+        assert_eq!(d.stats().beacons_received, 1);
+        let mut drv = Driver::new();
+        drv.send(&mut d, register("hi", Priority::P0), addr(9001));
+        let r = drv.send(&mut d, register("lo", Priority::P4), addr(9002));
+        let SchedulerMsg::Redirect { ref node, .. } = r[0].1 else {
+            panic!("expected Redirect, got {:?}", r[0].1);
+        };
+        assert_eq!(node, "n1");
+        assert_eq!(d.stats().rejected_capacity, 1);
+        assert_eq!(d.stats().redirects, 1);
+        assert_eq!(d.stats().sheds, 0);
+        // A stale replay of the same beacon is counted, not folded.
+        d.observe_beacon_at(&beacon, now);
+        assert_eq!(d.stats().beacons_stale, 1);
     }
 }

@@ -12,16 +12,41 @@
 //! The client assumes datagrams can vanish in either direction:
 //!
 //! * every message carries a monotonic `msg_seq`; a request is
-//!   retransmitted **byte-identically** (same `msg_seq`) up to
-//!   [`HookClient::set_retry`] attempts until its expected reply (or an
-//!   [`SchedulerMsg::Ack`]) arrives — the daemon deduplicates on
-//!   `msg_seq`, so retries never double-apply side effects;
+//!   retransmitted **byte-identically** (same `msg_seq`) until its
+//!   expected reply (or an [`SchedulerMsg::Ack`]) arrives — the daemon
+//!   deduplicates on `msg_seq`, so retries never double-apply side
+//!   effects. Retransmit pacing is exponential backoff with
+//!   deterministic jitter: 10 ms initial, doubling to the
+//!   [`HookClient::set_retry`] cap (500 ms default), jittered by a
+//!   per-client seeded PRNG so a fleet of clients retrying into the
+//!   same daemon spreads out instead of thundering in lockstep;
 //! * out-of-band `LaunchNow` releases observed while waiting for some
 //!   other reply are buffered, so a release can never be lost between
 //!   two client states;
 //! * [`HookClient::wait_release`] polls with
 //!   [`ClientMsg::ReleaseQuery`] when the wait times out, recovering
-//!   releases whose datagram was dropped.
+//!   releases whose datagram was dropped — bounded by an overall
+//!   deadline ([`HookClient::set_release_deadline`]) so it can never
+//!   spin forever against a dead node.
+//!
+//! ## Failover (DESIGN.md §Fleet-federation)
+//!
+//! With [`HookClient::add_endpoint`] the client knows several fleet
+//! nodes. Two control-plane paths move it between them:
+//!
+//! * **Redirect** — a full node answers `Register` with
+//!   `Redirect{node}`; the client switches to that endpoint and
+//!   re-registers there. `RetryAfter{ms, reason}` (the whole visible
+//!   fleet is full) surfaces as [`Error::Shed`] — an explicit,
+//!   reasoned rejection, never a silent timeout.
+//! * **Failover** — when the current node stops answering entirely
+//!   (every backoff attempt exhausted), the client advances to the
+//!   next endpoint and transparently re-establishes its session there:
+//!   fresh `Register`, re-announced open task, and re-issued held
+//!   launches whose `ReleaseQuery` the new node cannot answer. Fresh
+//!   `msg_seq` allocation makes this safe: the new node sees an
+//!   ordinary new session, and the dead node's dedup state is
+//!   irrelevant.
 //!
 //! The same retransmit discipline makes a *daemon restart* transparent
 //! when the daemon runs with a session journal (ADR-004, `fikit serve
@@ -29,14 +54,14 @@
 //! (`last_msg_seq` + cached replies), so a request retransmitted across
 //! the restart is answered from the cache exactly as a same-incarnation
 //! duplicate would be, and a mutation lost to a torn final journal
-//! record is simply re-applied when the retransmit arrives. The client
-//! needs no reconnect logic and cannot tell the restart happened.
+//! record is simply re-applied when the retransmit arrives.
 
 use super::protocol::{ClientMsg, SchedulerMsg};
 use super::transport::Transport;
 use crate::core::{Dim3, Error, KernelId, Priority, Result, SimTime, TaskId, TaskKey};
 use crate::profile::SymbolResolver;
-use std::collections::HashSet;
+use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
 use std::time::{Duration as StdDuration, Instant};
 
 /// Decision returned by the scheduler for one held launch.
@@ -48,9 +73,24 @@ pub enum LaunchDecision {
     Held,
 }
 
+/// First retransmit wait; doubles per attempt up to the `set_retry`
+/// cap (lazy start: don't hammer a daemon that answers within 10 ms).
+const BACKOFF_BASE: StdDuration = StdDuration::from_millis(10);
+
+/// Outcome of one session re-establishment attempt after failover.
+enum Reestablish {
+    /// Session is live on the (possibly redirected-to) current endpoint.
+    Done,
+    /// The failover target did not answer either — advance again.
+    Dead,
+}
+
 /// Hook client state for one service process.
 pub struct HookClient<T: Transport> {
-    transport: T,
+    /// Known fleet endpoints as `(node name, transport)`; redirects
+    /// switch between them by name, failover round-robins.
+    endpoints: Vec<(String, T)>,
+    current: usize,
     task_key: TaskKey,
     priority: Priority,
     resolver: SymbolResolver,
@@ -58,14 +98,34 @@ pub struct HookClient<T: Transport> {
     model_hint: Option<String>,
     /// Scheduler-assigned stage from registration.
     sharing_stage: Option<bool>,
-    /// Per-attempt reply wait.
+    /// Backoff cap: no single reply wait exceeds this.
     recv_timeout: StdDuration,
-    /// Bounded retransmit attempts per request.
+    /// Bounded retransmit attempts per request (per endpoint).
     max_attempts: u32,
+    /// Overall bound on one `wait_release` call, across every recv
+    /// phase and `ReleaseQuery` poll it makes.
+    release_deadline: StdDuration,
+    /// Deterministic backoff jitter, seeded from the task key.
+    jitter: Rng,
     /// Monotonic wire sequence (starts at 1; 0 means "never sent").
+    /// Spans endpoints — a failed-over session keeps counting up, so
+    /// the new node just sees a client whose seqs start high.
     next_msg_seq: u64,
     /// Kernel seqs whose `LaunchNow` arrived out of band.
     released: HashSet<u32>,
+    /// Held launches not yet released: the original `Launch` message
+    /// plus the failover count when it was issued, so a post-failover
+    /// node that never saw the launch can be handed it again (and a
+    /// same-node "unknown seq" answer still surfaces as the error it
+    /// always was).
+    held: HashMap<u32, (ClientMsg, u64)>,
+    /// Successfully registered at least once (failover re-registers).
+    registered: bool,
+    /// Task announced by `task_start` and not yet ended — re-announced
+    /// on the failover target before anything else.
+    open_task: Option<TaskId>,
+    /// Endpoint switches forced by an unresponsive node.
+    failovers: u64,
 }
 
 impl<T: Transport> HookClient<T> {
@@ -75,8 +135,16 @@ impl<T: Transport> HookClient<T> {
         priority: Priority,
         resolver: SymbolResolver,
     ) -> HookClient<T> {
+        // Deterministic per-client jitter stream: same client key ⇒
+        // same backoff schedule, different keys ⇒ decorrelated retries.
+        let mut seed = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+        for b in task_key.as_str().bytes() {
+            seed ^= u64::from(b);
+            seed = seed.wrapping_mul(0x100_0000_01b3);
+        }
         HookClient {
-            transport,
+            endpoints: vec![("primary".to_string(), transport)],
+            current: 0,
             task_key,
             priority,
             resolver,
@@ -84,8 +152,14 @@ impl<T: Transport> HookClient<T> {
             sharing_stage: None,
             recv_timeout: StdDuration::from_millis(500),
             max_attempts: 5,
+            release_deadline: StdDuration::from_secs(60),
+            jitter: Rng::new(seed),
             next_msg_seq: 1,
             released: HashSet::new(),
+            held: HashMap::new(),
+            registered: false,
+            open_task: None,
+            failovers: 0,
         }
     }
 
@@ -100,30 +174,67 @@ impl<T: Transport> HookClient<T> {
         self
     }
 
-    /// Tune the bounded-retry loop: per-attempt reply wait and number of
-    /// attempts. Lossy links want more attempts; in-process tests want
-    /// shorter waits.
+    /// Name the initial endpoint (default `"primary"`). Names must
+    /// match the daemons' advertised node names for redirects to
+    /// resolve.
+    pub fn with_primary_name(mut self, name: &str) -> Self {
+        self.endpoints[0].0 = name.to_string();
+        self
+    }
+
+    /// Add a failover endpoint for the named fleet node. Order matters:
+    /// failover round-robins in insertion order.
+    pub fn add_endpoint(&mut self, node: &str, transport: T) {
+        self.endpoints.push((node.to_string(), transport));
+    }
+
+    /// The node the client is currently talking to.
+    pub fn current_endpoint(&self) -> &str {
+        &self.endpoints[self.current].0
+    }
+
+    /// Endpoint switches forced by an unresponsive node so far.
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// Tune the bounded-retry loop: backoff cap (longest single reply
+    /// wait) and number of attempts per endpoint. Lossy links want more
+    /// attempts; in-process tests want shorter waits.
     pub fn set_retry(&mut self, recv_timeout: StdDuration, max_attempts: u32) {
         self.recv_timeout = recv_timeout;
         self.max_attempts = max_attempts.max(1);
     }
 
+    /// Cap one `wait_release` call end to end (default 60 s): however
+    /// the per-attempt arithmetic works out, the client will not poll a
+    /// dead or wedged node past this.
+    pub fn set_release_deadline(&mut self, deadline: StdDuration) {
+        self.release_deadline = deadline;
+    }
+
     /// Register with the scheduler; returns `true` if the service enters
     /// sharing stage (has a ready profile), `false` for measurement
-    /// stage.
+    /// stage. A full fleet answers with [`Error::Shed`] (explicit,
+    /// reasoned); a full *node* with live peers redirects transparently.
     pub fn register(&mut self) -> Result<bool> {
-        let msg = ClientMsg::Register {
+        let msg = self.register_msg();
+        match self.request(&msg)? {
+            SchedulerMsg::Registered { sharing_stage, .. } => {
+                self.sharing_stage = Some(sharing_stage);
+                self.registered = true;
+                Ok(sharing_stage)
+            }
+            other => Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
+        }
+    }
+
+    fn register_msg(&self) -> ClientMsg {
+        ClientMsg::Register {
             task_key: self.task_key.clone(),
             priority: self.priority,
             has_symbols: self.resolver.model().symbols_exported,
             model: self.model_hint.clone(),
-        };
-        match self.request(&msg)? {
-            SchedulerMsg::Registered { sharing_stage, .. } => {
-                self.sharing_stage = Some(sharing_stage);
-                Ok(sharing_stage)
-            }
-            other => Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
         }
     }
 
@@ -133,7 +244,9 @@ impl<T: Transport> HookClient<T> {
             task_key: self.task_key.clone(),
             task_id,
         };
-        self.request(&msg).map(|_| ())
+        self.request(&msg)?;
+        self.open_task = Some(task_id);
+        Ok(())
     }
 
     /// Intercept one kernel launch: resolve the kernel id, forward it,
@@ -157,46 +270,92 @@ impl<T: Transport> HookClient<T> {
         };
         match self.request(&msg)? {
             SchedulerMsg::LaunchNow { .. } => Ok(LaunchDecision::LaunchNow),
-            SchedulerMsg::Hold { .. } => Ok(LaunchDecision::Held),
+            SchedulerMsg::Hold { .. } => {
+                // Remember the launch while it is parked: a failover
+                // target that never saw it gets it re-issued.
+                self.held.insert(seq, (msg, self.failovers));
+                Ok(LaunchDecision::Held)
+            }
             other => Err(Error::Protocol(format!("unexpected reply: {other:?}"))),
         }
     }
 
     /// Wait for a deferred `LaunchNow` for a held kernel. When the wait
     /// times out, polls the daemon with `ReleaseQuery` — the release
-    /// datagram itself may have been dropped.
+    /// datagram itself may have been dropped. Bounded twice over: by
+    /// `max_attempts` poll rounds and by the overall release deadline.
     pub fn wait_release(&mut self, seq: u32) -> Result<()> {
         if self.released.remove(&seq) {
+            self.held.remove(&seq);
             return Ok(());
         }
+        let overall = Instant::now() + self.release_deadline;
         for _ in 0..self.max_attempts {
-            let deadline = Instant::now() + self.recv_timeout;
+            let deadline = (Instant::now() + self.recv_timeout).min(overall);
             loop {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
                 }
-                match self.transport.recv(deadline - now)? {
+                match self.endpoints[self.current].1.recv(deadline - now)? {
                     Some(buf) => match SchedulerMsg::decode(&buf)? {
-                        SchedulerMsg::LaunchNow { seq: s, .. } if s == seq => return Ok(()),
+                        SchedulerMsg::LaunchNow { seq: s, .. } if s == seq => {
+                            self.held.remove(&seq);
+                            return Ok(());
+                        }
                         other => self.absorb(&other),
                     },
                     None => break,
                 }
+            }
+            if Instant::now() >= overall {
+                break; // overall deadline: stop polling, fail loudly
             }
             // Timed out: the release may have been dropped — poll.
             let query = ClientMsg::ReleaseQuery {
                 task_key: self.task_key.clone(),
                 seq,
             };
-            match self.request(&query)? {
-                SchedulerMsg::LaunchNow { seq: s, .. } if s == seq => return Ok(()),
-                SchedulerMsg::Hold { .. } => continue, // still parked
-                other => {
+            match self.request(&query) {
+                Ok(SchedulerMsg::LaunchNow { seq: s, .. }) if s == seq => {
+                    self.held.remove(&seq);
+                    return Ok(());
+                }
+                Ok(SchedulerMsg::Hold { .. }) => continue, // still parked
+                Ok(other) => {
                     return Err(Error::Protocol(format!(
                         "release query for seq {seq} answered {other:?}"
                     )))
                 }
+                Err(Error::Protocol(m)) if m.contains("is unknown") => {
+                    // The answering node has no record of this launch.
+                    // If we failed over since it was held, the new node
+                    // simply never saw it: re-issue it there (fresh
+                    // msg_seq — an ordinary new launch to that node).
+                    // On the SAME node this is the genuine purged/
+                    // never-held error it always was.
+                    let Some((launch, epoch)) = self.held.get(&seq).cloned() else {
+                        return Err(Error::Protocol(m));
+                    };
+                    if epoch == self.failovers {
+                        return Err(Error::Protocol(m));
+                    }
+                    self.held.insert(seq, (launch.clone(), self.failovers));
+                    match self.request(&launch)? {
+                        SchedulerMsg::LaunchNow { .. } => {
+                            self.held.remove(&seq);
+                            self.released.remove(&seq);
+                            return Ok(());
+                        }
+                        SchedulerMsg::Hold { .. } => continue,
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "re-issued launch seq {seq} answered {other:?}"
+                            )))
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
             }
         }
         Err(Error::Protocol(format!(
@@ -231,43 +390,62 @@ impl<T: Transport> HookClient<T> {
             task_id,
         };
         let r = self.request(&msg).map(|_| ());
+        self.open_task = None;
         // Seqs may be reused by the next task; drop stale buffered
         // releases (the daemon clears its released record too).
         self.released.clear();
+        self.held.clear();
         r
     }
 
     /// Clean shutdown. Blocks until acknowledged (the daemon treats
     /// `Disconnect` for an unknown service as already-done and acks it,
-    /// so retransmits converge).
+    /// so retransmits — and failover to a node that never saw us —
+    /// converge).
     pub fn disconnect(&mut self) -> Result<()> {
         let msg = ClientMsg::Disconnect {
             task_key: self.task_key.clone(),
         };
-        self.request(&msg).map(|_| ())
+        let r = self.request(&msg).map(|_| ());
+        if r.is_ok() {
+            self.registered = false;
+        }
+        r
     }
 
-    /// Send `msg` with a fresh `msg_seq` and retransmit byte-identically
-    /// until a reply *for this request* arrives. Out-of-band traffic
-    /// (deferred releases, stale acks) is absorbed, never dropped.
-    fn request(&mut self, msg: &ClientMsg) -> Result<SchedulerMsg> {
+    /// Reply wait for retransmit attempt `attempt`: exponential from
+    /// [`BACKOFF_BASE`] capped at `recv_timeout`, plus up to 25%
+    /// deterministic jitter.
+    fn backoff_wait(&mut self, attempt: u32) -> StdDuration {
+        let base = BACKOFF_BASE.saturating_mul(1u32 << attempt.min(16));
+        let wait = base.min(self.recv_timeout);
+        let jitter_ns = self.jitter.below((wait.as_nanos() as u64 / 4).max(1));
+        wait + StdDuration::from_nanos(jitter_ns)
+    }
+
+    /// One request against the CURRENT endpoint: allocate a `msg_seq`,
+    /// send, and retransmit **byte-identically** on an exponential
+    /// backoff schedule until a reply for this request arrives.
+    /// `Ok(None)` means the endpoint never answered (dead or
+    /// partitioned) — the caller decides whether to fail over.
+    fn exchange(&mut self, msg: &ClientMsg) -> Result<Option<SchedulerMsg>> {
         let msg_seq = self.next_msg_seq;
         self.next_msg_seq += 1;
         let bytes = msg.encode_seq(msg_seq)?;
-        for _ in 0..self.max_attempts {
-            self.transport.send(&bytes)?;
-            let deadline = Instant::now() + self.recv_timeout;
+        for attempt in 0..self.max_attempts {
+            self.endpoints[self.current].1.send(&bytes)?;
+            let deadline = Instant::now() + self.backoff_wait(attempt);
             loop {
                 let now = Instant::now();
                 if now >= deadline {
                     break; // attempt timed out → retransmit
                 }
-                let Some(buf) = self.transport.recv(deadline - now)? else {
+                let Some(buf) = self.endpoints[self.current].1.recv(deadline - now)? else {
                     break;
                 };
                 let reply = SchedulerMsg::decode(&buf)?;
                 if Self::matches(msg, msg_seq, &reply) {
-                    return Ok(reply);
+                    return Ok(Some(reply));
                 }
                 if let SchedulerMsg::Error { message } = &reply {
                     return Err(Error::Protocol(message.clone()));
@@ -275,16 +453,148 @@ impl<T: Transport> HookClient<T> {
                 self.absorb(&reply);
             }
         }
-        Err(Error::Protocol(format!(
-            "no reply after {} attempts (msg_seq {msg_seq})",
-            self.max_attempts
-        )))
+        Ok(None)
+    }
+
+    /// Send `msg`, following `Redirect`s, surfacing `RetryAfter` as
+    /// [`Error::Shed`], and failing over to the next endpoint when the
+    /// current one stops answering. Single-endpoint clients keep the
+    /// old behaviour: endpoint death is a protocol error.
+    fn request(&mut self, msg: &ClientMsg) -> Result<SchedulerMsg> {
+        let mut redirects = 0usize;
+        let mut deaths = 0usize;
+        loop {
+            match self.exchange(msg)? {
+                Some(SchedulerMsg::Redirect { node, .. }) => {
+                    redirects += 1;
+                    if redirects > self.endpoints.len() {
+                        return Err(Error::Shed(format!(
+                            "redirect loop after {redirects} hops"
+                        )));
+                    }
+                    self.switch_to(&node)?;
+                }
+                Some(SchedulerMsg::RetryAfter { ms, reason, .. }) => {
+                    return Err(Error::Shed(format!("{reason} (retry after {ms} ms)")));
+                }
+                Some(reply) => return Ok(reply),
+                None => loop {
+                    deaths += 1;
+                    if self.endpoints.len() < 2 || deaths >= self.endpoints.len() {
+                        return Err(Error::Protocol(format!(
+                            "no reply after {} attempts (endpoint {:?})",
+                            self.max_attempts,
+                            self.current_endpoint()
+                        )));
+                    }
+                    self.current = (self.current + 1) % self.endpoints.len();
+                    self.failovers += 1;
+                    self.drain_endpoint();
+                    // Register establishes its own session and Disconnect
+                    // converges on an unknown node (acked as done);
+                    // everything else needs the session rebuilt first.
+                    let needs_session = self.registered
+                        && !matches!(
+                            msg,
+                            ClientMsg::Register { .. } | ClientMsg::Disconnect { .. }
+                        );
+                    if !needs_session {
+                        break;
+                    }
+                    match self.reestablish()? {
+                        Reestablish::Done => break,
+                        Reestablish::Dead => continue, // advance again
+                    }
+                },
+            }
+        }
+    }
+
+    /// Rebuild the session on the current endpoint after failover:
+    /// `Register` (following redirects), then re-announce the open
+    /// task. `Dead` = this endpoint does not answer either.
+    fn reestablish(&mut self) -> Result<Reestablish> {
+        let reg = self.register_msg();
+        for _ in 0..=self.endpoints.len() {
+            match self.exchange(&reg)? {
+                Some(SchedulerMsg::Registered { sharing_stage, .. }) => {
+                    self.sharing_stage = Some(sharing_stage);
+                    if let Some(task_id) = self.open_task {
+                        let ts = ClientMsg::TaskStart {
+                            task_key: self.task_key.clone(),
+                            task_id,
+                        };
+                        match self.exchange(&ts)? {
+                            Some(SchedulerMsg::Ack { .. }) => {}
+                            Some(other) => {
+                                return Err(Error::Protocol(format!(
+                                    "failover TaskStart answered {other:?}"
+                                )))
+                            }
+                            None => return Ok(Reestablish::Dead),
+                        }
+                    }
+                    return Ok(Reestablish::Done);
+                }
+                Some(SchedulerMsg::Redirect { node, .. }) => self.switch_to(&node)?,
+                Some(SchedulerMsg::RetryAfter { ms, reason, .. }) => {
+                    return Err(Error::Shed(format!("{reason} (retry after {ms} ms)")));
+                }
+                Some(other) => {
+                    return Err(Error::Protocol(format!(
+                        "failover Register answered {other:?}"
+                    )))
+                }
+                None => return Ok(Reestablish::Dead),
+            }
+        }
+        Err(Error::Shed(
+            "redirect loop during failover re-registration".into(),
+        ))
+    }
+
+    /// Switch to the endpoint for `node`. A redirect to a node this
+    /// client has no endpoint for is handled as a shed: the daemon
+    /// answered, the client just cannot follow.
+    fn switch_to(&mut self, node: &str) -> Result<()> {
+        match self.endpoints.iter().position(|(n, _)| n == node) {
+            Some(i) => {
+                self.current = i;
+                self.drain_endpoint();
+                Ok(())
+            }
+            None => Err(Error::Shed(format!(
+                "redirected to {node:?}, but this client has no endpoint for it"
+            ))),
+        }
+    }
+
+    /// Absorb whatever is buffered on the endpoint we just switched to.
+    /// An endpoint left behind earlier may hold stale replies (e.g. an
+    /// `Error` a restarted node sent for our long-abandoned retransmit);
+    /// reading them during a fresh exchange would poison it. Releases
+    /// are still banked; everything else is stale by construction.
+    fn drain_endpoint(&mut self) {
+        for _ in 0..1024 {
+            match self.endpoints[self.current].1.recv(StdDuration::from_millis(1)) {
+                Ok(Some(buf)) => {
+                    if let Ok(reply) = SchedulerMsg::decode(&buf) {
+                        self.absorb(&reply);
+                    }
+                }
+                _ => break,
+            }
+        }
     }
 
     /// Is `reply` the direct answer to `msg`?
     fn matches(msg: &ClientMsg, msg_seq: u64, reply: &SchedulerMsg) -> bool {
         match (msg, reply) {
-            (ClientMsg::Register { .. }, SchedulerMsg::Registered { .. }) => true,
+            (ClientMsg::Register { .. }, SchedulerMsg::Registered { .. })
+            | (
+                ClientMsg::Register { .. },
+                SchedulerMsg::Redirect { .. } | SchedulerMsg::RetryAfter { .. },
+            ) => true,
             (
                 ClientMsg::Launch { seq, .. },
                 SchedulerMsg::LaunchNow { seq: s, .. } | SchedulerMsg::Hold { seq: s, .. },
@@ -396,7 +706,8 @@ mod tests {
     }
 
     /// A dropped reply triggers a byte-identical retransmit; the first
-    /// answered attempt wins.
+    /// answered attempt wins. (The backoff schedule changes *when*
+    /// retransmits go out, never their bytes.)
     #[test]
     fn register_retransmits_until_answered() {
         let (mut client, server) = pair();
@@ -457,5 +768,200 @@ mod tests {
         let (mut client, _server) = pair();
         client.set_retry(StdDuration::from_millis(5), 2);
         assert!(client.register().is_err());
+    }
+
+    /// The backoff schedule is exponential from 10 ms, capped, with
+    /// bounded deterministic jitter.
+    #[test]
+    fn backoff_is_exponential_capped_and_jittered() {
+        let (mut client, _server) = pair();
+        client.set_retry(StdDuration::from_millis(80), 8);
+        for (attempt, base_ms) in [(0u32, 10u64), (1, 20), (2, 40), (3, 80), (4, 80), (5, 80)] {
+            let w = client.backoff_wait(attempt);
+            let base = StdDuration::from_millis(base_ms);
+            assert!(w >= base, "attempt {attempt}: {w:?} < base {base:?}");
+            assert!(
+                w < base + base / 4 + StdDuration::from_millis(1),
+                "attempt {attempt}: jitter exceeds 25%: {w:?}"
+            );
+        }
+        // Deterministic per client key: a rebuilt client with the same
+        // key replays the identical jitter stream.
+        let (mut a, _s1) = pair();
+        let (mut b, _s2) = pair();
+        let sched_a: Vec<_> = (0..6).map(|i| a.backoff_wait(i)).collect();
+        let sched_b: Vec<_> = (0..6).map(|i| b.backoff_wait(i)).collect();
+        assert_eq!(sched_a, sched_b);
+    }
+
+    /// wait_release against a dead node stops at the overall deadline
+    /// instead of spinning through `attempts × timeout` forever.
+    #[test]
+    fn wait_release_respects_overall_deadline() {
+        let (mut client, _server) = pair();
+        // Generous per-attempt budget, tiny overall deadline.
+        client.set_retry(StdDuration::from_millis(100), 50);
+        client.set_release_deadline(StdDuration::from_millis(120));
+        let start = Instant::now();
+        assert!(client.wait_release(3).is_err());
+        assert!(
+            start.elapsed() < StdDuration::from_secs(2),
+            "overall deadline must cut polling short, took {:?}",
+            start.elapsed()
+        );
+    }
+
+    /// A `RetryAfter` answer surfaces as an explicit `Error::Shed` with
+    /// the daemon's reason — not a timeout, not a generic error.
+    #[test]
+    fn retry_after_surfaces_as_shed() {
+        let (mut client, server) = pair();
+        let h = std::thread::spawn(move || {
+            let buf = server.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let ClientMsg::Register { task_key, .. } = ClientMsg::decode(&buf).unwrap() else {
+                panic!("expected Register");
+            };
+            let reply = SchedulerMsg::RetryAfter {
+                task_key,
+                ms: 250,
+                reason: "node at capacity".into(),
+            };
+            server.send(&reply.encode().unwrap()).unwrap();
+        });
+        let err = client.register().unwrap_err();
+        h.join().unwrap();
+        let Error::Shed(reason) = err else {
+            panic!("expected Error::Shed, got {err:?}");
+        };
+        assert!(reason.contains("node at capacity"));
+        assert!(reason.contains("250"));
+    }
+
+    /// A redirect to a known endpoint is followed transparently: the
+    /// register lands on the named peer and the client sticks there.
+    #[test]
+    fn redirect_is_followed_to_named_endpoint() {
+        let (t_a, server_a) = crate::hook::ChannelTransport::pair();
+        let (t_b, server_b) = crate::hook::ChannelTransport::pair();
+        let mut client = HookClient::new(
+            t_a,
+            TaskKey::new("svc"),
+            Priority::P1,
+            SymbolResolver::new(SymbolTableModel::default()),
+        )
+        .with_primary_name("n0");
+        client.add_endpoint("n1", t_b);
+        let h_a = std::thread::spawn(move || {
+            let buf = server_a.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let ClientMsg::Register { task_key, .. } = ClientMsg::decode(&buf).unwrap() else {
+                panic!("expected Register on n0");
+            };
+            let reply = SchedulerMsg::Redirect {
+                task_key,
+                node: "n1".into(),
+            };
+            server_a.send(&reply.encode().unwrap()).unwrap();
+        });
+        let h_b = std::thread::spawn(move || {
+            let buf = server_b.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let ClientMsg::Register { task_key, .. } = ClientMsg::decode(&buf).unwrap() else {
+                panic!("expected Register on n1");
+            };
+            let reply = SchedulerMsg::Registered {
+                task_key,
+                sharing_stage: false,
+            };
+            server_b.send(&reply.encode().unwrap()).unwrap();
+        });
+        assert!(!client.register().unwrap());
+        assert_eq!(client.current_endpoint(), "n1");
+        assert_eq!(client.failovers(), 0, "a redirect is not a failover");
+        h_a.join().unwrap();
+        h_b.join().unwrap();
+    }
+
+    /// When the current endpoint goes silent, the client fails over to
+    /// the next endpoint and re-registers there before re-issuing the
+    /// original request.
+    #[test]
+    fn failover_reestablishes_session_on_live_peer() {
+        let (t_a, server_a) = crate::hook::ChannelTransport::pair();
+        let (t_b, server_b) = crate::hook::ChannelTransport::pair();
+        let mut client = HookClient::new(
+            t_a,
+            TaskKey::new("svc"),
+            Priority::P1,
+            SymbolResolver::new(SymbolTableModel::default()),
+        )
+        .with_primary_name("n0");
+        client.add_endpoint("n1", t_b);
+        client.set_retry(StdDuration::from_millis(15), 2);
+        // n0 answers the initial register + task_start, then "dies"
+        // (stops reading entirely).
+        let h_a = std::thread::spawn(move || {
+            let buf = server_a.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let ClientMsg::Register { task_key, .. } = ClientMsg::decode(&buf).unwrap() else {
+                panic!("expected Register on n0");
+            };
+            server_a
+                .send(
+                    &SchedulerMsg::Registered { task_key, sharing_stage: false }
+                        .encode()
+                        .unwrap(),
+                )
+                .unwrap();
+            let buf = server_a.recv(StdDuration::from_secs(1)).unwrap().unwrap();
+            let (msg_seq, msg) = ClientMsg::decode_seq(&buf).unwrap();
+            assert!(matches!(msg, ClientMsg::TaskStart { .. }));
+            server_a
+                .send(&SchedulerMsg::Ack { msg_seq }.encode().unwrap())
+                .unwrap();
+            // Dead from here on: never reads, never answers.
+        });
+        // n1 sees the failover: Register, TaskStart re-announcement,
+        // then the Completion that triggered it all.
+        let h_b = std::thread::spawn(move || {
+            let buf = server_b.recv(StdDuration::from_secs(5)).unwrap().unwrap();
+            let ClientMsg::Register { task_key, .. } = ClientMsg::decode(&buf).unwrap() else {
+                panic!("failover must re-register first");
+            };
+            server_b
+                .send(
+                    &SchedulerMsg::Registered {
+                        task_key,
+                        sharing_stage: false,
+                    }
+                    .encode()
+                    .unwrap(),
+                )
+                .unwrap();
+            let buf = server_b.recv(StdDuration::from_secs(5)).unwrap().unwrap();
+            let (msg_seq, msg) = ClientMsg::decode_seq(&buf).unwrap();
+            assert!(
+                matches!(msg, ClientMsg::TaskStart { .. }),
+                "open task must be re-announced, got {msg:?}"
+            );
+            server_b
+                .send(&SchedulerMsg::Ack { msg_seq }.encode().unwrap())
+                .unwrap();
+            let buf = server_b.recv(StdDuration::from_secs(5)).unwrap().unwrap();
+            let (msg_seq, msg) = ClientMsg::decode_seq(&buf).unwrap();
+            assert!(
+                matches!(msg, ClientMsg::Completion { .. }),
+                "original request re-issued after re-establishment, got {msg:?}"
+            );
+            server_b
+                .send(&SchedulerMsg::Ack { msg_seq }.encode().unwrap())
+                .unwrap();
+        });
+        assert!(!client.register().unwrap());
+        client.task_start(TaskId(1)).unwrap();
+        client
+            .report_completion(TaskId(1), 0, crate::core::Duration::from_micros(5), SimTime(9))
+            .unwrap();
+        assert_eq!(client.current_endpoint(), "n1");
+        assert_eq!(client.failovers(), 1);
+        h_a.join().unwrap();
+        h_b.join().unwrap();
     }
 }

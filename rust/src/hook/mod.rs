@@ -9,9 +9,12 @@
 //!
 //! * [`protocol`] — the versioned wire format (client↔scheduler
 //!   messages; JSON frames over datagrams) with the v2 loss-tolerant
-//!   retransmit envelope (`msg_seq`, `Ack`, `ReleaseQuery`).
+//!   retransmit envelope (`msg_seq`, `Ack`, `ReleaseQuery`) and the v3
+//!   federation control plane (`Redirect`/`RetryAfter` admission
+//!   answers, node-to-node [`PeerMsg::Beacon`] gossip).
 //! * [`client`] — the per-service hook client: intercept → resolve →
-//!   forward → hold/launch, with bounded byte-identical retransmit.
+//!   forward → hold/launch, with exponential-backoff byte-identical
+//!   retransmit, redirect following and multi-endpoint failover.
 //! * [`transport`] — pluggable datagram transports: an in-process
 //!   channel pair (deterministic simulations and tests), real UDP
 //!   sockets (used by `fikit serve`, see [`crate::server`]), and the
@@ -23,8 +26,8 @@ pub mod protocol;
 pub mod transport;
 
 pub use client::HookClient;
-pub use protocol::{ClientMsg, SchedulerMsg, WIRE_VERSION};
+pub use protocol::{ClientMsg, PeerMsg, SchedulerMsg, KIND_PEER, WIRE_VERSION};
 pub use transport::{
-    ChannelTransport, LossyNet, LossyServerTransport, LossyTransport, ServerTransport, Transport,
-    UdpServerTransport, UdpTransport,
+    ChannelTransport, GatedTransport, LossyNet, LossyServerTransport, LossyTransport,
+    ServerTransport, Transport, UdpServerTransport, UdpTransport,
 };

@@ -27,13 +27,34 @@
 //!   `Hold` if still parked).
 //!
 //! v1 frames (no `msg_seq`) are rejected by the version byte.
+//!
+//! ## Version 3: the federation control plane (DESIGN.md §Fleet-federation)
+//!
+//! v3 adds the fleet control plane on top of the v2 envelope (which is
+//! carried unchanged):
+//!
+//! * a `Register` against a full node is no longer a bare `Error` — the
+//!   daemon answers [`SchedulerMsg::Redirect`] (a named live peer has
+//!   room; go there) or [`SchedulerMsg::RetryAfter`] (the whole visible
+//!   fleet is full; back off for an explicit number of milliseconds).
+//!   Load is shed with a reason, never queued unboundedly;
+//! * nodes gossip capacity/health to each other with
+//!   [`PeerMsg::Beacon`] frames (`KIND_PEER`), which ride the same
+//!   datagram socket as client traffic but are routed by the frame kind
+//!   byte and **never enter the session journal** — replay determinism
+//!   (ADR-004) is untouched by the control plane.
+//!
+//! v2 frames are rejected by the version byte: the fleet rolls the
+//! scheduler and hooks together per the deployment story in ADR-005.
 
 use crate::core::{Dim3, Duration, Error, Priority, Result, SimTime, TaskId, TaskKey};
 use crate::util::json::Json;
 
 /// Protocol version; bumped on breaking changes. v2 added the
-/// `msg_seq` retransmit envelope, `Ack` and `ReleaseQuery`.
-pub const WIRE_VERSION: u8 = 2;
+/// `msg_seq` retransmit envelope, `Ack` and `ReleaseQuery`; v3 added
+/// the federation control plane (`Redirect`, `RetryAfter`, peer
+/// `Beacon` frames).
+pub const WIRE_VERSION: u8 = 3;
 
 /// Messages sent by a hook client to the scheduler.
 #[derive(Debug, Clone, PartialEq)]
@@ -122,6 +143,49 @@ pub enum SchedulerMsg {
     Ack { msg_seq: u64 },
     /// Scheduler-side error (e.g. unknown task key).
     Error { message: String },
+    /// This node is at capacity but the named live peer has room:
+    /// re-register there. Answers a `Register` only; the client follows
+    /// the redirect transparently (its next `Register` goes to `node`
+    /// with a fresh session).
+    Redirect { task_key: TaskKey, node: String },
+    /// Explicit load shed: every node this one can see is full (or no
+    /// peer is live). The client should surface the reason and may retry
+    /// after `ms` milliseconds — the daemon never queues admissions
+    /// unboundedly.
+    RetryAfter {
+        task_key: TaskKey,
+        ms: u64,
+        reason: String,
+    },
+}
+
+/// Node-to-node control-plane messages (frame kind `KIND_PEER`).
+///
+/// Beacons are gossip, not state: they are unacknowledged,
+/// loss-tolerant, and deduplicated by a per-node monotonic `seq` so
+/// duplicated/reordered/delayed deliveries over a lossy fabric can
+/// never regress a peer's `FleetView` entry (DESIGN.md §Fleet-federation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PeerMsg {
+    /// Periodic capacity/health advertisement from one node.
+    Beacon {
+        /// Advertised node name (the same name `Redirect` carries).
+        node: String,
+        /// Per-node monotonic beacon sequence; stale (`<=` last seen)
+        /// beacons are dropped by the receiver.
+        seq: u64,
+        /// Sender's clock at emission, for observability only —
+        /// liveness uses receiver-local arrival times.
+        sent_at_ns: u64,
+        /// Device count and per-device capacity of the sender…
+        devices: u32,
+        capacity: u32,
+        /// …and how many of those `devices × capacity` slots are taken.
+        residents: u32,
+        /// True while the node is draining for shutdown: it stays alive
+        /// in fleet views but must not receive redirects.
+        draining: bool,
+    },
 }
 
 fn dim_to_json(d: Dim3) -> Json {
@@ -168,6 +232,21 @@ fn unframe(buf: &[u8]) -> Result<(u8, Json)> {
 
 const KIND_CLIENT: u8 = 0x01;
 const KIND_SCHED: u8 = 0x02;
+/// Node-to-node control-plane frames ([`PeerMsg`]). Public so the
+/// daemon's datagram loop can route on the kind byte without a decode
+/// attempt per possible kind.
+pub const KIND_PEER: u8 = 0x03;
+
+/// Cheap peek at a frame's kind byte (`None` for runts). The daemon
+/// uses this to fork peer control-plane frames away from the journaled
+/// client path before any JSON is parsed.
+pub fn frame_kind(buf: &[u8]) -> Option<u8> {
+    if buf.len() < 2 {
+        None
+    } else {
+        Some(buf[1])
+    }
+}
 
 impl ClientMsg {
     /// JSON body (no envelope). `pub(crate)` so the daemon's session
@@ -353,6 +432,19 @@ impl SchedulerMsg {
             SchedulerMsg::Error { message } => Json::obj()
                 .set("type", "error")
                 .set("message", message.as_str()),
+            SchedulerMsg::Redirect { task_key, node } => Json::obj()
+                .set("type", "redirect")
+                .set("task_key", task_key.as_str())
+                .set("node", node.as_str()),
+            SchedulerMsg::RetryAfter {
+                task_key,
+                ms,
+                reason,
+            } => Json::obj()
+                .set("type", "retry_after")
+                .set("task_key", task_key.as_str())
+                .set("ms", *ms)
+                .set("reason", reason.as_str()),
         }
     }
 
@@ -379,6 +471,15 @@ impl SchedulerMsg {
             "error" => Ok(SchedulerMsg::Error {
                 message: v.req_str("message")?.to_string(),
             }),
+            "redirect" => Ok(SchedulerMsg::Redirect {
+                task_key: key()?,
+                node: v.req_str("node")?.to_string(),
+            }),
+            "retry_after" => Ok(SchedulerMsg::RetryAfter {
+                task_key: key()?,
+                ms: v.req_u64("ms")?,
+                reason: v.req_str("reason")?.to_string(),
+            }),
             other => Err(Error::Protocol(format!(
                 "unknown scheduler msg type {other:?}"
             ))),
@@ -397,6 +498,59 @@ impl SchedulerMsg {
             )));
         }
         SchedulerMsg::from_json(&body)
+    }
+}
+
+impl PeerMsg {
+    fn to_json(&self) -> Json {
+        match self {
+            PeerMsg::Beacon {
+                node,
+                seq,
+                sent_at_ns,
+                devices,
+                capacity,
+                residents,
+                draining,
+            } => Json::obj()
+                .set("type", "beacon")
+                .set("node", node.as_str())
+                .set("seq", *seq)
+                .set("sent_at_ns", *sent_at_ns)
+                .set("devices", *devices)
+                .set("capacity", *capacity)
+                .set("residents", *residents)
+                .set("draining", *draining),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<PeerMsg> {
+        match v.req_str("type")? {
+            "beacon" => Ok(PeerMsg::Beacon {
+                node: v.req_str("node")?.to_string(),
+                seq: v.req_u64("seq")?,
+                sent_at_ns: v.req_u64("sent_at_ns")?,
+                devices: v.req_u64("devices")? as u32,
+                capacity: v.req_u64("capacity")? as u32,
+                residents: v.req_u64("residents")? as u32,
+                draining: v.req_bool("draining")?,
+            }),
+            other => Err(Error::Protocol(format!("unknown peer msg type {other:?}"))),
+        }
+    }
+
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        Ok(frame(KIND_PEER, &self.to_json().encode()))
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PeerMsg> {
+        let (kind, body) = unframe(buf)?;
+        if kind != KIND_PEER {
+            return Err(Error::Protocol(format!(
+                "expected peer frame, got kind {kind}"
+            )));
+        }
+        PeerMsg::from_json(&body)
     }
 }
 
@@ -497,11 +651,42 @@ mod tests {
             SchedulerMsg::Error {
                 message: "unknown task".into(),
             },
+            SchedulerMsg::Redirect {
+                task_key: TaskKey::new("svc"),
+                node: "n2".into(),
+            },
+            SchedulerMsg::RetryAfter {
+                task_key: TaskKey::new("svc"),
+                ms: 250,
+                reason: "fleet at capacity".into(),
+            },
         ];
         for msg in msgs {
             let dec = SchedulerMsg::decode(&msg.encode().unwrap()).unwrap();
             assert_eq!(dec, msg);
         }
+    }
+
+    #[test]
+    fn peer_beacon_round_trip_and_kind_routing() {
+        let b = PeerMsg::Beacon {
+            node: "n1".into(),
+            seq: 42,
+            sent_at_ns: 1_000_000,
+            devices: 2,
+            capacity: 16,
+            residents: 7,
+            draining: false,
+        };
+        let enc = b.encode().unwrap();
+        assert_eq!(enc[0], WIRE_VERSION);
+        assert_eq!(frame_kind(&enc), Some(KIND_PEER));
+        assert_eq!(PeerMsg::decode(&enc).unwrap(), b);
+        // Peer frames are not client or scheduler frames.
+        assert!(ClientMsg::decode(&enc).is_err());
+        assert!(SchedulerMsg::decode(&enc).is_err());
+        // And the kind peek handles runts.
+        assert_eq!(frame_kind(&[WIRE_VERSION]), None);
     }
 
     #[test]

@@ -229,6 +229,11 @@ struct LossyState {
     drop_permille: u32,
     dropped_up: u64,
     dropped_down: u64,
+    /// Partition switch: while set, EVERY datagram in both directions
+    /// is dropped (and counted), modelling a network partition of the
+    /// node this fabric fronts. Healing just clears the flag — queued
+    /// pre-partition datagrams are unaffected.
+    partitioned: bool,
 }
 
 impl LossyState {
@@ -269,6 +274,7 @@ impl LossyNet {
                 drop_permille,
                 dropped_up: 0,
                 dropped_down: 0,
+                partitioned: false,
             }),
             cv: Condvar::new(),
         })
@@ -298,6 +304,18 @@ impl LossyNet {
         let s = self.state.lock().expect("lossy net poisoned");
         (s.dropped_up, s.dropped_down)
     }
+
+    /// Partition (or heal) this fabric: while partitioned, every
+    /// datagram in both directions vanishes. The node-failure churn
+    /// scenario uses this to cut a node off mid-traffic and later heal
+    /// it (`cluster::sim::run_node_churn`).
+    pub fn set_partitioned(&self, partitioned: bool) {
+        let mut s = self.state.lock().expect("lossy net poisoned");
+        s.partitioned = partitioned;
+        drop(s);
+        // Wake blocked receivers so they re-check their deadlines.
+        self.cv.notify_all();
+    }
 }
 
 /// Client endpoint on a [`LossyNet`].
@@ -317,7 +335,7 @@ impl Transport for LossyTransport {
     fn send(&self, buf: &[u8]) -> Result<()> {
         let mut s = self.net.state.lock().expect("lossy net poisoned");
         let permille = s.drop_permille;
-        if LossyState::roll(&mut s.rng_up, permille) {
+        if s.partitioned || LossyState::roll(&mut s.rng_up, permille) {
             s.dropped_up += 1;
             return Ok(()); // the datagram silently vanishes, as UDP would
         }
@@ -381,7 +399,7 @@ impl ServerTransport for LossyServerTransport {
     fn send_to(&self, buf: &[u8], addr: SocketAddr) -> Result<()> {
         let mut s = self.net.state.lock().expect("lossy net poisoned");
         let permille = s.drop_permille;
-        if LossyState::roll(&mut s.rng_down, permille) {
+        if s.partitioned || LossyState::roll(&mut s.rng_down, permille) {
             s.dropped_down += 1;
             return Ok(());
         }
@@ -392,6 +410,52 @@ impl ServerTransport for LossyServerTransport {
         drop(s);
         self.net.cv.notify_all();
         Ok(())
+    }
+}
+
+/// A [`Transport`] wrapper with an external on/off switch: while the
+/// gate is closed, sends vanish and receives time out, exactly as if
+/// the link were cut. The node-failure churn scenario closes the gates
+/// on a partitioned node's *outgoing* peer links (its inbound fabric is
+/// cut with [`LossyNet::set_partitioned`]) so a partition severs the
+/// node in both directions, then reopens them to heal.
+pub struct GatedTransport<T: Transport> {
+    inner: T,
+    open: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl<T: Transport> GatedTransport<T> {
+    /// Wrap `inner`; returns the transport and its gate (true = open).
+    pub fn new(inner: T) -> (GatedTransport<T>, Arc<std::sync::atomic::AtomicBool>) {
+        let open = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        (
+            GatedTransport {
+                inner,
+                open: Arc::clone(&open),
+            },
+            open,
+        )
+    }
+
+    fn is_open(&self) -> bool {
+        self.open.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl<T: Transport> Transport for GatedTransport<T> {
+    fn send(&self, buf: &[u8]) -> Result<()> {
+        if !self.is_open() {
+            return Ok(()); // severed link: datagram vanishes silently
+        }
+        self.inner.send(buf)
+    }
+
+    fn recv(&self, timeout: StdDuration) -> Result<Option<Vec<u8>>> {
+        if !self.is_open() {
+            std::thread::sleep(timeout.min(StdDuration::from_millis(20)));
+            return Ok(None);
+        }
+        self.inner.recv(timeout)
     }
 }
 
@@ -472,6 +536,50 @@ mod tests {
         client.send(b"wake").unwrap();
         let (buf, _) = h.join().unwrap();
         assert_eq!(buf, b"wake");
+    }
+
+    #[test]
+    fn partition_cuts_both_directions_and_heals() {
+        let net = LossyNet::new(3, 0);
+        let client = net.client_endpoint(9001);
+        let server = net.server_endpoint();
+        net.set_partitioned(true);
+        client.send(b"lost-up").unwrap();
+        server.send_to(b"lost-down", client.addr()).unwrap();
+        assert!(server.recv_from(StdDuration::from_millis(10)).unwrap().is_none());
+        assert!(client.recv(StdDuration::from_millis(10)).unwrap().is_none());
+        assert_eq!(net.dropped(), (1, 1));
+        // Heal: traffic flows again, no residue from the partition.
+        net.set_partitioned(false);
+        client.send(b"up").unwrap();
+        let (buf, from) = server.recv_from(StdDuration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(buf, b"up");
+        server.send_to(b"down", from).unwrap();
+        assert_eq!(
+            client.recv(StdDuration::from_millis(100)).unwrap().unwrap(),
+            b"down"
+        );
+    }
+
+    #[test]
+    fn gated_transport_severs_and_reopens() {
+        let (a, b) = ChannelTransport::pair();
+        let (gated, gate) = GatedTransport::new(a);
+        gated.send(b"one").unwrap();
+        assert_eq!(b.recv(StdDuration::from_millis(50)).unwrap().unwrap(), b"one");
+        gate.store(false, std::sync::atomic::Ordering::Relaxed);
+        gated.send(b"two").unwrap(); // vanishes
+        b.send(b"three").unwrap(); // undeliverable while closed
+        assert!(gated.recv(StdDuration::from_millis(10)).unwrap().is_none());
+        gate.store(true, std::sync::atomic::Ordering::Relaxed);
+        // The queued datagram from the peer is visible again (the gate
+        // models a severed *link*, not a flushed queue)…
+        assert_eq!(
+            gated.recv(StdDuration::from_millis(50)).unwrap().unwrap(),
+            b"three"
+        );
+        // …and the dropped send is gone for good.
+        assert!(b.recv(StdDuration::from_millis(10)).unwrap().is_none());
     }
 
     #[test]

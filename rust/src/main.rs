@@ -36,12 +36,20 @@ USAGE:
   fikit serve [--bind ADDR] [--profiles profiles.json] [--devices N]
               [--capacity C] [--placement bestmatch|leastloaded|roundrobin]
               [--online] [--save-profiles PATH] [--journal DIR]
+              [--advertise NAME] [--peers n1=host:port,...] [--beacon-ms N]
+              [--run-for-ms N]
         one scheduling shard per device; services are routed to shards
         by the placement policy's capacity accounting; --online refines
         SK/SG from sharing-stage traffic and --save-profiles persists
         the refined store periodically (every 30s); --journal write-ahead
         journals session lifecycle into DIR and replays it on startup so
-        a restarted daemon keeps every admitted session (ADR-004)
+        a restarted daemon keeps every admitted session (ADR-004);
+        --advertise + --peers federate daemons into a fleet: each node
+        beacons capacity/health every --beacon-ms (default 100) and
+        over-capacity registers are redirected to the best live peer or
+        shed with an explicit RetryAfter (ADR-005); --run-for-ms bounds
+        the run and prints the shutdown accounting line (rejected,
+        redirected, shed, unroutable counts)
   fikit cluster [--gpus N] [--policy bestmatch|leastloaded|roundrobin]
                 [--compat compat.json] [--measure-compat]
   fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
@@ -252,11 +260,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     cfg.online.enabled = args.flag("online");
     cfg.journal = args.opt("journal").map(std::path::PathBuf::from);
+    cfg.node = args.opt("advertise").map(str::to_string);
+    if let Some(peers) = args.opt("peers") {
+        if cfg.node.is_none() {
+            return Err(fikit::core::Error::Parse(
+                "--peers requires --advertise NAME (a beacon needs a sender)".into(),
+            ));
+        }
+        for entry in peers.split(',').filter(|e| !e.is_empty()) {
+            let Some((name, addr)) = entry.split_once('=') else {
+                return Err(fikit::core::Error::Parse(format!(
+                    "--peers entry {entry:?} is not name=host:port"
+                )));
+            };
+            cfg.peers.push((name.to_string(), addr.to_string()));
+        }
+    }
+    let beacon_ms: u64 = args.opt_parse("beacon-ms", 100u64)?;
+    if beacon_ms == 0 {
+        return Err(fikit::core::Error::Parse("--beacon-ms must be ≥ 1".into()));
+    }
+    cfg.fleet.beacon_interval = fikit::core::Duration::from_millis(beacon_ms);
+    let run_for_ms: u64 = args.opt_parse("run-for-ms", 0u64)?;
+    let deadline = if run_for_ms > 0 {
+        Some(std::time::Duration::from_millis(run_for_ms))
+    } else {
+        None
+    };
     let save_path = args.opt("save-profiles").map(str::to_string);
     let policy = cfg.policy;
     let capacity = cfg.capacity;
     let online = cfg.online.enabled;
     let journal = cfg.journal.clone();
+    let node = cfg.node.clone();
+    let peer_count = cfg.peers.len();
     let mut server = SchedulerServer::bind(cfg, profiles)?;
     println!(
         "fikit scheduler daemon listening on {} ({} device shard(s), capacity {}/device, {:?} placement, online refinement {})",
@@ -266,6 +303,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy,
         if online { "on" } else { "off" },
     );
+    if let Some(name) = &node {
+        println!(
+            "fleet node {name:?}: beaconing to {peer_count} peer(s) every {beacon_ms} ms"
+        );
+    }
     if let Some(dir) = &journal {
         println!(
             "session journal -> {} ({} live session(s) replayed)",
@@ -273,22 +315,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
             server.daemon().clients(),
         );
     }
-    match save_path {
-        None => server.run_for(None),
+    match (&save_path, deadline) {
+        (None, d) => server.run_for(d)?,
         // A daemon is stopped by killing it (there is no clean-shutdown
         // signal path without external deps), so "persist on exit"
         // would never run. Persist periodically instead: at most one
         // save interval of refined knowledge is ever lost.
-        Some(path) => {
+        (Some(path), d) => {
             const SAVE_EVERY: std::time::Duration = std::time::Duration::from_secs(30);
             println!("persisting profile store (incl. refined epochs) -> {path} every {}s",
                 SAVE_EVERY.as_secs());
+            let start = std::time::Instant::now();
             loop {
-                server.run_for(Some(SAVE_EVERY))?;
-                server.save_profiles(&path)?;
+                let slice = match d {
+                    None => SAVE_EVERY,
+                    Some(total) => {
+                        let left = total.saturating_sub(start.elapsed());
+                        if left.is_zero() {
+                            break;
+                        }
+                        SAVE_EVERY.min(left)
+                    }
+                };
+                server.run_for(Some(slice))?;
+                server.save_profiles(path)?;
             }
         }
     }
+    // Shutdown accounting (reached with --run-for-ms): every rejected
+    // or unroutable interaction is surfaced — sheds are explicit in the
+    // stats line exactly as they are explicit on the wire.
+    let s = server.stats();
+    let d = server.daemon_stats();
+    println!(
+        "shutdown: clients={} holds={} releases=(immediate {}, filled {}, drained {}, purged {}) \
+         rejected_capacity={} redirects={} sheds={} releases_unroutable={} decode_errors={} \
+         beacons=(sent {}, received {}, stale {}) live_peers={}",
+        server.daemon().clients(),
+        s.holds,
+        s.releases_immediate,
+        s.releases_filled,
+        s.releases_drained,
+        s.purged_launches,
+        d.rejected_capacity,
+        d.redirects,
+        d.sheds,
+        d.releases_unroutable,
+        d.decode_errors,
+        d.beacons_sent,
+        d.beacons_received,
+        d.beacons_stale,
+        server.daemon().live_peers(),
+    );
+    Ok(())
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {

@@ -12,12 +12,13 @@
 //! exactly as in the paper — the daemon only decides *when* each held
 //! launch may proceed.
 
+use crate::cluster::control::FleetConfig;
 use crate::cluster::placement::PlacementPolicy;
 use crate::coordinator::fikit::DEFAULT_EPSILON;
 use crate::core::{Duration, Result};
 use crate::daemon::{DaemonConfig, SchedulerDaemon};
 pub use crate::daemon::{DaemonStats, ServerStats};
-use crate::hook::transport::UdpServerTransport;
+use crate::hook::transport::{UdpServerTransport, UdpTransport};
 use crate::profile::ProfileStore;
 use std::net::SocketAddr;
 use std::time::Duration as StdDuration;
@@ -45,6 +46,16 @@ pub struct ServerConfig {
     /// the daemon replays snapshot + tail on startup (ADR-004), so a
     /// restart rejects no previously admitted still-live session.
     pub journal: Option<std::path::PathBuf>,
+    /// Fleet membership: this node's advertised name (`fikit serve
+    /// --advertise n0`). `None` = standalone — no beacons, over-capacity
+    /// registers always shed with `RetryAfter` (ADR-005).
+    pub node: Option<String>,
+    /// Named peers to beacon to (`fikit serve --peers n1=host:port,…`):
+    /// the capacity/health side of the federation control plane.
+    pub peers: Vec<(String, String)>,
+    /// Control-plane tuning: beacon cadence, missed-beacon failure
+    /// detection threshold, `RetryAfter` back-off hint.
+    pub fleet: FleetConfig,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +69,9 @@ impl Default for ServerConfig {
             min_profile_runs: 1,
             online: crate::profile::OnlineConfig::default(),
             journal: None,
+            node: None,
+            peers: Vec::new(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -80,8 +94,10 @@ impl SchedulerServer {
             epsilon: cfg.epsilon,
             min_profile_runs: cfg.min_profile_runs,
             online: cfg.online.clone(),
+            node: cfg.node.clone(),
+            fleet: cfg.fleet,
         };
-        let daemon = match &cfg.journal {
+        let mut daemon = match &cfg.journal {
             Some(dir) => SchedulerDaemon::with_journal(
                 dcfg,
                 profiles,
@@ -90,6 +106,11 @@ impl SchedulerServer {
             )?,
             None => SchedulerDaemon::new(dcfg, profiles),
         };
+        // One outbound UDP link per named peer: the daemon pumps its
+        // capacity/health beacon down each of them between datagrams.
+        for (_name, addr) in &cfg.peers {
+            daemon.add_peer_link(Box::new(UdpTransport::connect(addr)?));
+        }
         Ok(SchedulerServer { daemon, transport })
     }
 

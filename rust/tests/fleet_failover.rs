@@ -1,0 +1,137 @@
+//! Fleet fault-injection acceptance: the scripted node-failure churn
+//! scenarios from DESIGN.md §Fleet-federation, run over real federated
+//! daemons on the seeded lossy fabric.
+//!
+//! These are the closing-the-loop tests for the federation control
+//! plane: a node is killed (or partitioned) mid-traffic and every
+//! in-flight client session must either complete on a failover node or
+//! end in an explicit shed reply — no silent loss, no hangs, no
+//! duplicate side effects. [`run_node_churn`] asserts held-launch
+//! conservation and bounded per-operation latency internally; the
+//! scenarios here assert the fleet-level outcomes on top.
+
+use fikit::cluster::{run_node_churn, NodeChurnConfig};
+use fikit::core::Duration;
+use std::time::Duration as StdDuration;
+
+/// 3 nodes, 20% packet loss, node 2 killed abruptly mid-traffic and
+/// restarted from its journal 2.5 s later.
+fn kill_restart_cfg(seed: u64) -> NodeChurnConfig {
+    let mut cfg = NodeChurnConfig::new(seed);
+    cfg.nodes = 3;
+    cfg.capacity = 3;
+    cfg.clients = 6;
+    cfg.tasks_per_client = 6;
+    cfg.kernels_per_task = 6;
+    cfg.drop_permille = 200;
+    // Stretch sessions past the kill point so node 2's clients are
+    // genuinely in flight when their node vanishes.
+    cfg.kernel_pace = StdDuration::from_millis(25);
+    cfg.kill_node = Some(2);
+    // Late enough that incarnation 1 has emitted well over
+    // `restart_seq_gap` beacons, so incarnation 2's seq regression is
+    // folded as a restart by the survivors.
+    cfg.kill_after = StdDuration::from_millis(1_200);
+    // Orphans need ~1 s of timed-out retries to declare the node dead
+    // and fail over; restarting only after that window keeps the
+    // scenario honest (no transparent-restart racing the failover).
+    cfg.restart_after = Some(StdDuration::from_millis(2_500));
+    cfg
+}
+
+#[test]
+fn killed_node_fails_over_and_rejoins_from_journal() {
+    for seed in [0xfee7_0001u64, 0xfee7_0002, 0xfee7_0003] {
+        let cfg = kill_restart_cfg(seed);
+        let report = run_node_churn(&cfg).unwrap();
+
+        // Every session is accounted for: completed (possibly on a
+        // failover node) or explicitly shed. run_node_churn already
+        // failed the run on any other outcome.
+        assert_eq!(
+            report.completed + report.shed,
+            cfg.clients,
+            "seed {seed:#x}: lost sessions — outcomes {:?}",
+            report.outcomes
+        );
+        // Node 2's two home clients were mid-session at the kill; both
+        // must have switched endpoints.
+        assert!(
+            report.failovers >= 2,
+            "seed {seed:#x}: expected both orphans to fail over, saw {}",
+            report.failovers
+        );
+        // With 9 fleet slots for 6 clients the orphans find room; at
+        // most a transient race sheds one.
+        assert!(
+            report.completed >= cfg.clients - 1,
+            "seed {seed:#x}: too many sheds — outcomes {:?}",
+            report.outcomes
+        );
+        // The restarted incarnation replayed its journal: the orphaned
+        // sessions were re-admitted, not forgotten.
+        assert!(
+            report.rejoined_sessions > 0,
+            "seed {seed:#x}: journal replay re-admitted no sessions"
+        );
+        // Survivors folded the beacon-seq regression as a peer restart
+        // and let incarnation 2 back into their fleet views.
+        assert!(
+            report.restarts_observed >= 1,
+            "seed {seed:#x}: no survivor observed the restart"
+        );
+        for (i, lp) in report.live_peers.iter().enumerate() {
+            if i == 2 {
+                assert!(lp.is_some(), "seed {seed:#x}: restarted node not running");
+            } else {
+                assert_eq!(
+                    *lp,
+                    Some(2),
+                    "seed {seed:#x}: node {i} does not see the full fleet"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partitioned_node_heals_and_reenters_the_fleet() {
+    let mut cfg = NodeChurnConfig::new(0x9a27_1710);
+    cfg.nodes = 3;
+    cfg.capacity = 3;
+    cfg.clients = 6;
+    cfg.tasks_per_client = 6;
+    cfg.kernels_per_task = 6;
+    cfg.drop_permille = 150;
+    cfg.kernel_pace = StdDuration::from_millis(25);
+    cfg.partition_node = Some(1);
+    cfg.partition_after = StdDuration::from_millis(500);
+    // Heal only after the orphans' ~1 s retry budget has expired, so
+    // failover genuinely happens before the partition lifts.
+    cfg.partition_for = StdDuration::from_millis(2_000);
+    cfg.beacon_interval = Duration::from_millis(25);
+
+    let report = run_node_churn(&cfg).unwrap();
+    assert_eq!(
+        report.completed + report.shed,
+        cfg.clients,
+        "lost sessions — outcomes {:?}",
+        report.outcomes
+    );
+    assert!(
+        report.failovers >= 2,
+        "expected node 1's clients to fail over, saw {}",
+        report.failovers
+    );
+    // A partition is not a restart: the node's beacon seq stays
+    // monotone through the outage, so nobody folds a restart.
+    assert_eq!(
+        report.restarts_observed, 0,
+        "partition misread as a restart"
+    );
+    // After healing plus a settle window every node sees every other
+    // node alive again — the partitioned node re-entered placement.
+    for (i, lp) in report.live_peers.iter().enumerate() {
+        assert_eq!(*lp, Some(2), "node {i} still isolated after heal");
+    }
+}

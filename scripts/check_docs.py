@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Docs health check — the repo's "docs job".
 
-Five checks, zero dependencies:
+Six checks, zero dependencies:
 
 1. **Markdown links**: every relative link target in every tracked
    `*.md` file must exist (anchors are checked against the target
@@ -20,7 +20,12 @@ Five checks, zero dependencies:
    docs/source must resolve to an existing
    ``rust/docs/ADR-<NNN>-*.md`` file, and each ADR's ``Depends on`` /
    ``Unlocks`` sections may only reference ADRs that exist.
-5. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
+5. **Wire-protocol coverage**: every variant of ``ClientMsg`` /
+   ``SchedulerMsg`` / ``PeerMsg`` in ``rust/src/hook/protocol.rs`` must
+   be documented (backticked) in DESIGN.md's "Wire protocol" section —
+   a message added to the wire without prose fails here. Probed: the
+   variant list is parsed from the Rust source, not hand-maintained.
+6. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
    (skipped with a notice when no cargo toolchain is available, e.g. in
    the offline container).
 
@@ -204,6 +209,72 @@ def check_adr_links() -> list[str]:
     return errors
 
 
+PROTOCOL_RS = os.path.join(REPO, "rust", "src", "hook", "protocol.rs")
+PROTOCOL_ENUMS = ("ClientMsg", "SchedulerMsg", "PeerMsg")
+
+
+def protocol_variants() -> dict[str, list[str]]:
+    """Parse the wire-message enum variant names out of protocol.rs."""
+    with open(PROTOCOL_RS, encoding="utf-8") as f:
+        lines = f.readlines()
+    variants: dict[str, list[str]] = {}
+    enum = None
+    depth = 0
+    variant = re.compile(r"^\s{4}([A-Z]\w*)\s*(?:\{|\(|,|$)")
+    for line in lines:
+        if enum is None:
+            m = re.match(r"\s*pub enum (\w+)\s*\{", line)
+            if m and m.group(1) in PROTOCOL_ENUMS:
+                enum = m.group(1)
+                variants[enum] = []
+                depth = line.count("{") - line.count("}")
+            continue
+        if depth == 1:
+            m = variant.match(line)
+            if m:
+                variants[enum].append(m.group(1))
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            enum = None
+    return variants
+
+
+def check_protocol_docs() -> list[str]:
+    """Every wire-message variant must be documented in DESIGN.md."""
+    if not os.path.exists(PROTOCOL_RS):
+        return ["rust/src/hook/protocol.rs does not exist"]
+    if not os.path.exists(DESIGN):
+        return []  # check_design_refs already reports this
+    variants = protocol_variants()
+    errors = []
+    for enum in PROTOCOL_ENUMS:
+        if not variants.get(enum):
+            errors.append(
+                f"rust/src/hook/protocol.rs: found no variants for enum "
+                f"{enum} — parser or protocol drifted"
+            )
+    with open(DESIGN, encoding="utf-8") as f:
+        design = f.read()
+    m = re.search(r"^#{2,6}\s+.*Wire protocol.*$", design, re.MULTILINE)
+    if not m:
+        return errors + [
+            'rust/DESIGN.md: no "Wire protocol" heading — the protocol '
+            "vocabulary has nowhere to be documented"
+        ]
+    level = len(design[m.start():].split(None, 1)[0])
+    rest = design[m.end():]
+    nxt = re.search(rf"^#{{2,{level}}}\s", rest, re.MULTILINE)
+    section = rest[: nxt.start()] if nxt else rest
+    for enum, names in variants.items():
+        for name in names:
+            if not re.search(rf"`[^`]*\b{name}\b[^`]*`", section):
+                errors.append(
+                    f"rust/DESIGN.md: wire-protocol section never documents "
+                    f"`{name}` ({enum} variant in rust/src/hook/protocol.rs)"
+                )
+    return errors
+
+
 def check_rustdoc() -> list[str]:
     if shutil.which("cargo") is None:
         print("  [skip] cargo not on PATH — rustdoc check skipped")
@@ -229,6 +300,7 @@ def main() -> int:
         ("DESIGN.md § references", check_design_refs),
         ("DESIGN.md table of contents", check_design_toc),
         ("ADR cross-links", check_adr_links),
+        ("wire-protocol coverage in DESIGN.md", check_protocol_docs),
         ("rustdoc (cargo doc --no-deps)", check_rustdoc),
     ]:
         print(f"checking {name} ...")
