@@ -297,6 +297,24 @@ pub fn run_hotpath_suite(quick: bool) -> SuiteReport {
         budgets.insert("fikit_fill/window_1ms_q64".to_string(), 50_000);
     }
 
+    // --- learned-interference hot path (ADR-006): the per-completion
+    // EWMA observe + the per-scan predicted-dilation blend, both O(1)
+    // probes of the dense pair tables and allocation-free in steady
+    // state (gated by tests/hotpath_alloc.rs). ---
+    {
+        use crate::cluster::InterferenceModel;
+        let mut model = InterferenceModel::default();
+        let mut i = 0usize;
+        b.bench("interference/observe_and_predict", move || {
+            let victim = ModelKind::ALL[i % ModelKind::COUNT];
+            let aggressor = ModelKind::ALL[(i / ModelKind::COUNT) % ModelKind::COUNT];
+            i += 1;
+            model.observe(victim, aggressor, 1.25);
+            black_box(model.high_slowdown(victim, aggressor))
+        });
+        budgets.insert("interference/observe_and_predict".to_string(), 500);
+    }
+
     // --- per-completion profile lookups: resolved (hot path) vs the
     // string-keyed store probe it replaced ---
     {

@@ -1,29 +1,47 @@
-//! The pairwise combination-compatibility matrix (paper §5).
+//! Pairwise interference knowledge: the offline combination-compatibility
+//! matrix (paper §5) plus the online-learned [`InterferenceModel`]
+//! (ADR-006) built on top of it.
 //!
-//! For an ordered pair `(high, low)` the matrix stores how well the two
-//! models share a GPU under FIKIT: the high-priority slowdown vs solo
-//! and the low-priority effective throughput. Two ways to obtain it:
+//! For an ordered pair `(high, low)` the [`CompatMatrix`] stores how well
+//! the two models share a GPU under FIKIT: the high-priority slowdown vs
+//! solo and the low-priority effective throughput. Two ways to obtain it:
 //!
 //! * [`CompatMatrix::measure`] — run the actual pairwise FIKIT
-//!   simulation for every pair (the paper's "prepare combinations of
-//!   potential models and measure"). Expensive but exact; done offline,
-//!   persisted as JSON, preloaded by the placement policy.
+//!   simulation for every pair, self-pairs included (the paper's
+//!   "prepare combinations of potential models and measure"). Expensive
+//!   but exact; done offline, persisted as JSON, preloaded by the
+//!   placement policy.
 //! * [`CompatMatrix::predict`] — a zero-measurement analytic estimate
 //!   from the models' profiles alone: the low model fits into the high
 //!   model's sync-stall budget proportionally to how many of its kernels
 //!   fit the gap sizes. Used when a pair was never measured.
+//!
+//! Both are *priors*: frozen at load time, blind to the deployment's
+//! actual concurrency backend and co-location mix. The
+//! [`InterferenceModel`] keeps them as the cold-start estimate and folds
+//! in **observed** pairwise dilation online — every harvested completion
+//! whose service shared a device attributes its slowdown to the models
+//! co-resident at the time (EWMA per ordered `(victim, aggressor)`
+//! pair). Placement and the churn QoS scan consult the blended estimate,
+//! so eviction targets the *predicted worst aggressor* instead of the
+//! currently-noisiest victim (DESIGN.md §8). Storage is dense
+//! `ModelKind::COUNT²` arrays: lookups and updates are plain indexed
+//! reads/writes — no hashing, no allocation — because the placement scan
+//! performs O(residents²) of them per decision.
 
 use crate::config::{ExperimentConfig, ServiceConfig};
 use crate::coordinator::driver::run_experiment;
 use crate::coordinator::Mode;
-use crate::core::{Priority, Result};
+use crate::core::{Error, Priority, Result};
 use crate::util::json::Json;
 use crate::workload::ModelKind;
-use std::collections::BTreeMap;
 use std::path::Path;
 
+/// Number of models — the dense table dimension.
+const N: usize = ModelKind::COUNT;
+
 /// Compatibility of one ordered (high, low) pair.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CompatEntry {
     /// High-priority JCT under FIKIT sharing / solo JCT (≥1; closer to 1
     /// is better).
@@ -43,10 +61,21 @@ impl CompatEntry {
     }
 }
 
-/// The preloaded pairwise matrix, keyed by (high model, low model).
-#[derive(Debug, Clone, Default)]
+/// The preloaded pairwise matrix, keyed by (high model, low model) —
+/// stored densely by [`ModelKind::index`] so a lookup is two array
+/// indexes, not two `String` allocations (the placement scan does
+/// O(residents²) lookups per decision).
+#[derive(Debug, Clone)]
 pub struct CompatMatrix {
-    entries: BTreeMap<(String, String), CompatEntry>,
+    entries: [[Option<CompatEntry>; N]; N],
+}
+
+impl Default for CompatMatrix {
+    fn default() -> CompatMatrix {
+        CompatMatrix {
+            entries: [[None; N]; N],
+        }
+    }
 }
 
 impl CompatMatrix {
@@ -54,24 +83,32 @@ impl CompatMatrix {
         CompatMatrix::default()
     }
 
+    /// Number of measured (stored) pairs.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries
+            .iter()
+            .flat_map(|row| row.iter())
+            .filter(|e| e.is_some())
+            .count()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
     }
 
     pub fn insert(&mut self, high: ModelKind, low: ModelKind, entry: CompatEntry) {
-        self.entries
-            .insert((high.name().to_string(), low.name().to_string()), entry);
+        self.entries[high.index()][low.index()] = Some(entry);
+    }
+
+    /// The stored entry alone — `None` when the pair was never measured
+    /// (loaded). Lets callers distinguish measurement from prediction.
+    pub fn lookup(&self, high: ModelKind, low: ModelKind) -> Option<CompatEntry> {
+        self.entries[high.index()][low.index()]
     }
 
     /// Look up a measured entry; falls back to the analytic prediction.
     pub fn get(&self, high: ModelKind, low: ModelKind) -> CompatEntry {
-        self.entries
-            .get(&(high.name().to_string(), low.name().to_string()))
-            .cloned()
+        self.entries[high.index()][low.index()]
             .unwrap_or_else(|| Self::predict(high, low))
     }
 
@@ -114,7 +151,9 @@ impl CompatMatrix {
     }
 
     /// Measure one pair by running the actual FIKIT simulation (solo
-    /// baselines + shared run).
+    /// baselines + shared run). `high == low` is a valid pair: two
+    /// instances of the same model sharing a device — common in real
+    /// fleets — measured exactly like a heterogeneous pair.
     pub fn measure_pair(
         high: ModelKind,
         low: ModelKind,
@@ -159,14 +198,14 @@ impl CompatMatrix {
         })
     }
 
-    /// Measure every ordered pair from `models` (the offline campaign).
+    /// Measure every ordered pair from `models` — including self-pairs,
+    /// so homogeneous co-location gets a measured entry instead of
+    /// silently falling back to [`CompatMatrix::predict`] (the offline
+    /// campaign).
     pub fn measure(models: &[ModelKind], tasks: u32, seed: u64) -> Result<CompatMatrix> {
         let mut m = CompatMatrix::new();
         for &high in models {
             for &low in models {
-                if high == low {
-                    continue;
-                }
                 m.insert(high, low, Self::measure_pair(high, low, tasks, seed)?);
             }
         }
@@ -176,15 +215,19 @@ impl CompatMatrix {
     // ----- persistence -----
 
     pub fn to_json(&self) -> Json {
-        let mut arr = Vec::with_capacity(self.entries.len());
-        for ((h, l), e) in &self.entries {
-            arr.push(
-                Json::obj()
-                    .set("high", h.as_str())
-                    .set("low", l.as_str())
-                    .set("high_slowdown", e.high_slowdown)
-                    .set("low_throughput", e.low_throughput),
-            );
+        let mut arr = Vec::with_capacity(self.len());
+        for high in ModelKind::ALL {
+            for low in ModelKind::ALL {
+                if let Some(e) = self.entries[high.index()][low.index()] {
+                    arr.push(
+                        Json::obj()
+                            .set("high", high.name())
+                            .set("low", low.name())
+                            .set("high_slowdown", e.high_slowdown)
+                            .set("low_throughput", e.low_throughput),
+                    );
+                }
+            }
         }
         Json::obj().set("version", 1u64).set("pairs", Json::Arr(arr))
     }
@@ -214,6 +257,202 @@ impl CompatMatrix {
     pub fn load(path: impl AsRef<Path>) -> Result<CompatMatrix> {
         let text = std::fs::read_to_string(path.as_ref())?;
         CompatMatrix::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// EWMA smoothing for observed pairwise dilation. Deliberately heavier
+/// than the profile refiner's per-kernel alpha: co-residency attribution
+/// is noisy (every co-resident shares the blame for one observation), so
+/// the estimate should turn over in tens of completions, not units.
+pub const DEFAULT_INTERFERENCE_ALPHA: f64 = 0.2;
+
+/// Prior pseudo-count: the blend weight of the offline prior against `n`
+/// online observations is `prior_weight / (n + prior_weight)`. Four
+/// observations already outvote the prior.
+const PRIOR_WEIGHT: f64 = 4.0;
+
+/// The learned interference model (ADR-006): offline priors resolved
+/// densely at construction, plus an online EWMA **dilation** estimate
+/// per ordered `(victim, aggressor)` model pair, fed by co-residency
+/// attribution — when a completed task's slowdown is harvested, every
+/// model co-resident on its device is charged with that slowdown.
+///
+/// Lookups ([`InterferenceModel::high_slowdown`],
+/// [`InterferenceModel::score`]) blend the learned estimate with the
+/// prior by sample count, so an unobserved pair behaves exactly like the
+/// static matrix and a well-observed pair reflects the deployment's
+/// actual backend and mix. Every path — observe and lookup — is flat
+/// array arithmetic: allocation-free in steady state (gated by
+/// `tests/hotpath_alloc.rs`).
+#[derive(Debug, Clone)]
+pub struct InterferenceModel {
+    priors: CompatMatrix,
+    /// Priors resolved through measured-else-predicted once, so steady-
+    /// state lookups never re-run the analytic predictor.
+    prior_slowdown: [[f64; N]; N],
+    prior_throughput: [[f64; N]; N],
+    /// EWMA of observed victim slowdown per (victim, aggressor) pair.
+    dilation: [[f64; N]; N],
+    samples: [[u32; N]; N],
+    alpha: f64,
+    /// Interference epoch: version counter of the learned estimates,
+    /// bumped once per folded observation. Consumers can cheaply detect
+    /// "the model moved since I last ranked placements".
+    epoch: u64,
+}
+
+impl Default for InterferenceModel {
+    fn default() -> InterferenceModel {
+        InterferenceModel::with_priors(CompatMatrix::new())
+    }
+}
+
+impl InterferenceModel {
+    /// Build from offline priors (measured matrix or empty → analytic
+    /// predictions). The prior tables are resolved once, here.
+    pub fn with_priors(priors: CompatMatrix) -> InterferenceModel {
+        let mut prior_slowdown = [[1.0; N]; N];
+        let mut prior_throughput = [[0.0; N]; N];
+        for high in ModelKind::ALL {
+            for low in ModelKind::ALL {
+                let e = priors.get(high, low);
+                prior_slowdown[high.index()][low.index()] = e.high_slowdown;
+                prior_throughput[high.index()][low.index()] = e.low_throughput;
+            }
+        }
+        InterferenceModel {
+            priors,
+            prior_slowdown,
+            prior_throughput,
+            dilation: [[1.0; N]; N],
+            samples: [[0; N]; N],
+            alpha: DEFAULT_INTERFERENCE_ALPHA,
+            epoch: 0,
+        }
+    }
+
+    /// The offline priors this model was built from.
+    pub fn priors(&self) -> &CompatMatrix {
+        &self.priors
+    }
+
+    /// Fold one co-residency observation: `victim`'s task completed with
+    /// `slowdown` (JCT / solo JCT) while `aggressor` was resident on the
+    /// same device. Allocation-free: two array writes and an EWMA step.
+    pub fn observe(&mut self, victim: ModelKind, aggressor: ModelKind, slowdown: f64) {
+        if !slowdown.is_finite() || slowdown <= 0.0 {
+            return; // defensive: never poison the estimate
+        }
+        let (v, a) = (victim.index(), aggressor.index());
+        let n = self.samples[v][a];
+        if n == 0 {
+            // First observation seeds the EWMA instead of decaying from
+            // the 1.0 placeholder.
+            self.dilation[v][a] = slowdown;
+        } else {
+            self.dilation[v][a] += self.alpha * (slowdown - self.dilation[v][a]);
+        }
+        self.samples[v][a] = n.saturating_add(1);
+        self.epoch += 1;
+    }
+
+    /// Blended high-priority slowdown estimate for `high` hosted next to
+    /// `low`: the offline prior when the pair was never observed, the
+    /// learned EWMA once observations dominate (`n / (n + 4)` weight).
+    pub fn high_slowdown(&self, high: ModelKind, low: ModelKind) -> f64 {
+        let (h, l) = (high.index(), low.index());
+        let n = self.samples[h][l] as f64;
+        if n == 0.0 {
+            return self.prior_slowdown[h][l];
+        }
+        let w = n / (n + PRIOR_WEIGHT);
+        w * self.dilation[h][l] + (1.0 - w) * self.prior_slowdown[h][l]
+    }
+
+    /// Placement-ranking score for hosting `low` next to `high` — the
+    /// [`CompatEntry::score`] shape with the learned slowdown blended in
+    /// (throughput stays a prior: the online signal observes harm, not
+    /// scavenged progress).
+    pub fn score(&self, high: ModelKind, low: ModelKind) -> f64 {
+        (1.0 / self.high_slowdown(high, low))
+            + 0.5 * self.prior_throughput[high.index()][low.index()]
+    }
+
+    /// The raw learned estimate, if any: `(EWMA dilation, samples)`.
+    pub fn learned(&self, victim: ModelKind, aggressor: ModelKind) -> Option<(f64, u32)> {
+        let (v, a) = (victim.index(), aggressor.index());
+        match self.samples[v][a] {
+            0 => None,
+            n => Some((self.dilation[v][a], n)),
+        }
+    }
+
+    /// Total observations folded so far.
+    pub fn observations(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Current interference epoch (see the field docs).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    // ----- persistence -----
+
+    /// Versioned JSON image: priors plus every learned pair.
+    pub fn to_json(&self) -> Json {
+        let mut learned = Vec::new();
+        for victim in ModelKind::ALL {
+            for aggressor in ModelKind::ALL {
+                let (v, a) = (victim.index(), aggressor.index());
+                if self.samples[v][a] > 0 {
+                    learned.push(
+                        Json::obj()
+                            .set("victim", victim.name())
+                            .set("aggressor", aggressor.name())
+                            .set("dilation", self.dilation[v][a])
+                            .set("samples", self.samples[v][a] as u64),
+                    );
+                }
+            }
+        }
+        Json::obj()
+            .set("version", 2u64)
+            .set("alpha", self.alpha)
+            .set("epoch", self.epoch)
+            .set("priors", self.priors.to_json())
+            .set("learned", Json::Arr(learned))
+    }
+
+    pub fn from_json(v: &Json) -> Result<InterferenceModel> {
+        let version = v.req_u64("version")?;
+        if version != 2 {
+            return Err(Error::Parse(format!(
+                "interference model version {version} is not supported (want 2)"
+            )));
+        }
+        let priors = CompatMatrix::from_json(v.require("priors")?)?;
+        let mut model = InterferenceModel::with_priors(priors);
+        model.alpha = v.req_f64("alpha")?;
+        model.epoch = v.req_u64("epoch")?;
+        for p in v.req_arr("learned")? {
+            let victim: ModelKind = p.req_str("victim")?.parse()?;
+            let aggressor: ModelKind = p.req_str("aggressor")?.parse()?;
+            let (vi, ai) = (victim.index(), aggressor.index());
+            model.dilation[vi][ai] = p.req_f64("dilation")?;
+            model.samples[vi][ai] = p.req_u64("samples")? as u32;
+        }
+        Ok(model)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().encode_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<InterferenceModel> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        InterferenceModel::from_json(&Json::parse(&text)?)
     }
 }
 
@@ -249,6 +488,19 @@ mod tests {
     }
 
     #[test]
+    fn measure_includes_self_pairs() {
+        // Homogeneous co-location is common in fleets; the campaign must
+        // produce a *measured* self-pair entry, not a predict() fallback.
+        let m = CompatMatrix::measure(&[ModelKind::Alexnet], 3, 11).unwrap();
+        assert_eq!(m.len(), 1);
+        assert!(
+            m.lookup(ModelKind::Alexnet, ModelKind::Alexnet).is_some(),
+            "self-pair was skipped — homogeneous placement would silently \
+             fall back to prediction"
+        );
+    }
+
+    #[test]
     fn matrix_persistence_round_trip() {
         let mut m = CompatMatrix::new();
         m.insert(
@@ -275,5 +527,98 @@ mod tests {
         let m = CompatMatrix::new();
         let e = m.get(ModelKind::Alexnet, ModelKind::Vgg16);
         assert_eq!(e, CompatMatrix::predict(ModelKind::Alexnet, ModelKind::Vgg16));
+        assert!(m.lookup(ModelKind::Alexnet, ModelKind::Vgg16).is_none());
+    }
+
+    #[test]
+    fn unobserved_model_equals_priors() {
+        let mut priors = CompatMatrix::new();
+        priors.insert(
+            ModelKind::Vgg16,
+            ModelKind::Alexnet,
+            CompatEntry {
+                high_slowdown: 1.33,
+                low_throughput: 0.2,
+            },
+        );
+        let model = InterferenceModel::with_priors(priors.clone());
+        for high in ModelKind::ALL {
+            for low in ModelKind::ALL {
+                let prior = priors.get(high, low);
+                assert_eq!(model.high_slowdown(high, low), prior.high_slowdown);
+                assert!((model.score(high, low) - prior.score()).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn observations_pull_estimate_off_the_prior() {
+        let mut model = InterferenceModel::default();
+        let (v, a) = (ModelKind::KeypointRcnnResnet50Fpn, ModelKind::Googlenet);
+        let prior = model.high_slowdown(v, a);
+        for _ in 0..32 {
+            model.observe(v, a, 3.0);
+        }
+        let learned = model.high_slowdown(v, a);
+        assert!(
+            learned > prior && learned > 2.5,
+            "32 consistent observations of 3.0 must dominate the prior \
+             (prior {prior:.3}, got {learned:.3})"
+        );
+        // An untouched pair is still pure prior.
+        let other = (ModelKind::Vgg16, ModelKind::Alexnet);
+        assert_eq!(
+            model.high_slowdown(other.0, other.1),
+            InterferenceModel::default().high_slowdown(other.0, other.1)
+        );
+        assert_eq!(model.observations(), 32);
+    }
+
+    #[test]
+    fn degenerate_observations_are_dropped() {
+        let mut model = InterferenceModel::default();
+        let (v, a) = (ModelKind::Vgg16, ModelKind::Alexnet);
+        model.observe(v, a, f64::NAN);
+        model.observe(v, a, f64::INFINITY);
+        model.observe(v, a, -2.0);
+        model.observe(v, a, 0.0);
+        assert_eq!(model.learned(v, a), None);
+        assert_eq!(model.epoch(), 0);
+    }
+
+    #[test]
+    fn model_persistence_round_trip() {
+        let mut priors = CompatMatrix::new();
+        priors.insert(
+            ModelKind::Alexnet,
+            ModelKind::Vgg16,
+            CompatEntry {
+                high_slowdown: 1.07,
+                low_throughput: 0.42,
+            },
+        );
+        let mut model = InterferenceModel::with_priors(priors);
+        for _ in 0..10 {
+            model.observe(ModelKind::Alexnet, ModelKind::Googlenet, 2.5);
+        }
+        let dir =
+            std::env::temp_dir().join(format!("fikit-interference-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        model.save(&path).unwrap();
+        let loaded = InterferenceModel::load(&path).unwrap();
+        assert_eq!(loaded.epoch(), model.epoch());
+        assert_eq!(
+            loaded.learned(ModelKind::Alexnet, ModelKind::Googlenet),
+            model.learned(ModelKind::Alexnet, ModelKind::Googlenet)
+        );
+        assert_eq!(
+            loaded.high_slowdown(ModelKind::Alexnet, ModelKind::Vgg16),
+            model.high_slowdown(ModelKind::Alexnet, ModelKind::Vgg16)
+        );
+        // Bad version fails loudly.
+        let doc = model.to_json().set("version", 3u64);
+        assert!(InterferenceModel::from_json(&doc).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -10,11 +10,15 @@
 //!
 //! Components (DESIGN.md §8):
 //!
-//! * [`compat`] — the **combination compatibility matrix**: measured (or
-//!   profile-predicted) high-priority slowdown and low-priority
-//!   throughput for every model pair, built exactly the way the paper
-//!   proposes (offline pairwise measurement, preloaded at scheduling
-//!   time).
+//! * [`compat`] — pairwise interference knowledge. The **combination
+//!   compatibility matrix**: measured (or profile-predicted)
+//!   high-priority slowdown and low-priority throughput for every model
+//!   pair, built exactly the way the paper proposes (offline pairwise
+//!   measurement, preloaded at scheduling time). Layered on top, the
+//!   [`InterferenceModel`] (ADR-006) keeps that matrix as a prior and
+//!   learns per-pair dilation online from co-residency-attributed
+//!   completions, so placement and eviction track the deployment's
+//!   actual backend and mix.
 //! * [`placement`] — placement policies that assign arriving services to
 //!   GPUs: the compatibility-aware **BestMatch** policy vs the
 //!   **LeastLoaded** and **RoundRobin** baselines. Two layers: the
@@ -39,10 +43,11 @@ pub mod control;
 pub mod placement;
 pub mod sim;
 
-pub use compat::{CompatEntry, CompatMatrix};
+pub use compat::{CompatEntry, CompatMatrix, InterferenceModel};
 pub use control::{FleetConfig, FleetView, PeerState};
 pub use placement::{FleetState, Placement, PlacementPolicy, Resident, ServiceRequest};
 pub use sim::{
     run_churn, run_cluster, run_node_churn, ChurnConfig, ChurnReport, ChurnServiceOutcome,
-    ClusterConfig, ClusterReport, NodeChurnConfig, NodeChurnOutcome, NodeChurnReport, QosConfig,
+    ClusterConfig, ClusterReport, EvictionStrategy, NodeChurnConfig, NodeChurnOutcome,
+    NodeChurnReport, QosConfig,
 };

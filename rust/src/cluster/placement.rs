@@ -13,8 +13,14 @@
 //!   requests known up front); it is a thin loop over the incremental
 //!   path, so both layers share one scoring implementation
 //!   (DESIGN.md §8).
+//!
+//! Both layers score pairs through the [`InterferenceModel`] (ADR-006):
+//! offline compatibility priors blended with online-learned pairwise
+//! dilation, so a model with zero observations ranks exactly like the
+//! static matrix did and a learning deployment steers placement by what
+//! it has actually seen.
 
-use super::compat::CompatMatrix;
+use super::compat::InterferenceModel;
 use crate::core::Priority;
 use crate::metrics::fleet::is_high_priority;
 use crate::workload::ModelKind;
@@ -196,9 +202,9 @@ impl FleetState {
         &mut self,
         policy: PlacementPolicy,
         resident: Resident,
-        compat: &CompatMatrix,
+        model: &InterferenceModel,
     ) -> Option<usize> {
-        let gpu = self.pick(policy, &resident, compat, None)?;
+        let gpu = self.pick(policy, &resident, model, None)?;
         self.insert(gpu, resident);
         Some(gpu)
     }
@@ -261,12 +267,12 @@ impl FleetState {
         &mut self,
         id: u64,
         policy: PlacementPolicy,
-        compat: &CompatMatrix,
+        model: &InterferenceModel,
     ) -> Option<(usize, usize)> {
         let from = self.gpu_of(id)?;
         let pos = self.residents[from].iter().position(|r| r.id == id)?;
         let resident = self.residents[from][pos].clone();
-        let to = self.pick(policy, &resident, compat, Some(from))?;
+        let to = self.pick(policy, &resident, model, Some(from))?;
         self.evict(id);
         self.insert(to, resident);
         Some((from, to))
@@ -309,7 +315,7 @@ impl FleetState {
     /// much; the flipped-orientation entry is the best available
     /// predictor for it, so both orientations are consulted whenever the
     /// victim is in the high band.
-    pub fn predicted_high_slowdown(&self, gpu: usize, compat: &CompatMatrix) -> f64 {
+    pub fn predicted_high_slowdown(&self, gpu: usize, model: &InterferenceModel) -> f64 {
         let rs = &self.residents[gpu];
         let mut worst = 1.0f64;
         for (i, victim) in rs.iter().enumerate() {
@@ -320,16 +326,16 @@ impl FleetState {
                 if i == j {
                     continue;
                 }
-                worst = worst.max(compat.get(victim.model, other.model).high_slowdown);
+                worst = worst.max(model.high_slowdown(victim.model, other.model));
             }
         }
         worst
     }
 
     /// Fleet-wide worst predicted high-priority slowdown.
-    pub fn worst_predicted_high_slowdown(&self, compat: &CompatMatrix) -> f64 {
+    pub fn worst_predicted_high_slowdown(&self, model: &InterferenceModel) -> f64 {
         (0..self.gpus())
-            .map(|g| self.predicted_high_slowdown(g, compat))
+            .map(|g| self.predicted_high_slowdown(g, model))
             .fold(1.0, f64::max)
     }
 
@@ -345,7 +351,7 @@ impl FleetState {
         &mut self,
         policy: PlacementPolicy,
         resident: &Resident,
-        compat: &CompatMatrix,
+        model: &InterferenceModel,
         exclude: Option<usize>,
     ) -> Option<usize> {
         let gpus = self.gpus();
@@ -385,7 +391,7 @@ impl FleetState {
                     } else {
                         self.residents[g]
                             .iter()
-                            .map(|r| pair_score(resident, r, compat))
+                            .map(|r| pair_score(resident, r, model))
                             .fold(f64::INFINITY, f64::min)
                     };
                     // Load tiebreak: 1ms of queued demand ≈ −1e-5.
@@ -408,7 +414,7 @@ impl PlacementPolicy {
         self,
         requests: &[ServiceRequest],
         gpus: usize,
-        compat: &CompatMatrix,
+        model: &InterferenceModel,
     ) -> Placement {
         let mut fleet = FleetState::new(gpus, usize::MAX);
         let assignments = requests
@@ -424,7 +430,7 @@ impl PlacementPolicy {
                     demand_ms,
                 };
                 fleet
-                    .place(self, resident, compat)
+                    .place(self, resident, model)
                     .expect("unbounded capacity always has room")
             })
             .collect();
@@ -435,7 +441,7 @@ impl PlacementPolicy {
 /// Compatibility score between an arriving service and one resident,
 /// oriented by priority (the higher-priority one is the "host" whose
 /// gaps get filled).
-fn pair_score(a: &Resident, b: &Resident, compat: &CompatMatrix) -> f64 {
+fn pair_score(a: &Resident, b: &Resident, model: &InterferenceModel) -> f64 {
     let (high, low) = if a.priority.is_higher_than(b.priority) {
         (a.model, b.model)
     } else if b.priority.is_higher_than(a.priority) {
@@ -443,11 +449,9 @@ fn pair_score(a: &Resident, b: &Resident, compat: &CompatMatrix) -> f64 {
     } else {
         // Equal priority: FIFO sharing; prefer pairing dense with gappy
         // anyway (use both orientations, take the mean).
-        let e1 = compat.get(a.model, b.model);
-        let e2 = compat.get(b.model, a.model);
-        return (e1.score() + e2.score()) / 2.0;
+        return (model.score(a.model, b.model) + model.score(b.model, a.model)) / 2.0;
     };
-    compat.get(high, low).score()
+    model.score(high, low)
 }
 
 #[cfg(test)]
@@ -465,7 +469,7 @@ mod tests {
 
     #[test]
     fn round_robin_spreads_by_index() {
-        let p = PlacementPolicy::RoundRobin.place(&reqs(), 2, &CompatMatrix::new());
+        let p = PlacementPolicy::RoundRobin.place(&reqs(), 2, &InterferenceModel::default());
         assert_eq!(p.assignments, vec![0, 1, 0, 1]);
         assert_eq!(p.on_gpu(0), vec![0, 2]);
     }
@@ -477,7 +481,7 @@ mod tests {
             ServiceRequest::new(ModelKind::Alexnet, Priority::P0, 10),              // light
             ServiceRequest::new(ModelKind::Alexnet, Priority::P5, 10),              // light
         ];
-        let p = PlacementPolicy::LeastLoaded.place(&requests, 2, &CompatMatrix::new());
+        let p = PlacementPolicy::LeastLoaded.place(&requests, 2, &InterferenceModel::default());
         // The two light ones pile onto the other GPU.
         assert_eq!(p.assignments[0], 0);
         assert_eq!(p.assignments[1], 1);
@@ -496,7 +500,7 @@ mod tests {
             ServiceRequest::new(ModelKind::Vgg16, Priority::P0, 50), // dense host: bad gaps
             ServiceRequest::new(ModelKind::FcnResnet50, Priority::P5, 50),
         ];
-        let p = PlacementPolicy::BestMatch.place(&requests, 2, &CompatMatrix::new());
+        let p = PlacementPolicy::BestMatch.place(&requests, 2, &InterferenceModel::default());
         // The detector and the vgg host land on different GPUs first.
         assert_ne!(p.assignments[0], p.assignments[1]);
         // The background service joins the *gappy* detector, not vgg.
@@ -517,7 +521,7 @@ mod tests {
 
     #[test]
     fn capacity_is_never_exceeded() {
-        let compat = CompatMatrix::new();
+        let compat = InterferenceModel::default();
         let mut fleet = FleetState::new(2, 2);
         for id in 0..4 {
             let r = Resident::per_task(id, ModelKind::Resnet50, Priority::P4);
@@ -533,7 +537,7 @@ mod tests {
 
     #[test]
     fn evict_frees_room_and_load() {
-        let compat = CompatMatrix::new();
+        let compat = InterferenceModel::default();
         let mut fleet = FleetState::new(1, 1);
         let r = Resident::per_task(7, ModelKind::Vgg16, Priority::P3);
         let demand = r.demand_ms;
@@ -548,7 +552,7 @@ mod tests {
 
     #[test]
     fn requalify_updates_in_place_without_moving() {
-        let compat = CompatMatrix::new();
+        let compat = InterferenceModel::default();
         let mut fleet = FleetState::new(2, 2);
         fleet
             .place(
@@ -571,7 +575,7 @@ mod tests {
 
     #[test]
     fn migrate_moves_off_the_current_gpu() {
-        let compat = CompatMatrix::new();
+        let compat = InterferenceModel::default();
         let mut fleet = FleetState::new(2, 2);
         // A high-priority detector on GPU 0, a dense filler beside it.
         fleet
@@ -593,7 +597,7 @@ mod tests {
 
     #[test]
     fn migrate_with_nowhere_to_go_is_a_no_op() {
-        let compat = CompatMatrix::new();
+        let compat = InterferenceModel::default();
         let mut fleet = FleetState::new(2, 1);
         fleet
             .place(
@@ -616,7 +620,7 @@ mod tests {
 
     #[test]
     fn round_robin_skips_full_gpus() {
-        let compat = CompatMatrix::new();
+        let compat = InterferenceModel::default();
         let mut fleet = FleetState::new(3, 1);
         let g0 = fleet
             .place(
@@ -658,8 +662,37 @@ mod tests {
     }
 
     #[test]
+    fn learned_dilation_steers_best_match_away() {
+        // Priors say the gappy detector on GPU 1 is the better host for
+        // a dense background filler. Then the model *observes* that this
+        // filler murders the detector — BestMatch must flip to GPU 0.
+        let mut model = InterferenceModel::default();
+        let mut fleet = FleetState::new(2, 2);
+        fleet.insert(0, Resident::per_task(0, ModelKind::Vgg16, Priority::P0));
+        fleet.insert(
+            1,
+            Resident::per_task(1, ModelKind::KeypointRcnnResnet50Fpn, Priority::P0),
+        );
+        let filler = || Resident::per_task(2, ModelKind::Googlenet, Priority::P7);
+        let mut cold = fleet.clone();
+        assert_eq!(
+            cold.place(PlacementPolicy::BestMatch, filler(), &model),
+            Some(1),
+            "priors prefer the gappy detector host"
+        );
+        for _ in 0..32 {
+            model.observe(ModelKind::KeypointRcnnResnet50Fpn, ModelKind::Googlenet, 6.0);
+        }
+        assert_eq!(
+            fleet.place(PlacementPolicy::BestMatch, filler(), &model),
+            Some(0),
+            "learned dilation overrides the prior"
+        );
+    }
+
+    #[test]
     fn predicted_slowdown_flags_bad_colocation() {
-        let compat = CompatMatrix::new();
+        let compat = InterferenceModel::default();
         let mut fleet = FleetState::new(2, 2);
         fleet.insert(
             0,

@@ -12,9 +12,14 @@
 //!   [`FleetState`], run on per-GPU [`GpuSim`] coordinators via
 //!   mid-run attach, and *depart* (drain, detach). A periodic QoS scan
 //!   watches each device's trailing-window high-priority slowdown and —
-//!   when it exceeds the configured bound — reactively **migrates** the
-//!   most disruptive low-priority tenant to the policy's best other
-//!   device.
+//!   when it exceeds the configured bound — reactively **migrates** a
+//!   low-priority tenant chosen by the [`EvictionStrategy`]: the
+//!   interference model's predicted worst aggressor (default), or the
+//!   observed noisiest victim (baseline). With
+//!   [`ChurnConfig::learn_interference`] the harvest loop feeds every
+//!   completion back into the [`InterferenceModel`] by co-residency
+//!   attribution, and devices run the configured
+//!   [`ConcurrencyBackend`] (ADR-006).
 //!
 //! The churn loop is **bulk-synchronous parallel** (DESIGN.md §Perf):
 //! between consecutive fleet events every per-GPU sim is independent, so
@@ -24,7 +29,7 @@
 //! serially in device order. Reports are byte-identical across thread
 //! counts because the merge order never depends on thread interleaving.
 
-use super::compat::CompatMatrix;
+use super::compat::{CompatMatrix, InterferenceModel};
 use super::control::FleetConfig;
 use super::placement::{FleetState, Placement, PlacementPolicy, Resident, ServiceRequest};
 use crate::config::{ExperimentConfig, ServiceConfig};
@@ -39,7 +44,7 @@ use crate::hook::transport::{GatedTransport, LossyNet};
 use crate::metrics::fleet::is_high_priority;
 use crate::metrics::{FleetMetrics, FleetSample, JctStats, TextTable};
 use crate::profile::{ProfileStore, SymbolResolver, SymbolTableModel, TaskProfile};
-use crate::simulator::CalendarWheel;
+use crate::simulator::{CalendarWheel, ConcurrencyBackend};
 use crate::workload::{ArrivalProcess, InvocationPattern, ModelKind};
 use std::collections::BTreeMap;
 use std::collections::HashMap;
@@ -150,7 +155,10 @@ impl ClusterReport {
 
 /// Run the full static cluster experiment: place, then simulate each GPU.
 pub fn run_cluster(cfg: &ClusterConfig, compat: &CompatMatrix) -> Result<ClusterReport> {
-    let placement = cfg.policy.place(&cfg.requests, cfg.gpus, compat);
+    // Static runs have no completion stream to learn from: the model is
+    // pure priors, so placement behaves exactly like the offline matrix.
+    let model = InterferenceModel::with_priors(compat.clone());
+    let placement = cfg.policy.place(&cfg.requests, cfg.gpus, &model);
 
     // One event-core scratch reused across every run in this experiment.
     let mut scratch = SimScratch::new();
@@ -226,6 +234,32 @@ fn solo_mean_ms(model: ModelKind, tasks: u32, seed: u64, scratch: &mut SimScratc
 // Dynamic serving: churn + reactive migration
 // ---------------------------------------------------------------------
 
+/// Which low-priority tenant a violating device expels (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionStrategy {
+    /// Evict the tenant the [`InterferenceModel`] *predicts* hurts the
+    /// device's high-priority residents most — priors blended with
+    /// online-learned dilation, so a quiet-looking tenant with a learned
+    /// record of aggression is still the one that goes.
+    #[default]
+    WorstAggressor,
+    /// Evict the low-priority tenant with the worst *observed* mean
+    /// slowdown over its own completions — the naive baseline that
+    /// relocates the suffering victim and leaves the aggressor behind.
+    NoisiestVictim,
+}
+
+impl std::str::FromStr for EvictionStrategy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "aggressor" | "worst-aggressor" => Ok(EvictionStrategy::WorstAggressor),
+            "victim" | "noisiest-victim" => Ok(EvictionStrategy::NoisiestVictim),
+            other => Err(Error::Parse(format!("unknown eviction strategy {other:?}"))),
+        }
+    }
+}
+
 /// QoS policy of the churn loop: when is a device "in violation", how
 /// often do we look, and do we act on it.
 #[derive(Debug, Clone)]
@@ -240,6 +274,8 @@ pub struct QosConfig {
     /// Whether a violating device triggers a reactive migration of its
     /// most disruptive low-priority tenant.
     pub migration: bool,
+    /// How the migration victim is chosen.
+    pub eviction: EvictionStrategy,
 }
 
 impl Default for QosConfig {
@@ -249,6 +285,7 @@ impl Default for QosConfig {
             scan_interval: Duration::from_millis(250),
             window: Duration::from_millis(1_000),
             migration: true,
+            eviction: EvictionStrategy::WorstAggressor,
         }
     }
 }
@@ -286,6 +323,22 @@ pub struct ChurnConfig {
     /// value — threads only split the shard-advance work, never the
     /// fleet-level decisions (DESIGN.md §Perf).
     pub sim_threads: usize,
+    /// Hardware concurrency backend of every device (ADR-006). Slowdowns
+    /// stay normalized to an exclusive full device (TimeSliced solo), so
+    /// e.g. MIG's per-slice dilation is visible in the numbers rather
+    /// than hidden in the denominator.
+    pub backend: ConcurrencyBackend,
+    /// Feed harvested completions into the [`InterferenceModel`] via
+    /// co-residency attribution, so placement and eviction act on
+    /// learned pairwise dilation instead of priors alone. Off = the
+    /// pre-learning behaviour, byte for byte.
+    pub learn_interference: bool,
+    /// Interference injection: `(schedule index, gap scale)` — the
+    /// designated service's CPU-side gaps are scaled at attach
+    /// (`GpuSim::inject_gap_scale`; scale < 1.0 = a denser, more
+    /// aggressive kernel stream). The identification scenario's planted
+    /// aggressor.
+    pub aggressor: Option<(usize, f64)>,
 }
 
 impl ChurnConfig {
@@ -303,6 +356,9 @@ impl ChurnConfig {
             cold_start: false,
             online: false,
             sim_threads: 1,
+            backend: ConcurrencyBackend::TimeSliced,
+            learn_interference: false,
+            aggressor: None,
         }
     }
 }
@@ -352,6 +408,12 @@ pub struct ChurnReport {
     pub cold_starts: usize,
     /// Total completed tasks fleet-wide.
     pub completed_total: usize,
+    /// The interference model at end of run: pure priors when
+    /// `learn_interference` was off, otherwise priors plus every learned
+    /// `(victim, aggressor)` dilation pair — inspect with
+    /// [`InterferenceModel::learned`], persist with
+    /// [`InterferenceModel::save`].
+    pub interference: InterferenceModel,
 }
 
 impl ChurnReport {
@@ -370,7 +432,7 @@ impl ChurnReport {
     pub fn summary(&self) -> String {
         let mut out = format!(
             "services={} rejected={} cold_starts={} completed={} migrations={} qos_violations={}/{} \
-             high mean slowdown={:.2}x low throughput={:.1}/s sim_end={:.2}s\n",
+             interference_obs={} high mean slowdown={:.2}x low throughput={:.1}/s sim_end={:.2}s\n",
             self.services.len(),
             self.rejected,
             self.cold_starts,
@@ -378,6 +440,7 @@ impl ChurnReport {
             self.migrations,
             self.qos_violations,
             self.scans,
+            self.interference.observations(),
             self.high_mean_slowdown(),
             self.low_throughput_per_s(),
             self.sim_end.as_secs_f64(),
@@ -403,6 +466,10 @@ struct LiveService {
     key: TaskKey,
     cfg: ServiceConfig,
     gpu: usize,
+    /// CPU-gap multiplier re-applied on every (re-)attach: injected
+    /// aggression is a property of the service, not of the device it
+    /// happens to sit on, so it follows the service through migration.
+    gap_scale: f64,
 }
 
 /// Bulk-synchronous shard coordinator (DESIGN.md §Perf).
@@ -547,6 +614,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
             // refiner converges them; plain online refinement is an
             // opt-in QoS improvement under drift.
             c.online.enabled = refine;
+            c.device.backend = cfg.backend;
             c
         })
         .collect();
@@ -585,6 +653,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
 
     // --- fleet state + accounting ---
     let mut fleet = FleetState::new(cfg.gpus, cfg.capacity);
+    let mut model = InterferenceModel::with_priors(compat.clone());
     let mut live: HashMap<u64, LiveService> = HashMap::new();
     let mut key_to_id: HashMap<TaskKey, u64> = HashMap::new();
     let mut metrics = FleetMetrics::new(cfg.metrics_window);
@@ -636,6 +705,8 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                 &mut metrics,
                 &mut services,
                 &mut slowdown_sums,
+                &fleet,
+                cfg.learn_interference.then_some(&mut model),
             );
 
             match ev {
@@ -643,7 +714,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                     let arrival = &schedule[idx];
                     let id = idx as u64;
                     let resident = Resident::per_task(id, arrival.model, arrival.priority);
-                    match fleet.place(cfg.policy, resident, compat) {
+                    match fleet.place(cfg.policy, resident, &model) {
                         None => {
                             rejected += 1;
                             services[idx].rejected = true;
@@ -659,7 +730,17 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                             svc_cfg.pattern = InvocationPattern::ContinuousUntil {
                                 until: SimTime::MAX,
                             };
-                            sims[gpu].lock().expect("sim shard lock").attach(&svc_cfg, t)?;
+                            let gap_scale = match cfg.aggressor {
+                                Some((agg_idx, scale)) if agg_idx == idx => scale,
+                                _ => 1.0,
+                            };
+                            {
+                                let mut sim = sims[gpu].lock().expect("sim shard lock");
+                                sim.attach(&svc_cfg, t)?;
+                                if gap_scale != 1.0 {
+                                    sim.inject_gap_scale(&key, gap_scale)?;
+                                }
+                            }
                             key_to_id.insert(key.clone(), id);
                             live.insert(
                                 id,
@@ -667,6 +748,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                                     key,
                                     cfg: svc_cfg,
                                     gpu,
+                                    gap_scale,
                                 },
                             );
                             fleet_q.push(arrival.departs_at(), FleetEvent::Depart(id));
@@ -701,11 +783,19 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                         if !cfg.qos.migration {
                             continue;
                         }
-                        // Victim: the low-priority resident predicted to
-                        // hurt the device's high-priority tenants the most.
-                        let victim = pick_victim(&fleet, gpu, compat);
+                        // Victim: chosen by the configured eviction
+                        // strategy — predicted worst aggressor (learned
+                        // model) or observed noisiest victim (baseline).
+                        let victim = pick_victim(
+                            &fleet,
+                            gpu,
+                            &model,
+                            cfg.qos.eviction,
+                            &services,
+                            &slowdown_sums,
+                        );
                         let Some(victim_id) = victim else { continue };
-                        let Some((vfrom, vto)) = fleet.migrate(victim_id, cfg.policy, compat)
+                        let Some((vfrom, vto)) = fleet.migrate(victim_id, cfg.policy, &model)
                         else {
                             continue; // nowhere to go; keep suffering
                         };
@@ -718,7 +808,13 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
                             continue;
                         }
                         sims[vfrom].lock().expect("sim shard lock").detach(&svc.key)?;
-                        sims[vto].lock().expect("sim shard lock").attach(&svc.cfg, t)?;
+                        {
+                            let mut sim = sims[vto].lock().expect("sim shard lock");
+                            sim.attach(&svc.cfg, t)?;
+                            if svc.gap_scale != 1.0 {
+                                sim.inject_gap_scale(&svc.key, svc.gap_scale)?;
+                            }
+                        }
                         svc.gpu = vto;
                         migrations += 1;
                         services[victim_id as usize].migrations += 1;
@@ -738,6 +834,8 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
             &mut metrics,
             &mut services,
             &mut slowdown_sums,
+            &fleet,
+            cfg.learn_interference.then_some(&mut model),
         );
         drop(guard);
         Ok(())
@@ -765,12 +863,21 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
         rejected,
         cold_starts,
         completed_total,
+        interference: model,
     })
 }
 
 /// Pull new task outcomes out of every GPU sim into the fleet metrics.
 /// Runs on the main thread only, in device-index order — part of the
 /// deterministic merge (DESIGN.md §Perf).
+///
+/// When `model` is `Some`, every harvested completion is also fed into
+/// the interference model by **co-residency attribution**: the
+/// completing service is the victim, and each *other* service resident
+/// on its device at harvest time is charged as an aggressor with the
+/// observed slowdown. Attribution is deliberately coarse (a co-tenant
+/// that departed mid-task escapes blame) — the EWMA is built to average
+/// that noise out, and the whole pass stays allocation-free.
 #[allow(clippy::too_many_arguments)]
 fn harvest(
     sims: &[Mutex<GpuSim>],
@@ -781,6 +888,8 @@ fn harvest(
     metrics: &mut FleetMetrics,
     services: &mut [ChurnServiceOutcome],
     slowdown_sums: &mut [f64],
+    fleet: &FleetState,
+    mut model: Option<&mut InterferenceModel>,
 ) {
     for (gpu, sim) in sims.iter().enumerate() {
         let sim = sim.lock().expect("sim shard lock");
@@ -790,11 +899,18 @@ fn harvest(
                 continue; // not a churn-managed service (defensive)
             };
             let idx = id as usize;
-            let model = schedule[idx].model;
+            let victim_model = schedule[idx].model;
             let jct_ms = outcome.jct().as_millis_f64();
-            let slowdown = (jct_ms / solo_ms[model.name()]).max(0.0);
+            let slowdown = (jct_ms / solo_ms[victim_model.name()]).max(0.0);
             services[idx].completed += 1;
             slowdown_sums[idx] += slowdown;
+            if let Some(model) = model.as_deref_mut() {
+                for aggressor in fleet.residents_on(gpu) {
+                    if aggressor.id != id {
+                        model.observe(victim_model, aggressor.model, slowdown);
+                    }
+                }
+            }
             metrics.record(FleetSample {
                 gpu,
                 priority: outcome.priority,
@@ -807,10 +923,24 @@ fn harvest(
     }
 }
 
-/// The low-priority tenant on `gpu` with the worst predicted impact on
-/// the device's high-priority residents (`None` if the device hosts no
-/// low-priority service or no high-priority service to protect).
-fn pick_victim(fleet: &FleetState, gpu: usize, compat: &CompatMatrix) -> Option<u64> {
+/// The low-priority tenant a violating device expels (`None` if the
+/// device hosts no low-priority service or no high-priority service to
+/// protect).
+///
+/// * [`EvictionStrategy::WorstAggressor`] — the resident the
+///   interference model *predicts* hurts the device's high-priority
+///   tenants most (priors blended with learned dilation).
+/// * [`EvictionStrategy::NoisiestVictim`] — the resident with the worst
+///   *observed* mean slowdown over its own completions; the baseline
+///   that tends to relocate the sufferer and leave the aggressor.
+fn pick_victim(
+    fleet: &FleetState,
+    gpu: usize,
+    model: &InterferenceModel,
+    strategy: EvictionStrategy,
+    services: &[ChurnServiceOutcome],
+    slowdown_sums: &[f64],
+) -> Option<u64> {
     let residents = fleet.residents_on(gpu);
     let highs: Vec<&Resident> = residents
         .iter()
@@ -823,13 +953,22 @@ fn pick_victim(fleet: &FleetState, gpu: usize, compat: &CompatMatrix) -> Option<
         .iter()
         .filter(|r| !is_high_priority(r.priority))
         .map(|r| {
-            let impact = highs
-                .iter()
-                .map(|h| compat.get(h.model, r.model).high_slowdown)
-                .fold(1.0, f64::max);
-            (r.id, impact)
+            let badness = match strategy {
+                EvictionStrategy::WorstAggressor => highs
+                    .iter()
+                    .map(|h| model.high_slowdown(h.model, r.model))
+                    .fold(1.0, f64::max),
+                EvictionStrategy::NoisiestVictim => {
+                    let idx = r.id as usize;
+                    match services[idx].completed {
+                        0 => 1.0,
+                        n => slowdown_sums[idx] / n as f64,
+                    }
+                }
+            };
+            (r.id, badness)
         })
-        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("impacts are finite"))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("badness is finite"))
         .map(|(id, _)| id)
 }
 
@@ -1465,6 +1604,129 @@ mod tests {
         strict.qos.window = Duration::from_millis(200);
         let strict_report = run_churn(&strict, &CompatMatrix::new()).unwrap();
         assert_eq!(strict_report.cold_starts, 0);
+    }
+
+    /// The backend seam must be invisible when unused: a default config
+    /// (implicit TimeSliced, no learning) and an explicitly spelled-out
+    /// one produce identical reports.
+    #[test]
+    fn default_config_equals_explicit_timesliced() {
+        let mut implicit = ChurnConfig::new(2, PlacementPolicy::BestMatch, small_trace());
+        implicit.qos.scan_interval = Duration::from_millis(100);
+        implicit.qos.window = Duration::from_millis(200);
+        let mut explicit = implicit.clone();
+        explicit.backend = ConcurrencyBackend::TimeSliced;
+        explicit.qos.eviction = EvictionStrategy::WorstAggressor;
+        let a = run_churn(&implicit, &CompatMatrix::new()).unwrap();
+        let b = run_churn(&explicit, &CompatMatrix::new()).unwrap();
+        assert_eq!(a.completed_total, b.completed_total);
+        assert_eq!(a.sim_end, b.sim_end);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.qos_violations, b.qos_violations);
+        assert_eq!(a.fleet.len(), b.fleet.len());
+        // Learning off: the model never saw an observation.
+        assert_eq!(a.interference.observations(), 0);
+    }
+
+    /// Every backend serves the same trace to completion,
+    /// deterministically.
+    #[test]
+    fn churn_runs_on_every_backend() {
+        for backend in [
+            ConcurrencyBackend::TimeSliced,
+            ConcurrencyBackend::mps(),
+            ConcurrencyBackend::mig(2),
+        ] {
+            let mut cfg = ChurnConfig::new(2, PlacementPolicy::BestMatch, small_trace());
+            cfg.backend = backend;
+            cfg.learn_interference = true;
+            let a = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+            for svc in &a.services {
+                assert!(svc.completed > 0, "{:?} idle under {backend}", svc.model);
+            }
+            let b = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+            assert_eq!(a.completed_total, b.completed_total, "{backend} nondeterministic");
+            assert_eq!(a.sim_end, b.sim_end, "{backend} nondeterministic");
+            assert_eq!(
+                a.interference.epoch(),
+                b.interference.epoch(),
+                "{backend} learned differently across identical runs"
+            );
+        }
+    }
+
+    /// The identification scenario (ADR-006): a planted dense aggressor
+    /// joins a device hosting a high-priority detector and a benign
+    /// gappy filler under MPS. The learned model must (a) rank the
+    /// aggressor's dilation above the benign tenant's, and (b) get it
+    /// migrated away while the benign tenant stays put.
+    #[test]
+    fn injected_aggressor_is_identified_and_migrated() {
+        const HIGH: ModelKind = ModelKind::KeypointRcnnResnet50Fpn;
+        const BENIGN: ModelKind = ModelKind::FcosResnet50Fpn;
+        const AGGRESSOR: ModelKind = ModelKind::Googlenet;
+        // RoundRobin pins the cast: even indexes land on GPU 0 (the
+        // protected device), odd ones on GPU 1.
+        let arrivals = ArrivalProcess::Trace(vec![
+            ServiceArrival::new(SimTime::ZERO, HIGH, Priority::P0, Duration::from_millis(3_000)),
+            ServiceArrival::new(
+                SimTime(10_000_000),
+                ModelKind::Resnet50,
+                Priority::P4,
+                Duration::from_millis(2_800),
+            ),
+            ServiceArrival::new(
+                SimTime(100_000_000),
+                BENIGN,
+                Priority::P5,
+                Duration::from_millis(2_600),
+            ),
+            ServiceArrival::new(
+                SimTime(110_000_000),
+                ModelKind::Resnet50,
+                Priority::P4,
+                Duration::from_millis(2_500),
+            ),
+            ServiceArrival::new(
+                SimTime(800_000_000),
+                AGGRESSOR,
+                Priority::P6,
+                Duration::from_millis(1_800),
+            ),
+        ]);
+        let mut cfg = ChurnConfig::new(2, PlacementPolicy::RoundRobin, arrivals);
+        cfg.mode = Mode::Sharing; // raw MPS: no FIKIT holds muffling the overlap
+        cfg.backend = ConcurrencyBackend::MpsSpatial { dilation: 0.5 };
+        cfg.learn_interference = true;
+        cfg.aggressor = Some((4, 0.1)); // 10x denser kernel stream
+        cfg.qos.scan_interval = Duration::from_millis(100);
+        cfg.qos.window = Duration::from_millis(400);
+        cfg.qos.high_slowdown_bound = 1.2;
+        cfg.qos.eviction = EvictionStrategy::WorstAggressor;
+        let report = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+
+        // (a) learned ranking: the aggressor's EWMA dilation against the
+        // high-priority victim dominates the benign tenant's.
+        let (agg_dilation, agg_n) = report
+            .interference
+            .learned(HIGH, AGGRESSOR)
+            .expect("co-residency with the aggressor was observed");
+        assert!(agg_n > 0);
+        if let Some((benign_dilation, _)) = report.interference.learned(HIGH, BENIGN) {
+            assert!(
+                agg_dilation > benign_dilation,
+                "aggressor ({agg_dilation:.2}) must out-rank benign ({benign_dilation:.2})"
+            );
+        }
+        // (b) the scan evicted the aggressor, not the benign filler.
+        assert!(
+            report.services[4].migrations >= 1,
+            "aggressor never migrated: {report:?}"
+        );
+        assert_eq!(
+            report.services[2].migrations, 0,
+            "benign tenant was wrongly evicted"
+        );
     }
 
     #[test]

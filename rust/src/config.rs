@@ -8,7 +8,7 @@
 use crate::coordinator::Mode;
 use crate::core::{Duration, Error, Priority, Result, SimTime, TaskKey};
 use crate::profile::{MeasurementConfig, SymbolTableModel};
-use crate::simulator::DeviceConfig;
+use crate::simulator::{ConcurrencyBackend, DeviceConfig};
 use crate::util::json::Json;
 use crate::workload::{InvocationPattern, ModelKind, Service};
 use std::path::Path;
@@ -192,6 +192,7 @@ impl ExperimentConfig {
             )
             .set("launch_latency_ns", self.device.launch_latency.nanos())
             .set("compute_scale", self.device.compute_scale)
+            .set("backend", self.device.backend.to_string())
             .set(
                 "hook",
                 Json::obj()
@@ -264,6 +265,12 @@ impl ExperimentConfig {
                 .get("compute_scale")
                 .and_then(Json::as_f64)
                 .unwrap_or(1.0),
+            // Absent in pre-seam configs: default to the paper's FIFO
+            // model so old JSON replays unchanged.
+            backend: match v.get("backend").and_then(Json::as_str) {
+                Some(token) => token.parse()?,
+                None => ConcurrencyBackend::TimeSliced,
+            },
         };
         let hook = match v.get("hook") {
             Some(h) => HookConfig {
@@ -423,11 +430,13 @@ mod tests {
         cfg.online.cost_per_obs = Duration::from_nanos(275);
         cfg.online.track_errors = true;
         cfg.online.error_window = 48;
+        cfg.device.backend = ConcurrencyBackend::MpsSpatial { dilation: 0.25 };
         cfg.validate().unwrap();
 
         let text = cfg.to_json().encode_pretty();
         let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.services.len(), 3);
+        assert_eq!(back.device.backend, cfg.device.backend);
         assert!(back.online.enabled);
         assert_eq!(back.online.band_floor_frac, 0.2);
         assert_eq!(back.online.cost_per_obs, Duration::from_nanos(275));
@@ -444,6 +453,21 @@ mod tests {
             back.measurement.sync_stall_factor,
             cfg.measurement.sync_stall_factor
         );
+    }
+
+    #[test]
+    fn config_without_backend_field_defaults_to_timesliced() {
+        // Pre-seam configs have no "backend" key; they must keep
+        // meaning the paper's FIFO model.
+        let mut cfg = ExperimentConfig::default();
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0).tasks(1));
+        let mut json = cfg.to_json();
+        if let Json::Obj(map) = &mut json {
+            map.remove("backend");
+        }
+        let back = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(back.device.backend, ConcurrencyBackend::TimeSliced);
     }
 
     #[test]

@@ -596,6 +596,14 @@ impl SchedulerDaemon {
             } => {
                 let mut out =
                     self.shards[shard_idx].completion(&task_key, seq, exec, &self.profiles, now);
+                // Route the shard's measured execution dilations into the
+                // registry's interference model (ADR-006) so placement
+                // learns from this fleet's own co-residency. Deterministic:
+                // a pure function of the message stream, like the rest of
+                // `handle`, so journal replay rebuilds the same estimates.
+                for (victim, dilation) in self.shards[shard_idx].take_dilations() {
+                    self.registry.observe_interference(&victim, dilation);
+                }
                 out.push(SchedulerMsg::Ack { msg_seq });
                 out
             }
@@ -648,6 +656,12 @@ impl SchedulerDaemon {
     /// any refined overlays installed since).
     pub fn profiles(&self) -> &ProfileStore {
         &self.profiles
+    }
+
+    /// The admission registry, including the interference model learned
+    /// from this fleet's completion dilations (ADR-006).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// Persist the live store — including refined epochs — so a
@@ -1473,6 +1487,65 @@ mod tests {
         let r = d.handle(1, register("hi", Priority::P0), addr(9005));
         assert!(matches!(r[0].1, SchedulerMsg::Registered { .. }));
         assert_eq!(r[0].0, addr(9005));
+    }
+
+    /// Interference learning end to end (ADR-006): wire completions
+    /// whose exec dilated past the profiled SK flow shard →
+    /// `take_dilations` → `Registry::observe_interference`, charging the
+    /// co-resident on the victim's shard.
+    #[test]
+    fn completion_dilation_reaches_the_interference_model() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        drv.send(
+            &mut d,
+            ClientMsg::Register {
+                task_key: TaskKey::new("hi"),
+                priority: Priority::P0,
+                has_symbols: true,
+                model: Some("keypointrcnn_resnet50_fpn".into()),
+            },
+            addr(9001),
+        );
+        drv.send(
+            &mut d,
+            ClientMsg::Register {
+                task_key: TaskKey::new("lo"),
+                priority: Priority::P6,
+                has_symbols: true,
+                model: Some("googlenet".into()),
+            },
+            addr(9002),
+        );
+        drv.send(&mut d, task_start("hi"), addr(9001));
+        // Profiled SK(hk) = 200 µs; observed exec = 600 µs → dilation 3×.
+        for seq in 0..8 {
+            drv.send(&mut d, launch_msg("hi", "hk", seq), addr(9001));
+            drv.send(
+                &mut d,
+                ClientMsg::Completion {
+                    task_key: TaskKey::new("hi"),
+                    task_id: TaskId(0),
+                    seq,
+                    exec: Duration::from_micros(600),
+                    finished_at: SimTime(1),
+                },
+                addr(9001),
+            );
+        }
+        let model = d.registry().interference();
+        assert_eq!(model.observations(), 8, "one sample per completion");
+        let (dilation, samples) = model
+            .learned(
+                crate::workload::ModelKind::KeypointRcnnResnet50Fpn,
+                crate::workload::ModelKind::Googlenet,
+            )
+            .expect("the idle co-resident is the only aggressor candidate");
+        assert_eq!(samples, 8);
+        assert!(
+            dilation > 2.5,
+            "EWMA should sit near the observed 3x, got {dilation}"
+        );
     }
 
     /// The per-shard refiner end to end: wire completions whose exec

@@ -11,8 +11,18 @@
 //! default, compatibility-scored `BestMatch` when model hints are
 //! given), and a full fleet rejects admission instead of oversubscribing
 //! a device.
+//!
+//! Scoring consults the daemon's [`InterferenceModel`] (ADR-006): the
+//! shards report per-completion execution dilation, the daemon routes it
+//! here ([`Registry::observe_interference`]), and co-residency
+//! attribution turns it into learned pairwise estimates — so a
+//! long-running daemon places by what its own fleet measured, not by
+//! offline priors alone. The learned state is advisory and deliberately
+//! absent from journal snapshots: a restarted daemon re-learns from live
+//! traffic (same trade as the refiner's in-flight accumulators,
+//! ADR-004).
 
-use crate::cluster::compat::CompatMatrix;
+use crate::cluster::compat::InterferenceModel;
 use crate::cluster::placement::{FleetState, PlacementPolicy, Resident};
 use crate::core::{Error, Priority, Result, TaskKey};
 use crate::hook::protocol::SchedulerMsg;
@@ -65,7 +75,7 @@ pub struct Registry {
     clients: HashMap<TaskKey, ClientEntry>,
     fleet: FleetState,
     policy: PlacementPolicy,
-    compat: CompatMatrix,
+    interference: InterferenceModel,
     next_service_id: u64,
 }
 
@@ -75,9 +85,14 @@ impl Registry {
             clients: HashMap::new(),
             fleet: FleetState::new(devices, capacity),
             policy,
-            compat: CompatMatrix::new(),
+            interference: InterferenceModel::default(),
             next_service_id: 0,
         }
+    }
+
+    /// The learned interference model placement scores against.
+    pub fn interference(&self) -> &InterferenceModel {
+        &self.interference
     }
 
     pub fn len(&self) -> usize {
@@ -138,7 +153,7 @@ impl Registry {
         }
         let id = self.next_service_id;
         let resident = Resident::per_task(id, model, priority);
-        let Some(shard) = self.fleet.place(self.policy, resident, &self.compat) else {
+        let Some(shard) = self.fleet.place(self.policy, resident, &self.interference) else {
             return Admission::Rejected;
         };
         self.next_service_id += 1;
@@ -163,6 +178,30 @@ impl Registry {
         let entry = self.clients.remove(key)?;
         self.fleet.evict(entry.service_id);
         Some(entry.shard)
+    }
+
+    /// Feed one observed execution dilation (measured ÷ predicted kernel
+    /// time) from a completed kernel into the interference model, with
+    /// co-residency attribution: the reporting service is the victim and
+    /// every other service resident on its shard is charged as a
+    /// potential aggressor. Unknown keys are ignored (the client may have
+    /// disconnected between completion and drain), as are solo residents
+    /// (no co-tenant to blame). Allocation-free in steady state.
+    pub fn observe_interference(&mut self, victim_key: &TaskKey, dilation: f64) {
+        let Some(entry) = self.clients.get(victim_key) else {
+            return;
+        };
+        let (shard, victim_id) = (entry.shard, entry.service_id);
+        let residents = self.fleet.residents_on(shard);
+        let Some(victim) = residents.iter().find(|r| r.id == victim_id) else {
+            return;
+        };
+        let victim_model = victim.model;
+        for r in residents {
+            if r.id != victim_id {
+                self.interference.observe(victim_model, r.model, dilation);
+            }
+        }
     }
 
     /// Deterministic JSON image of the client table and fleet residency —
@@ -300,7 +339,7 @@ impl Registry {
             clients,
             fleet,
             policy,
-            compat: CompatMatrix::new(),
+            interference: InterferenceModel::default(),
             next_service_id,
         })
     }
@@ -362,6 +401,37 @@ mod tests {
         assert_eq!(entry.last_msg_seq, 1, "new session baseline accepted");
         assert!(entry.released.is_empty(), "stale releases dropped");
         assert_eq!(r.total_residents(), 1, "no double-count in the fleet");
+    }
+
+    #[test]
+    fn completion_dilation_feeds_the_interference_model() {
+        let mut r = Registry::new(1, 4, PlacementPolicy::BestMatch);
+        let victim = TaskKey::new("v");
+        let aggressor = TaskKey::new("a");
+        r.register(
+            &victim,
+            Priority::P0,
+            Some("keypointrcnn_resnet50_fpn"),
+            addr(1),
+            1,
+        );
+        r.register(&aggressor, Priority::P6, Some("googlenet"), addr(2), 1);
+        for _ in 0..8 {
+            r.observe_interference(&victim, 3.0);
+        }
+        let learned = r
+            .interference()
+            .learned(ModelKind::KeypointRcnnResnet50Fpn, ModelKind::Googlenet)
+            .expect("co-residency attribution should have recorded the pair");
+        assert_eq!(learned.1, 8, "every dilation sample lands");
+        assert!(learned.0 > 1.5, "EWMA pulled toward the observed 3.0x");
+        // Unknown keys (raced disconnects) are ignored, not a panic.
+        r.observe_interference(&TaskKey::new("ghost"), 9.0);
+        assert_eq!(r.interference().observations(), 8);
+        // A solo resident has nobody to blame.
+        r.disconnect(&aggressor);
+        r.observe_interference(&victim, 3.0);
+        assert_eq!(r.interference().observations(), 8);
     }
 
     #[test]

@@ -148,6 +148,12 @@ pub struct Shard {
     /// One per shard; the daemon harvests [`Shard::take_refined`] and
     /// shadows its profile store with the results.
     refiner: KeyedRefiner,
+    /// Observed per-completion execution dilation (`measured exec /
+    /// profiled SK`) awaiting harvest — the daemon drains this every
+    /// `Completion` and feeds the registry's interference model
+    /// (ADR-006) with co-residency attribution. Bounded: drained on the
+    /// very message that filled it.
+    dilations: Vec<(TaskKey, f64)>,
     stats: ServerStats,
 }
 
@@ -168,6 +174,7 @@ impl Shard {
             interner: Interner::new(),
             launched_kernels: HashMap::new(),
             refiner: KeyedRefiner::new(online),
+            dilations: Vec::new(),
             stats: ServerStats::default(),
         }
     }
@@ -388,12 +395,27 @@ impl Shard {
         let Some(kernel) = self.launched_kernels.remove(&(key.clone(), seq)) else {
             return Vec::new();
         };
+        // Execution dilation vs the profiled prediction — the daemon's
+        // per-completion interference signal (the profile was measured
+        // solo; anything above it is co-residency pressure).
+        if let Some(predicted) = profiles.get(key).and_then(|p| p.sk(&kernel)) {
+            if predicted > Duration::ZERO {
+                self.dilations
+                    .push((key.clone(), exec.nanos() as f64 / predicted.nanos() as f64));
+            }
+        }
         // The wire Completion already carries the client-measured exec
         // time — fold it into the online SK estimate and arm the gap
         // observation that the next holder launch will close.
         self.refiner
             .observe_exec(key, &kernel, exec, now, profiles.get(key));
         self.open_window(key, &kernel, profiles, now)
+    }
+
+    /// Drain the per-completion dilation observations accumulated since
+    /// the last harvest.
+    pub fn take_dilations(&mut self) -> Vec<(TaskKey, f64)> {
+        std::mem::take(&mut self.dilations)
     }
 
     /// Open a fill window after a holder kernel completion (split out so

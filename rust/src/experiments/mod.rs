@@ -21,6 +21,7 @@ pub mod fig18;
 pub mod fig19_20;
 pub mod fig21_table3;
 pub mod fill_policy;
+pub mod interference;
 pub mod perf_ablation;
 pub mod table2;
 
@@ -137,6 +138,7 @@ pub const ALL: &[&str] = &[
     "ablation_fill_policy",
     "cluster_churn",
     "drift",
+    "interference",
 ];
 
 /// Run one experiment by id.
@@ -155,6 +157,7 @@ pub fn run(id: &str, opts: Options) -> Result<ExperimentResult> {
         "ablation_fill_policy" => fill_policy::run(opts),
         "cluster_churn" => cluster_churn::run(opts),
         "drift" => drift::run(opts),
+        "interference" => interference::run(opts),
         other => Err(crate::core::Error::Parse(format!(
             "unknown experiment {other:?}; known: {ALL:?}"
         ))),

@@ -27,11 +27,18 @@ fikit — FIKIT: priority-based real-time GPU multi-tasking scheduling
 USAGE:
   fikit run [--config exp.json] [--mode fikit|sharing|exclusive]
             [--high MODEL] [--low MODEL] [--tasks N] [--seed S]
+            [--backend timesliced|mps[:dilation]|mig[:slices]]
   fikit experiment <id|all> [--scale F] [--seed S] [--json out.json]
         ids: fig13 fig14 fig15 table2 fig16 fig18 fig19 fig21 ablation_feedback
+             ablation_fill_policy cluster_churn drift interference
   fikit drift [--scale F] [--seed S]
         online-refinement acceptance run: inject gap interference
         mid-run, show drift detection + re-convergence + <=5% overhead
+  fikit interference [--scale F] [--seed S]
+        interference-learning acceptance run (ADR-006): a disguised
+        aggressor is planted in a churn trace and the learned-dilation
+        eviction (worst-aggressor) races the symptom-based baseline
+        (noisiest-victim) across every concurrency backend
   fikit profile --model MODEL [--runs T] [--out profiles.json]
   fikit serve [--bind ADDR] [--profiles profiles.json] [--devices N]
               [--capacity C] [--placement bestmatch|leastloaded|roundrobin]
@@ -55,8 +62,14 @@ USAGE:
   fikit cluster-churn [--gpus N] [--capacity C] [--policy P] [--mode M]
                       [--seed S] [--secs T] [--bound X] [--no-migration]
                       [--cold-start] [--online] [--sim-threads N]
+                      [--backend timesliced|mps[:dilation]|mig[:slices]]
+                      [--eviction aggressor|victim] [--learn-interference]
         --sim-threads advances device shards on N worker threads between
-        fleet events; the report is byte-identical for every N
+        fleet events; the report is byte-identical for every N;
+        --backend selects the device concurrency model (ADR-006),
+        --learn-interference updates pairwise dilation online from
+        completions, and --eviction picks what the QoS scanner deports:
+        the predicted worst aggressor (default) or the noisiest victim
   fikit bench [--quick] [--json [PATH]]
         runs the scheduler hot-path + simulator event-core suites; --json
         writes BENCH_sched.json (or PATH) plus BENCH_sim.json alongside
@@ -82,6 +95,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("experiment") => cmd_experiment(args),
         Some("drift") => cmd_drift(args),
+        Some("interference") => cmd_interference(args),
         Some("profile") => cmd_profile(args),
         Some("serve") => cmd_serve(args),
         Some("cluster") => cmd_cluster(args),
@@ -112,6 +126,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             seed: args.opt_parse("seed", 0xF1C1u64)?,
             ..ExperimentConfig::default()
         };
+        if let Some(token) = args.opt("backend") {
+            cfg.device.backend = token.parse()?;
+        }
         cfg.services
             .push(ServiceConfig::new(high, Priority::P0).tasks(tasks).with_key("high"));
         cfg.services
@@ -207,6 +224,27 @@ fn cmd_drift(args: &Args) -> Result<()> {
     } else {
         Err(fikit::core::Error::Invariant(
             "drift experiment has failing shape checks".into(),
+        ))
+    }
+}
+
+/// Run the interference-learning acceptance experiment
+/// (`experiments::interference`): plant a disguised aggressor, learn its
+/// pairwise dilation online, and show aggressor-eviction holds the
+/// high-priority slowdown at or below the victim-symptom baseline on
+/// every concurrency backend (ADR-006).
+fn cmd_interference(args: &Args) -> Result<()> {
+    let opts = Options {
+        scale: args.opt_parse("scale", 1.0f64)?,
+        seed: args.opt_parse("seed", 0xF1C1u64)?,
+    };
+    let result = experiments::run("interference", opts)?;
+    println!("{}", result.render());
+    if result.all_checks_pass() {
+        Ok(())
+    } else {
+        Err(fikit::core::Error::Invariant(
+            "interference experiment has failing shape checks".into(),
         ))
     }
 }
@@ -451,11 +489,18 @@ fn cmd_cluster_churn(args: &Args) -> Result<()> {
     cfg.cold_start = args.flag("cold-start");
     cfg.online = args.flag("online");
     cfg.sim_threads = args.opt_parse("sim-threads", 1usize)?;
+    if let Some(token) = args.opt("backend") {
+        cfg.backend = token.parse()?;
+    }
+    if let Some(token) = args.opt("eviction") {
+        cfg.qos.eviction = token.parse()?;
+    }
+    cfg.learn_interference = args.flag("learn-interference");
 
     let report = run_churn(&cfg, &CompatMatrix::new())?;
     println!(
-        "policy={policy:?} mode={mode} gpus={gpus} capacity={capacity} migration={} cold_start={}",
-        cfg.qos.migration, cfg.cold_start
+        "policy={policy:?} mode={mode} gpus={gpus} capacity={capacity} migration={} cold_start={} backend={} eviction={:?} learn={}",
+        cfg.qos.migration, cfg.cold_start, cfg.backend, cfg.qos.eviction, cfg.learn_interference
     );
     println!("{}", report.summary());
     Ok(())

@@ -1,0 +1,190 @@
+//! Pluggable hardware concurrency backends (DESIGN.md §6, ADR-006).
+//!
+//! The paper's testbed serializes co-resident kernels through one FIFO
+//! hardware queue, but real deployments choose a concurrency mechanism —
+//! time-sliced streams, MPS spatial sharing, or MIG partitioning — and
+//! the *magnitude* of cross-tenant interference is a function of that
+//! choice (Gilman & Walls, arXiv 2110.00459). [`ConcurrencyBackend`]
+//! makes the mechanism an explicit seam on
+//! [`DeviceConfig`](super::DeviceConfig): the default reproduces the
+//! pre-seam device byte for byte, the other two give the interference
+//! model (`cluster/compat.rs`) a hardware story to learn against.
+
+use crate::core::Error;
+use std::fmt;
+use std::str::FromStr;
+
+/// Default per-co-resident throughput dilation for [`ConcurrencyBackend::MpsSpatial`]
+/// when the CLI flag names the backend without a parameter (`--backend mps`).
+/// Each concurrently running kernel stretches a newcomer's execution by
+/// this fraction — the mid-range of published MPS co-location slowdowns.
+pub const DEFAULT_MPS_DILATION: f64 = 0.15;
+
+/// Default slice count for a bare `--backend mig`.
+pub const DEFAULT_MIG_SLICES: u32 = 2;
+
+/// How the simulated device runs kernels from co-resident tenants
+/// (DESIGN.md §6 "Concurrency backends").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConcurrencyBackend {
+    /// One FIFO hardware queue, non-preemptive, exactly one kernel at a
+    /// time — the paper's testbed model and the default. Reports are
+    /// byte-identical to the pre-backend-seam simulator.
+    TimeSliced,
+    /// MPS-style spatial sharing: co-resident kernels overlap instead of
+    /// queueing, and each kernel already running when a new one starts
+    /// dilates the newcomer's execution time by `dilation` (throughput
+    /// contention on SMs/L2/HBM). `dilation = 0` is perfect overlap.
+    MpsSpatial {
+        /// Fractional execution-time stretch per concurrently running
+        /// kernel: `exec × (1 + dilation × co_resident)`.
+        dilation: f64,
+    },
+    /// MIG-style hard partitioning into `slices` equal instances:
+    /// kernels on different slices overlap freely, each slice has
+    /// `1/slices` of the device's compute (execution times scale by
+    /// `slices`), and a busy slice queues FIFO. Generalizes
+    /// [`DeviceConfig::mig_instance`](super::DeviceConfig::mig_instance),
+    /// which models renting a *single* slice of a partitioned device.
+    MigPartition {
+        /// Number of equal hard slices (≥ 1).
+        slices: u32,
+    },
+}
+
+impl Default for ConcurrencyBackend {
+    fn default() -> ConcurrencyBackend {
+        ConcurrencyBackend::TimeSliced
+    }
+}
+
+impl ConcurrencyBackend {
+    /// An MPS backend with the default dilation.
+    pub fn mps() -> ConcurrencyBackend {
+        ConcurrencyBackend::MpsSpatial {
+            dilation: DEFAULT_MPS_DILATION,
+        }
+    }
+
+    /// A MIG backend with `slices` hard partitions (≥ 1).
+    pub fn mig(slices: u32) -> ConcurrencyBackend {
+        assert!(slices >= 1, "bad MIG slice count");
+        ConcurrencyBackend::MigPartition { slices }
+    }
+
+    /// Stable short name (the config/CLI token, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConcurrencyBackend::TimeSliced => "timesliced",
+            ConcurrencyBackend::MpsSpatial { .. } => "mps",
+            ConcurrencyBackend::MigPartition { .. } => "mig",
+        }
+    }
+}
+
+impl fmt::Display for ConcurrencyBackend {
+    /// Round-trippable token: `timesliced`, `mps:<dilation>`,
+    /// `mig:<slices>` — what `ExperimentConfig::to_json` persists.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConcurrencyBackend::TimeSliced => write!(f, "timesliced"),
+            ConcurrencyBackend::MpsSpatial { dilation } => write!(f, "mps:{dilation}"),
+            ConcurrencyBackend::MigPartition { slices } => write!(f, "mig:{slices}"),
+        }
+    }
+}
+
+impl FromStr for ConcurrencyBackend {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<ConcurrencyBackend, Error> {
+        let (kind, param) = match s.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (s, None),
+        };
+        match kind {
+            "timesliced" | "fifo" => match param {
+                None => Ok(ConcurrencyBackend::TimeSliced),
+                Some(p) => Err(Error::Config(format!(
+                    "backend 'timesliced' takes no parameter (got ':{p}')"
+                ))),
+            },
+            "mps" => {
+                let dilation = match param {
+                    None => DEFAULT_MPS_DILATION,
+                    Some(p) => p.parse::<f64>().map_err(|_| {
+                        Error::Config(format!("bad MPS dilation '{p}' (want a float)"))
+                    })?,
+                };
+                if !(dilation >= 0.0) {
+                    return Err(Error::Config(format!(
+                        "MPS dilation must be >= 0 (got {dilation})"
+                    )));
+                }
+                Ok(ConcurrencyBackend::MpsSpatial { dilation })
+            }
+            "mig" => {
+                let slices = match param {
+                    None => DEFAULT_MIG_SLICES,
+                    Some(p) => p.parse::<u32>().map_err(|_| {
+                        Error::Config(format!("bad MIG slice count '{p}' (want an integer)"))
+                    })?,
+                };
+                if slices == 0 {
+                    return Err(Error::Config("MIG needs at least one slice".into()));
+                }
+                Ok(ConcurrencyBackend::MigPartition { slices })
+            }
+            other => Err(Error::Config(format!(
+                "unknown concurrency backend '{other}' (want timesliced, mps[:dilation] \
+                 or mig[:slices])"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_round_trip() {
+        for b in [
+            ConcurrencyBackend::TimeSliced,
+            ConcurrencyBackend::MpsSpatial { dilation: 0.25 },
+            ConcurrencyBackend::MigPartition { slices: 7 },
+        ] {
+            let token = b.to_string();
+            assert_eq!(token.parse::<ConcurrencyBackend>().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn bare_tokens_get_defaults() {
+        assert_eq!(
+            "mps".parse::<ConcurrencyBackend>().unwrap(),
+            ConcurrencyBackend::MpsSpatial {
+                dilation: DEFAULT_MPS_DILATION
+            }
+        );
+        assert_eq!(
+            "mig".parse::<ConcurrencyBackend>().unwrap(),
+            ConcurrencyBackend::MigPartition {
+                slices: DEFAULT_MIG_SLICES
+            }
+        );
+        assert_eq!(
+            "timesliced".parse::<ConcurrencyBackend>().unwrap(),
+            ConcurrencyBackend::TimeSliced
+        );
+    }
+
+    #[test]
+    fn bad_tokens_are_rejected() {
+        assert!("nvlink".parse::<ConcurrencyBackend>().is_err());
+        assert!("mps:fast".parse::<ConcurrencyBackend>().is_err());
+        assert!("mps:-0.5".parse::<ConcurrencyBackend>().is_err());
+        assert!("mig:0".parse::<ConcurrencyBackend>().is_err());
+        assert!("timesliced:2".parse::<ConcurrencyBackend>().is_err());
+    }
+}

@@ -1,14 +1,18 @@
-//! The single-GPU device model: one FIFO hardware queue, non-preemptive
-//! kernel execution, full busy/idle accounting.
+//! The single-GPU device model: non-preemptive kernel execution behind a
+//! pluggable [`ConcurrencyBackend`], full busy/idle accounting.
 //!
-//! Because the queue is FIFO and kernels are never preempted, a kernel's
-//! `(start, finish)` are fully determined the moment it is submitted:
-//! `start = max(now + launch_latency, device_free)`. [`SimDevice::submit`]
-//! therefore returns the finished [`KernelRecord`] synchronously; the
-//! driver parks it in the sim's [`KernelArena`](super::KernelArena) and
-//! turns `finished_at` into a completion event carrying the slot handle
-//! (ADR-003 — events themselves stay small and `Copy`).
+//! Under every backend a kernel's `(start, finish)` are fully determined
+//! the moment it is submitted — `TimeSliced` queues FIFO behind the
+//! device (`start = max(now + launch_latency, device_free)`, exactly one
+//! kernel at a time), `MpsSpatial` starts at readiness with
+//! occupancy-dilated execution, `MigPartition` queues FIFO per hard
+//! slice. [`SimDevice::submit`] therefore returns the finished
+//! [`KernelRecord`] synchronously; the driver parks it in the sim's
+//! [`KernelArena`](super::KernelArena) and turns `finished_at` into a
+//! completion event carrying the slot handle (ADR-003 — events
+//! themselves stay small and `Copy`).
 
+use super::backend::ConcurrencyBackend;
 use crate::core::{Duration, KernelLaunch, KernelRecord, LaunchSource, SimTime};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -27,6 +31,11 @@ pub struct DeviceConfig {
     /// is ≈0.43. Kernel execution times scale by 1/compute_scale;
     /// CPU-side gaps are unaffected (they are host work).
     pub compute_scale: f64,
+    /// How co-resident kernels share the device (DESIGN.md §6
+    /// "Concurrency backends"). The default, `TimeSliced`, is the
+    /// paper's single-FIFO-queue model and reproduces pre-seam reports
+    /// byte for byte.
+    pub backend: ConcurrencyBackend,
 }
 
 impl Default for DeviceConfig {
@@ -34,6 +43,7 @@ impl Default for DeviceConfig {
         DeviceConfig {
             launch_latency: Duration::from_micros(5),
             compute_scale: 1.0,
+            backend: ConcurrencyBackend::TimeSliced,
         }
     }
 }
@@ -90,16 +100,27 @@ pub struct SimDevice {
     /// Pending gap-fill kernels (subset of `in_flight`), maintained
     /// incrementally so `pending_fills` needs no iteration.
     fills_in_flight: usize,
+    /// Per-slice drain times for [`ConcurrencyBackend::MigPartition`]
+    /// (empty under the other backends): each hard slice is its own
+    /// little FIFO device.
+    slice_free: Vec<SimTime>,
 }
 
 impl SimDevice {
     pub fn new(cfg: DeviceConfig) -> SimDevice {
+        let slice_free = match cfg.backend {
+            ConcurrencyBackend::MigPartition { slices } => {
+                vec![SimTime::ZERO; slices.max(1) as usize]
+            }
+            _ => Vec::new(),
+        };
         SimDevice {
             cfg,
             free_at: SimTime::ZERO,
             stats: DeviceStats::default(),
             in_flight: BinaryHeap::with_capacity(8),
             fills_in_flight: 0,
+            slice_free,
         }
     }
 
@@ -108,21 +129,55 @@ impl SimDevice {
     }
 
     /// Submit a kernel launch at CPU time `now`, consuming it. Returns
-    /// the completed execution record (FIFO + non-preemptive ⇒
-    /// deterministic at submission). Taking the launch by value lets the
-    /// record inherit its `task_key`/`kernel` by move — the submit path
-    /// does not even bump `Arc` refcounts.
+    /// the completed execution record (non-preemptive ⇒ deterministic at
+    /// submission under every backend). Taking the launch by value lets
+    /// the record inherit its `task_key`/`kernel` by move — the submit
+    /// path does not even bump `Arc` refcounts.
     pub fn submit(&mut self, launch: KernelLaunch, now: SimTime, source: LaunchSource) -> KernelRecord {
         let ready = now + self.cfg.launch_latency;
-        let start = ready.max(self.free_at);
         // MIG slice: fewer SMs → kernels take proportionally longer.
-        let exec = if self.cfg.compute_scale >= 1.0 {
+        let base = if self.cfg.compute_scale >= 1.0 {
             launch.true_duration
         } else {
             launch.true_duration.scale(1.0 / self.cfg.compute_scale)
         };
+        let (start, exec) = match self.cfg.backend {
+            // The paper's model: one FIFO hardware queue, one kernel at
+            // a time. This arm is the pre-seam arithmetic unchanged.
+            ConcurrencyBackend::TimeSliced => (ready.max(self.free_at), base),
+            // Spatial sharing: no queueing behind co-residents — the
+            // kernel starts at readiness, stretched by every kernel
+            // still running then (contention, not serialization).
+            ConcurrencyBackend::MpsSpatial { dilation } => {
+                let co = self
+                    .in_flight
+                    .iter()
+                    .filter(|Reverse((finish, _))| *finish > ready)
+                    .count();
+                (ready, base.scale(1.0 + dilation * co as f64))
+            }
+            // Hard partitioning: FIFO per slice, each slice at 1/slices
+            // of the device's compute. The earliest-free slice wins;
+            // ties go to the lowest index (deterministic).
+            ConcurrencyBackend::MigPartition { .. } => {
+                let slices = self.slice_free.len();
+                let mut best = 0;
+                for i in 1..slices {
+                    if self.slice_free[i] < self.slice_free[best] {
+                        best = i;
+                    }
+                }
+                let start = ready.max(self.slice_free[best]);
+                let exec = base.scale(slices as f64);
+                self.slice_free[best] = start + exec;
+                (start, exec)
+            }
+        };
         let finish = start + exec;
-        self.free_at = finish;
+        // Under TimeSliced `finish >= free_at` always holds, so the max
+        // is exactly the old `free_at = finish`; the overlap backends
+        // may complete out of submission order.
+        self.free_at = self.free_at.max(finish);
 
         self.stats.kernels += 1;
         self.stats.busy += exec;
@@ -222,6 +277,7 @@ mod tests {
         SimDevice::new(DeviceConfig {
             launch_latency: Duration::from_micros(5),
             compute_scale: 1.0,
+            ..DeviceConfig::default()
         })
     }
 
@@ -297,5 +353,115 @@ mod tests {
         d.submit(launch(500, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
         let horizon = SimTime(1_000_000); // 1ms
         assert!((d.stats().utilization(horizon) - 0.5).abs() < 1e-9);
+    }
+
+    /// The backend seam's contract: `TimeSliced` must reproduce the
+    /// pre-seam single-FIFO-queue arithmetic *byte for byte*. The
+    /// reference below is that arithmetic inlined; a seeded launch
+    /// stream (bursts, idle gaps, mixed durations) is pushed through
+    /// both and every `(start, finish)` pair must match exactly.
+    #[test]
+    fn timesliced_matches_pre_seam_fifo_reference() {
+        let latency = Duration::from_micros(5);
+        for seed in [1u64, 0xBEEF, 0xF1C1_7000] {
+            let mut d = SimDevice::new(DeviceConfig::default());
+            let mut ref_free = SimTime::ZERO; // reference device state
+            let mut state = seed;
+            let mut now = SimTime::ZERO;
+            for i in 0..500 {
+                // splitmix64 — same generator the sim derives seeds with.
+                state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                let mut z = state;
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+                z ^= z >> 31;
+                let dur_us = 10 + z % 300;
+                let gap_ns = if z % 3 == 0 { 0 } else { (z >> 32) % 200_000 };
+                now = now + Duration::from_nanos(gap_ns);
+                let src = if i % 4 == 0 { LaunchSource::GapFill } else { LaunchSource::Direct };
+                let rec = d.submit(launch(dur_us, now), now, src);
+                // Pre-seam reference: start = max(ready, free); free = finish.
+                let ref_start = (now + latency).max(ref_free);
+                let ref_finish = ref_start + Duration::from_micros(dur_us);
+                ref_free = ref_finish;
+                assert_eq!(rec.started_at, ref_start, "seed {seed} kernel {i}");
+                assert_eq!(rec.finished_at, ref_finish, "seed {seed} kernel {i}");
+                assert_eq!(d.free_at(), ref_free);
+            }
+        }
+    }
+
+    #[test]
+    fn mps_overlaps_and_dilates_by_occupancy() {
+        let mut d = SimDevice::new(DeviceConfig {
+            backend: ConcurrencyBackend::MpsSpatial { dilation: 0.5 },
+            ..DeviceConfig::default()
+        });
+        let t0 = SimTime::ZERO;
+        // First kernel: nothing co-resident → base duration.
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        assert_eq!(r1.started_at, SimTime(5_000));
+        assert_eq!(r1.exec_time(), Duration::from_micros(100));
+        // Second kernel while the first runs: starts immediately (no
+        // FIFO wait) but runs 1.5× slower.
+        let r2 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        assert_eq!(r2.started_at, SimTime(5_000), "no queueing behind r1");
+        assert_eq!(r2.exec_time(), Duration::from_micros(150));
+        // Third kernel after both drained: back to base duration.
+        let t3 = SimTime(1_000_000);
+        let r3 = d.submit(launch(100, t3), t3, LaunchSource::Direct);
+        assert_eq!(r3.exec_time(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn mps_zero_dilation_is_perfect_overlap() {
+        let mut d = SimDevice::new(DeviceConfig {
+            backend: ConcurrencyBackend::MpsSpatial { dilation: 0.0 },
+            ..DeviceConfig::default()
+        });
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        let r2 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        assert_eq!(r1.finished_at, r2.finished_at);
+    }
+
+    #[test]
+    fn mig_partition_parallel_slices_each_slower() {
+        // Two hard slices: two kernels run in parallel, each at half
+        // throughput; a third queues behind the earlier-free slice.
+        let mut d = SimDevice::new(DeviceConfig {
+            backend: ConcurrencyBackend::mig(2),
+            ..DeviceConfig::default()
+        });
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        let r2 = d.submit(launch(50, t0), t0, LaunchSource::Direct);
+        assert_eq!(r1.started_at, SimTime(5_000));
+        assert_eq!(r2.started_at, SimTime(5_000), "second slice is free");
+        assert_eq!(r1.exec_time(), Duration::from_micros(200), "half throughput");
+        assert_eq!(r2.exec_time(), Duration::from_micros(100));
+        // Third kernel queues on slice 1 (frees at 105us < 205us).
+        let r3 = d.submit(launch(10, t0), t0, LaunchSource::Direct);
+        assert_eq!(r3.started_at, SimTime(105_000));
+        assert_eq!(r3.exec_time(), Duration::from_micros(20));
+    }
+
+    #[test]
+    fn mig_single_slice_degenerates_to_fifo() {
+        let mut d = SimDevice::new(DeviceConfig {
+            backend: ConcurrencyBackend::mig(1),
+            ..DeviceConfig::default()
+        });
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        let r2 = d.submit(launch(50, t0), t0, LaunchSource::Direct);
+        assert_eq!(r1.finished_at, SimTime(105_000));
+        assert_eq!(r2.started_at, SimTime(105_000), "serialized like FIFO");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad MIG slice count")]
+    fn mig_slice_count_validated() {
+        let _ = ConcurrencyBackend::mig(0);
     }
 }

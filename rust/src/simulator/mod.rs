@@ -6,9 +6,15 @@
 //!
 //! The model (DESIGN.md §6):
 //!
-//! * The device executes exactly one kernel at a time, in submission
-//!   (FIFO) order, non-preemptively — kernel-granularity scheduling is
-//!   the paper's whole premise.
+//! * How the device runs co-resident kernels is a pluggable
+//!   [`ConcurrencyBackend`] (ADR-006). The default, `TimeSliced`,
+//!   executes exactly one kernel at a time in submission (FIFO) order,
+//!   non-preemptively — kernel-granularity scheduling is the paper's
+//!   whole premise, and this backend reproduces the pre-seam simulator
+//!   byte for byte. `MpsSpatial` overlaps co-resident kernels with
+//!   occupancy-dilated execution; `MigPartition` runs hard slices, each
+//!   its own little FIFO device. Every backend stays non-preemptive, so
+//!   determinism is unchanged.
 //! * Each service is a *closed-loop* CPU process: it issues kernel *i+1*
 //!   of a task only after observing kernel *i* complete and then spending
 //!   the trace's CPU-side gap (post-processing, glue code, launch
@@ -27,12 +33,14 @@
 //! events on a heap **overflow ring** — see DESIGN.md §Perf.
 
 mod arena;
+mod backend;
 mod device;
 mod event;
 mod process;
 mod wheel;
 
 pub use arena::{KernelArena, RecordSlot};
+pub use backend::{ConcurrencyBackend, DEFAULT_MIG_SLICES, DEFAULT_MPS_DILATION};
 pub use device::{DeviceConfig, DeviceStats, SimDevice};
 pub use event::{Event, EventQueue};
 pub use process::{ProcessAction, ServiceProcess, Stage, TaskOutcome};

@@ -75,6 +75,19 @@ impl ModelKind {
         ModelKind::Googlenet,
     ];
 
+    /// Number of models in the zoo (`ALL.len()`), for dense
+    /// per-model-pair tables such as the cluster interference model.
+    pub const COUNT: usize = ModelKind::ALL.len();
+
+    /// Dense position of this model in [`ModelKind::ALL`] — a stable
+    /// array index, so pairwise state can live in flat
+    /// `[[_; COUNT]; COUNT]` tables with no hashing or allocation on
+    /// lookup (the placement scan is O(residents²) lookups per
+    /// decision).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     /// The torchvision-style model name used in the paper's figures.
     pub fn name(self) -> &'static str {
         match self {
@@ -407,6 +420,14 @@ fn spec_for(kind: ModelKind) -> ModelSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn index_matches_position_in_all() {
+        for (i, kind) in ModelKind::ALL.iter().enumerate() {
+            assert_eq!(kind.index(), i, "{kind} index drifted from ALL order");
+        }
+        assert_eq!(ModelKind::COUNT, ModelKind::ALL.len());
+    }
 
     #[test]
     fn all_models_have_specs() {

@@ -314,6 +314,48 @@ fn scheduler_sharing_loop_is_allocation_free() {
     );
 }
 
+/// The learned-interference update path (ADR-006): `observe` (the
+/// per-completion EWMA step, run once per co-resident on every harvest)
+/// and `high_slowdown` (the per-scan predicted-dilation blend) operate
+/// on dense fixed-size pair tables — zero heap allocations, zero
+/// `canonical()` calls, from the first observation on (no warm-up
+/// needed, but one is run anyway to match the other gates).
+#[test]
+fn interference_observe_path_is_allocation_free() {
+    let _gate = GATE.lock().unwrap();
+    use fikit::cluster::InterferenceModel;
+    use fikit::workload::ModelKind;
+
+    let mut model = InterferenceModel::default();
+    let pairs = [
+        (ModelKind::KeypointRcnnResnet50Fpn, ModelKind::Googlenet),
+        (ModelKind::FcnResnet50, ModelKind::Vgg16),
+        (ModelKind::MaskrcnnResnet50Fpn, ModelKind::Resnet101),
+    ];
+    for (victim, aggressor) in pairs {
+        for _ in 0..64 {
+            model.observe(victim, aggressor, 1.3);
+        }
+    }
+
+    let canonical_before = canonical_count();
+    let allocs = count_allocs(|| {
+        for i in 0..10_000usize {
+            let (victim, aggressor) = pairs[i % pairs.len()];
+            model.observe(victim, aggressor, 1.3);
+            assert!(model.high_slowdown(victim, aggressor) >= 1.0);
+        }
+    });
+    let canonical_calls = canonical_count() - canonical_before;
+
+    assert_eq!(allocs, 0, "interference observe path allocated {allocs} times");
+    assert_eq!(
+        canonical_calls, 0,
+        "canonical() reachable from the interference observe path"
+    );
+    assert_eq!(model.observations(), 3 * 64 + 10_000);
+}
+
 /// The event core (ADR-003): steady-state traffic through the calendar
 /// wheel — near-future pushes, far-future pushes riding the overflow
 /// ring until they mature, pops, plus one arena insert/take per cycle —

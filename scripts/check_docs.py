@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Docs health check — the repo's "docs job".
 
-Six checks, zero dependencies:
+Seven checks, zero dependencies:
 
 1. **Markdown links**: every relative link target in every tracked
    `*.md` file must exist (anchors are checked against the target
@@ -25,7 +25,12 @@ Six checks, zero dependencies:
    be documented (backticked) in DESIGN.md's "Wire protocol" section —
    a message added to the wire without prose fails here. Probed: the
    variant list is parsed from the Rust source, not hand-maintained.
-6. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
+6. **Concurrency-backend coverage**: every variant of
+   ``ConcurrencyBackend`` in ``rust/src/simulator/backend.rs`` must be
+   documented (backticked) in DESIGN.md's "Concurrency backends"
+   section — a hardware model added to the simulator seam without
+   prose fails here. Probed from the Rust source like check 5.
+7. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
    (skipped with a notice when no cargo toolchain is available, e.g. in
    the offline container).
 
@@ -275,6 +280,70 @@ def check_protocol_docs() -> list[str]:
     return errors
 
 
+BACKEND_RS = os.path.join(REPO, "rust", "src", "simulator", "backend.rs")
+
+
+def backend_variants() -> list[str]:
+    """Parse the ConcurrencyBackend variant names out of backend.rs."""
+    with open(BACKEND_RS, encoding="utf-8") as f:
+        lines = f.readlines()
+    variants: list[str] = []
+    inside = False
+    depth = 0
+    variant = re.compile(r"^\s{4}([A-Z]\w*)\s*(?:\{|\(|,|$)")
+    for line in lines:
+        if not inside:
+            if re.match(r"\s*pub enum ConcurrencyBackend\s*\{", line):
+                inside = True
+                depth = line.count("{") - line.count("}")
+            continue
+        if depth == 1:
+            m = variant.match(line)
+            if m:
+                variants.append(m.group(1))
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            break
+    return variants
+
+
+def check_backend_docs() -> list[str]:
+    """Every ConcurrencyBackend variant must be documented (backticked)
+    in DESIGN.md's "Concurrency backends" section — a hardware model
+    added to the simulator seam without prose fails here."""
+    if not os.path.exists(BACKEND_RS):
+        return ["rust/src/simulator/backend.rs does not exist"]
+    if not os.path.exists(DESIGN):
+        return []  # check_design_refs already reports this
+    variants = backend_variants()
+    if not variants:
+        return [
+            "rust/src/simulator/backend.rs: found no ConcurrencyBackend "
+            "variants — parser or enum drifted"
+        ]
+    with open(DESIGN, encoding="utf-8") as f:
+        design = f.read()
+    m = re.search(r"^#{2,6}\s+.*Concurrency backends.*$", design, re.MULTILINE)
+    if not m:
+        return [
+            'rust/DESIGN.md: no "Concurrency backends" heading — the '
+            "hardware-concurrency vocabulary has nowhere to be documented"
+        ]
+    level = len(design[m.start():].split(None, 1)[0])
+    rest = design[m.end():]
+    nxt = re.search(rf"^#{{2,{level}}}\s", rest, re.MULTILINE)
+    section = rest[: nxt.start()] if nxt else rest
+    errors = []
+    for name in variants:
+        if not re.search(rf"`[^`]*\b{name}\b[^`]*`", section):
+            errors.append(
+                f"rust/DESIGN.md: concurrency-backends section never "
+                f"documents `{name}` (ConcurrencyBackend variant in "
+                f"rust/src/simulator/backend.rs)"
+            )
+    return errors
+
+
 def check_rustdoc() -> list[str]:
     if shutil.which("cargo") is None:
         print("  [skip] cargo not on PATH — rustdoc check skipped")
@@ -301,6 +370,7 @@ def main() -> int:
         ("DESIGN.md table of contents", check_design_toc),
         ("ADR cross-links", check_adr_links),
         ("wire-protocol coverage in DESIGN.md", check_protocol_docs),
+        ("concurrency-backend coverage in DESIGN.md", check_backend_docs),
         ("rustdoc (cargo doc --no-deps)", check_rustdoc),
     ]:
         print(f"checking {name} ...")
