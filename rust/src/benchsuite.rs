@@ -297,6 +297,51 @@ pub fn run_hotpath_suite(quick: bool) -> SuiteReport {
         budgets.insert("fikit_fill/window_1ms_q64".to_string(), 50_000);
     }
 
+    // --- preemption decision cycle (ADR-007): submit a fill, probe the
+    // policy against its (start, finish), cut the in-flight record,
+    // re-queue the remnant, then drain the stale completion through the
+    // arena tombstone — the full extra work a high-priority launch pays
+    // when it reclaims an overrunning fill mid-execution. ---
+    {
+        use crate::coordinator::best_prio_fit::{plan_preempt, PreemptAction};
+        use crate::coordinator::fikit::{PreemptionPolicy, DEFAULT_PREEMPT_COST};
+        use crate::core::LaunchSource;
+        use crate::simulator::{DeviceConfig, KernelArena, SimDevice};
+        let mut device = SimDevice::new(DeviceConfig::default());
+        let mut arena = KernelArena::new();
+        let mut q = w.filled_queues(64);
+        let fill = w.launch(0, Priority::P5);
+        let mut t = 0u64;
+        b.bench("preempt/decide", move || {
+            // Spaced so the device is always idle again by the next
+            // iteration: every cycle sees the same geometry.
+            t += 200_000;
+            let now = SimTime(t);
+            let rec = device.submit(fill.clone(), now, LaunchSource::GapFill);
+            let (started, finished) = (rec.started_at, rec.finished_at);
+            let slot = arena.insert(rec);
+            // A high-priority launch lands mid-execution (fraction 0.6 of
+            // the 50 µs fill): Evict plans Cut{ready}.
+            let ready = now + Duration::from_micros(35);
+            let mut reclaimed = false;
+            if let PreemptAction::Cut { cut_at } | PreemptAction::Split { cut_at } =
+                plan_preempt(PreemptionPolicy::Evict, ready, started, finished)
+            {
+                let live = arena.get(slot).expect("fill is live");
+                if device.preempt(live, cut_at, DEFAULT_PREEMPT_COST) {
+                    let _ = arena.cancel(slot);
+                    q.push_predicted(fill.clone(), Some(Duration::from_micros(20)), cut_at);
+                    black_box(q.pop_highest());
+                    reclaimed = true;
+                }
+            }
+            // The stale completion pops through the tombstone, freeing
+            // the slot for reuse next iteration.
+            black_box(arena.take_if_live(slot).is_none() == reclaimed)
+        });
+        budgets.insert("preempt/decide".to_string(), 2_000);
+    }
+
     // --- learned-interference hot path (ADR-006): the per-completion
     // EWMA observe + the per-scan predicted-dilation blend, both O(1)
     // probes of the dense pair tables and allocation-free in steady
@@ -478,6 +523,12 @@ mod tests {
             .find(|c| c.req_str("name").unwrap() == "best_prio_fit/select_n512")
             .expect("headline case missing");
         assert_eq!(gate.req_u64("budget_ns").unwrap(), 1_000);
+        // The preemption decision cycle is present and budgeted.
+        let preempt = cases
+            .iter()
+            .find(|c| c.req_str("name").unwrap() == "preempt/decide")
+            .expect("preempt decision case missing");
+        assert_eq!(preempt.req_u64("budget_ns").unwrap(), 2_000);
         // Round-trips through the JSON substrate.
         let parsed = Json::parse(&doc.encode_pretty()).unwrap();
         assert_eq!(parsed, doc);

@@ -339,6 +339,10 @@ pub struct ChurnConfig {
     /// aggressive kernel stream). The identification scenario's planted
     /// aggressor.
     pub aggressor: Option<(usize, f64)>,
+    /// Kernel-level preemption policy of every device's FIKIT tier
+    /// (ADR-007). The default, `None`, is the pre-preemption behaviour
+    /// byte for byte.
+    pub preempt: crate::coordinator::fikit::PreemptionPolicy,
 }
 
 impl ChurnConfig {
@@ -359,6 +363,7 @@ impl ChurnConfig {
             backend: ConcurrencyBackend::TimeSliced,
             learn_interference: false,
             aggressor: None,
+            preempt: crate::coordinator::fikit::PreemptionPolicy::None,
         }
     }
 }
@@ -615,6 +620,7 @@ pub fn run_churn(cfg: &ChurnConfig, compat: &CompatMatrix) -> Result<ChurnReport
             // opt-in QoS improvement under drift.
             c.online.enabled = refine;
             c.device.backend = cfg.backend;
+            c.preempt = cfg.preempt;
             c
         })
         .collect();

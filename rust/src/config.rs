@@ -118,6 +118,12 @@ pub struct ExperimentConfig {
     pub online: crate::profile::OnlineConfig,
     /// Within-priority fill selection rule (ablation; paper: LongestFit).
     pub fill_policy: crate::coordinator::best_prio_fit::FillPolicy,
+    /// In-flight fill reclamation policy (DESIGN.md §8). Default `None`:
+    /// the paper's non-preemptive behaviour, byte-identical reports.
+    pub preempt: crate::coordinator::fikit::PreemptionPolicy,
+    /// Modeled cost of one preemption (driver stop + relaunch), charged
+    /// as dead device time at the cut.
+    pub preempt_cost: Duration,
     /// Small-gap threshold ε for Algorithm 1.
     pub epsilon: Duration,
     /// Root RNG seed — all service trace generators derive from it.
@@ -146,6 +152,8 @@ impl Default for ExperimentConfig {
             feedback: true,
             online: crate::profile::OnlineConfig::default(),
             fill_policy: crate::coordinator::best_prio_fit::FillPolicy::LongestFit,
+            preempt: crate::coordinator::fikit::PreemptionPolicy::None,
+            preempt_cost: crate::coordinator::fikit::DEFAULT_PREEMPT_COST,
             epsilon: default_epsilon(),
             seed: default_seed(),
             horizon: None,
@@ -235,6 +243,8 @@ impl ExperimentConfig {
                     crate::coordinator::best_prio_fit::FillPolicy::ShortestFit => "shortest",
                 },
             )
+            .set("preempt", self.preempt.to_string())
+            .set("preempt_cost_ns", self.preempt_cost.nanos())
             .set("epsilon_ns", self.epsilon.nanos())
             .set("seed", self.seed)
             .set(
@@ -343,6 +353,17 @@ impl ExperimentConfig {
                 Some(p) => p.parse()?,
                 None => Default::default(),
             },
+            // Absent in pre-preemption configs: default to None so old
+            // JSON replays byte-identically.
+            preempt: match v.get("preempt").and_then(Json::as_str) {
+                Some(token) => token.parse()?,
+                None => Default::default(),
+            },
+            preempt_cost: v
+                .get("preempt_cost_ns")
+                .and_then(Json::as_u64)
+                .map(Duration::from_nanos)
+                .unwrap_or(defaults.preempt_cost),
             epsilon: v
                 .get("epsilon_ns")
                 .and_then(Json::as_u64)
@@ -431,12 +452,16 @@ mod tests {
         cfg.online.track_errors = true;
         cfg.online.error_window = 48;
         cfg.device.backend = ConcurrencyBackend::MpsSpatial { dilation: 0.25 };
+        cfg.preempt = crate::coordinator::fikit::PreemptionPolicy::Hybrid { threshold: 0.4 };
+        cfg.preempt_cost = Duration::from_micros(35);
         cfg.validate().unwrap();
 
         let text = cfg.to_json().encode_pretty();
         let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.services.len(), 3);
         assert_eq!(back.device.backend, cfg.device.backend);
+        assert_eq!(back.preempt, cfg.preempt);
+        assert_eq!(back.preempt_cost, cfg.preempt_cost);
         assert!(back.online.enabled);
         assert_eq!(back.online.band_floor_frac, 0.2);
         assert_eq!(back.online.cost_per_obs, Duration::from_nanos(275));
@@ -468,6 +493,23 @@ mod tests {
         }
         let back = ExperimentConfig::from_json(&json).unwrap();
         assert_eq!(back.device.backend, ConcurrencyBackend::TimeSliced);
+    }
+
+    #[test]
+    fn config_without_preempt_fields_defaults_to_none() {
+        // Pre-preemption configs have no "preempt" keys; they must keep
+        // meaning the non-preemptive scheduler.
+        let mut cfg = ExperimentConfig::default();
+        cfg.services
+            .push(ServiceConfig::new(ModelKind::Alexnet, Priority::P0).tasks(1));
+        let mut json = cfg.to_json();
+        if let Json::Obj(map) = &mut json {
+            map.remove("preempt");
+            map.remove("preempt_cost_ns");
+        }
+        let back = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(back.preempt, crate::coordinator::fikit::PreemptionPolicy::None);
+        assert_eq!(back.preempt_cost, crate::coordinator::fikit::DEFAULT_PREEMPT_COST);
     }
 
     #[test]

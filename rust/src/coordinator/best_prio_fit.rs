@@ -16,8 +16,9 @@
 //! no prediction (unprofiled tasks) are invisible to the index and thus
 //! never gamble a high-priority task's gap.
 
+use super::fikit::{PreemptionPolicy, DEFAULT_SPLIT_SLICE};
 use super::queues::PriorityQueues;
-use crate::core::{Duration, KernelLaunch, Priority};
+use crate::core::{Duration, KernelLaunch, Priority, SimTime};
 
 /// The selection made by one `BestPrioFit` invocation.
 #[derive(Debug, Clone)]
@@ -92,6 +93,82 @@ pub fn select_fit(
         }
     }
     None
+}
+
+/// What [`plan_preempt`] decided for one in-flight fill kernel.
+///
+/// Pure geometry over `(ready, started_at, finished_at)`; the caller
+/// (the driver's preempt probe) owns the economics — it only invokes the
+/// planner when the high-priority launch would miss its gap by more than
+/// the modeled preemption cost, and only commits a cut that strictly
+/// improves the projected start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptAction {
+    /// Leave the kernel alone.
+    Skip,
+    /// Not yet started at `ready`: cancel it whole (cut at its start —
+    /// no executed work exists, nothing is wasted).
+    Cancel,
+    /// Evict mid-flight at `cut_at` (= `ready`): the executed prefix is
+    /// wasted and the *full* kernel re-queues.
+    Cut { cut_at: SimTime },
+    /// Shorten at the slice boundary `cut_at`: the executed prefix is
+    /// kept and the remnant re-queues with its remaining duration.
+    Split { cut_at: SimTime },
+}
+
+/// Decide how an in-flight fill kernel `(started_at, finished_at)` yields
+/// to a high-priority launch that becomes runnable at `ready`
+/// (DESIGN.md §8).
+///
+/// * not started by `ready` → [`PreemptAction::Cancel`] under every
+///   active policy (rolling back an unstarted kernel is free);
+/// * running under `Evict` → cut right at `ready`, wasting the prefix;
+/// * running under `Split { min_slice }` → cut at the first boundary
+///   `started_at + k·min_slice ≥ ready` that still precedes the natural
+///   finish (otherwise the kernel is nearly done — let it run);
+/// * running under `Hybrid { threshold }` → evict while the executed
+///   fraction at `ready` is below `threshold`, split (at the default
+///   slice granularity) once enough work has accumulated to be worth
+///   keeping.
+pub fn plan_preempt(
+    policy: PreemptionPolicy,
+    ready: SimTime,
+    started_at: SimTime,
+    finished_at: SimTime,
+) -> PreemptAction {
+    if policy == PreemptionPolicy::None || ready >= finished_at {
+        return PreemptAction::Skip;
+    }
+    if ready <= started_at {
+        return PreemptAction::Cancel;
+    }
+    let split_at = |min_slice: Duration| -> PreemptAction {
+        // First slice boundary at or after `ready`: ceil((ready-start)/slice).
+        let elapsed = (ready - started_at).nanos();
+        let slice = min_slice.nanos().max(1);
+        let k = ((elapsed + slice - 1) / slice).max(1);
+        let cut_at = started_at + Duration(k * slice);
+        if cut_at >= finished_at {
+            PreemptAction::Skip
+        } else {
+            PreemptAction::Split { cut_at }
+        }
+    };
+    match policy {
+        PreemptionPolicy::None => PreemptAction::Skip, // unreachable (early return)
+        PreemptionPolicy::Evict => PreemptAction::Cut { cut_at: ready },
+        PreemptionPolicy::Split { min_slice } => split_at(min_slice),
+        PreemptionPolicy::Hybrid { threshold } => {
+            let executed = (ready - started_at).nanos() as f64;
+            let total = (finished_at - started_at).nanos().max(1) as f64;
+            if executed / total < threshold {
+                PreemptAction::Cut { cut_at: ready }
+            } else {
+                split_at(DEFAULT_SPLIT_SLICE)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -216,5 +293,107 @@ mod tests {
         assert!(best_prio_fit(&mut q, Duration::from_micros(100)).is_none());
         push(&mut q, "a", "k", Priority::P1, 10);
         assert!(best_prio_fit(&mut q, Duration::ZERO).is_none());
+    }
+
+    // --- plan_preempt geometry ---
+
+    const START: SimTime = SimTime(1_000_000); // 1 ms
+    const FINISH: SimTime = SimTime(2_000_000); // 1 ms kernel
+
+    #[test]
+    fn plan_none_always_skips() {
+        for ready_ns in [0u64, 1_000_000, 1_500_000, 2_000_000] {
+            assert_eq!(
+                plan_preempt(PreemptionPolicy::None, SimTime(ready_ns), START, FINISH),
+                PreemptAction::Skip
+            );
+        }
+    }
+
+    #[test]
+    fn plan_unstarted_kernels_cancel_whole() {
+        for policy in [
+            PreemptionPolicy::Evict,
+            PreemptionPolicy::split(),
+            PreemptionPolicy::hybrid(),
+        ] {
+            assert_eq!(
+                plan_preempt(policy, SimTime(500_000), START, FINISH),
+                PreemptAction::Cancel,
+                "{policy}: ready before start"
+            );
+            assert_eq!(
+                plan_preempt(policy, START, START, FINISH),
+                PreemptAction::Cancel,
+                "{policy}: ready exactly at start"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_finished_kernels_are_left_alone() {
+        for policy in [
+            PreemptionPolicy::Evict,
+            PreemptionPolicy::split(),
+            PreemptionPolicy::hybrid(),
+        ] {
+            assert_eq!(plan_preempt(policy, FINISH, START, FINISH), PreemptAction::Skip);
+            assert_eq!(
+                plan_preempt(policy, SimTime(9_000_000), START, FINISH),
+                PreemptAction::Skip
+            );
+        }
+    }
+
+    #[test]
+    fn plan_evict_cuts_at_ready() {
+        let ready = SimTime(1_300_000);
+        assert_eq!(
+            plan_preempt(PreemptionPolicy::Evict, ready, START, FINISH),
+            PreemptAction::Cut { cut_at: ready }
+        );
+    }
+
+    #[test]
+    fn plan_split_snaps_to_next_slice_boundary() {
+        let policy = PreemptionPolicy::Split {
+            min_slice: Duration::from_micros(250),
+        };
+        // Ready 300 µs in → next boundary is 500 µs after start.
+        assert_eq!(
+            plan_preempt(policy, SimTime(1_300_000), START, FINISH),
+            PreemptAction::Split { cut_at: SimTime(1_500_000) }
+        );
+        // Ready exactly on a boundary cuts there.
+        assert_eq!(
+            plan_preempt(policy, SimTime(1_500_000), START, FINISH),
+            PreemptAction::Split { cut_at: SimTime(1_500_000) }
+        );
+        // No boundary left before the natural finish → let it run.
+        assert_eq!(
+            plan_preempt(policy, SimTime(1_900_000), START, FINISH),
+            PreemptAction::Skip
+        );
+        // Boundary == finish is not a cut either.
+        assert_eq!(
+            plan_preempt(policy, SimTime(1_750_001), START, FINISH),
+            PreemptAction::Skip
+        );
+    }
+
+    #[test]
+    fn plan_hybrid_evicts_young_and_splits_old() {
+        let policy = PreemptionPolicy::Hybrid { threshold: 0.5 };
+        // 30% executed < 50% → cheap to discard.
+        assert_eq!(
+            plan_preempt(policy, SimTime(1_300_000), START, FINISH),
+            PreemptAction::Cut { cut_at: SimTime(1_300_000) }
+        );
+        // 60% executed ≥ 50% → keep the prefix, cut at the next default
+        // slice boundary (250 µs grid → 750 µs after start).
+        assert_eq!(
+            plan_preempt(policy, SimTime(1_600_000), START, FINISH),
+            PreemptAction::Split { cut_at: SimTime(1_750_000) }
+        );
     }
 }

@@ -12,17 +12,21 @@
 //!   without profiles are first measured (profiling pass), exactly the
 //!   paper's measurement → sharing lifecycle (Fig 3).
 
+use super::best_prio_fit::{plan_preempt, PreemptAction};
+use super::fikit::PreemptionPolicy;
 use super::scheduler::{FikitScheduler, SchedulerConfig, SchedulerStats, Submission};
 use super::Mode;
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::core::{Duration, Interner, LaunchSource, Result, SimTime, TaskKey};
+use crate::core::{
+    Duration, Interner, KernelLaunch, LaunchSource, Result, SimTime, TaskId, TaskKey,
+};
 use crate::metrics::{JctStats, TextTable, Timeline, TimelinePoint};
 use crate::profile::{
     OnlineRefiner, ProfileStore, RefinerStats, ResolvedProfile, SymbolResolver, TaskProfile,
 };
 use crate::simulator::{
-    DeviceStats, Event, EventQueue, KernelArena, ProcessAction, ServiceProcess, SimDevice, Stage,
-    TaskOutcome,
+    DeviceStats, Event, EventQueue, KernelArena, ProcessAction, RecordSlot, ServiceProcess,
+    SimDevice, Stage, TaskOutcome,
 };
 use crate::workload::{InvocationPattern, Service};
 use std::collections::{HashMap, VecDeque};
@@ -126,6 +130,17 @@ impl ExperimentReport {
                 sched.feedback.windows,
                 sched.feedback.early_stops,
             ));
+            // Kernel-level preemption line only when the tier fired:
+            // under `PreemptionPolicy::None` (and in runs where the
+            // probe never triggered) the summary stays byte-identical
+            // to pre-preemption reports.
+            if sched.preempt.requeues > 0 {
+                let p = &sched.preempt;
+                out.push_str(&format!(
+                    "preempt: evictions={} cuts={} splits={} requeues={} reclaimed={} wasted={}\n",
+                    p.evictions, p.cuts, p.splits, p.requeues, p.reclaimed, p.wasted,
+                ));
+            }
         }
         if let Some(r) = &self.refiner {
             out.push_str(&format!(
@@ -273,6 +288,28 @@ pub enum DetachOutcome {
     Draining,
 }
 
+/// An in-flight gap-fill kernel the preempt probe may still reclaim
+/// (ADR-007). Tracked only in FIKIT mode with a non-`None`
+/// [`PreemptionPolicy`]; the vec is in submission (= device FIFO tail)
+/// order and is cleared the moment a non-fill launch is priced in —
+/// after that, nothing behind the direct kernel can move up anyway.
+struct LiveFill {
+    /// Arena slot of the fill's in-flight record.
+    rec: RecordSlot,
+    /// Owning process slot.
+    svc: usize,
+    /// The original launch, kept whole so an eviction can re-queue it
+    /// verbatim (clone cost is refcount bumps — ids are `Arc<str>`).
+    launch: KernelLaunch,
+    /// The profiled `SK` the fill was parked with; an evicted whole
+    /// re-enters the queues at the same index. (A split remnant is
+    /// re-indexed by its remaining duration instead.)
+    predicted: Option<Duration>,
+    /// Modeled device-side span.
+    started_at: SimTime,
+    finished_at: SimTime,
+}
+
 /// The discrete-event simulation state of **one GPU**: its device FIFO,
 /// its hosted service processes, and (in FIKIT mode) its coordinator.
 ///
@@ -323,6 +360,14 @@ pub struct GpuSim<'a> {
     excl_queue: VecDeque<(usize, crate::core::Priority, u64)>,
     excl_seq: u64,
     excl_locked: bool,
+    /// In-flight fills the preempt probe may reclaim (ADR-007). Always
+    /// empty under [`PreemptionPolicy::None`] and outside FIKIT mode.
+    live_fills: Vec<LiveFill>,
+    /// Preempted launches awaiting re-dispatch, keyed by
+    /// `(svc, task_id, seq)`. A matching re-submission must NOT
+    /// re-pipeline its process (`on_submitted` already ran when the
+    /// kernel was first submitted).
+    requeued: Vec<(usize, TaskId, u32)>,
     events_processed: u64,
     sim_now: SimTime,
 }
@@ -376,6 +421,8 @@ impl<'a> GpuSim<'a> {
             excl_queue: VecDeque::new(),
             excl_seq: 0,
             excl_locked: false,
+            live_fills: Vec::new(),
+            requeued: Vec::new(),
             events_processed: 0,
             sim_now: SimTime::ZERO,
         };
@@ -600,19 +647,181 @@ impl<'a> GpuSim<'a> {
         // a bound handle (processes are bound at attach).
         debug_assert!(launch.task_handle.is_bound(), "unbound launch in sim");
         let svc = self.handle_to_idx[launch.task_handle.index()];
+        let preempting =
+            self.cfg.mode == Mode::Fikit && self.cfg.preempt != PreemptionPolicy::None;
+        let tracked = if preempting {
+            if source == LaunchSource::GapFill {
+                // Reclaimable until a non-fill launch is priced in.
+                Some(launch.clone())
+            } else {
+                // A direct/drain launch may reclaim in-flight fills
+                // *before* its own device pricing; whatever survives
+                // is queued ahead of it and no longer the device tail.
+                self.maybe_preempt(&launch, now);
+                self.live_fills.clear();
+                None
+            }
+        } else {
+            None
+        };
+        let (l_tid, l_seq) = (launch.task_id, launch.seq);
         let record = self.device.submit(launch, now, source);
-        let finished_at = record.finished_at;
+        let (started_at, finished_at) = (record.started_at, record.finished_at);
         let rec = self.arena.insert(record);
         self.events
             .push(finished_at, Event::KernelDone { svc, rec });
-        if let Some(next_issue) = self.procs[svc].on_submitted(now) {
-            self.events.push(next_issue, Event::IssueKernel { svc });
+        if let Some(launch) = tracked {
+            let predicted = self
+                .scheduler
+                .as_ref()
+                .expect("fills only exist in fikit mode")
+                .predicted_sk(&launch);
+            self.live_fills.push(LiveFill {
+                rec,
+                svc,
+                launch,
+                predicted,
+                started_at,
+                finished_at,
+            });
+        }
+        // A preempted launch re-entering the device already pipelined
+        // its owner's next issue when it was first submitted.
+        let resubmit = !self.requeued.is_empty()
+            && self
+                .requeued
+                .iter()
+                .position(|&(s, tid, sq)| s == svc && tid == l_tid && sq == l_seq)
+                .map(|pos| {
+                    self.requeued.swap_remove(pos);
+                })
+                .is_some();
+        if !resubmit {
+            if let Some(next_issue) = self.procs[svc].on_submitted(now) {
+                self.events.push(next_issue, Event::IssueKernel { svc });
+            }
         }
     }
 
     fn submit_all(&mut self, subs: Vec<Submission>, now: SimTime) {
         for sub in subs {
             self.submit(sub.launch, sub.source, now);
+        }
+    }
+
+    /// The preempt probe (ADR-007): `launch` (direct or drain) is about
+    /// to be priced into the device model. While in-flight fill kernels
+    /// delay its projected start by more than the modeled preemption
+    /// cost, reclaim them from the tail inward:
+    ///
+    /// * a fill whose modeled start is still ahead of the probe point is
+    ///   **evicted** whole — full rollback, nothing executed, no penalty;
+    /// * the fill actually running at the probe point is **cut** or
+    ///   **split** per [`PreemptionPolicy`], paying `preempt_cost` and
+    ///   (for a cut) discarding the executed prefix.
+    ///
+    /// Every reclaimed launch re-enters the priority queues via
+    /// [`FikitScheduler::park_preempted`]; its stale `KernelDone` event
+    /// stays in the wheel and is swallowed by the arena tombstone.
+    /// Under `MpsSpatial` fills never delay the probe's start
+    /// (`projected_start` = readiness), so the probe is inert there.
+    fn maybe_preempt(&mut self, launch: &KernelLaunch, now: SimTime) {
+        let policy = self.cfg.preempt;
+        let cost = self.cfg.preempt_cost;
+        let ready = now + self.cfg.device.launch_latency;
+        loop {
+            let Some(lf) = self.live_fills.last() else { return };
+            // Only a strictly higher-priority launch may reclaim work.
+            if !launch.priority.is_higher_than(lf.launch.priority) {
+                return;
+            }
+            // Would the launch start late enough to pay for a preempt?
+            if self.device.projected_start(now).since(ready) <= cost {
+                return;
+            }
+            let (rec, svc, started_at, finished_at) =
+                (lf.rec, lf.svc, lf.started_at, lf.finished_at);
+            if ready <= started_at {
+                // Not yet started at the probe point: evict it whole and
+                // re-examine what is now the tail.
+                let ok = {
+                    let record = self.arena.get(rec).expect("live fill has a record");
+                    self.device.preempt(record, started_at, Duration::ZERO)
+                };
+                if !ok {
+                    return;
+                }
+                let record = self.arena.cancel(rec);
+                let lf = self.live_fills.pop().expect("checked non-empty");
+                let sched = self
+                    .scheduler
+                    .as_mut()
+                    .expect("preempt probe only runs in fikit mode");
+                {
+                    let st = sched.preempt_stats_mut();
+                    st.evictions += 1;
+                    st.reclaimed += record.finished_at.since(record.started_at);
+                }
+                self.requeued.push((svc, lf.launch.task_id, lf.launch.seq));
+                sched.park_preempted(lf.launch, lf.predicted, now);
+                continue;
+            }
+            // The tail fill is (modeled as) running at the probe point.
+            let action = plan_preempt(policy, ready, started_at, finished_at);
+            let cut_at = match action {
+                PreemptAction::Skip => return,
+                // Defensive: `ready > started_at` here, so the planner
+                // cannot ask for a whole-kernel cancel.
+                PreemptAction::Cancel => started_at,
+                PreemptAction::Cut { cut_at } | PreemptAction::Split { cut_at } => cut_at,
+            };
+            // Strict improvement: the launch must start earlier even
+            // after paying the preemption penalty.
+            if cut_at + cost >= finished_at {
+                return;
+            }
+            let ok = {
+                let record = self.arena.get(rec).expect("live fill has a record");
+                self.device.preempt(record, cut_at, cost)
+            };
+            if !ok {
+                return;
+            }
+            let record = self.arena.cancel(rec);
+            let lf = self.live_fills.pop().expect("checked non-empty");
+            let sched = self
+                .scheduler
+                .as_mut()
+                .expect("preempt probe only runs in fikit mode");
+            sched.preempt_stats_mut().reclaimed += record.finished_at.since(cut_at);
+            if let PreemptAction::Split { .. } = action {
+                sched.preempt_stats_mut().splits += 1;
+                // The unexecuted suffix re-enters the queues as a
+                // remnant indexed by its remaining device time; its
+                // true duration shrinks proportionally (device time =
+                // true duration × compute scaling).
+                let remaining = record.finished_at.since(cut_at);
+                let total = record.finished_at.since(record.started_at);
+                let mut remnant = lf.launch;
+                let num = remaining.nanos() as u128 * remnant.true_duration.nanos() as u128;
+                remnant.true_duration =
+                    Duration::from_nanos(((num / total.nanos() as u128) as u64).max(1));
+                self.requeued.push((svc, remnant.task_id, remnant.seq));
+                sched.park_preempted(remnant, Some(remaining), now);
+            } else {
+                {
+                    let st = sched.preempt_stats_mut();
+                    st.cuts += 1;
+                    st.wasted += cut_at.since(record.started_at);
+                }
+                // The executed prefix is discarded: the original launch
+                // re-queues whole, at its original prediction.
+                self.requeued.push((svc, lf.launch.task_id, lf.launch.seq));
+                sched.park_preempted(lf.launch, lf.predicted, now);
+            }
+            // Only the device tail is reclaimable, and the cut kernel
+            // keeps its prefix there — nothing behind it can move up.
+            return;
         }
     }
 
@@ -749,7 +958,20 @@ impl<'a> GpuSim<'a> {
                 }
             }
             Event::KernelDone { svc, rec } => {
-                let record = self.arena.take(rec);
+                // A tombstoned slot is a stale completion of a preempted
+                // kernel: popping it reconciles the lazy deletion
+                // (ADR-003's no-random-removal wheel), nothing else.
+                let Some(record) = self.arena.take_if_live(rec) else {
+                    return;
+                };
+                if !self.live_fills.is_empty() {
+                    // A fill that ran to completion is no longer
+                    // reclaimable. Ordered removal: the vec must stay in
+                    // device-FIFO-tail order for the preempt probe.
+                    if let Some(pos) = self.live_fills.iter().position(|lf| lf.rec == rec) {
+                        self.live_fills.remove(pos);
+                    }
+                }
                 // Scheduler reacts first (fill windows open on holder
                 // kernel completions).
                 if let Some(sched) = self.scheduler.as_mut() {
@@ -1089,6 +1311,71 @@ mod tests {
         assert_eq!(ra.drifts, rb.drifts);
         assert_eq!(ra.snapshots_published, rb.snapshots_published);
         assert_eq!(a.sim_end, b.sim_end);
+    }
+
+    /// The preempt probe reclaims overrunning fills under `Evict`: the
+    /// machinery fires, every task still completes, and the device
+    /// kernel counter obeys the conservation identity (each cut/split
+    /// leaves one counted partial execution behind; evictions of
+    /// unstarted fills roll back entirely).
+    #[test]
+    fn evict_policy_reclaims_overrunning_fills() {
+        let none = run_experiment(&two_service_cfg(Mode::Fikit, 30)).unwrap();
+        let mut cfg = two_service_cfg(Mode::Fikit, 30);
+        cfg.preempt = PreemptionPolicy::Evict;
+        let evict = run_experiment(&cfg).unwrap();
+
+        assert!(evict.services.iter().all(|s| s.completed == 30));
+        let p = &evict.scheduler.as_ref().unwrap().preempt;
+        assert!(p.requeues > 0, "probe never fired on an overrunning fill");
+        assert_eq!(p.requeues, p.evictions + p.cuts + p.splits);
+        assert_eq!(p.splits, 0, "evict never splits");
+        assert_eq!(
+            evict.device.kernels,
+            none.device.kernels + p.cuts + p.splits,
+            "conservation: re-queued cuts re-execute exactly once"
+        );
+
+        // Reclaiming fills must not hurt the high-priority service
+        // (small tolerance: later fill dynamics differ between runs).
+        let hp_none = none.by_priority(Priority::P0).unwrap().jct.mean_ms();
+        let hp_evict = evict.by_priority(Priority::P0).unwrap().jct.mean_ms();
+        assert!(
+            hp_evict <= hp_none * 1.05,
+            "evict must not slow the high-prio service: {hp_evict:.3}ms vs {hp_none:.3}ms"
+        );
+
+        // The None-policy run reports no preempt activity at all, and
+        // its summary never grows the extra line.
+        let p0 = &none.scheduler.as_ref().unwrap().preempt;
+        assert_eq!(p0.requeues + p0.evictions + p0.cuts + p0.splits, 0);
+        assert!(!none.summary().contains("preempt:"));
+        assert!(evict.summary().contains("preempt: evictions="));
+    }
+
+    /// Preemptive scheduling stays deterministic: two identical hybrid
+    /// runs agree on every counter and JCT.
+    #[test]
+    fn preemptive_runs_are_deterministic() {
+        let run = || {
+            let mut cfg = two_service_cfg(Mode::Fikit, 20);
+            cfg.preempt = PreemptionPolicy::hybrid();
+            run_experiment(&cfg).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.sim_end, b.sim_end);
+        assert_eq!(a.events, b.events);
+        let (pa, pb) = (
+            &a.scheduler.as_ref().unwrap().preempt,
+            &b.scheduler.as_ref().unwrap().preempt,
+        );
+        assert_eq!(pa.evictions, pb.evictions);
+        assert_eq!(pa.cuts, pb.cuts);
+        assert_eq!(pa.splits, pb.splits);
+        assert_eq!(pa.reclaimed, pb.reclaimed);
+        for (sa, sb) in a.services.iter().zip(&b.services) {
+            assert_eq!(sa.jct.mean, sb.jct.mean);
+        }
     }
 
     #[test]

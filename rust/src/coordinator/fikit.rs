@@ -20,12 +20,159 @@
 
 use super::best_prio_fit::{select_fit, FillPolicy, Fit};
 use super::queues::PriorityQueues;
-use crate::core::{Duration, SimTime, TaskHandle};
+use crate::core::{Duration, Error, SimTime, TaskHandle};
+use std::fmt;
+use std::str::FromStr;
 
 /// Default small-gap threshold ε: "a kernel launched on the GPU typically
 /// costs 0.1 ms to 2 ms; the function avoids filling negligible idle gaps
 /// smaller than 0.1 ms" (paper, Algorithm 1 commentary).
 pub const DEFAULT_EPSILON: Duration = Duration(100_000);
+
+/// Default modeled cost of interrupting an in-flight kernel (driver-level
+/// stop + context drain + relaunch bookkeeping): 20 µs, in the band
+/// real-time GPU preemption work reports for kernel-boundary interrupts
+/// (arXiv 2401.16529). Charged as *dead* device time, never as busy.
+pub const DEFAULT_PREEMPT_COST: Duration = Duration(20_000);
+
+/// Default slice granularity for [`PreemptionPolicy::Split`]: a running
+/// fill kernel may be shortened only at 250 µs boundaries from its start
+/// (the modeled sub-kernel checkpoint interval).
+pub const DEFAULT_SPLIT_SLICE: Duration = Duration(250_000);
+
+/// Default executed-fraction threshold for [`PreemptionPolicy::Hybrid`]:
+/// below it the partial work is cheap to discard (evict), at or above it
+/// the kernel is worth finishing to its next slice boundary (split).
+pub const DEFAULT_HYBRID_THRESHOLD: f64 = 0.5;
+
+/// What the scheduler may do to an in-flight low-priority fill kernel
+/// when a high-priority launch would otherwise miss its gap by more than
+/// the modeled preemption cost (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PreemptionPolicy {
+    /// Never reclaim in-flight fills — the paper's baseline behaviour
+    /// ("overhead 2" stands in full). Byte-identical to the pre-preemption
+    /// simulator.
+    #[default]
+    None,
+    /// Cancel the fill outright: partial execution is wasted (stays
+    /// busy), the *full* kernel re-queues with its original prediction.
+    Evict,
+    /// Shorten the fill at the next `min_slice` boundary from its start;
+    /// the executed prefix is kept and the remnant re-queues indexed by
+    /// its remaining duration.
+    Split {
+        /// Slice granularity (> 0); cuts land on `start + k·min_slice`.
+        min_slice: Duration,
+    },
+    /// Evict when the executed fraction at the cut is below `threshold`
+    /// (little work to waste), split otherwise (too much to throw away).
+    Hybrid {
+        /// Executed-fraction pivot in `(0, 1]`.
+        threshold: f64,
+    },
+}
+
+impl PreemptionPolicy {
+    /// A `Split` policy with the default slice granularity.
+    pub fn split() -> PreemptionPolicy {
+        PreemptionPolicy::Split {
+            min_slice: DEFAULT_SPLIT_SLICE,
+        }
+    }
+
+    /// A `Hybrid` policy with the default executed-fraction threshold.
+    pub fn hybrid() -> PreemptionPolicy {
+        PreemptionPolicy::Hybrid {
+            threshold: DEFAULT_HYBRID_THRESHOLD,
+        }
+    }
+
+    /// Stable short name (the config/CLI token, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptionPolicy::None => "none",
+            PreemptionPolicy::Evict => "evict",
+            PreemptionPolicy::Split { .. } => "split",
+            PreemptionPolicy::Hybrid { .. } => "hybrid",
+        }
+    }
+}
+
+impl fmt::Display for PreemptionPolicy {
+    /// Round-trippable token: `none`, `evict`, `split:<µs>`,
+    /// `hybrid:<threshold>` — what `ExperimentConfig::to_json` persists.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PreemptionPolicy::None => write!(f, "none"),
+            PreemptionPolicy::Evict => write!(f, "evict"),
+            PreemptionPolicy::Split { min_slice } => {
+                write!(f, "split:{}", min_slice.nanos() / 1_000)
+            }
+            PreemptionPolicy::Hybrid { threshold } => write!(f, "hybrid:{threshold}"),
+        }
+    }
+}
+
+impl FromStr for PreemptionPolicy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<PreemptionPolicy, Error> {
+        let (kind, param) = match s.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (s, None),
+        };
+        match kind {
+            "none" => match param {
+                None => Ok(PreemptionPolicy::None),
+                Some(p) => Err(Error::Config(format!(
+                    "preempt policy 'none' takes no parameter (got ':{p}')"
+                ))),
+            },
+            "evict" => match param {
+                None => Ok(PreemptionPolicy::Evict),
+                Some(p) => Err(Error::Config(format!(
+                    "preempt policy 'evict' takes no parameter (got ':{p}')"
+                ))),
+            },
+            "split" => {
+                let min_slice = match param {
+                    None => DEFAULT_SPLIT_SLICE,
+                    Some(p) => {
+                        let us = p.parse::<u64>().map_err(|_| {
+                            Error::Config(format!(
+                                "bad split slice '{p}' (want microseconds as an integer)"
+                            ))
+                        })?;
+                        Duration::from_micros(us)
+                    }
+                };
+                if min_slice.is_zero() {
+                    return Err(Error::Config("split slice must be > 0".into()));
+                }
+                Ok(PreemptionPolicy::Split { min_slice })
+            }
+            "hybrid" => {
+                let threshold = match param {
+                    None => DEFAULT_HYBRID_THRESHOLD,
+                    Some(p) => p.parse::<f64>().map_err(|_| {
+                        Error::Config(format!("bad hybrid threshold '{p}' (want a float)"))
+                    })?,
+                };
+                if !(threshold > 0.0 && threshold <= 1.0) {
+                    return Err(Error::Config(format!(
+                        "hybrid threshold must be in (0, 1] (got {threshold})"
+                    )));
+                }
+                Ok(PreemptionPolicy::Hybrid { threshold })
+            }
+            other => Err(Error::Config(format!(
+                "unknown preempt policy '{other}' (want none, evict, split[:us] \
+                 or hybrid[:threshold])"
+            ))),
+        }
+    }
+}
 
 /// An open gap-filling window for the GPU-holding task.
 #[derive(Debug, Clone)]
@@ -237,6 +384,50 @@ mod tests {
         let mut q = PriorityQueues::new();
         push(&mut q, "lo", "k", Priority::P5, 100);
         assert!(fikit_fill(&mut w, SimTime::ZERO, &mut q).is_empty());
+    }
+
+    #[test]
+    fn preempt_tokens_round_trip() {
+        for p in [
+            PreemptionPolicy::None,
+            PreemptionPolicy::Evict,
+            PreemptionPolicy::Split {
+                min_slice: Duration::from_micros(125),
+            },
+            PreemptionPolicy::Hybrid { threshold: 0.75 },
+        ] {
+            let token = p.to_string();
+            assert_eq!(token.parse::<PreemptionPolicy>().unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn bare_preempt_tokens_get_defaults() {
+        assert_eq!(
+            "split".parse::<PreemptionPolicy>().unwrap(),
+            PreemptionPolicy::Split {
+                min_slice: DEFAULT_SPLIT_SLICE
+            }
+        );
+        assert_eq!(
+            "hybrid".parse::<PreemptionPolicy>().unwrap(),
+            PreemptionPolicy::Hybrid {
+                threshold: DEFAULT_HYBRID_THRESHOLD
+            }
+        );
+        assert_eq!("none".parse::<PreemptionPolicy>().unwrap(), PreemptionPolicy::None);
+        assert_eq!(PreemptionPolicy::default(), PreemptionPolicy::None);
+    }
+
+    #[test]
+    fn bad_preempt_tokens_are_rejected() {
+        assert!("pause".parse::<PreemptionPolicy>().is_err());
+        assert!("none:1".parse::<PreemptionPolicy>().is_err());
+        assert!("evict:now".parse::<PreemptionPolicy>().is_err());
+        assert!("split:0".parse::<PreemptionPolicy>().is_err());
+        assert!("split:fast".parse::<PreemptionPolicy>().is_err());
+        assert!("hybrid:0".parse::<PreemptionPolicy>().is_err());
+        assert!("hybrid:1.5".parse::<PreemptionPolicy>().is_err());
     }
 
     #[test]

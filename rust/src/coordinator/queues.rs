@@ -276,6 +276,16 @@ impl PriorityQueues {
         self.len += 1;
     }
 
+    /// Re-queue the remnant of a preempted kernel (DESIGN.md §8): the
+    /// launch re-enters its priority lane at the FIFO tail, indexed by
+    /// its **remaining** duration — a split fill whose leftover shrank
+    /// below the next gap becomes selectable where the original would
+    /// not fit. Delegates to [`PriorityQueues::push_predicted`]; the
+    /// dedicated name exists so call sites and tests state intent.
+    pub fn push_remnant(&mut self, launch: KernelLaunch, remaining: Duration, now: SimTime) {
+        self.push_predicted(launch, Some(remaining), now);
+    }
+
     /// Total queued requests across all priorities.
     pub fn len(&self) -> usize {
         self.len
@@ -750,6 +760,28 @@ mod tests {
         assert_eq!(drained.len(), seqs.len());
         q.check_consistency();
         assert!(q.is_empty());
+    }
+
+    /// A preempted remnant re-enters its lane indexed by the *remaining*
+    /// duration: it fits windows the full kernel would not, and loses
+    /// FIFO seniority (tail re-entry) to same-duration peers.
+    #[test]
+    fn remnant_reindexes_by_remaining_duration() {
+        let mut q = PriorityQueues::new();
+        push_us(&mut q, Priority::P6, 0, 900); // full-size peer: never fits below
+        let mut remnant = launch(Priority::P6, 1);
+        remnant.true_duration = Duration::from_micros(900);
+        q.push_remnant(remnant, Duration::from_micros(150), SimTime(5_000));
+        q.check_consistency();
+        // A 200 µs window only admits the remnant.
+        let (req, d) = q
+            .take_longest_fit_at(Priority::P6, Duration::from_micros(200))
+            .unwrap();
+        assert_eq!(req.launch.seq, 1);
+        assert_eq!(d, Duration::from_micros(150), "indexed by remaining time");
+        assert_eq!(req.enqueued_at, SimTime(5_000));
+        assert_eq!(q.len_at(Priority::P6), 1, "original peer still parked");
+        q.check_consistency();
     }
 
     /// The slab never grows past the high-water mark of live requests:

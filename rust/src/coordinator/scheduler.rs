@@ -70,8 +70,38 @@ pub struct SchedulerStats {
     /// Refreshed profile snapshots swapped in by the online refiner
     /// (epoch swaps; DESIGN.md §9).
     pub profile_refreshes: u64,
+    /// Kernel-level preemption telemetry (ADR-007). All zero when
+    /// [`super::fikit::PreemptionPolicy::None`] is active.
+    pub preempt: PreemptStats,
     /// Feedback telemetry.
     pub feedback: FeedbackStats,
+}
+
+/// Counters for the kernel-level preemption tier (ADR-007). Distinct
+/// from [`SchedulerStats::preemptions`], which counts *holder changes*
+/// (the paper's case A); these count in-flight fill kernels reclaimed
+/// by the driver's preempt probe.
+#[derive(Debug, Clone, Default)]
+pub struct PreemptStats {
+    /// Fill kernels evicted before their modeled start (full rollback,
+    /// zero wasted execution).
+    pub evictions: u64,
+    /// Running fill kernels cut at the probe point (Evict / young
+    /// Hybrid): the partial execution is discarded and the original
+    /// launch re-queued whole.
+    pub cuts: u64,
+    /// Running fill kernels split at a slice boundary (Split / old
+    /// Hybrid): the executed prefix is kept and a remnant re-queued.
+    pub splits: u64,
+    /// Preempted launches re-parked in the priority queues
+    /// (= evictions + cuts + splits).
+    pub requeues: u64,
+    /// Device time handed back to the holder (cut point → modeled
+    /// finish, summed over all preemptions).
+    pub reclaimed: Duration,
+    /// Partial execution discarded by cuts (start → cut point); the
+    /// model's price for evicting mid-kernel.
+    pub wasted: Duration,
 }
 
 /// A launch the scheduler wants submitted to the device, with its source
@@ -178,6 +208,15 @@ impl FikitScheduler {
             .get(launch.task_handle.index())?
             .as_ref()?
             .sk(launch.kernel_handle)
+    }
+
+    /// Predicted execution time `SK` for a launch, exposed for the
+    /// driver's preempt probe (which must remember the prediction a
+    /// fill was parked with so a preempted launch re-enters the queues
+    /// at the same index).
+    #[inline]
+    pub fn predicted_sk(&self, launch: &KernelLaunch) -> Option<Duration> {
+        self.sk(launch)
     }
 
     /// Predicted following gap `SG` for a completed kernel (hot path).
@@ -301,6 +340,34 @@ impl FikitScheduler {
         // the "when a kernel is added to any priority queue, the
         // scheduler triggers a priority scan" rule of Fig 7/8).
         self.pump_fills(now)
+    }
+
+    /// Re-park a preempted fill launch (ADR-007). The driver has
+    /// already rolled the device model back; here the launch simply
+    /// re-enters the priority queues — at the tail of its lane, indexed
+    /// by `predicted` (the remaining duration for a split remnant, the
+    /// original `SK` for an evicted whole). No fill pump runs: the
+    /// probe only fires when a higher-priority launch is about to
+    /// occupy the device, so any open window is about to be consumed.
+    pub fn park_preempted(
+        &mut self,
+        launch: KernelLaunch,
+        predicted: Option<Duration>,
+        now: SimTime,
+    ) {
+        self.stats.preempt.requeues += 1;
+        match predicted {
+            Some(remaining) => self.queues.push_remnant(launch, remaining, now),
+            // Fills are only ever selected when profiled, so this arm
+            // is defensive: an unprofiled launch re-parks unprofiled.
+            None => self.queues.push_predicted(launch, None, now),
+        }
+    }
+
+    /// Mutable preemption counters, for the driver's preempt probe
+    /// (the probe owns the decision; the scheduler owns the telemetry).
+    pub fn preempt_stats_mut(&mut self) -> &mut PreemptStats {
+        &mut self.stats.preempt
     }
 
     /// React to a kernel completion on the device.
@@ -560,6 +627,32 @@ mod tests {
         assert!(subs.is_empty());
         assert_eq!(h.sched.queued_len(), 1);
         h.sched.check_invariants();
+    }
+
+    /// A preempted fill re-parks through [`FikitScheduler::park_preempted`]:
+    /// it lands back in its priority lane (indexed by the remaining
+    /// duration), bumps only the requeue counter, and keeps the queue
+    /// invariants intact.
+    #[test]
+    fn park_preempted_requeues_below_holder() {
+        let mut h = harness();
+        let (hi, lo) = (h.th("hi"), h.th("lo"));
+        h.sched.task_started(hi, Priority::P0, SimTime::ZERO);
+        h.sched.task_started(lo, Priority::P3, SimTime::ZERO);
+
+        let l = h.launch("lo", "lk", Priority::P3, 0, SimTime::ZERO);
+        h.sched
+            .park_preempted(l, Some(Duration::from_micros(120)), SimTime(500));
+        assert_eq!(h.sched.queued_len(), 1);
+        assert_eq!(h.sched.stats().preempt.requeues, 1);
+        assert_eq!(h.sched.stats().queued, 0, "a re-park is not a fresh queue");
+        h.sched.check_invariants();
+
+        // The defensive unprofiled arm also parks.
+        let l = h.launch("lo", "lk", Priority::P3, 1, SimTime(600));
+        h.sched.park_preempted(l, None, SimTime(600));
+        assert_eq!(h.sched.queued_len(), 2);
+        assert_eq!(h.sched.stats().preempt.requeues, 2);
     }
 
     #[test]

@@ -607,6 +607,29 @@ impl SchedulerDaemon {
                 out.push(SchedulerMsg::Ack { msg_seq });
                 out
             }
+            ClientMsg::Preempted {
+                task_key,
+                task_id,
+                kernel_name,
+                grid,
+                block,
+                seq,
+                remaining,
+            } => {
+                // The launch is held again: its seq leaves the released
+                // record (a `ReleaseQuery` must answer `Hold`, not
+                // `LaunchNow`) until `route` re-adds it when the remnant
+                // is eventually re-released.
+                if let Some(e) = self.registry.get_mut(&task_key) {
+                    e.released.remove(&seq);
+                }
+                let kernel = crate::hook::client::kernel_id_from_wire(&kernel_name, grid, block);
+                let mut out = self.shards[shard_idx].repark(
+                    &task_key, prio, task_id, kernel, seq, remaining, now,
+                );
+                out.push(SchedulerMsg::Ack { msg_seq });
+                out
+            }
             ClientMsg::Disconnect { task_key } => {
                 self.registry.disconnect(&task_key);
                 let mut out = self.shards[shard_idx].disconnect(&task_key);
@@ -1205,6 +1228,45 @@ mod tests {
         let s = d.shard_stats(0);
         assert_eq!(s.releases_drained, 1, "drain released it");
         assert_eq!(s.releases_filled, 0, "no window was involved");
+    }
+
+    #[test]
+    fn preempted_launch_reparks_without_filling_stats() {
+        let mut d = daemon(1);
+        let mut drv = Driver::new();
+        for (key, prio, port) in [("hi", Priority::P0, 9001), ("lo", Priority::P4, 9002)] {
+            drv.send(&mut d, register(key, prio), addr(port));
+            drv.send(&mut d, task_start(key), addr(port));
+        }
+        // lo parks, hi's completion opens a window and releases it.
+        drv.send(&mut d, launch_msg("hi", "hk", 0), addr(9001));
+        drv.send(&mut d, launch_msg("lo", "lk", 0), addr(9002));
+        drv.send(&mut d, completion("hi", 0), addr(9001));
+        let filled_before = d.shard_stats(0).releases_filled;
+        assert_eq!(filled_before, 1, "window released the fill");
+        // The coordinator preempts lo's in-flight kernel; the client
+        // reports the remnant. It must re-park as a Hold, not count as a
+        // second release, and the registry must forget the release so a
+        // later retransmit of the same seq is not treated as duplicate.
+        let r = drv.send(
+            &mut d,
+            ClientMsg::Preempted {
+                task_key: TaskKey::new("lo"),
+                task_id: TaskId(0),
+                kernel_name: "lk".to_string(),
+                grid: Dim3::x(4),
+                block: Dim3::x(64),
+                seq: 0,
+                remaining: Duration::from_micros(120),
+            },
+            addr(9002),
+        );
+        assert!(matches!(r[0].1, SchedulerMsg::Hold { .. }), "remnant re-parked");
+        assert!(r.iter().any(|(_, m)| matches!(m, SchedulerMsg::Ack { .. })));
+        let s = d.shard_stats(0);
+        assert_eq!(s.reparked, 1);
+        assert_eq!(s.releases_filled, filled_before, "repark is not a release");
+        assert_eq!(d.shard_sizes()[0].queued, 1, "remnant waits in the queues");
     }
 
     #[test]

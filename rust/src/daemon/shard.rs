@@ -57,6 +57,10 @@ pub struct ServerStats {
     pub windows: u64,
     /// Windows closed early by holder feedback.
     pub early_stops: u64,
+    /// Released fill launches re-parked after a device-side preemption
+    /// (ADR-007). Distinct from `holds` (first-time parks) and never
+    /// counted as a fill release — fill-rate telemetry stays honest.
+    pub reparked: u64,
 }
 
 impl ServerStats {
@@ -73,6 +77,7 @@ impl ServerStats {
             .set("duplicate_task_starts", self.duplicate_task_starts)
             .set("windows", self.windows)
             .set("early_stops", self.early_stops)
+            .set("reparked", self.reparked)
     }
 
     /// Inverse of [`ServerStats::to_json`].
@@ -88,6 +93,9 @@ impl ServerStats {
             duplicate_task_starts: v.req_u64("duplicate_task_starts")?,
             windows: v.req_u64("windows")?,
             early_stops: v.req_u64("early_stops")?,
+            // Absent in pre-preemption snapshots: old journals replay
+            // cleanly with the counter at zero.
+            reparked: v.req_u64("reparked").unwrap_or(0),
         })
     }
 
@@ -103,6 +111,7 @@ impl ServerStats {
         self.duplicate_task_starts += other.duplicate_task_starts;
         self.windows += other.windows;
         self.early_stops += other.early_stops;
+        self.reparked += other.reparked;
     }
 }
 
@@ -372,6 +381,45 @@ impl Shard {
             out.extend(self.pump_fills(now));
             out
         }
+    }
+
+    /// A released fill kernel was preempted device-side (ADR-007): the
+    /// launch re-enters the priority queues as a remnant indexed by its
+    /// remaining duration, and the client is told to hold it again.
+    /// Deliberately NOT a fill release or a fresh hold in the counters
+    /// (`reparked` only), and no fill pump runs — the preemption means
+    /// a higher-priority kernel is occupying the device right now.
+    #[allow(clippy::too_many_arguments)]
+    pub fn repark(
+        &mut self,
+        key: &TaskKey,
+        prio: Priority,
+        task_id: TaskId,
+        kernel: KernelId,
+        seq: u32,
+        remaining: Duration,
+        now: SimTime,
+    ) -> Vec<SchedulerMsg> {
+        self.stats.reparked += 1;
+        // Wire boundary: UNBOUND handles, exactly like first-time parks
+        // in [`Shard::launch`] — re-parked launches never mint handles.
+        let launch = KernelLaunch {
+            task_handle: TaskHandle::UNBOUND,
+            kernel_handle: crate::core::KernelHandle::UNBOUND,
+            task_key: key.clone(),
+            task_id,
+            kernel,
+            priority: prio,
+            seq,
+            true_duration: Duration::ZERO,
+            issued_at: now,
+        };
+        self.queues.push_remnant(launch, remaining, now);
+        vec![SchedulerMsg::Hold {
+            task_key: key.clone(),
+            task_id,
+            seq,
+        }]
     }
 
     /// A holder kernel finished on the client's device: its profiled gap

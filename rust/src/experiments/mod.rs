@@ -23,6 +23,7 @@ pub mod fig21_table3;
 pub mod fill_policy;
 pub mod interference;
 pub mod perf_ablation;
+pub mod preemption;
 pub mod table2;
 
 use crate::core::Result;
@@ -139,6 +140,7 @@ pub const ALL: &[&str] = &[
     "cluster_churn",
     "drift",
     "interference",
+    "preemption",
 ];
 
 /// Run one experiment by id.
@@ -158,6 +160,7 @@ pub fn run(id: &str, opts: Options) -> Result<ExperimentResult> {
         "cluster_churn" => cluster_churn::run(opts),
         "drift" => drift::run(opts),
         "interference" => interference::run(opts),
+        "preemption" => preemption::run(opts),
         other => Err(crate::core::Error::Parse(format!(
             "unknown experiment {other:?}; known: {ALL:?}"
         ))),

@@ -95,6 +95,21 @@ pub enum ClientMsg {
         exec: Duration,
         finished_at: SimTime,
     },
+    /// A released fill kernel was preempted device-side before (or
+    /// while) running (ADR-007): the hook re-holds it and asks the
+    /// scheduler to re-park the launch, indexed by its remaining
+    /// duration (`remaining` = full duration for a whole eviction, the
+    /// unexecuted suffix for a split remnant).
+    Preempted {
+        task_key: TaskKey,
+        task_id: TaskId,
+        /// Resolved kernel function name (may be empty without symbols).
+        kernel_name: String,
+        grid: Dim3,
+        block: Dim3,
+        seq: u32,
+        remaining: Duration,
+    },
     /// The current task of the service finished.
     TaskEnd { task_key: TaskKey, task_id: TaskId },
     /// Clean shutdown of the hook client.
@@ -116,6 +131,7 @@ impl ClientMsg {
             | ClientMsg::TaskStart { task_key, .. }
             | ClientMsg::Launch { task_key, .. }
             | ClientMsg::Completion { task_key, .. }
+            | ClientMsg::Preempted { task_key, .. }
             | ClientMsg::TaskEnd { task_key, .. }
             | ClientMsg::Disconnect { task_key }
             | ClientMsg::ReleaseQuery { task_key, .. } => task_key,
@@ -303,6 +319,23 @@ impl ClientMsg {
                 .set("seq", *seq)
                 .set("exec_ns", exec.nanos())
                 .set("finished_at_ns", finished_at.nanos()),
+            ClientMsg::Preempted {
+                task_key,
+                task_id,
+                kernel_name,
+                grid,
+                block,
+                seq,
+                remaining,
+            } => Json::obj()
+                .set("type", "preempted")
+                .set("task_key", task_key.as_str())
+                .set("task_id", task_id.0)
+                .set("kernel_name", kernel_name.as_str())
+                .set("grid", dim_to_json(*grid))
+                .set("block", dim_to_json(*block))
+                .set("seq", *seq)
+                .set("remaining_ns", remaining.nanos()),
             ClientMsg::TaskEnd { task_key, task_id } => Json::obj()
                 .set("type", "task_end")
                 .set("task_key", task_key.as_str())
@@ -350,6 +383,15 @@ impl ClientMsg {
                 seq: v.req_u64("seq")? as u32,
                 exec: Duration::from_nanos(v.req_u64("exec_ns")?),
                 finished_at: SimTime(v.req_u64("finished_at_ns")?),
+            }),
+            "preempted" => Ok(ClientMsg::Preempted {
+                task_key: key()?,
+                task_id: tid()?,
+                kernel_name: v.req_str("kernel_name")?.to_string(),
+                grid: dim_from_json(v.require("grid")?)?,
+                block: dim_from_json(v.require("block")?)?,
+                seq: v.req_u64("seq")? as u32,
+                remaining: Duration::from_nanos(v.req_u64("remaining_ns")?),
             }),
             "task_end" => Ok(ClientMsg::TaskEnd {
                 task_key: key()?,
@@ -592,6 +634,15 @@ mod tests {
                 seq: 12,
                 exec: Duration::from_micros(120),
                 finished_at: SimTime(1_999),
+            },
+            ClientMsg::Preempted {
+                task_key: TaskKey::new("svc"),
+                task_id: TaskId(7),
+                kernel_name: "gemm<float, 128>".into(),
+                grid: Dim3::new(64, 2, 1),
+                block: Dim3::new(256, 1, 1),
+                seq: 12,
+                remaining: Duration::from_micros(80),
             },
             ClientMsg::TaskEnd {
                 task_key: TaskKey::new("svc"),

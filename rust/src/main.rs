@@ -28,9 +28,16 @@ USAGE:
   fikit run [--config exp.json] [--mode fikit|sharing|exclusive]
             [--high MODEL] [--low MODEL] [--tasks N] [--seed S]
             [--backend timesliced|mps[:dilation]|mig[:slices]]
+            [--preempt none|evict|split[:us]|hybrid[:t]]
   fikit experiment <id|all> [--scale F] [--seed S] [--json out.json]
         ids: fig13 fig14 fig15 table2 fig16 fig18 fig19 fig21 ablation_feedback
-             ablation_fill_policy cluster_churn drift interference
+             ablation_fill_policy cluster_churn drift interference preemption
+  fikit preempt [--scale F] [--seed S] [--json [PATH]]
+        preemption Pareto acceptance sweep: combos A-J + continuous
+        inserts under none/evict/split/hybrid; asserts the hybrid arm
+        keeps fill-only's high-priority speedup with the low-priority
+        JCT ratio inside the paper's 0.86-1.0 band; --json writes
+        PARETO_preempt.json (or PATH)
   fikit drift [--scale F] [--seed S]
         online-refinement acceptance run: inject gap interference
         mid-run, show drift detection + re-convergence + <=5% overhead
@@ -96,6 +103,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("experiment") => cmd_experiment(args),
         Some("drift") => cmd_drift(args),
         Some("interference") => cmd_interference(args),
+        Some("preempt") => cmd_preempt(args),
         Some("profile") => cmd_profile(args),
         Some("serve") => cmd_serve(args),
         Some("cluster") => cmd_cluster(args),
@@ -128,6 +136,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         };
         if let Some(token) = args.opt("backend") {
             cfg.device.backend = token.parse()?;
+        }
+        if let Some(token) = args.opt("preempt") {
+            cfg.preempt = token.parse()?;
         }
         cfg.services
             .push(ServiceConfig::new(high, Priority::P0).tasks(tasks).with_key("high"));
@@ -245,6 +256,83 @@ fn cmd_interference(args: &Args) -> Result<()> {
     } else {
         Err(fikit::core::Error::Invariant(
             "interference experiment has failing shape checks".into(),
+        ))
+    }
+}
+
+/// Run the preemption Pareto acceptance sweep (`experiments::preemption`)
+/// and optionally write the machine-readable `PARETO_preempt.json`
+/// artifact: one `{workload, policy, high_speedup, low_ratio}` point per
+/// arm, plus the band and the shape-check verdicts
+/// (`scripts/check_bench.py` validates the shape when the file exists).
+fn cmd_preempt(args: &Args) -> Result<()> {
+    let opts = Options {
+        scale: args.opt_parse("scale", 1.0f64)?,
+        seed: args.opt_parse("seed", 0xF1C1u64)?,
+    };
+    let result = experiments::run("preemption", opts)?;
+    println!("{}", result.render());
+
+    let json_path = args
+        .opt("json")
+        .map(str::to_string)
+        .or_else(|| args.flag("json").then(|| "PARETO_preempt.json".to_string()));
+    if let Some(path) = json_path {
+        use fikit::util::json::Json;
+        // The series come in (high_speedup, low_ratio) pairs per
+        // workload×policy arm — re-join them into Pareto points.
+        let mut points = Vec::new();
+        for (name, speedup) in &result.series {
+            let mut parts = name.split('/');
+            let (Some("preempt"), Some(workload), Some(policy), Some("high_speedup")) =
+                (parts.next(), parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            let ratio = result
+                .series_value(&format!("preempt/{workload}/{policy}/low_ratio"))
+                .unwrap_or(0.0);
+            points.push(
+                Json::obj()
+                    .set("workload", workload)
+                    .set("policy", policy)
+                    .set("high_speedup", *speedup)
+                    .set("low_ratio", ratio),
+            );
+        }
+        let doc = Json::obj()
+            .set("experiment", result.id)
+            .set("passed", result.all_checks_pass())
+            .set(
+                "band",
+                Json::obj()
+                    .set("low", experiments::preemption::LOW_RATIO_BAND.0)
+                    .set("high", experiments::preemption::LOW_RATIO_BAND.1),
+            )
+            .set("points", Json::Arr(points))
+            .set(
+                "checks",
+                Json::Arr(
+                    result
+                        .checks
+                        .iter()
+                        .map(|c| {
+                            Json::obj()
+                                .set("name", c.name.as_str())
+                                .set("passed", c.passed)
+                                .set("detail", c.detail.as_str())
+                        })
+                        .collect(),
+                ),
+            );
+        std::fs::write(&path, doc.encode_pretty())?;
+        println!("wrote Pareto artifact -> {path}");
+    }
+    if result.all_checks_pass() {
+        Ok(())
+    } else {
+        Err(fikit::core::Error::Invariant(
+            "preemption sweep has failing shape checks".into(),
         ))
     }
 }

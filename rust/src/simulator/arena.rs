@@ -24,6 +24,13 @@ pub struct RecordSlot(u32);
 pub struct KernelArena {
     slots: Vec<Option<KernelRecord>>,
     free: Vec<u32>,
+    /// Tombstones for preempted records: the slot is emptied by
+    /// [`KernelArena::cancel`] but stays *reserved* (off the free list)
+    /// until its stale `KernelDone` event pops and calls
+    /// [`KernelArena::take_if_live`]. Reserving preserves the LIFO
+    /// slot-reuse order, keeping replays byte-identical whether or not a
+    /// cancellation happened earlier in the run.
+    cancelled: Vec<bool>,
 }
 
 impl KernelArena {
@@ -52,9 +59,46 @@ impl KernelArena {
             None => {
                 let idx = u32::try_from(self.slots.len()).expect("arena exceeds u32 slots");
                 self.slots.push(Some(record));
+                self.cancelled.push(false);
                 RecordSlot(idx)
             }
         }
+    }
+
+    /// Peek at the record parked at `slot` (None if taken or cancelled).
+    pub fn get(&self, slot: RecordSlot) -> Option<&KernelRecord> {
+        self.slots[slot.0 as usize].as_ref()
+    }
+
+    /// Preempt the record at `slot`: remove and return it, leaving a
+    /// tombstone so the slot stays reserved until the in-flight
+    /// `KernelDone` event for it pops and is discarded by
+    /// [`KernelArena::take_if_live`].
+    ///
+    /// Panics if the slot is already empty (double cancel / cancel after
+    /// take), which would mean the driver lost track of an in-flight set.
+    pub fn cancel(&mut self, slot: RecordSlot) -> KernelRecord {
+        let record = self.slots[slot.0 as usize]
+            .take()
+            .expect("cancel of an empty arena slot");
+        debug_assert!(!self.cancelled[slot.0 as usize], "double cancel");
+        self.cancelled[slot.0 as usize] = true;
+        record
+    }
+
+    /// Completion-side take that tolerates cancellation: returns the
+    /// record if the slot is live, or `None` (freeing the slot) if it was
+    /// cancelled by a preemption. Panics on a plain-empty slot exactly
+    /// like [`KernelArena::take`] — only a cancellation may absorb an
+    /// event.
+    pub fn take_if_live(&mut self, slot: RecordSlot) -> Option<KernelRecord> {
+        if self.cancelled[slot.0 as usize] {
+            debug_assert!(self.slots[slot.0 as usize].is_none());
+            self.cancelled[slot.0 as usize] = false;
+            self.free.push(slot.0);
+            return None;
+        }
+        Some(self.take(slot))
     }
 
     /// Remove and return the record parked at `slot`.
@@ -77,6 +121,7 @@ impl KernelArena {
         // hands out slot 0 first — byte-identical replay across reuse.
         for idx in (0..self.slots.len() as u32).rev() {
             self.slots[idx as usize] = None;
+            self.cancelled[idx as usize] = false;
             self.free.push(idx);
         }
     }
@@ -129,6 +174,35 @@ mod tests {
         let slot = arena.insert(record(1));
         let _ = arena.take(slot);
         let _ = arena.take(slot);
+    }
+
+    #[test]
+    fn cancel_reserves_slot_until_stale_event_pops() {
+        let mut arena = KernelArena::new();
+        let a = arena.insert(record(1));
+        let cancelled = arena.cancel(a);
+        assert_eq!(cancelled.seq, 1);
+        assert!(arena.get(a).is_none());
+        // The slot is tombstoned, not freed: a fresh insert must NOT
+        // reuse it while its stale completion event is still in flight.
+        let b = arena.insert(record(2));
+        assert_ne!(a, b);
+        // The stale event pops: take_if_live absorbs it and frees the slot.
+        assert!(arena.take_if_live(a).is_none());
+        let c = arena.insert(record(3));
+        assert_eq!(c, a);
+        // Live slots still take normally through take_if_live.
+        assert_eq!(arena.take_if_live(b).unwrap().seq, 2);
+        assert_eq!(arena.take_if_live(c).unwrap().seq, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "cancel of an empty arena slot")]
+    fn cancel_after_take_panics() {
+        let mut arena = KernelArena::new();
+        let slot = arena.insert(record(1));
+        let _ = arena.take(slot);
+        let _ = arena.cancel(slot);
     }
 
     #[test]

@@ -100,6 +100,13 @@ pub struct SimDevice {
     /// Pending gap-fill kernels (subset of `in_flight`), maintained
     /// incrementally so `pending_fills` needs no iteration.
     fills_in_flight: usize,
+    /// Lazy-deletion multiset for [`SimDevice::preempt`]: the wheel and
+    /// this heap have no random removal, so a preempted kernel's original
+    /// completion entry stays in `in_flight` and its twin is recorded
+    /// here; `prune` drops matching pairs without touching the counters.
+    /// Empty for the entire run under `PreemptionPolicy::None`, keeping
+    /// the no-preemption arithmetic byte-identical.
+    cancelled: BinaryHeap<Reverse<(SimTime, bool)>>,
     /// Per-slice drain times for [`ConcurrencyBackend::MigPartition`]
     /// (empty under the other backends): each hard slice is its own
     /// little FIFO device.
@@ -120,6 +127,7 @@ impl SimDevice {
             stats: DeviceStats::default(),
             in_flight: BinaryHeap::with_capacity(8),
             fills_in_flight: 0,
+            cancelled: BinaryHeap::new(),
             slice_free,
         }
     }
@@ -149,11 +157,19 @@ impl SimDevice {
             // kernel starts at readiness, stretched by every kernel
             // still running then (contention, not serialization).
             ConcurrencyBackend::MpsSpatial { dilation } => {
+                // Cancelled (preempted) entries are still in `in_flight`
+                // awaiting their lazy-deletion pop; they no longer run,
+                // so they must not dilate new arrivals.
                 let co = self
                     .in_flight
                     .iter()
                     .filter(|Reverse((finish, _))| *finish > ready)
-                    .count();
+                    .count()
+                    - self
+                        .cancelled
+                        .iter()
+                        .filter(|Reverse((finish, _))| *finish > ready)
+                        .count();
                 (ready, base.scale(1.0 + dilation * co as f64))
             }
             // Hard partitioning: FIFO per slice, each slice at 1/slices
@@ -214,9 +230,107 @@ impl SimDevice {
             if finish > now {
                 break;
             }
+            // A cancelled completion: drop the tombstone pair without
+            // touching the counters — `preempt` already adjusted them.
+            // (Identical tuples are interchangeable; cancelling "one
+            // occurrence" is exact multiset deletion.)
+            if self
+                .cancelled
+                .peek()
+                .is_some_and(|&Reverse(entry)| entry == (finish, is_fill))
+            {
+                self.cancelled.pop();
+                self.in_flight.pop();
+                continue;
+            }
             self.in_flight.pop();
             if is_fill {
                 self.fills_in_flight -= 1;
+            }
+        }
+    }
+
+    /// Cancel (`cut_at == started_at`) or shorten an in-flight kernel,
+    /// rewinding the backend tail it occupies to `cut_at + penalty` —
+    /// `penalty` is the modeled preemption cost, charged as dead time
+    /// (never as busy). Returns `false` without touching anything when
+    /// the backend cannot reclaim the kernel: the cut is outside
+    /// `[started_at, finished_at)`, or the kernel is not the reclaimable
+    /// tail of its FIFO (TimeSliced) / slice (MIG). The caller re-queues
+    /// the remnant and cancels the arena slot; the stale `KernelDone`
+    /// event is absorbed by `take_if_live` when it pops.
+    pub fn preempt(&mut self, record: &KernelRecord, cut_at: SimTime, penalty: Duration) -> bool {
+        if cut_at < record.started_at || cut_at >= record.finished_at {
+            return false;
+        }
+        match self.cfg.backend {
+            ConcurrencyBackend::TimeSliced => {
+                // Only the FIFO tail is reclaimable: anything queued
+                // behind already has a committed start time.
+                if record.finished_at != self.free_at {
+                    return false;
+                }
+                self.free_at = cut_at + penalty;
+            }
+            // Spatial sharing has no queue to rewind — nothing waits on
+            // this kernel; the interruption still charges its dead time.
+            ConcurrencyBackend::MpsSpatial { .. } => {
+                self.free_at = self.free_at.max(cut_at + penalty);
+            }
+            ConcurrencyBackend::MigPartition { .. } => {
+                let Some(slice) =
+                    self.slice_free.iter().position(|&f| f == record.finished_at)
+                else {
+                    return false;
+                };
+                self.slice_free[slice] = cut_at + penalty;
+                // Drain time of everything still queued = slowest slice.
+                self.free_at = self
+                    .slice_free
+                    .iter()
+                    .copied()
+                    .max()
+                    .unwrap_or(SimTime::ZERO);
+            }
+        }
+
+        let refund = record.finished_at - cut_at;
+        self.stats.busy -= refund;
+        let is_fill = record.source == LaunchSource::GapFill;
+        if is_fill {
+            self.stats.fill_busy -= refund;
+        }
+        self.cancelled.push(Reverse((record.finished_at, is_fill)));
+        if cut_at == record.started_at {
+            // Evicted before it ever ran: roll the launch back entirely.
+            self.stats.kernels -= 1;
+            if is_fill {
+                self.stats.fill_kernels -= 1;
+                self.fills_in_flight -= 1;
+            }
+        } else {
+            // The executed prefix stays on the device until the cut.
+            self.in_flight.push(Reverse((cut_at, is_fill)));
+        }
+        true
+    }
+
+    /// Where a launch issued at `now` would start under the current
+    /// backlog — the preempt decision's "would the holder miss its gap"
+    /// probe. Pure; mirrors the `submit` start arithmetic per backend.
+    pub fn projected_start(&self, now: SimTime) -> SimTime {
+        let ready = now + self.cfg.launch_latency;
+        match self.cfg.backend {
+            ConcurrencyBackend::TimeSliced => ready.max(self.free_at),
+            ConcurrencyBackend::MpsSpatial { .. } => ready,
+            ConcurrencyBackend::MigPartition { .. } => {
+                let earliest = self
+                    .slice_free
+                    .iter()
+                    .copied()
+                    .min()
+                    .unwrap_or(SimTime::ZERO);
+                ready.max(earliest)
             }
         }
     }
@@ -239,7 +353,9 @@ impl SimDevice {
     /// Number of kernels still pending (queued or running) at `now`.
     pub fn pending(&mut self, now: SimTime) -> usize {
         self.prune(now);
-        self.in_flight.len()
+        // Tombstoned (preempted) entries await lazy deletion but no
+        // longer represent pending work.
+        self.in_flight.len() - self.cancelled.len()
     }
 
     /// Number of pending *fill* kernels at `now` — the un-recallable
@@ -353,6 +469,101 @@ mod tests {
         d.submit(launch(500, SimTime::ZERO), SimTime::ZERO, LaunchSource::Direct);
         let horizon = SimTime(1_000_000); // 1ms
         assert!((d.stats().utilization(horizon) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timesliced_evict_unstarted_rolls_back_everything() {
+        let mut d = dev();
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        let r2 = d.submit(launch(50, t0), t0, LaunchSource::GapFill);
+        assert_eq!(d.free_at(), r2.finished_at);
+        // r2 queued behind r1 and not yet started: full eviction.
+        assert!(d.preempt(&r2, r2.started_at, Duration::ZERO));
+        assert_eq!(d.free_at(), r1.finished_at, "tail rewound to the cut");
+        assert_eq!(d.stats().kernels, 1);
+        assert_eq!(d.stats().busy, Duration::from_micros(100));
+        assert_eq!(d.stats().fill_kernels, 0);
+        assert_eq!(d.stats().fill_busy, Duration::ZERO);
+        assert_eq!(d.pending(SimTime(10_000)), 1);
+        assert_eq!(d.pending_fills(SimTime(10_000)), 0);
+        // The freed tail is immediately reusable, and the tombstone
+        // drains without disturbing the counters.
+        let r3 = d.submit(launch(10, SimTime(10_000)), SimTime(10_000), LaunchSource::Direct);
+        assert_eq!(r3.started_at, r1.finished_at);
+        assert_eq!(d.pending(SimTime(400_000)), 0);
+        assert_eq!(d.pending_fills(SimTime(400_000)), 0);
+    }
+
+    #[test]
+    fn timesliced_split_keeps_partial_and_charges_penalty() {
+        let mut d = dev();
+        let t0 = SimTime::ZERO;
+        let r = d.submit(launch(100, t0), t0, LaunchSource::GapFill);
+        // Runs 5–105 µs; cut mid-flight at 55 µs with a 10 µs penalty.
+        let cut = SimTime(55_000);
+        assert!(d.preempt(&r, cut, Duration::from_micros(10)));
+        assert_eq!(d.free_at(), SimTime(65_000), "cut + penalty dead time");
+        // The executed prefix stays busy; the launch still counts.
+        assert_eq!(d.stats().kernels, 1);
+        assert_eq!(d.stats().busy, Duration::from_micros(50));
+        assert_eq!(d.stats().fill_busy, Duration::from_micros(50));
+        // The partial execution is pending until the cut, then drains.
+        assert_eq!(d.pending(SimTime(10_000)), 1);
+        assert_eq!(d.pending_fills(SimTime(10_000)), 1);
+        assert_eq!(d.pending(SimTime(60_000)), 0);
+        assert_eq!(d.pending_fills(SimTime(60_000)), 0);
+    }
+
+    #[test]
+    fn preempt_refuses_non_tail_and_bad_cuts() {
+        let mut d = dev();
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct);
+        let r2 = d.submit(launch(50, t0), t0, LaunchSource::Direct);
+        // r1 is not the FIFO tail: r2 has a committed start behind it.
+        assert!(!d.preempt(&r1, r1.started_at, Duration::ZERO));
+        // Cuts outside [started_at, finished_at) are meaningless.
+        assert!(!d.preempt(&r2, SimTime(r2.started_at.nanos() - 1), Duration::ZERO));
+        assert!(!d.preempt(&r2, r2.finished_at, Duration::ZERO));
+        assert_eq!(d.stats().kernels, 2);
+        assert_eq!(d.free_at(), r2.finished_at);
+    }
+
+    #[test]
+    fn mig_preempt_rewinds_only_its_slice() {
+        let mut d = SimDevice::new(DeviceConfig {
+            backend: ConcurrencyBackend::mig(2),
+            ..DeviceConfig::default()
+        });
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct); // slice 0: 5–205
+        let r2 = d.submit(launch(50, t0), t0, LaunchSource::GapFill); // slice 1: 5–105
+        assert!(d.preempt(&r2, r2.started_at, Duration::ZERO));
+        assert_eq!(d.free_at(), r1.finished_at, "slice 0 unaffected");
+        // The freed slice takes the next launch at its readiness.
+        let r3 = d.submit(launch(10, SimTime(10_000)), SimTime(10_000), LaunchSource::Direct);
+        assert_eq!(r3.started_at, SimTime(15_000), "takes the freed slice");
+        assert_eq!(d.stats().kernels, 2);
+    }
+
+    #[test]
+    fn mps_preempt_refunds_busy_and_stops_dilating() {
+        let mut d = SimDevice::new(DeviceConfig {
+            backend: ConcurrencyBackend::MpsSpatial { dilation: 0.5 },
+            ..DeviceConfig::default()
+        });
+        let t0 = SimTime::ZERO;
+        let r1 = d.submit(launch(100, t0), t0, LaunchSource::Direct); // 5–105
+        let r2 = d.submit(launch(100, t0), t0, LaunchSource::GapFill); // dilated: 5–155
+        assert_eq!(r2.exec_time(), Duration::from_micros(150));
+        assert!(d.preempt(&r2, SimTime(55_000), Duration::ZERO));
+        assert_eq!(d.stats().busy, Duration::from_micros(150), "refunded the tail");
+        // The cancelled co-resident no longer dilates later arrivals:
+        // at ready=65µs only r1 (finishes 105µs) is still running.
+        let r3 = d.submit(launch(100, SimTime(60_000)), SimTime(60_000), LaunchSource::Direct);
+        assert_eq!(r3.exec_time(), Duration::from_micros(150), "one co-resident");
+        assert_eq!(r1.exec_time(), Duration::from_micros(100));
     }
 
     /// The backend seam's contract: `TimeSliced` must reproduce the

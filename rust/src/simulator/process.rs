@@ -94,6 +94,14 @@ pub struct ServiceProcess {
     task_id: TaskId,
     task_arrival: SimTime,
     task_started: SimTime,
+    /// Completions observed for the current task. The task is done when
+    /// this reaches the trace length — counting (not "final seq arrived")
+    /// because preemption can re-queue a kernel behind its successors, so
+    /// completion records may arrive out of seq order.
+    done_in_task: u32,
+    /// Latest device finish observed in the current task (the outcome's
+    /// `finished` under out-of-order completion).
+    task_last_finish: SimTime,
     run_records: Vec<KernelRecord>,
     active: bool,
     /// If the just-issued kernel is async, the CPU pacing delay after
@@ -146,6 +154,8 @@ impl ServiceProcess {
             task_id: TaskId(0),
             task_arrival: SimTime::ZERO,
             task_started: SimTime::ZERO,
+            done_in_task: 0,
+            task_last_finish: SimTime::ZERO,
             run_records: Vec::new(),
             active: false,
             gate: None,
@@ -231,6 +241,8 @@ impl ServiceProcess {
         self.next_task_seq += 1;
         self.task_arrival = arrival;
         self.task_started = now;
+        self.done_in_task = 0;
+        self.task_last_finish = SimTime::ZERO;
         self.run_records.clear();
         self.active = true;
         self.gate = None;
@@ -293,9 +305,37 @@ impl ServiceProcess {
         debug_assert_eq!(record.task_id, self.task_id, "stale record routed to process");
         let seq = record.seq as usize;
         let exec = record.exec_time();
-        let finished_at = record.finished_at;
+        self.done_in_task += 1;
+        self.task_last_finish = self.task_last_finish.max(record.finished_at);
         if self.stage == Stage::Measuring {
             self.run_records.push(record);
+        }
+
+        if self.done_in_task as usize == self.trace.len() {
+            // Task complete. Count-based, not "final seq arrived":
+            // preemption can deliver the final seq before a re-queued
+            // straggler, and the task only ends once every kernel landed.
+            let outcome = TaskOutcome {
+                task_key: self.service.key.clone(),
+                task_id: self.task_id,
+                priority: self.service.priority,
+                arrival: self.task_arrival,
+                started: self.task_started,
+                finished: self.task_last_finish,
+                kernels: self.trace.len() as u32,
+                stage: self.stage,
+            };
+            if self.stage == Stage::Measuring {
+                let records = std::mem::take(&mut self.run_records);
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.ingest_run(&records);
+                }
+            }
+            self.active = false;
+            self.gate = None;
+            self.next_issue_scheduled = false;
+            self.completed += 1;
+            return ProcessAction::TaskCompleted(outcome);
         }
 
         if seq + 1 < self.trace.len() {
@@ -315,28 +355,10 @@ impl ServiceProcess {
             self.next_issue_scheduled = true;
             ProcessAction::IssueAt(now + delay)
         } else {
-            // Task complete.
-            let outcome = TaskOutcome {
-                task_key: self.service.key.clone(),
-                task_id: self.task_id,
-                priority: self.service.priority,
-                arrival: self.task_arrival,
-                started: self.task_started,
-                finished: finished_at,
-                kernels: self.trace.len() as u32,
-                stage: self.stage,
-            };
-            if self.stage == Stage::Measuring {
-                let records = std::mem::take(&mut self.run_records);
-                if let Some(rec) = self.recorder.as_mut() {
-                    rec.ingest_run(&records);
-                }
-            }
-            self.active = false;
-            self.gate = None;
-            self.next_issue_scheduled = false;
-            self.completed += 1;
-            ProcessAction::TaskCompleted(outcome)
+            // The final-seq record arrived while an earlier (preempted and
+            // re-queued) kernel is still in flight; the straggler's
+            // completion fires TaskCompleted above.
+            ProcessAction::None
         }
     }
 

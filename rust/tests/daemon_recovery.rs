@@ -390,6 +390,150 @@ fn torn_write_crash_at_every_append_replays_deterministically() {
     }
 }
 
+/// A preemption-heavy variant of [`script`]: alongside launches,
+/// completions and churn, clients report coordinator preemptions of
+/// already-launched kernels (`ClientMsg::Preempted`), whose remnants the
+/// shard re-parks. The wire remnant path must replay exactly like every
+/// other mutation.
+fn preempt_script(seed: u64, events: usize) -> Vec<Step> {
+    let mut rng = Rng::new(seed);
+    let mut st = ScriptState::new();
+    let mut task_id = [0u64; CLIENTS.len()];
+    let mut kseq = [0u32; CLIENTS.len()];
+
+    for (c, (key, prio, _, _)) in CLIENTS.iter().enumerate() {
+        st.push(
+            c,
+            ClientMsg::Register {
+                task_key: TaskKey::new(key),
+                priority: *prio,
+                has_symbols: true,
+                model: None,
+            },
+        );
+        st.push(
+            c,
+            ClientMsg::TaskStart {
+                task_key: TaskKey::new(key),
+                task_id: TaskId(0),
+            },
+        );
+    }
+
+    for _ in 0..events {
+        let c = rng.index(CLIENTS.len());
+        let (key, _, _, kernel) = CLIENTS[c];
+        let key = TaskKey::new(key);
+        let roll = rng.below(10);
+        if roll < 4 {
+            let seq = kseq[c];
+            kseq[c] += 1;
+            let issued_at = st.next_now();
+            st.push(
+                c,
+                ClientMsg::Launch {
+                    task_key: key,
+                    task_id: TaskId(task_id[c]),
+                    kernel_name: kernel.to_string(),
+                    grid: Dim3::x(8),
+                    block: Dim3::x(128),
+                    seq,
+                    issued_at,
+                },
+            );
+        } else if roll < 8 && kseq[c] > 0 {
+            // The coordinator preempted one of this client's in-flight
+            // kernels; the remnant re-parks with its remaining time.
+            let seq = rng.below(kseq[c] as u64) as u32;
+            st.push(
+                c,
+                ClientMsg::Preempted {
+                    task_key: key,
+                    task_id: TaskId(task_id[c]),
+                    kernel_name: kernel.to_string(),
+                    grid: Dim3::x(8),
+                    block: Dim3::x(128),
+                    seq,
+                    remaining: Duration::from_micros(50 + rng.below(400)),
+                },
+            );
+        } else if roll < 9 && kseq[c] > 0 {
+            let seq = rng.below(kseq[c] as u64) as u32;
+            st.push(
+                c,
+                ClientMsg::Completion {
+                    task_key: key,
+                    task_id: TaskId(task_id[c]),
+                    seq,
+                    exec: Duration::from_micros(200 + rng.below(400)),
+                    finished_at: st.next_now(),
+                },
+            );
+        } else {
+            st.push(
+                c,
+                ClientMsg::TaskEnd {
+                    task_key: key.clone(),
+                    task_id: TaskId(task_id[c]),
+                },
+            );
+            task_id[c] += 1;
+            st.push(
+                c,
+                ClientMsg::TaskStart {
+                    task_key: key,
+                    task_id: TaskId(task_id[c]),
+                },
+            );
+        }
+    }
+    st.steps
+}
+
+/// Preemption-heavy trace: the reference run actually re-parks remnants,
+/// and for every clean cut point the recovered daemon — including its
+/// shard queues holding re-parked remnants and the `reparked` counter —
+/// reconstructs the byte-identical image.
+#[test]
+fn preemption_heavy_trace_replays_deterministically() {
+    for (i, seed) in SEEDS.into_iter().enumerate() {
+        let steps = preempt_script(seed, 18);
+        assert!(
+            steps
+                .iter()
+                .any(|s| matches!(s.msg, ClientMsg::Preempted { .. })),
+            "seed {seed}: script must contain preemptions"
+        );
+        let reference = reference_state(&steps);
+
+        // The reference image really contains re-parked remnants.
+        let mut d = SchedulerDaemon::new(DaemonConfig::default(), profiles());
+        for s in &steps {
+            d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+        }
+        assert!(
+            d.shard_stats(0).reparked > 0,
+            "seed {seed}: no remnant was re-parked"
+        );
+        drop(d);
+
+        for k in 1..=steps.len() {
+            let dir = fresh_dir(&format!("preempt-{i}-{k}"));
+            let mut d = journaled(&dir, &no_snapshots());
+            for s in &steps[..k] {
+                d.handle_at(s.msg_seq, s.msg.clone(), s.addr, s.now);
+            }
+            drop(d); // the "kill"
+            let state = recover_and_resume(&dir, &no_snapshots(), &steps, k - 1);
+            assert_eq!(
+                state, reference,
+                "seed {seed}: preemption-heavy cut after step {k} must replay to the reference"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
 /// The snapshot + truncate cycle composes with crash recovery: with an
 /// aggressive snapshot cadence the recovered image (snapshot + tail
 /// replay) still matches the reference at every clean cut point.

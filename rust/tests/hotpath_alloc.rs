@@ -356,6 +356,72 @@ fn interference_observe_path_is_allocation_free() {
     assert_eq!(model.observations(), 3 * 64 + 10_000);
 }
 
+/// The preemption decision cycle (ADR-007): policy probe → device cut →
+/// arena tombstone → remnant re-queue → stale completion draining
+/// through the tombstone so the slot is reused next cycle. This is the
+/// extra work a high-priority launch pays when it reclaims an
+/// overrunning fill mid-execution; once device heaps, the arena slab,
+/// and queue freelists are warm it must allocate nothing — the launch
+/// identity travels by `Arc` refcount bumps only.
+#[test]
+fn preempt_decision_cycle_is_allocation_free() {
+    let _gate = GATE.lock().unwrap();
+    use fikit::coordinator::best_prio_fit::{plan_preempt, PreemptAction};
+    use fikit::coordinator::fikit::{PreemptionPolicy, DEFAULT_PREEMPT_COST};
+    use fikit::simulator::{DeviceConfig, KernelArena, SimDevice};
+
+    let mut w = bench_world(400);
+    let fill = w.launch(0, Priority::P5);
+    let mut device = SimDevice::new(DeviceConfig::default());
+    let mut arena = KernelArena::new();
+    let mut q = PriorityQueues::new();
+
+    let mut cycle = |device: &mut SimDevice, arena: &mut KernelArena, q: &mut PriorityQueues, i: u64| {
+        // Spaced so the device drains between cycles: every iteration
+        // sees the same submit/preempt geometry.
+        let now = SimTime(i * 200_000);
+        let rec = device.submit(fill.clone(), now, LaunchSource::GapFill);
+        let (started, finished) = (rec.started_at, rec.finished_at);
+        let slot = arena.insert(rec);
+        // A high-priority launch lands mid-execution of the 50 µs fill.
+        let ready = now + Duration::from_micros(35);
+        let PreemptAction::Cut { cut_at } =
+            plan_preempt(PreemptionPolicy::Evict, ready, started, finished)
+        else {
+            panic!("mid-execution evict must plan a cut");
+        };
+        assert!(device.preempt(arena.get(slot).expect("fill is live"), cut_at, DEFAULT_PREEMPT_COST));
+        let _cut_record = arena.cancel(slot);
+        // Remnant re-queue + immediate re-selection.
+        q.push_predicted(fill.clone(), Some(Duration::from_micros(20)), cut_at);
+        assert!(q.pop_highest().is_some());
+        // The stale completion pops through the tombstone, freeing the
+        // slot for reuse.
+        assert!(arena.take_if_live(slot).is_none());
+    };
+
+    // Warm device heaps, arena slab, and queue freelists.
+    for i in 1..65u64 {
+        cycle(&mut device, &mut arena, &mut q, i);
+    }
+
+    let canonical_before = canonical_count();
+    let allocs = count_allocs(|| {
+        for i in 65..10_065u64 {
+            cycle(&mut device, &mut arena, &mut q, i);
+        }
+    });
+    let canonical_calls = canonical_count() - canonical_before;
+
+    assert_eq!(allocs, 0, "preempt decision cycle allocated {allocs} times");
+    assert_eq!(
+        canonical_calls, 0,
+        "canonical() reachable from the preempt decision cycle"
+    );
+    assert_eq!(arena.len(), 0, "every tombstoned slot reclaimed");
+    assert!(q.is_empty(), "every remnant re-selected");
+}
+
 /// The event core (ADR-003): steady-state traffic through the calendar
 /// wheel — near-future pushes, far-future pushes riding the overflow
 /// ring until they mature, pops, plus one arena insert/take per cycle —

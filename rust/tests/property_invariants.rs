@@ -249,11 +249,101 @@ fn prop_priority_protection_bound() {
 }
 
 #[test]
+fn prop_preemption_grid_conservation_and_protection() {
+    // Every (FillPolicy × PreemptionPolicy) combination preserves the
+    // core invariants:
+    //  * every launched kernel completes exactly once — task outcomes
+    //    and kernel counts are conserved, with each cut/split adding
+    //    exactly one extra device submission (the remnant);
+    //  * remnant durations sum back to the original execution — device
+    //    busy time equals the no-preemption busy plus the re-executed
+    //    wasted slices (± 1 ns rounding per split remnant);
+    //  * preemption never hurts the high-priority tenant — hybrid mean
+    //    JCT stays within noise of fill-only.
+    use fikit::coordinator::best_prio_fit::FillPolicy;
+    use fikit::coordinator::fikit::PreemptionPolicy;
+    let pairs = [
+        (ModelKind::KeypointRcnnResnet50Fpn, ModelKind::FcnResnet50),
+        (ModelKind::Alexnet, ModelKind::Vgg16),
+        (ModelKind::MaskrcnnResnet50Fpn, ModelKind::FcosResnet50Fpn),
+    ];
+    for (seed, (high, low)) in pairs.iter().enumerate() {
+        let build = |fill: FillPolicy, preempt: PreemptionPolicy| {
+            let mut cfg = ExperimentConfig {
+                mode: Mode::Fikit,
+                seed: seed as u64,
+                ..ExperimentConfig::default()
+            };
+            cfg.measurement.runs = 3;
+            cfg.fill_policy = fill;
+            cfg.preempt = preempt;
+            cfg.services
+                .push(ServiceConfig::new(*high, Priority::P0).tasks(10).with_key("h"));
+            cfg.services
+                .push(ServiceConfig::new(*low, Priority::P4).tasks(10).with_key("l"));
+            cfg
+        };
+        for fill in [FillPolicy::LongestFit, FillPolicy::FirstFit, FillPolicy::ShortestFit] {
+            let mut none_baseline = None;
+            for preempt in [
+                PreemptionPolicy::None,
+                PreemptionPolicy::Evict,
+                PreemptionPolicy::split(),
+                PreemptionPolicy::hybrid(),
+            ] {
+                let tag = format!("{high}/{low} {fill:?} {preempt}");
+                let report = run_experiment(&build(fill, preempt)).unwrap();
+                assert_eq!(report.outcomes.len(), 20, "{tag}: all tasks complete");
+                let base: u64 = report.outcomes.iter().map(|o| o.kernels as u64).sum();
+                let p = report
+                    .scheduler
+                    .as_ref()
+                    .map(|s| s.preempt.clone())
+                    .unwrap_or_default();
+                assert_eq!(
+                    report.device.kernels,
+                    base + p.cuts + p.splits,
+                    "{tag}: kernel conservation (requeues={})",
+                    p.requeues
+                );
+                let h = report.service(&TaskKey::new("h")).unwrap().jct.mean_ms();
+                let busy = report.device.busy.nanos();
+                match (preempt, none_baseline) {
+                    (PreemptionPolicy::None, _) => {
+                        assert_eq!(p.requeues, 0, "{tag}: None never preempts");
+                        none_baseline = Some((h, busy));
+                    }
+                    (_, Some((none_h, none_busy))) => {
+                        // Busy = baseline + re-executed wasted work, up to
+                        // 1 ns scaling round-off per split remnant.
+                        let expected = none_busy + p.wasted.nanos();
+                        let tol = p.splits.max(1);
+                        let diff = if busy > expected { busy - expected } else { expected - busy };
+                        assert!(
+                            diff <= tol,
+                            "{tag}: busy {busy} vs baseline {none_busy} + wasted {} (tol {tol})",
+                            p.wasted.nanos()
+                        );
+                        if matches!(preempt, PreemptionPolicy::Hybrid { .. }) {
+                            assert!(
+                                h <= none_h * 1.05 + 0.05,
+                                "{tag}: hybrid high-prio JCT {h:.3}ms worse than fill-only {none_h:.3}ms"
+                            );
+                        }
+                    }
+                    _ => unreachable!("None runs first"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_protocol_round_trip_random() {
     for seed in 0..200u64 {
         let mut rng = Rng::new(seed);
         let key = TaskKey::new(format!("svc-{}", rng.below(1000)));
-        let msg = match rng.index(7) {
+        let msg = match rng.index(8) {
             0 => {
                 let model = if rng.chance(0.5) {
                     Some(format!("model-{}", rng.below(50)))
@@ -294,6 +384,15 @@ fn prop_protocol_round_trip_random() {
             5 => ClientMsg::ReleaseQuery {
                 task_key: key,
                 seq: rng.below(1 << 20) as u32,
+            },
+            6 => ClientMsg::Preempted {
+                task_key: key,
+                task_id: TaskId(rng.below(1 << 30)),
+                kernel_name: format!("kern<{}, \"остаток\\t\">", rng.below(100)),
+                grid: Dim3::new(1 + rng.below(256) as u32, 1, 1),
+                block: Dim3::new(1 + rng.below(1024) as u32, 1, 1),
+                seq: rng.below(1 << 20) as u32,
+                remaining: Duration::from_nanos(rng.next_u64() >> 3),
             },
             _ => ClientMsg::Disconnect { task_key: key },
         };

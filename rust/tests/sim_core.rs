@@ -211,3 +211,125 @@ fn sim_threads_clamp_to_device_count() {
     let oversubscribed = run_churn(&churn_cfg(16), &CompatMatrix::new()).unwrap();
     assert_eq!(serial.summary(), oversubscribed.summary());
 }
+
+/// Two-service FIKIT config in the shapes the paper sweeps share: batch
+/// back-to-back (figs 13–20) or continuous + periodic inserts (fig 21).
+fn preempt_cfg(seed: u64, continuous: bool) -> fikit::config::ExperimentConfig {
+    use fikit::config::{ExperimentConfig, ServiceConfig};
+    use fikit::coordinator::Mode;
+    let mut cfg = ExperimentConfig {
+        mode: Mode::Fikit,
+        seed,
+        ..ExperimentConfig::default()
+    };
+    cfg.measurement.runs = 3;
+    if continuous {
+        cfg.services.push(
+            ServiceConfig::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0)
+                .continuous_ms(2_000)
+                .with_key("h"),
+        );
+        cfg.services.push(
+            ServiceConfig::new(ModelKind::FcnResnet50, Priority::P3)
+                .every_ms(250, 7)
+                .with_key("l"),
+        );
+    } else {
+        cfg.services.push(
+            ServiceConfig::new(ModelKind::KeypointRcnnResnet50Fpn, Priority::P0)
+                .tasks(20)
+                .with_key("h"),
+        );
+        cfg.services.push(
+            ServiceConfig::new(ModelKind::FcnResnet50, Priority::P3)
+                .tasks(20)
+                .with_key("l"),
+        );
+    }
+    cfg
+}
+
+/// The preemption tier's differential gate: `PreemptionPolicy::None` is
+/// the pre-preemption simulator byte for byte. The default config, an
+/// explicit `None`, and a hybrid policy whose modeled cost is
+/// astronomically high (the probe arms but can never fire) must all
+/// render identical reports, with every preemption counter at zero.
+#[test]
+fn preemption_none_pins_seed_reports_byte_identical() {
+    use fikit::coordinator::driver::run_experiment;
+    use fikit::coordinator::fikit::PreemptionPolicy;
+    for continuous in [false, true] {
+        for seed in [0xF1C1u64, 7, 99] {
+            let tag = format!("seed {seed} continuous={continuous}");
+            let base = run_experiment(&preempt_cfg(seed, continuous)).unwrap();
+            let sched = base.scheduler.as_ref().expect("fikit mode has a scheduler");
+            assert_eq!(sched.preempt.requeues, 0, "{tag}: default never preempts");
+            assert!(
+                !base.summary().contains("preempt:"),
+                "{tag}: no preempt line in a preemption-free report"
+            );
+
+            let mut none_cfg = preempt_cfg(seed, continuous);
+            none_cfg.preempt = PreemptionPolicy::None;
+            let none = run_experiment(&none_cfg).unwrap();
+            assert_eq!(base.summary(), none.summary(), "{tag}: explicit None diverged");
+
+            let mut inert = preempt_cfg(seed, continuous);
+            inert.preempt = PreemptionPolicy::hybrid();
+            inert.preempt_cost = Duration::from_millis(3_600_000);
+            let hybrid = run_experiment(&inert).unwrap();
+            assert_eq!(
+                base.summary(),
+                hybrid.summary(),
+                "{tag}: armed-but-unfired hybrid diverged"
+            );
+        }
+    }
+}
+
+/// The opposite pole of the differential gate: an eager policy (evict at
+/// any modeled gain) actually fires on the same workload, re-queues
+/// work, and surfaces its accounting in the report.
+#[test]
+fn eager_eviction_engages_on_seed_workload() {
+    use fikit::coordinator::driver::run_experiment;
+    use fikit::coordinator::fikit::PreemptionPolicy;
+    let mut cfg = preempt_cfg(0xF1C1, false);
+    cfg.preempt = PreemptionPolicy::Evict;
+    cfg.preempt_cost = Duration::ZERO;
+    let report = run_experiment(&cfg).unwrap();
+    let p = &report.scheduler.as_ref().unwrap().preempt;
+    assert!(
+        p.requeues > 0,
+        "zero-cost eviction never fired: {:?}",
+        report.summary()
+    );
+    assert!(report.summary().contains("preempt:"), "accounting line missing");
+}
+
+/// Shard-merge determinism holds with the preemption tier live: hybrid
+/// churn reports are byte-identical at 1/2/4 sim threads, and the
+/// explicit-`None` churn matches the plain config exactly.
+#[test]
+fn churn_reports_identical_across_sim_threads_with_preemption() {
+    use fikit::coordinator::fikit::PreemptionPolicy;
+    let mut cfg1 = churn_cfg(1);
+    cfg1.preempt = PreemptionPolicy::hybrid();
+    let serial = run_churn(&cfg1, &CompatMatrix::new()).unwrap();
+    assert!(serial.completed_total > 0, "scenario completed no work");
+    for threads in [2usize, 4] {
+        let mut cfg = churn_cfg(threads);
+        cfg.preempt = PreemptionPolicy::hybrid();
+        let parallel = run_churn(&cfg, &CompatMatrix::new()).unwrap();
+        assert_eq!(
+            serial.summary(),
+            parallel.summary(),
+            "hybrid summary diverged at sim_threads={threads}"
+        );
+    }
+    let mut none_cfg = churn_cfg(1);
+    none_cfg.preempt = PreemptionPolicy::None;
+    let plain = run_churn(&churn_cfg(1), &CompatMatrix::new()).unwrap();
+    let none = run_churn(&none_cfg, &CompatMatrix::new()).unwrap();
+    assert_eq!(plain.summary(), none.summary(), "None churn diverged from plain");
+}

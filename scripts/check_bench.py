@@ -1,15 +1,19 @@
 #!/usr/bin/env python3
 """Validate the perf-trajectory artifacts: BENCH_sched.json (scheduler
-hot path) and BENCH_sim.json (simulator event core).
+hot path), BENCH_sim.json (simulator event core) and
+PARETO_preempt.json (the preemption Pareto sweep).
 
-Checks, per artifact:
+Checks, per bench artifact:
 
 1. shape — version, suite id, non-empty case list, required numeric
    fields per case (name, iters, mean_ns, median_ns, p95_ns, min_ns);
-2. the headline gate is present:
+2. the headline gates are present:
    * BENCH_sched.json — case ``best_prio_fit/select_n512`` declaring
      ``budget_ns`` ≤ 1000 (a BestPrioFit decision at 512 queued requests
-     must stay ≤ 1 µs mean — DESIGN.md §Perf);
+     must stay ≤ 1 µs mean — DESIGN.md §Perf), and case
+     ``preempt/decide`` declaring ``budget_ns`` ≤ 2000 (the full
+     preempt cycle — plan, cut, tombstone, remnant re-queue, re-select
+     — stays priced; ADR-007);
    * BENCH_sim.json — case ``sim/events_per_sec`` declaring
      ``budget_events_per_sec`` ≥ 500000 and meeting it (a full
      deterministic run must sustain ≥ 500 k events/s through the
@@ -18,12 +22,19 @@ Checks, per artifact:
    ``mean_ns`` ≤ ``budget_ns``; every case that declares
    ``budget_events_per_sec`` has ``events_per_sec`` ≥ the floor.
 
+PARETO_preempt.json (``fikit preempt --json``) is validated for shape
+and the paper band: ``experiment == "preemption"``, ``passed`` true, a
+``band`` of [0.86, 1.0], non-empty ``points`` each carrying
+``workload``/``policy``/``high_speedup``/``low_ratio`` (every hybrid
+point inside the band), and non-empty ``checks`` all passing.
+
 Exit 0 on success, 1 on any failure. A missing artifact is a SKIP
 (exit 0 for that artifact) because the offline container has no Rust
-toolchain to produce it; the single regeneration command is printed so
-CI (or any box with cargo) can produce and gate both:
+toolchain to produce it; the regeneration commands are printed so CI
+(or any box with cargo) can produce and gate all three:
 
     cargo run --manifest-path rust/Cargo.toml --release -- bench --json
+    cargo run --manifest-path rust/Cargo.toml --release -- preempt --json
 """
 
 from __future__ import annotations
@@ -39,10 +50,15 @@ EXPECTED_VERSION = 1  # keep in lockstep with rust/src/benchsuite.rs
 
 SCHED_HEADLINE = "best_prio_fit/select_n512"
 SCHED_HEADLINE_BUDGET_NS = 1000
+SCHED_PREEMPT_CASE = "preempt/decide"
+SCHED_PREEMPT_BUDGET_NS = 2000
 SIM_HEADLINE = "sim/events_per_sec"
 SIM_HEADLINE_FLOOR = 500_000
 
+PARETO_BAND = (0.86, 1.0)
+
 REGEN = "  cargo run --manifest-path rust/Cargo.toml --release -- bench --json"
+REGEN_PARETO = "  cargo run --manifest-path rust/Cargo.toml --release -- preempt --json"
 
 
 def fail(artifact: str, msg: str) -> int:
@@ -108,9 +124,23 @@ def check_artifact(path: Path, suite: str) -> int:
                 f"{SCHED_HEADLINE!r} must declare budget_ns <= "
                 f"{SCHED_HEADLINE_BUDGET_NS} (got {headline.get('budget_ns')!r})",
             )
+        preempt = by_name.get(SCHED_PREEMPT_CASE)
+        if preempt is None:
+            return fail(path.name, f"required case {SCHED_PREEMPT_CASE!r} missing")
+        if (
+            preempt.get("budget_ns") is None
+            or preempt["budget_ns"] > SCHED_PREEMPT_BUDGET_NS
+        ):
+            return fail(
+                path.name,
+                f"{SCHED_PREEMPT_CASE!r} must declare budget_ns <= "
+                f"{SCHED_PREEMPT_BUDGET_NS} (got {preempt.get('budget_ns')!r})",
+            )
         headline_desc = (
             f"{SCHED_HEADLINE} mean {headline['mean_ns']}ns "
-            f"(budget {headline['budget_ns']}ns)"
+            f"(budget {headline['budget_ns']}ns), "
+            f"{SCHED_PREEMPT_CASE} mean {preempt['mean_ns']}ns "
+            f"(budget {preempt['budget_ns']}ns)"
         )
     else:
         headline = by_name.get(SIM_HEADLINE)
@@ -159,10 +189,93 @@ def check_artifact(path: Path, suite: str) -> int:
     return 0
 
 
+def _num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_pareto(path: Path) -> int:
+    """Validate the preemption Pareto artifact. SKIP when absent."""
+    if not path.exists():
+        print(
+            f"check_bench: SKIP: {path.name} not found (no cargo in this "
+            f"container). Regenerate with:\n{REGEN_PARETO}"
+        )
+        return 0
+
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return fail(path.name, f"unreadable JSON: {e}")
+
+    if doc.get("experiment") != "preemption":
+        return fail(
+            path.name, f"experiment {doc.get('experiment')!r} != 'preemption'"
+        )
+    if doc.get("passed") is not True:
+        return fail(path.name, f"passed must be true (got {doc.get('passed')!r})")
+    band = doc.get("band")
+    if not isinstance(band, dict) or not _num(band.get("low")) or not _num(band.get("high")):
+        return fail(path.name, f"band must be {{low, high}} numbers (got {band!r})")
+    if (band["low"], band["high"]) != PARETO_BAND:
+        return fail(
+            path.name,
+            f"band [{band['low']}, {band['high']}] != the paper band "
+            f"[{PARETO_BAND[0]}, {PARETO_BAND[1]}]",
+        )
+
+    points = doc.get("points")
+    if not isinstance(points, list) or not points:
+        return fail(path.name, "points must be a non-empty list")
+    hybrids = 0
+    for i, pt in enumerate(points):
+        if not isinstance(pt, dict):
+            return fail(path.name, f"point {i} is not an object")
+        for field in ("workload", "policy"):
+            if not isinstance(pt.get(field), str) or not pt[field]:
+                return fail(path.name, f"point {i}: missing/empty {field!r}")
+        for field in ("high_speedup", "low_ratio"):
+            if not _num(pt.get(field)) or pt[field] <= 0:
+                return fail(
+                    path.name,
+                    f"point {i} ({pt.get('workload')}/{pt.get('policy')}): "
+                    f"{field} must be a positive number (got {pt.get(field)!r})",
+                )
+        if pt["policy"] == "hybrid":
+            hybrids += 1
+            if pt["low_ratio"] < band["low"]:
+                return fail(
+                    path.name,
+                    f"hybrid point {pt['workload']!r}: low_ratio "
+                    f"{pt['low_ratio']} below the band floor {band['low']}",
+                )
+    if hybrids == 0:
+        return fail(path.name, "no hybrid points — the acceptance arm is missing")
+
+    checks = doc.get("checks")
+    if not isinstance(checks, list) or not checks:
+        return fail(path.name, "checks must be a non-empty list")
+    for i, chk in enumerate(checks):
+        if not isinstance(chk, dict) or not isinstance(chk.get("name"), str):
+            return fail(path.name, f"check {i} must be an object with a name")
+        if chk.get("passed") is not True:
+            return fail(
+                path.name,
+                f"check {chk['name']!r} not passed: {chk.get('detail')!r}",
+            )
+
+    print(
+        f"check_bench: OK: {path.name}: {len(points)} Pareto points "
+        f"({hybrids} hybrid, all inside [{band['low']}, {band['high']}]), "
+        f"{len(checks)} checks passed"
+    )
+    return 0
+
+
 def main() -> int:
     rc = 0
     rc |= check_artifact(REPO / "BENCH_sched.json", "scheduler_hotpath")
     rc |= check_artifact(REPO / "BENCH_sim.json", "sim_core")
+    rc |= check_pareto(REPO / "PARETO_preempt.json")
     return rc
 
 

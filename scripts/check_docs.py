@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Docs health check — the repo's "docs job".
 
-Seven checks, zero dependencies:
+Eight checks, zero dependencies:
 
 1. **Markdown links**: every relative link target in every tracked
    `*.md` file must exist (anchors are checked against the target
@@ -30,7 +30,12 @@ Seven checks, zero dependencies:
    documented (backticked) in DESIGN.md's "Concurrency backends"
    section — a hardware model added to the simulator seam without
    prose fails here. Probed from the Rust source like check 5.
-7. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
+7. **Preemption-policy coverage**: every variant of
+   ``PreemptionPolicy`` in ``rust/src/coordinator/fikit.rs`` must be
+   documented (backticked) in DESIGN.md's "Kernel-level preemption"
+   section — a policy added to the preemption tier without prose
+   fails here. Probed from the Rust source like checks 5 and 6.
+8. **rustdoc**: ``cargo doc --no-deps`` must build with zero warnings
    (skipped with a notice when no cargo toolchain is available, e.g. in
    the offline container).
 
@@ -344,6 +349,70 @@ def check_backend_docs() -> list[str]:
     return errors
 
 
+FIKIT_RS = os.path.join(REPO, "rust", "src", "coordinator", "fikit.rs")
+
+
+def preemption_variants() -> list[str]:
+    """Parse the PreemptionPolicy variant names out of fikit.rs."""
+    with open(FIKIT_RS, encoding="utf-8") as f:
+        lines = f.readlines()
+    variants: list[str] = []
+    inside = False
+    depth = 0
+    variant = re.compile(r"^\s{4}([A-Z]\w*)\s*(?:\{|\(|,|$)")
+    for line in lines:
+        if not inside:
+            if re.match(r"\s*pub enum PreemptionPolicy\s*\{", line):
+                inside = True
+                depth = line.count("{") - line.count("}")
+            continue
+        if depth == 1:
+            m = variant.match(line)
+            if m:
+                variants.append(m.group(1))
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            break
+    return variants
+
+
+def check_preemption_docs() -> list[str]:
+    """Every PreemptionPolicy variant must be documented (backticked)
+    in DESIGN.md's "Kernel-level preemption" section — a policy added
+    to the preemption tier without prose fails here."""
+    if not os.path.exists(FIKIT_RS):
+        return ["rust/src/coordinator/fikit.rs does not exist"]
+    if not os.path.exists(DESIGN):
+        return []  # check_design_refs already reports this
+    variants = preemption_variants()
+    if not variants:
+        return [
+            "rust/src/coordinator/fikit.rs: found no PreemptionPolicy "
+            "variants — parser or enum drifted"
+        ]
+    with open(DESIGN, encoding="utf-8") as f:
+        design = f.read()
+    m = re.search(r"^#{2,6}\s+.*Kernel-level preemption.*$", design, re.MULTILINE)
+    if not m:
+        return [
+            'rust/DESIGN.md: no "Kernel-level preemption" heading — the '
+            "preemption vocabulary has nowhere to be documented"
+        ]
+    level = len(design[m.start():].split(None, 1)[0])
+    rest = design[m.end():]
+    nxt = re.search(rf"^#{{2,{level}}}\s", rest, re.MULTILINE)
+    section = rest[: nxt.start()] if nxt else rest
+    errors = []
+    for name in variants:
+        if not re.search(rf"`[^`]*\b{name}\b[^`]*`", section):
+            errors.append(
+                f"rust/DESIGN.md: kernel-level-preemption section never "
+                f"documents `{name}` (PreemptionPolicy variant in "
+                f"rust/src/coordinator/fikit.rs)"
+            )
+    return errors
+
+
 def check_rustdoc() -> list[str]:
     if shutil.which("cargo") is None:
         print("  [skip] cargo not on PATH — rustdoc check skipped")
@@ -371,6 +440,7 @@ def main() -> int:
         ("ADR cross-links", check_adr_links),
         ("wire-protocol coverage in DESIGN.md", check_protocol_docs),
         ("concurrency-backend coverage in DESIGN.md", check_backend_docs),
+        ("preemption-policy coverage in DESIGN.md", check_preemption_docs),
         ("rustdoc (cargo doc --no-deps)", check_rustdoc),
     ]:
         print(f"checking {name} ...")
